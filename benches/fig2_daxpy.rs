@@ -1,0 +1,63 @@
+//! Fig. 2/3 companion bench: daxpy instruction parity + per-VL cycles +
+//! simulator wall-clock throughput on the kernel.
+//!
+//!     cargo bench --bench fig2_daxpy
+
+use sve_repro::bench_util::{bench_default, report_throughput};
+use sve_repro::compiler::{compile, BinOp, Expr, Index, Kernel, Stmt, Target, Trip, Ty};
+use sve_repro::exec::Executor;
+use sve_repro::mem::Memory;
+use sve_repro::uarch::{run_timed, UarchConfig};
+
+fn daxpy_kernel(mem: &mut Memory, n: u64) -> Kernel {
+    let xb = mem.alloc(8 * n, 64);
+    let yb = mem.alloc(8 * n, 64);
+    for i in 0..n {
+        mem.write_f64(xb + 8 * i, i as f64).unwrap();
+        mem.write_f64(yb + 8 * i, 1.0).unwrap();
+    }
+    let mut k = Kernel::new("daxpy", Ty::F64, Trip::Count(n));
+    let x = k.array("x", Ty::F64, xb);
+    let y = k.array("y", Ty::F64, yb);
+    k.body.push(Stmt::Store {
+        arr: y,
+        idx: Index::Affine { offset: 0 },
+        value: Expr::bin(
+            BinOp::Add,
+            Expr::bin(BinOp::Mul, Expr::ConstF(3.0), Expr::load(x, Index::Affine { offset: 0 })),
+            Expr::load(y, Index::Affine { offset: 0 })),
+    });
+    k
+}
+
+fn main() {
+    let n = 4096u64;
+    let mut mem = Memory::new();
+    let k = daxpy_kernel(&mut mem, n);
+    println!("daxpy n={n}: simulated cycles per target/VL");
+    for (label, t, vl) in [
+        ("scalar", Target::Scalar, 128),
+        ("neon", Target::Neon, 128),
+        ("sve-128", Target::Sve, 128),
+        ("sve-256", Target::Sve, 256),
+        ("sve-512", Target::Sve, 512),
+        ("sve-1024", Target::Sve, 1024),
+        ("sve-2048", Target::Sve, 2048),
+    ] {
+        let c = compile(&k, t);
+        let mut ex = Executor::new(vl, mem.clone());
+        let (stats, tm) = run_timed(&mut ex, &c.program, UarchConfig::default(), 10_000_000).unwrap();
+        println!("  {label:<9} {:>8} cycles  {:>7} insts  ipc {:.2}", tm.cycles, stats.insts, tm.ipc());
+    }
+    // host-side throughput of the whole simulate pipeline (functional+timing)
+    let c = compile(&k, Target::Sve);
+    let sample = bench_default(|| {
+        let mut ex = Executor::new(512, mem.clone());
+        run_timed(&mut ex, &c.program, UarchConfig::default(), 10_000_000).unwrap().1.cycles
+    });
+    let insts_per_iter = {
+        let mut ex = Executor::new(512, mem.clone());
+        ex.run(&c.program, 10_000_000).unwrap().insts as f64
+    };
+    report_throughput("simulate(daxpy sve-512, func+timing)", &sample, insts_per_iter, "inst");
+}

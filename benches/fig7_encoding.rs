@@ -1,0 +1,37 @@
+//! Fig. 7 regeneration + encode/decode round-trip throughput.
+//!
+//!     cargo bench --bench fig7_encoding
+
+use sve_repro::bench_util::{bench_default, report_throughput};
+use sve_repro::isa::encoding::{self, sve_region_report};
+use sve_repro::isa::Inst;
+use sve_repro::arch::Esize;
+
+fn main() {
+    let (groups, total) = sve_region_report();
+    println!("Fig. 7 — SVE encoding region usage:");
+    for g in &groups {
+        println!("  {:<10} {:>12} points ({:.3}%)", g.group, g.points, 100.0 * g.share_of_region);
+    }
+    println!("  total {total} / {} ({:.2}%)\n", encoding::SVE_REGION_POINTS,
+        100.0 * total as f64 / encoding::SVE_REGION_POINTS as f64);
+    assert!(total < encoding::SVE_REGION_POINTS);
+
+    let insts: Vec<Inst> = (0..1024)
+        .map(|i| Inst::SveFmla { zda: (i % 32) as u8, pg: (i % 8) as u8, zn: ((i * 7) % 32) as u8,
+            zm: ((i * 13) % 32) as u8, dbl: i % 2 == 0, sub: i % 3 == 0 })
+        .chain((0..1024).map(|i| Inst::While { pd: (i % 16) as u8, esize: Esize::D,
+            xn: (i % 31) as u8, xm: ((i * 3) % 31) as u8, unsigned: i % 2 == 0 }))
+        .collect();
+    let s = bench_default(|| {
+        let mut acc = 0u64;
+        for (i, inst) in insts.iter().enumerate() {
+            let w = encoding::encode(inst, i).unwrap();
+            acc ^= w as u64;
+            let d = encoding::decode(w, i).unwrap();
+            debug_assert_eq!(&d, inst);
+        }
+        acc
+    });
+    report_throughput("encode+decode roundtrip", &s, insts.len() as f64, "inst");
+}

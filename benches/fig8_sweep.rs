@@ -1,0 +1,34 @@
+//! Regenerates Fig. 8: speedup of SVE@{128,256,512} over Advanced SIMD
+//! plus the extra-vectorization bars, for all 12 benchmark proxies.
+//! Writes reports/fig8.csv. This is also the end-to-end driver: every
+//! run is validated against its golden outputs.
+//!
+//!     cargo bench --bench fig8_sweep
+
+use std::time::Instant;
+use sve_repro::coordinator::{fig8_chart, fig8_table, run_fig8};
+use sve_repro::workloads::NAMES;
+
+fn main() {
+    let vls = [128usize, 256, 512];
+    let t0 = Instant::now();
+    let rows = run_fig8(&vls, &NAMES).expect("sweep failed");
+    let dt = t0.elapsed();
+    let table = fig8_table(&rows, &vls);
+    println!("{}", table.to_markdown());
+    println!("{}", fig8_chart(&rows, &vls));
+    table.write_csv("reports/fig8.csv").expect("write");
+    println!(
+        "full sweep ({} benchmarks x (1 NEON + {} SVE VLs), every run validated) in {:.1}s",
+        NAMES.len(),
+        vls.len(),
+        dt.as_secs_f64()
+    );
+    // shape assertions from the paper's narrative
+    let get = |n: &str| rows.iter().find(|r| r.bench == n).unwrap();
+    assert!(get("haccmk").speedup(0) > 1.5, "HACC wins at equal VL");
+    assert!(get("haccmk").speedup(2) > get("haccmk").speedup(0), "HACC scales");
+    assert!((0.9..1.1).contains(&get("graph500").speedup(2)), "graph500 flat");
+    assert!(get("milcmk").speedup(0) < 1.0, "MILC loses to NEON (compiler quirk)");
+    println!("shape assertions PASS");
+}

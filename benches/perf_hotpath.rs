@@ -1,0 +1,33 @@
+//! §Perf: simulator hot-path throughput — the numbers EXPERIMENTS.md
+//! §Perf tracks. Measures (a) functional-only execution and (b) the full
+//! functional+timing pipeline, in host Minst/s, across representative
+//! kernels.
+//!
+//!     cargo bench --bench perf_hotpath
+
+use sve_repro::bench_util::{bench_n, report_throughput};
+use sve_repro::compiler::Target;
+use sve_repro::exec::Executor;
+use sve_repro::uarch::{run_timed, UarchConfig};
+use sve_repro::workloads;
+
+fn main() {
+    for name in ["stream_triad", "haccmk", "strlen1m", "graph500"] {
+        let w = workloads::build(name);
+        let c = w.compile(Target::Sve);
+        let insts = {
+            let mut ex = Executor::new(256, w.mem.clone());
+            ex.run(&c.program, w.max_insts).unwrap().insts as f64
+        };
+        let f = bench_n(5, || {
+            let mut ex = Executor::new(256, w.mem.clone());
+            ex.run(&c.program, w.max_insts).unwrap().insts
+        });
+        report_throughput(&format!("functional {name} ({insts:.0} insts)"), &f, insts, "inst");
+        let t = bench_n(5, || {
+            let mut ex = Executor::new(256, w.mem.clone());
+            run_timed(&mut ex, &c.program, UarchConfig::default(), w.max_insts).unwrap().1.cycles
+        });
+        report_throughput(&format!("func+timing {name}"), &t, insts, "inst");
+    }
+}

@@ -1,0 +1,60 @@
+"""AOT lowering: every L2 golden model -> artifacts/<name>.hlo.txt.
+
+Interchange format is HLO **text**, NOT a serialized HloModuleProto:
+jax >= 0.5 emits protos with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/gen_hlo.py.
+
+Lowered with ``return_tuple=True``; the Rust side unwraps with
+``to_tuple1()``.
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+"""
+
+import argparse
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_entry(name: str) -> str:
+    fn, example = model.ENTRIES[name]
+    lowered = jax.jit(fn).lower(*example)
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of entries")
+    args = ap.parse_args()
+    names = args.only.split(",") if args.only else list(model.ENTRIES)
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest = []
+    for name in names:
+        text = lower_entry(name)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        _, example = model.ENTRIES[name]
+        sig = ", ".join(f"{s.dtype}{list(s.shape)}" for s in example)
+        manifest.append(f"{name}: ({sig})")
+        print(f"wrote {path} ({len(text)} chars)")
+    with open(os.path.join(args.out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+
+
+if __name__ == "__main__":
+    main()

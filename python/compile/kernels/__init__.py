@@ -1,0 +1,17 @@
+"""Layer-1 Pallas kernels: the compute hot-spots of the golden models.
+
+Each kernel expresses the SVE execution model in Pallas terms (see
+DESIGN.md §Hardware-Adaptation):
+
+* per-lane predication      -> boolean mask tensors + ``jnp.where``
+* vector-length agnosticism -> block-size-agnostic kernels driven by a
+  grid; the block size plays the role of VL and the tail mask plays the
+  role of ``whilelt``
+* first-fault partitioning  -> bounds masks derived from the logical
+  array length
+
+All kernels are lowered with ``interpret=True`` — the CPU PJRT plugin
+cannot execute Mosaic custom-calls (see /opt/xla-example/README.md).
+"""
+
+from . import daxpy, hacc, reduction, stencil  # noqa: F401

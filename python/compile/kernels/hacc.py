@@ -1,0 +1,93 @@
+"""HACCmk-style short-range force kernel with conditional assignments.
+
+The paper (§5): *"in the particular case of HACCmk, the main loop has two
+conditional assignments that inhibit vectorization for Advanced SIMD, but
+the code is trivially vectorized for SVE"*. This is the golden model for
+our ``haccmk`` proxy workload: an O(n) inner force loop over particle
+coordinates, with
+
+  1. a cutoff conditional  (``r2 < rmax2 ? poly(r2) : 0``)       and
+  2. a softening conditional (``r2 > eps2  ? r2 : eps2``)
+
+both of which if-convert to per-lane predication — ``jnp.where`` here,
+``fcmgt``+merging moves in the simulator's SVE code.
+
+The polynomial is the standard HACCmk 5th-order interaction polynomial in
+1/r form, kept in f32 (HACCmk is single precision).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK = 128
+
+# HACCmk interaction polynomial coefficients (public mini-app values).
+POLY = (0.269327, -0.0750978, 0.0114808, -0.00109313, 5.63434e-05,
+        -1.26461e-06)
+
+
+def poly_force(r2):
+    """f(r2) = 1/(r2*sqrt(r2)) - (c0 + r2*(c1 + r2*(c2 + ...)))."""
+    p = POLY[5]
+    for c in (POLY[4], POLY[3], POLY[2], POLY[1], POLY[0]):
+        p = p * r2 + c
+    return 1.0 / (r2 * jnp.sqrt(r2)) - p
+
+
+def _hacc_kernel(n_ref, p_ref, x_ref, y_ref, z_ref, m_ref, fx_ref,
+                 *, block: int, rmax2: float, eps2: float):
+    """Force of all particles in this block on the pivot particle ``p``.
+
+    VMEM per step: 4 f32 input blocks + 1 f32 output block = 20*block
+    bytes (2.5 KiB at default block).
+    """
+    i = pl.program_id(0)
+    n = n_ref[0]
+    lane = jax.lax.broadcasted_iota(jnp.int32, (block,), 0)
+    pred = (i * block + lane) < n
+
+    px, py, pz = p_ref[0], p_ref[1], p_ref[2]
+    dx = x_ref[...] - px
+    dy = y_ref[...] - py
+    dz = z_ref[...] - pz
+    r2 = dx * dx + dy * dy + dz * dz
+    # conditional assignment #1: softening (r2 = max(r2, eps2)).
+    r2s = jnp.where(r2 > eps2, r2, eps2)
+    f = poly_force(r2s)
+    # conditional assignment #2: cutoff (f = r2 < rmax2 ? f : 0).
+    f = jnp.where(r2 < rmax2, f, 0.0)
+    contrib = f * m_ref[...] * dx
+    fx_ref[...] = jnp.where(pred, contrib, 0.0)
+
+
+def hacc_force(pivot, x, y, z, m, n, *, block: int = DEFAULT_BLOCK,
+               rmax2: float = 16.0, eps2: float = 1e-3):
+    """Per-lane x-force contributions on ``pivot`` from particles [0, n).
+
+    Returns the *unreduced* per-lane contributions (the simulator reduces
+    with ``faddv``; the L2 model reduces with an ordered ``fadda`` in
+    ``ref.py`` so both reduction orders are validated).
+    """
+    size = x.shape[0]
+    assert size % block == 0
+    grid = (size // block,)
+    n_arr = jnp.asarray([n], dtype=jnp.int32)
+    p_arr = jnp.asarray(pivot, dtype=x.dtype)
+    return pl.pallas_call(
+        functools.partial(_hacc_kernel, block=block, rmax2=rmax2, eps2=eps2),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((3,), lambda i: (0,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((size,), x.dtype),
+        interpret=True,
+    )(n_arr, p_arr, x, y, z, m)

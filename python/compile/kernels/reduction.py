@@ -1,0 +1,95 @@
+"""Horizontal-reduction Pallas kernels: ordered fadda vs tree faddv.
+
+§2.4 / §3.3 of the paper: SVE provides both tree-order reductions (faddv,
+eorv, ...) and the *strictly-ordered* ``fadda`` so compilers can vectorize
+loops where FP addition order is semantically visible. These kernels are
+the golden models for the simulator's reduction semantics:
+
+* ``fadda_ordered``  — sequential left-to-right accumulation (bitwise
+  identical to the scalar loop; this is the property the instruction
+  exists for).
+* ``faddv_tree``     — pairwise tree reduction (what a VL-wide hardware
+  reduction tree computes; result may differ from ordered in the last
+  ulps, and our tests check both *that* difference and the agreement
+  within tolerance).
+
+Both respect a governing predicate: inactive lanes contribute the
+identity.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _fadda_kernel(n_ref, x_ref, o_ref, *, size: int):
+    """Strictly-ordered masked sum of x[0:n] via lax.fori_loop.
+
+    The scan order is the architectural element order (least- to
+    most-significant), matching SVE's implicit predicate order (§2.3.1).
+    """
+    n = n_ref[0]
+    x = x_ref[...]
+
+    def body(i, acc):
+        return jnp.where(i < n, acc + x[i], acc)
+
+    o_ref[0] = jax.lax.fori_loop(0, size, body, jnp.asarray(0.0, x.dtype))
+
+
+def fadda_ordered(x, n):
+    """acc = (((0 + x[0]) + x[1]) + ...) over active lanes i < n."""
+    size = x.shape[0]
+    n_arr = jnp.asarray([n], dtype=jnp.int32)
+    return pl.pallas_call(
+        functools.partial(_fadda_kernel, size=size),
+        out_shape=jax.ShapeDtypeStruct((1,), x.dtype),
+        interpret=True,
+    )(n_arr, x)[0]
+
+
+def _faddv_kernel(n_ref, x_ref, o_ref, *, size: int):
+    """Pairwise tree reduction with inactive lanes zeroed first."""
+    n = n_ref[0]
+    lane = jax.lax.broadcasted_iota(jnp.int32, (size,), 0)
+    v = jnp.where(lane < n, x_ref[...], 0.0)
+    # log2(size) halving steps — the hardware reduction tree.
+    width = size
+    while width > 1:
+        half = width // 2
+        v = v[:half] + v[half:width]
+        width = half
+    o_ref[0] = v[0]
+
+
+def faddv_tree(x, n):
+    """Tree-order masked sum; ``x`` length must be a power of two."""
+    size = x.shape[0]
+    assert size & (size - 1) == 0, "power-of-two vector"
+    n_arr = jnp.asarray([n], dtype=jnp.int32)
+    return pl.pallas_call(
+        functools.partial(_faddv_kernel, size=size),
+        out_shape=jax.ShapeDtypeStruct((1,), x.dtype),
+        interpret=True,
+    )(n_arr, x)[0]
+
+
+def _eorv_kernel(n_ref, x_ref, o_ref, *, size: int):
+    n = n_ref[0]
+    lane = jax.lax.broadcasted_iota(jnp.int32, (size,), 0)
+    v = jnp.where(lane < n, x_ref[...], 0)
+    o_ref[0] = jax.lax.reduce(v, jnp.asarray(0, v.dtype),
+                              jax.lax.bitwise_xor, (0,))
+
+
+def eorv(x, n):
+    """Masked XOR reduction (integer) — the Fig. 6 linked-list reduction."""
+    size = x.shape[0]
+    n_arr = jnp.asarray([n], dtype=jnp.int32)
+    return pl.pallas_call(
+        functools.partial(_eorv_kernel, size=size),
+        out_shape=jax.ShapeDtypeStruct((1,), x.dtype),
+        interpret=True,
+    )(n_arr, x)[0]

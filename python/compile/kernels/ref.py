@@ -1,0 +1,86 @@
+"""Pure-jnp (and pure-python, for the scan) correctness oracles.
+
+Every Pallas kernel in this package has an oracle here written with no
+Pallas, no masking tricks — the most obvious possible formulation. pytest
+(``python/tests/``) sweeps shapes/dtypes with hypothesis and
+assert_allclose's kernel-vs-ref; the Rust simulator is validated against
+the same oracles through the AOT artifacts.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import hacc as hacc_mod
+from . import stencil as stencil_mod
+
+
+def daxpy(a, x, y, n):
+    """y[i] = a*x[i] + y[i] for i < n; y unchanged beyond."""
+    idx = jnp.arange(x.shape[0])
+    return jnp.where(idx < n, a * x + y, y)
+
+
+def hacc_force(pivot, x, y, z, m, n, rmax2=16.0, eps2=1e-3):
+    """Unreduced per-lane x-force contributions (see kernels.hacc)."""
+    idx = jnp.arange(x.shape[0])
+    dx = x - pivot[0]
+    dy = y - pivot[1]
+    dz = z - pivot[2]
+    r2 = dx * dx + dy * dy + dz * dz
+    r2s = jnp.where(r2 > eps2, r2, eps2)
+    f = hacc_mod.poly_force(r2s)
+    f = jnp.where(r2 < rmax2, f, 0.0)
+    return jnp.where(idx < n, f * m * dx, 0.0)
+
+
+def jacobi19(p):
+    """One 19-point Jacobi sweep, boundaries pass through (numpy loops)."""
+    p = np.asarray(p)
+    ni, nj, nk = p.shape
+    out = p.copy()
+    for i in range(1, ni - 1):
+        for j in range(1, nj - 1):
+            for k in range(1, nk - 1):
+                s = 0.0
+                for di, dj, dk in NEIGHBOURS19:
+                    s += p[i + di, j + dj, k + dk]
+                c = p[i, j, k]
+                out[i, j, k] = c + stencil_mod.OMEGA * (s / 18.0 - c)
+    return out
+
+
+# the 18 neighbours of the 19-point stencil (centre excluded from the sum)
+NEIGHBOURS19 = [
+    (-1, 0, 0), (1, 0, 0), (0, -1, 0), (0, 1, 0), (0, 0, -1), (0, 0, 1),
+    (-1, -1, 0), (-1, 1, 0), (1, -1, 0), (1, 1, 0),
+    (-1, 0, -1), (-1, 0, 1), (1, 0, -1), (1, 0, 1),
+    (0, -1, -1), (0, -1, 1), (0, 1, -1), (0, 1, 1),
+]
+
+
+def fadda_ordered(x, n):
+    """Strictly-ordered scalar-loop sum — the semantic definition."""
+    x = np.asarray(x)
+    acc = x.dtype.type(0)
+    for i in range(min(int(n), x.shape[0])):
+        acc = acc + x[i]
+    return acc
+
+
+def faddv_tree(x, n):
+    """Pairwise tree sum over masked lanes (power-of-two length)."""
+    x = np.asarray(x)
+    idx = np.arange(x.shape[0])
+    v = np.where(idx < n, x, x.dtype.type(0))
+    while v.shape[0] > 1:
+        half = v.shape[0] // 2
+        v = v[:half] + v[half:]
+    return v[0]
+
+
+def eorv(x, n):
+    x = np.asarray(x)
+    acc = x.dtype.type(0)
+    for i in range(min(int(n), x.shape[0])):
+        acc ^= x[i]
+    return acc

@@ -1,0 +1,73 @@
+"""HimenoBMT-style 19-point Jacobi stencil Pallas kernel.
+
+Golden model for the ``himenobmt`` proxy workload: one Jacobi sweep of the
+Himeno pressure-Poisson update on a 3D grid. The paper's compiler
+vectorizes the innermost (k) dimension contiguously; here the k dimension
+is processed as one masked vector per (i, j) pencil with an interior-lane
+predicate — an SVE loop whose governing predicate excludes both boundary
+lanes (merging predication keeps the old value there).
+
+For tractability the golden model uses uniform coefficients (the 1/18
+Jacobi form), matching ``workloads/himenobmt.rs`` exactly; the
+*memory-access structure* (19 loads per output point, contiguous in k) is
+what matters for the reproduction, not Himeno's full coefficient arrays.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+OMEGA = 0.8
+
+
+def _stencil_kernel(p_ref, o_ref, *, nk: int):
+    """One (i, j) pencil of the 19-point update.
+
+    Stencil windows overlap, which BlockSpec index maps (block-granular)
+    cannot express, so the kernel receives the whole grid and carves its
+    (3, 3, nk) window with a dynamic slice: 36*nk bytes (~4.6 KiB for the
+    AOT shape) live per step — the HBM<->VMEM schedule the paper's L1D
+    provides implicitly for the stencil's 19-load working set.
+    """
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    p = p_ref[pl.dslice(i, 3), pl.dslice(j, 3), :]
+    c = p[1, 1, :]
+    cm = jnp.roll(p, 1, axis=2)   # k-1 neighbours
+    cp = jnp.roll(p, -1, axis=2)  # k+1 neighbours
+    s = (p[0, 1, :] + p[2, 1, :] + p[1, 0, :] + p[1, 2, :] +
+         cm[1, 1, :] + cp[1, 1, :] +
+         p[0, 0, :] + p[0, 2, :] + p[2, 0, :] + p[2, 2, :] +
+         cm[0, 1, :] + cp[0, 1, :] + cm[2, 1, :] + cp[2, 1, :] +
+         cm[1, 0, :] + cp[1, 0, :] + cm[1, 2, :] + cp[1, 2, :])
+    new = c + OMEGA * (s / 18.0 - c)
+    # interior predicate along k (whilelt on both ends).
+    lane = jax.lax.broadcasted_iota(jnp.int32, (nk,), 0)
+    pred = (lane >= 1) & (lane < nk - 1)
+    o_ref[0, 0, :] = jnp.where(pred, new, c)
+
+
+def jacobi19(p):
+    """One 19-point Jacobi sweep over ``p`` (shape (ni, nj, nk), f32).
+
+    Interior points get the relaxation update; all boundary points pass
+    through unchanged.
+    """
+    ni, nj, nk = p.shape
+    grid = (ni - 2, nj - 2)
+    out = pl.pallas_call(
+        functools.partial(_stencil_kernel, nk=nk),
+        grid=grid,
+        in_specs=[pl.BlockSpec((ni, nj, nk), lambda i, j: (0, 0, 0))],
+        out_specs=pl.BlockSpec((1, 1, nk), lambda i, j: (i + 1, j + 1, 0)),
+        out_shape=jax.ShapeDtypeStruct((ni, nj, nk), p.dtype),
+        interpret=True,
+    )(p)
+    # faces i=0, i=ni-1, j=0, j=nj-1 pass through.
+    out = out.at[0, :, :].set(p[0, :, :])
+    out = out.at[ni - 1, :, :].set(p[ni - 1, :, :])
+    out = out.at[:, 0, :].set(p[:, 0, :])
+    out = out.at[:, nj - 1, :].set(p[:, nj - 1, :])
+    return out

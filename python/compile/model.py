@@ -1,0 +1,76 @@
+"""Layer-2: golden compute models assembled from the Layer-1 kernels.
+
+Each entry in ``ENTRIES`` is one AOT artifact: a jax function (calling the
+Pallas kernels) plus its example arguments. ``aot.py`` lowers every entry
+to HLO text once at build time; the Rust runtime
+(``rust/src/runtime/golden.rs``) loads them and cross-validates the ISA
+simulator's architectural results. Python never runs at simulation time.
+
+All golden models use explicit array arguments (no python scalars) so the
+Rust side can feed plain literals:
+
+  daxpy     : (n i32[1], a f64[1], x f64[N], y f64[N])        -> f64[N]
+  hacc      : (n i32[1], pivot f32[3], x,y,z,m f32[N])        -> f32[N]
+  stencil   : (p f32[NI,NJ,NK])                               -> f32[NI,NJ,NK]
+  fadda     : (n i32[1], x f64[R])                            -> f64[1]
+  faddv     : (n i32[1], x f64[R])                            -> f64[1]
+  eorv      : (n i32[1], x i64[R])                            -> i64[1]
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+
+from .kernels import daxpy as daxpy_k  # noqa: E402
+from .kernels import hacc as hacc_k  # noqa: E402
+from .kernels import reduction as red_k  # noqa: E402
+from .kernels import stencil as stencil_k  # noqa: E402
+
+# AOT shapes — must match rust/src/runtime/golden.rs.
+DAXPY_N = 1024
+HACC_N = 1024
+STENCIL_SHAPE = (10, 10, 32)
+RED_N = 256
+
+
+def daxpy(n, a, x, y):
+    return daxpy_k.daxpy(a[0], x, y, n[0])
+
+
+def hacc(n, pivot, x, y, z, m):
+    return hacc_k.hacc_force(pivot, x, y, z, m, n[0])
+
+
+def stencil(p):
+    return stencil_k.jacobi19(p)
+
+
+def fadda(n, x):
+    return red_k.fadda_ordered(x, n[0]).reshape((1,))
+
+
+def faddv(n, x):
+    return red_k.faddv_tree(x, n[0]).reshape((1,))
+
+
+def eorv(n, x):
+    return red_k.eorv(x, n[0]).reshape((1,))
+
+
+def _s(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+ENTRIES = {
+    "daxpy": (daxpy, (_s((1,), jnp.int32), _s((1,), jnp.float64),
+                      _s((DAXPY_N,), jnp.float64), _s((DAXPY_N,), jnp.float64))),
+    "hacc": (hacc, (_s((1,), jnp.int32), _s((3,), jnp.float32),
+                    _s((HACC_N,), jnp.float32), _s((HACC_N,), jnp.float32),
+                    _s((HACC_N,), jnp.float32), _s((HACC_N,), jnp.float32))),
+    "stencil": (stencil, (_s(STENCIL_SHAPE, jnp.float32),)),
+    "fadda": (fadda, (_s((1,), jnp.int32), _s((RED_N,), jnp.float64))),
+    "faddv": (faddv, (_s((1,), jnp.int32), _s((RED_N,), jnp.float64))),
+    "eorv": (eorv, (_s((1,), jnp.int32), _s((RED_N,), jnp.int64))),
+}

@@ -1,0 +1,225 @@
+"""Kernel-vs-ref allclose — the CORE correctness signal for L1.
+
+hypothesis sweeps shapes, trip counts and dtypes; every Pallas kernel must
+match its pure-jnp/numpy oracle in ``compile.kernels.ref``.
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import daxpy as daxpy_k
+from compile.kernels import hacc as hacc_k
+from compile.kernels import reduction as red_k
+from compile.kernels import ref
+from compile.kernels import stencil as stencil_k
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def rng(seed):
+    return np.random.default_rng(seed)
+
+
+# ---------------------------------------------------------------- daxpy
+
+@settings(**SETTINGS)
+@given(
+    blocks=st.integers(min_value=1, max_value=6),
+    block=st.sampled_from([8, 16, 64]),
+    n_frac=st.floats(min_value=0.0, max_value=1.0),
+    seed=st.integers(min_value=0, max_value=2**31),
+    dtype=st.sampled_from([np.float32, np.float64]),
+)
+def test_daxpy_matches_ref(blocks, block, n_frac, seed, dtype):
+    size = blocks * block
+    n = int(round(n_frac * size))
+    r = rng(seed)
+    a = dtype(2.5)
+    x = r.standard_normal(size).astype(dtype)
+    y = r.standard_normal(size).astype(dtype)
+    got = daxpy_k.daxpy(a, jnp.asarray(x), jnp.asarray(y), n, block=block)
+    want = ref.daxpy(a, x, y, n)
+    # atol: XLA may contract a*x+y to an FMA in one of the two lowerings
+    tol = 1e-6 if dtype == np.float32 else 1e-12
+    np.testing.assert_allclose(got, want, rtol=tol, atol=tol)
+
+
+def test_daxpy_tail_lanes_keep_old_y():
+    """Merging predication: lanes >= n must hold y verbatim (bitwise)."""
+    size, n = 64, 37
+    r = rng(7)
+    x = r.standard_normal(size)
+    y = r.standard_normal(size)
+    got = np.asarray(daxpy_k.daxpy(3.0, jnp.asarray(x), jnp.asarray(y), n,
+                                   block=16))
+    assert (got[n:] == y[n:]).all()
+
+
+def test_daxpy_n_zero_is_identity():
+    size = 32
+    y = rng(1).standard_normal(size)
+    got = daxpy_k.daxpy(1.5, jnp.zeros(size), jnp.asarray(y), 0, block=16)
+    np.testing.assert_array_equal(np.asarray(got), y)
+
+
+def test_daxpy_block_size_agnostic():
+    """VLA property: the result must not depend on the block size (VL)."""
+    size, n = 128, 100
+    r = rng(3)
+    x, y = r.standard_normal(size), r.standard_normal(size)
+    outs = [
+        np.asarray(daxpy_k.daxpy(2.0, jnp.asarray(x), jnp.asarray(y), n,
+                                 block=b))
+        for b in (8, 16, 32, 64, 128)
+    ]
+    for o in outs[1:]:
+        np.testing.assert_array_equal(o, outs[0])
+
+
+# ----------------------------------------------------------------- hacc
+
+@settings(**SETTINGS)
+@given(
+    blocks=st.integers(min_value=1, max_value=4),
+    n_frac=st.floats(min_value=0.0, max_value=1.0),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_hacc_matches_ref(blocks, n_frac, seed):
+    block = 32
+    size = blocks * block
+    n = int(round(n_frac * size))
+    r = rng(seed)
+    pivot = r.uniform(-1, 1, 3).astype(np.float32)
+    x = r.uniform(-4, 4, size).astype(np.float32)
+    y = r.uniform(-4, 4, size).astype(np.float32)
+    z = r.uniform(-4, 4, size).astype(np.float32)
+    m = r.uniform(0.5, 2.0, size).astype(np.float32)
+    got = hacc_k.hacc_force(jnp.asarray(pivot), jnp.asarray(x),
+                            jnp.asarray(y), jnp.asarray(z), jnp.asarray(m),
+                            n, block=block)
+    want = ref.hacc_force(pivot, x, y, z, m, n)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=1e-5)
+
+
+def test_hacc_cutoff_conditional():
+    """Particles beyond rmax2 contribute exactly zero (conditional #2)."""
+    size = 32
+    pivot = np.zeros(3, np.float32)
+    x = np.full(size, 100.0, np.float32)  # far outside cutoff
+    y = np.zeros(size, np.float32)
+    z = np.zeros(size, np.float32)
+    m = np.ones(size, np.float32)
+    got = np.asarray(hacc_k.hacc_force(jnp.asarray(pivot), jnp.asarray(x),
+                                       jnp.asarray(y), jnp.asarray(z),
+                                       jnp.asarray(m), size, block=32))
+    assert (got == 0).all()
+
+
+def test_hacc_softening_conditional():
+    """Coincident particle does not produce inf/nan (conditional #1)."""
+    size = 32
+    pivot = np.zeros(3, np.float32)
+    x = np.zeros(size, np.float32)
+    y = np.zeros(size, np.float32)
+    z = np.zeros(size, np.float32)
+    m = np.ones(size, np.float32)
+    got = np.asarray(hacc_k.hacc_force(jnp.asarray(pivot), jnp.asarray(x),
+                                       jnp.asarray(y), jnp.asarray(z),
+                                       jnp.asarray(m), size, block=32))
+    assert np.isfinite(got).all()
+
+
+# -------------------------------------------------------------- stencil
+
+@settings(max_examples=8, deadline=None)
+@given(
+    ni=st.integers(min_value=3, max_value=6),
+    nj=st.integers(min_value=3, max_value=6),
+    nk=st.integers(min_value=4, max_value=12),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_stencil_matches_ref(ni, nj, nk, seed):
+    p = rng(seed).standard_normal((ni, nj, nk)).astype(np.float32)
+    got = stencil_k.jacobi19(jnp.asarray(p))
+    want = ref.jacobi19(p)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def test_stencil_boundaries_pass_through():
+    p = rng(11).standard_normal((5, 5, 8)).astype(np.float32)
+    got = np.asarray(stencil_k.jacobi19(jnp.asarray(p)))
+    for face in (got[0], got[-1], got[:, 0], got[:, -1],
+                 got[:, :, 0], got[:, :, -1]):
+        pass  # indexing checked below explicitly
+    assert (got[0] == p[0]).all() and (got[-1] == p[-1]).all()
+    assert (got[:, 0] == p[:, 0]).all() and (got[:, -1] == p[:, -1]).all()
+    assert (got[:, :, 0] == p[:, :, 0]).all()
+    assert (got[:, :, -1] == p[:, :, -1]).all()
+
+
+def test_stencil_constant_field_is_fixed_point():
+    p = np.full((4, 4, 8), 3.25, np.float32)
+    got = np.asarray(stencil_k.jacobi19(jnp.asarray(p)))
+    np.testing.assert_allclose(got, p, rtol=1e-6)
+
+
+# ----------------------------------------------------------- reductions
+
+@settings(**SETTINGS)
+@given(
+    logsize=st.integers(min_value=2, max_value=9),
+    n_frac=st.floats(min_value=0.0, max_value=1.0),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_fadda_is_strictly_ordered(logsize, n_frac, seed):
+    size = 1 << logsize
+    n = int(round(n_frac * size))
+    x = rng(seed).standard_normal(size)
+    got = float(red_k.fadda_ordered(jnp.asarray(x), n))
+    want = float(ref.fadda_ordered(x, n))
+    # strictly ordered => bitwise equal to the scalar loop, not just close
+    assert got == want
+
+
+@settings(**SETTINGS)
+@given(
+    logsize=st.integers(min_value=2, max_value=9),
+    n_frac=st.floats(min_value=0.0, max_value=1.0),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_faddv_matches_tree_ref(logsize, n_frac, seed):
+    size = 1 << logsize
+    n = int(round(n_frac * size))
+    x = rng(seed).standard_normal(size)
+    got = float(red_k.faddv_tree(jnp.asarray(x), n))
+    want = float(ref.faddv_tree(x, n))
+    assert got == want  # identical tree order => bitwise equal
+
+
+def test_fadda_vs_faddv_close_but_possibly_different():
+    """§3.3: the two orders agree within tolerance, not necessarily
+    bitwise — the reason fadda exists."""
+    x = rng(5).standard_normal(512) * 1e6
+    a = float(red_k.fadda_ordered(jnp.asarray(x), 512))
+    t = float(red_k.faddv_tree(jnp.asarray(x), 512))
+    np.testing.assert_allclose(a, t, rtol=1e-9)
+
+
+@settings(**SETTINGS)
+@given(
+    size=st.integers(min_value=1, max_value=300),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_eorv_matches_ref(size, seed):
+    r = rng(seed)
+    x = r.integers(0, 2**62, size, dtype=np.int64)
+    n = int(r.integers(0, size + 1))
+    got = int(red_k.eorv(jnp.asarray(x), n))
+    want = int(ref.eorv(x, n))
+    assert got == want

@@ -1,0 +1,60 @@
+"""L2 model entries: shape/dtype contracts + AOT lowering smoke tests."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model
+
+
+@pytest.mark.parametrize("name", list(model.ENTRIES))
+def test_entry_evaluates_at_example_shapes(name):
+    fn, example = model.ENTRIES[name]
+    r = np.random.default_rng(42)
+    args = []
+    for spec in example:
+        if np.issubdtype(spec.dtype, np.integer):
+            # trip counts: keep within the array bound
+            args.append(jnp.asarray(
+                r.integers(1, 64, spec.shape), dtype=spec.dtype))
+        else:
+            args.append(jnp.asarray(
+                r.standard_normal(spec.shape), dtype=spec.dtype))
+    out = fn(*args)
+    assert np.isfinite(np.asarray(out, dtype=np.float64)).all()
+
+
+@pytest.mark.parametrize("name", list(model.ENTRIES))
+def test_entry_output_shape_is_stable(name):
+    """The Rust runtime hard-codes output shapes; lock them here."""
+    fn, example = model.ENTRIES[name]
+    out = jax.eval_shape(fn, *example)
+    expected = {
+        "daxpy": ((model.DAXPY_N,), jnp.float64),
+        "hacc": ((model.HACC_N,), jnp.float32),
+        "stencil": (model.STENCIL_SHAPE, jnp.float32),
+        "fadda": ((1,), jnp.float64),
+        "faddv": ((1,), jnp.float64),
+        "eorv": ((1,), jnp.int64),
+    }[name]
+    assert out.shape == expected[0]
+    assert out.dtype == expected[1]
+
+
+@pytest.mark.parametrize("name", ["daxpy", "fadda"])
+def test_aot_lowering_produces_hlo_text(name):
+    text = aot.lower_entry(name)
+    assert "HloModule" in text
+    # return_tuple=True => the root is a tuple
+    assert "tuple" in text
+
+
+def test_aot_main_writes_all_artifacts(tmp_path, monkeypatch):
+    import sys
+    monkeypatch.setattr(sys, "argv",
+                        ["aot", "--out-dir", str(tmp_path), "--only",
+                         "eorv"])
+    aot.main()
+    assert (tmp_path / "eorv.hlo.txt").exists()
+    assert (tmp_path / "manifest.txt").read_text().startswith("eorv:")

@@ -1,0 +1,264 @@
+//! NZCV condition flags, including the SVE overloading of Table 1:
+//!
+//! | Flag | SVE   | Condition                          |
+//! |------|-------|------------------------------------|
+//! | N    | First | set if first element is active     |
+//! | Z    | None  | set if no element is active        |
+//! | C    | !Last | set if last element is not active  |
+//! | V    |       | scalarized loop state, else zero   |
+
+use super::regs::{Esize, PredReg};
+
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Flags {
+    pub n: bool,
+    pub z: bool,
+    pub c: bool,
+    pub v: bool,
+}
+
+impl Flags {
+    /// Set from a predicate-generating instruction's result (Table 1).
+    /// `First`/`Last` are relative to the implicit least- to
+    /// most-significant element order (§2.3.1), and — per the ARM ARM —
+    /// relative to the *governing* predicate `pg`: "first" is the first
+    /// element active in pg, "last" the last element active in pg.
+    pub fn from_pred_result(pg: &PredReg, result: &PredReg, e: Esize, vl_bytes: usize) -> Flags {
+        let first = pg
+            .first_active(e, vl_bytes)
+            .map(|i| result.active(e, i))
+            .unwrap_or(false);
+        let last = pg
+            .last_active(e, vl_bytes)
+            .map(|i| result.active(e, i))
+            .unwrap_or(false);
+        let none = pg_and_none(pg, result, e, vl_bytes);
+        Flags { n: first, z: none, c: !last, v: false }
+    }
+
+    /// AArch64 integer compare semantics (subtract and set flags) — used
+    /// by the scalar `cmp`/`subs` path.
+    pub fn from_sub(a: u64, b: u64) -> Flags {
+        let (res, borrow) = a.overflowing_sub(b);
+        let sa = a as i64;
+        let sb = b as i64;
+        let (sres, sover) = sa.overflowing_sub(sb);
+        debug_assert_eq!(sres as u64, res);
+        Flags { n: (res as i64) < 0, z: res == 0, c: !borrow, v: sover }
+    }
+
+    /// Scalar FP compare (fcmp): standard AArch64 mapping with
+    /// unordered -> C,V set.
+    pub fn from_fcmp(a: f64, b: f64) -> Flags {
+        if a.is_nan() || b.is_nan() {
+            Flags { n: false, z: false, c: true, v: true }
+        } else if a == b {
+            Flags { n: false, z: true, c: true, v: false }
+        } else if a < b {
+            Flags { n: true, z: false, c: false, v: false }
+        } else {
+            Flags { n: false, z: false, c: true, v: false }
+        }
+    }
+
+    /// Evaluate an AArch64 condition.
+    pub fn cond(&self, c: Cond) -> bool {
+        match c {
+            Cond::Eq => self.z,
+            Cond::Ne => !self.z,
+            Cond::Hs => self.c,
+            Cond::Lo => !self.c,
+            Cond::Mi => self.n,
+            Cond::Pl => !self.n,
+            Cond::Vs => self.v,
+            Cond::Vc => !self.v,
+            Cond::Hi => self.c && !self.z,
+            Cond::Ls => !(self.c && !self.z),
+            Cond::Ge => self.n == self.v,
+            Cond::Lt => self.n != self.v,
+            Cond::Gt => !self.z && self.n == self.v,
+            Cond::Le => !(!self.z && self.n == self.v),
+        }
+    }
+}
+
+fn pg_and_none(pg: &PredReg, result: &PredReg, e: Esize, vl_bytes: usize) -> bool {
+    (0..e.lanes(vl_bytes)).all(|i| !(pg.active(e, i) && result.active(e, i)))
+}
+
+/// AArch64 condition codes, with the SVE aliases of §2.3 spelled out.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Cond {
+    Eq,
+    Ne,
+    Hs,
+    Lo,
+    Mi,
+    Pl,
+    Vs,
+    Vc,
+    Hi,
+    Ls,
+    Ge,
+    Lt,
+    Gt,
+    Le,
+}
+
+impl Cond {
+    /// SVE aliases (ARM ARM "condition aliases for SVE"):
+    /// none=EQ, any=NE, nlast=HS, **last=LO**, **first=MI**, nfrst=PL,
+    /// pmore=HI, plast=LS, **tcont=GE**, tstop=LT.
+    pub const NONE: Cond = Cond::Eq;
+    pub const ANY: Cond = Cond::Ne;
+    pub const NLAST: Cond = Cond::Hs;
+    pub const LAST: Cond = Cond::Lo;
+    pub const FIRST: Cond = Cond::Mi;
+    pub const NFRST: Cond = Cond::Pl;
+    pub const PMORE: Cond = Cond::Hi;
+    pub const PLAST: Cond = Cond::Ls;
+    pub const TCONT: Cond = Cond::Ge;
+    pub const TSTOP: Cond = Cond::Lt;
+
+    pub fn invert(self) -> Cond {
+        match self {
+            Cond::Eq => Cond::Ne,
+            Cond::Ne => Cond::Eq,
+            Cond::Hs => Cond::Lo,
+            Cond::Lo => Cond::Hs,
+            Cond::Mi => Cond::Pl,
+            Cond::Pl => Cond::Mi,
+            Cond::Vs => Cond::Vc,
+            Cond::Vc => Cond::Vs,
+            Cond::Hi => Cond::Ls,
+            Cond::Ls => Cond::Hi,
+            Cond::Ge => Cond::Lt,
+            Cond::Lt => Cond::Ge,
+            Cond::Gt => Cond::Le,
+            Cond::Le => Cond::Gt,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proptest_lite::check;
+
+    fn pred_from_bits(e: Esize, bits: &[bool]) -> PredReg {
+        let mut p = PredReg::default();
+        for (i, &b) in bits.iter().enumerate() {
+            p.set_active(e, i, b);
+        }
+        p
+    }
+
+    #[test]
+    fn table1_first_none_last() {
+        let e = Esize::D;
+        let vlb = 32; // 4 lanes of .d
+        let pg = pred_from_bits(e, &[true, true, true, true]);
+
+        // all active: First=1, None=0, Last=1 => N=1 Z=0 C=0
+        let f = Flags::from_pred_result(&pg, &pred_from_bits(e, &[true, true, true, true]), e, vlb);
+        assert_eq!(f, Flags { n: true, z: false, c: false, v: false });
+
+        // partial from the front: First=1, Last=0 => N=1 C=1
+        let f = Flags::from_pred_result(&pg, &pred_from_bits(e, &[true, true, false, false]), e, vlb);
+        assert_eq!(f, Flags { n: true, z: false, c: true, v: false });
+
+        // empty: None=1 => Z=1, N=0, C=1
+        let f = Flags::from_pred_result(&pg, &pred_from_bits(e, &[false; 4]), e, vlb);
+        assert_eq!(f, Flags { n: false, z: true, c: true, v: false });
+    }
+
+    #[test]
+    fn table1_first_last_follow_governing_pred() {
+        // Governing predicate covers lanes 1..3 only: "first" means lane 1.
+        let e = Esize::S;
+        let vlb = 16; // 4 lanes of .s
+        let pg = pred_from_bits(e, &[false, true, true, false]);
+        let res = pred_from_bits(e, &[false, true, false, false]);
+        let f = Flags::from_pred_result(&pg, &res, e, vlb);
+        assert!(f.n, "lane1 is pg's first and is set in result");
+        assert!(f.c, "pg's last (lane2) not set in result -> C=!Last=1");
+        assert!(!f.z);
+    }
+
+    #[test]
+    fn sve_condition_aliases() {
+        // b.first == b.mi, b.last == b.lo, b.tcont == b.ge (§2.3, Fig. 2/5/6)
+        assert_eq!(Cond::FIRST, Cond::Mi);
+        assert_eq!(Cond::LAST, Cond::Lo);
+        assert_eq!(Cond::NONE, Cond::Eq);
+        assert_eq!(Cond::ANY, Cond::Ne);
+        assert_eq!(Cond::TCONT, Cond::Ge);
+    }
+
+    #[test]
+    fn sub_flags_match_reference_cases() {
+        let f = Flags::from_sub(5, 5);
+        assert!(f.z && f.c && !f.n && !f.v);
+        let f = Flags::from_sub(3, 5);
+        assert!(!f.z && !f.c && f.n && !f.v);
+        let f = Flags::from_sub(5, 3);
+        assert!(!f.z && f.c && !f.n && !f.v);
+        // signed overflow: i64::MIN - 1
+        let f = Flags::from_sub(i64::MIN as u64, 1);
+        assert!(f.v);
+    }
+
+    #[test]
+    fn cond_eval_vs_scalar_semantics() {
+        check("cond_eval_vs_scalar_semantics", 500, |g| {
+            let a = g.u64();
+            let b = g.u64();
+            let f = Flags::from_sub(a, b);
+            assert_eq!(f.cond(Cond::Eq), a == b);
+            assert_eq!(f.cond(Cond::Ne), a != b);
+            assert_eq!(f.cond(Cond::Lo), a < b);
+            assert_eq!(f.cond(Cond::Hs), a >= b);
+            assert_eq!(f.cond(Cond::Hi), a > b);
+            assert_eq!(f.cond(Cond::Ls), a <= b);
+            assert_eq!(f.cond(Cond::Lt), (a as i64) < (b as i64));
+            assert_eq!(f.cond(Cond::Ge), (a as i64) >= (b as i64));
+            assert_eq!(f.cond(Cond::Gt), (a as i64) > (b as i64));
+            assert_eq!(f.cond(Cond::Le), (a as i64) <= (b as i64));
+        });
+    }
+
+    #[test]
+    fn cond_invert_is_involution_and_negation() {
+        let all = [
+            Cond::Eq,
+            Cond::Ne,
+            Cond::Hs,
+            Cond::Lo,
+            Cond::Mi,
+            Cond::Pl,
+            Cond::Vs,
+            Cond::Vc,
+            Cond::Hi,
+            Cond::Ls,
+            Cond::Ge,
+            Cond::Lt,
+            Cond::Gt,
+            Cond::Le,
+        ];
+        check("cond_invert_is_involution_and_negation", 200, |g| {
+            let c = *g.choose(&all);
+            let f = Flags { n: g.bool(), z: g.bool(), c: g.bool(), v: g.bool() };
+            assert_eq!(c.invert().invert(), c);
+            assert_eq!(f.cond(c), !f.cond(c.invert()));
+        });
+    }
+
+    #[test]
+    fn fcmp_cases() {
+        assert!(Flags::from_fcmp(1.0, 1.0).cond(Cond::Eq));
+        assert!(Flags::from_fcmp(0.5, 1.0).cond(Cond::Mi));
+        assert!(Flags::from_fcmp(2.0, 1.0).cond(Cond::Gt));
+        let un = Flags::from_fcmp(f64::NAN, 1.0);
+        assert!(un.c && un.v && !un.z);
+    }
+}

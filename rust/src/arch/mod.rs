@@ -1,0 +1,10 @@
+//! Architectural state introduced by SVE (§2.1, Fig. 1) plus the AArch64
+//! base state the paper's examples rely on.
+
+mod flags;
+mod regs;
+mod state;
+
+pub use flags::{Cond, Flags};
+pub use regs::{Esize, PredReg, VectorReg};
+pub use state::{CpuState, Zcr, NUM_PREGS, NUM_VREGS, NUM_XREGS};

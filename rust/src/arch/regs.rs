@@ -1,0 +1,426 @@
+//! Scalable vector and predicate registers (§2.1).
+//!
+//! A [`VectorReg`] holds the architectural maximum of 2048 bits; the
+//! *effective* vector length (VL) is carried by the executing
+//! [`super::CpuState`] and every operation only touches the first
+//! `VL/8` bytes. A [`PredReg`] holds one bit per vector *byte* (§2.3.1:
+//! "eight enable bits per 64-bit vector element"); for element size `E`
+//! only the least-significant bit of each element's group is the enable.
+
+use crate::VL_MAX_BYTES;
+
+/// Element size of a vector operation (B/H/S/D suffixes in the ISA).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Esize {
+    B,
+    H,
+    S,
+    D,
+}
+
+impl Esize {
+    /// Element width in bytes.
+    #[inline]
+    pub const fn bytes(self) -> usize {
+        match self {
+            Esize::B => 1,
+            Esize::H => 2,
+            Esize::S => 4,
+            Esize::D => 8,
+        }
+    }
+
+    /// Number of elements in a vector of `vl_bytes`.
+    #[inline]
+    pub const fn lanes(self, vl_bytes: usize) -> usize {
+        vl_bytes / self.bytes()
+    }
+
+    pub const ALL: [Esize; 4] = [Esize::B, Esize::H, Esize::S, Esize::D];
+
+    pub fn suffix(self) -> &'static str {
+        match self {
+            Esize::B => "b",
+            Esize::H => "h",
+            Esize::S => "s",
+            Esize::D => "d",
+        }
+    }
+}
+
+/// One scalable vector register (Z0–Z31). The low 128 bits double as the
+/// corresponding Advanced SIMD register V0–V31 (§4: the SVE register file
+/// *overlays* the SIMD/FP file).
+#[derive(Clone, Copy)]
+pub struct VectorReg {
+    pub bytes: [u8; VL_MAX_BYTES],
+}
+
+impl Default for VectorReg {
+    fn default() -> Self {
+        VectorReg { bytes: [0u8; VL_MAX_BYTES] }
+    }
+}
+
+impl std::fmt::Debug for VectorReg {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        // print the low 128 bits only; full dumps come from trace code
+        write!(f, "VectorReg(lo128=")?;
+        for b in self.bytes[..16].iter().rev() {
+            write!(f, "{b:02x}")?;
+        }
+        write!(f, ", ..)")
+    }
+}
+
+impl VectorReg {
+    /// Read element `i` (zero-extended to u64). Little-endian element
+    /// layout, as in AArch64; word-at-a-time for the hot sizes.
+    #[inline]
+    pub fn get(&self, e: Esize, i: usize) -> u64 {
+        match e {
+            Esize::B => self.bytes[i] as u64,
+            Esize::H => {
+                u16::from_le_bytes(self.bytes[i * 2..i * 2 + 2].try_into().unwrap()) as u64
+            }
+            Esize::S => {
+                u32::from_le_bytes(self.bytes[i * 4..i * 4 + 4].try_into().unwrap()) as u64
+            }
+            Esize::D => u64::from_le_bytes(self.bytes[i * 8..i * 8 + 8].try_into().unwrap()),
+        }
+    }
+
+    /// Write element `i` (truncating `v` to the element width).
+    #[inline]
+    pub fn set(&mut self, e: Esize, i: usize, v: u64) {
+        match e {
+            Esize::B => self.bytes[i] = v as u8,
+            Esize::H => self.bytes[i * 2..i * 2 + 2].copy_from_slice(&(v as u16).to_le_bytes()),
+            Esize::S => self.bytes[i * 4..i * 4 + 4].copy_from_slice(&(v as u32).to_le_bytes()),
+            Esize::D => self.bytes[i * 8..i * 8 + 8].copy_from_slice(&v.to_le_bytes()),
+        }
+    }
+
+    /// Read element `i` sign-extended to i64.
+    #[inline]
+    pub fn get_signed(&self, e: Esize, i: usize) -> i64 {
+        let v = self.get(e, i);
+        let bits = e.bytes() * 8;
+        if bits == 64 {
+            v as i64
+        } else {
+            let shift = 64 - bits;
+            ((v << shift) as i64) >> shift
+        }
+    }
+
+    #[inline]
+    pub fn get_f64(&self, i: usize) -> f64 {
+        f64::from_bits(self.get(Esize::D, i))
+    }
+
+    #[inline]
+    pub fn set_f64(&mut self, i: usize, v: f64) {
+        self.set(Esize::D, i, v.to_bits())
+    }
+
+    #[inline]
+    pub fn get_f32(&self, i: usize) -> f32 {
+        f32::from_bits(self.get(Esize::S, i) as u32)
+    }
+
+    #[inline]
+    pub fn set_f32(&mut self, i: usize, v: f32) {
+        self.set(Esize::S, i, v.to_bits() as u64)
+    }
+
+    /// Zero everything from byte `from` upward. Advanced SIMD writes call
+    /// this with `from = 16`: §4 — "Advanced SIMD ... instructions are
+    /// required to zero the extended bits of any vector register which
+    /// they write, avoiding partial updates".
+    pub fn zero_from(&mut self, from: usize) {
+        for b in &mut self.bytes[from..] {
+            *b = 0;
+        }
+    }
+
+    pub fn zero(&mut self) {
+        self.bytes = [0u8; VL_MAX_BYTES];
+    }
+}
+
+/// One scalable predicate register (P0–P15) or the FFR: one bit per
+/// vector byte, stored as a bitset.
+#[derive(Clone, Copy, Default, PartialEq, Eq)]
+pub struct PredReg {
+    words: [u64; VL_MAX_BYTES / 64],
+}
+
+impl std::fmt::Debug for PredReg {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "PredReg(")?;
+        for i in (0..32).rev() {
+            write!(f, "{}", u8::from(self.get_bit(i)))?;
+        }
+        write!(f, "… low 32 byte-lanes)")
+    }
+}
+
+impl PredReg {
+    /// Raw per-byte enable bit.
+    #[inline]
+    pub fn get_bit(&self, byte_lane: usize) -> bool {
+        (self.words[byte_lane / 64] >> (byte_lane % 64)) & 1 == 1
+    }
+
+    #[inline]
+    pub fn set_bit(&mut self, byte_lane: usize, v: bool) {
+        let (w, b) = (byte_lane / 64, byte_lane % 64);
+        if v {
+            self.words[w] |= 1 << b;
+        } else {
+            self.words[w] &= !(1 << b);
+        }
+    }
+
+    /// Is element `i` (at element size `e`) active? Only the least
+    /// significant bit of the element's byte group is the enable
+    /// (§2.3.1 "Mixed element size control").
+    #[inline]
+    pub fn active(&self, e: Esize, i: usize) -> bool {
+        self.get_bit(i * e.bytes())
+    }
+
+    /// Set element `i`'s enable. The canonical encoding sets the low bit
+    /// of the group and clears the rest, which is what all
+    /// predicate-producing instructions write.
+    #[inline]
+    pub fn set_active(&mut self, e: Esize, i: usize, v: bool) {
+        let base = i * e.bytes();
+        self.set_bit(base, v);
+        for k in 1..e.bytes() {
+            self.set_bit(base + k, false);
+        }
+    }
+
+    /// All-false.
+    pub fn clear(&mut self) {
+        self.words = [0; VL_MAX_BYTES / 64];
+    }
+
+    /// Word pattern with one set bit per element of size `e`.
+    #[inline]
+    const fn elem_pattern(e: Esize) -> u64 {
+        match e {
+            Esize::B => u64::MAX,
+            Esize::H => 0x5555_5555_5555_5555,
+            Esize::S => 0x1111_1111_1111_1111,
+            Esize::D => 0x0101_0101_0101_0101,
+        }
+    }
+
+    /// Canonical all-true at element size `e` over `vl_bytes`
+    /// (word-parallel: this is on the simulator's hottest path).
+    pub fn set_all(&mut self, e: Esize, vl_bytes: usize) {
+        let pat = Self::elem_pattern(e);
+        for (w, word) in self.words.iter_mut().enumerate() {
+            let lo = w * 64;
+            *word = if vl_bytes >= lo + 64 {
+                pat
+            } else if vl_bytes > lo {
+                pat & ((1u64 << (vl_bytes - lo)) - 1)
+            } else {
+                0
+            };
+        }
+    }
+
+    /// Number of active elements at size `e` within `vl_bytes`.
+    pub fn count_active(&self, e: Esize, vl_bytes: usize) -> usize {
+        let pat = Self::elem_pattern(e);
+        let mut n = 0;
+        for (w, &word) in self.words.iter().enumerate() {
+            let lo = w * 64;
+            let mask = if vl_bytes >= lo + 64 {
+                u64::MAX
+            } else if vl_bytes > lo {
+                (1u64 << (vl_bytes - lo)) - 1
+            } else {
+                break;
+            };
+            n += (word & pat & mask).count_ones() as usize;
+        }
+        n
+    }
+
+    /// Index of the first active element, if any (§2.3.1 "Implicit
+    /// order": least- to most-significant).
+    pub fn first_active(&self, e: Esize, vl_bytes: usize) -> Option<usize> {
+        let pat = Self::elem_pattern(e);
+        for (w, &word) in self.words.iter().enumerate() {
+            let lo = w * 64;
+            if lo >= vl_bytes {
+                break;
+            }
+            let mask = if vl_bytes >= lo + 64 { u64::MAX } else { (1u64 << (vl_bytes - lo)) - 1 };
+            let bits = word & pat & mask;
+            if bits != 0 {
+                return Some((lo + bits.trailing_zeros() as usize) / e.bytes());
+            }
+        }
+        None
+    }
+
+    /// Index of the last active element, if any.
+    pub fn last_active(&self, e: Esize, vl_bytes: usize) -> Option<usize> {
+        let pat = Self::elem_pattern(e);
+        let words = vl_bytes.div_ceil(64).min(self.words.len());
+        for w in (0..words).rev() {
+            let lo = w * 64;
+            let mask = if vl_bytes >= lo + 64 { u64::MAX } else { (1u64 << (vl_bytes - lo)) - 1 };
+            let bits = self.words[w] & pat & mask;
+            if bits != 0 {
+                return Some((lo + 63 - bits.leading_zeros() as usize) / e.bytes());
+            }
+        }
+        None
+    }
+
+    /// No element active?
+    pub fn none_active(&self, e: Esize, vl_bytes: usize) -> bool {
+        self.first_active(e, vl_bytes).is_none()
+    }
+
+    /// Bitwise AND (used for governed predicate reads, e.g. `rdffr pd, pg/z`).
+    pub fn and(&self, other: &PredReg) -> PredReg {
+        let mut r = PredReg::default();
+        for (i, w) in r.words.iter_mut().enumerate() {
+            *w = self.words[i] & other.words[i];
+        }
+        r
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proptest_lite::check;
+
+    #[test]
+    fn element_roundtrip_all_sizes() {
+        check("element_roundtrip_all_sizes", 200, |g| {
+            let e = *g.choose(&Esize::ALL);
+            let mut v = VectorReg::default();
+            let lanes = e.lanes(32); // VL = 256-bit
+            let i = g.usize_in(0, lanes - 1);
+            let raw = g.u64();
+            v.set(e, i, raw);
+            let mask = if e.bytes() == 8 { u64::MAX } else { (1u64 << (e.bytes() * 8)) - 1 };
+            assert_eq!(v.get(e, i), raw & mask);
+        });
+    }
+
+    #[test]
+    fn set_does_not_clobber_neighbours() {
+        let mut v = VectorReg::default();
+        v.set(Esize::S, 0, 0xAAAA_BBBB);
+        v.set(Esize::S, 1, 0xCCCC_DDDD);
+        v.set(Esize::S, 2, 0x1111_2222);
+        v.set(Esize::S, 1, 0x3333_4444);
+        assert_eq!(v.get(Esize::S, 0), 0xAAAA_BBBB);
+        assert_eq!(v.get(Esize::S, 1), 0x3333_4444);
+        assert_eq!(v.get(Esize::S, 2), 0x1111_2222);
+    }
+
+    #[test]
+    fn sign_extension() {
+        let mut v = VectorReg::default();
+        v.set(Esize::B, 3, 0x80);
+        assert_eq!(v.get_signed(Esize::B, 3), -128);
+        v.set(Esize::S, 1, 0xFFFF_FFFF);
+        assert_eq!(v.get_signed(Esize::S, 1), -1);
+        v.set(Esize::D, 0, u64::MAX);
+        assert_eq!(v.get_signed(Esize::D, 0), -1);
+    }
+
+    #[test]
+    fn f64_bits_roundtrip() {
+        let mut v = VectorReg::default();
+        v.set_f64(2, -3.75);
+        assert_eq!(v.get_f64(2), -3.75);
+        v.set_f32(5, 1.5);
+        assert_eq!(v.get_f32(5), 1.5);
+    }
+
+    #[test]
+    fn neon_write_zeroes_high_bits() {
+        let mut v = VectorReg::default();
+        for i in 0..32 {
+            v.set(Esize::D, i % 4, u64::MAX);
+            v.bytes[i] = 0xFF;
+        }
+        v.zero_from(16);
+        assert!(v.bytes[16..].iter().all(|&b| b == 0));
+        assert!(v.bytes[..16].iter().all(|&b| b == 0xFF));
+    }
+
+    #[test]
+    fn predicate_element_granularity() {
+        let mut p = PredReg::default();
+        p.set_active(Esize::D, 1, true);
+        // element 1 at .d = byte lane 8
+        assert!(p.get_bit(8));
+        assert!(p.active(Esize::D, 1));
+        // the same register viewed at .b granularity: only lane 8 set
+        assert!(p.active(Esize::B, 8));
+        assert!(!p.active(Esize::B, 9));
+    }
+
+    #[test]
+    fn predicate_first_last_none() {
+        let vlb = 32;
+        let mut p = PredReg::default();
+        assert!(p.none_active(Esize::S, vlb));
+        p.set_active(Esize::S, 2, true);
+        p.set_active(Esize::S, 5, true);
+        assert_eq!(p.first_active(Esize::S, vlb), Some(2));
+        assert_eq!(p.last_active(Esize::S, vlb), Some(5));
+        assert_eq!(p.count_active(Esize::S, vlb), 2);
+    }
+
+    #[test]
+    fn predicate_all_then_and() {
+        let vlb = 16;
+        let mut a = PredReg::default();
+        a.set_all(Esize::D, vlb);
+        let mut b = PredReg::default();
+        b.set_active(Esize::D, 0, true);
+        let c = a.and(&b);
+        assert!(c.active(Esize::D, 0));
+        assert!(!c.active(Esize::D, 1));
+    }
+
+    #[test]
+    fn prop_count_equals_firstlast_consistency() {
+        check("prop_count_equals_firstlast_consistency", 300, |g| {
+            let e = *g.choose(&Esize::ALL);
+            let vlb = 16 * g.usize_in(1, 16);
+            let mut p = PredReg::default();
+            let lanes = e.lanes(vlb);
+            for i in 0..lanes {
+                if g.bool() {
+                    p.set_active(e, i, true);
+                }
+            }
+            let cnt = p.count_active(e, vlb);
+            match (p.first_active(e, vlb), p.last_active(e, vlb)) {
+                (None, None) => assert_eq!(cnt, 0),
+                (Some(f), Some(l)) => {
+                    assert!(f <= l);
+                    assert!(cnt >= 1 && cnt <= l - f + 1);
+                }
+                _ => panic!("first/last disagree"),
+            }
+        });
+    }
+}

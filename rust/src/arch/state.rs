@@ -1,0 +1,181 @@
+//! The complete per-core architectural state (Fig. 1a), plus the ZCR
+//! vector-length virtualization registers.
+
+use super::flags::Flags;
+use super::regs::{PredReg, VectorReg};
+use crate::{vl_is_legal, VL_MAX_BITS};
+
+pub const NUM_XREGS: usize = 32; // x31 reads as zero (xzr)
+pub const NUM_VREGS: usize = 32;
+pub const NUM_PREGS: usize = 16;
+
+/// ZCR_ELx: each privilege level can *reduce* the effective vector width
+/// (§2.1). `len` holds (VL/128 - 1) like the architectural LEN field.
+#[derive(Clone, Copy, Debug)]
+pub struct Zcr {
+    pub len: [u8; 3], // EL1..EL3
+}
+
+impl Default for Zcr {
+    fn default() -> Self {
+        // all levels allow the architectural max
+        Zcr { len: [(VL_MAX_BITS / 128 - 1) as u8; 3] }
+    }
+}
+
+impl Zcr {
+    /// Effective VL in bits for a hardware of `hw_vl_bits`, as seen at
+    /// EL0: the minimum of the hardware width and every level's limit.
+    pub fn effective_vl_bits(&self, hw_vl_bits: usize) -> usize {
+        let mut vl = hw_vl_bits;
+        for l in self.len {
+            vl = vl.min((l as usize + 1) * 128);
+        }
+        vl
+    }
+}
+
+/// Architectural state of one simulated core.
+#[derive(Clone)]
+pub struct CpuState {
+    /// General-purpose registers; index 31 is XZR (reads 0, writes
+    /// discarded).
+    pub x: [u64; NUM_XREGS],
+    /// Scalable vector registers Z0–Z31; low 128 bits are V0–V31.
+    pub z: [VectorReg; NUM_VREGS],
+    /// Scalable predicate registers P0–P15.
+    pub p: [PredReg; NUM_PREGS],
+    /// First-fault register (§2.3.3).
+    pub ffr: PredReg,
+    /// NZCV.
+    pub flags: Flags,
+    /// Program counter, as an instruction *index* into the program.
+    pub pc: usize,
+    /// Vector-length control.
+    pub zcr: Zcr,
+    /// Hardware vector length in bits (an implementation choice, §2.2).
+    hw_vl_bits: usize,
+}
+
+impl CpuState {
+    pub fn new(hw_vl_bits: usize) -> Self {
+        assert!(vl_is_legal(hw_vl_bits), "illegal vector length {hw_vl_bits}");
+        CpuState {
+            x: [0; NUM_XREGS],
+            z: [VectorReg::default(); NUM_VREGS],
+            p: [PredReg::default(); NUM_PREGS],
+            ffr: PredReg::default(),
+            flags: Flags::default(),
+            pc: 0,
+            zcr: Zcr::default(),
+            hw_vl_bits,
+        }
+    }
+
+    /// Effective vector length in bits after ZCR virtualization.
+    #[inline]
+    pub fn vl_bits(&self) -> usize {
+        self.zcr.effective_vl_bits(self.hw_vl_bits)
+    }
+
+    /// Effective vector length in bytes.
+    #[inline]
+    pub fn vl_bytes(&self) -> usize {
+        self.vl_bits() / 8
+    }
+
+    /// Read Xn with the XZR convention.
+    #[inline]
+    pub fn get_x(&self, n: u8) -> u64 {
+        if n == 31 {
+            0
+        } else {
+            self.x[n as usize]
+        }
+    }
+
+    /// Write Xn with the XZR convention.
+    #[inline]
+    pub fn set_x(&mut self, n: u8, v: u64) {
+        if n != 31 {
+            self.x[n as usize] = v;
+        }
+    }
+
+    /// Scalar FP view of V-register `n` (low 64 bits).
+    #[inline]
+    pub fn get_d(&self, n: u8) -> f64 {
+        self.z[n as usize].get_f64(0)
+    }
+
+    /// Write D-register (scalar fp writes zero the rest of the vector,
+    /// like any Advanced SIMD/FP write — §4).
+    #[inline]
+    pub fn set_d(&mut self, n: u8, v: f64) {
+        let r = &mut self.z[n as usize];
+        r.zero();
+        r.set_f64(0, v);
+    }
+
+    #[inline]
+    pub fn get_s(&self, n: u8) -> f32 {
+        self.z[n as usize].get_f32(0)
+    }
+
+    #[inline]
+    pub fn set_s(&mut self, n: u8, v: f32) {
+        let r = &mut self.z[n as usize];
+        r.zero();
+        r.set_f32(0, v);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::Esize;
+
+    #[test]
+    fn xzr_reads_zero_and_ignores_writes() {
+        let mut s = CpuState::new(256);
+        s.set_x(31, 0xDEAD);
+        assert_eq!(s.get_x(31), 0);
+        s.set_x(0, 7);
+        assert_eq!(s.get_x(0), 7);
+    }
+
+    #[test]
+    #[should_panic(expected = "illegal vector length")]
+    fn illegal_vl_rejected() {
+        CpuState::new(96);
+    }
+
+    #[test]
+    fn zcr_reduces_effective_vl() {
+        let mut s = CpuState::new(2048);
+        assert_eq!(s.vl_bits(), 2048);
+        s.zcr.len[0] = 1; // EL1 caps at 256
+        assert_eq!(s.vl_bits(), 256);
+        s.zcr.len[2] = 0; // EL3 caps at 128 — minimum across levels wins
+        assert_eq!(s.vl_bits(), 128);
+    }
+
+    #[test]
+    fn zcr_cannot_exceed_hardware() {
+        let s = CpuState::new(256);
+        assert_eq!(s.vl_bits(), 256, "default ZCR allows hw max only");
+    }
+
+    #[test]
+    fn scalar_fp_writes_zero_the_vector() {
+        let mut s = CpuState::new(512);
+        for i in 0..8 {
+            s.z[3].set(Esize::D, i, u64::MAX);
+        }
+        s.set_d(3, 2.5);
+        assert_eq!(s.get_d(3), 2.5);
+        for i in 1..8 {
+            assert_eq!(s.z[3].get(Esize::D, i), 0, "lane {i} must be zeroed");
+        }
+    }
+}

@@ -1,0 +1,148 @@
+//! Program container and assembler-style builder with labels.
+
+use crate::isa::Inst;
+use std::collections::HashMap;
+
+/// An executable program: a flat instruction sequence with resolved
+/// branch targets (instruction indices) plus label names for traces.
+#[derive(Clone, Debug, Default)]
+pub struct Program {
+    pub insts: Vec<Inst>,
+    /// label -> instruction index (for disassembly/trace output).
+    pub labels: Vec<(String, usize)>,
+}
+
+impl Program {
+    pub fn len(&self) -> usize {
+        self.insts.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.insts.is_empty()
+    }
+
+    /// Label at instruction index, if any.
+    pub fn label_at(&self, idx: usize) -> Option<&str> {
+        self.labels.iter().find(|(_, i)| *i == idx).map(|(n, _)| n.as_str())
+    }
+
+    /// Static count of SVE / NEON / other instructions.
+    pub fn static_mix(&self) -> (usize, usize, usize) {
+        let sve = self.insts.iter().filter(|i| i.is_sve()).count();
+        let neon = self.insts.iter().filter(|i| i.is_neon()).count();
+        (sve, neon, self.insts.len() - sve - neon)
+    }
+}
+
+/// Builder: append instructions, define labels, reference labels in
+/// branches before they are defined; `finish()` resolves everything.
+#[derive(Default)]
+pub struct Asm {
+    insts: Vec<Inst>,
+    labels: HashMap<String, usize>,
+    /// (instruction index, label) pairs awaiting resolution.
+    fixups: Vec<(usize, String)>,
+}
+
+impl Asm {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Current instruction index (where the next `push` lands).
+    pub fn here(&self) -> usize {
+        self.insts.len()
+    }
+
+    /// Define a label at the current position.
+    pub fn label(&mut self, name: &str) -> &mut Self {
+        let prev = self.labels.insert(name.to_string(), self.insts.len());
+        assert!(prev.is_none(), "duplicate label {name}");
+        self
+    }
+
+    pub fn push(&mut self, inst: Inst) -> &mut Self {
+        self.insts.push(inst);
+        self
+    }
+
+    /// Push a branch whose `target` field will be patched to `label`.
+    pub fn push_branch(&mut self, inst: Inst, label: &str) -> &mut Self {
+        debug_assert!(inst.branch_target().is_some(), "not a branch: {inst:?}");
+        self.fixups.push((self.insts.len(), label.to_string()));
+        self.insts.push(inst);
+        self
+    }
+
+    /// Resolve fixups and produce the program.
+    pub fn finish(mut self) -> Program {
+        for (idx, label) in &self.fixups {
+            let target = *self
+                .labels
+                .get(label)
+                .unwrap_or_else(|| panic!("undefined label {label}"));
+            match &mut self.insts[*idx] {
+                Inst::B { target: t }
+                | Inst::BCond { target: t, .. }
+                | Inst::Cbz { target: t, .. }
+                | Inst::Cbnz { target: t, .. } => *t = target,
+                other => panic!("fixup on non-branch {other:?}"),
+            }
+        }
+        let mut labels: Vec<(String, usize)> = self.labels.into_iter().collect();
+        labels.sort_by_key(|(_, i)| *i);
+        Program { insts: self.insts, labels }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::Cond;
+
+    #[test]
+    fn forward_and_backward_labels_resolve() {
+        let mut a = Asm::new();
+        a.push(Inst::MovImm { xd: 0, imm: 0 });
+        a.label("loop");
+        a.push(Inst::AddImm { xd: 0, xn: 0, imm: 1 });
+        a.push(Inst::CmpImm { xn: 0, imm: 10 });
+        a.push_branch(Inst::BCond { cond: Cond::Lt, target: 0 }, "loop");
+        a.push_branch(Inst::B { target: 0 }, "end");
+        a.push(Inst::Nop);
+        a.label("end");
+        a.push(Inst::Halt);
+        let p = a.finish();
+        assert_eq!(p.insts[3].branch_target(), Some(1));
+        assert_eq!(p.insts[4].branch_target(), Some(6));
+        assert_eq!(p.label_at(1), Some("loop"));
+        assert_eq!(p.label_at(6), Some("end"));
+    }
+
+    #[test]
+    #[should_panic(expected = "undefined label")]
+    fn undefined_label_panics() {
+        let mut a = Asm::new();
+        a.push_branch(Inst::B { target: 0 }, "nowhere");
+        a.finish();
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate label")]
+    fn duplicate_label_panics() {
+        let mut a = Asm::new();
+        a.label("x");
+        a.push(Inst::Nop);
+        a.label("x");
+    }
+
+    #[test]
+    fn static_mix_counts() {
+        let mut a = Asm::new();
+        a.push(Inst::MovImm { xd: 0, imm: 0 });
+        a.push(Inst::Setffr);
+        a.push(Inst::NeonMoviZero { vd: 0 });
+        let p = a.finish();
+        assert_eq!(p.static_mix(), (1, 1, 1));
+    }
+}

@@ -1,0 +1,147 @@
+//! In-house micro-benchmark harness (the offline image has no criterion).
+//!
+//! `cargo bench` targets use `[[bench]] harness = false` and drive this
+//! module: warmup, fixed-duration sampling, and median/mean/stddev
+//! reporting in a criterion-like one-line format. Wall-clock timing via
+//! `std::time::Instant`.
+
+use std::time::{Duration, Instant};
+
+/// One benchmark measurement.
+#[derive(Clone, Copy, Debug)]
+pub struct Sample {
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub stddev_ns: f64,
+    pub iters: u64,
+}
+
+impl Sample {
+    pub fn mean_s(&self) -> f64 {
+        self.mean_ns / 1e9
+    }
+
+    /// items/second at a given per-iteration item count.
+    pub fn throughput(&self, items_per_iter: f64) -> f64 {
+        items_per_iter / (self.mean_ns / 1e9)
+    }
+}
+
+/// Benchmark `f`, returning timing statistics.
+///
+/// `f` must do one full unit of work per call; its return value is passed
+/// through `std::hint::black_box` to keep the optimizer honest.
+pub fn bench<T>(warmup: Duration, measure: Duration, mut f: impl FnMut() -> T) -> Sample {
+    // Warmup + calibration: figure out how many iterations fit the budget.
+    let wstart = Instant::now();
+    let mut warm_iters = 0u64;
+    while wstart.elapsed() < warmup || warm_iters == 0 {
+        std::hint::black_box(f());
+        warm_iters += 1;
+    }
+    let per_iter = wstart.elapsed().as_secs_f64() / warm_iters as f64;
+    let target_samples = 30usize;
+    let batch = ((measure.as_secs_f64() / target_samples as f64 / per_iter).ceil() as u64).max(1);
+
+    let mut samples_ns: Vec<f64> = Vec::with_capacity(target_samples);
+    let mstart = Instant::now();
+    let mut total_iters = 0u64;
+    while mstart.elapsed() < measure || samples_ns.is_empty() {
+        let s = Instant::now();
+        for _ in 0..batch {
+            std::hint::black_box(f());
+        }
+        samples_ns.push(s.elapsed().as_nanos() as f64 / batch as f64);
+        total_iters += batch;
+    }
+    samples_ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = samples_ns.len() as f64;
+    let mean = samples_ns.iter().sum::<f64>() / n;
+    let median = samples_ns[samples_ns.len() / 2];
+    let var = samples_ns.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n;
+    Sample { mean_ns: mean, median_ns: median, stddev_ns: var.sqrt(), iters: total_iters }
+}
+
+/// Convenience: default 0.3s warmup / 1.2s measurement.
+pub fn bench_default<T>(f: impl FnMut() -> T) -> Sample {
+    bench(Duration::from_millis(300), Duration::from_millis(1200), f)
+}
+
+/// Quick variant for slow end-to-end benches (one warmup call, N samples).
+pub fn bench_n<T>(n: usize, mut f: impl FnMut() -> T) -> Sample {
+    std::hint::black_box(f());
+    let mut samples_ns = Vec::with_capacity(n);
+    for _ in 0..n {
+        let s = Instant::now();
+        std::hint::black_box(f());
+        samples_ns.push(s.elapsed().as_nanos() as f64);
+    }
+    samples_ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let nn = samples_ns.len() as f64;
+    let mean = samples_ns.iter().sum::<f64>() / nn;
+    let median = samples_ns[samples_ns.len() / 2];
+    let var = samples_ns.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / nn;
+    Sample { mean_ns: mean, median_ns: median, stddev_ns: var.sqrt(), iters: n as u64 }
+}
+
+fn human_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// criterion-like single-line report.
+pub fn report(name: &str, s: &Sample) {
+    println!(
+        "{name:<44} time: [{} ± {}]  median: {}  ({} iters)",
+        human_ns(s.mean_ns),
+        human_ns(s.stddev_ns),
+        human_ns(s.median_ns),
+        s.iters
+    );
+}
+
+/// Report with throughput (elements, instructions, ...).
+pub fn report_throughput(name: &str, s: &Sample, items: f64, unit: &str) {
+    println!(
+        "{name:<44} time: [{} ± {}]  thrpt: {:.3} M{unit}/s",
+        human_ns(s.mean_ns),
+        human_ns(s.stddev_ns),
+        s.throughput(items) / 1e6,
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let s = bench(Duration::from_millis(10), Duration::from_millis(50), || {
+            (0..1000u64).sum::<u64>()
+        });
+        assert!(s.mean_ns > 0.0);
+        assert!(s.iters > 0);
+        assert!(s.median_ns > 0.0);
+    }
+
+    #[test]
+    fn bench_n_returns_n_samples() {
+        let s = bench_n(5, || 42u64);
+        assert_eq!(s.iters, 5);
+    }
+
+    #[test]
+    fn human_units() {
+        assert!(human_ns(5.0).ends_with("ns"));
+        assert!(human_ns(5e3).ends_with("µs"));
+        assert!(human_ns(5e6).ends_with("ms"));
+        assert!(human_ns(5e9).ends_with(" s"));
+    }
+}

@@ -1,0 +1,188 @@
+//! Pointer-chase kernels: the Fig. 6 "scalarized intra-vector sub-loop"
+//! (§2.3.5) and its scalar baseline.
+//!
+//! Linked-structure traversal has a loop-carried dependency through the
+//! `next` pointer. §2.3.5's answer is loop fission: a *serialized*
+//! sub-loop gathers up to VL node pointers into a vector using
+//! `pnext`/`cpy`/`ctermeq`, then the payload work runs vectorized under
+//! the partition of filled lanes, finishing with a horizontal reduction.
+
+use super::codegen::Target;
+use super::ir::Compiled;
+use crate::arch::{Cond, Esize};
+use crate::asm::Asm;
+use crate::isa::{GatherAddr, Inst, IntOp, MemOff, PLogicOp, RedOp};
+
+/// A linked-list traversal computing an XOR reduction of node values
+/// (exactly Fig. 6a: `res ^= p->val`).
+#[derive(Clone, Debug)]
+pub struct ChaseKernel {
+    pub name: String,
+    /// Address of the first node (NULL-terminated list).
+    pub head: u64,
+    /// Byte offset of the `next` pointer within a node.
+    pub next_off: i64,
+    /// Byte offset of the 64-bit value within a node.
+    pub val_off: i64,
+    /// Where to store the final reduction.
+    pub result: u64,
+}
+
+/// Is the scalarized sub-loop profitable? With a single XOR as payload it
+/// is not (the paper itself: "the performance gained may not be
+/// sufficient to justify using vectorization for this loop") — which is
+/// also why Graph500 sees no benefit (§5). `force` overrides, as in the
+/// Fig. 6 demonstration.
+pub fn chase_profitable() -> bool {
+    false
+}
+
+pub fn compile_chase(k: &ChaseKernel, target: Target, force_vectorize: bool) -> Compiled {
+    let vectorize = matches!(target, Target::Sve) && (chase_profitable() || force_vectorize);
+    if vectorize {
+        compile_chase_sve(k)
+    } else {
+        let mut c = compile_chase_scalar(k);
+        if matches!(target, Target::Sve) {
+            c.why_not = Some(
+                "scalarized sub-loop not profitable: payload is a single XOR \
+                 (§2.3.5; the Graph500 situation)"
+                    .into(),
+            );
+        } else if matches!(target, Target::Neon) {
+            c.why_not =
+                Some("loop-carried dependency through pointer chase".into());
+        }
+        c
+    }
+}
+
+/// Fig. 6b's serial part, fused back into one loop (the scalar baseline).
+fn compile_chase_scalar(k: &ChaseKernel) -> Compiled {
+    let mut a = Asm::new();
+    a.push(Inst::MovImm { xd: 1, imm: k.head });
+    a.push(Inst::MovImm { xd: 16, imm: 0 }); // acc
+    a.label("loop");
+    a.push(Inst::Ldr { size: 8, signed: false, xt: 2, base: 1, off: MemOff::Imm(k.val_off) });
+    a.push(Inst::LogReg { op: PLogicOp::Eor, xd: 16, xn: 16, xm: 2 });
+    a.push(Inst::Ldr { size: 8, signed: false, xt: 1, base: 1, off: MemOff::Imm(k.next_off) });
+    a.push_branch(Inst::Cbnz { xn: 1, target: 0 }, "loop");
+    a.push(Inst::MovImm { xd: 3, imm: k.result });
+    a.push(Inst::Str { size: 8, xt: 16, base: 3, off: MemOff::Imm(0) });
+    a.push(Inst::Halt);
+    Compiled { program: a.finish(), vectorized: false, why_not: None }
+}
+
+/// Fig. 6c, transliterated: serialized pointer chase into Z1, vectorized
+/// XOR under the filled partition, horizontal `eorv`.
+fn compile_chase_sve(k: &ChaseKernel) -> Compiled {
+    let mut a = Asm::new();
+    a.push(Inst::MovImm { xd: 1, imm: k.head }); // p = &head
+    a.push(Inst::DupImm { zd: 0, esize: Esize::D, imm: 0 }); // res' = 0
+    a.push(Inst::Ptrue { pd: 0, esize: Esize::D, s: false }); // current partition
+    a.label("outer");
+    a.push(Inst::Pfalse { pd: 1 }); // first i
+    a.label("serial");
+    // serialized sub-loop under P0
+    a.push(Inst::Pnext { pdn: 1, pg: 0, esize: Esize::D }); // next i in P0
+    a.push(Inst::CpyX { zd: 1, pg: 1, xn: 1, esize: Esize::D }); // Z1[i] = p
+    a.push(Inst::Ldr { size: 8, signed: false, xt: 1, base: 1, off: MemOff::Imm(k.next_off) });
+    a.push(Inst::Cterm { xn: 1, xm: 31, ne: false }); // p == NULL?
+    a.push_branch(Inst::BCond { cond: Cond::TCONT, target: 0 }, "serial"); // !(term|last)
+    // P2[0..i] = T
+    a.push(Inst::Brk { pd: 2, pg: 0, pn: 1, before: false, s: false });
+    // vectorized main loop under P2
+    a.push(Inst::SveLdGather {
+        zt: 2,
+        pg: 2,
+        esize: Esize::D,
+        addr: GatherAddr::VecImm(1, k.val_off), // val' = p->val
+        ff: false,
+    });
+    a.push(Inst::SveIntBin { op: IntOp::Eor, zdn: 0, pg: 2, zm: 2, esize: Esize::D }); // res' ^= val'
+    a.push_branch(Inst::Cbnz { xn: 1, target: 0 }, "outer"); // while p != NULL
+    a.push(Inst::SveReduce { op: RedOp::EorV, vd: 0, pg: 0, zn: 0, esize: Esize::D }); // d0 = eor(res')
+    a.push(Inst::FmovDtoX { xd: 0, dn: 0 }); // return d0
+    a.push(Inst::MovImm { xd: 3, imm: k.result });
+    a.push(Inst::Str { size: 8, xt: 0, base: 3, off: MemOff::Imm(0) });
+    a.push(Inst::Halt);
+    Compiled { program: a.finish(), vectorized: true, why_not: None }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::Executor;
+    use crate::mem::Memory;
+    use crate::rng::Rng;
+
+    /// Build a shuffled linked list of `n` nodes; returns (kernel, xor).
+    pub fn build_list(mem: &mut Memory, n: usize, seed: u64) -> (ChaseKernel, u64) {
+        let mut rng = Rng::new(seed);
+        let nodes = mem.alloc(16 * n as u64, 16);
+        let mut order: Vec<u64> = (0..n as u64).collect();
+        rng.shuffle(&mut order);
+        let mut expected = 0u64;
+        for i in 0..n {
+            let addr = nodes + 16 * order[i];
+            let val = rng.next_u64() >> 1;
+            expected ^= val;
+            mem.write_u64(addr, val).unwrap();
+            let next = if i + 1 < n { nodes + 16 * order[i + 1] } else { 0 };
+            mem.write_u64(addr + 8, next).unwrap();
+        }
+        let result = mem.alloc(8, 8);
+        (
+            ChaseKernel {
+                name: "list".into(),
+                head: nodes + 16 * order[0],
+                next_off: 8,
+                val_off: 0,
+                result,
+            },
+            expected,
+        )
+    }
+
+    #[test]
+    fn scalar_chase_computes_xor() {
+        let mut mem = Memory::new();
+        let (k, want) = build_list(&mut mem, 100, 1);
+        let c = compile_chase(&k, Target::Scalar, false);
+        assert!(!c.vectorized);
+        let mut ex = Executor::new(128, mem);
+        ex.run(&c.program, 1_000_000).unwrap();
+        assert_eq!(ex.mem.read_u64(k.result).unwrap(), want);
+    }
+
+    #[test]
+    fn sve_chase_fig6_matches_scalar_at_all_vls() {
+        for vl in [128, 256, 512, 1024, 2048] {
+            for n in [1usize, 2, 3, 7, 64, 129] {
+                let mut mem = Memory::new();
+                let (k, want) = build_list(&mut mem, n, 42 + n as u64);
+                let c = compile_chase(&k, Target::Sve, true);
+                assert!(c.vectorized);
+                let mut ex = Executor::new(vl, mem);
+                ex.run(&c.program, 10_000_000).unwrap();
+                assert_eq!(
+                    ex.mem.read_u64(k.result).unwrap(),
+                    want,
+                    "vl={vl} n={n} (Fig. 6 semantics)"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn sve_chase_unforced_stays_scalar() {
+        let mut mem = Memory::new();
+        let (k, want) = build_list(&mut mem, 50, 7);
+        let c = compile_chase(&k, Target::Sve, false);
+        assert!(!c.vectorized);
+        assert!(c.why_not.as_deref().unwrap().contains("not profitable"));
+        let mut ex = Executor::new(256, mem);
+        ex.run(&c.program, 1_000_000).unwrap();
+        assert_eq!(ex.mem.read_u64(k.result).unwrap(), want);
+    }
+}

@@ -1,0 +1,904 @@
+//! Code generation: one IR [`Kernel`] -> a complete [`Program`] for the
+//! scalar, NEON or SVE target.
+//!
+//! Register conventions (shared by all targets):
+//!
+//! | regs        | use                                        |
+//! |-------------|--------------------------------------------|
+//! | x0–x7       | integer expression stack                   |
+//! | x8–x15      | array base registers (one per array)       |
+//! | x16–x18     | integer reduction accumulators             |
+//! | x19         | stride/scale scratch                       |
+//! | x20 / x21   | induction variable / trip count            |
+//! | x22–x23     | address scratch                            |
+//! | x25–x27     | outer-dimension counters                   |
+//! | d0–d7/z0–z7 | FP/vector expression stack                 |
+//! | z8–z14      | cached constants (splatted for vectors)    |
+//! | z15         | gather index scratch                       |
+//! | z16–z19     | vector reduction accumulators              |
+//! | z20–z23     | lane-index helper vectors (per stride)     |
+//! | d24–d27     | scalar FP reduction accumulators           |
+//! | z28–z31     | per-iteration locals                       |
+//! | p0          | governing predicate (whilelt)              |
+//! | p1–p3       | condition predicate stack                  |
+//! | p4 / p5     | first-fault partition / break partition    |
+//! | p6          | all-true (epilogue reductions)             |
+
+use super::ir::*;
+use crate::arch::{Cond, Esize};
+use crate::asm::Asm;
+use crate::isa::{FpOp, FpUnOp, Inst, MemOff, PLogicOp, RegOrImm};
+
+/// Base register of array `arr`.
+#[allow(non_snake_case)]
+pub(crate) fn BASE_REG(arr: usize) -> u8 {
+    BASE0 + arr as u8
+}
+
+/// Integer reduction accumulator register.
+#[allow(non_snake_case)]
+pub(crate) fn XACC_REG(r: u8) -> u8 {
+    XACC + r
+}
+
+pub const IV: u8 = 20;
+pub const TRIP: u8 = 21;
+pub const SCR: u8 = 22;
+pub const SCR2: u8 = 23;
+pub const SCALE: u8 = 19;
+const XSTACK: u8 = 0; // x0..x7
+const XACC: u8 = 16; // x16..x18
+const BASE0: u8 = 8; // x8..x15
+const OUTER0: u8 = 25; // x25..x27
+const CONST0: u8 = 8; // d8/z8..z14
+const VACC: u8 = 16; // z16..z19
+const LANE0: u8 = 20; // z20..z23
+const FACC: u8 = 24; // d24..d27
+const LOCAL0: u8 = 28; // z28..z31 / d28..d31
+
+#[derive(Clone, Copy, PartialEq)]
+pub enum Target {
+    Scalar,
+    Neon,
+    Sve,
+}
+
+/// Scalar value: FP register or integer register.
+#[derive(Clone, Copy, Debug, PartialEq)]
+enum SVal {
+    D(u8),
+    X(u8),
+}
+
+pub struct Cg<'k> {
+    pub(super) k: &'k Kernel,
+    pub asm: Asm,
+    label_n: usize,
+    /// cached f64/f32 constants: bit pattern -> register 8..=14
+    consts: Vec<u64>,
+    /// lane-helper scales -> z20+slot
+    scales: Vec<i64>,
+    target: Target,
+    /// local slot types
+    local_ty: Vec<Ty>,
+    /// when set, emit_*_iter uses this body instead of `k.body` (the SVE
+    /// break path re-emits only the stores under the partition)
+    body_override: Option<Vec<Stmt>>,
+}
+
+fn esize_of(ty: Ty) -> Esize {
+    match ty {
+        Ty::F64 | Ty::I64 => Esize::D,
+        Ty::F32 | Ty::I32 => Esize::S,
+        Ty::U8 => Esize::B,
+    }
+}
+
+fn log2(b: usize) -> u8 {
+    b.trailing_zeros() as u8
+}
+
+impl<'k> Cg<'k> {
+    pub fn new(k: &'k Kernel, target: Target) -> Self {
+        let mut cg = Cg {
+            k,
+            asm: Asm::new(),
+            label_n: 0,
+            consts: vec![],
+            scales: vec![],
+            target,
+            local_ty: vec![],
+            body_override: None,
+        };
+        cg.collect_consts_scales();
+        cg.local_ty = k.locals.iter().map(|e| cg.ty_of(e)).collect();
+        assert!(k.locals.len() <= 4, "max 4 locals");
+        assert!(k.arrays.len() <= 8, "max 8 arrays");
+        assert!(k.outer.len() <= 3, "max 3 outer dims");
+        assert!(k.reductions.len() <= 3, "max 3 reductions");
+        cg
+    }
+
+    pub(super) fn fresh(&mut self, p: &str) -> String {
+        self.label_n += 1;
+        format!("{p}_{}", self.label_n)
+    }
+
+    // ------------------------------------------------- analysis helpers
+
+    pub(super) fn ty_of(&self, e: &Expr) -> Ty {
+        match e {
+            Expr::ConstF(_) => {
+                if self.k.elem_ty == Ty::F32 {
+                    Ty::F32
+                } else {
+                    Ty::F64
+                }
+            }
+            Expr::ConstI(_) | Expr::Iv => Ty::I64,
+            Expr::IvAsF => {
+                if self.k.elem_ty == Ty::F32 {
+                    Ty::F32
+                } else {
+                    Ty::F64
+                }
+            }
+            Expr::Load { arr, .. } => self.k.arrays[*arr].ty,
+            Expr::Bin { a, .. } | Expr::Un { a, .. } => self.ty_of(a),
+            Expr::Cmp { a, .. } => self.ty_of(a),
+            Expr::Select { t, .. } => self.ty_of(t),
+            Expr::Opaque { .. } => Ty::F64,
+            Expr::Local(i) => self.local_ty.get(*i).copied().unwrap_or(self.k.elem_ty),
+        }
+    }
+
+    fn collect_consts_scales(&mut self) {
+        let dbl = self.k.elem_ty != Ty::F32;
+        let mut consts = vec![];
+        let mut scales: Vec<i64> = vec![];
+        let mut need_lane1 = false;
+        for e in self.k.all_exprs() {
+            e.visit(&mut |n| match n {
+                Expr::ConstF(v) => {
+                    let bits = if dbl { v.to_bits() } else { (*v as f32).to_bits() as u64 };
+                    if !consts.contains(&bits) && consts.len() < 7 {
+                        consts.push(bits);
+                    }
+                }
+                Expr::Load { idx: Index::Strided { scale, .. }, .. } => {
+                    if !scales.contains(scale) {
+                        scales.push(*scale);
+                    }
+                }
+                Expr::Iv | Expr::IvAsF => need_lane1 = true,
+                _ => {}
+            });
+        }
+        for s in &self.k.body {
+            if let Stmt::Store { idx: Index::Strided { scale, .. }, .. } = s {
+                if !scales.contains(scale) {
+                    scales.push(*scale);
+                }
+            }
+        }
+        if need_lane1 && !scales.contains(&1) {
+            scales.push(1);
+        }
+        assert!(scales.len() <= 4, "max 4 distinct strides");
+        self.consts = consts;
+        self.scales = scales;
+    }
+
+    pub(super) fn const_reg(&self, bits: u64) -> Option<u8> {
+        self.consts.iter().position(|&b| b == bits).map(|i| CONST0 + i as u8)
+    }
+
+    pub(super) fn scale_slot(&self, scale: i64) -> u8 {
+        LANE0 + self.scales.iter().position(|&s| s == scale).expect("scale collected") as u8
+    }
+
+    pub(super) fn dbl(&self) -> bool {
+        self.k.elem_ty != Ty::F32
+    }
+
+    pub(super) fn elem_esize(&self) -> Esize {
+        esize_of(self.k.elem_ty)
+    }
+
+    // ------------------------------------------------- common scaffolding
+
+    /// Prologue: array bases, constants, reduction init, lane helpers.
+    pub fn prologue(&mut self) {
+        let dbl = self.dbl();
+        for (i, a) in self.k.arrays.iter().enumerate() {
+            self.asm.push(Inst::MovImm { xd: BASE0 + i as u8, imm: a.base });
+        }
+        for (i, &bits) in self.consts.clone().iter().enumerate() {
+            let dd = CONST0 + i as u8;
+            self.asm.push(Inst::FmovImm { dbl, dd, bits });
+            match self.target {
+                Target::Neon => {
+                    self.asm.push(Inst::NeonDupLane0 { esize: self.elem_esize(), vd: dd, vn: dd });
+                }
+                Target::Sve => {
+                    self.asm.push(Inst::FdupImm { zd: dd, dbl, bits });
+                }
+                Target::Scalar => {}
+            }
+        }
+        if self.target == Target::Sve {
+            for (i, &scale) in self.scales.clone().iter().enumerate() {
+                self.asm.push(Inst::Index {
+                    zd: LANE0 + i as u8,
+                    esize: self.elem_esize(),
+                    base: RegOrImm::Imm(0),
+                    step: RegOrImm::Imm(scale),
+                });
+            }
+            self.asm.push(Inst::Ptrue { pd: 6, esize: self.elem_esize(), s: false });
+        }
+        // reduction accumulators
+        for (r, red) in self.k.reductions.iter().enumerate() {
+            let r = r as u8;
+            match red.kind {
+                RedKind::XorI => {
+                    self.asm.push(Inst::MovImm { xd: XACC + r, imm: 0 });
+                }
+                RedKind::SumF | RedKind::OrderedSumF => {
+                    self.asm.push(Inst::FmovImm { dbl, dd: FACC + r, bits: 0 });
+                }
+                RedKind::MaxF => {
+                    let bits = if dbl {
+                        f64::NEG_INFINITY.to_bits()
+                    } else {
+                        f32::NEG_INFINITY.to_bits() as u64
+                    };
+                    self.asm.push(Inst::FmovImm { dbl, dd: FACC + r, bits });
+                }
+            }
+            if self.target != Target::Scalar {
+                // vector accumulators
+                match red.kind {
+                    RedKind::XorI => {
+                        self.asm.push(Inst::DupImm { zd: VACC + r, esize: self.elem_esize(), imm: 0 });
+                    }
+                    RedKind::SumF => {
+                        self.asm.push(Inst::FdupImm { zd: VACC + r, dbl, bits: 0 });
+                    }
+                    RedKind::MaxF => {
+                        let bits = if dbl {
+                            f64::NEG_INFINITY.to_bits()
+                        } else {
+                            f32::NEG_INFINITY.to_bits() as u64
+                        };
+                        self.asm.push(Inst::FdupImm { zd: VACC + r, dbl, bits });
+                    }
+                    RedKind::OrderedSumF => {} // accumulates in d-reg via fadda
+                }
+            }
+        }
+    }
+
+    /// Open outer loops and (re)compute effective base registers.
+    pub fn open_outer(&mut self) -> Vec<String> {
+        let mut labels = vec![];
+        let outer = self.k.outer.clone();
+        for (d, _) in outer.iter().enumerate() {
+            let l = self.fresh("outer");
+            self.asm.push(Inst::MovImm { xd: OUTER0 + d as u8, imm: 0 });
+            self.asm.label(&l);
+            labels.push(l);
+        }
+        // effective bases: base + sum_d counter_d * stride * esz
+        for (i, a) in self.k.arrays.clone().iter().enumerate() {
+            let breg = BASE0 + i as u8;
+            let mut needed = false;
+            for dim in &outer {
+                if dim.strides.iter().any(|(arr, _)| *arr == i) {
+                    needed = true;
+                }
+            }
+            if !needed {
+                continue;
+            }
+            self.asm.push(Inst::MovImm { xd: breg, imm: a.base });
+            for (d, dim) in outer.iter().enumerate() {
+                for &(arr, stride) in &dim.strides {
+                    if arr == i {
+                        let bytes = stride * a.ty.bytes() as i64;
+                        self.asm.push(Inst::MovImm { xd: SCR2, imm: bytes as u64 });
+                        self.asm.push(Inst::Madd {
+                            xd: breg,
+                            xn: OUTER0 + d as u8,
+                            xm: SCR2,
+                            xa: breg,
+                        });
+                    }
+                }
+            }
+        }
+        labels
+    }
+
+    /// Close outer loops (reverse order).
+    pub fn close_outer(&mut self, labels: Vec<String>) {
+        let outer = self.k.outer.clone();
+        for (d, dim) in outer.iter().enumerate().rev() {
+            let c = OUTER0 + d as u8;
+            self.asm.push(Inst::AddImm { xd: c, xn: c, imm: 1 });
+            self.asm.push(Inst::CmpImm { xn: c, imm: dim.trip });
+            self.asm
+                .push_branch(Inst::BCond { cond: Cond::Lo, target: 0 }, &labels[d]);
+        }
+    }
+
+    /// Final stores of reduction results / count.
+    pub fn epilogue_outputs(&mut self) {
+        let dbl = self.dbl();
+        for (r, red) in self.k.reductions.clone().iter().enumerate() {
+            let addr = self.k.red_out[r];
+            let r = r as u8;
+            self.asm.push(Inst::MovImm { xd: SCR, imm: addr });
+            match red.kind {
+                RedKind::XorI => {
+                    self.asm.push(Inst::Str { size: 8, xt: XACC + r, base: SCR, off: MemOff::Imm(0) })
+                }
+                _ => self.asm.push(Inst::StrFp {
+                    dbl,
+                    vt: FACC + r,
+                    base: SCR,
+                    off: MemOff::Imm(0),
+                }),
+            };
+        }
+        if let Some(addr) = self.k.count_out {
+            self.asm.push(Inst::MovImm { xd: SCR, imm: addr });
+            self.asm.push(Inst::Str { size: 8, xt: IV, base: SCR, off: MemOff::Imm(0) });
+        }
+        self.asm.push(Inst::Halt);
+    }
+
+    /// Effective base register for (array, element offset): emits an add
+    /// into SCR2 when offset != 0 and returns the register to use.
+    pub(super) fn base_with_offset(&mut self, arr: usize, offset: i64) -> u8 {
+        let breg = BASE0 + arr as u8;
+        if offset == 0 {
+            breg
+        } else {
+            let bytes = offset * self.k.arrays[arr].ty.bytes() as i64;
+            self.asm.push(Inst::AddImm { xd: SCR2, xn: breg, imm: bytes });
+            SCR2
+        }
+    }
+
+    // =================================================================
+    // scalar target (also: NEON tail loops)
+    // =================================================================
+
+    /// Evaluate `e` for iteration `IV`, returning the value's register.
+    /// `ft`/`it` are the next free FP / int stack slots.
+    fn ev_scalar(&mut self, e: &Expr, ft: u8, it: u8) -> SVal {
+        assert!(ft < 8 && it < 8, "scalar expression stack overflow");
+        let dbl = self.dbl();
+        match e {
+            Expr::ConstF(v) => {
+                let bits = if dbl { v.to_bits() } else { (*v as f32).to_bits() as u64 };
+                if let Some(r) = self.const_reg(bits) {
+                    SVal::D(r)
+                } else {
+                    self.asm.push(Inst::FmovImm { dbl, dd: ft, bits });
+                    SVal::D(ft)
+                }
+            }
+            Expr::ConstI(v) => {
+                self.asm.push(Inst::MovImm { xd: XSTACK + it, imm: *v as u64 });
+                SVal::X(XSTACK + it)
+            }
+            Expr::Iv => {
+                self.asm.push(Inst::MovReg { xd: XSTACK + it, xn: IV });
+                SVal::X(XSTACK + it)
+            }
+            Expr::IvAsF => {
+                self.asm.push(Inst::Scvtf { dbl, dd: ft, xn: IV });
+                SVal::D(ft)
+            }
+            Expr::Local(i) => {
+                if self.local_ty[*i].is_fp() {
+                    SVal::D(LOCAL0 + *i as u8)
+                } else {
+                    SVal::X(XACC + 3 + *i as u8) // unreachable in practice
+                }
+            }
+            Expr::Load { arr, idx } => {
+                let ty = self.k.arrays[*arr].ty;
+                let esz = ty.bytes();
+                let (base, off) = self.scalar_addr(*arr, *idx);
+                match ty {
+                    Ty::F64 => {
+                        self.asm.push(Inst::LdrFp { dbl: true, vt: ft, base, off });
+                        SVal::D(ft)
+                    }
+                    Ty::F32 => {
+                        self.asm.push(Inst::LdrFp { dbl: false, vt: ft, base, off });
+                        SVal::D(ft)
+                    }
+                    _ => {
+                        self.asm.push(Inst::Ldr {
+                            size: esz as u8,
+                            signed: false,
+                            xt: XSTACK + it,
+                            base,
+                            off,
+                        });
+                        SVal::X(XSTACK + it)
+                    }
+                }
+            }
+            Expr::Bin { op, a, b } => {
+                let ra = self.ev_scalar_into(a, ft, it);
+                match ra {
+                    SVal::D(_) => {
+                        let rb = match self.ev_scalar(b, ft + 1, it) {
+                            SVal::D(r) => r,
+                            SVal::X(_) => panic!("mixed int/fp binop"),
+                        };
+                        let fpop = match op {
+                            BinOp::Add => FpOp::Add,
+                            BinOp::Sub => FpOp::Sub,
+                            BinOp::Mul => FpOp::Mul,
+                            BinOp::Div => FpOp::Div,
+                            BinOp::Max => FpOp::Max,
+                            BinOp::Min => FpOp::Min,
+                            _ => panic!("bitwise op on fp"),
+                        };
+                        self.asm.push(Inst::FpBin { op: fpop, dbl, dd: ft, dn: ft, dm: rb });
+                        SVal::D(ft)
+                    }
+                    SVal::X(_) => {
+                        let rb = match self.ev_scalar(b, ft, it + 1) {
+                            SVal::X(r) => r,
+                            SVal::D(_) => panic!("mixed int/fp binop"),
+                        };
+                        let xd = XSTACK + it;
+                        match op {
+                            BinOp::Add => self.asm.push(Inst::AddReg { xd, xn: xd, xm: rb, lsl: 0 }),
+                            BinOp::Sub => self.asm.push(Inst::SubReg { xd, xn: xd, xm: rb }),
+                            BinOp::Mul => self.asm.push(Inst::Madd { xd, xn: xd, xm: rb, xa: 31 }),
+                            BinOp::Xor => {
+                                self.asm.push(Inst::LogReg { op: PLogicOp::Eor, xd, xn: xd, xm: rb })
+                            }
+                            BinOp::And => {
+                                self.asm.push(Inst::LogReg { op: PLogicOp::And, xd, xn: xd, xm: rb })
+                            }
+                            BinOp::Or => {
+                                self.asm.push(Inst::LogReg { op: PLogicOp::Orr, xd, xn: xd, xm: rb })
+                            }
+                            _ => panic!("fp op on ints"),
+                        };
+                        SVal::X(xd)
+                    }
+                }
+            }
+            Expr::Un { op, a } => {
+                let ra = self.ev_scalar_into(a, ft, it);
+                let SVal::D(_) = ra else { panic!("unary on int") };
+                let fop = match op {
+                    UnOp::Neg => FpUnOp::Neg,
+                    UnOp::Abs => FpUnOp::Abs,
+                    UnOp::Sqrt => FpUnOp::Sqrt,
+                };
+                self.asm.push(Inst::FpUn { op: fop, dbl, dd: ft, dn: ft });
+                SVal::D(ft)
+            }
+            Expr::Select { c, t, f } => {
+                let rt = self.ev_scalar_into(t, ft, it);
+                match rt {
+                    SVal::D(_) => {
+                        let rf = match self.ev_scalar(f, ft + 1, it) {
+                            SVal::D(r) => r,
+                            _ => panic!("mixed select"),
+                        };
+                        let cond = self.ev_scalar_cond(c, ft + 2, it);
+                        // keep rt if cond; else copy rf over
+                        let skip = self.fresh("sel");
+                        self.asm.push_branch(Inst::BCond { cond, target: 0 }, &skip);
+                        self.asm.push(Inst::FmovReg { dbl, dd: ft, dn: rf });
+                        self.asm.label(&skip);
+                        SVal::D(ft)
+                    }
+                    SVal::X(xt) => {
+                        let rf = match self.ev_scalar(f, ft, it + 1) {
+                            SVal::X(r) => r,
+                            _ => panic!("mixed select"),
+                        };
+                        let cond = self.ev_scalar_cond(c, ft, it + 2);
+                        self.asm.push(Inst::Csel { xd: xt, xn: xt, xm: rf, cond });
+                        SVal::X(xt)
+                    }
+                }
+            }
+            Expr::Opaque { f, args } => {
+                let a0 = match self.ev_scalar_into(&args[0], ft, it) {
+                    SVal::D(r) => r,
+                    _ => panic!("opaque on int"),
+                };
+                let a1 = args.get(1).map(|a| match self.ev_scalar(a, ft + 1, it) {
+                    SVal::D(r) => r,
+                    _ => panic!("opaque on int"),
+                });
+                self.asm.push(Inst::OpaqueCall { f: *f, dd: ft, dn: a0, dm: a1 });
+                SVal::D(ft)
+            }
+            Expr::Cmp { .. } => panic!("bare Cmp outside Select/Break"),
+        }
+    }
+
+    /// Evaluate and force the result into stack slot `ft`/`it` so
+    /// destructive ops cannot clobber locals/constants.
+    fn ev_scalar_into(&mut self, e: &Expr, ft: u8, it: u8) -> SVal {
+        let v = self.ev_scalar(e, ft, it);
+        match v {
+            SVal::D(r) if r != ft => {
+                self.asm.push(Inst::FmovReg { dbl: self.dbl(), dd: ft, dn: r });
+                SVal::D(ft)
+            }
+            SVal::X(r) if r != XSTACK + it => {
+                self.asm.push(Inst::MovReg { xd: XSTACK + it, xn: r });
+                SVal::X(XSTACK + it)
+            }
+            v => v,
+        }
+    }
+
+    /// Evaluate a comparison to the NZCV flags, returning the branch
+    /// condition that means "true".
+    fn ev_scalar_cond(&mut self, e: &Expr, ft: u8, it: u8) -> Cond {
+        let Expr::Cmp { op, a, b } = e else { panic!("condition must be Cmp") };
+        let ra = self.ev_scalar(a, ft, it);
+        match ra {
+            SVal::D(da) => {
+                let db = match self.ev_scalar(b, ft + 1, it) {
+                    SVal::D(r) => r,
+                    _ => panic!("mixed cmp"),
+                };
+                self.asm.push(Inst::Fcmp { dbl: self.dbl(), dn: da, dm: db });
+                match op {
+                    CmpKind::Eq => Cond::Eq,
+                    CmpKind::Ne => Cond::Ne,
+                    CmpKind::Gt => Cond::Gt,
+                    CmpKind::Ge => Cond::Ge,
+                    CmpKind::Lt => Cond::Mi,
+                    CmpKind::Le => Cond::Ls,
+                }
+            }
+            SVal::X(xa) => {
+                let xb = match self.ev_scalar(b, ft, it + 1) {
+                    SVal::X(r) => r,
+                    _ => panic!("mixed cmp"),
+                };
+                self.asm.push(Inst::CmpReg { xn: xa, xm: xb });
+                match op {
+                    CmpKind::Eq => Cond::Eq,
+                    CmpKind::Ne => Cond::Ne,
+                    CmpKind::Gt => Cond::Gt,
+                    CmpKind::Ge => Cond::Ge,
+                    CmpKind::Lt => Cond::Lt,
+                    CmpKind::Le => Cond::Le,
+                }
+            }
+        }
+    }
+
+    /// Address operand for a scalar access at iteration IV.
+    fn scalar_addr(&mut self, arr: usize, idx: Index) -> (u8, MemOff) {
+        let esz = self.k.arrays[arr].ty.bytes();
+        match idx {
+            Index::Affine { offset } => {
+                let base = self.base_with_offset(arr, offset);
+                (base, MemOff::RegLsl(IV, log2(esz)))
+            }
+            Index::Strided { scale, offset } => {
+                self.asm.push(Inst::MovImm { xd: SCALE, imm: scale as u64 });
+                self.asm.push(Inst::Madd { xd: SCR, xn: IV, xm: SCALE, xa: 31 });
+                let base = self.base_with_offset(arr, offset);
+                (base, MemOff::RegLsl(SCR, log2(esz)))
+            }
+            Index::Indirect { idx_arr, offset } => {
+                let ity = self.k.arrays[idx_arr].ty;
+                self.asm.push(Inst::Ldr {
+                    size: ity.bytes() as u8,
+                    signed: false,
+                    xt: SCR,
+                    base: BASE0 + idx_arr as u8,
+                    off: MemOff::RegLsl(IV, log2(ity.bytes())),
+                });
+                let base = self.base_with_offset(arr, offset);
+                (base, MemOff::RegLsl(SCR, log2(esz)))
+            }
+        }
+    }
+
+    /// One scalar iteration: locals, body, reductions. `exit` is the
+    /// label Break jumps to.
+    pub fn emit_scalar_iter(&mut self, exit: &str) {
+        let dbl = self.dbl();
+        for (i, l) in self.k.locals.clone().iter().enumerate() {
+            let v = self.ev_scalar(l, 0, 0);
+            match v {
+                SVal::D(r) => self.asm.push(Inst::FmovReg { dbl, dd: LOCAL0 + i as u8, dn: r }),
+                SVal::X(_) => panic!("int locals unsupported"),
+            };
+        }
+        for s in self.body() {
+            match s {
+                Stmt::Store { arr, idx, value } => {
+                    let v = self.ev_scalar(&value, 0, 0);
+                    let ty = self.k.arrays[arr].ty;
+                    let (base, off) = self.scalar_addr(arr, idx);
+                    match v {
+                        SVal::D(r) => {
+                            self.asm.push(Inst::StrFp { dbl: ty == Ty::F64, vt: r, base, off })
+                        }
+                        SVal::X(r) => self.asm.push(Inst::Str {
+                            size: ty.bytes() as u8,
+                            xt: r,
+                            base,
+                            off,
+                        }),
+                    };
+                }
+                Stmt::Break { cond } => {
+                    let c = self.ev_scalar_cond(&cond, 0, 0);
+                    self.asm.push_branch(Inst::BCond { cond: c, target: 0 }, exit);
+                }
+            }
+        }
+        for (r, red) in self.k.reductions.clone().iter().enumerate() {
+            let r = r as u8;
+            let v = self.ev_scalar(&red.value, 0, 0);
+            match (red.kind, v) {
+                (RedKind::XorI, SVal::X(x)) => self.asm.push(Inst::LogReg {
+                    op: PLogicOp::Eor,
+                    xd: XACC + r,
+                    xn: XACC + r,
+                    xm: x,
+                }),
+                (RedKind::SumF | RedKind::OrderedSumF, SVal::D(d)) => self.asm.push(Inst::FpBin {
+                    op: FpOp::Add,
+                    dbl,
+                    dd: FACC + r,
+                    dn: FACC + r,
+                    dm: d,
+                }),
+                (RedKind::MaxF, SVal::D(d)) => self.asm.push(Inst::FpBin {
+                    op: FpOp::Max,
+                    dbl,
+                    dd: FACC + r,
+                    dn: FACC + r,
+                    dm: d,
+                }),
+                _ => panic!("reduction type mismatch"),
+            };
+        }
+    }
+
+    /// Install a body override (used by the SVE break-loop path to
+    /// re-emit only the stores); `None` restores the kernel body.
+    pub(super) fn set_body_override(&mut self, body: Option<Vec<Stmt>>) {
+        self.body_override = body;
+    }
+
+    /// Effective loop body (override or the kernel's).
+    pub(super) fn body(&self) -> Vec<Stmt> {
+        self.body_override.clone().unwrap_or_else(|| self.k.body.clone())
+    }
+
+    /// Complete scalar loop (used by the Scalar target and NEON tails).
+    /// Iterates IV from its current value to TRIP (or until Break).
+    pub fn emit_scalar_loop(&mut self) {
+        let lloop = self.fresh("sloop");
+        let latch = self.fresh("slatch");
+        let exit = self.fresh("sexit");
+        match self.k.trip {
+            Trip::Count(_) => {
+                self.asm.push_branch(Inst::B { target: 0 }, &latch);
+                self.asm.label(&lloop);
+                self.emit_scalar_iter(&exit);
+                self.asm.push(Inst::AddImm { xd: IV, xn: IV, imm: 1 });
+                self.asm.label(&latch);
+                self.asm.push(Inst::CmpReg { xn: IV, xm: TRIP });
+                self.asm.push_branch(Inst::BCond { cond: Cond::Lt, target: 0 }, &lloop);
+                self.asm.label(&exit);
+                self.asm.push(Inst::Nop);
+            }
+            Trip::DataDependent { .. } => {
+                self.asm.label(&lloop);
+                self.emit_scalar_iter(&exit);
+                self.asm.push(Inst::AddImm { xd: IV, xn: IV, imm: 1 });
+                self.asm.push_branch(Inst::B { target: 0 }, &lloop);
+                self.asm.label(&exit);
+                self.asm.push(Inst::Nop);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::asm::Program;
+    use crate::exec::Executor;
+    use crate::mem::Memory;
+
+    fn compile_scalar(k: &Kernel) -> Program {
+        let mut cg = Cg::new(k, Target::Scalar);
+        cg.prologue();
+        let outer = cg.open_outer();
+        cg.asm.push(Inst::MovImm { xd: IV, imm: 0 });
+        if let Trip::Count(n) = k.trip {
+            cg.asm.push(Inst::MovImm { xd: TRIP, imm: n });
+        }
+        cg.emit_scalar_loop();
+        cg.close_outer(outer);
+        cg.epilogue_outputs();
+        cg.asm.finish()
+    }
+
+    #[test]
+    fn scalar_daxpy_from_ir() {
+        let n = 37;
+        let mut mem = Memory::new();
+        let xb = mem.alloc(8 * n, 16);
+        let yb = mem.alloc(8 * n, 16);
+        for i in 0..n {
+            mem.write_f64(xb + 8 * i, i as f64).unwrap();
+            mem.write_f64(yb + 8 * i, 2.0 * i as f64).unwrap();
+        }
+        let mut k = Kernel::new("daxpy", Ty::F64, Trip::Count(n));
+        let x = k.array("x", Ty::F64, xb);
+        let y = k.array("y", Ty::F64, yb);
+        k.body.push(Stmt::Store {
+            arr: y,
+            idx: Index::Affine { offset: 0 },
+            value: Expr::bin(
+                BinOp::Add,
+                Expr::bin(BinOp::Mul, Expr::ConstF(3.0), Expr::load(x, Index::Affine { offset: 0 })),
+                Expr::load(y, Index::Affine { offset: 0 }),
+            ),
+        });
+        let p = compile_scalar(&k);
+        let mut ex = Executor::new(128, mem);
+        ex.run(&p, 1_000_000).unwrap();
+        for i in 0..n {
+            assert_eq!(
+                ex.mem.read_f64(yb + 8 * i).unwrap(),
+                3.0 * i as f64 + 2.0 * i as f64,
+                "y[{i}]"
+            );
+        }
+    }
+
+    #[test]
+    fn scalar_select_and_reduction() {
+        // sum of max(x[i], 1.0) over i<n, with a conditional assignment
+        let n = 16;
+        let mut mem = Memory::new();
+        let xb = mem.alloc(8 * n, 16);
+        let out = mem.alloc(8, 8);
+        for i in 0..n {
+            mem.write_f64(xb + 8 * i, i as f64 - 8.0).unwrap();
+        }
+        let mut k = Kernel::new("condsum", Ty::F64, Trip::Count(n));
+        let x = k.array("x", Ty::F64, xb);
+        k.red_out = vec![out];
+        let xi = Expr::load(x, Index::Affine { offset: 0 });
+        k.reductions.push(Reduction {
+            kind: RedKind::SumF,
+            value: Expr::select(
+                Expr::cmp(CmpKind::Gt, xi.clone(), Expr::ConstF(1.0)),
+                xi,
+                Expr::ConstF(1.0),
+            ),
+        });
+        let p = compile_scalar(&k);
+        let mut ex = Executor::new(128, mem);
+        ex.run(&p, 1_000_000).unwrap();
+        let want: f64 = (0..n).map(|i| (i as f64 - 8.0).max(1.0)).sum();
+        assert_eq!(ex.mem.read_f64(out).unwrap(), want);
+    }
+
+    #[test]
+    fn scalar_break_strlen() {
+        let mut mem = Memory::new();
+        let sb = mem.alloc(64, 16);
+        let out = mem.alloc(8, 8);
+        let msg = b"hello, sve";
+        for (i, &b) in msg.iter().enumerate() {
+            mem.write_byte(sb + i as u64, b).unwrap();
+        }
+        mem.write_byte(sb + msg.len() as u64, 0).unwrap();
+        let mut k = Kernel::new("strlen", Ty::U8, Trip::DataDependent { max: 1 << 20 });
+        let s = k.array("s", Ty::U8, sb);
+        k.count_out = Some(out);
+        k.body.push(Stmt::Break {
+            cond: Expr::cmp(CmpKind::Eq, Expr::load(s, Index::Affine { offset: 0 }), Expr::ConstI(0)),
+        });
+        let p = compile_scalar(&k);
+        let mut ex = Executor::new(128, mem);
+        ex.run(&p, 1_000_000).unwrap();
+        assert_eq!(ex.mem.read_u64(out).unwrap(), msg.len() as u64);
+    }
+
+    #[test]
+    fn scalar_outer_dims_advance_bases() {
+        // out[j] = sum_i a[j*4 + i] over a 3x4 matrix, via outer dim
+        let mut mem = Memory::new();
+        let ab = mem.alloc(8 * 12, 16);
+        let ob = mem.alloc(8 * 3, 16);
+        for i in 0..12 {
+            mem.write_f64(ab + 8 * i, i as f64).unwrap();
+        }
+        let mut k = Kernel::new("rowsum", Ty::F64, Trip::Count(4));
+        let a = k.array("a", Ty::F64, ab);
+        let o = k.array("o", Ty::F64, ob);
+        k.outer.push(OuterDim { trip: 3, strides: vec![(a, 4), (o, 1)] });
+        // o[0] += not expressible; instead store a[i] + a[i] to o... use
+        // store of per-row accumulation via strided store: simpler: store
+        // running element o[0_of_row] = a[3] (last element) — use store at
+        // Affine offset 0 with iv... we store a[i] into o[0] when i==3 is
+        // awkward; instead just store a[i]*2 into o row base + 0 each iter
+        // (last write wins = a[3]*2 per row).
+        k.body.push(Stmt::Store {
+            arr: o,
+            idx: Index::Affine { offset: 0 },
+            value: Expr::bin(
+                BinOp::Mul,
+                Expr::load(a, Index::Affine { offset: 0 }),
+                Expr::ConstF(2.0),
+            ),
+        });
+        // o is indexed by iv too: o[i] would run off; limit: o stride 1 per
+        // row, iv 0..4 writes o[row+i]: rows overlap — we only check row
+        // bases below.
+        let p = compile_scalar(&k);
+        let mut ex = Executor::new(128, mem);
+        ex.run(&p, 1_000_000).unwrap();
+        // row r base = ob + 8r; its last write is a[4r+?]... iv runs 0..4
+        // so o[r + i] = 2*a[4r + i]; final value at o[2] written by row 2
+        // iv 0 = 2*a[8] = 16
+        assert_eq!(ex.mem.read_f64(ob + 16).unwrap(), 16.0);
+    }
+
+    #[test]
+    fn scalar_strided_and_indirect() {
+        let mut mem = Memory::new();
+        let ab = mem.alloc(8 * 16, 16);
+        let ib = mem.alloc(8 * 4, 16);
+        let ob = mem.alloc(8 * 4, 16);
+        for i in 0..16 {
+            mem.write_f64(ab + 8 * i, 10.0 * i as f64).unwrap();
+        }
+        mem.write_u64_slice(ib, &[7, 0, 3, 2]);
+        let mut k = Kernel::new("gather", Ty::F64, Trip::Count(4));
+        let a = k.array("a", Ty::F64, ab);
+        let idx = k.array("idx", Ty::I64, ib);
+        let o = k.array("o", Ty::F64, ob);
+        // o[i] = a[2i] + a[idx[i]]
+        k.body.push(Stmt::Store {
+            arr: o,
+            idx: Index::Affine { offset: 0 },
+            value: Expr::bin(
+                BinOp::Add,
+                Expr::load(a, Index::Strided { scale: 2, offset: 0 }),
+                Expr::load(a, Index::Indirect { idx_arr: idx, offset: 0 }),
+            ),
+        });
+        let p = compile_scalar(&k);
+        let mut ex = Executor::new(128, mem);
+        ex.run(&p, 1_000_000).unwrap();
+        let want = [0.0 + 70.0, 20.0 + 0.0, 40.0 + 30.0, 60.0 + 20.0];
+        for i in 0..4 {
+            assert_eq!(ex.mem.read_f64(ob + 8 * i).unwrap(), want[i as usize], "o[{i}]");
+        }
+    }
+}

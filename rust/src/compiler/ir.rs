@@ -1,0 +1,339 @@
+//! Loop IR — the post-frontend form our auto-vectorizer consumes (§3).
+//!
+//! One [`Kernel`] describes an innermost loop (plus rectangular outer
+//! dimensions that only adjust array bases), exactly the unit an
+//! LLVM-style loop vectorizer operates on. Array bases are bound to
+//! simulated-memory addresses at construction, so code generation can
+//! fold them into immediates — the moral equivalent of the compiler
+//! knowing symbol addresses at link time.
+
+use crate::isa::OpaqueFn;
+
+/// Element type of an array or expression.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Ty {
+    F64,
+    F32,
+    I64,
+    I32,
+    U8,
+}
+
+impl Ty {
+    pub fn bytes(self) -> usize {
+        match self {
+            Ty::F64 | Ty::I64 => 8,
+            Ty::F32 | Ty::I32 => 4,
+            Ty::U8 => 1,
+        }
+    }
+
+    pub fn is_fp(self) -> bool {
+        matches!(self, Ty::F64 | Ty::F32)
+    }
+}
+
+/// An array bound to simulated memory.
+#[derive(Clone, Debug)]
+pub struct ArrayDecl {
+    pub name: String,
+    pub ty: Ty,
+    pub base: u64,
+}
+
+/// How an array is indexed by the induction variable `i`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Index {
+    /// `A[i + offset]` — contiguous (unit stride).
+    Affine { offset: i64 },
+    /// `A[i*scale + offset]`, scale > 1 — strided (SVE: gather).
+    Strided { scale: i64, offset: i64 },
+    /// `A[B[i] + offset]` — indirect through index array `idx` (gather).
+    Indirect { idx_arr: usize, offset: i64 },
+}
+
+/// Binary arithmetic ops (typed by context).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BinOp {
+    Add,
+    Sub,
+    Mul,
+    Div,
+    Max,
+    Min,
+    Xor,
+    And,
+    Or,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum UnOp {
+    Neg,
+    Abs,
+    Sqrt,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CmpKind {
+    Eq,
+    Ne,
+    Gt,
+    Ge,
+    Lt,
+    Le,
+}
+
+/// Expression tree (pure; loads are side-effect-free).
+#[derive(Clone, Debug)]
+pub enum Expr {
+    ConstF(f64),
+    ConstI(i64),
+    /// Load `arrays[arr]` at `idx`.
+    Load { arr: usize, idx: Index },
+    Bin { op: BinOp, a: Box<Expr>, b: Box<Expr> },
+    Un { op: UnOp, a: Box<Expr> },
+    /// Comparison producing a boolean (predicate / mask / branch).
+    Cmp { op: CmpKind, a: Box<Expr>, b: Box<Expr> },
+    /// `c ? t : f` — the paper's "conditional assignment" shape.
+    Select { c: Box<Expr>, t: Box<Expr>, f: Box<Expr> },
+    /// Opaque libm call — never vectorizable (§5, EP).
+    Opaque { f: OpaqueFn, args: Vec<Expr> },
+    /// The induction variable as a value (i64).
+    Iv,
+    /// Convert i64 -> fp.
+    IvAsF,
+    /// Reference to a per-iteration local binding (common subexpression,
+    /// see [`Kernel::locals`]).
+    Local(usize),
+}
+
+impl Expr {
+    pub fn bin(op: BinOp, a: Expr, b: Expr) -> Expr {
+        Expr::Bin { op, a: Box::new(a), b: Box::new(b) }
+    }
+
+    pub fn cmp(op: CmpKind, a: Expr, b: Expr) -> Expr {
+        Expr::Cmp { op, a: Box::new(a), b: Box::new(b) }
+    }
+
+    pub fn select(c: Expr, t: Expr, f: Expr) -> Expr {
+        Expr::Select { c: Box::new(c), t: Box::new(t), f: Box::new(f) }
+    }
+
+    pub fn load(arr: usize, idx: Index) -> Expr {
+        Expr::Load { arr, idx }
+    }
+
+    /// Walk the tree, calling `f` on every node.
+    pub fn visit(&self, f: &mut impl FnMut(&Expr)) {
+        f(self);
+        match self {
+            Expr::Bin { a, b, .. } => {
+                a.visit(f);
+                b.visit(f);
+            }
+            Expr::Un { a, .. } => a.visit(f),
+            Expr::Cmp { a, b, .. } => {
+                a.visit(f);
+                b.visit(f);
+            }
+            Expr::Select { c, t, f: fe } => {
+                c.visit(f);
+                t.visit(f);
+                fe.visit(f);
+            }
+            Expr::Opaque { args, .. } => {
+                for a in args {
+                    a.visit(f);
+                }
+            }
+            _ => {}
+        }
+    }
+}
+
+/// Reduction kinds (§2.4).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RedKind {
+    /// FP sum; tree order allowed (fast-math, faddv).
+    SumF,
+    /// FP sum with source order required (fadda) — §3.3.
+    OrderedSumF,
+    /// Integer XOR (eorv) — Fig. 6.
+    XorI,
+    /// FP max (fmaxv).
+    MaxF,
+}
+
+/// A reduction accumulator updated every iteration.
+#[derive(Clone, Debug)]
+pub struct Reduction {
+    pub kind: RedKind,
+    /// Value added/xored/maxed each iteration.
+    pub value: Expr,
+}
+
+/// One statement of the loop body.
+#[derive(Clone, Debug)]
+pub enum Stmt {
+    /// `A[idx] = value`.
+    Store { arr: usize, idx: Index, value: Expr },
+    /// Data-dependent loop exit *before* this iteration's remaining
+    /// side effects: `if (cond) break;` — §2.3.4.
+    Break { cond: Expr },
+}
+
+/// Loop trip count.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Trip {
+    /// Runtime-constant `n` (known only at entry — compilers must not
+    /// assume a multiple of VL).
+    Count(u64),
+    /// No static bound; termination only via `Stmt::Break` (strlen).
+    DataDependent { max: u64 },
+}
+
+/// A rectangular outer dimension: `trip` iterations, each advancing the
+/// effective base of array `arr` by `stride_elems` elements.
+#[derive(Clone, Debug)]
+pub struct OuterDim {
+    pub trip: u64,
+    pub strides: Vec<(usize, i64)>,
+}
+
+/// Compiler quirks — *documented* reproductions of the specific compiler
+/// defects §5 attributes to individual benchmarks. They model toolchain
+/// behaviour, not architecture.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Quirk {
+    None,
+    /// MILCmk: "the compiler decides to vectorize the outermost loop in
+    /// a loop nest generating unnecessary overheads (the Advanced SIMD
+    /// compiler vectorizes the inner loop)". For the SVE target the
+    /// vectorizer treats every contiguous access as strided (gathered),
+    /// as outer-loop vectorization of an inner-contiguous nest does.
+    MilcOuterLoop,
+}
+
+/// The vectorizer's input: one innermost loop.
+#[derive(Clone, Debug)]
+pub struct Kernel {
+    pub name: String,
+    pub arrays: Vec<ArrayDecl>,
+    pub outer: Vec<OuterDim>,
+    pub trip: Trip,
+    pub body: Vec<Stmt>,
+    pub reductions: Vec<Reduction>,
+    /// Per-iteration local bindings (max 4): evaluated in order at the
+    /// top of every iteration; `Expr::Local(i)` references binding `i`.
+    pub locals: Vec<Expr>,
+    /// Addresses to store each reduction's final value to.
+    pub red_out: Vec<u64>,
+    /// Address to store the final trip count to (strlen-style results).
+    pub count_out: Option<u64>,
+    /// Element type the loop is "aligned" to (largest data type used).
+    pub elem_ty: Ty,
+    pub quirk: Quirk,
+}
+
+impl Kernel {
+    pub fn new(name: &str, elem_ty: Ty, trip: Trip) -> Self {
+        Kernel {
+            name: name.to_string(),
+            arrays: vec![],
+            outer: vec![],
+            trip,
+            body: vec![],
+            reductions: vec![],
+            locals: vec![],
+            red_out: vec![],
+            count_out: None,
+            elem_ty,
+            quirk: Quirk::None,
+        }
+    }
+
+    pub fn array(&mut self, name: &str, ty: Ty, base: u64) -> usize {
+        self.arrays.push(ArrayDecl { name: name.to_string(), ty, base });
+        self.arrays.len() - 1
+    }
+
+    /// All expressions in the body + reductions (for analysis).
+    pub fn all_exprs(&self) -> Vec<&Expr> {
+        let mut out: Vec<&Expr> = vec![];
+        for s in &self.body {
+            match s {
+                Stmt::Store { value, .. } => out.push(value),
+                Stmt::Break { cond } => out.push(cond),
+            }
+        }
+        for r in &self.reductions {
+            out.push(&r.value);
+        }
+        for l in &self.locals {
+            out.push(l);
+        }
+        out
+    }
+
+    pub fn has_break(&self) -> bool {
+        self.body.iter().any(|s| matches!(s, Stmt::Break { .. }))
+    }
+
+    /// Total outer iterations (product of outer trips, min 1).
+    pub fn outer_iters(&self) -> u64 {
+        self.outer.iter().map(|d| d.trip).product::<u64>().max(1)
+    }
+}
+
+/// A compiled kernel.
+#[derive(Clone, Debug)]
+pub struct Compiled {
+    pub program: crate::asm::Program,
+    /// Did the vectorizer fire for this target?
+    pub vectorized: bool,
+    /// Human-readable reason when it did not.
+    pub why_not: Option<String>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kernel_builder_basics() {
+        let mut k = Kernel::new("t", Ty::F64, Trip::Count(10));
+        let a = k.array("a", Ty::F64, 0x1000);
+        let b = k.array("b", Ty::F64, 0x2000);
+        assert_eq!((a, b), (0, 1));
+        k.body.push(Stmt::Store {
+            arr: b,
+            idx: Index::Affine { offset: 0 },
+            value: Expr::load(a, Index::Affine { offset: 0 }),
+        });
+        assert_eq!(k.all_exprs().len(), 1);
+        assert!(!k.has_break());
+        assert_eq!(k.outer_iters(), 1);
+    }
+
+    #[test]
+    fn outer_iters_product() {
+        let mut k = Kernel::new("t", Ty::F32, Trip::Count(4));
+        k.outer.push(OuterDim { trip: 3, strides: vec![] });
+        k.outer.push(OuterDim { trip: 5, strides: vec![] });
+        assert_eq!(k.outer_iters(), 15);
+    }
+
+    #[test]
+    fn expr_visit_reaches_all_nodes() {
+        let e = Expr::select(
+            Expr::cmp(CmpKind::Gt, Expr::load(0, Index::Affine { offset: 0 }), Expr::ConstF(1.0)),
+            Expr::bin(BinOp::Mul, Expr::IvAsF, Expr::ConstF(2.0)),
+            Expr::ConstF(0.0),
+        );
+        let mut n = 0;
+        e.visit(&mut |_| n += 1);
+        // Select + Cmp + Load + ConstF + Bin + IvAsF + ConstF + ConstF
+        assert_eq!(n, 8);
+    }
+}

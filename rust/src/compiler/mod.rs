@@ -1,0 +1,151 @@
+//! The auto-vectorizing compiler (§3) — our stand-in for the paper's
+//! "experimental compiler, able to auto-vectorize code for SVE".
+//!
+//! * [`ir`] — the loop IR the vectorizer consumes.
+//! * [`vectorize`] — legality + profitability for the NEON and SVE
+//!   targets.
+//! * [`codegen`] / `neon_cg` / `sve_cg` — scalar, NEON and SVE code
+//!   generation over the shared register conventions.
+//! * [`chase`] — the Fig. 6 scalarized intra-vector sub-loop.
+
+pub mod chase;
+pub mod codegen;
+pub mod ir;
+mod neon_cg;
+mod sve_cg;
+pub mod vectorize;
+
+pub use codegen::{Cg, Target};
+pub use ir::*;
+
+/// Rewrite for [`Quirk::MilcOuterLoop`]: outer-loop vectorization turns
+/// inner-contiguous accesses into strided (gathered) ones.
+fn rewrite_milc(k: &Kernel) -> Kernel {
+    fn fix_idx(i: Index) -> Index {
+        match i {
+            Index::Affine { offset } => Index::Strided { scale: 1, offset },
+            other => other,
+        }
+    }
+    fn fix_expr(e: &mut Expr) {
+        match e {
+            Expr::Load { idx, .. } => *idx = fix_idx(*idx),
+            Expr::Bin { a, b, .. } => {
+                fix_expr(a);
+                fix_expr(b);
+            }
+            Expr::Un { a, .. } => fix_expr(a),
+            Expr::Cmp { a, b, .. } => {
+                fix_expr(a);
+                fix_expr(b);
+            }
+            Expr::Select { c, t, f } => {
+                fix_expr(c);
+                fix_expr(t);
+                fix_expr(f);
+            }
+            Expr::Opaque { args, .. } => args.iter_mut().for_each(fix_expr),
+            _ => {}
+        }
+    }
+    let mut k = k.clone();
+    for s in &mut k.body {
+        match s {
+            Stmt::Store { idx, value, .. } => {
+                *idx = fix_idx(*idx);
+                fix_expr(value);
+            }
+            Stmt::Break { cond } => fix_expr(cond),
+        }
+    }
+    for r in &mut k.reductions {
+        fix_expr(&mut r.value);
+    }
+    for l in &mut k.locals {
+        fix_expr(l);
+    }
+    k
+}
+
+/// Compile `k` for `target`. When the target's vectorizer rejects the
+/// loop, the scalar fallback is emitted (so an "SVE binary" of an
+/// unvectorizable loop is scalar code, exactly like the paper's left
+/// benchmark group).
+pub fn compile(k: &Kernel, target: Target) -> Compiled {
+    match target {
+        Target::Scalar => {
+            let mut cg = Cg::new(k, Target::Scalar);
+            cg.emit_scalar_program();
+            Compiled { program: cg.asm.finish(), vectorized: false, why_not: None }
+        }
+        Target::Neon => match vectorize::neon_legal(k) {
+            Ok(()) => {
+                let mut cg = Cg::new(k, Target::Neon);
+                cg.emit_neon_program();
+                Compiled { program: cg.asm.finish(), vectorized: true, why_not: None }
+            }
+            Err(why) => {
+                let mut cg = Cg::new(k, Target::Neon);
+                cg.emit_scalar_program();
+                Compiled { program: cg.asm.finish(), vectorized: false, why_not: Some(why) }
+            }
+        },
+        Target::Sve => match vectorize::sve_legal(k) {
+            Ok(()) => {
+                let quirked;
+                let k2: &Kernel = if k.quirk == Quirk::MilcOuterLoop {
+                    quirked = rewrite_milc(k);
+                    &quirked
+                } else {
+                    k
+                };
+                let mut cg = Cg::new(k2, Target::Sve);
+                cg.emit_sve_program();
+                Compiled { program: cg.asm.finish(), vectorized: true, why_not: None }
+            }
+            Err(why) => {
+                let mut cg = Cg::new(k, Target::Sve);
+                cg.emit_scalar_program();
+                Compiled { program: cg.asm.finish(), vectorized: false, why_not: Some(why) }
+            }
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_targets_produce_programs() {
+        let mut k = Kernel::new("t", Ty::F64, Trip::Count(8));
+        let x = k.array("x", Ty::F64, 0x10000);
+        let y = k.array("y", Ty::F64, 0x20000);
+        k.body.push(Stmt::Store {
+            arr: y,
+            idx: Index::Affine { offset: 0 },
+            value: Expr::load(x, Index::Affine { offset: 0 }),
+        });
+        for t in [Target::Scalar, Target::Neon, Target::Sve] {
+            let c = compile(&k, t);
+            assert!(!c.program.is_empty());
+        }
+    }
+
+    #[test]
+    fn sve_program_contains_whilelt_and_predicated_ops() {
+        let mut k = Kernel::new("t", Ty::F64, Trip::Count(8));
+        let x = k.array("x", Ty::F64, 0x10000);
+        let y = k.array("y", Ty::F64, 0x20000);
+        k.body.push(Stmt::Store {
+            arr: y,
+            idx: Index::Affine { offset: 0 },
+            value: Expr::load(x, Index::Affine { offset: 0 }),
+        });
+        let c = compile(&k, Target::Sve);
+        use crate::isa::Inst;
+        assert!(c.program.insts.iter().any(|i| matches!(i, Inst::While { .. })));
+        assert!(c.program.insts.iter().any(|i| matches!(i, Inst::SveLd1 { .. })));
+        assert!(c.program.insts.iter().any(|i| matches!(i, Inst::SveSt1 { .. })));
+    }
+}

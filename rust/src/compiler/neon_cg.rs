@@ -1,0 +1,331 @@
+//! NEON (Advanced SIMD) code generation: fixed 128-bit unpredicated
+//! vector main loop + scalar tail — the classic pre-SVE vectorization
+//! shape ("Unroll and Jam" family, §3.1).
+
+use super::codegen::{Cg, IV, SCR, TRIP};
+use super::ir::*;
+use crate::arch::Cond;
+use crate::isa::{FpOp, FpUnOp, Inst, IntOp, MemOff};
+
+const VACC: u8 = 16;
+const FACC: u8 = 24;
+const LOCAL0: u8 = 28;
+const NMAIN: u8 = 24; // x24 = floor(n / lanes) * lanes
+const HSCR: u8 = 15; // d15: horizontal-reduce scratch
+
+impl<'k> Cg<'k> {
+    fn neon_lanes(&self) -> u64 {
+        (16 / self.elem_esize().bytes()) as u64
+    }
+
+    /// Evaluate `e` as a 128-bit vector. `vt` = next free stack slot.
+    fn ev_neon(&mut self, e: &Expr, vt: u8) -> u8 {
+        assert!(vt < 8, "vector expression stack overflow");
+        let dbl = self.dbl();
+        let esize = self.elem_esize();
+        match e {
+            Expr::ConstF(v) => {
+                let bits = if dbl { v.to_bits() } else { (*v as f32).to_bits() as u64 };
+                if let Some(r) = self.const_reg(bits) {
+                    r
+                } else {
+                    self.asm.push(Inst::FmovImm { dbl, dd: vt, bits });
+                    self.asm.push(Inst::NeonDupLane0 { esize, vd: vt, vn: vt });
+                    vt
+                }
+            }
+            Expr::ConstI(v) => {
+                self.asm.push(Inst::MovImm { xd: SCR, imm: *v as u64 });
+                self.asm.push(Inst::NeonDupX { esize, vd: vt, xn: SCR });
+                vt
+            }
+            Expr::Local(i) => LOCAL0 + *i as u8,
+            Expr::Load { arr, idx } => {
+                let Index::Affine { offset } = idx else {
+                    panic!("non-contiguous access reached NEON codegen")
+                };
+                let base = self.base_with_offset(*arr, *offset);
+                self.asm.push(Inst::NeonLd1 {
+                    esize,
+                    vt,
+                    base,
+                    off: MemOff::RegLsl(IV, esize.bytes().trailing_zeros() as u8),
+                });
+                vt
+            }
+            Expr::Bin { op, a, b } => {
+                let ra = self.ev_neon(a, vt);
+                let rb = self.ev_neon(b, vt + 1);
+                let ty = self.ty_of(a);
+                if ty.is_fp() {
+                    let fpop = match op {
+                        BinOp::Add => FpOp::Add,
+                        BinOp::Sub => FpOp::Sub,
+                        BinOp::Mul => FpOp::Mul,
+                        BinOp::Div => FpOp::Div,
+                        BinOp::Max => FpOp::Max,
+                        BinOp::Min => FpOp::Min,
+                        _ => panic!("bitwise op on fp"),
+                    };
+                    self.asm.push(Inst::NeonFpBin { op: fpop, dbl, vd: vt, vn: ra, vm: rb });
+                } else {
+                    let iop = match op {
+                        BinOp::Add => IntOp::Add,
+                        BinOp::Sub => IntOp::Sub,
+                        BinOp::Mul => IntOp::Mul,
+                        BinOp::Xor => IntOp::Eor,
+                        BinOp::And => IntOp::And,
+                        BinOp::Or => IntOp::Orr,
+                        _ => panic!("fp op on ints"),
+                    };
+                    self.asm.push(Inst::NeonIntBin { op: iop, esize, vd: vt, vn: ra, vm: rb });
+                }
+                vt
+            }
+            Expr::Un { op, a } => {
+                let ra = self.ev_neon(a, vt);
+                let fop = match op {
+                    UnOp::Neg => FpUnOp::Neg,
+                    UnOp::Abs => FpUnOp::Abs,
+                    UnOp::Sqrt => FpUnOp::Sqrt,
+                };
+                self.asm.push(Inst::NeonFpUn { op: fop, dbl, vd: vt, vn: ra });
+                vt
+            }
+            Expr::Select { .. } | Expr::Cmp { .. } => {
+                panic!("conditional reached NEON codegen (legality bug)")
+            }
+            Expr::Opaque { .. } => panic!("opaque call reached NEON codegen"),
+            Expr::Iv | Expr::IvAsF => panic!("induction value reached NEON codegen"),
+        }
+    }
+
+    fn emit_neon_iter(&mut self) {
+        let dbl = self.dbl();
+        let esize = self.elem_esize();
+        for (i, l) in self.k.locals.clone().iter().enumerate() {
+            let r = self.ev_neon(l, 0);
+            self.asm.push(Inst::NeonIntBin {
+                op: IntOp::Orr,
+                esize: crate::arch::Esize::B,
+                vd: LOCAL0 + i as u8,
+                vn: r,
+                vm: r,
+            });
+        }
+        for s in self.body() {
+            match s {
+                Stmt::Store { arr, idx, value } => {
+                    let rv = self.ev_neon(&value, 0);
+                    let Index::Affine { offset } = idx else {
+                        panic!("non-contiguous store reached NEON codegen")
+                    };
+                    let base = self.base_with_offset(arr, offset);
+                    self.asm.push(Inst::NeonSt1 {
+                        esize,
+                        vt: rv,
+                        base,
+                        off: MemOff::RegLsl(IV, esize.bytes().trailing_zeros() as u8),
+                    });
+                }
+                Stmt::Break { .. } => panic!("break reached NEON codegen"),
+            }
+        }
+        for (r, red) in self.k.reductions.clone().iter().enumerate() {
+            let rv = self.ev_neon(&red.value, 0);
+            match red.kind {
+                RedKind::SumF => self.asm.push(Inst::NeonFpBin {
+                    op: FpOp::Add,
+                    dbl,
+                    vd: VACC + r as u8,
+                    vn: VACC + r as u8,
+                    vm: rv,
+                }),
+                _ => panic!("unsupported NEON reduction"),
+            };
+        }
+    }
+
+    /// Complete NEON program: vector main loop + scalar tail.
+    pub fn emit_neon_program(&mut self) {
+        let dbl = self.dbl();
+        let lanes = self.neon_lanes();
+        self.prologue();
+        let outer = self.open_outer();
+        self.asm.push(Inst::MovImm { xd: IV, imm: 0 });
+        let Trip::Count(n) = self.k.trip else { panic!("NEON needs counted trip") };
+        self.asm.push(Inst::MovImm { xd: TRIP, imm: n });
+        // (re)zero vector accumulators for this outer iteration
+        for (r, red) in self.k.reductions.clone().iter().enumerate() {
+            if matches!(red.kind, RedKind::SumF) {
+                self.asm.push(Inst::FdupImm { zd: VACC + r as u8, dbl, bits: 0 });
+            }
+        }
+        // n_main = n & !(lanes-1)
+        self.asm.push(Inst::AndImm { xd: NMAIN, xn: TRIP, imm: !(lanes - 1) });
+        let nloop = self.fresh("nloop");
+        let nlatch = self.fresh("nlatch");
+        self.asm.push_branch(Inst::B { target: 0 }, &nlatch);
+        self.asm.label(&nloop);
+        self.emit_neon_iter();
+        self.asm.push(Inst::AddImm { xd: IV, xn: IV, imm: lanes as i64 });
+        self.asm.label(&nlatch);
+        self.asm.push(Inst::CmpReg { xn: IV, xm: NMAIN });
+        self.asm.push_branch(Inst::BCond { cond: Cond::Lt, target: 0 }, &nloop);
+        // fold the vector accumulators into the scalar ones
+        for (r, red) in self.k.reductions.clone().iter().enumerate() {
+            if matches!(red.kind, RedKind::SumF) {
+                self.asm.push(Inst::NeonFaddv { dbl, dd: HSCR, vn: VACC + r as u8 });
+                self.asm.push(Inst::FpBin {
+                    op: FpOp::Add,
+                    dbl,
+                    dd: FACC + r as u8,
+                    dn: FACC + r as u8,
+                    dm: HSCR,
+                });
+            }
+        }
+        // scalar tail: IV already == n_main
+        self.emit_scalar_loop();
+        self.close_outer(outer);
+        self.epilogue_outputs();
+    }
+
+    /// Complete scalar program (the Scalar target, and the fallback when
+    /// a vectorizer rejects a loop).
+    pub fn emit_scalar_program(&mut self) {
+        self.prologue();
+        let outer = self.open_outer();
+        self.asm.push(Inst::MovImm { xd: IV, imm: 0 });
+        if let Trip::Count(n) = self.k.trip {
+            self.asm.push(Inst::MovImm { xd: TRIP, imm: n });
+        }
+        self.emit_scalar_loop();
+        self.close_outer(outer);
+        self.epilogue_outputs();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::{compile, Target};
+    use crate::exec::Executor;
+    use crate::mem::Memory;
+
+    #[test]
+    fn neon_daxpy_matches_reference_with_tail() {
+        // n = 43: 40 main-loop elements (f64 x2 lanes) + 3 tail
+        let n = 43u64;
+        let mut mem = Memory::new();
+        let xb = mem.alloc(8 * n, 16);
+        let yb = mem.alloc(8 * n, 16);
+        for i in 0..n {
+            mem.write_f64(xb + 8 * i, i as f64).unwrap();
+            mem.write_f64(yb + 8 * i, 0.5 * i as f64).unwrap();
+        }
+        let mut k = Kernel::new("daxpy", Ty::F64, Trip::Count(n));
+        let x = k.array("x", Ty::F64, xb);
+        let y = k.array("y", Ty::F64, yb);
+        k.body.push(Stmt::Store {
+            arr: y,
+            idx: Index::Affine { offset: 0 },
+            value: Expr::bin(
+                BinOp::Add,
+                Expr::bin(BinOp::Mul, Expr::ConstF(2.0), Expr::load(x, Index::Affine { offset: 0 })),
+                Expr::load(y, Index::Affine { offset: 0 }),
+            ),
+        });
+        let c = compile(&k, Target::Neon);
+        assert!(c.vectorized, "{:?}", c.why_not);
+        let mut ex = Executor::new(128, mem);
+        ex.run(&c.program, 10_000_000).unwrap();
+        for i in 0..n {
+            assert_eq!(ex.mem.read_f64(yb + 8 * i).unwrap(), 2.0 * i as f64 + 0.5 * i as f64);
+        }
+    }
+
+    #[test]
+    fn neon_sum_reduction_with_tail() {
+        let n = 21u64;
+        let mut mem = Memory::new();
+        let xb = mem.alloc(8 * n, 16);
+        let out = mem.alloc(8, 8);
+        for i in 0..n {
+            mem.write_f64(xb + 8 * i, (i + 1) as f64).unwrap();
+        }
+        let mut k = Kernel::new("sum", Ty::F64, Trip::Count(n));
+        let x = k.array("x", Ty::F64, xb);
+        k.red_out = vec![out];
+        k.reductions.push(Reduction {
+            kind: RedKind::SumF,
+            value: Expr::load(x, Index::Affine { offset: 0 }),
+        });
+        let c = compile(&k, Target::Neon);
+        assert!(c.vectorized);
+        let mut ex = Executor::new(128, mem);
+        ex.run(&c.program, 10_000_000).unwrap();
+        assert_eq!(ex.mem.read_f64(out).unwrap(), (n * (n + 1) / 2) as f64);
+    }
+
+    #[test]
+    fn neon_rejection_falls_back_to_scalar_and_stays_correct() {
+        // conditional assignment: NEON target must emit scalar code
+        let n = 10u64;
+        let mut mem = Memory::new();
+        let xb = mem.alloc(8 * n, 16);
+        let yb = mem.alloc(8 * n, 16);
+        for i in 0..n {
+            mem.write_f64(xb + 8 * i, i as f64 - 5.0).unwrap();
+        }
+        let mut k = Kernel::new("relu", Ty::F64, Trip::Count(n));
+        let x = k.array("x", Ty::F64, xb);
+        let y = k.array("y", Ty::F64, yb);
+        let xi = Expr::load(x, Index::Affine { offset: 0 });
+        k.body.push(Stmt::Store {
+            arr: y,
+            idx: Index::Affine { offset: 0 },
+            value: Expr::select(
+                Expr::cmp(CmpKind::Gt, xi.clone(), Expr::ConstF(0.0)),
+                xi,
+                Expr::ConstF(0.0),
+            ),
+        });
+        let c = compile(&k, Target::Neon);
+        assert!(!c.vectorized);
+        assert!(c.why_not.as_deref().unwrap().contains("conditional assignment"));
+        let mut ex = Executor::new(128, mem);
+        ex.run(&c.program, 10_000_000).unwrap();
+        for i in 0..n {
+            assert_eq!(ex.mem.read_f64(yb + 8 * i).unwrap(), (i as f64 - 5.0).max(0.0));
+        }
+    }
+
+    #[test]
+    fn neon_f32_uses_four_lanes() {
+        let n = 16u64;
+        let mut mem = Memory::new();
+        let xb = mem.alloc(4 * n, 16);
+        let yb = mem.alloc(4 * n, 16);
+        for i in 0..n {
+            mem.write_f32(xb + 4 * i, i as f32).unwrap();
+        }
+        let mut k = Kernel::new("scale32", Ty::F32, Trip::Count(n));
+        let x = k.array("x", Ty::F32, xb);
+        let y = k.array("y", Ty::F32, yb);
+        k.body.push(Stmt::Store {
+            arr: y,
+            idx: Index::Affine { offset: 0 },
+            value: Expr::bin(BinOp::Mul, Expr::load(x, Index::Affine { offset: 0 }), Expr::ConstF(3.0)),
+        });
+        let c = compile(&k, Target::Neon);
+        assert!(c.vectorized);
+        let mut ex = Executor::new(128, mem);
+        let stats = ex.run(&c.program, 10_000_000).unwrap();
+        for i in 0..n {
+            assert_eq!(ex.mem.read_f32(yb + 4 * i).unwrap(), 3.0 * i as f32);
+        }
+        // 4 lanes/iter: 4 main iterations, no tail
+        assert!(stats.neon_insts >= 8, "vector code must actually run");
+    }
+}

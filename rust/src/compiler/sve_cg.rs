@@ -1,0 +1,709 @@
+//! SVE code generation: predicated vector loops per §3 — while-based
+//! loop control, if-conversion to predication, gather/scatter,
+//! first-faulting speculative vectorization, vector+ordered reductions.
+
+use super::codegen::{Cg, IV, SCALE, SCR, TRIP};
+use super::ir::*;
+use crate::arch::Cond;
+use crate::isa::{
+    CmpOp, FpOp, FpUnOp, GatherAddr, Inst, IntOp, SveMemOff, ZmOrImm,
+};
+
+const GIDX: u8 = 15;
+const VACC: u8 = 16;
+const FACC: u8 = 24;
+const LOCAL0: u8 = 28;
+const PALL: u8 = 6;
+
+impl<'k> Cg<'k> {
+    /// Evaluate `e` as a vector under governing predicate `pred`.
+    /// `zt` = next free z stack slot (0..=7), `pt` = next free predicate
+    /// slot (1..=3). Returns the register holding the value.
+    fn ev_sve(&mut self, e: &Expr, zt: u8, pred: u8, pt: u8) -> u8 {
+        assert!(zt < 8, "vector expression stack overflow");
+        let dbl = self.dbl();
+        let esize = self.elem_esize();
+        match e {
+            Expr::ConstF(v) => {
+                let bits = if dbl { v.to_bits() } else { (*v as f32).to_bits() as u64 };
+                if let Some(r) = self.const_reg(bits) {
+                    r
+                } else {
+                    self.asm.push(Inst::FdupImm { zd: zt, dbl, bits });
+                    zt
+                }
+            }
+            Expr::ConstI(v) => {
+                self.asm.push(Inst::DupImm { zd: zt, esize, imm: *v });
+                zt
+            }
+            Expr::Iv => {
+                // lanes = iv + [0,1,2,...]
+                self.asm.push(Inst::DupX { zd: zt, esize, xn: IV });
+                let lane = self.scale_slot(1);
+                self.asm.push(Inst::SveIntBinU { op: IntOp::Add, zd: zt, zn: zt, zm: lane, esize });
+                zt
+            }
+            Expr::IvAsF => {
+                self.asm.push(Inst::DupX { zd: zt, esize, xn: IV });
+                let lane = self.scale_slot(1);
+                self.asm.push(Inst::SveIntBinU { op: IntOp::Add, zd: zt, zn: zt, zm: lane, esize });
+                self.asm.push(Inst::SveScvtf { zd: zt, pg: pred, zn: zt, dbl });
+                zt
+            }
+            Expr::Local(i) => LOCAL0 + *i as u8,
+            Expr::Load { arr, idx } => {
+                self.sve_load(*arr, *idx, zt, pred);
+                zt
+            }
+            Expr::Bin { op, a, b } => {
+                let ra = self.ev_sve_into(a, zt, pred, pt);
+                let rb = self.ev_sve(b, zt + 1, pred, pt);
+                let ty = self.ty_of(a);
+                if ty.is_fp() {
+                    let fpop = match op {
+                        BinOp::Add => FpOp::Add,
+                        BinOp::Sub => FpOp::Sub,
+                        BinOp::Mul => FpOp::Mul,
+                        BinOp::Div => FpOp::Div,
+                        BinOp::Max => FpOp::Max,
+                        BinOp::Min => FpOp::Min,
+                        _ => panic!("bitwise op on fp"),
+                    };
+                    self.asm.push(Inst::SveFpBin { op: fpop, zdn: ra, pg: pred, zm: rb, dbl });
+                } else {
+                    let iop = match op {
+                        BinOp::Add => IntOp::Add,
+                        BinOp::Sub => IntOp::Sub,
+                        BinOp::Mul => IntOp::Mul,
+                        BinOp::Xor => IntOp::Eor,
+                        BinOp::And => IntOp::And,
+                        BinOp::Or => IntOp::Orr,
+                        _ => panic!("fp op on ints"),
+                    };
+                    self.asm.push(Inst::SveIntBin { op: iop, zdn: ra, pg: pred, zm: rb, esize });
+                }
+                ra
+            }
+            Expr::Un { op, a } => {
+                let ra = self.ev_sve_into(a, zt, pred, pt);
+                let fop = match op {
+                    UnOp::Neg => FpUnOp::Neg,
+                    UnOp::Abs => FpUnOp::Abs,
+                    UnOp::Sqrt => FpUnOp::Sqrt,
+                };
+                self.asm.push(Inst::SveFpUn { op: fop, zd: ra, pg: pred, zn: ra, dbl });
+                ra
+            }
+            Expr::Select { c, t, f } => {
+                // if-conversion (§3.2): compute the condition predicate,
+                // then a vector select
+                let rt = self.ev_sve_into(t, zt, pred, pt);
+                let rf = self.ev_sve(f, zt + 1, pred, pt);
+                let pd = self.ev_sve_cond(c, zt + 2, pred, pt);
+                self.asm.push(Inst::Sel { zd: rt, pg: pd, zn: rt, zm: rf, esize });
+                rt
+            }
+            Expr::Opaque { .. } => panic!("opaque call reached SVE codegen (vectorizer bug)"),
+            Expr::Cmp { .. } => panic!("bare Cmp outside Select/Break"),
+        }
+    }
+
+    /// Force the result into stack slot `zt` (protects locals/constants
+    /// from destructive ops).
+    fn ev_sve_into(&mut self, e: &Expr, zt: u8, pred: u8, pt: u8) -> u8 {
+        let r = self.ev_sve(e, zt, pred, pt);
+        if r != zt {
+            // §4: movprfx is the architecture's answer to exactly this
+            self.asm.push(Inst::Movprfx { zd: zt, zn: r, pg: None });
+        }
+        zt
+    }
+
+    /// Evaluate a comparison into predicate register `pt`, governed by
+    /// `pred`. Returns the predicate register.
+    fn ev_sve_cond(&mut self, e: &Expr, zt: u8, pred: u8, pt: u8) -> u8 {
+        assert!((1..=3).contains(&pt), "predicate stack overflow");
+        let Expr::Cmp { op, a, b } = e else { panic!("condition must be Cmp") };
+        let cmpop = match op {
+            CmpKind::Eq => CmpOp::Eq,
+            CmpKind::Ne => CmpOp::Ne,
+            CmpKind::Gt => CmpOp::Gt,
+            CmpKind::Ge => CmpOp::Ge,
+            CmpKind::Lt => CmpOp::Lt,
+            CmpKind::Le => CmpOp::Le,
+        };
+        let ty = self.ty_of(a);
+        if ty.is_fp() {
+            let ra = self.ev_sve(a, zt, pred, pt);
+            let rhs = match &**b {
+                Expr::ConstF(v) if *v == 0.0 => None,
+                _ => Some(self.ev_sve(b, zt + 1, pred, pt)),
+            };
+            self.asm.push(Inst::SveFpCmp {
+                op: cmpop,
+                pd: pt,
+                pg: pred,
+                zn: ra,
+                rhs,
+                dbl: self.dbl(),
+            });
+        } else {
+            let ra = self.ev_sve(a, zt, pred, pt);
+            let rhs = match &**b {
+                Expr::ConstI(v) if (-16..16).contains(v) => ZmOrImm::Imm(*v),
+                _ => ZmOrImm::Z(self.ev_sve(b, zt + 1, pred, pt)),
+            };
+            self.asm.push(Inst::SveIntCmp {
+                op: cmpop,
+                unsigned: false,
+                pd: pt,
+                pg: pred,
+                zn: ra,
+                rhs,
+                esize: self.elem_esize(),
+            });
+        }
+        pt
+    }
+
+    /// Predicated vector load of `arr[idx]` into `zt`.
+    fn sve_load(&mut self, arr: usize, idx: Index, zt: u8, pred: u8) {
+        let ty = self.k.arrays[arr].ty;
+        let esize = self.elem_esize();
+        debug_assert_eq!(ty.bytes(), esize.bytes(), "uniform lane width");
+        match idx {
+            Index::Affine { offset } => {
+                let base = self.base_with_offset(arr, offset);
+                self.asm.push(Inst::SveLd1 {
+                    zt,
+                    pg: pred,
+                    esize,
+                    base,
+                    off: SveMemOff::RegScaled(IV),
+                    ff: false,
+                });
+            }
+            Index::Strided { scale, offset } => {
+                self.sve_strided_index(scale);
+                let base = self.base_with_offset(arr, offset);
+                self.asm.push(Inst::SveLdGather {
+                    zt,
+                    pg: pred,
+                    esize,
+                    addr: GatherAddr::BaseVec { xn: base, zm: GIDX, scaled: true },
+                    ff: false,
+                });
+            }
+            Index::Indirect { idx_arr, offset } => {
+                let ity = self.k.arrays[idx_arr].ty;
+                debug_assert_eq!(ity.bytes(), esize.bytes(), "index lane width");
+                self.asm.push(Inst::SveLd1 {
+                    zt: GIDX,
+                    pg: pred,
+                    esize,
+                    base: super::codegen::BASE_REG(idx_arr),
+                    off: SveMemOff::RegScaled(IV),
+                    ff: false,
+                });
+                let base = self.base_with_offset(arr, offset);
+                self.asm.push(Inst::SveLdGather {
+                    zt,
+                    pg: pred,
+                    esize,
+                    addr: GatherAddr::BaseVec { xn: base, zm: GIDX, scaled: true },
+                    ff: false,
+                });
+            }
+        }
+    }
+
+    /// Compute the gather index vector for a strided access into GIDX:
+    /// lanes = iv*scale + [0, scale, 2*scale, ...].
+    fn sve_strided_index(&mut self, scale: i64) {
+        let esize = self.elem_esize();
+        self.asm.push(Inst::MovImm { xd: SCALE, imm: scale as u64 });
+        self.asm.push(Inst::Madd { xd: SCR, xn: IV, xm: SCALE, xa: 31 });
+        self.asm.push(Inst::DupX { zd: GIDX, esize, xn: SCR });
+        let lane = self.scale_slot(scale);
+        self.asm.push(Inst::SveIntBinU { op: IntOp::Add, zd: GIDX, zn: GIDX, zm: lane, esize });
+    }
+
+    /// One predicated vector iteration: locals, stores, reductions.
+    fn emit_sve_iter(&mut self, pred: u8) {
+        let dbl = self.dbl();
+        let esize = self.elem_esize();
+        for (i, l) in self.k.locals.clone().iter().enumerate() {
+            let r = self.ev_sve(l, 0, pred, 1);
+            if r != LOCAL0 + i as u8 {
+                self.asm.push(Inst::Movprfx { zd: LOCAL0 + i as u8, zn: r, pg: None });
+            }
+        }
+        for s in self.body() {
+            match s {
+                Stmt::Store { arr, idx, value } => {
+                    let zv = self.ev_sve(&value, 0, pred, 1);
+                    match idx {
+                        Index::Affine { offset } => {
+                            let base = self.base_with_offset(arr, offset);
+                            self.asm.push(Inst::SveSt1 {
+                                zt: zv,
+                                pg: pred,
+                                esize,
+                                base,
+                                off: SveMemOff::RegScaled(IV),
+                            });
+                        }
+                        Index::Strided { scale, offset } => {
+                            self.sve_strided_index(scale);
+                            let base = self.base_with_offset(arr, offset);
+                            self.asm.push(Inst::SveStScatter {
+                                zt: zv,
+                                pg: pred,
+                                esize,
+                                addr: GatherAddr::BaseVec { xn: base, zm: GIDX, scaled: true },
+                            });
+                        }
+                        Index::Indirect { idx_arr, offset } => {
+                            self.asm.push(Inst::SveLd1 {
+                                zt: GIDX,
+                                pg: pred,
+                                esize,
+                                base: super::codegen::BASE_REG(idx_arr),
+                                off: SveMemOff::RegScaled(IV),
+                                ff: false,
+                            });
+                            let base = self.base_with_offset(arr, offset);
+                            self.asm.push(Inst::SveStScatter {
+                                zt: zv,
+                                pg: pred,
+                                esize,
+                                addr: GatherAddr::BaseVec { xn: base, zm: GIDX, scaled: true },
+                            });
+                        }
+                    }
+                }
+                Stmt::Break { .. } => unreachable!("breaks handled by emit_sve_break_loop"),
+            }
+        }
+        for (r, red) in self.k.reductions.clone().iter().enumerate() {
+            let r = r as u8;
+            let zv = self.ev_sve(&red.value, 0, pred, 1);
+            match red.kind {
+                RedKind::SumF => self.asm.push(Inst::SveFpBin {
+                    op: FpOp::Add,
+                    zdn: VACC + r,
+                    pg: pred,
+                    zm: zv,
+                    dbl,
+                }),
+                RedKind::MaxF => self.asm.push(Inst::SveFpBin {
+                    op: FpOp::Max,
+                    zdn: VACC + r,
+                    pg: pred,
+                    zm: zv,
+                    dbl,
+                }),
+                RedKind::XorI => self.asm.push(Inst::SveIntBin {
+                    op: IntOp::Eor,
+                    zdn: VACC + r,
+                    pg: pred,
+                    zm: zv,
+                    esize,
+                }),
+                // strictly-ordered accumulate, in element order (§3.3)
+                RedKind::OrderedSumF => {
+                    self.asm.push(Inst::SveFadda { vdn: FACC + r, pg: pred, zm: zv, dbl })
+                }
+            };
+        }
+    }
+
+    /// Horizontal reduction epilogue (after all loops).
+    fn emit_sve_red_epilogue(&mut self) {
+        let esize = self.elem_esize();
+        for (r, red) in self.k.reductions.clone().iter().enumerate() {
+            let r = r as u8;
+            match red.kind {
+                RedKind::SumF => {
+                    self.asm.push(Inst::SveReduce {
+                        op: crate::isa::RedOp::FAddV,
+                        vd: FACC + r,
+                        pg: PALL,
+                        zn: VACC + r,
+                        esize,
+                    });
+                }
+                RedKind::MaxF => {
+                    self.asm.push(Inst::SveReduce {
+                        op: crate::isa::RedOp::FMaxV,
+                        vd: FACC + r,
+                        pg: PALL,
+                        zn: VACC + r,
+                        esize,
+                    });
+                }
+                RedKind::XorI => {
+                    self.asm.push(Inst::SveReduce {
+                        op: crate::isa::RedOp::EorV,
+                        vd: FACC + r,
+                        pg: PALL,
+                        zn: VACC + r,
+                        esize,
+                    });
+                    // move to the integer accumulator for the final store
+                    self.asm.push(Inst::FmovDtoX { xd: super::codegen::XACC_REG(r), dn: FACC + r });
+                }
+                RedKind::OrderedSumF => {} // already scalar in FACC+r
+            }
+        }
+    }
+
+    /// The whilelt-governed counted loop — the Fig. 2c shape.
+    pub fn emit_sve_counted_loop(&mut self) {
+        let esize = self.elem_esize();
+        let lloop = self.fresh("vloop");
+        self.asm.push(Inst::While { pd: 0, esize, xn: IV, xm: TRIP, unsigned: false });
+        self.asm.label(&lloop);
+        self.emit_sve_iter(0);
+        self.asm.push(Inst::IncDec { xdn: IV, esize, dec: false });
+        self.asm.push(Inst::While { pd: 0, esize, xn: IV, xm: TRIP, unsigned: false });
+        self.asm.push_branch(Inst::BCond { cond: Cond::FIRST, target: 0 }, &lloop);
+    }
+
+    /// The speculative (first-faulting) loop for data-dependent exits —
+    /// the Fig. 5 shape (§2.3.3/§2.3.4/§3.4).
+    pub fn emit_sve_break_loop(&mut self) {
+        let esize = self.elem_esize();
+        let lloop = self.fresh("ffloop");
+        // collect the load streams to probe speculatively
+        let mut probes: Vec<(usize, i64)> = vec![];
+        for e in self.k.all_exprs() {
+            e.visit(&mut |n| {
+                if let Expr::Load { arr, idx: Index::Affine { offset } } = n {
+                    if !probes.contains(&(*arr, *offset)) {
+                        probes.push((*arr, *offset));
+                    }
+                }
+            });
+        }
+        self.asm.push(Inst::Ptrue { pd: 0, esize, s: false });
+        self.asm.label(&lloop);
+        self.asm.push(Inst::Setffr);
+        for (arr, offset) in probes.clone() {
+            let base = self.base_with_offset(arr, offset);
+            self.asm.push(Inst::SveLd1 {
+                zt: 7,
+                pg: 0,
+                esize,
+                base,
+                off: SveMemOff::RegScaled(IV),
+                ff: true,
+            });
+        }
+        // p4 = partition of safely-loaded lanes
+        self.asm.push(Inst::Rdffr { pd: 4, pg: Some(0), s: false });
+        // breaks narrow the partition: p5 = before-break lanes
+        let mut cur: u8 = 4;
+        for s in self.k.body.clone() {
+            match s {
+                Stmt::Break { cond } => {
+                    let pd = self.ev_sve_cond(&cond, 0, cur, 1);
+                    self.asm.push(Inst::Brk { pd: 5, pg: cur, pn: pd, before: true, s: true });
+                    cur = 5;
+                }
+                Stmt::Store { .. } => {}
+            }
+        }
+        // body side effects + reductions under the final partition
+        let body: Vec<Stmt> = self
+            .k
+            .body
+            .iter()
+            .filter(|s| matches!(s, Stmt::Store { .. }))
+            .cloned()
+            .collect();
+        if !body.is_empty() || !self.k.reductions.is_empty() {
+            // temporarily narrow to the stores-only body for emit
+            self.set_body_override(Some(body));
+            self.emit_sve_iter(cur);
+            self.set_body_override(None);
+        }
+        self.asm.push(Inst::IncpX { xdn: IV, pm: cur, esize });
+        // regenerate the continue/exit flags (body compares clobber NZCV)
+        self.asm.push(Inst::Ptest { pg: 4, pn: cur });
+        self.asm.push_branch(Inst::BCond { cond: Cond::LAST, target: 0 }, &lloop);
+    }
+
+    /// The complete SVE program for a vectorizable kernel.
+    pub fn emit_sve_program(&mut self) {
+        self.prologue();
+        let outer = self.open_outer();
+        self.asm.push(Inst::MovImm { xd: IV, imm: 0 });
+        match self.k.trip {
+            Trip::Count(n) => {
+                self.asm.push(Inst::MovImm { xd: TRIP, imm: n });
+                self.emit_sve_counted_loop();
+            }
+            Trip::DataDependent { .. } => self.emit_sve_break_loop(),
+        }
+        self.close_outer(outer);
+        self.emit_sve_red_epilogue();
+        self.epilogue_outputs();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::compile;
+    use crate::compiler::Target;
+    use crate::exec::Executor;
+    use crate::mem::Memory;
+
+    fn daxpy_kernel(mem: &mut Memory, n: u64) -> (Kernel, u64, u64) {
+        let xb = mem.alloc(8 * n.max(1), 16);
+        let yb = mem.alloc(8 * n.max(1), 16);
+        for i in 0..n {
+            mem.write_f64(xb + 8 * i, i as f64).unwrap();
+            mem.write_f64(yb + 8 * i, 100.0 + i as f64).unwrap();
+        }
+        let mut k = Kernel::new("daxpy", Ty::F64, Trip::Count(n));
+        let x = k.array("x", Ty::F64, xb);
+        let y = k.array("y", Ty::F64, yb);
+        k.body.push(Stmt::Store {
+            arr: y,
+            idx: Index::Affine { offset: 0 },
+            value: Expr::bin(
+                BinOp::Add,
+                Expr::bin(BinOp::Mul, Expr::ConstF(3.0), Expr::load(x, Index::Affine { offset: 0 })),
+                Expr::load(y, Index::Affine { offset: 0 }),
+            ),
+        });
+        (k, xb, yb)
+    }
+
+    #[test]
+    fn sve_daxpy_matches_scalar_at_all_vls() {
+        for vl in [128, 256, 512, 2048] {
+            let mut mem = Memory::new();
+            let (k, _, yb) = daxpy_kernel(&mut mem, 43);
+            let c = compile(&k, Target::Sve);
+            assert!(c.vectorized);
+            let mut ex = Executor::new(vl, mem);
+            ex.run(&c.program, 10_000_000).unwrap();
+            for i in 0..43 {
+                assert_eq!(
+                    ex.mem.read_f64(yb + 8 * i).unwrap(),
+                    3.0 * i as f64 + 100.0 + i as f64,
+                    "vl={vl} y[{i}]"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn sve_conditional_assignment_if_converts() {
+        // y[i] = x[i] > 0 ? x[i] : 0  (HACC-style)
+        let n = 37u64;
+        let mut mem = Memory::new();
+        let xb = mem.alloc(8 * n, 16);
+        let yb = mem.alloc(8 * n, 16);
+        for i in 0..n {
+            mem.write_f64(xb + 8 * i, i as f64 - 18.0).unwrap();
+        }
+        let mut k = Kernel::new("relu", Ty::F64, Trip::Count(n));
+        let x = k.array("x", Ty::F64, xb);
+        let y = k.array("y", Ty::F64, yb);
+        let xi = Expr::load(x, Index::Affine { offset: 0 });
+        k.body.push(Stmt::Store {
+            arr: y,
+            idx: Index::Affine { offset: 0 },
+            value: Expr::select(
+                Expr::cmp(CmpKind::Gt, xi.clone(), Expr::ConstF(0.0)),
+                xi,
+                Expr::ConstF(0.0),
+            ),
+        });
+        let c = compile(&k, Target::Sve);
+        assert!(c.vectorized, "{:?}", c.why_not);
+        let mut ex = Executor::new(256, mem);
+        ex.run(&c.program, 10_000_000).unwrap();
+        for i in 0..n {
+            let want = (i as f64 - 18.0).max(0.0);
+            assert_eq!(ex.mem.read_f64(yb + 8 * i).unwrap(), want, "y[{i}]");
+        }
+    }
+
+    #[test]
+    fn sve_strided_gather_loop() {
+        // o[i] = a[3i]  (AoS x-coordinate walk)
+        let n = 20u64;
+        let mut mem = Memory::new();
+        let ab = mem.alloc(8 * 3 * n, 16);
+        let ob = mem.alloc(8 * n, 16);
+        for i in 0..3 * n {
+            mem.write_f64(ab + 8 * i, i as f64).unwrap();
+        }
+        let mut k = Kernel::new("aos", Ty::F64, Trip::Count(n));
+        let a = k.array("a", Ty::F64, ab);
+        let o = k.array("o", Ty::F64, ob);
+        k.body.push(Stmt::Store {
+            arr: o,
+            idx: Index::Affine { offset: 0 },
+            value: Expr::load(a, Index::Strided { scale: 3, offset: 0 }),
+        });
+        // force SVE codegen even though the cost model would reject it
+        let mut cg = Cg::new(&k, Target::Sve);
+        cg.emit_sve_program();
+        let p = cg.asm.finish();
+        let mut ex = Executor::new(512, mem);
+        ex.run(&p, 10_000_000).unwrap();
+        for i in 0..n {
+            assert_eq!(ex.mem.read_f64(ob + 8 * i).unwrap(), (3 * i) as f64, "o[{i}]");
+        }
+    }
+
+    #[test]
+    fn sve_indirect_gather_loop() {
+        // red += a[idx[i]]
+        let n = 16u64;
+        let mut mem = Memory::new();
+        let ab = mem.alloc(8 * 64, 16);
+        let ib = mem.alloc(8 * n, 16);
+        let out = mem.alloc(8, 8);
+        for i in 0..64 {
+            mem.write_f64(ab + 8 * i, i as f64).unwrap();
+        }
+        let idxs: Vec<u64> = (0..n).map(|i| (i * 7) % 64).collect();
+        mem.write_u64_slice(ib, &idxs);
+        let vb = mem.alloc(8 * n, 16);
+        for i in 0..n {
+            mem.write_f64(vb + 8 * i, (i + 1) as f64).unwrap();
+        }
+        let mut k = Kernel::new("spmv-ish", Ty::F64, Trip::Count(n));
+        let a = k.array("a", Ty::F64, ab);
+        let idx = k.array("idx", Ty::I64, ib);
+        let vals = k.array("vals", Ty::F64, vb);
+        k.red_out = vec![out];
+        // red += vals[i] * a[idx[i]] — the SpMV inner product shape
+        k.reductions.push(Reduction {
+            kind: RedKind::SumF,
+            value: Expr::bin(
+                BinOp::Mul,
+                Expr::load(vals, Index::Affine { offset: 0 }),
+                Expr::load(a, Index::Indirect { idx_arr: idx, offset: 0 }),
+            ),
+        });
+        let c = compile(&k, Target::Sve);
+        assert!(c.vectorized, "{:?}", c.why_not);
+        let mut ex = Executor::new(256, mem);
+        ex.run(&c.program, 10_000_000).unwrap();
+        let want: f64 = idxs.iter().enumerate().map(|(i, &x)| (i + 1) as f64 * x as f64).sum();
+        assert_eq!(ex.mem.read_f64(out).unwrap(), want);
+    }
+
+    #[test]
+    fn sve_ordered_reduction_bitwise_matches_scalar() {
+        let n = 100u64;
+        let mut mem = Memory::new();
+        let xb = mem.alloc(8 * n, 16);
+        let out = mem.alloc(8, 8);
+        let mut rng = crate::rng::Rng::new(9);
+        let vals: Vec<f64> = (0..n).map(|_| rng.f64_range(-1e9, 1e9)).collect();
+        mem.write_f64_slice(xb, &vals);
+        let mut k = Kernel::new("osum", Ty::F64, Trip::Count(n));
+        let x = k.array("x", Ty::F64, xb);
+        k.red_out = vec![out];
+        k.reductions.push(Reduction {
+            kind: RedKind::OrderedSumF,
+            value: Expr::load(x, Index::Affine { offset: 0 }),
+        });
+        let c = compile(&k, Target::Sve);
+        assert!(c.vectorized);
+        // at every VL, fadda must equal the exact scalar loop
+        let mut want = 0.0f64;
+        for v in &vals {
+            want += v;
+        }
+        for vl in [128, 384, 1024] {
+            let mut ex = Executor::new(vl, mem.clone());
+            ex.run(&c.program, 10_000_000).unwrap();
+            assert_eq!(ex.mem.read_f64(out).unwrap(), want, "vl={vl} (§3.3)");
+        }
+    }
+
+    #[test]
+    fn sve_break_strlen_fig5() {
+        let mut mem = Memory::new();
+        let sb = mem.alloc(4096, 64);
+        let out = mem.alloc(8, 8);
+        let len = 1000usize;
+        for i in 0..len {
+            mem.write_byte(sb + i as u64, b'x').unwrap();
+        }
+        mem.write_byte(sb + len as u64, 0).unwrap();
+        let mut k = Kernel::new("strlen", Ty::U8, Trip::DataDependent { max: 1 << 22 });
+        let s = k.array("s", Ty::U8, sb);
+        k.count_out = Some(out);
+        k.body.push(Stmt::Break {
+            cond: Expr::cmp(CmpKind::Eq, Expr::load(s, Index::Affine { offset: 0 }), Expr::ConstI(0)),
+        });
+        let c = compile(&k, Target::Sve);
+        assert!(c.vectorized, "{:?}", c.why_not);
+        for vl in [128, 256, 2048] {
+            let mut ex = Executor::new(vl, mem.clone());
+            ex.run(&c.program, 10_000_000).unwrap();
+            assert_eq!(ex.mem.read_u64(out).unwrap(), len as u64, "vl={vl}");
+        }
+    }
+
+    #[test]
+    fn sve_break_loop_faults_handled_speculatively() {
+        // string ends exactly at the last mapped byte: the speculative
+        // loads past it must NOT trap (Fig. 5's whole point)
+        let mut mem = Memory::new();
+        let page = 0x40_000u64;
+        mem.map(page, 4096);
+        let out_page = 0x80_000u64;
+        mem.map(out_page, 4096);
+        let len = 4095;
+        for i in 0..len {
+            mem.write_byte(page + i, b'a').unwrap();
+        }
+        mem.write_byte(page + len, 0).unwrap(); // NUL is the final byte
+        let mut k = Kernel::new("strlen-edge", Ty::U8, Trip::DataDependent { max: 1 << 22 });
+        let s = k.array("s", Ty::U8, page);
+        k.count_out = Some(out_page);
+        k.body.push(Stmt::Break {
+            cond: Expr::cmp(CmpKind::Eq, Expr::load(s, Index::Affine { offset: 0 }), Expr::ConstI(0)),
+        });
+        let c = compile(&k, Target::Sve);
+        let mut ex = Executor::new(2048, mem);
+        ex.run(&c.program, 10_000_000).expect("no trap despite page end");
+        assert_eq!(ex.mem.read_u64(out_page).unwrap(), len);
+    }
+
+    #[test]
+    fn milc_quirk_forces_gathers() {
+        let mut mem = Memory::new();
+        let (mut k, _, yb) = daxpy_kernel(&mut mem, 16);
+        k.quirk = Quirk::MilcOuterLoop;
+        let c = compile(&k, Target::Sve);
+        assert!(c.vectorized);
+        // correctness preserved despite the bad decision
+        let mut ex = Executor::new(256, mem);
+        ex.run(&c.program, 10_000_000).unwrap();
+        for i in 0..16 {
+            assert_eq!(ex.mem.read_f64(yb + 8 * i).unwrap(), 3.0 * i as f64 + 100.0 + i as f64);
+        }
+        // and the program indeed contains gathers
+        let gathers = c
+            .program
+            .insts
+            .iter()
+            .filter(|i| matches!(i, Inst::SveLdGather { .. }))
+            .count();
+        assert!(gathers > 0, "quirk must produce gathered code");
+    }
+}

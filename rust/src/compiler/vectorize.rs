@@ -1,0 +1,296 @@
+//! The vectorizer's legality + profitability analysis (§3).
+//!
+//! Two targets with deliberately different capabilities:
+//!
+//! * **NEON** models the ca.-2016 Advanced SIMD auto-vectorizer the paper
+//!   compares against: no predication (so any conditional assignment or
+//!   data-dependent exit blocks it — §5 HACCmk), no gather (so any
+//!   non-contiguous access blocks it), no speculative loads (strlen), no
+//!   strictly-ordered reductions.
+//! * **SVE** implements §3: if-conversion to predication, while-based
+//!   loop control, gather/scatter, first-faulting speculative
+//!   vectorization, and ordered reductions — gated only by a
+//!   profitability estimate (gathers are *cracked*, §4, so gather-dense
+//!   loops may still be unprofitable, which is what keeps our CoMD proxy
+//!   scalar, §5).
+
+use super::ir::*;
+
+/// Per-element cost weights (in rough µops; documented in DESIGN.md).
+pub mod cost {
+    pub const MEM: f64 = 1.0;
+    pub const ARITH: f64 = 1.0;
+    pub const DIV: f64 = 4.0;
+    pub const OPAQUE: f64 = 20.0;
+    /// scalar conditional assignment: compare + branch
+    pub const SELECT_SCALAR: f64 = 2.0;
+    /// vector conditional assignment: compare + sel (per vector)
+    pub const SELECT_VEC: f64 = 2.0;
+    /// cracked gather/scatter element (§4): address gen + port slot
+    pub const GATHER_ELEM: f64 = 2.0;
+}
+
+/// Why a loop was not vectorized (mirrors real -Rpass-missed output).
+pub type WhyNot = String;
+
+#[derive(Clone, Debug, Default)]
+struct Counts {
+    contig_loads: usize,
+    contig_stores: usize,
+    gather: usize,
+    scatter: usize,
+    arith: usize,
+    divsqrt: usize,
+    selects: usize,
+    opaque: usize,
+    cmps: usize,
+}
+
+fn count_expr(e: &Expr, c: &mut Counts) {
+    e.visit(&mut |n| match n {
+        Expr::Load { idx, .. } => match idx {
+            Index::Affine { .. } => c.contig_loads += 1,
+            Index::Strided { .. } => c.gather += 1,
+            // indirect = one contiguous index load + one gather
+            Index::Indirect { .. } => {
+                c.contig_loads += 1;
+                c.gather += 1;
+            }
+        },
+        Expr::Bin { op, .. } => {
+            if matches!(op, BinOp::Div) {
+                c.divsqrt += 1;
+            } else {
+                c.arith += 1;
+            }
+        }
+        Expr::Un { op, .. } => {
+            if matches!(op, UnOp::Sqrt) {
+                c.divsqrt += 1;
+            } else {
+                c.arith += 1;
+            }
+        }
+        Expr::Cmp { .. } => c.cmps += 1,
+        Expr::Select { .. } => c.selects += 1,
+        Expr::Opaque { .. } => c.opaque += 1,
+        _ => {}
+    });
+}
+
+fn count_kernel(k: &Kernel) -> Counts {
+    let mut c = Counts::default();
+    for e in k.all_exprs() {
+        count_expr(e, &mut c);
+    }
+    for s in &k.body {
+        if let Stmt::Store { idx, .. } = s {
+            match idx {
+                Index::Affine { .. } => c.contig_stores += 1,
+                Index::Strided { .. } | Index::Indirect { .. } => c.scatter += 1,
+            }
+        }
+    }
+    // reductions cost one arith per element
+    c.arith += k.reductions.len();
+    c
+}
+
+/// Scalar per-element cost estimate.
+fn scalar_cost(c: &Counts) -> f64 {
+    (c.contig_loads + c.contig_stores + c.gather + c.scatter) as f64 * cost::MEM
+        + c.arith as f64 * cost::ARITH
+        + c.divsqrt as f64 * cost::DIV
+        + c.selects as f64 * cost::SELECT_SCALAR
+        + c.cmps as f64 * cost::ARITH
+        + c.opaque as f64 * cost::OPAQUE
+}
+
+/// SVE per-element cost at the conservative minimum VL (the compiler
+/// cannot assume more than 128 bits — §3.1).
+fn sve_cost(c: &Counts, lanes_min: f64) -> f64 {
+    ((c.contig_loads + c.contig_stores) as f64 * cost::MEM
+        + c.arith as f64 * cost::ARITH
+        + c.divsqrt as f64 * cost::DIV
+        + (c.selects + c.cmps) as f64 * cost::SELECT_VEC)
+        / lanes_min
+        + (c.gather + c.scatter) as f64 * cost::GATHER_ELEM
+}
+
+/// NEON legality (ca.-2016 model).
+pub fn neon_legal(k: &Kernel) -> Result<(), WhyNot> {
+    if k.has_break() {
+        return Err("loop has data-dependent exit; cannot vectorize without \
+                    speculative (first-faulting) loads"
+            .into());
+    }
+    let c = count_kernel(k);
+    if c.selects > 0 || c.cmps > 0 {
+        return Err("conditional assignment in loop body inhibits Advanced \
+                    SIMD vectorization (no per-lane predication)"
+            .into());
+    }
+    if c.gather > 0 || c.scatter > 0 {
+        return Err("non-contiguous (strided/indirect) access; Advanced SIMD \
+                    has no gather/scatter"
+            .into());
+    }
+    if c.opaque > 0 {
+        return Err("call to scalar math library".into());
+    }
+    if k.reductions.iter().any(|r| matches!(r.kind, RedKind::OrderedSumF)) {
+        return Err("reduction requires strictly-ordered FP accumulation".into());
+    }
+    if k.reductions.iter().any(|r| matches!(r.kind, RedKind::XorI | RedKind::MaxF)) {
+        return Err("unsupported horizontal reduction kind".into());
+    }
+    Ok(())
+}
+
+/// SVE legality + profitability.
+pub fn sve_legal(k: &Kernel) -> Result<(), WhyNot> {
+    // scatter-accumulate through an index array (A[idx[i]] op= v) may
+    // carry an intra-vector output dependence when idx has duplicates;
+    // SVE1 has no conflict-detection support, so the vectorizer must
+    // reject it (the CoMD situation: AoS neighbour-list force update)
+    for s in &k.body {
+        if let Stmt::Store { arr, idx: Index::Indirect { .. } | Index::Strided { .. }, value } = s {
+            let mut reads_target = false;
+            value.visit(&mut |n| {
+                if let Expr::Load { arr: a, .. } = n {
+                    if a == arr {
+                        reads_target = true;
+                    }
+                }
+            });
+            if reads_target {
+                return Err("possible intra-vector output dependence: \
+                            indexed store reads its own target array \
+                            (no conflict-detection support)"
+                    .into());
+            }
+        }
+    }
+    let c = count_kernel(k);
+    if c.opaque > 0 {
+        // §5: "the toolchain ... did not have vectorized versions of some
+        // basic math library functions such as pow() and log()"
+        return Err("call to scalar math library (no vector libm)".into());
+    }
+    let lanes_min = (128 / (k.elem_ty.bytes() * 8)) as f64;
+    let sc = scalar_cost(&c);
+    let vc = sve_cost(&c, lanes_min);
+    if vc >= sc {
+        return Err(format!(
+            "not profitable at minimum vector length: vector cost {vc:.2} \
+             >= scalar cost {sc:.2} per element (gathers are cracked, §4)"
+        ));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn daxpy_kernel() -> Kernel {
+        let mut k = Kernel::new("daxpy", Ty::F64, Trip::Count(100));
+        let x = k.array("x", Ty::F64, 0x1000);
+        let y = k.array("y", Ty::F64, 0x9000);
+        k.body.push(Stmt::Store {
+            arr: y,
+            idx: Index::Affine { offset: 0 },
+            value: Expr::bin(
+                BinOp::Add,
+                Expr::bin(BinOp::Mul, Expr::ConstF(3.0), Expr::load(x, Index::Affine { offset: 0 })),
+                Expr::load(y, Index::Affine { offset: 0 }),
+            ),
+        });
+        k
+    }
+
+    #[test]
+    fn daxpy_vectorizes_everywhere() {
+        let k = daxpy_kernel();
+        assert!(neon_legal(&k).is_ok());
+        assert!(sve_legal(&k).is_ok());
+    }
+
+    #[test]
+    fn conditional_assignment_blocks_neon_not_sve() {
+        // the HACCmk situation (§5)
+        let mut k = daxpy_kernel();
+        if let Stmt::Store { value, .. } = &mut k.body[0] {
+            *value = Expr::select(
+                Expr::cmp(CmpKind::Lt, value.clone(), Expr::ConstF(10.0)),
+                value.clone(),
+                Expr::ConstF(0.0),
+            );
+        }
+        assert!(neon_legal(&k).unwrap_err().contains("conditional assignment"));
+        assert!(sve_legal(&k).is_ok());
+    }
+
+    #[test]
+    fn data_dependent_exit_blocks_neon() {
+        let mut k = Kernel::new("strlen", Ty::U8, Trip::DataDependent { max: 1 << 20 });
+        let s = k.array("s", Ty::U8, 0x1000);
+        k.body.push(Stmt::Break {
+            cond: Expr::cmp(CmpKind::Eq, Expr::load(s, Index::Affine { offset: 0 }), Expr::ConstI(0)),
+        });
+        assert!(neon_legal(&k).unwrap_err().contains("data-dependent exit"));
+        assert!(sve_legal(&k).is_ok(), "first-faulting loads make this legal");
+    }
+
+    #[test]
+    fn gather_blocks_neon() {
+        let mut k = daxpy_kernel();
+        if let Stmt::Store { value, .. } = &mut k.body[0] {
+            *value = Expr::load(0, Index::Strided { scale: 2, offset: 0 });
+        }
+        assert!(neon_legal(&k).unwrap_err().contains("gather"));
+    }
+
+    #[test]
+    fn gather_dense_loop_unprofitable_for_sve() {
+        // the CoMD situation: nearly every access is a (cracked) gather
+        let mut k = Kernel::new("comd", Ty::F64, Trip::Count(100));
+        let pos = k.array("pos", Ty::F64, 0x1000);
+        let mut sum = Expr::ConstF(0.0);
+        for c in 0..3 {
+            sum = Expr::bin(
+                BinOp::Add,
+                sum,
+                Expr::load(pos, Index::Strided { scale: 3, offset: c }),
+            );
+        }
+        k.reductions.push(Reduction { kind: RedKind::SumF, value: sum });
+        let err = sve_legal(&k).unwrap_err();
+        assert!(err.contains("not profitable"), "{err}");
+    }
+
+    #[test]
+    fn opaque_call_blocks_both() {
+        let mut k = daxpy_kernel();
+        if let Stmt::Store { value, .. } = &mut k.body[0] {
+            *value = Expr::Opaque {
+                f: crate::isa::OpaqueFn::Log,
+                args: vec![Expr::load(0, Index::Affine { offset: 0 })],
+            };
+        }
+        assert!(neon_legal(&k).is_err());
+        assert!(sve_legal(&k).unwrap_err().contains("libm"), "EP situation");
+    }
+
+    #[test]
+    fn ordered_reduction_blocks_neon_only() {
+        let mut k = daxpy_kernel();
+        k.body.clear();
+        k.reductions.push(Reduction {
+            kind: RedKind::OrderedSumF,
+            value: Expr::load(0, Index::Affine { offset: 0 }),
+        });
+        assert!(neon_legal(&k).unwrap_err().contains("ordered"));
+        assert!(sve_legal(&k).is_ok(), "fadda makes this legal (§3.3)");
+    }
+}

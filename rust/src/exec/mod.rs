@@ -1,0 +1,217 @@
+//! Functional executor: architectural semantics for the scalar, NEON and
+//! SVE subsets. Timing is *not* modelled here — the executor streams
+//! retired-instruction information to a callback, which the
+//! [`crate::uarch`] model consumes (classic trace-driven split).
+
+mod neon;
+mod scalar;
+mod sve;
+
+use crate::arch::CpuState;
+use crate::asm::Program;
+use crate::isa::Inst;
+use crate::mem::{MemFault, Memory};
+
+/// One architectural memory access, as seen by the LSU/cache model.
+/// Contiguous vector accesses are reported as a single span (the LSU
+/// splits them at the 512-bit port width); gathers/scatters report one
+/// access per active element (the "cracked" implementation of §4/§5).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct MemAccess {
+    pub addr: u64,
+    pub len: u32,
+    pub is_store: bool,
+}
+
+/// Execution stopped abnormally.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Trap {
+    /// Unhandled memory fault (translation failure) at instruction `pc`.
+    Fault { fault: MemFault, pc: usize },
+    /// Instruction budget exhausted (runaway guard).
+    Budget,
+}
+
+/// Per-retired-instruction view handed to the timing callback.
+pub struct StepInfo<'a> {
+    pub pc: usize,
+    pub inst: &'a Inst,
+    /// For branches: was it taken?
+    pub taken: bool,
+    pub mem: &'a [MemAccess],
+}
+
+/// Aggregate run statistics (the paper's Fig. 8 bar metric needs the
+/// dynamic instruction mix).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct RunStats {
+    pub insts: u64,
+    pub sve_insts: u64,
+    pub neon_insts: u64,
+    /// Dynamic µops that are vector-class (SVE or NEON).
+    pub vector_insts: u64,
+}
+
+impl RunStats {
+    /// "Percentage of dynamically executed vector instructions" (§5).
+    pub fn vector_fraction(&self) -> f64 {
+        if self.insts == 0 {
+            0.0
+        } else {
+            self.vector_insts as f64 / self.insts as f64
+        }
+    }
+}
+
+/// The functional core: architectural state + memory.
+pub struct Executor {
+    pub state: CpuState,
+    pub mem: Memory,
+    /// Scratch buffer of the current instruction's memory accesses.
+    pub(crate) accesses: Vec<MemAccess>,
+    /// PC override set by a taken branch during `exec_inst`.
+    pub(crate) next_pc: Option<usize>,
+    /// Scratch lane buffer for vector loads (avoids per-inst allocation).
+    pub(crate) lane_scratch: Vec<u64>,
+    /// Set by Halt/Ret.
+    pub(crate) halted: bool,
+}
+
+impl Executor {
+    pub fn new(vl_bits: usize, mem: Memory) -> Self {
+        Executor {
+            state: CpuState::new(vl_bits),
+            mem,
+            accesses: Vec::with_capacity(64),
+            next_pc: None,
+            lane_scratch: vec![0; 256],
+            halted: false,
+        }
+    }
+
+    /// Execute one instruction at `state.pc`. On success advances the PC
+    /// and returns whether a branch was taken.
+    pub fn step(&mut self, prog: &Program) -> Result<bool, Trap> {
+        let pc = self.state.pc;
+        let inst = &prog.insts[pc];
+        self.accesses.clear();
+        self.next_pc = None;
+        match self.exec_inst(inst) {
+            Ok(()) => {
+                let taken = self.next_pc.is_some();
+                self.state.pc = self.next_pc.unwrap_or(pc + 1);
+                Ok(taken)
+            }
+            Err(fault) => Err(Trap::Fault { fault, pc }),
+        }
+    }
+
+    /// Run until Halt/Ret (Ok) or a trap (Err), streaming retire info.
+    pub fn run_with(
+        &mut self,
+        prog: &Program,
+        max_insts: u64,
+        mut on_retire: impl FnMut(StepInfo<'_>),
+    ) -> Result<RunStats, Trap> {
+        let mut stats = RunStats::default();
+        while !self.halted {
+            if stats.insts >= max_insts {
+                return Err(Trap::Budget);
+            }
+            let pc = self.state.pc;
+            let taken = self.step(prog)?;
+            let inst = &prog.insts[pc];
+            stats.insts += 1;
+            if inst.is_sve() {
+                stats.sve_insts += 1;
+            }
+            if inst.is_neon() {
+                stats.neon_insts += 1;
+            }
+            if inst.class().is_vector() {
+                stats.vector_insts += 1;
+            }
+            on_retire(StepInfo { pc, inst, taken, mem: &self.accesses });
+        }
+        Ok(stats)
+    }
+
+    /// Run without a timing consumer.
+    pub fn run(&mut self, prog: &Program, max_insts: u64) -> Result<RunStats, Trap> {
+        self.run_with(prog, max_insts, |_| {})
+    }
+
+    /// Dispatch. Implementations live in `scalar.rs`, `neon.rs`, `sve.rs`.
+    fn exec_inst(&mut self, inst: &Inst) -> Result<(), MemFault> {
+        use Inst::*;
+        match inst {
+            // scalar (incl. scalar fp)
+            MovImm { .. } | MovReg { .. } | AddImm { .. } | AddReg { .. } | SubReg { .. }
+            | Madd { .. } | Udiv { .. } | AndImm { .. } | LogReg { .. } | LslImm { .. }
+            | LsrImm { .. } | AsrImm { .. } | Csel { .. } | Ldr { .. } | Str { .. }
+            | LdrFp { .. } | StrFp { .. } | CmpImm { .. } | CmpReg { .. } | B { .. }
+            | BCond { .. } | Cbz { .. } | Cbnz { .. } | Ret | Halt | Nop | FmovImm { .. }
+            | FmovXtoD { .. } | FmovDtoX { .. } | FmovReg { .. } | FpBin { .. } | FpUn { .. } | Fmadd { .. }
+            | Fcmp { .. } | Scvtf { .. } | Fcvtzs { .. } | OpaqueCall { .. } => {
+                self.exec_scalar(inst)
+            }
+            // NEON
+            NeonLd1 { .. } | NeonSt1 { .. } | NeonDupX { .. } | NeonDupLane0 { .. }
+            | NeonMoviZero { .. } | NeonFpBin { .. } | NeonFpUn { .. } | NeonFmla { .. }
+            | NeonIntBin { .. } | NeonFcm { .. } | NeonCm { .. } | NeonBsl { .. }
+            | NeonFaddv { .. } | NeonAddv { .. } | NeonUmov { .. } | NeonInsX { .. } => {
+                self.exec_neon(inst)
+            }
+            // SVE
+            _ => self.exec_sve(inst),
+        }
+    }
+
+    // ---- shared helpers ----
+
+    #[inline]
+    pub(crate) fn record_load(&mut self, addr: u64, len: u32) {
+        self.accesses.push(MemAccess { addr, len, is_store: false });
+    }
+
+    #[inline]
+    pub(crate) fn record_store(&mut self, addr: u64, len: u32) {
+        self.accesses.push(MemAccess { addr, len, is_store: true });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::asm::Asm;
+
+    #[test]
+    fn run_halts_and_counts() {
+        let mut a = Asm::new();
+        a.push(Inst::MovImm { xd: 0, imm: 3 });
+        a.push(Inst::AddImm { xd: 0, xn: 0, imm: 4 });
+        a.push(Inst::Halt);
+        let p = a.finish();
+        let mut ex = Executor::new(256, Memory::new());
+        let stats = ex.run(&p, 100).unwrap();
+        assert_eq!(stats.insts, 3);
+        assert_eq!(ex.state.get_x(0), 7);
+    }
+
+    #[test]
+    fn budget_guard_trips_on_infinite_loop() {
+        let mut a = Asm::new();
+        a.label("x");
+        a.push_branch(Inst::B { target: 0 }, "x");
+        let p = a.finish();
+        let mut ex = Executor::new(128, Memory::new());
+        assert_eq!(ex.run(&p, 50), Err(Trap::Budget));
+    }
+
+    #[test]
+    fn vector_fraction_metric() {
+        let s = RunStats { insts: 10, sve_insts: 4, neon_insts: 0, vector_insts: 5 };
+        assert!((s.vector_fraction() - 0.5).abs() < 1e-12);
+        assert_eq!(RunStats::default().vector_fraction(), 0.0);
+    }
+}

@@ -1,0 +1,368 @@
+//! Advanced SIMD (NEON) semantics: fixed 128-bit operations on the low
+//! 16 bytes of the vector file. Every NEON write zeroes the extended
+//! bits (§4 — "avoiding partial updates").
+
+use super::Executor;
+use crate::arch::Esize;
+use crate::exec::scalar::{fp_bin, fp_bin32, fp_un, fp_un32};
+use crate::isa::{CmpOp, Inst, IntOp, MemOff};
+use crate::mem::MemFault;
+
+const NEON_BYTES: usize = 16;
+
+impl Executor {
+    pub(crate) fn exec_neon(&mut self, inst: &Inst) -> Result<(), MemFault> {
+        use Inst::*;
+        match *inst {
+            NeonLd1 { esize: _, vt, base, off } => {
+                let addr = self.neon_ea(base, off);
+                let mut bytes = [0u8; NEON_BYTES];
+                for (k, b) in bytes.iter_mut().enumerate() {
+                    *b = self.mem.read_byte(addr + k as u64)?;
+                }
+                self.record_load(addr, NEON_BYTES as u32);
+                let r = &mut self.state.z[vt as usize];
+                r.bytes[..NEON_BYTES].copy_from_slice(&bytes);
+                r.zero_from(NEON_BYTES);
+            }
+            NeonSt1 { esize: _, vt, base, off } => {
+                let addr = self.neon_ea(base, off);
+                let bytes: [u8; NEON_BYTES] =
+                    self.state.z[vt as usize].bytes[..NEON_BYTES].try_into().unwrap();
+                for (k, b) in bytes.iter().enumerate() {
+                    self.mem.write_byte(addr + k as u64, *b)?;
+                }
+                self.record_store(addr, NEON_BYTES as u32);
+            }
+            NeonDupX { esize, vd, xn } => {
+                let v = self.state.get_x(xn);
+                let r = &mut self.state.z[vd as usize];
+                for i in 0..esize.lanes(NEON_BYTES) {
+                    r.set(esize, i, v);
+                }
+                r.zero_from(NEON_BYTES);
+            }
+            NeonDupLane0 { esize, vd, vn } => {
+                let v = self.state.z[vn as usize].get(esize, 0);
+                let r = &mut self.state.z[vd as usize];
+                for i in 0..esize.lanes(NEON_BYTES) {
+                    r.set(esize, i, v);
+                }
+                r.zero_from(NEON_BYTES);
+            }
+            NeonMoviZero { vd } => self.state.z[vd as usize].zero(),
+            NeonFpBin { op, dbl, vd, vn, vm } => {
+                let (zn, zm) = (self.state.z[vn as usize], self.state.z[vm as usize]);
+                let r = &mut self.state.z[vd as usize];
+                if dbl {
+                    for i in 0..2 {
+                        r.set_f64(i, fp_bin(op, zn.get_f64(i), zm.get_f64(i)));
+                    }
+                } else {
+                    for i in 0..4 {
+                        r.set_f32(i, fp_bin32(op, zn.get_f32(i), zm.get_f32(i)));
+                    }
+                }
+                r.zero_from(NEON_BYTES);
+            }
+            NeonFpUn { op, dbl, vd, vn } => {
+                let zn = self.state.z[vn as usize];
+                let r = &mut self.state.z[vd as usize];
+                if dbl {
+                    for i in 0..2 {
+                        r.set_f64(i, fp_un(op, zn.get_f64(i)));
+                    }
+                } else {
+                    for i in 0..4 {
+                        r.set_f32(i, fp_un32(op, zn.get_f32(i)));
+                    }
+                }
+                r.zero_from(NEON_BYTES);
+            }
+            NeonFmla { dbl, vd, vn, vm, sub } => {
+                let (zn, zm) = (self.state.z[vn as usize], self.state.z[vm as usize]);
+                let r = &mut self.state.z[vd as usize];
+                if dbl {
+                    for i in 0..2 {
+                        let p = zn.get_f64(i) * zm.get_f64(i);
+                        let p = if sub { -p } else { p };
+                        r.set_f64(i, r.get_f64(i) + p);
+                    }
+                } else {
+                    for i in 0..4 {
+                        let p = zn.get_f32(i) * zm.get_f32(i);
+                        let p = if sub { -p } else { p };
+                        r.set_f32(i, r.get_f32(i) + p);
+                    }
+                }
+                r.zero_from(NEON_BYTES);
+            }
+            NeonIntBin { op, esize, vd, vn, vm } => {
+                let (zn, zm) = (self.state.z[vn as usize], self.state.z[vm as usize]);
+                let r = &mut self.state.z[vd as usize];
+                for i in 0..esize.lanes(NEON_BYTES) {
+                    let v = int_bin(op, esize, zn.get(esize, i), zm.get(esize, i));
+                    r.set(esize, i, v);
+                }
+                r.zero_from(NEON_BYTES);
+            }
+            NeonFcm { op, dbl, vd, vn, vm } => {
+                let (zn, zm) = (self.state.z[vn as usize], self.state.z[vm as usize]);
+                let r = &mut self.state.z[vd as usize];
+                if dbl {
+                    for i in 0..2 {
+                        let t = fcmp(op, zn.get_f64(i), zm.get_f64(i));
+                        r.set(Esize::D, i, if t { u64::MAX } else { 0 });
+                    }
+                } else {
+                    for i in 0..4 {
+                        let t = fcmp(op, zn.get_f32(i) as f64, zm.get_f32(i) as f64);
+                        r.set(Esize::S, i, if t { 0xFFFF_FFFF } else { 0 });
+                    }
+                }
+                r.zero_from(NEON_BYTES);
+            }
+            NeonCm { op, esize, vd, vn, vm } => {
+                let (zn, zm) = (self.state.z[vn as usize], self.state.z[vm as usize]);
+                let r = &mut self.state.z[vd as usize];
+                let ones = if esize.bytes() == 8 {
+                    u64::MAX
+                } else {
+                    (1u64 << (esize.bytes() * 8)) - 1
+                };
+                for i in 0..esize.lanes(NEON_BYTES) {
+                    let t = icmp_signed(op, zn.get_signed(esize, i), zm.get_signed(esize, i));
+                    r.set(esize, i, if t { ones } else { 0 });
+                }
+                r.zero_from(NEON_BYTES);
+            }
+            NeonBsl { vd, vn, vm } => {
+                let (zn, zm) = (self.state.z[vn as usize], self.state.z[vm as usize]);
+                let r = &mut self.state.z[vd as usize];
+                for k in 0..NEON_BYTES {
+                    r.bytes[k] = (r.bytes[k] & zn.bytes[k]) | (!r.bytes[k] & zm.bytes[k]);
+                }
+                r.zero_from(NEON_BYTES);
+            }
+            NeonFaddv { dbl, dd, vn } => {
+                let zn = self.state.z[vn as usize];
+                if dbl {
+                    // 2 lanes: single pairwise add
+                    let v = zn.get_f64(0) + zn.get_f64(1);
+                    self.state.set_d(dd, v);
+                } else {
+                    // 4 lanes: faddp tree
+                    let (a, b) = (zn.get_f32(0) + zn.get_f32(1), zn.get_f32(2) + zn.get_f32(3));
+                    self.state.set_s(dd, a + b);
+                }
+            }
+            NeonAddv { esize, dd, vn } => {
+                let zn = self.state.z[vn as usize];
+                let mut acc = 0u64;
+                for i in 0..esize.lanes(NEON_BYTES) {
+                    acc = acc.wrapping_add(zn.get(esize, i));
+                }
+                let r = &mut self.state.z[dd as usize];
+                r.zero();
+                r.set(esize, 0, acc);
+            }
+            NeonUmov { esize, xd, vn, lane } => {
+                let v = self.state.z[vn as usize].get(esize, lane as usize);
+                self.state.set_x(xd, v);
+            }
+            NeonInsX { esize, vd, lane, xn } => {
+                let v = self.state.get_x(xn);
+                let r = &mut self.state.z[vd as usize];
+                r.set(esize, lane as usize, v);
+                r.zero_from(NEON_BYTES);
+            }
+            _ => unreachable!("non-NEON inst routed to exec_neon: {inst:?}"),
+        }
+        Ok(())
+    }
+
+    #[inline]
+    fn neon_ea(&self, base: u8, off: MemOff) -> u64 {
+        let b = self.state.get_x(base);
+        match off {
+            MemOff::Imm(i) => b.wrapping_add(i as u64),
+            MemOff::RegLsl(xm, sh) => b.wrapping_add(self.state.get_x(xm) << sh),
+        }
+    }
+}
+
+pub(crate) fn int_bin(op: IntOp, esize: Esize, a: u64, b: u64) -> u64 {
+    let bits = esize.bytes() * 8;
+    let sign = |v: u64| -> i64 {
+        if bits == 64 {
+            v as i64
+        } else {
+            ((v << (64 - bits)) as i64) >> (64 - bits)
+        }
+    };
+    match op {
+        IntOp::Add => a.wrapping_add(b),
+        IntOp::Sub => a.wrapping_sub(b),
+        IntOp::Mul => a.wrapping_mul(b),
+        IntOp::SMax => sign(a).max(sign(b)) as u64,
+        IntOp::SMin => sign(a).min(sign(b)) as u64,
+        IntOp::UMax => a.max(b),
+        IntOp::UMin => a.min(b),
+        IntOp::And => a & b,
+        IntOp::Orr => a | b,
+        IntOp::Eor => a ^ b,
+        IntOp::Lsl => {
+            if b >= bits as u64 {
+                0
+            } else {
+                a << b
+            }
+        }
+        IntOp::Lsr => {
+            let mask = if bits == 64 { u64::MAX } else { (1u64 << bits) - 1 };
+            if b >= bits as u64 {
+                0
+            } else {
+                (a & mask) >> b
+            }
+        }
+        IntOp::Asr => {
+            let sh = b.min(bits as u64 - 1);
+            (sign(a) >> sh) as u64
+        }
+    }
+}
+
+pub(crate) fn fcmp(op: CmpOp, a: f64, b: f64) -> bool {
+    match op {
+        CmpOp::Eq => a == b,
+        CmpOp::Ne => a != b,
+        CmpOp::Gt => a > b,
+        CmpOp::Ge => a >= b,
+        CmpOp::Lt => a < b,
+        CmpOp::Le => a <= b,
+    }
+}
+
+pub(crate) fn icmp_signed(op: CmpOp, a: i64, b: i64) -> bool {
+    match op {
+        CmpOp::Eq => a == b,
+        CmpOp::Ne => a != b,
+        CmpOp::Gt => a > b,
+        CmpOp::Ge => a >= b,
+        CmpOp::Lt => a < b,
+        CmpOp::Le => a <= b,
+    }
+}
+
+pub(crate) fn icmp_unsigned(op: CmpOp, a: u64, b: u64) -> bool {
+    match op {
+        CmpOp::Eq => a == b,
+        CmpOp::Ne => a != b,
+        CmpOp::Gt => a > b,
+        CmpOp::Ge => a >= b,
+        CmpOp::Lt => a < b,
+        CmpOp::Le => a <= b,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::asm::Asm;
+    use crate::mem::Memory;
+
+    fn run(mem: Memory, build: impl FnOnce(&mut Asm)) -> Executor {
+        let mut a = Asm::new();
+        build(&mut a);
+        a.push(Inst::Halt);
+        let p = a.finish();
+        let mut ex = Executor::new(512, mem); // wide SVE reg to check zeroing
+        ex.run(&p, 100_000).unwrap();
+        ex
+    }
+
+    #[test]
+    fn ld1_fmla_st1_roundtrip() {
+        let mut mem = Memory::new();
+        let xb = mem.alloc(32, 16);
+        let yb = mem.alloc(32, 16);
+        mem.write_f64_slice(xb, &[1.0, 2.0]);
+        mem.write_f64_slice(yb, &[10.0, 20.0]);
+        let ex = run(mem, |a| {
+            a.push(Inst::MovImm { xd: 0, imm: xb });
+            a.push(Inst::MovImm { xd: 1, imm: yb });
+            a.push(Inst::MovImm { xd: 2, imm: 3f64.to_bits() });
+            a.push(Inst::FmovXtoD { dd: 0, xn: 2 });
+            a.push(Inst::NeonDupLane0 { esize: Esize::D, vd: 0, vn: 0 });
+            a.push(Inst::NeonLd1 { esize: Esize::D, vt: 1, base: 0, off: MemOff::Imm(0) });
+            a.push(Inst::NeonLd1 { esize: Esize::D, vt: 2, base: 1, off: MemOff::Imm(0) });
+            a.push(Inst::NeonFmla { dbl: true, vd: 2, vn: 1, vm: 0, sub: false });
+            a.push(Inst::NeonSt1 { esize: Esize::D, vt: 2, base: 1, off: MemOff::Imm(0) });
+        });
+        assert_eq!(ex.mem.read_f64(yb).unwrap(), 13.0);
+        assert_eq!(ex.mem.read_f64(yb + 8).unwrap(), 26.0);
+    }
+
+    #[test]
+    fn neon_writes_zero_high_sve_bits() {
+        let mut mem = Memory::new();
+        let b = mem.alloc(16, 16);
+        let ex = run(mem, |a| {
+            // dirty the full z1 via SVE dup, then overwrite low 128 via NEON
+            a.push(Inst::DupImm { zd: 1, esize: Esize::D, imm: -1 });
+            a.push(Inst::MovImm { xd: 0, imm: b });
+            a.push(Inst::NeonLd1 { esize: Esize::D, vt: 1, base: 0, off: MemOff::Imm(0) });
+        });
+        assert!(ex.state.z[1].bytes[16..].iter().all(|&x| x == 0), "§4 zeroing");
+    }
+
+    #[test]
+    fn bsl_selects_bitwise() {
+        let ex = run(Memory::new(), |a| {
+            a.push(Inst::MovImm { xd: 1, imm: 0xFF00_FF00_FF00_FF00 });
+            a.push(Inst::NeonDupX { esize: Esize::D, vd: 0, xn: 1 }); // mask
+            a.push(Inst::MovImm { xd: 2, imm: 0x1111_1111_1111_1111 });
+            a.push(Inst::NeonDupX { esize: Esize::D, vd: 1, xn: 2 });
+            a.push(Inst::MovImm { xd: 3, imm: 0x2222_2222_2222_2222 });
+            a.push(Inst::NeonDupX { esize: Esize::D, vd: 2, xn: 3 });
+            a.push(Inst::NeonBsl { vd: 0, vn: 1, vm: 2 });
+        });
+        assert_eq!(ex.state.z[0].get(Esize::D, 0), 0x1122_1122_1122_1122);
+    }
+
+    #[test]
+    fn fcm_produces_lane_masks() {
+        let ex = run(Memory::new(), |a| {
+            a.push(Inst::MovImm { xd: 1, imm: 4f64.to_bits() });
+            a.push(Inst::FmovXtoD { dd: 0, xn: 1 });
+            a.push(Inst::NeonDupLane0 { esize: Esize::D, vd: 1, vn: 0 }); // [4,4]
+            a.push(Inst::MovImm { xd: 2, imm: 2f64.to_bits() });
+            a.push(Inst::FmovXtoD { dd: 2, xn: 2 });
+            a.push(Inst::NeonDupLane0 { esize: Esize::D, vd: 2, vn: 2 }); // [2,2]
+            a.push(Inst::NeonFcm { op: CmpOp::Gt, dbl: true, vd: 3, vn: 1, vm: 2 });
+        });
+        assert_eq!(ex.state.z[3].get(Esize::D, 0), u64::MAX);
+        assert_eq!(ex.state.z[3].get(Esize::D, 1), u64::MAX);
+    }
+
+    #[test]
+    fn faddv_trees() {
+        let mut mem = Memory::new();
+        let b = mem.alloc(16, 16);
+        mem.write_f32_slice(b, &[1.0, 2.0, 3.0, 4.0]);
+        let ex = run(mem, |a| {
+            a.push(Inst::MovImm { xd: 0, imm: b });
+            a.push(Inst::NeonLd1 { esize: Esize::S, vt: 0, base: 0, off: MemOff::Imm(0) });
+            a.push(Inst::NeonFaddv { dbl: false, dd: 1, vn: 0 });
+        });
+        assert_eq!(ex.state.get_s(1), 10.0);
+    }
+
+    #[test]
+    fn int_bin_shift_saturation() {
+        assert_eq!(int_bin(IntOp::Lsl, Esize::S, 1, 40), 0, "shift >= width -> 0");
+        assert_eq!(int_bin(IntOp::Asr, Esize::B, 0x80, 10), 0xFFFF_FFFF_FFFF_FFFF);
+        assert_eq!(int_bin(IntOp::SMax, Esize::B, 0x80, 1), 1, "-128 vs 1");
+    }
+}

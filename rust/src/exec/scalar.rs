@@ -1,0 +1,438 @@
+//! AArch64 scalar (integer + FP) semantics.
+
+use super::Executor;
+use crate::arch::Flags;
+use crate::isa::{FpOp, FpUnOp, Inst, MemOff, OpaqueFn, PLogicOp};
+use crate::mem::MemFault;
+
+impl Executor {
+    pub(crate) fn exec_scalar(&mut self, inst: &Inst) -> Result<(), MemFault> {
+        use Inst::*;
+        let s = &mut self.state;
+        match *inst {
+            MovImm { xd, imm } => s.set_x(xd, imm),
+            MovReg { xd, xn } => {
+                let v = s.get_x(xn);
+                s.set_x(xd, v)
+            }
+            AddImm { xd, xn, imm } => {
+                let v = s.get_x(xn).wrapping_add(imm as u64);
+                s.set_x(xd, v)
+            }
+            AddReg { xd, xn, xm, lsl } => {
+                let v = s.get_x(xn).wrapping_add(s.get_x(xm) << lsl);
+                s.set_x(xd, v)
+            }
+            SubReg { xd, xn, xm } => {
+                let v = s.get_x(xn).wrapping_sub(s.get_x(xm));
+                s.set_x(xd, v)
+            }
+            Madd { xd, xn, xm, xa } => {
+                let v = s.get_x(xa).wrapping_add(s.get_x(xn).wrapping_mul(s.get_x(xm)));
+                s.set_x(xd, v)
+            }
+            Udiv { xd, xn, xm } => {
+                let d = s.get_x(xm);
+                let v = if d == 0 { 0 } else { s.get_x(xn) / d }; // A64: div by 0 = 0
+                s.set_x(xd, v)
+            }
+            AndImm { xd, xn, imm } => {
+                let v = s.get_x(xn) & imm;
+                s.set_x(xd, v)
+            }
+            LogReg { op, xd, xn, xm } => {
+                let (a, b) = (s.get_x(xn), s.get_x(xm));
+                let v = match op {
+                    PLogicOp::And => a & b,
+                    PLogicOp::Orr => a | b,
+                    PLogicOp::Eor => a ^ b,
+                    PLogicOp::Bic => a & !b,
+                };
+                s.set_x(xd, v)
+            }
+            LslImm { xd, xn, sh } => {
+                let v = s.get_x(xn) << sh;
+                s.set_x(xd, v)
+            }
+            LsrImm { xd, xn, sh } => {
+                let v = s.get_x(xn) >> sh;
+                s.set_x(xd, v)
+            }
+            AsrImm { xd, xn, sh } => {
+                let v = (s.get_x(xn) as i64) >> sh;
+                s.set_x(xd, v as u64)
+            }
+            Csel { xd, xn, xm, cond } => {
+                let v = if s.flags.cond(cond) { s.get_x(xn) } else { s.get_x(xm) };
+                s.set_x(xd, v)
+            }
+            Ldr { size, signed, xt, base, off } => {
+                let addr = self.ea(base, off);
+                let raw = self.mem.read(addr, size as usize)?;
+                self.record_load(addr, size as u32);
+                let v = if signed {
+                    let bits = size as u32 * 8;
+                    if bits == 64 {
+                        raw
+                    } else {
+                        (((raw << (64 - bits)) as i64) >> (64 - bits)) as u64
+                    }
+                } else {
+                    raw
+                };
+                self.state.set_x(xt, v);
+            }
+            Str { size, xt, base, off } => {
+                let addr = self.ea(base, off);
+                let v = self.state.get_x(xt);
+                self.mem.write(addr, size as usize, v)?;
+                self.record_store(addr, size as u32);
+            }
+            LdrFp { dbl, vt, base, off } => {
+                let addr = self.ea(base, off);
+                let size = if dbl { 8 } else { 4 };
+                let raw = self.mem.read(addr, size)?;
+                self.record_load(addr, size as u32);
+                if dbl {
+                    self.state.set_d(vt, f64::from_bits(raw));
+                } else {
+                    self.state.set_s(vt, f32::from_bits(raw as u32));
+                }
+            }
+            StrFp { dbl, vt, base, off } => {
+                let addr = self.ea(base, off);
+                if dbl {
+                    self.mem.write(addr, 8, self.state.get_d(vt).to_bits())?;
+                    self.record_store(addr, 8);
+                } else {
+                    self.mem.write(addr, 4, self.state.get_s(vt).to_bits() as u64)?;
+                    self.record_store(addr, 4);
+                }
+            }
+            CmpImm { xn, imm } => s.flags = Flags::from_sub(s.get_x(xn), imm),
+            CmpReg { xn, xm } => s.flags = Flags::from_sub(s.get_x(xn), s.get_x(xm)),
+            B { target } => self.next_pc = Some(target),
+            BCond { cond, target } => {
+                if s.flags.cond(cond) {
+                    self.next_pc = Some(target);
+                }
+            }
+            Cbz { xn, target } => {
+                if s.get_x(xn) == 0 {
+                    self.next_pc = Some(target);
+                }
+            }
+            Cbnz { xn, target } => {
+                if s.get_x(xn) != 0 {
+                    self.next_pc = Some(target);
+                }
+            }
+            Ret | Halt => self.halted = true,
+            Nop => {}
+            FmovImm { dbl, dd, bits } => {
+                if dbl {
+                    s.set_d(dd, f64::from_bits(bits));
+                } else {
+                    s.set_s(dd, f32::from_bits(bits as u32));
+                }
+            }
+            FmovXtoD { dd, xn } => {
+                let v = s.get_x(xn);
+                s.set_d(dd, f64::from_bits(v));
+            }
+            FmovReg { dbl, dd, dn } => {
+                if dbl {
+                    let v = s.get_d(dn);
+                    s.set_d(dd, v);
+                } else {
+                    let v = s.get_s(dn);
+                    s.set_s(dd, v);
+                }
+            }
+            FmovDtoX { xd, dn } => {
+                let v = s.get_d(dn).to_bits();
+                s.set_x(xd, v);
+            }
+            FpBin { op, dbl, dd, dn, dm } => {
+                if dbl {
+                    let (a, b) = (s.get_d(dn), s.get_d(dm));
+                    s.set_d(dd, fp_bin(op, a, b));
+                } else {
+                    let (a, b) = (s.get_s(dn), s.get_s(dm));
+                    s.set_s(dd, fp_bin32(op, a, b));
+                }
+            }
+            FpUn { op, dbl, dd, dn } => {
+                if dbl {
+                    let a = s.get_d(dn);
+                    s.set_d(dd, fp_un(op, a));
+                } else {
+                    let a = s.get_s(dn);
+                    s.set_s(dd, fp_un32(op, a));
+                }
+            }
+            Fmadd { dbl, dd, dn, dm, da, sub } => {
+                if dbl {
+                    let (n, m, a) = (s.get_d(dn), s.get_d(dm), s.get_d(da));
+                    let prod = if sub { -(n * m) } else { n * m };
+                    s.set_d(dd, a + prod);
+                } else {
+                    let (n, m, a) = (s.get_s(dn), s.get_s(dm), s.get_s(da));
+                    let prod = if sub { -(n * m) } else { n * m };
+                    s.set_s(dd, a + prod);
+                }
+            }
+            Fcmp { dbl, dn, dm } => {
+                let (a, b) = if dbl {
+                    (s.get_d(dn), s.get_d(dm))
+                } else {
+                    (s.get_s(dn) as f64, s.get_s(dm) as f64)
+                };
+                s.flags = Flags::from_fcmp(a, b);
+            }
+            Scvtf { dbl, dd, xn } => {
+                let v = s.get_x(xn) as i64;
+                if dbl {
+                    s.set_d(dd, v as f64);
+                } else {
+                    s.set_s(dd, v as f32);
+                }
+            }
+            Fcvtzs { dbl, xd, dn } => {
+                let v = if dbl { s.get_d(dn) } else { s.get_s(dn) as f64 };
+                s.set_x(xd, v.trunc() as i64 as u64);
+            }
+            OpaqueCall { f, dd, dn, dm } => {
+                let a = s.get_d(dn);
+                let b = dm.map(|m| s.get_d(m));
+                let v = match f {
+                    OpaqueFn::Exp => a.exp(),
+                    OpaqueFn::Log => a.ln(),
+                    OpaqueFn::Pow => a.powf(b.expect("pow needs 2 args")),
+                    OpaqueFn::Sqrt => a.sqrt(),
+                    OpaqueFn::Sin => a.sin(),
+                };
+                s.set_d(dd, v);
+            }
+            _ => unreachable!("non-scalar inst routed to exec_scalar: {inst:?}"),
+        }
+        Ok(())
+    }
+
+    /// Effective address of a scalar memory operand.
+    #[inline]
+    fn ea(&self, base: u8, off: MemOff) -> u64 {
+        let b = self.state.get_x(base);
+        match off {
+            MemOff::Imm(i) => b.wrapping_add(i as u64),
+            MemOff::RegLsl(xm, sh) => b.wrapping_add(self.state.get_x(xm) << sh),
+        }
+    }
+}
+
+pub(crate) fn fp_bin(op: FpOp, a: f64, b: f64) -> f64 {
+    match op {
+        FpOp::Add => a + b,
+        FpOp::Sub => a - b,
+        FpOp::Mul => a * b,
+        FpOp::Div => a / b,
+        FpOp::Max => a.max(b),
+        FpOp::Min => a.min(b),
+    }
+}
+
+pub(crate) fn fp_bin32(op: FpOp, a: f32, b: f32) -> f32 {
+    match op {
+        FpOp::Add => a + b,
+        FpOp::Sub => a - b,
+        FpOp::Mul => a * b,
+        FpOp::Div => a / b,
+        FpOp::Max => a.max(b),
+        FpOp::Min => a.min(b),
+    }
+}
+
+pub(crate) fn fp_un(op: FpUnOp, a: f64) -> f64 {
+    match op {
+        FpUnOp::Sqrt => a.sqrt(),
+        FpUnOp::Neg => -a,
+        FpUnOp::Abs => a.abs(),
+        FpUnOp::Recpe => 1.0 / a,
+    }
+}
+
+pub(crate) fn fp_un32(op: FpUnOp, a: f32) -> f32 {
+    match op {
+        FpUnOp::Sqrt => a.sqrt(),
+        FpUnOp::Neg => -a,
+        FpUnOp::Abs => a.abs(),
+        FpUnOp::Recpe => 1.0 / a,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::Cond;
+    use crate::asm::Asm;
+    use crate::exec::Trap;
+    use crate::mem::Memory;
+
+    fn run_prog(build: impl FnOnce(&mut Asm)) -> Executor {
+        let mut a = Asm::new();
+        build(&mut a);
+        a.push(Inst::Halt);
+        let p = a.finish();
+        let mut ex = Executor::new(256, Memory::new());
+        ex.run(&p, 1_000_000).unwrap();
+        ex
+    }
+
+    #[test]
+    fn fig2b_scalar_daxpy() {
+        // the paper's scalar daxpy (Fig. 2b), transliterated
+        let n = 17usize;
+        let mut mem = Memory::new();
+        let x = mem.alloc(8 * n as u64, 8);
+        let y = mem.alloc(8 * n as u64, 8);
+        let a_addr = mem.alloc(8, 8);
+        let n_addr = mem.alloc(8, 8);
+        for i in 0..n {
+            mem.write_f64(x + 8 * i as u64, i as f64).unwrap();
+            mem.write_f64(y + 8 * i as u64, 100.0 + i as f64).unwrap();
+        }
+        mem.write_f64(a_addr, 3.0).unwrap();
+        mem.write_u32(n_addr, n as u32).unwrap();
+
+        let mut asm = Asm::new();
+        let a = &mut asm;
+        // x0=&x, x1=&y, x2=&a, x3=&n
+        a.push(Inst::MovImm { xd: 0, imm: x });
+        a.push(Inst::MovImm { xd: 1, imm: y });
+        a.push(Inst::MovImm { xd: 2, imm: a_addr });
+        a.push(Inst::MovImm { xd: 3, imm: n_addr });
+        a.push(Inst::Ldr { size: 4, signed: true, xt: 3, base: 3, off: MemOff::Imm(0) });
+        a.push(Inst::MovImm { xd: 4, imm: 0 });
+        a.push(Inst::LdrFp { dbl: true, vt: 0, base: 2, off: MemOff::Imm(0) });
+        a.push_branch(Inst::B { target: 0 }, "latch");
+        a.label("loop");
+        a.push(Inst::LdrFp { dbl: true, vt: 1, base: 0, off: MemOff::RegLsl(4, 3) });
+        a.push(Inst::LdrFp { dbl: true, vt: 2, base: 1, off: MemOff::RegLsl(4, 3) });
+        a.push(Inst::Fmadd { dbl: true, dd: 2, dn: 1, dm: 0, da: 2, sub: false });
+        a.push(Inst::StrFp { dbl: true, vt: 2, base: 1, off: MemOff::RegLsl(4, 3) });
+        a.push(Inst::AddImm { xd: 4, xn: 4, imm: 1 });
+        a.label("latch");
+        a.push(Inst::CmpReg { xn: 4, xm: 3 });
+        a.push_branch(Inst::BCond { cond: Cond::Lt, target: 0 }, "loop");
+        a.push(Inst::Halt);
+        let p = asm.finish();
+
+        let mut ex = Executor::new(128, mem);
+        ex.run(&p, 1_000_000).unwrap();
+        for i in 0..n {
+            let want = 3.0 * i as f64 + (100.0 + i as f64);
+            assert_eq!(ex.mem.read_f64(y + 8 * i as u64).unwrap(), want, "y[{i}]");
+        }
+    }
+
+    #[test]
+    fn arithmetic_and_logic() {
+        let ex = run_prog(|a| {
+            a.push(Inst::MovImm { xd: 1, imm: 12 });
+            a.push(Inst::MovImm { xd: 2, imm: 5 });
+            a.push(Inst::Madd { xd: 3, xn: 1, xm: 2, xa: 31 }); // 60
+            a.push(Inst::SubReg { xd: 4, xn: 3, xm: 2 }); // 55
+            a.push(Inst::Udiv { xd: 5, xn: 3, xm: 2 }); // 12
+            a.push(Inst::LogReg { op: PLogicOp::Eor, xd: 6, xn: 1, xm: 2 }); // 9
+            a.push(Inst::LslImm { xd: 7, xn: 2, sh: 3 }); // 40
+            a.push(Inst::AsrImm { xd: 8, xn: 7, sh: 2 }); // 10
+        });
+        assert_eq!(ex.state.get_x(3), 60);
+        assert_eq!(ex.state.get_x(4), 55);
+        assert_eq!(ex.state.get_x(5), 12);
+        assert_eq!(ex.state.get_x(6), 9);
+        assert_eq!(ex.state.get_x(7), 40);
+        assert_eq!(ex.state.get_x(8), 10);
+    }
+
+    #[test]
+    fn udiv_by_zero_gives_zero() {
+        let ex = run_prog(|a| {
+            a.push(Inst::MovImm { xd: 1, imm: 42 });
+            a.push(Inst::MovImm { xd: 2, imm: 0 });
+            a.push(Inst::Udiv { xd: 3, xn: 1, xm: 2 });
+        });
+        assert_eq!(ex.state.get_x(3), 0);
+    }
+
+    #[test]
+    fn signed_byte_load() {
+        let mut mem = Memory::new();
+        let buf = mem.alloc(16, 8);
+        mem.write_byte(buf, 0x80).unwrap();
+        let mut a = Asm::new();
+        a.push(Inst::MovImm { xd: 0, imm: buf });
+        a.push(Inst::Ldr { size: 1, signed: true, xt: 1, base: 0, off: MemOff::Imm(0) });
+        a.push(Inst::Ldr { size: 1, signed: false, xt: 2, base: 0, off: MemOff::Imm(0) });
+        a.push(Inst::Halt);
+        let p = a.finish();
+        let mut ex = Executor::new(128, mem);
+        ex.run(&p, 100).unwrap();
+        assert_eq!(ex.state.get_x(1) as i64, -128);
+        assert_eq!(ex.state.get_x(2), 0x80);
+    }
+
+    #[test]
+    fn scalar_fault_traps_with_pc() {
+        let mut a = Asm::new();
+        a.push(Inst::MovImm { xd: 0, imm: 0xdead_000 });
+        a.push(Inst::Ldr { size: 8, signed: false, xt: 1, base: 0, off: MemOff::Imm(0) });
+        a.push(Inst::Halt);
+        let p = a.finish();
+        let mut ex = Executor::new(128, Memory::new());
+        match ex.run(&p, 100) {
+            Err(Trap::Fault { pc, fault }) => {
+                assert_eq!(pc, 1);
+                assert_eq!(fault.addr, 0xdead_000);
+            }
+            other => panic!("expected fault, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn csel_and_flags() {
+        let ex = run_prog(|a| {
+            a.push(Inst::MovImm { xd: 1, imm: 3 });
+            a.push(Inst::MovImm { xd: 2, imm: 9 });
+            a.push(Inst::CmpReg { xn: 1, xm: 2 });
+            a.push(Inst::Csel { xd: 3, xn: 1, xm: 2, cond: Cond::Lt }); // 3 < 9 -> x1
+            a.push(Inst::Csel { xd: 4, xn: 1, xm: 2, cond: Cond::Ge }); // -> x2
+        });
+        assert_eq!(ex.state.get_x(3), 3);
+        assert_eq!(ex.state.get_x(4), 9);
+    }
+
+    #[test]
+    fn opaque_calls_compute_libm() {
+        let ex = run_prog(|a| {
+            a.push(Inst::FmovImm { dbl: true, dd: 0, bits: 2.0f64.to_bits() });
+            a.push(Inst::FmovImm { dbl: true, dd: 1, bits: 10.0f64.to_bits() });
+            a.push(Inst::OpaqueCall { f: OpaqueFn::Pow, dd: 2, dn: 0, dm: Some(1) });
+            a.push(Inst::OpaqueCall { f: OpaqueFn::Log, dd: 3, dn: 1, dm: None });
+        });
+        assert_eq!(ex.state.get_d(2), 1024.0);
+        assert!((ex.state.get_d(3) - 10.0f64.ln()).abs() < 1e-15);
+    }
+
+    #[test]
+    fn fp32_path() {
+        let ex = run_prog(|a| {
+            a.push(Inst::FmovImm { dbl: false, dd: 0, bits: 1.5f32.to_bits() as u64 });
+            a.push(Inst::FmovImm { dbl: false, dd: 1, bits: 2.0f32.to_bits() as u64 });
+            a.push(Inst::FpBin { op: FpOp::Mul, dbl: false, dd: 2, dn: 0, dm: 1 });
+            a.push(Inst::FpUn { op: FpUnOp::Sqrt, dbl: false, dd: 3, dn: 1 });
+        });
+        assert_eq!(ex.state.get_s(2), 3.0);
+        assert_eq!(ex.state.get_s(3), 2.0f32.sqrt());
+    }
+}

@@ -1,0 +1,1418 @@
+//! SVE semantics: predication, while-loops, first-faulting loads, vector
+//! partitioning, gather/scatter, horizontal reductions, permutes — every
+//! mechanism of §2.
+
+use super::Executor;
+use crate::arch::{Esize, Flags, PredReg};
+use crate::exec::neon::{fcmp, icmp_signed, icmp_unsigned, int_bin};
+use crate::exec::scalar::{fp_bin, fp_bin32, fp_un, fp_un32};
+use crate::isa::{GatherAddr, Inst, PLogicOp, RedOp, RegOrImm, SveMemOff, ZmOrImm};
+use crate::mem::MemFault;
+
+impl Executor {
+    pub(crate) fn exec_sve(&mut self, inst: &Inst) -> Result<(), MemFault> {
+        use Inst::*;
+        let vlb = self.state.vl_bytes();
+        match *inst {
+            // ====================== predicates ======================
+            Ptrue { pd, esize, s } => {
+                let mut p = PredReg::default();
+                p.set_all(esize, vlb);
+                self.state.p[pd as usize] = p;
+                if s {
+                    let mut all = PredReg::default();
+                    all.set_all(esize, vlb);
+                    self.state.flags = Flags::from_pred_result(&all, &p, esize, vlb);
+                }
+            }
+            Pfalse { pd } => self.state.p[pd as usize].clear(),
+            While { pd, esize, xn, xm, unsigned } => {
+                // §2.3.2 — the governing predicate a sequential loop
+                // would compute, with wrap-around handled like the
+                // original sequential code.
+                let lanes = esize.lanes(vlb);
+                let mut p = PredReg::default();
+                let (a, b) = (self.state.get_x(xn), self.state.get_x(xm));
+                for i in 0..lanes {
+                    let active = if unsigned {
+                        a.wrapping_add(i as u64) >= a // no wrap so far
+                            && a.wrapping_add(i as u64) < b
+                    } else {
+                        let ai = (a as i64).wrapping_add(i as i64);
+                        ai >= a as i64 && ai < b as i64
+                    };
+                    p.set_active(esize, i, active);
+                }
+                // whilelt produces a "prefix" predicate by construction
+                self.state.p[pd as usize] = p;
+                let mut all = PredReg::default();
+                all.set_all(esize, vlb);
+                self.state.flags = Flags::from_pred_result(&all, &p, esize, vlb);
+            }
+            Ptest { pg, pn } => {
+                let g = self.state.p[pg as usize];
+                let n = self.state.p[pn as usize];
+                // PTEST interprets at .b granularity
+                self.state.flags = Flags::from_pred_result(&g, &n.and(&g), Esize::B, vlb);
+            }
+            Pnext { pdn, pg, esize } => {
+                // §2.3.5 — next active element of pg after pdn's last.
+                let g = self.state.p[pg as usize];
+                let cur = self.state.p[pdn as usize];
+                let start = match cur.last_active(esize, vlb) {
+                    Some(i) => i + 1,
+                    None => 0,
+                };
+                let mut r = PredReg::default();
+                for i in start..esize.lanes(vlb) {
+                    if g.active(esize, i) {
+                        r.set_active(esize, i, true);
+                        break;
+                    }
+                }
+                self.state.p[pdn as usize] = r;
+                self.state.flags = Flags::from_pred_result(&g, &r, esize, vlb);
+            }
+            Brk { pd, pg, pn, before, s } => {
+                // §2.3.4 — vector partitioning: the before-break (brkb)
+                // or up-to-and-including-break (brka) partition. B-granule.
+                let g = self.state.p[pg as usize];
+                let n = self.state.p[pn as usize];
+                let lanes = vlb; // .b lanes
+                let brk = (0..lanes).find(|&i| g.active(Esize::B, i) && n.active(Esize::B, i));
+                let mut r = PredReg::default();
+                for i in 0..lanes {
+                    let keep = match brk {
+                        None => true,
+                        Some(k) => {
+                            if before {
+                                i < k
+                            } else {
+                                i <= k
+                            }
+                        }
+                    };
+                    // zeroing form: result only within pg
+                    r.set_active(Esize::B, i, keep && g.active(Esize::B, i));
+                }
+                self.state.p[pd as usize] = r;
+                if s {
+                    self.state.flags = Flags::from_pred_result(&g, &r, Esize::B, vlb);
+                }
+            }
+            PredLogic { op, pd, pg, pn, pm, s } => {
+                let g = self.state.p[pg as usize];
+                let n = self.state.p[pn as usize];
+                let m = self.state.p[pm as usize];
+                let mut r = PredReg::default();
+                for i in 0..vlb {
+                    let (a, b) = (n.active(Esize::B, i), m.active(Esize::B, i));
+                    let v = match op {
+                        PLogicOp::And => a && b,
+                        PLogicOp::Orr => a || b,
+                        PLogicOp::Eor => a != b,
+                        PLogicOp::Bic => a && !b,
+                    };
+                    r.set_active(Esize::B, i, v && g.active(Esize::B, i));
+                }
+                self.state.p[pd as usize] = r;
+                if s {
+                    self.state.flags = Flags::from_pred_result(&g, &r, Esize::B, vlb);
+                }
+            }
+            Rdffr { pd, pg, s } => {
+                let f = self.state.ffr;
+                let r = match pg {
+                    Some(g) => f.and(&self.state.p[g as usize]),
+                    None => f,
+                };
+                self.state.p[pd as usize] = r;
+                if s {
+                    let g = match pg {
+                        Some(g) => self.state.p[g as usize],
+                        None => {
+                            let mut all = PredReg::default();
+                            all.set_all(Esize::B, vlb);
+                            all
+                        }
+                    };
+                    self.state.flags = Flags::from_pred_result(&g, &r, Esize::B, vlb);
+                }
+            }
+            Setffr => {
+                let mut f = PredReg::default();
+                f.set_all(Esize::B, vlb);
+                self.state.ffr = f;
+            }
+            Wrffr { pn } => self.state.ffr = self.state.p[pn as usize],
+
+            // ====================== counting ======================
+            Cnt { xd, esize } => {
+                self.state.set_x(xd, esize.lanes(vlb) as u64);
+            }
+            IncDec { xdn, esize, dec } => {
+                let d = esize.lanes(vlb) as u64;
+                let v = self.state.get_x(xdn);
+                self.state.set_x(xdn, if dec { v.wrapping_sub(d) } else { v.wrapping_add(d) });
+            }
+            IncpX { xdn, pm, esize } => {
+                let c = self.state.p[pm as usize].count_active(esize, vlb) as u64;
+                let v = self.state.get_x(xdn).wrapping_add(c);
+                self.state.set_x(xdn, v);
+            }
+            Index { zd, esize, base, step } => {
+                let b = self.ri(base);
+                let st = self.ri(step);
+                let z = &mut self.state.z[zd as usize];
+                for i in 0..esize.lanes(vlb) {
+                    z.set(esize, i, (b.wrapping_add(st.wrapping_mul(i as i64))) as u64);
+                }
+            }
+
+            // ====================== data movement ======================
+            DupImm { zd, esize, imm } => {
+                let z = &mut self.state.z[zd as usize];
+                z.zero();
+                for i in 0..esize.lanes(vlb) {
+                    z.set(esize, i, imm as u64);
+                }
+            }
+            FdupImm { zd, dbl, bits } => {
+                let z = &mut self.state.z[zd as usize];
+                z.zero();
+                let e = if dbl { Esize::D } else { Esize::S };
+                for i in 0..e.lanes(vlb) {
+                    z.set(e, i, bits);
+                }
+            }
+            DupX { zd, esize, xn } => {
+                let v = self.state.get_x(xn);
+                let z = &mut self.state.z[zd as usize];
+                z.zero();
+                for i in 0..esize.lanes(vlb) {
+                    z.set(esize, i, v);
+                }
+            }
+            CpyX { zd, pg, xn, esize } => {
+                let v = self.state.get_x(xn);
+                let g = self.state.p[pg as usize];
+                let z = &mut self.state.z[zd as usize];
+                for i in 0..esize.lanes(vlb) {
+                    if g.active(esize, i) {
+                        z.set(esize, i, v);
+                    }
+                }
+            }
+            Sel { zd, pg, zn, zm, esize } => {
+                let g = self.state.p[pg as usize];
+                let (n, m) = (self.state.z[zn as usize], self.state.z[zm as usize]);
+                let z = &mut self.state.z[zd as usize];
+                for i in 0..esize.lanes(vlb) {
+                    let v = if g.active(esize, i) { n.get(esize, i) } else { m.get(esize, i) };
+                    z.set(esize, i, v);
+                }
+            }
+            Movprfx { zd, zn, pg } => {
+                let n = self.state.z[zn as usize];
+                match pg {
+                    None => self.state.z[zd as usize] = n,
+                    Some((g, zeroing)) => {
+                        let gp = self.state.p[g as usize];
+                        let z = &mut self.state.z[zd as usize];
+                        // byte-granule merging/zeroing copy
+                        for i in 0..vlb {
+                            if gp.active(Esize::B, i) {
+                                z.bytes[i] = n.bytes[i];
+                            } else if zeroing {
+                                z.bytes[i] = 0;
+                            }
+                        }
+                    }
+                }
+            }
+            Last { xd, pg, zn, esize, before } => {
+                let g = self.state.p[pg as usize];
+                let z = self.state.z[zn as usize];
+                let lanes = esize.lanes(vlb);
+                let idx = match (g.last_active(esize, vlb), before) {
+                    (Some(l), true) => l,                 // lastb
+                    (Some(l), false) => (l + 1) % lanes,  // lasta
+                    (None, true) => lanes - 1,
+                    (None, false) => 0,
+                };
+                self.state.set_x(xd, z.get(esize, idx));
+            }
+
+            // ====================== memory ======================
+            SveLd1 { zt, pg, esize, base, off, ff } => {
+                self.sve_ld1(zt, pg, esize, base, off, ff)?;
+            }
+            SveLd1R { zt, pg, esize, base, imm } => {
+                let addr = self.state.get_x(base).wrapping_add(imm as u64);
+                let g = self.state.p[pg as usize];
+                // load-and-broadcast (§4): one element load
+                let v = self.mem.read(addr, esize.bytes())?;
+                self.record_load(addr, esize.bytes() as u32);
+                let z = &mut self.state.z[zt as usize];
+                z.zero();
+                for i in 0..esize.lanes(vlb) {
+                    if g.active(esize, i) {
+                        z.set(esize, i, v);
+                    }
+                }
+            }
+            SveSt1 { zt, pg, esize, base, off } => {
+                let ebytes = esize.bytes();
+                let baddr = self.sve_contig_base(base, off, ebytes, vlb);
+                let g = self.state.p[pg as usize];
+                let z = self.state.z[zt as usize];
+                let mut span: Option<(u64, u64)> = None;
+                for i in 0..esize.lanes(vlb) {
+                    if g.active(esize, i) {
+                        let addr = baddr + (i * ebytes) as u64;
+                        self.mem.write(addr, ebytes, z.get(esize, i))?;
+                        span = Some(match span {
+                            None => (addr, addr + ebytes as u64),
+                            Some((lo, hi)) => (lo.min(addr), hi.max(addr + ebytes as u64)),
+                        });
+                    }
+                }
+                if let Some((lo, hi)) = span {
+                    self.record_store(lo, (hi - lo) as u32);
+                }
+            }
+            SveLdGather { zt, pg, esize, addr, ff } => {
+                self.sve_gather(zt, pg, esize, addr, ff)?;
+            }
+            SveStScatter { zt, pg, esize, addr } => {
+                let g = self.state.p[pg as usize];
+                let z = self.state.z[zt as usize];
+                let ebytes = esize.bytes();
+                for i in 0..esize.lanes(vlb) {
+                    if g.active(esize, i) {
+                        let a = self.gather_ea(addr, esize, i);
+                        self.mem.write(a, ebytes, z.get(esize, i))?;
+                        self.record_store(a, ebytes as u32);
+                    }
+                }
+            }
+
+            // ====================== arithmetic ======================
+            SveIntBin { op, zdn, pg, zm, esize } => {
+                let g = self.state.p[pg as usize];
+                let m = self.state.z[zm as usize];
+                let z = &mut self.state.z[zdn as usize];
+                for i in 0..esize.lanes(vlb) {
+                    if g.active(esize, i) {
+                        let v = int_bin(op, esize, z.get(esize, i), m.get(esize, i));
+                        z.set(esize, i, v);
+                    }
+                }
+            }
+            SveIntBinU { op, zd, zn, zm, esize } => {
+                let (n, m) = (self.state.z[zn as usize], self.state.z[zm as usize]);
+                let z = &mut self.state.z[zd as usize];
+                for i in 0..esize.lanes(vlb) {
+                    z.set(esize, i, int_bin(op, esize, n.get(esize, i), m.get(esize, i)));
+                }
+            }
+            SveAddImm { zdn, esize, imm } => {
+                let z = &mut self.state.z[zdn as usize];
+                for i in 0..esize.lanes(vlb) {
+                    z.set(esize, i, z.get(esize, i).wrapping_add(imm));
+                }
+            }
+            SveFpBin { op, zdn, pg, zm, dbl } => {
+                let g = self.state.p[pg as usize];
+                let m = self.state.z[zm as usize];
+                let z = &mut self.state.z[zdn as usize];
+                if dbl {
+                    for i in 0..Esize::D.lanes(vlb) {
+                        if g.active(Esize::D, i) {
+                            z.set_f64(i, fp_bin(op, z.get_f64(i), m.get_f64(i)));
+                        }
+                    }
+                } else {
+                    for i in 0..Esize::S.lanes(vlb) {
+                        if g.active(Esize::S, i) {
+                            z.set_f32(i, fp_bin32(op, z.get_f32(i), m.get_f32(i)));
+                        }
+                    }
+                }
+            }
+            SveFpUn { op, zd, pg, zn, dbl } => {
+                let g = self.state.p[pg as usize];
+                let n = self.state.z[zn as usize];
+                let z = &mut self.state.z[zd as usize];
+                if dbl {
+                    for i in 0..Esize::D.lanes(vlb) {
+                        if g.active(Esize::D, i) {
+                            z.set_f64(i, fp_un(op, n.get_f64(i)));
+                        }
+                    }
+                } else {
+                    for i in 0..Esize::S.lanes(vlb) {
+                        if g.active(Esize::S, i) {
+                            z.set_f32(i, fp_un32(op, n.get_f32(i)));
+                        }
+                    }
+                }
+            }
+            SveFmla { zda, pg, zn, zm, dbl, sub } => {
+                let g = self.state.p[pg as usize];
+                let (n, m) = (self.state.z[zn as usize], self.state.z[zm as usize]);
+                let z = &mut self.state.z[zda as usize];
+                if dbl {
+                    for i in 0..Esize::D.lanes(vlb) {
+                        if g.active(Esize::D, i) {
+                            let p = n.get_f64(i) * m.get_f64(i);
+                            let p = if sub { -p } else { p };
+                            z.set_f64(i, z.get_f64(i) + p);
+                        }
+                    }
+                } else {
+                    for i in 0..Esize::S.lanes(vlb) {
+                        if g.active(Esize::S, i) {
+                            let p = n.get_f32(i) * m.get_f32(i);
+                            let p = if sub { -p } else { p };
+                            z.set_f32(i, z.get_f32(i) + p);
+                        }
+                    }
+                }
+            }
+            SveScvtf { zd, pg, zn, dbl } => {
+                let g = self.state.p[pg as usize];
+                let n = self.state.z[zn as usize];
+                let z = &mut self.state.z[zd as usize];
+                if dbl {
+                    for i in 0..Esize::D.lanes(vlb) {
+                        if g.active(Esize::D, i) {
+                            z.set_f64(i, n.get_signed(Esize::D, i) as f64);
+                        }
+                    }
+                } else {
+                    for i in 0..Esize::S.lanes(vlb) {
+                        if g.active(Esize::S, i) {
+                            z.set_f32(i, n.get_signed(Esize::S, i) as f32);
+                        }
+                    }
+                }
+            }
+
+            // ====================== compares ======================
+            SveIntCmp { op, unsigned, pd, pg, zn, rhs, esize } => {
+                let g = self.state.p[pg as usize];
+                let n = self.state.z[zn as usize];
+                let mut r = PredReg::default();
+                for i in 0..esize.lanes(vlb) {
+                    if g.active(esize, i) {
+                        let t = match rhs {
+                            ZmOrImm::Z(zm) => {
+                                let m = self.state.z[zm as usize];
+                                if unsigned {
+                                    icmp_unsigned(op, n.get(esize, i), m.get(esize, i))
+                                } else {
+                                    icmp_signed(op, n.get_signed(esize, i), m.get_signed(esize, i))
+                                }
+                            }
+                            ZmOrImm::Imm(imm) => {
+                                if unsigned {
+                                    icmp_unsigned(op, n.get(esize, i), imm as u64)
+                                } else {
+                                    icmp_signed(op, n.get_signed(esize, i), imm)
+                                }
+                            }
+                        };
+                        r.set_active(esize, i, t);
+                    }
+                }
+                self.state.p[pd as usize] = r;
+                self.state.flags = Flags::from_pred_result(&g, &r, esize, vlb);
+            }
+            SveFpCmp { op, pd, pg, zn, rhs, dbl } => {
+                let g = self.state.p[pg as usize];
+                let n = self.state.z[zn as usize];
+                let e = if dbl { Esize::D } else { Esize::S };
+                let mut r = PredReg::default();
+                for i in 0..e.lanes(vlb) {
+                    if g.active(e, i) {
+                        let a = if dbl { n.get_f64(i) } else { n.get_f32(i) as f64 };
+                        let b = match rhs {
+                            Some(zm) => {
+                                let m = self.state.z[zm as usize];
+                                if dbl {
+                                    m.get_f64(i)
+                                } else {
+                                    m.get_f32(i) as f64
+                                }
+                            }
+                            None => 0.0,
+                        };
+                        r.set_active(e, i, fcmp(op, a, b));
+                    }
+                }
+                self.state.p[pd as usize] = r;
+                self.state.flags = Flags::from_pred_result(&g, &r, e, vlb);
+            }
+
+            // ====================== horizontal (§2.4) ======================
+            SveReduce { op, vd, pg, zn, esize } => {
+                let g = self.state.p[pg as usize];
+                let n = self.state.z[zn as usize];
+                let lanes = esize.lanes(vlb);
+                match op {
+                    RedOp::FAddV | RedOp::FMaxV | RedOp::FMinV => {
+                        // recursive pairwise tree over the full vector with
+                        // identity at inactive lanes
+                        let dbl = esize == Esize::D;
+                        let ident = match op {
+                            RedOp::FAddV => 0.0f64,
+                            RedOp::FMaxV => f64::NEG_INFINITY,
+                            RedOp::FMinV => f64::INFINITY,
+                            _ => unreachable!(),
+                        };
+                        let mut buf: Vec<f64> = (0..lanes)
+                            .map(|i| {
+                                if g.active(esize, i) {
+                                    if dbl {
+                                        n.get_f64(i)
+                                    } else {
+                                        n.get_f32(i) as f64
+                                    }
+                                } else {
+                                    ident
+                                }
+                            })
+                            .collect();
+                        let mut width = lanes;
+                        while width > 1 {
+                            let half = width / 2;
+                            for i in 0..half {
+                                buf[i] = match op {
+                                    RedOp::FAddV => buf[i] + buf[i + half],
+                                    RedOp::FMaxV => buf[i].max(buf[i + half]),
+                                    RedOp::FMinV => buf[i].min(buf[i + half]),
+                                    _ => unreachable!(),
+                                };
+                            }
+                            width = half;
+                        }
+                        if dbl {
+                            self.state.set_d(vd, buf[0]);
+                        } else {
+                            self.state.set_s(vd, buf[0] as f32);
+                        }
+                    }
+                    RedOp::EorV | RedOp::OrV | RedOp::AndV | RedOp::UAddV | RedOp::SMaxV => {
+                        let mut acc: u64 = match op {
+                            RedOp::EorV | RedOp::OrV | RedOp::UAddV => 0,
+                            RedOp::AndV => u64::MAX,
+                            RedOp::SMaxV => i64::MIN as u64,
+                            _ => unreachable!(),
+                        };
+                        for i in 0..lanes {
+                            if g.active(esize, i) {
+                                let v = n.get(esize, i);
+                                acc = match op {
+                                    RedOp::EorV => acc ^ v,
+                                    RedOp::OrV => acc | v,
+                                    RedOp::AndV => acc & v,
+                                    RedOp::UAddV => acc.wrapping_add(v),
+                                    RedOp::SMaxV => {
+                                        (acc as i64).max(n.get_signed(esize, i)) as u64
+                                    }
+                                    _ => unreachable!(),
+                                };
+                            }
+                        }
+                        let z = &mut self.state.z[vd as usize];
+                        z.zero();
+                        z.set(Esize::D, 0, acc);
+                    }
+                }
+            }
+            SveFadda { vdn, pg, zm, dbl } => {
+                // strictly-ordered accumulation (§3.3): scalar dest,
+                // element order = implicit predicate order
+                let g = self.state.p[pg as usize];
+                let m = self.state.z[zm as usize];
+                if dbl {
+                    let mut acc = self.state.get_d(vdn);
+                    for i in 0..Esize::D.lanes(vlb) {
+                        if g.active(Esize::D, i) {
+                            acc += m.get_f64(i);
+                        }
+                    }
+                    self.state.set_d(vdn, acc);
+                } else {
+                    let mut acc = self.state.get_s(vdn);
+                    for i in 0..Esize::S.lanes(vlb) {
+                        if g.active(Esize::S, i) {
+                            acc += m.get_f32(i);
+                        }
+                    }
+                    self.state.set_s(vdn, acc);
+                }
+            }
+
+            // ====================== permutes ======================
+            SveRev { zd, zn, esize } => {
+                let n = self.state.z[zn as usize];
+                let lanes = esize.lanes(vlb);
+                let z = &mut self.state.z[zd as usize];
+                for i in 0..lanes {
+                    z.set(esize, i, n.get(esize, lanes - 1 - i));
+                }
+            }
+            SveExt { zdn, zm, imm } => {
+                let a = self.state.z[zdn as usize];
+                let b = self.state.z[zm as usize];
+                let z = &mut self.state.z[zdn as usize];
+                for i in 0..vlb {
+                    let src = i + imm as usize;
+                    z.bytes[i] = if src < vlb { a.bytes[src] } else { b.bytes[src - vlb] };
+                }
+            }
+            SveZip { zd, zn, zm, esize, hi } => {
+                let (n, m) = (self.state.z[zn as usize], self.state.z[zm as usize]);
+                let lanes = esize.lanes(vlb);
+                let half = lanes / 2;
+                let base = if hi { half } else { 0 };
+                let z = &mut self.state.z[zd as usize];
+                for i in 0..half {
+                    z.set(esize, 2 * i, n.get(esize, base + i));
+                    z.set(esize, 2 * i + 1, m.get(esize, base + i));
+                }
+            }
+            SveUzp { zd, zn, zm, esize, odd } => {
+                let (n, m) = (self.state.z[zn as usize], self.state.z[zm as usize]);
+                let lanes = esize.lanes(vlb);
+                let half = lanes / 2;
+                let off = odd as usize;
+                let z = &mut self.state.z[zd as usize];
+                for i in 0..half {
+                    z.set(esize, i, n.get(esize, 2 * i + off));
+                    z.set(esize, half + i, m.get(esize, 2 * i + off));
+                }
+            }
+            SveTrn { zd, zn, zm, esize, odd } => {
+                let (n, m) = (self.state.z[zn as usize], self.state.z[zm as usize]);
+                let lanes = esize.lanes(vlb);
+                let off = odd as usize;
+                let z = &mut self.state.z[zd as usize];
+                for i in 0..lanes / 2 {
+                    z.set(esize, 2 * i, n.get(esize, 2 * i + off));
+                    z.set(esize, 2 * i + 1, m.get(esize, 2 * i + off));
+                }
+            }
+            SveTbl { zd, zn, zm, esize } => {
+                let (n, m) = (self.state.z[zn as usize], self.state.z[zm as usize]);
+                let lanes = esize.lanes(vlb);
+                let z = &mut self.state.z[zd as usize];
+                for i in 0..lanes {
+                    let idx = m.get(esize, i) as usize;
+                    z.set(esize, i, if idx < lanes { n.get(esize, idx) } else { 0 });
+                }
+            }
+            SveCompact { zd, pg, zn, esize } => {
+                let g = self.state.p[pg as usize];
+                let n = self.state.z[zn as usize];
+                let lanes = esize.lanes(vlb);
+                let z = &mut self.state.z[zd as usize];
+                let mut k = 0;
+                let vals: Vec<u64> = (0..lanes)
+                    .filter(|&i| g.active(esize, i))
+                    .map(|i| n.get(esize, i))
+                    .collect();
+                for i in 0..lanes {
+                    z.set(esize, i, 0);
+                }
+                for v in vals {
+                    z.set(esize, k, v);
+                    k += 1;
+                }
+            }
+            SveSplice { zdn, pg, zm, esize } => {
+                let g = self.state.p[pg as usize];
+                let a = self.state.z[zdn as usize];
+                let b = self.state.z[zm as usize];
+                let lanes = esize.lanes(vlb);
+                let z = &mut self.state.z[zdn as usize];
+                let mut out: Vec<u64> = vec![];
+                if let (Some(f), Some(l)) =
+                    (g.first_active(esize, vlb), g.last_active(esize, vlb))
+                {
+                    for i in f..=l {
+                        out.push(a.get(esize, i));
+                    }
+                }
+                let mut bi = 0;
+                while out.len() < lanes {
+                    out.push(b.get(esize, bi));
+                    bi += 1;
+                }
+                for (i, v) in out.into_iter().enumerate() {
+                    z.set(esize, i, v);
+                }
+            }
+
+            // ====================== termination ======================
+            Cterm { xn, xm, ne } => {
+                // CTERMEQ/CTERMNE (§2.3.5): if the termination condition
+                // holds, N=1 V=0 (b.tcont fails); otherwise N=0 and
+                // V = !C, so b.tcont (GE) continues iff C was set (the
+                // preceding pnext's "not last" state).
+                let term = if ne {
+                    self.state.get_x(xn) != self.state.get_x(xm)
+                } else {
+                    self.state.get_x(xn) == self.state.get_x(xm)
+                };
+                let c = self.state.flags.c;
+                self.state.flags = if term {
+                    Flags { n: true, z: false, c, v: false }
+                } else {
+                    Flags { n: false, z: false, c, v: !c }
+                };
+            }
+            _ => unreachable!("non-SVE inst routed to exec_sve: {inst:?}"),
+        }
+        Ok(())
+    }
+
+    fn ri(&self, v: RegOrImm) -> i64 {
+        match v {
+            RegOrImm::Reg(r) => self.state.get_x(r) as i64,
+            RegOrImm::Imm(i) => i,
+        }
+    }
+
+    /// Base address of a contiguous SVE access.
+    fn sve_contig_base(&self, base: u8, off: SveMemOff, ebytes: usize, vlb: usize) -> u64 {
+        let b = self.state.get_x(base);
+        match off {
+            SveMemOff::ImmVl(imm) => b.wrapping_add((imm * vlb as i64) as u64),
+            SveMemOff::RegScaled(xm) => {
+                b.wrapping_add(self.state.get_x(xm).wrapping_mul(ebytes as u64))
+            }
+        }
+    }
+
+    /// Contiguous (optionally first-faulting) predicated load.
+    fn sve_ld1(
+        &mut self,
+        zt: u8,
+        pg: u8,
+        esize: Esize,
+        base: u8,
+        off: SveMemOff,
+        ff: bool,
+    ) -> Result<(), MemFault> {
+        let vlb = self.state.vl_bytes();
+        let ebytes = esize.bytes();
+        let baddr = self.sve_contig_base(base, off, ebytes, vlb);
+        let g = self.state.p[pg as usize];
+        let lanes = esize.lanes(vlb);
+        let mut vals = std::mem::take(&mut self.lane_scratch);
+        vals[..lanes].fill(0);
+        let mut span: Option<(u64, u64)> = None;
+        let mut fault_lane: Option<usize> = None;
+        let first_active = g.first_active(esize, vlb);
+        for i in 0..lanes {
+            if !g.active(esize, i) {
+                continue; // zeroing predication
+            }
+            let addr = baddr + (i * ebytes) as u64;
+            match self.mem.read(addr, ebytes) {
+                Ok(v) => {
+                    vals[i] = v;
+                    span = Some(match span {
+                        None => (addr, addr + ebytes as u64),
+                        Some((lo, hi)) => (lo.min(addr), hi.max(addr + ebytes as u64)),
+                    });
+                }
+                Err(fault) => {
+                    if !ff || Some(i) == first_active {
+                        // non-ff loads, or a fault on the FIRST active
+                        // element, trap for real (§2.3.3)
+                        self.lane_scratch = vals;
+                        return Err(fault);
+                    }
+                    fault_lane = Some(i);
+                    break;
+                }
+            }
+        }
+        if let Some(fl) = fault_lane {
+            // clear FFR from the faulting element onward
+            for i in fl..lanes {
+                self.state.ffr.set_active(esize, i, false);
+            }
+        }
+        if let Some((lo, hi)) = span {
+            self.record_load(lo, (hi - lo) as u32);
+        }
+        let z = &mut self.state.z[zt as usize];
+        z.zero();
+        for (i, &v) in vals[..lanes].iter().enumerate() {
+            z.set(esize, i, v);
+        }
+        self.lane_scratch = vals;
+        Ok(())
+    }
+
+    /// Element address of a gather/scatter lane.
+    fn gather_ea(&self, addr: GatherAddr, esize: Esize, lane: usize) -> u64 {
+        match addr {
+            GatherAddr::VecImm(zn, imm) => {
+                self.state.z[zn as usize].get(Esize::D, lane).wrapping_add(imm as u64)
+            }
+            GatherAddr::BaseVec { xn, zm, scaled } => {
+                let idx = self.state.z[zm as usize].get(esize, lane);
+                let idx = if scaled { idx.wrapping_mul(esize.bytes() as u64) } else { idx };
+                self.state.get_x(xn).wrapping_add(idx)
+            }
+        }
+    }
+
+    /// Gather load (optionally first-faulting).
+    fn sve_gather(
+        &mut self,
+        zt: u8,
+        pg: u8,
+        esize: Esize,
+        addr: GatherAddr,
+        ff: bool,
+    ) -> Result<(), MemFault> {
+        let vlb = self.state.vl_bytes();
+        let ebytes = esize.bytes();
+        let g = self.state.p[pg as usize];
+        let lanes = esize.lanes(vlb);
+        let first_active = g.first_active(esize, vlb);
+        let mut vals = std::mem::take(&mut self.lane_scratch);
+        vals[..lanes].fill(0);
+        let mut fault_lane: Option<usize> = None;
+        for i in 0..lanes {
+            if !g.active(esize, i) {
+                continue;
+            }
+            let a = self.gather_ea(addr, esize, i);
+            match self.mem.read(a, ebytes) {
+                Ok(v) => {
+                    vals[i] = v;
+                    self.record_load(a, ebytes as u32);
+                }
+                Err(fault) => {
+                    if !ff || Some(i) == first_active {
+                        self.lane_scratch = vals;
+                        return Err(fault);
+                    }
+                    fault_lane = Some(i);
+                    break;
+                }
+            }
+        }
+        if let Some(fl) = fault_lane {
+            for i in fl..lanes {
+                self.state.ffr.set_active(esize, i, false);
+            }
+        }
+        let z = &mut self.state.z[zt as usize];
+        z.zero();
+        for (i, &v) in vals[..lanes].iter().enumerate() {
+            z.set(esize, i, v);
+        }
+        self.lane_scratch = vals;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::Cond;
+    use crate::isa::{CmpOp, FpOp};
+    use crate::asm::Asm;
+    use crate::exec::Trap;
+    use crate::mem::{Memory, PAGE_SIZE};
+
+    fn exec_with(vl: usize, mem: Memory, build: impl FnOnce(&mut Asm)) -> Executor {
+        let mut a = Asm::new();
+        build(&mut a);
+        a.push(Inst::Halt);
+        let p = a.finish();
+        let mut ex = Executor::new(vl, mem);
+        ex.run(&p, 10_000_000).unwrap();
+        ex
+    }
+
+    // ============ Fig. 2c: the paper's SVE daxpy, verbatim ============
+    fn sve_daxpy_prog(x: u64, y: u64, a_addr: u64, n_addr: u64) -> crate::asm::Program {
+        let mut asm = Asm::new();
+        let a = &mut asm;
+        a.push(Inst::MovImm { xd: 0, imm: x });
+        a.push(Inst::MovImm { xd: 1, imm: y });
+        a.push(Inst::MovImm { xd: 2, imm: a_addr });
+        a.push(Inst::MovImm { xd: 3, imm: n_addr });
+        // ldrsw x3, [x3]
+        a.push(Inst::Ldr { size: 4, signed: true, xt: 3, base: 3, off: crate::isa::MemOff::Imm(0) });
+        // mov x4, #0
+        a.push(Inst::MovImm { xd: 4, imm: 0 });
+        // whilelt p0.d, x4, x3
+        a.push(Inst::While { pd: 0, esize: Esize::D, xn: 4, xm: 3, unsigned: false });
+        // ld1rd z0.d, p0/z, [x2]
+        a.push(Inst::SveLd1R { zt: 0, pg: 0, esize: Esize::D, base: 2, imm: 0 });
+        a.label("loop");
+        // ld1d z1.d, p0/z, [x0, x4, lsl #3]
+        a.push(Inst::SveLd1 {
+            zt: 1,
+            pg: 0,
+            esize: Esize::D,
+            base: 0,
+            off: SveMemOff::RegScaled(4),
+            ff: false,
+        });
+        a.push(Inst::SveLd1 {
+            zt: 2,
+            pg: 0,
+            esize: Esize::D,
+            base: 1,
+            off: SveMemOff::RegScaled(4),
+            ff: false,
+        });
+        // fmla z2.d, p0/m, z1.d, z0.d
+        a.push(Inst::SveFmla { zda: 2, pg: 0, zn: 1, zm: 0, dbl: true, sub: false });
+        // st1d z2.d, p0, [x1, x4, lsl #3]
+        a.push(Inst::SveSt1 {
+            zt: 2,
+            pg: 0,
+            esize: Esize::D,
+            base: 1,
+            off: SveMemOff::RegScaled(4),
+        });
+        // incd x4
+        a.push(Inst::IncDec { xdn: 4, esize: Esize::D, dec: false });
+        // whilelt p0.d, x4, x3
+        a.push(Inst::While { pd: 0, esize: Esize::D, xn: 4, xm: 3, unsigned: false });
+        // b.first loop
+        a.push_branch(Inst::BCond { cond: Cond::FIRST, target: 0 }, "loop");
+        a.push(Inst::Halt);
+        asm.finish()
+    }
+
+    fn daxpy_at_vl(vl: usize, n: usize) {
+        let mut mem = Memory::new();
+        let x = mem.alloc(8 * n.max(1) as u64, 16);
+        let y = mem.alloc(8 * n.max(1) as u64, 16);
+        let a_addr = mem.alloc(8, 8);
+        let n_addr = mem.alloc(8, 8);
+        for i in 0..n {
+            mem.write_f64(x + 8 * i as u64, 0.5 * i as f64).unwrap();
+            mem.write_f64(y + 8 * i as u64, 100.0 - i as f64).unwrap();
+        }
+        mem.write_f64(a_addr, 2.5).unwrap();
+        mem.write_u32(n_addr, n as u32).unwrap();
+        let p = sve_daxpy_prog(x, y, a_addr, n_addr);
+        let mut ex = Executor::new(vl, mem);
+        ex.run(&p, 10_000_000).unwrap();
+        for i in 0..n {
+            let want = 2.5 * (0.5 * i as f64) + (100.0 - i as f64);
+            assert_eq!(ex.mem.read_f64(y + 8 * i as u64).unwrap(), want, "vl={vl} y[{i}]");
+        }
+    }
+
+    #[test]
+    fn fig2c_daxpy_all_vector_lengths_vla() {
+        // §2.2 — the same binary must run correctly at every legal VL
+        for vl in [128, 256, 384, 512, 1024, 2048] {
+            daxpy_at_vl(vl, 100);
+        }
+    }
+
+    #[test]
+    fn fig2c_daxpy_awkward_trip_counts() {
+        for n in [0, 1, 3, 31, 32, 33] {
+            daxpy_at_vl(256, n);
+        }
+    }
+
+    #[test]
+    fn whilelt_prefix_and_flags() {
+        // VL=256 -> 4 .d lanes
+        let ex = exec_with(256, Memory::new(), |a| {
+            a.push(Inst::MovImm { xd: 0, imm: 0 });
+            a.push(Inst::MovImm { xd: 1, imm: 3 });
+            a.push(Inst::While { pd: 0, esize: Esize::D, xn: 0, xm: 1, unsigned: false });
+        });
+        let p = ex.state.p[0];
+        assert!(p.active(Esize::D, 0) && p.active(Esize::D, 1) && p.active(Esize::D, 2));
+        assert!(!p.active(Esize::D, 3));
+        // partial: First=1 (N), any active (Z=0), last inactive (C=1)
+        assert!(ex.state.flags.n && !ex.state.flags.z && ex.state.flags.c);
+    }
+
+    #[test]
+    fn whilelt_empty_sets_none() {
+        let ex = exec_with(256, Memory::new(), |a| {
+            a.push(Inst::MovImm { xd: 0, imm: 8 });
+            a.push(Inst::MovImm { xd: 1, imm: 3 });
+            a.push(Inst::While { pd: 1, esize: Esize::D, xn: 0, xm: 1, unsigned: false });
+        });
+        assert!(ex.state.p[1].none_active(Esize::D, 32));
+        assert!(ex.state.flags.z, "Z=None per Table 1");
+        assert!(!ex.state.flags.cond(Cond::FIRST), "b.first must fall through");
+    }
+
+    #[test]
+    fn whilelt_handles_wraparound_near_int_max() {
+        // §2.3.2: "if the loop counter is close to the maximum integer
+        // value, then while will handle potential wrap-around"
+        let ex = exec_with(512, Memory::new(), |a| {
+            a.push(Inst::MovImm { xd: 0, imm: (i64::MAX - 2) as u64 });
+            a.push(Inst::MovImm { xd: 1, imm: i64::MAX as u64 });
+            a.push(Inst::While { pd: 0, esize: Esize::D, xn: 0, xm: 1, unsigned: false });
+        });
+        let p = ex.state.p[0];
+        // exactly 2 iterations remain; lanes 2.. must NOT wrap to active
+        assert!(p.active(Esize::D, 0) && p.active(Esize::D, 1));
+        for i in 2..8 {
+            assert!(!p.active(Esize::D, i), "lane {i} wrapped");
+        }
+    }
+
+    #[test]
+    fn first_fault_load_partitions_ffr() {
+        // Fig. 4 behaviour with a contiguous ldff1b across a page hole
+        let mut mem = Memory::new();
+        let page = 0x10_000u64;
+        mem.map(page, PAGE_SIZE as u64); // next page unmapped
+        let start = page + PAGE_SIZE as u64 - 8; // 8 valid bytes, then hole
+        for k in 0..8 {
+            mem.write_byte(start + k, b'A' + k as u8).unwrap();
+        }
+        let ex = exec_with(256, mem, |a| {
+            a.push(Inst::MovImm { xd: 0, imm: start });
+            a.push(Inst::Ptrue { pd: 0, esize: Esize::B, s: false });
+            a.push(Inst::Setffr);
+            a.push(Inst::SveLd1 {
+                zt: 0,
+                pg: 0,
+                esize: Esize::B,
+                base: 0,
+                off: SveMemOff::ImmVl(0),
+                ff: true,
+            });
+            a.push(Inst::Rdffr { pd: 1, pg: Some(0), s: false });
+        });
+        // 32 byte lanes; lanes 0..8 loaded, 8.. cleared in FFR
+        for i in 0..8 {
+            assert!(ex.state.p[1].active(Esize::B, i), "lane {i} safe");
+            assert_eq!(ex.state.z[0].get(Esize::B, i), (b'A' + i as u8) as u64);
+        }
+        for i in 8..32 {
+            assert!(!ex.state.p[1].active(Esize::B, i), "lane {i} must be cleared");
+        }
+    }
+
+    #[test]
+    fn first_fault_on_first_active_element_traps() {
+        // §2.3.3: "since it is now the first active element, traps"
+        let mem = Memory::new(); // nothing mapped
+        let mut a = Asm::new();
+        a.push(Inst::MovImm { xd: 0, imm: 0x5000 });
+        a.push(Inst::Ptrue { pd: 0, esize: Esize::B, s: false });
+        a.push(Inst::Setffr);
+        a.push(Inst::SveLd1 {
+            zt: 0,
+            pg: 0,
+            esize: Esize::B,
+            base: 0,
+            off: SveMemOff::ImmVl(0),
+            ff: true,
+        });
+        a.push(Inst::Halt);
+        let p = a.finish();
+        let mut ex = Executor::new(128, Memory::new());
+        ex.mem = mem;
+        match ex.run(&p, 100) {
+            Err(Trap::Fault { fault, .. }) => assert_eq!(fault.addr, 0x5000),
+            other => panic!("expected trap, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn gather_first_fault_fig4() {
+        // Fig. 4: gather from addresses [ok, ok, bad, bad]
+        let mut mem = Memory::new();
+        let good = 0x20_000u64;
+        mem.map(good, 64);
+        mem.write_u64(good, 111).unwrap();
+        mem.write_u64(good + 8, 222).unwrap();
+        let bad = 0x90_000u64;
+        let addrs = mem.alloc(32, 8);
+        mem.write_u64_slice(addrs, &[good, good + 8, bad, bad + 8]);
+        let ex = exec_with(256, mem, |a| {
+            a.push(Inst::MovImm { xd: 1, imm: addrs });
+            a.push(Inst::Ptrue { pd: 1, esize: Esize::D, s: false });
+            a.push(Inst::SveLd1 {
+                zt: 3,
+                pg: 1,
+                esize: Esize::D,
+                base: 1,
+                off: SveMemOff::ImmVl(0),
+                ff: false,
+            });
+            a.push(Inst::Setffr);
+            a.push(Inst::SveLdGather {
+                zt: 0,
+                pg: 1,
+                esize: Esize::D,
+                addr: GatherAddr::VecImm(3, 0),
+                ff: true,
+            });
+            a.push(Inst::Rdffr { pd: 2, pg: Some(1), s: false });
+        });
+        assert_eq!(ex.state.z[0].get(Esize::D, 0), 111);
+        assert_eq!(ex.state.z[0].get(Esize::D, 1), 222);
+        let ffr = ex.state.p[2];
+        assert!(ffr.active(Esize::D, 0) && ffr.active(Esize::D, 1));
+        assert!(!ffr.active(Esize::D, 2) && !ffr.active(Esize::D, 3), "Fig. 4 FFR");
+    }
+
+    #[test]
+    fn brkb_builds_before_break_partition() {
+        // p2 = lanes strictly before the first zero-char (Fig. 5)
+        let ex = exec_with(128, Memory::new(), |a| {
+            a.push(Inst::Ptrue { pd: 0, esize: Esize::B, s: false });
+            // z0 = [5,5,5,0,5,...] via index+cmp trick: build with dup + insert
+            a.push(Inst::DupImm { zd: 0, esize: Esize::B, imm: 5 });
+            a.push(Inst::Index { zd: 1, esize: Esize::B, base: RegOrImm::Imm(0), step: RegOrImm::Imm(1) });
+            // p1 = (z1 == 3)  -> lane 3
+            a.push(Inst::SveIntCmp {
+                op: CmpOp::Eq,
+                unsigned: false,
+                pd: 1,
+                pg: 0,
+                zn: 1,
+                rhs: ZmOrImm::Imm(3),
+                esize: Esize::B,
+            });
+            // brkbs p2.b, p0/z, p1.b
+            a.push(Inst::Brk { pd: 2, pg: 0, pn: 1, before: true, s: true });
+        });
+        for i in 0..3 {
+            assert!(ex.state.p[2].active(Esize::B, i), "lane {i}");
+        }
+        for i in 3..16 {
+            assert!(!ex.state.p[2].active(Esize::B, i), "lane {i}");
+        }
+        // break found -> last lane of pg inactive in result -> C=1 -> b.last
+        // (LAST==LO==!C) falls through, exactly Fig. 5's loop exit
+        assert!(!ex.state.flags.cond(Cond::LAST));
+    }
+
+    #[test]
+    fn brkb_no_break_keeps_all_and_continues_loop() {
+        let ex = exec_with(128, Memory::new(), |a| {
+            a.push(Inst::Ptrue { pd: 0, esize: Esize::B, s: false });
+            a.push(Inst::Pfalse { pd: 1 });
+            a.push(Inst::Brk { pd: 2, pg: 0, pn: 1, before: true, s: true });
+        });
+        assert_eq!(ex.state.p[2].count_active(Esize::B, 16), 16);
+        assert!(ex.state.flags.cond(Cond::LAST), "no break -> b.last loops");
+    }
+
+    #[test]
+    fn brka_includes_break_element() {
+        let ex = exec_with(128, Memory::new(), |a| {
+            a.push(Inst::Ptrue { pd: 0, esize: Esize::B, s: false });
+            a.push(Inst::Index { zd: 1, esize: Esize::B, base: RegOrImm::Imm(0), step: RegOrImm::Imm(1) });
+            a.push(Inst::SveIntCmp {
+                op: CmpOp::Eq,
+                unsigned: false,
+                pd: 1,
+                pg: 0,
+                zn: 1,
+                rhs: ZmOrImm::Imm(5),
+                esize: Esize::B,
+            });
+            a.push(Inst::Brk { pd: 2, pg: 0, pn: 1, before: false, s: false });
+        });
+        assert_eq!(ex.state.p[2].count_active(Esize::B, 16), 6, "lanes 0..=5");
+    }
+
+    #[test]
+    fn pnext_walks_active_elements_in_order() {
+        let ex = exec_with(256, Memory::new(), |a| {
+            a.push(Inst::MovImm { xd: 0, imm: 1 });
+            a.push(Inst::MovImm { xd: 1, imm: 4 });
+            // pg = lanes 1..4 of .d
+            a.push(Inst::While { pd: 0, esize: Esize::D, xn: 31, xm: 1, unsigned: false });
+            a.push(Inst::While { pd: 2, esize: Esize::D, xn: 31, xm: 0, unsigned: false });
+            // pg := p0 AND NOT p2 = lanes 1,2,3
+            a.push(Inst::PredLogic { op: PLogicOp::Bic, pd: 0, pg: 0, pn: 0, pm: 2, s: false });
+            a.push(Inst::Pfalse { pd: 1 });
+            a.push(Inst::Pnext { pdn: 1, pg: 0, esize: Esize::D });
+        });
+        assert!(ex.state.p[1].active(Esize::D, 1), "first active of pg");
+        assert_eq!(ex.state.p[1].count_active(Esize::D, 32), 1);
+    }
+
+    #[test]
+    fn pnext_exhaustion_sets_none() {
+        let ex = exec_with(256, Memory::new(), |a| {
+            a.push(Inst::Pfalse { pd: 0 }); // empty pg
+            a.push(Inst::Pfalse { pd: 1 });
+            a.push(Inst::Pnext { pdn: 1, pg: 0, esize: Esize::D });
+        });
+        assert!(ex.state.p[1].none_active(Esize::D, 32));
+        assert!(ex.state.flags.z);
+    }
+
+    #[test]
+    fn cterm_drives_tcont() {
+        // continue: not-equal and C set
+        let ex = exec_with(128, Memory::new(), |a| {
+            a.push(Inst::MovImm { xd: 0, imm: 7 });
+            a.push(Inst::MovImm { xd: 1, imm: 9 });
+            a.push(Inst::Ptrue { pd: 0, esize: Esize::D, s: true }); // sets C=0 (all active)
+            // force C=1 via whilelt partial
+            a.push(Inst::MovImm { xd: 2, imm: 1 });
+            a.push(Inst::While { pd: 1, esize: Esize::D, xn: 31, xm: 2, unsigned: false });
+            a.push(Inst::Cterm { xn: 0, xm: 1, ne: false });
+        });
+        assert!(ex.state.flags.cond(Cond::TCONT), "!term && C -> continue");
+
+        // stop on termination (equal)
+        let ex = exec_with(128, Memory::new(), |a| {
+            a.push(Inst::MovImm { xd: 0, imm: 7 });
+            a.push(Inst::MovImm { xd: 1, imm: 7 });
+            a.push(Inst::Cterm { xn: 0, xm: 1, ne: false });
+        });
+        assert!(!ex.state.flags.cond(Cond::TCONT));
+    }
+
+    #[test]
+    fn incp_counts_active_lanes() {
+        let ex = exec_with(512, Memory::new(), |a| {
+            a.push(Inst::MovImm { xd: 0, imm: 100 });
+            a.push(Inst::MovImm { xd: 1, imm: 5 });
+            a.push(Inst::While { pd: 3, esize: Esize::D, xn: 31, xm: 1, unsigned: false });
+            a.push(Inst::IncpX { xdn: 0, pm: 3, esize: Esize::D });
+        });
+        assert_eq!(ex.state.get_x(0), 105);
+    }
+
+    #[test]
+    fn index_and_vl_scaled_counting() {
+        let ex = exec_with(256, Memory::new(), |a| {
+            a.push(Inst::Index { zd: 0, esize: Esize::S, base: RegOrImm::Imm(3), step: RegOrImm::Imm(2) });
+            a.push(Inst::Cnt { xd: 1, esize: Esize::D });
+            a.push(Inst::MovImm { xd: 2, imm: 0 });
+            a.push(Inst::IncDec { xdn: 2, esize: Esize::S, dec: false });
+        });
+        for i in 0..8 {
+            assert_eq!(ex.state.z[0].get(Esize::S, i), 3 + 2 * i as u64);
+        }
+        assert_eq!(ex.state.get_x(1), 4, "cntd at VL=256");
+        assert_eq!(ex.state.get_x(2), 8, "incw at VL=256");
+    }
+
+    #[test]
+    fn fadda_is_strictly_ordered_faddv_is_tree() {
+        // values chosen so that tree and ordered sums differ in f64
+        let mut mem = Memory::new();
+        let buf = mem.alloc(8 * 4, 16);
+        let xs = [1e308, -1e308, 1.0, 1.0];
+        mem.write_f64_slice(buf, &xs);
+        let ex = exec_with(256, mem, |a| {
+            a.push(Inst::MovImm { xd: 0, imm: buf });
+            a.push(Inst::Ptrue { pd: 0, esize: Esize::D, s: false });
+            a.push(Inst::SveLd1 {
+                zt: 0,
+                pg: 0,
+                esize: Esize::D,
+                base: 0,
+                off: SveMemOff::ImmVl(0),
+                ff: false,
+            });
+            a.push(Inst::FmovImm { dbl: true, dd: 1, bits: 0f64.to_bits() });
+            a.push(Inst::SveFadda { vdn: 1, pg: 0, zm: 0, dbl: true });
+            a.push(Inst::SveReduce { op: RedOp::FAddV, vd: 2, pg: 0, zn: 0, esize: Esize::D });
+        });
+        let ordered = (((0.0 + xs[0]) + xs[1]) + xs[2]) + xs[3];
+        let tree = (xs[0] + xs[2]) + (xs[1] + xs[3]); // pairwise halves
+        assert_eq!(ex.state.get_d(1), ordered, "fadda == scalar loop order");
+        assert_eq!(ex.state.get_d(2), tree, "faddv == pairwise tree");
+        assert_ne!(ordered, tree, "orders must differ for this input (§3.3)");
+    }
+
+    #[test]
+    fn eorv_reduction() {
+        let ex = exec_with(256, Memory::new(), |a| {
+            a.push(Inst::Index { zd: 0, esize: Esize::D, base: RegOrImm::Imm(1), step: RegOrImm::Imm(2) });
+            a.push(Inst::Ptrue { pd: 0, esize: Esize::D, s: false });
+            a.push(Inst::SveReduce { op: RedOp::EorV, vd: 1, pg: 0, zn: 0, esize: Esize::D });
+        });
+        assert_eq!(ex.state.z[1].get(Esize::D, 0), 1u64 ^ 3 ^ 5 ^ 7);
+    }
+
+    #[test]
+    fn predicated_fmla_merges_inactive_lanes() {
+        let ex = exec_with(256, Memory::new(), |a| {
+            a.push(Inst::MovImm { xd: 0, imm: 2 });
+            a.push(Inst::While { pd: 0, esize: Esize::D, xn: 31, xm: 0, unsigned: false });
+            a.push(Inst::DupImm { zd: 0, esize: Esize::D, imm: 0 });
+            a.push(Inst::SveScvtf { zd: 0, pg: 0, zn: 0, dbl: true }); // zeros
+            a.push(Inst::FdupImm { zd: 1, dbl: true, bits: 2.0f64.to_bits() });
+            a.push(Inst::FdupImm { zd: 2, dbl: true, bits: 3.0f64.to_bits() });
+            a.push(Inst::FdupImm { zd: 3, dbl: true, bits: 10.0f64.to_bits() });
+            a.push(Inst::SveFmla { zda: 3, pg: 0, zn: 1, zm: 2, dbl: true, sub: false });
+        });
+        assert_eq!(ex.state.z[3].get_f64(0), 16.0);
+        assert_eq!(ex.state.z[3].get_f64(1), 16.0);
+        assert_eq!(ex.state.z[3].get_f64(2), 10.0, "inactive lane merges");
+        assert_eq!(ex.state.z[3].get_f64(3), 10.0);
+    }
+
+    #[test]
+    fn sel_and_fcm_ifconversion_pattern() {
+        // the HACC conditional-assignment pattern: p = (a > b); sel
+        let ex = exec_with(256, Memory::new(), |a| {
+            a.push(Inst::Ptrue { pd: 0, esize: Esize::D, s: false });
+            a.push(Inst::Index { zd: 0, esize: Esize::D, base: RegOrImm::Imm(0), step: RegOrImm::Imm(1) });
+            a.push(Inst::SveScvtf { zd: 0, pg: 0, zn: 0, dbl: true }); // [0,1,2,3]
+            a.push(Inst::FdupImm { zd: 1, dbl: true, bits: 1.5f64.to_bits() });
+            a.push(Inst::SveFpCmp { op: CmpOp::Gt, pd: 1, pg: 0, zn: 0, rhs: Some(1), dbl: true });
+            a.push(Inst::Sel { zd: 2, pg: 1, zn: 0, zm: 1, esize: Esize::D });
+        });
+        assert_eq!(ex.state.z[2].get_f64(0), 1.5);
+        assert_eq!(ex.state.z[2].get_f64(1), 1.5);
+        assert_eq!(ex.state.z[2].get_f64(2), 2.0);
+        assert_eq!(ex.state.z[2].get_f64(3), 3.0);
+    }
+
+    #[test]
+    fn permutes_rev_zip_compact() {
+        let ex = exec_with(256, Memory::new(), |a| {
+            a.push(Inst::Index { zd: 0, esize: Esize::D, base: RegOrImm::Imm(0), step: RegOrImm::Imm(1) });
+            a.push(Inst::SveRev { zd: 1, zn: 0, esize: Esize::D });
+            a.push(Inst::Index { zd: 2, esize: Esize::D, base: RegOrImm::Imm(10), step: RegOrImm::Imm(1) });
+            a.push(Inst::SveZip { zd: 3, zn: 0, zm: 2, esize: Esize::D, hi: false });
+            // compact even lanes
+            a.push(Inst::Ptrue { pd: 0, esize: Esize::D, s: false });
+            a.push(Inst::SveIntCmp {
+                op: CmpOp::Eq,
+                unsigned: false,
+                pd: 1,
+                pg: 0,
+                zn: 0,
+                rhs: ZmOrImm::Imm(0),
+                esize: Esize::D,
+            });
+            // p1 = lane0 only; orr with lane2-compare for [0,2]
+            a.push(Inst::SveIntCmp {
+                op: CmpOp::Eq,
+                unsigned: false,
+                pd: 2,
+                pg: 0,
+                zn: 0,
+                rhs: ZmOrImm::Imm(2),
+                esize: Esize::D,
+            });
+            a.push(Inst::PredLogic { op: PLogicOp::Orr, pd: 1, pg: 0, pn: 1, pm: 2, s: false });
+            a.push(Inst::SveCompact { zd: 4, pg: 1, zn: 0, esize: Esize::D });
+        });
+        assert_eq!(ex.state.z[1].get(Esize::D, 0), 3);
+        assert_eq!(ex.state.z[1].get(Esize::D, 3), 0);
+        assert_eq!(ex.state.z[3].get(Esize::D, 0), 0);
+        assert_eq!(ex.state.z[3].get(Esize::D, 1), 10);
+        assert_eq!(ex.state.z[3].get(Esize::D, 2), 1);
+        assert_eq!(ex.state.z[4].get(Esize::D, 0), 0);
+        assert_eq!(ex.state.z[4].get(Esize::D, 1), 2);
+        assert_eq!(ex.state.z[4].get(Esize::D, 2), 0, "compact zero-fills");
+    }
+
+    #[test]
+    fn scatter_store_writes_elementwise() {
+        let mut mem = Memory::new();
+        let tgt = mem.alloc(256, 8);
+        let idx = mem.alloc(32, 8);
+        mem.write_u64_slice(idx, &[3, 0, 2, 1]);
+        let ex = exec_with(256, mem, |a| {
+            a.push(Inst::MovImm { xd: 0, imm: idx });
+            a.push(Inst::Ptrue { pd: 0, esize: Esize::D, s: false });
+            a.push(Inst::SveLd1 {
+                zt: 1,
+                pg: 0,
+                esize: Esize::D,
+                base: 0,
+                off: SveMemOff::ImmVl(0),
+                ff: false,
+            });
+            a.push(Inst::Index { zd: 2, esize: Esize::D, base: RegOrImm::Imm(100), step: RegOrImm::Imm(1) });
+            a.push(Inst::MovImm { xd: 1, imm: tgt });
+            a.push(Inst::SveStScatter {
+                zt: 2,
+                pg: 0,
+                esize: Esize::D,
+                addr: GatherAddr::BaseVec { xn: 1, zm: 1, scaled: true },
+            });
+        });
+        assert_eq!(ex.mem.read_u64(tgt + 24).unwrap(), 100);
+        assert_eq!(ex.mem.read_u64(tgt).unwrap(), 101);
+        assert_eq!(ex.mem.read_u64(tgt + 16).unwrap(), 102);
+        assert_eq!(ex.mem.read_u64(tgt + 8).unwrap(), 103);
+    }
+
+    #[test]
+    fn ld1_zeroing_predication() {
+        let mut mem = Memory::new();
+        let b = mem.alloc(32, 16);
+        mem.write_u64_slice(b, &[11, 22, 33, 44]);
+        let ex = exec_with(256, mem, |a| {
+            a.push(Inst::MovImm { xd: 0, imm: b });
+            a.push(Inst::MovImm { xd: 1, imm: 2 });
+            a.push(Inst::While { pd: 0, esize: Esize::D, xn: 31, xm: 1, unsigned: false });
+            a.push(Inst::DupImm { zd: 0, esize: Esize::D, imm: -1 }); // dirty
+            a.push(Inst::SveLd1 {
+                zt: 0,
+                pg: 0,
+                esize: Esize::D,
+                base: 0,
+                off: SveMemOff::ImmVl(0),
+                ff: false,
+            });
+        });
+        assert_eq!(ex.state.z[0].get(Esize::D, 0), 11);
+        assert_eq!(ex.state.z[0].get(Esize::D, 1), 22);
+        assert_eq!(ex.state.z[0].get(Esize::D, 2), 0, "/z zeroes inactive");
+        assert_eq!(ex.state.z[0].get(Esize::D, 3), 0);
+    }
+
+    #[test]
+    fn movprfx_constructive_pair() {
+        // §4: movprfx + destructive op == constructive op
+        let ex = exec_with(256, Memory::new(), |a| {
+            a.push(Inst::Ptrue { pd: 0, esize: Esize::D, s: false });
+            a.push(Inst::FdupImm { zd: 1, dbl: true, bits: 5.0f64.to_bits() });
+            a.push(Inst::FdupImm { zd: 2, dbl: true, bits: 7.0f64.to_bits() });
+            a.push(Inst::Movprfx { zd: 3, zn: 1, pg: None });
+            a.push(Inst::SveFpBin { op: FpOp::Add, zdn: 3, pg: 0, zm: 2, dbl: true });
+        });
+        assert_eq!(ex.state.z[3].get_f64(0), 12.0);
+        assert_eq!(ex.state.z[1].get_f64(0), 5.0, "source unchanged (constructive)");
+    }
+
+    #[test]
+    fn lastb_extracts_last_active() {
+        let ex = exec_with(256, Memory::new(), |a| {
+            a.push(Inst::Index { zd: 0, esize: Esize::D, base: RegOrImm::Imm(40), step: RegOrImm::Imm(1) });
+            a.push(Inst::MovImm { xd: 1, imm: 3 });
+            a.push(Inst::While { pd: 0, esize: Esize::D, xn: 31, xm: 1, unsigned: false });
+            a.push(Inst::Last { xd: 2, pg: 0, zn: 0, esize: Esize::D, before: true });
+            a.push(Inst::Last { xd: 3, pg: 0, zn: 0, esize: Esize::D, before: false });
+        });
+        assert_eq!(ex.state.get_x(2), 42, "lastb: lane 2");
+        assert_eq!(ex.state.get_x(3), 43, "lasta: lane 3");
+    }
+}

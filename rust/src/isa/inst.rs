@@ -1,0 +1,1039 @@
+//! The instruction enum and its static metadata (µop class, register
+//! dependencies, disassembly).
+//!
+//! Register-field conventions follow the A64 assembly the paper uses:
+//! `x*` general registers (31 = xzr), `d*/s*` scalar FP views of the
+//! vector file, `v*` NEON views (low 128 bits), `z*` SVE vectors, `p*`
+//! predicates. The enum is interpreted directly by [`crate::exec`]; the
+//! separate [`super::encoding`] module maps it into the Fig. 7 encoding
+//! budget.
+
+use crate::arch::{Cond, Esize};
+
+/// Scalar memory operand offset.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum MemOff {
+    /// `[xn, #imm]`
+    Imm(i64),
+    /// `[xn, xm, lsl #s]`
+    RegLsl(u8, u8),
+}
+
+/// SVE contiguous memory offset.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum SveMemOff {
+    /// `[xn, #imm, mul vl]` — imm is in whole-vector units.
+    ImmVl(i64),
+    /// `[xn, xm, lsl #log2(esize)]` — element-scaled index register.
+    RegScaled(u8),
+}
+
+/// Gather/scatter addressing (§4: "rich addressing modes").
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum GatherAddr {
+    /// `[zn.d, #imm]` — vector of base addresses plus immediate.
+    VecImm(u8, i64),
+    /// `[xn, zm.d]` (`scaled`: index shifted by log2 esize; `sxtw`
+    /// variants are folded into the executor's sign handling).
+    BaseVec { xn: u8, zm: u8, scaled: bool },
+}
+
+/// Second operand of SVE integer compares.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ZmOrImm {
+    Z(u8),
+    Imm(i64),
+}
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum RegOrImm {
+    Reg(u8),
+    Imm(i64),
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum IntOp {
+    Add,
+    Sub,
+    Mul,
+    SMax,
+    SMin,
+    UMax,
+    UMin,
+    And,
+    Orr,
+    Eor,
+    Lsl,
+    Lsr,
+    Asr,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum FpOp {
+    Add,
+    Sub,
+    Mul,
+    Div,
+    Max,
+    Min,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum FpUnOp {
+    Sqrt,
+    Neg,
+    Abs,
+    Recpe,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum CmpOp {
+    Eq,
+    Ne,
+    Gt,
+    Ge,
+    Lt,
+    Le,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum RedOp {
+    FAddV,
+    FMaxV,
+    FMinV,
+    EorV,
+    OrV,
+    AndV,
+    UAddV,
+    SMaxV,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum PLogicOp {
+    And,
+    Orr,
+    Eor,
+    Bic,
+}
+
+/// Opaque scalar math functions — stand-ins for libm calls the paper's
+/// toolchain could not vectorize (§5: "did not have vectorized versions
+/// of some basic math library functions such as pow() and log()").
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum OpaqueFn {
+    Exp,
+    Log,
+    Pow,
+    Sqrt,
+    Sin,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Inst {
+    // ===================== AArch64 scalar =====================
+    MovImm { xd: u8, imm: u64 },
+    MovReg { xd: u8, xn: u8 },
+    AddImm { xd: u8, xn: u8, imm: i64 },
+    AddReg { xd: u8, xn: u8, xm: u8, lsl: u8 },
+    SubReg { xd: u8, xn: u8, xm: u8 },
+    /// xd = xa + xn*xm (`mul` = `madd xd, xn, xm, xzr`)
+    Madd { xd: u8, xn: u8, xm: u8, xa: u8 },
+    Udiv { xd: u8, xn: u8, xm: u8 },
+    AndImm { xd: u8, xn: u8, imm: u64 },
+    LogReg { op: PLogicOp, xd: u8, xn: u8, xm: u8 },
+    LslImm { xd: u8, xn: u8, sh: u8 },
+    LsrImm { xd: u8, xn: u8, sh: u8 },
+    AsrImm { xd: u8, xn: u8, sh: u8 },
+    Csel { xd: u8, xn: u8, xm: u8, cond: Cond },
+    /// Scalar integer load; `size` in bytes, `signed` sign-extends.
+    Ldr { size: u8, signed: bool, xt: u8, base: u8, off: MemOff },
+    Str { size: u8, xt: u8, base: u8, off: MemOff },
+    /// Scalar FP load/store (`dbl`: d-register vs s-register).
+    LdrFp { dbl: bool, vt: u8, base: u8, off: MemOff },
+    StrFp { dbl: bool, vt: u8, base: u8, off: MemOff },
+    CmpImm { xn: u8, imm: u64 },
+    CmpReg { xn: u8, xm: u8 },
+    B { target: usize },
+    BCond { cond: Cond, target: usize },
+    Cbz { xn: u8, target: usize },
+    Cbnz { xn: u8, target: usize },
+    Ret,
+    /// Stop simulation (top-level return).
+    Halt,
+    Nop,
+
+    // ===================== scalar FP =====================
+    FmovImm { dbl: bool, dd: u8, bits: u64 },
+    FmovXtoD { dd: u8, xn: u8 },
+    /// Scalar FP register move (fmov dd, dn).
+    FmovReg { dbl: bool, dd: u8, dn: u8 },
+    FmovDtoX { xd: u8, dn: u8 },
+    FpBin { op: FpOp, dbl: bool, dd: u8, dn: u8, dm: u8 },
+    FpUn { op: FpUnOp, dbl: bool, dd: u8, dn: u8 },
+    /// dd = da + dn*dm (fmsub when `sub`)
+    Fmadd { dbl: bool, dd: u8, dn: u8, dm: u8, da: u8, sub: bool },
+    Fcmp { dbl: bool, dn: u8, dm: u8 },
+    /// signed int -> fp
+    Scvtf { dbl: bool, dd: u8, xn: u8 },
+    /// fp -> signed int (round toward zero)
+    Fcvtzs { dbl: bool, xd: u8, dn: u8 },
+    /// Opaque scalar libm call (1 or 2 args).
+    OpaqueCall { f: OpaqueFn, dd: u8, dn: u8, dm: Option<u8> },
+
+    // ===================== Advanced SIMD (NEON) =====================
+    NeonLd1 { esize: Esize, vt: u8, base: u8, off: MemOff },
+    NeonSt1 { esize: Esize, vt: u8, base: u8, off: MemOff },
+    NeonDupX { esize: Esize, vd: u8, xn: u8 },
+    /// Broadcast lane 0 of `vn` (dup vd.2d, vn.d[0]).
+    NeonDupLane0 { esize: Esize, vd: u8, vn: u8 },
+    NeonMoviZero { vd: u8 },
+    NeonFpBin { op: FpOp, dbl: bool, vd: u8, vn: u8, vm: u8 },
+    NeonFpUn { op: FpUnOp, dbl: bool, vd: u8, vn: u8 },
+    NeonFmla { dbl: bool, vd: u8, vn: u8, vm: u8, sub: bool },
+    NeonIntBin { op: IntOp, esize: Esize, vd: u8, vn: u8, vm: u8 },
+    NeonFcm { op: CmpOp, dbl: bool, vd: u8, vn: u8, vm: u8 },
+    NeonCm { op: CmpOp, esize: Esize, vd: u8, vn: u8, vm: u8 },
+    /// Bitwise select: vd = (vd & vn) | (!vd & vm).
+    NeonBsl { vd: u8, vn: u8, vm: u8 },
+    /// Horizontal reduce to scalar fp register (models the faddp chain).
+    NeonFaddv { dbl: bool, dd: u8, vn: u8 },
+    NeonAddv { esize: Esize, dd: u8, vn: u8 },
+    NeonUmov { esize: Esize, xd: u8, vn: u8, lane: u8 },
+    NeonInsX { esize: Esize, vd: u8, lane: u8, xn: u8 },
+
+    // ===================== SVE predicates =====================
+    Ptrue { pd: u8, esize: Esize, s: bool },
+    Pfalse { pd: u8 },
+    /// `whilelt` (signed) / `whilelo` (unsigned) — §2.3.2.
+    While { pd: u8, esize: Esize, xn: u8, xm: u8, unsigned: bool },
+    Ptest { pg: u8, pn: u8 },
+    /// §2.3.5 — advance to the next active element.
+    Pnext { pdn: u8, pg: u8, esize: Esize },
+    /// brka/brkb (zeroing form) — §2.3.4 vector partitioning.
+    Brk { pd: u8, pg: u8, pn: u8, before: bool, s: bool },
+    PredLogic { op: PLogicOp, pd: u8, pg: u8, pn: u8, pm: u8, s: bool },
+    /// rdffr pd.b[, pg/z] — §2.3.3.
+    Rdffr { pd: u8, pg: Option<u8>, s: bool },
+    Setffr,
+    Wrffr { pn: u8 },
+
+    // ===================== SVE counting / induction =====================
+    /// cntb/cnth/cntw/cntd xd (pattern ALL).
+    Cnt { xd: u8, esize: Esize },
+    /// incb/inch/incw/incd (or dec*) xdn.
+    IncDec { xdn: u8, esize: Esize, dec: bool },
+    /// incp xdn, pm.<e> — add active-lane count (Fig. 5 `incp`).
+    IncpX { xdn: u8, pm: u8, esize: Esize },
+    /// index zd.<e>, base, step — §3.1 induction-variable support.
+    Index { zd: u8, esize: Esize, base: RegOrImm, step: RegOrImm },
+
+    // ===================== SVE data movement =====================
+    DupImm { zd: u8, esize: Esize, imm: i64 },
+    FdupImm { zd: u8, dbl: bool, bits: u64 },
+    DupX { zd: u8, esize: Esize, xn: u8 },
+    /// cpy zd.<e>, pg/m, xn — Fig. 6's scalar insert.
+    CpyX { zd: u8, pg: u8, xn: u8, esize: Esize },
+    Sel { zd: u8, pg: u8, zn: u8, zm: u8, esize: Esize },
+    /// §4 — constructive prefix; pg None = unpredicated form.
+    Movprfx { zd: u8, zn: u8, pg: Option<(u8, bool)> },
+    /// lasta/lastb xd, pg, zn.<e>.
+    Last { xd: u8, pg: u8, zn: u8, esize: Esize, before: bool },
+
+    // ===================== SVE memory =====================
+    /// Contiguous (first-faulting when `ff`) load, elements of `esize`.
+    SveLd1 { zt: u8, pg: u8, esize: Esize, base: u8, off: SveMemOff, ff: bool },
+    /// ld1r<esize> — load-and-broadcast (§4).
+    SveLd1R { zt: u8, pg: u8, esize: Esize, base: u8, imm: i64 },
+    SveSt1 { zt: u8, pg: u8, esize: Esize, base: u8, off: SveMemOff },
+    /// Gather load (first-faulting when `ff`), 32/64-bit elements.
+    SveLdGather { zt: u8, pg: u8, esize: Esize, addr: GatherAddr, ff: bool },
+    SveStScatter { zt: u8, pg: u8, esize: Esize, addr: GatherAddr },
+
+    // ===================== SVE arithmetic =====================
+    /// Predicated destructive integer ops (§4 encoding tradeoff).
+    SveIntBin { op: IntOp, zdn: u8, pg: u8, zm: u8, esize: Esize },
+    /// Unpredicated constructive forms of the most common opcodes (§4).
+    SveIntBinU { op: IntOp, zd: u8, zn: u8, zm: u8, esize: Esize },
+    SveAddImm { zdn: u8, esize: Esize, imm: u64 },
+    /// Predicated destructive FP ops.
+    SveFpBin { op: FpOp, zdn: u8, pg: u8, zm: u8, dbl: bool },
+    /// Predicated merging FP unary (fsqrt zd, pg/m, zn).
+    SveFpUn { op: FpUnOp, zd: u8, pg: u8, zn: u8, dbl: bool },
+    /// fmla/fmls zda, pg/m, zn, zm.
+    SveFmla { zda: u8, pg: u8, zn: u8, zm: u8, dbl: bool, sub: bool },
+    /// scvtf zd.<fp>, pg/m, zn.<int> (same-width int->fp).
+    SveScvtf { zd: u8, pg: u8, zn: u8, dbl: bool },
+
+    // ===================== SVE compares =====================
+    SveIntCmp { op: CmpOp, unsigned: bool, pd: u8, pg: u8, zn: u8, rhs: ZmOrImm, esize: Esize },
+    /// FP compare against vector or #0.0 (rhs None).
+    SveFpCmp { op: CmpOp, pd: u8, pg: u8, zn: u8, rhs: Option<u8>, dbl: bool },
+
+    // ===================== SVE horizontal (§2.4) =====================
+    /// Tree reductions into a scalar FP/int register.
+    SveReduce { op: RedOp, vd: u8, pg: u8, zn: u8, esize: Esize },
+    /// Strictly-ordered FP accumulate: vdn = vdn + sum-in-order(zm).
+    SveFadda { vdn: u8, pg: u8, zm: u8, dbl: bool },
+
+    // ===================== SVE permutes =====================
+    SveRev { zd: u8, zn: u8, esize: Esize },
+    SveExt { zdn: u8, zm: u8, imm: u8 },
+    SveZip { zd: u8, zn: u8, zm: u8, esize: Esize, hi: bool },
+    SveUzp { zd: u8, zn: u8, zm: u8, esize: Esize, odd: bool },
+    SveTrn { zd: u8, zn: u8, zm: u8, esize: Esize, odd: bool },
+    SveTbl { zd: u8, zn: u8, zm: u8, esize: Esize },
+    SveCompact { zd: u8, pg: u8, zn: u8, esize: Esize },
+    SveSplice { zdn: u8, pg: u8, zm: u8, esize: Esize },
+
+    // ===================== SVE termination (§2.3.5) =====================
+    /// ctermeq/ctermne xn, xm.
+    Cterm { xn: u8, xm: u8, ne: bool },
+}
+
+/// µop class for the timing model.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum UopClass {
+    IntAlu,
+    IntMul,
+    IntDiv,
+    Branch,
+    FpAdd,
+    FpMul,
+    FpFma,
+    FpDiv,
+    FpSqrt,
+    FpCmp,
+    FpMov,
+    OpaqueCall,
+    VecIntAlu,
+    VecFpAdd,
+    VecFpMul,
+    VecFpFma,
+    VecFpDiv,
+    VecFpSqrt,
+    VecCmp,
+    PredOp,
+    /// Cross-lane tree reduction — VL-proportional penalty (§5).
+    VecReduceTree,
+    /// Strictly-ordered reduction — latency ∝ active lanes.
+    VecReduceOrdered,
+    /// Cross-lane permute — VL-proportional penalty (§5).
+    VecPermute,
+    ScalarLoad,
+    ScalarStore,
+    VecLoad,
+    VecStore,
+    VecLoadBcast,
+    /// Cracked into per-element accesses by the LSU (§4, §5).
+    VecGather,
+    VecScatter,
+    Nop,
+}
+
+impl UopClass {
+    /// Vector (SVE or NEON) instruction class?
+    pub fn is_vector(self) -> bool {
+        matches!(
+            self,
+            UopClass::VecIntAlu
+                | UopClass::VecFpAdd
+                | UopClass::VecFpMul
+                | UopClass::VecFpFma
+                | UopClass::VecFpDiv
+                | UopClass::VecFpSqrt
+                | UopClass::VecCmp
+                | UopClass::PredOp
+                | UopClass::VecReduceTree
+                | UopClass::VecReduceOrdered
+                | UopClass::VecPermute
+                | UopClass::VecLoad
+                | UopClass::VecStore
+                | UopClass::VecLoadBcast
+                | UopClass::VecGather
+                | UopClass::VecScatter
+        )
+    }
+
+    pub fn is_mem(self) -> bool {
+        matches!(
+            self,
+            UopClass::ScalarLoad
+                | UopClass::ScalarStore
+                | UopClass::VecLoad
+                | UopClass::VecStore
+                | UopClass::VecLoadBcast
+                | UopClass::VecGather
+                | UopClass::VecScatter
+        )
+    }
+
+    pub fn is_cross_lane(self) -> bool {
+        matches!(
+            self,
+            UopClass::VecReduceTree | UopClass::VecReduceOrdered | UopClass::VecPermute
+        )
+    }
+}
+
+/// Architectural register identity, for dependence tracking.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum RegId {
+    X(u8),
+    /// Whole vector register (Z view; V and D/S views alias it).
+    Z(u8),
+    P(u8),
+    Ffr,
+    Nzcv,
+}
+
+impl Inst {
+    /// µop class (timing).
+    pub fn class(&self) -> UopClass {
+        use Inst::*;
+        use UopClass as C;
+        match self {
+            MovImm { .. } | MovReg { .. } | AddImm { .. } | AddReg { .. } | SubReg { .. }
+            | AndImm { .. } | LogReg { .. } | LslImm { .. } | LsrImm { .. } | AsrImm { .. }
+            | Csel { .. } | CmpImm { .. } | CmpReg { .. } => C::IntAlu,
+            Madd { .. } => C::IntMul,
+            Udiv { .. } => C::IntDiv,
+            Ldr { .. } | LdrFp { .. } => C::ScalarLoad,
+            Str { .. } | StrFp { .. } => C::ScalarStore,
+            B { .. } | BCond { .. } | Cbz { .. } | Cbnz { .. } | Ret | Halt => C::Branch,
+            Nop => C::Nop,
+            FmovImm { .. } | FmovXtoD { .. } | FmovDtoX { .. } | FmovReg { .. } => C::FpMov,
+            FpBin { op, .. } => match op {
+                FpOp::Add | FpOp::Sub | FpOp::Max | FpOp::Min => C::FpAdd,
+                FpOp::Mul => C::FpMul,
+                FpOp::Div => C::FpDiv,
+            },
+            FpUn { op, .. } => match op {
+                FpUnOp::Sqrt => C::FpSqrt,
+                _ => C::FpAdd,
+            },
+            Fmadd { .. } => C::FpFma,
+            Fcmp { .. } => C::FpCmp,
+            Scvtf { .. } | Fcvtzs { .. } => C::FpMov,
+            OpaqueCall { .. } => C::OpaqueCall,
+            NeonLd1 { .. } => C::VecLoad,
+            NeonSt1 { .. } => C::VecStore,
+            NeonDupX { .. } | NeonDupLane0 { .. } | NeonMoviZero { .. } | NeonInsX { .. } => C::VecIntAlu,
+            NeonFpBin { op, .. } => match op {
+                FpOp::Add | FpOp::Sub | FpOp::Max | FpOp::Min => C::VecFpAdd,
+                FpOp::Mul => C::VecFpMul,
+                FpOp::Div => C::VecFpDiv,
+            },
+            NeonFpUn { op, .. } => match op {
+                FpUnOp::Sqrt => C::VecFpSqrt,
+                _ => C::VecFpAdd,
+            },
+            NeonFmla { .. } => C::VecFpFma,
+            NeonIntBin { .. } => C::VecIntAlu,
+            NeonFcm { .. } | NeonCm { .. } => C::VecCmp,
+            NeonBsl { .. } => C::VecIntAlu,
+            NeonFaddv { .. } | NeonAddv { .. } => C::VecReduceTree,
+            NeonUmov { .. } => C::VecPermute,
+            Ptrue { .. } | Pfalse { .. } | While { .. } | Ptest { .. } | Pnext { .. }
+            | Brk { .. } | PredLogic { .. } | Rdffr { .. } | Setffr | Wrffr { .. } => C::PredOp,
+            Cnt { .. } | IncDec { .. } | IncpX { .. } => C::IntAlu,
+            Index { .. } => C::VecIntAlu,
+            DupImm { .. } | FdupImm { .. } | DupX { .. } | CpyX { .. } | Sel { .. }
+            | Movprfx { .. } => C::VecIntAlu,
+            Last { .. } => C::VecPermute,
+            SveLd1 { .. } => C::VecLoad,
+            SveLd1R { .. } => C::VecLoadBcast,
+            SveSt1 { .. } => C::VecStore,
+            SveLdGather { .. } => C::VecGather,
+            SveStScatter { .. } => C::VecScatter,
+            SveIntBin { .. } | SveIntBinU { .. } | SveAddImm { .. } => C::VecIntAlu,
+            SveFpBin { op, .. } => match op {
+                FpOp::Add | FpOp::Sub | FpOp::Max | FpOp::Min => C::VecFpAdd,
+                FpOp::Mul => C::VecFpMul,
+                FpOp::Div => C::VecFpDiv,
+            },
+            SveFpUn { op, .. } => match op {
+                FpUnOp::Sqrt => C::VecFpSqrt,
+                _ => C::VecFpAdd,
+            },
+            SveFmla { .. } => C::VecFpFma,
+            SveScvtf { .. } => C::VecFpAdd,
+            SveIntCmp { .. } | SveFpCmp { .. } => C::VecCmp,
+            SveReduce { .. } => C::VecReduceTree,
+            SveFadda { .. } => C::VecReduceOrdered,
+            SveRev { .. } | SveExt { .. } | SveZip { .. } | SveUzp { .. } | SveTrn { .. }
+            | SveTbl { .. } | SveCompact { .. } | SveSplice { .. } => C::VecPermute,
+            Cterm { .. } => C::IntAlu,
+        }
+    }
+
+    /// Is this an SVE instruction (for the paper's "extra vectorization"
+    /// metric, which counts SVE/NEON vector instructions)?
+    pub fn is_sve(&self) -> bool {
+        use Inst::*;
+        matches!(
+            self,
+            Ptrue { .. } | Pfalse { .. } | While { .. } | Ptest { .. } | Pnext { .. }
+                | Brk { .. } | PredLogic { .. } | Rdffr { .. } | Setffr | Wrffr { .. }
+                | Cnt { .. } | IncDec { .. } | IncpX { .. } | Index { .. } | DupImm { .. }
+                | FdupImm { .. } | DupX { .. } | CpyX { .. } | Sel { .. } | Movprfx { .. }
+                | Last { .. } | SveLd1 { .. } | SveLd1R { .. } | SveSt1 { .. }
+                | SveLdGather { .. } | SveStScatter { .. } | SveIntBin { .. }
+                | SveIntBinU { .. } | SveAddImm { .. } | SveFpBin { .. } | SveFpUn { .. }
+                | SveFmla { .. } | SveScvtf { .. } | SveIntCmp { .. } | SveFpCmp { .. }
+                | SveReduce { .. } | SveFadda { .. } | SveRev { .. } | SveExt { .. }
+                | SveZip { .. } | SveUzp { .. } | SveTrn { .. } | SveTbl { .. }
+                | SveCompact { .. } | SveSplice { .. } | Cterm { .. }
+        )
+    }
+
+    pub fn is_neon(&self) -> bool {
+        use Inst::*;
+        matches!(
+            self,
+            NeonLd1 { .. } | NeonSt1 { .. } | NeonDupX { .. } | NeonDupLane0 { .. }
+                | NeonMoviZero { .. } | NeonFpBin { .. } | NeonFpUn { .. } | NeonFmla { .. }
+                | NeonIntBin { .. } | NeonFcm { .. } | NeonCm { .. } | NeonBsl { .. }
+                | NeonFaddv { .. } | NeonAddv { .. } | NeonUmov { .. } | NeonInsX { .. }
+        )
+    }
+
+    /// Register reads/writes for dependence tracking. Appends into the
+    /// caller-owned buffers (cleared here) to avoid per-inst allocation
+    /// on the timed path.
+    pub fn deps(&self, reads: &mut Vec<RegId>, writes: &mut Vec<RegId>) {
+        use Inst::*;
+        use RegId::*;
+        reads.clear();
+        writes.clear();
+        let rx = |r: &mut Vec<RegId>, n: u8| {
+            if n != 31 {
+                r.push(X(n));
+            }
+        };
+        match *self {
+            MovImm { xd, .. } => rx(writes, xd),
+            MovReg { xd, xn } => {
+                rx(reads, xn);
+                rx(writes, xd);
+            }
+            AddImm { xd, xn, .. } | LslImm { xd, xn, .. } | LsrImm { xd, xn, .. }
+            | AsrImm { xd, xn, .. } | AndImm { xd, xn, .. } => {
+                rx(reads, xn);
+                rx(writes, xd);
+            }
+            AddReg { xd, xn, xm, .. } | SubReg { xd, xn, xm } | Udiv { xd, xn, xm }
+            | LogReg { xd, xn, xm, .. } => {
+                rx(reads, xn);
+                rx(reads, xm);
+                rx(writes, xd);
+            }
+            Madd { xd, xn, xm, xa } => {
+                rx(reads, xn);
+                rx(reads, xm);
+                rx(reads, xa);
+                rx(writes, xd);
+            }
+            Csel { xd, xn, xm, .. } => {
+                rx(reads, xn);
+                rx(reads, xm);
+                reads.push(Nzcv);
+                rx(writes, xd);
+            }
+            Ldr { xt, base, off, .. } => {
+                rx(reads, base);
+                if let MemOff::RegLsl(xm, _) = off {
+                    rx(reads, xm);
+                }
+                rx(writes, xt);
+            }
+            Str { xt, base, off, .. } => {
+                rx(reads, xt);
+                rx(reads, base);
+                if let MemOff::RegLsl(xm, _) = off {
+                    rx(reads, xm);
+                }
+            }
+            LdrFp { vt, base, off, .. } => {
+                rx(reads, base);
+                if let MemOff::RegLsl(xm, _) = off {
+                    rx(reads, xm);
+                }
+                writes.push(Z(vt));
+            }
+            StrFp { vt, base, off, .. } => {
+                reads.push(Z(vt));
+                rx(reads, base);
+                if let MemOff::RegLsl(xm, _) = off {
+                    rx(reads, xm);
+                }
+            }
+            CmpImm { xn, .. } => {
+                rx(reads, xn);
+                writes.push(Nzcv);
+            }
+            CmpReg { xn, xm } => {
+                rx(reads, xn);
+                rx(reads, xm);
+                writes.push(Nzcv);
+            }
+            B { .. } | Ret | Halt | Nop => {}
+            BCond { .. } => reads.push(Nzcv),
+            Cbz { xn, .. } | Cbnz { xn, .. } => rx(reads, xn),
+            FmovImm { dd, .. } => writes.push(Z(dd)),
+            FmovXtoD { dd, xn } => {
+                rx(reads, xn);
+                writes.push(Z(dd));
+            }
+            FmovReg { dd, dn, .. } => {
+                reads.push(Z(dn));
+                writes.push(Z(dd));
+            }
+            FmovDtoX { xd, dn } => {
+                reads.push(Z(dn));
+                rx(writes, xd);
+            }
+            FpBin { dd, dn, dm, .. } => {
+                reads.push(Z(dn));
+                reads.push(Z(dm));
+                writes.push(Z(dd));
+            }
+            FpUn { dd, dn, .. } => {
+                reads.push(Z(dn));
+                writes.push(Z(dd));
+            }
+            Fmadd { dd, dn, dm, da, .. } => {
+                reads.push(Z(dn));
+                reads.push(Z(dm));
+                reads.push(Z(da));
+                writes.push(Z(dd));
+            }
+            Fcmp { dn, dm, .. } => {
+                reads.push(Z(dn));
+                reads.push(Z(dm));
+                writes.push(Nzcv);
+            }
+            Scvtf { dd, xn, .. } => {
+                rx(reads, xn);
+                writes.push(Z(dd));
+            }
+            Fcvtzs { xd, dn, .. } => {
+                reads.push(Z(dn));
+                rx(writes, xd);
+            }
+            OpaqueCall { dd, dn, dm, .. } => {
+                reads.push(Z(dn));
+                if let Some(m) = dm {
+                    reads.push(Z(m));
+                }
+                writes.push(Z(dd));
+            }
+            NeonLd1 { vt, base, off, .. } => {
+                rx(reads, base);
+                if let MemOff::RegLsl(xm, _) = off {
+                    rx(reads, xm);
+                }
+                writes.push(Z(vt));
+            }
+            NeonSt1 { vt, base, off, .. } => {
+                reads.push(Z(vt));
+                rx(reads, base);
+                if let MemOff::RegLsl(xm, _) = off {
+                    rx(reads, xm);
+                }
+            }
+            NeonDupX { vd, xn, .. } => {
+                rx(reads, xn);
+                writes.push(Z(vd));
+            }
+            NeonDupLane0 { vd, vn, .. } => {
+                reads.push(Z(vn));
+                writes.push(Z(vd));
+            }
+            NeonMoviZero { vd } => writes.push(Z(vd)),
+            NeonFpBin { vd, vn, vm, .. }
+            | NeonIntBin { vd, vn, vm, .. }
+            | NeonFcm { vd, vn, vm, .. }
+            | NeonCm { vd, vn, vm, .. } => {
+                reads.push(Z(vn));
+                reads.push(Z(vm));
+                writes.push(Z(vd));
+            }
+            NeonFpUn { vd, vn, .. } => {
+                reads.push(Z(vn));
+                writes.push(Z(vd));
+            }
+            NeonFmla { vd, vn, vm, .. } => {
+                reads.push(Z(vd));
+                reads.push(Z(vn));
+                reads.push(Z(vm));
+                writes.push(Z(vd));
+            }
+            NeonBsl { vd, vn, vm } => {
+                reads.push(Z(vd));
+                reads.push(Z(vn));
+                reads.push(Z(vm));
+                writes.push(Z(vd));
+            }
+            NeonFaddv { dd, vn, .. } | NeonAddv { dd, vn, .. } => {
+                reads.push(Z(vn));
+                writes.push(Z(dd));
+            }
+            NeonUmov { xd, vn, .. } => {
+                reads.push(Z(vn));
+                rx(writes, xd);
+            }
+            NeonInsX { vd, xn, .. } => {
+                reads.push(Z(vd));
+                rx(reads, xn);
+                writes.push(Z(vd));
+            }
+            Ptrue { pd, s, .. } => {
+                writes.push(P(pd));
+                if s {
+                    writes.push(Nzcv);
+                }
+            }
+            Pfalse { pd } => writes.push(P(pd)),
+            While { pd, xn, xm, .. } => {
+                rx(reads, xn);
+                rx(reads, xm);
+                writes.push(P(pd));
+                writes.push(Nzcv);
+            }
+            Ptest { pg, pn } => {
+                reads.push(P(pg));
+                reads.push(P(pn));
+                writes.push(Nzcv);
+            }
+            Pnext { pdn, pg, .. } => {
+                reads.push(P(pdn));
+                reads.push(P(pg));
+                writes.push(P(pdn));
+                writes.push(Nzcv);
+            }
+            Brk { pd, pg, pn, s, .. } => {
+                reads.push(P(pg));
+                reads.push(P(pn));
+                writes.push(P(pd));
+                if s {
+                    writes.push(Nzcv);
+                }
+            }
+            PredLogic { pd, pg, pn, pm, s, .. } => {
+                reads.push(P(pg));
+                reads.push(P(pn));
+                reads.push(P(pm));
+                writes.push(P(pd));
+                if s {
+                    writes.push(Nzcv);
+                }
+            }
+            Rdffr { pd, pg, s } => {
+                reads.push(Ffr);
+                if let Some(g) = pg {
+                    reads.push(P(g));
+                }
+                writes.push(P(pd));
+                if s {
+                    writes.push(Nzcv);
+                }
+            }
+            Setffr => writes.push(Ffr),
+            Wrffr { pn } => {
+                reads.push(P(pn));
+                writes.push(Ffr);
+            }
+            Cnt { xd, .. } => rx(writes, xd),
+            IncDec { xdn, .. } => {
+                rx(reads, xdn);
+                rx(writes, xdn);
+            }
+            IncpX { xdn, pm, .. } => {
+                rx(reads, xdn);
+                reads.push(P(pm));
+                rx(writes, xdn);
+            }
+            Index { zd, base, step, .. } => {
+                if let RegOrImm::Reg(r) = base {
+                    rx(reads, r);
+                }
+                if let RegOrImm::Reg(r) = step {
+                    rx(reads, r);
+                }
+                writes.push(Z(zd));
+            }
+            DupImm { zd, .. } | FdupImm { zd, .. } => writes.push(Z(zd)),
+            DupX { zd, xn, .. } => {
+                rx(reads, xn);
+                writes.push(Z(zd));
+            }
+            CpyX { zd, pg, xn, .. } => {
+                reads.push(Z(zd));
+                reads.push(P(pg));
+                rx(reads, xn);
+                writes.push(Z(zd));
+            }
+            Sel { zd, pg, zn, zm, .. } => {
+                reads.push(P(pg));
+                reads.push(Z(zn));
+                reads.push(Z(zm));
+                writes.push(Z(zd));
+            }
+            Movprfx { zd, zn, pg } => {
+                reads.push(Z(zn));
+                if let Some((g, _)) = pg {
+                    reads.push(P(g));
+                }
+                writes.push(Z(zd));
+            }
+            Last { xd, pg, zn, .. } => {
+                reads.push(P(pg));
+                reads.push(Z(zn));
+                rx(writes, xd);
+            }
+            SveLd1 { zt, pg, base, off, ff, .. } => {
+                reads.push(P(pg));
+                rx(reads, base);
+                if let SveMemOff::RegScaled(xm) = off {
+                    rx(reads, xm);
+                }
+                if ff {
+                    reads.push(Ffr);
+                    writes.push(Ffr);
+                }
+                writes.push(Z(zt));
+            }
+            SveLd1R { zt, pg, base, .. } => {
+                reads.push(P(pg));
+                rx(reads, base);
+                writes.push(Z(zt));
+            }
+            SveSt1 { zt, pg, base, off, .. } => {
+                reads.push(Z(zt));
+                reads.push(P(pg));
+                rx(reads, base);
+                if let SveMemOff::RegScaled(xm) = off {
+                    rx(reads, xm);
+                }
+            }
+            SveLdGather { zt, pg, addr, ff, .. } => {
+                reads.push(P(pg));
+                match addr {
+                    GatherAddr::VecImm(zn, _) => reads.push(Z(zn)),
+                    GatherAddr::BaseVec { xn, zm, .. } => {
+                        rx(reads, xn);
+                        reads.push(Z(zm));
+                    }
+                }
+                if ff {
+                    reads.push(Ffr);
+                    writes.push(Ffr);
+                }
+                writes.push(Z(zt));
+            }
+            SveStScatter { zt, pg, addr, .. } => {
+                reads.push(Z(zt));
+                reads.push(P(pg));
+                match addr {
+                    GatherAddr::VecImm(zn, _) => reads.push(Z(zn)),
+                    GatherAddr::BaseVec { xn, zm, .. } => {
+                        rx(reads, xn);
+                        reads.push(Z(zm));
+                    }
+                }
+            }
+            SveIntBin { zdn, pg, zm, .. } => {
+                reads.push(Z(zdn));
+                reads.push(P(pg));
+                reads.push(Z(zm));
+                writes.push(Z(zdn));
+            }
+            SveIntBinU { zd, zn, zm, .. } => {
+                reads.push(Z(zn));
+                reads.push(Z(zm));
+                writes.push(Z(zd));
+            }
+            SveAddImm { zdn, .. } => {
+                reads.push(Z(zdn));
+                writes.push(Z(zdn));
+            }
+            SveFpBin { zdn, pg, zm, .. } => {
+                reads.push(Z(zdn));
+                reads.push(P(pg));
+                reads.push(Z(zm));
+                writes.push(Z(zdn));
+            }
+            SveFpUn { zd, pg, zn, .. } => {
+                reads.push(Z(zd));
+                reads.push(P(pg));
+                reads.push(Z(zn));
+                writes.push(Z(zd));
+            }
+            SveFmla { zda, pg, zn, zm, .. } => {
+                reads.push(Z(zda));
+                reads.push(P(pg));
+                reads.push(Z(zn));
+                reads.push(Z(zm));
+                writes.push(Z(zda));
+            }
+            SveScvtf { zd, pg, zn, .. } => {
+                reads.push(Z(zd));
+                reads.push(P(pg));
+                reads.push(Z(zn));
+                writes.push(Z(zd));
+            }
+            SveIntCmp { pd, pg, zn, rhs, .. } => {
+                reads.push(P(pg));
+                reads.push(Z(zn));
+                if let ZmOrImm::Z(m) = rhs {
+                    reads.push(Z(m));
+                }
+                writes.push(P(pd));
+                writes.push(Nzcv);
+            }
+            SveFpCmp { pd, pg, zn, rhs, .. } => {
+                reads.push(P(pg));
+                reads.push(Z(zn));
+                if let Some(m) = rhs {
+                    reads.push(Z(m));
+                }
+                writes.push(P(pd));
+                writes.push(Nzcv);
+            }
+            SveReduce { vd, pg, zn, .. } => {
+                reads.push(P(pg));
+                reads.push(Z(zn));
+                writes.push(Z(vd));
+            }
+            SveFadda { vdn, pg, zm, .. } => {
+                reads.push(Z(vdn));
+                reads.push(P(pg));
+                reads.push(Z(zm));
+                writes.push(Z(vdn));
+            }
+            SveRev { zd, zn, .. } => {
+                reads.push(Z(zn));
+                writes.push(Z(zd));
+            }
+            SveExt { zdn, zm, .. } => {
+                reads.push(Z(zdn));
+                reads.push(Z(zm));
+                writes.push(Z(zdn));
+            }
+            SveZip { zd, zn, zm, .. } | SveUzp { zd, zn, zm, .. } | SveTrn { zd, zn, zm, .. }
+            | SveTbl { zd, zn, zm, .. } => {
+                reads.push(Z(zn));
+                reads.push(Z(zm));
+                writes.push(Z(zd));
+            }
+            SveCompact { zd, pg, zn, .. } => {
+                reads.push(P(pg));
+                reads.push(Z(zn));
+                writes.push(Z(zd));
+            }
+            SveSplice { zdn, pg, zm, .. } => {
+                reads.push(Z(zdn));
+                reads.push(P(pg));
+                reads.push(Z(zm));
+                writes.push(Z(zdn));
+            }
+            Cterm { xn, xm, .. } => {
+                rx(reads, xn);
+                rx(reads, xm);
+                reads.push(Nzcv);
+                writes.push(Nzcv);
+            }
+        }
+    }
+
+    /// Branch target, if this is a direct branch.
+    pub fn branch_target(&self) -> Option<usize> {
+        match *self {
+            Inst::B { target }
+            | Inst::BCond { target, .. }
+            | Inst::Cbz { target, .. }
+            | Inst::Cbnz { target, .. } => Some(target),
+            _ => None,
+        }
+    }
+
+    pub fn is_cond_branch(&self) -> bool {
+        matches!(self, Inst::BCond { .. } | Inst::Cbz { .. } | Inst::Cbnz { .. })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn classes_are_consistent() {
+        let i = Inst::SveFmla { zda: 0, pg: 0, zn: 1, zm: 2, dbl: true, sub: false };
+        assert_eq!(i.class(), UopClass::VecFpFma);
+        assert!(i.class().is_vector());
+        assert!(i.is_sve());
+        assert!(!i.is_neon());
+
+        let g = Inst::SveLdGather {
+            zt: 0,
+            pg: 0,
+            esize: Esize::D,
+            addr: GatherAddr::VecImm(1, 0),
+            ff: false,
+        };
+        assert_eq!(g.class(), UopClass::VecGather);
+        assert!(g.class().is_mem());
+
+        let r = Inst::SveFadda { vdn: 0, pg: 0, zm: 1, dbl: true };
+        assert!(r.class().is_cross_lane());
+    }
+
+    #[test]
+    fn deps_track_reads_and_writes() {
+        let mut r = vec![];
+        let mut w = vec![];
+        Inst::SveFmla { zda: 3, pg: 1, zn: 4, zm: 5, dbl: true, sub: false }.deps(&mut r, &mut w);
+        assert!(r.contains(&RegId::Z(3)), "fmla reads its accumulator");
+        assert!(r.contains(&RegId::P(1)));
+        assert!(r.contains(&RegId::Z(4)) && r.contains(&RegId::Z(5)));
+        assert_eq!(w, vec![RegId::Z(3)]);
+
+        Inst::While { pd: 0, esize: Esize::D, xn: 4, xm: 3, unsigned: false }.deps(&mut r, &mut w);
+        assert!(w.contains(&RegId::P(0)) && w.contains(&RegId::Nzcv));
+    }
+
+    #[test]
+    fn xzr_never_appears_in_deps() {
+        let mut r = vec![];
+        let mut w = vec![];
+        Inst::Madd { xd: 0, xn: 31, xm: 2, xa: 31 }.deps(&mut r, &mut w);
+        assert!(!r.contains(&RegId::X(31)));
+        Inst::MovImm { xd: 31, imm: 5 }.deps(&mut r, &mut w);
+        assert!(w.is_empty());
+    }
+
+    #[test]
+    fn first_fault_loads_read_and_write_ffr() {
+        let mut r = vec![];
+        let mut w = vec![];
+        Inst::SveLd1 {
+            zt: 0,
+            pg: 0,
+            esize: Esize::B,
+            base: 1,
+            off: SveMemOff::ImmVl(0),
+            ff: true,
+        }
+        .deps(&mut r, &mut w);
+        assert!(r.contains(&RegId::Ffr));
+        assert!(w.contains(&RegId::Ffr));
+    }
+
+    #[test]
+    fn branch_helpers() {
+        assert_eq!(Inst::B { target: 7 }.branch_target(), Some(7));
+        assert!(Inst::BCond { cond: Cond::FIRST, target: 0 }.is_cond_branch());
+        assert!(!Inst::B { target: 0 }.is_cond_branch());
+        assert_eq!(Inst::Ret.branch_target(), None);
+    }
+}

@@ -1,0 +1,8 @@
+//! Instruction set: AArch64 scalar subset, Advanced SIMD (NEON) 128-bit
+//! baseline subset, and the SVE subset covering every mechanism the paper
+//! describes (§2), plus the encoding-budget model of Fig. 7.
+
+pub mod encoding;
+mod inst;
+
+pub use inst::*;

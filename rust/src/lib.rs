@@ -1,0 +1,71 @@
+//! # sve-repro — a reproduction of "The ARM Scalable Vector Extension"
+//! (Stephens et al., IEEE Micro 2017, DOI 10.1109/MM.2017.35)
+//!
+//! A three-layer Rust + JAX/Pallas system (see `DESIGN.md`):
+//!
+//! * [`arch`] — scalable architectural state: Z0–Z31 (128–2048 bit),
+//!   P0–P15, FFR, NZCV with the SVE overloading of Table 1, ZCR vector
+//!   length virtualization.
+//! * [`mem`] — paged memory with translation faults (the substrate for
+//!   first-faulting loads, §2.3.3).
+//! * [`isa`] — the instruction set: an AArch64 scalar subset, an Advanced
+//!   SIMD (NEON) 128-bit baseline subset, and the SVE subset covering
+//!   every mechanism in the paper; plus the encoding-budget model of
+//!   Fig. 7.
+//! * [`exec`] — the functional executor (architectural semantics).
+//! * [`asm`] — program builder with labels.
+//! * [`compiler`] — the stand-in for the paper's experimental
+//!   auto-vectorizing compiler (§3): a loop IR with scalar, NEON and SVE
+//!   code generators.
+//! * [`uarch`] — the trace-driven out-of-order timing model configured
+//!   per Table 2.
+//! * [`workloads`] — the HPC proxy benchmark suite behind Fig. 8.
+//! * [`coordinator`] — (benchmark × ISA × VL) sweep runner, stats and
+//!   report generation.
+//! * [`runtime`] — PJRT golden-model loader (`artifacts/*.hlo.txt`,
+//!   produced once at build time by `python/compile/aot.py`).
+
+pub mod arch;
+pub mod asm;
+pub mod bench_util;
+pub mod compiler;
+pub mod coordinator;
+pub mod csvutil;
+pub mod exec;
+pub mod isa;
+pub mod mem;
+pub mod proptest_lite;
+pub mod rng;
+pub mod runtime;
+pub mod uarch;
+pub mod workloads;
+
+/// Minimum legal SVE vector length in bits (§2.2).
+pub const VL_MIN_BITS: usize = 128;
+/// Maximum architectural SVE vector length in bits (§2.2).
+pub const VL_MAX_BITS: usize = 2048;
+/// Vector length granule (§2.2: "any multiple of 128 bits").
+pub const VL_STEP_BITS: usize = 128;
+/// Maximum vector length in bytes.
+pub const VL_MAX_BYTES: usize = VL_MAX_BITS / 8;
+
+/// Validate a vector length choice per §2.2.
+pub fn vl_is_legal(vl_bits: usize) -> bool {
+    (VL_MIN_BITS..=VL_MAX_BITS).contains(&vl_bits) && vl_bits % VL_STEP_BITS == 0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn legal_vector_lengths() {
+        for vl in (VL_MIN_BITS..=VL_MAX_BITS).step_by(VL_STEP_BITS) {
+            assert!(vl_is_legal(vl), "VL {vl} must be legal");
+        }
+        assert!(!vl_is_legal(0));
+        assert!(!vl_is_legal(64));
+        assert!(!vl_is_legal(192)); // multiple of 64 but not 128
+        assert!(!vl_is_legal(2176)); // beyond the architectural max
+    }
+}

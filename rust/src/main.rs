@@ -1,0 +1,151 @@
+//! `sve` — CLI for the SVE-paper reproduction.
+//!
+//! Subcommands:
+//!   run <bench> [--isa scalar|neon|sve] [--vl BITS]   one benchmark
+//!   sweep [--vls 128,256,512] [--out reports/]        the Fig. 8 sweep
+//!   trace <bench> [--vl BITS] [--limit N]             Fig. 3-style trace
+//!   encoding                                          Fig. 7 report
+//!   validate [--artifacts DIR]                        PJRT cross-check
+//!   list                                              benchmarks
+
+use sve_repro::coordinator::{self, Isa};
+use sve_repro::csvutil::Table;
+use sve_repro::exec::Executor;
+use sve_repro::isa::encoding;
+use sve_repro::uarch::UarchConfig;
+use sve_repro::workloads;
+
+fn flag(args: &[String], name: &str) -> Option<String> {
+    args.iter().position(|a| a == name).and_then(|i| args.get(i + 1).cloned())
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(String::as_str).unwrap_or("help");
+    match cmd {
+        "list" => {
+            for n in workloads::NAMES {
+                let w = workloads::build(n);
+                println!("{n:<14} {}", w.group.label());
+            }
+        }
+        "run" => {
+            let bench = args.get(1).expect("usage: sve run <bench>");
+            let name = workloads::NAMES
+                .iter()
+                .find(|n| *n == bench)
+                .unwrap_or_else(|| panic!("unknown benchmark {bench}"));
+            let isa = match flag(&args, "--isa").as_deref() {
+                Some("scalar") => Isa::Scalar,
+                Some("neon") => Isa::Neon,
+                _ => {
+                    let vl = flag(&args, "--vl").and_then(|v| v.parse().ok()).unwrap_or(256);
+                    Isa::Sve(vl)
+                }
+            };
+            match coordinator::run_one(name, isa) {
+                Ok(r) => {
+                    println!(
+                        "{} on {}: {} insts, {} cycles, ipc {:.2}, vectorized={}, \
+                         vector-fraction {:.1}%, L1D miss {:.2}%",
+                        r.bench,
+                        r.isa.label(),
+                        r.insts,
+                        r.cycles,
+                        r.ipc,
+                        r.vectorized,
+                        100.0 * r.vector_fraction,
+                        100.0 * r.l1d_miss_rate
+                    );
+                }
+                Err(e) => {
+                    eprintln!("FAILED: {e}");
+                    std::process::exit(1);
+                }
+            }
+        }
+        "sweep" => {
+            let vls: Vec<usize> = flag(&args, "--vls")
+                .unwrap_or_else(|| "128,256,512".into())
+                .split(',')
+                .map(|v| v.parse().expect("vl"))
+                .collect();
+            let out = flag(&args, "--out").unwrap_or_else(|| "reports".into());
+            let rows = coordinator::run_fig8(&vls, &workloads::NAMES).expect("sweep");
+            let t = coordinator::fig8_table(&rows, &vls);
+            println!("{}", t.to_markdown());
+            println!("{}", coordinator::fig8_chart(&rows, &vls));
+            t.write_csv(format!("{out}/fig8.csv")).expect("write csv");
+            println!("wrote {out}/fig8.csv");
+        }
+        "trace" => {
+            let bench = args.get(1).expect("usage: sve trace <bench>");
+            let vl = flag(&args, "--vl").and_then(|v| v.parse().ok()).unwrap_or(256);
+            let limit: u64 = flag(&args, "--limit").and_then(|v| v.parse().ok()).unwrap_or(64);
+            let w = workloads::build(bench);
+            let c = w.compile(sve_repro::compiler::Target::Sve);
+            let mut ex = Executor::new(vl, w.mem.clone());
+            let mut pipe = sve_repro::uarch::Pipeline::new(UarchConfig::default(), vl);
+            pipe.enable_trace();
+            // budget exhaustion is expected: we trace only a prefix
+            let _ = ex.run_with(&c.program, limit, |i| pipe.on_retire(&i));
+            let tr = pipe.trace.take().unwrap_or_default();
+            println!("{}", sve_repro::uarch::trace::render_timeline(&c.program, &tr));
+            println!("(traced prefix: {} cycles)", pipe.result.cycles);
+        }
+        "encoding" => {
+            let (groups, total) = encoding::sve_region_report();
+            let mut t = Table::new(vec!["group", "points", "share of 2^28"]);
+            for g in &groups {
+                t.push_row(vec![
+                    g.group.clone(),
+                    g.points.to_string(),
+                    format!("{:.3}%", 100.0 * g.share_of_region),
+                ]);
+            }
+            println!("{}", t.to_markdown());
+            println!(
+                "total: {total} of {} encoding points ({:.2}%) — Fig. 7: SVE fits one \
+                 28-bit region",
+                encoding::SVE_REGION_POINTS,
+                100.0 * total as f64 / encoding::SVE_REGION_POINTS as f64
+            );
+            let (d, c) = encoding::constructive_counterfactual();
+            println!(
+                "§4 counterfactual (full {}-opcode dp set): destructive+movprfx = {d} \
+                 points; fully-constructive = {c} points ({}x the whole region)",
+                encoding::FULL_DP_OPCODES,
+                c / encoding::SVE_REGION_POINTS
+            );
+        }
+        "validate" => {
+            let dir = flag(&args, "--artifacts").unwrap_or_else(|| "artifacts".into());
+            match sve_repro::runtime::validate_all(&dir) {
+                Ok(vs) => {
+                    for v in &vs {
+                        println!(
+                            "{:<8} {} (max |err| = {:.3e})",
+                            v.name,
+                            if v.ok { "OK" } else { "MISMATCH" },
+                            v.max_abs_err
+                        );
+                    }
+                    if vs.iter().any(|v| !v.ok) {
+                        std::process::exit(1);
+                    }
+                }
+                Err(e) => {
+                    eprintln!("validation failed: {e:#} (run `make artifacts` first)");
+                    std::process::exit(1);
+                }
+            }
+        }
+        _ => {
+            println!(
+                "sve — ARM SVE paper reproduction\n\
+                 usage: sve <list|run|sweep|trace|encoding|validate> [options]\n\
+                 see `cargo doc` and README.md"
+            );
+        }
+    }
+}

@@ -1,0 +1,334 @@
+//! Paged memory with translation faults — the substrate first-faulting
+//! loads (§2.3.3) are defined against.
+//!
+//! Memory is sparse: 4 KiB pages allocated on [`Memory::map`]. Accessing
+//! an unmapped page returns [`MemFault`] instead of panicking, which the
+//! executor turns either into a trap (scalar access, or the first active
+//! element of a first-fault load) or into an FFR update (any other
+//! element of a first-fault load).
+
+use std::collections::HashMap;
+use std::hash::{BuildHasherDefault, Hasher};
+
+/// Trivial multiply-mix hasher for page numbers (SipHash is the hot spot
+/// otherwise — pages are already well-distributed keys).
+#[derive(Default)]
+pub struct PageHasher(u64);
+
+impl Hasher for PageHasher {
+    fn finish(&self) -> u64 {
+        self.0
+    }
+    fn write(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 = (self.0 ^ b as u64).wrapping_mul(0x100000001b3);
+        }
+    }
+    fn write_u64(&mut self, v: u64) {
+        self.0 = v.wrapping_mul(0x9E3779B97F4A7C15);
+        self.0 ^= self.0 >> 29;
+    }
+}
+
+pub const PAGE_SIZE: usize = 4096;
+pub const PAGE_SHIFT: u32 = 12;
+
+/// A failed translation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct MemFault {
+    pub addr: u64,
+    pub is_store: bool,
+}
+
+/// Sparse paged memory.
+#[derive(Default, Clone)]
+pub struct Memory {
+    pages: HashMap<u64, Box<[u8; PAGE_SIZE]>, BuildHasherDefault<PageHasher>>,
+    /// Monotone bump pointer for [`Memory::alloc`].
+    brk: u64,
+}
+
+impl Memory {
+    pub fn new() -> Self {
+        Memory { pages: HashMap::default(), brk: 0x0001_0000 }
+    }
+
+    #[inline]
+    fn page_of(addr: u64) -> u64 {
+        addr >> PAGE_SHIFT
+    }
+
+    /// Map all pages covering `[base, base+len)` (idempotent).
+    pub fn map(&mut self, base: u64, len: u64) {
+        if len == 0 {
+            return;
+        }
+        let first = Self::page_of(base);
+        let last = Self::page_of(base + len - 1);
+        for p in first..=last {
+            self.pages.entry(p).or_insert_with(|| Box::new([0u8; PAGE_SIZE]));
+        }
+    }
+
+    /// Remove the mapping of the page containing `addr` (for fault tests).
+    pub fn unmap_page(&mut self, addr: u64) {
+        self.pages.remove(&Self::page_of(addr));
+    }
+
+    pub fn is_mapped(&self, addr: u64) -> bool {
+        self.pages.contains_key(&Self::page_of(addr))
+    }
+
+    /// Bump-allocate `len` bytes with `align` alignment; maps the range.
+    /// Guarantees one full unmapped guard page between allocations, so
+    /// runaway kernels fault quickly (and first-fault loads running off
+    /// the end of a buffer genuinely fault, as in Fig. 4/5).
+    pub fn alloc(&mut self, len: u64, align: u64) -> u64 {
+        assert!(align.is_power_of_two());
+        let base = (self.brk + align - 1) & !(align - 1);
+        self.map(base, len);
+        self.brk = ((base + len + PAGE_SIZE as u64) & !(PAGE_SIZE as u64 - 1)) + PAGE_SIZE as u64;
+        base
+    }
+
+    /// Read up to 8 bytes (little-endian) as a u64. The access may cross
+    /// a page boundary; it faults if *any* byte is unmapped.
+    #[inline]
+    pub fn read(&self, addr: u64, size: usize) -> Result<u64, MemFault> {
+        debug_assert!(size <= 8);
+        // fast path: fully inside one page
+        let off = (addr & (PAGE_SIZE as u64 - 1)) as usize;
+        if off + size <= PAGE_SIZE {
+            let page = self
+                .pages
+                .get(&Self::page_of(addr))
+                .ok_or(MemFault { addr, is_store: false })?;
+            let mut v = 0u64;
+            for k in 0..size {
+                v |= (page[off + k] as u64) << (8 * k);
+            }
+            Ok(v)
+        } else {
+            let mut v = 0u64;
+            for k in 0..size {
+                v |= (self.read_byte(addr + k as u64)? as u64) << (8 * k);
+            }
+            Ok(v)
+        }
+    }
+
+    #[inline]
+    pub fn read_byte(&self, addr: u64) -> Result<u8, MemFault> {
+        let page = self
+            .pages
+            .get(&Self::page_of(addr))
+            .ok_or(MemFault { addr, is_store: false })?;
+        Ok(page[(addr & (PAGE_SIZE as u64 - 1)) as usize])
+    }
+
+    /// Write up to 8 bytes (little-endian).
+    #[inline]
+    pub fn write(&mut self, addr: u64, size: usize, v: u64) -> Result<(), MemFault> {
+        debug_assert!(size <= 8);
+        let off = (addr & (PAGE_SIZE as u64 - 1)) as usize;
+        if off + size <= PAGE_SIZE {
+            let page = self
+                .pages
+                .get_mut(&Self::page_of(addr))
+                .ok_or(MemFault { addr, is_store: true })?;
+            for k in 0..size {
+                page[off + k] = (v >> (8 * k)) as u8;
+            }
+            Ok(())
+        } else {
+            for k in 0..size {
+                self.write_byte(addr + k as u64, (v >> (8 * k)) as u8)?;
+            }
+            Ok(())
+        }
+    }
+
+    #[inline]
+    pub fn write_byte(&mut self, addr: u64, v: u8) -> Result<(), MemFault> {
+        let page = self
+            .pages
+            .get_mut(&Self::page_of(addr))
+            .ok_or(MemFault { addr, is_store: true })?;
+        page[(addr & (PAGE_SIZE as u64 - 1)) as usize] = v;
+        Ok(())
+    }
+
+    // ---- typed convenience accessors (workload setup / golden checks) ----
+
+    pub fn read_u64(&self, addr: u64) -> Result<u64, MemFault> {
+        self.read(addr, 8)
+    }
+
+    pub fn write_u64(&mut self, addr: u64, v: u64) -> Result<(), MemFault> {
+        self.write(addr, 8, v)
+    }
+
+    pub fn read_f64(&self, addr: u64) -> Result<f64, MemFault> {
+        Ok(f64::from_bits(self.read(addr, 8)?))
+    }
+
+    pub fn write_f64(&mut self, addr: u64, v: f64) -> Result<(), MemFault> {
+        self.write(addr, 8, v.to_bits())
+    }
+
+    pub fn read_f32(&self, addr: u64) -> Result<f32, MemFault> {
+        Ok(f32::from_bits(self.read(addr, 4)? as u32))
+    }
+
+    pub fn write_f32(&mut self, addr: u64, v: f32) -> Result<(), MemFault> {
+        self.write(addr, 4, v.to_bits() as u64)
+    }
+
+    pub fn read_u32(&self, addr: u64) -> Result<u32, MemFault> {
+        Ok(self.read(addr, 4)? as u32)
+    }
+
+    pub fn write_u32(&mut self, addr: u64, v: u32) -> Result<(), MemFault> {
+        self.write(addr, 4, v as u64)
+    }
+
+    /// Bulk fill of f64 slice.
+    pub fn write_f64_slice(&mut self, base: u64, xs: &[f64]) {
+        for (i, &v) in xs.iter().enumerate() {
+            self.write_f64(base + 8 * i as u64, v).expect("mapped");
+        }
+    }
+
+    pub fn read_f64_slice(&self, base: u64, n: usize) -> Vec<f64> {
+        (0..n).map(|i| self.read_f64(base + 8 * i as u64).expect("mapped")).collect()
+    }
+
+    pub fn write_f32_slice(&mut self, base: u64, xs: &[f32]) {
+        for (i, &v) in xs.iter().enumerate() {
+            self.write_f32(base + 4 * i as u64, v).expect("mapped");
+        }
+    }
+
+    pub fn read_f32_slice(&self, base: u64, n: usize) -> Vec<f32> {
+        (0..n).map(|i| self.read_f32(base + 4 * i as u64).expect("mapped")).collect()
+    }
+
+    pub fn write_u64_slice(&mut self, base: u64, xs: &[u64]) {
+        for (i, &v) in xs.iter().enumerate() {
+            self.write_u64(base + 8 * i as u64, v).expect("mapped");
+        }
+    }
+
+    pub fn read_u64_slice(&self, base: u64, n: usize) -> Vec<u64> {
+        (0..n).map(|i| self.read_u64(base + 8 * i as u64).expect("mapped")).collect()
+    }
+
+    pub fn write_u32_slice(&mut self, base: u64, xs: &[u32]) {
+        for (i, &v) in xs.iter().enumerate() {
+            self.write_u32(base + 4 * i as u64, v).expect("mapped");
+        }
+    }
+
+    /// Number of mapped pages (footprint metric).
+    pub fn mapped_pages(&self) -> usize {
+        self.pages.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proptest_lite::check;
+
+    #[test]
+    fn unmapped_access_faults() {
+        let m = Memory::new();
+        assert_eq!(m.read(0x5000, 8), Err(MemFault { addr: 0x5000, is_store: false }));
+    }
+
+    #[test]
+    fn map_then_rw_roundtrip() {
+        let mut m = Memory::new();
+        m.map(0x1000, 64);
+        m.write(0x1008, 8, 0x1122_3344_5566_7788).unwrap();
+        assert_eq!(m.read(0x1008, 8).unwrap(), 0x1122_3344_5566_7788);
+        assert_eq!(m.read(0x1008, 4).unwrap(), 0x5566_7788);
+        assert_eq!(m.read(0x100C, 4).unwrap(), 0x1122_3344);
+    }
+
+    #[test]
+    fn cross_page_access_works_when_both_mapped() {
+        let mut m = Memory::new();
+        m.map(0x1000, 2 * PAGE_SIZE as u64);
+        let addr = 0x1000 + PAGE_SIZE as u64 - 4;
+        m.write(addr, 8, 0xAABB_CCDD_EEFF_0011).unwrap();
+        assert_eq!(m.read(addr, 8).unwrap(), 0xAABB_CCDD_EEFF_0011);
+    }
+
+    #[test]
+    fn cross_page_access_faults_on_second_page() {
+        let mut m = Memory::new();
+        m.map(0x1000, PAGE_SIZE as u64); // only the first page
+        let addr = 0x1000 + PAGE_SIZE as u64 - 4;
+        let r = m.read(addr, 8);
+        assert!(r.is_err());
+        let f = r.unwrap_err();
+        assert_eq!(Memory::page_of(f.addr), Memory::page_of(0x2000));
+    }
+
+    #[test]
+    fn unmap_reintroduces_faults() {
+        let mut m = Memory::new();
+        m.map(0x3000, 8);
+        m.write_u64(0x3000, 5).unwrap();
+        m.unmap_page(0x3000);
+        assert!(m.read_u64(0x3000).is_err());
+    }
+
+    #[test]
+    fn alloc_alignment_and_guard_pages() {
+        let mut m = Memory::new();
+        let a = m.alloc(100, 64);
+        assert_eq!(a % 64, 0);
+        let b = m.alloc(100, 4096);
+        assert_eq!(b % 4096, 0);
+        // guard page between allocations: the page right after a's last
+        // byte (rounded up) must be unmapped
+        let guard = (a + 100).div_ceil(PAGE_SIZE as u64) * PAGE_SIZE as u64;
+        assert!(!m.is_mapped(guard), "guard page must stay unmapped");
+        assert!(b > a + 100);
+    }
+
+    #[test]
+    fn f64_and_f32_roundtrip() {
+        let mut m = Memory::new();
+        m.map(0x8000, 64);
+        m.write_f64(0x8000, -2.25).unwrap();
+        assert_eq!(m.read_f64(0x8000).unwrap(), -2.25);
+        m.write_f32(0x8010, 9.5).unwrap();
+        assert_eq!(m.read_f32(0x8010).unwrap(), 9.5);
+    }
+
+    #[test]
+    fn prop_rw_roundtrip_any_size() {
+        check("prop_rw_roundtrip_any_size", 300, |g| {
+            let mut m = Memory::new();
+            let base = 0x1000 + g.u64_in(0, 4000);
+            m.map(0x1000, 3 * PAGE_SIZE as u64);
+            let size = g.usize_in(1, 8);
+            let v = g.u64();
+            let mask = if size == 8 { u64::MAX } else { (1u64 << (8 * size)) - 1 };
+            m.write(base, size, v).unwrap();
+            assert_eq!(m.read(base, size).unwrap(), v & mask);
+        });
+    }
+
+    #[test]
+    fn slice_helpers_roundtrip() {
+        let mut m = Memory::new();
+        let base = m.alloc(8 * 16, 8);
+        let xs: Vec<f64> = (0..16).map(|i| i as f64 * 1.5).collect();
+        m.write_f64_slice(base, &xs);
+        assert_eq!(m.read_f64_slice(base, 16), xs);
+    }
+}

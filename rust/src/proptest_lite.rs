@@ -1,0 +1,125 @@
+//! Minimal property-testing harness (the offline image has no proptest).
+//!
+//! `check(name, cases, |g| ...)` runs a property closure against `cases`
+//! randomly generated inputs drawn through the [`Gen`] handle. On failure
+//! it reports the failing case's seed so the case can be replayed exactly
+//! (`SVE_PROP_SEED=<seed> cargo test <name>`), which substitutes for
+//! proptest's shrinking: every case is independently reconstructible from
+//! its seed.
+
+use crate::rng::Rng;
+
+/// Per-case generator handle.
+pub struct Gen {
+    rng: Rng,
+    pub seed: u64,
+}
+
+impl Gen {
+    pub fn new(seed: u64) -> Self {
+        Gen { rng: Rng::new(seed), seed }
+    }
+
+    pub fn u64(&mut self) -> u64 {
+        self.rng.next_u64()
+    }
+
+    /// Inclusive range.
+    pub fn u64_in(&mut self, lo: u64, hi: u64) -> u64 {
+        assert!(lo <= hi);
+        lo + self.rng.below(hi - lo + 1)
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        self.u64_in(lo as u64, hi as u64) as usize
+    }
+
+    pub fn i64_in(&mut self, lo: i64, hi: i64) -> i64 {
+        assert!(lo <= hi);
+        lo.wrapping_add(self.rng.below((hi - lo + 1) as u64) as i64)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.bool()
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.f64_range(lo, hi)
+    }
+
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.usize_below(xs.len())]
+    }
+
+    /// Vector of `len` values built by `f`.
+    pub fn vec<T>(&mut self, len: usize, mut f: impl FnMut(&mut Self) -> T) -> Vec<T> {
+        (0..len).map(|_| f(self)).collect()
+    }
+}
+
+/// Run `prop` against `cases` generated cases. Panics (with the replay
+/// seed) on the first failure. The base seed can be overridden with
+/// `SVE_PROP_SEED` to replay a reported failure as case 0.
+pub fn check<F: FnMut(&mut Gen)>(name: &str, cases: usize, mut prop: F) {
+    let base = std::env::var("SVE_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse::<u64>().ok());
+    let seeds: Vec<u64> = match base {
+        Some(s) => vec![s],
+        None => {
+            // derive per-case seeds from the property name, so adding
+            // properties does not perturb existing ones
+            let h = name.bytes().fold(0xcbf29ce484222325u64, |a, b| {
+                (a ^ b as u64).wrapping_mul(0x100000001b3)
+            });
+            (0..cases as u64)
+                .map(|i| h.wrapping_add(i.wrapping_mul(0x9E3779B97F4A7C15)))
+                .collect()
+        }
+    };
+    for (i, &seed) in seeds.iter().enumerate() {
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut g = Gen::new(seed);
+            prop(&mut g);
+        }));
+        if let Err(e) = result {
+            eprintln!(
+                "property '{name}' failed at case {i}; replay with \
+                 SVE_PROP_SEED={seed}"
+            );
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ranges_are_inclusive() {
+        check("ranges_are_inclusive", 200, |g| {
+            let lo = g.i64_in(-50, 50);
+            let hi = lo + g.i64_in(0, 100);
+            let x = g.i64_in(lo, hi);
+            assert!(x >= lo && x <= hi);
+        });
+    }
+
+    #[test]
+    fn vec_has_requested_length() {
+        check("vec_has_requested_length", 50, |g| {
+            let n = g.usize_in(0, 64);
+            let v = g.vec(n, |g| g.u64());
+            assert_eq!(v.len(), n);
+        });
+    }
+
+    #[test]
+    #[should_panic]
+    fn failures_propagate() {
+        check("failures_propagate", 10, |g| {
+            assert!(g.u64_in(0, 10) > 10, "impossible");
+        });
+    }
+}

@@ -1,0 +1,156 @@
+//! Model configuration — defaults are exactly Table 2 of the paper.
+
+/// Microarchitecture parameters. `Default` reproduces Table 2: a
+/// "typical, medium sized, out-of-order microprocessor".
+#[derive(Clone, Debug)]
+pub struct UarchConfig {
+    // ---- Table 2 rows ----
+    /// L1 instruction cache: 64KB, 4-way, 64B line.
+    pub l1i_bytes: usize,
+    pub l1i_assoc: usize,
+    /// L1 data cache: 64KB, 4-way, 64B line, 12-entry MSHR.
+    pub l1d_bytes: usize,
+    pub l1d_assoc: usize,
+    pub mshrs: usize,
+    /// L2: 256KB, 8-way, 64B line.
+    pub l2_bytes: usize,
+    pub l2_assoc: usize,
+    pub line_bytes: usize,
+    /// Decode width: 4 instructions/cycle.
+    pub decode_width: u64,
+    /// Retire width: 4 instructions/cycle.
+    pub retire_width: u64,
+    /// Reorder buffer: 128 entries.
+    pub rob: usize,
+    /// Integer execution: 2 x 24-entry schedulers (symmetric ALUs).
+    pub int_issue_per_cycle: u64,
+    pub int_sched_entries: usize,
+    /// Vector/FP execution: 2 x 24-entry schedulers (symmetric FUs).
+    pub vec_issue_per_cycle: u64,
+    pub vec_sched_entries: usize,
+    /// Load/Store execution: 2 x 24-entry schedulers (2 loads / 1 store).
+    pub loads_per_cycle: u64,
+    pub stores_per_cycle: u64,
+    pub ls_sched_entries: usize,
+
+    // ---- §5 prose ----
+    /// "true dual-ported cache with the maximum access size being the
+    /// full cache line, 512 bits": vector accesses split into 64B ports.
+    pub port_bytes: usize,
+    /// "Accesses crossing cache lines take an associated penalty."
+    pub line_cross_penalty: u64,
+    /// "For operations that cross lanes ... the model takes a penalty
+    /// proportional to VL" — extra cycles per 128 bits of VL beyond 128.
+    pub cross_lane_per_128b: u64,
+
+    // ---- latencies ("set to correspond to RTL synthesis results") ----
+    pub l1_lat: u64,
+    pub l2_lat: u64,
+    pub mem_lat: u64,
+    pub branch_mispredict_penalty: u64,
+    /// opaque libm call cost (scalar pow/log, §5 EP)
+    pub opaque_lat: u64,
+}
+
+impl Default for UarchConfig {
+    fn default() -> Self {
+        UarchConfig {
+            l1i_bytes: 64 * 1024,
+            l1i_assoc: 4,
+            l1d_bytes: 64 * 1024,
+            l1d_assoc: 4,
+            mshrs: 12,
+            l2_bytes: 256 * 1024,
+            l2_assoc: 8,
+            line_bytes: 64,
+            decode_width: 4,
+            retire_width: 4,
+            rob: 128,
+            int_issue_per_cycle: 2,
+            int_sched_entries: 24,
+            vec_issue_per_cycle: 2,
+            vec_sched_entries: 24,
+            loads_per_cycle: 2,
+            stores_per_cycle: 1,
+            ls_sched_entries: 24,
+            port_bytes: 64,
+            line_cross_penalty: 2,
+            cross_lane_per_128b: 1,
+            l1_lat: 4,
+            l2_lat: 12,
+            mem_lat: 80,
+            branch_mispredict_penalty: 12,
+            opaque_lat: 40,
+        }
+    }
+}
+
+/// Execution latency (cycles) of a µop class, before memory/cross-lane
+/// adjustments. Scalar/vector ALU latencies follow common RTL-derived
+/// values for a mid-range core (A72-class).
+pub fn latency(class: crate::isa::UopClass, cfg: &UarchConfig) -> u64 {
+    use crate::isa::UopClass as C;
+    match class {
+        C::IntAlu | C::Nop => 1,
+        C::IntMul => 3,
+        C::IntDiv => 12,
+        C::Branch => 1,
+        C::FpAdd | C::FpCmp => 3,
+        C::FpMul => 3,
+        C::FpFma => 4,
+        C::FpDiv => 14,
+        C::FpSqrt => 16,
+        C::FpMov => 1,
+        C::OpaqueCall => cfg.opaque_lat,
+        C::VecIntAlu => 2,
+        C::VecFpAdd => 3,
+        C::VecFpMul => 3,
+        C::VecFpFma => 4,
+        C::VecFpDiv => 16,
+        C::VecFpSqrt => 18,
+        C::VecCmp => 2,
+        C::PredOp => 1,
+        // cross-lane base costs; the VL-proportional part is added by the
+        // pipeline
+        C::VecReduceTree => 4,
+        C::VecReduceOrdered => 4,
+        C::VecPermute => 3,
+        // memory classes: latency comes from the cache model
+        C::ScalarLoad | C::VecLoad | C::VecLoadBcast | C::VecGather => 0,
+        C::ScalarStore | C::VecStore | C::VecScatter => 1,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_defaults() {
+        let c = UarchConfig::default();
+        assert_eq!(c.l1i_bytes, 64 * 1024);
+        assert_eq!(c.l1i_assoc, 4);
+        assert_eq!(c.l1d_bytes, 64 * 1024);
+        assert_eq!(c.l1d_assoc, 4);
+        assert_eq!(c.mshrs, 12);
+        assert_eq!(c.l2_bytes, 256 * 1024);
+        assert_eq!(c.l2_assoc, 8);
+        assert_eq!(c.line_bytes, 64);
+        assert_eq!(c.decode_width, 4);
+        assert_eq!(c.retire_width, 4);
+        assert_eq!(c.rob, 128);
+        assert_eq!((c.int_issue_per_cycle, c.int_sched_entries), (2, 24));
+        assert_eq!((c.vec_issue_per_cycle, c.vec_sched_entries), (2, 24));
+        assert_eq!((c.loads_per_cycle, c.stores_per_cycle), (2, 1));
+        assert_eq!(c.port_bytes * 8, 512, "max access = full line, 512 bits");
+    }
+
+    #[test]
+    fn latencies_are_positive_and_ordered() {
+        use crate::isa::UopClass as C;
+        let cfg = UarchConfig::default();
+        assert!(latency(C::FpDiv, &cfg) > latency(C::FpMul, &cfg));
+        assert!(latency(C::OpaqueCall, &cfg) > latency(C::FpSqrt, &cfg));
+        assert_eq!(latency(C::VecLoad, &cfg), 0, "memory latency from cache");
+    }
+}

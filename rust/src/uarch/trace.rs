@@ -1,0 +1,79 @@
+//! Cycle-by-cycle pipeline trace rendering — the Fig. 3 view.
+//!
+//! For a small run, prints one row per instruction with its
+//! dispatch/issue/complete/retire cycles and an ASCII occupancy bar, plus
+//! (optionally) the architectural predicate/vector state dump the figure
+//! shows between instructions.
+
+use super::pipeline::InstTiming;
+use crate::asm::Program;
+use std::fmt::Write as _;
+
+/// Render a Fig. 3-style timeline for `trace` (use for runs of at most a
+/// few hundred instructions).
+pub fn render_timeline(prog: &Program, trace: &[InstTiming]) -> String {
+    let mut out = String::new();
+    if trace.is_empty() {
+        return out;
+    }
+    let t0 = trace.first().map(|t| t.dispatch).unwrap_or(0);
+    let tmax = trace.iter().map(|t| t.retire).max().unwrap_or(0);
+    let span = (tmax - t0 + 1).min(96);
+    let _ = writeln!(
+        out,
+        "{:<5} {:<44} {:>4} {:>4} {:>4} {:>4}  timeline (D=dispatch X=execute R=retire)",
+        "pc", "instruction", "disp", "iss", "done", "ret"
+    );
+    for t in trace {
+        let label = match prog.label_at(t.pc) {
+            Some(l) => format!("{l}:"),
+            None => String::new(),
+        };
+        let mut bar = vec![b' '; span as usize];
+        let clamp = |c: u64| ((c.saturating_sub(t0)).min(span - 1)) as usize;
+        for c in t.issue..t.complete {
+            bar[clamp(c)] = b'X';
+        }
+        bar[clamp(t.dispatch)] = b'D';
+        bar[clamp(t.retire)] = b'R';
+        let disasm = if t.disasm.len() > 42 { &t.disasm[..42] } else { &t.disasm };
+        let _ = writeln!(
+            out,
+            "{:<5} {:<44} {:>4} {:>4} {:>4} {:>4}  |{}|",
+            t.pc,
+            format!("{label}{disasm}"),
+            t.dispatch - t0,
+            t.issue - t0,
+            t.complete - t0,
+            t.retire - t0,
+            String::from_utf8_lossy(&bar),
+        );
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::asm::Asm;
+    use crate::exec::Executor;
+    use crate::isa::Inst;
+    use crate::mem::Memory;
+    use crate::uarch::{run_traced, UarchConfig};
+
+    #[test]
+    fn timeline_renders_every_instruction() {
+        let mut a = Asm::new();
+        a.label("start");
+        a.push(Inst::MovImm { xd: 0, imm: 7 });
+        a.push(Inst::AddImm { xd: 1, xn: 0, imm: 1 });
+        a.push(Inst::Halt);
+        let p = a.finish();
+        let mut ex = Executor::new(128, Memory::new());
+        let (_, _, tr) = run_traced(&mut ex, &p, UarchConfig::default(), 100).unwrap();
+        let s = render_timeline(&p, &tr);
+        assert_eq!(s.lines().count(), 4, "header + 3 rows");
+        assert!(s.contains("start:"));
+        assert!(s.contains('D') && s.contains('R'));
+    }
+}

@@ -1,0 +1,872 @@
+//! The HPC proxy benchmark suite behind Fig. 8 (§5).
+//!
+//! Each proxy isolates the mechanism the paper attributes to the real
+//! benchmark (see DESIGN.md §3 for the mapping and the expected-shape
+//! table). Three groups:
+//!
+//! * **left** — no vectorization on either ISA (Graph500, CoMD, EP);
+//! * **middle** — SVE vectorizes but sees little/negative uplift
+//!   (SMG2000, MILCmk, HPGMG);
+//! * **right** — SVE vectorizes where NEON cannot and scales with VL
+//!   (HACCmk, HimenoBMT, STREAM-triad, LULESH, SpMV, strlen).
+
+use crate::compiler::chase::{compile_chase, ChaseKernel};
+use crate::compiler::{compile, BinOp, CmpKind, Compiled, Expr, Index, Kernel, OuterDim, Quirk,
+                      RedKind, Reduction, Stmt, Target, Trip, Ty, UnOp};
+use crate::isa::OpaqueFn;
+use crate::mem::Memory;
+use crate::rng::Rng;
+
+/// Fig. 8 grouping.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Group {
+    Left,
+    Middle,
+    Right,
+}
+
+impl Group {
+    pub fn label(self) -> &'static str {
+        match self {
+            Group::Left => "left (no vectorization)",
+            Group::Middle => "middle (vectorized, little uplift)",
+            Group::Right => "right (vectorized, scales)",
+        }
+    }
+}
+
+/// What to simulate.
+pub enum Kind {
+    Loop(Kernel),
+    Chase(ChaseKernel),
+}
+
+/// Output validation.
+pub enum Check {
+    F64Slice { base: u64, want: Vec<f64>, tol: f64 },
+    F32Slice { base: u64, want: Vec<f32>, tol: f32 },
+    F64At { addr: u64, want: f64, tol: f64 },
+    F32At { addr: u64, want: f32, tol: f32 },
+    U64At { addr: u64, want: u64 },
+}
+
+impl Check {
+    pub fn verify(&self, mem: &Memory) -> Result<(), String> {
+        match self {
+            Check::F64Slice { base, want, tol } => {
+                for (i, w) in want.iter().enumerate() {
+                    let got = mem.read_f64(base + 8 * i as u64).map_err(|e| format!("{e:?}"))?;
+                    if (got - w).abs() > tol * w.abs().max(1.0) {
+                        return Err(format!("f64[{i}]: got {got}, want {w}"));
+                    }
+                }
+                Ok(())
+            }
+            Check::F32Slice { base, want, tol } => {
+                for (i, w) in want.iter().enumerate() {
+                    let got = mem.read_f32(base + 4 * i as u64).map_err(|e| format!("{e:?}"))?;
+                    if (got - w).abs() > tol * w.abs().max(1.0) {
+                        return Err(format!("f32[{i}]: got {got}, want {w}"));
+                    }
+                }
+                Ok(())
+            }
+            Check::F64At { addr, want, tol } => {
+                let got = mem.read_f64(*addr).map_err(|e| format!("{e:?}"))?;
+                if (got - want).abs() > tol * want.abs().max(1.0) {
+                    return Err(format!("f64 result: got {got}, want {want}"));
+                }
+                Ok(())
+            }
+            Check::F32At { addr, want, tol } => {
+                let got = mem.read_f32(*addr).map_err(|e| format!("{e:?}"))?;
+                if (got - want).abs() > tol * want.abs().max(1.0) {
+                    return Err(format!("f32 result: got {got}, want {want}"));
+                }
+                Ok(())
+            }
+            Check::U64At { addr, want } => {
+                let got = mem.read_u64(*addr).map_err(|e| format!("{e:?}"))?;
+                if got != *want {
+                    return Err(format!("u64 result: got {got}, want {want}"));
+                }
+                Ok(())
+            }
+        }
+    }
+}
+
+pub struct Workload {
+    pub name: &'static str,
+    pub group: Group,
+    pub kind: Kind,
+    pub mem: Memory,
+    pub checks: Vec<Check>,
+    /// Executor instruction budget for one run.
+    pub max_insts: u64,
+}
+
+impl Workload {
+    /// Compile for a target (dispatching on kernel kind).
+    pub fn compile(&self, target: Target) -> Compiled {
+        match &self.kind {
+            Kind::Loop(k) => compile(k, target),
+            Kind::Chase(c) => compile_chase(c, target, false),
+        }
+    }
+
+    pub fn verify(&self, mem: &Memory) -> Result<(), String> {
+        for c in &self.checks {
+            c.verify(mem)?;
+        }
+        Ok(())
+    }
+}
+
+pub const NAMES: [&str; 12] = [
+    "graph500", "comd_lj", "nas_ep", // left
+    "smg2000", "milcmk", "hpgmg", // middle
+    "haccmk", "himenobmt", "stream_triad", "lulesh_hour", "spmv_ell", "strlen1m", // right
+];
+
+/// Build a workload by name (panics on unknown names).
+pub fn build(name: &str) -> Workload {
+    match name {
+        "graph500" => graph500(),
+        "comd_lj" => comd_lj(),
+        "nas_ep" => nas_ep(),
+        "smg2000" => smg2000(),
+        "milcmk" => milcmk(),
+        "hpgmg" => hpgmg(),
+        "haccmk" => haccmk(),
+        "himenobmt" => himenobmt(),
+        "stream_triad" => stream_triad(),
+        "lulesh_hour" => lulesh_hour(),
+        "spmv_ell" => spmv_ell(),
+        "strlen1m" => strlen1m(),
+        other => panic!("unknown workload {other}"),
+    }
+}
+
+fn aff(offset: i64) -> Index {
+    Index::Affine { offset }
+}
+
+// ===================== right group =====================
+
+/// STREAM-triad / daxpy: `y[i] = a*x[i] + y[i]` — pure streaming FMA.
+pub fn stream_triad() -> Workload {
+    let n = 16384u64;
+    let reps = 3u64;
+    let mut mem = Memory::new();
+    let mut rng = Rng::new(101);
+    let xb = mem.alloc(8 * n, 64);
+    let yb = mem.alloc(8 * n, 64);
+    let xs: Vec<f64> = (0..n).map(|_| rng.f64_range(-1.0, 1.0)).collect();
+    let ys: Vec<f64> = (0..n).map(|_| rng.f64_range(-1.0, 1.0)).collect();
+    mem.write_f64_slice(xb, &xs);
+    mem.write_f64_slice(yb, &ys);
+    let a = 3.25f64;
+
+    let mut k = Kernel::new("stream_triad", Ty::F64, Trip::Count(n));
+    let x = k.array("x", Ty::F64, xb);
+    let y = k.array("y", Ty::F64, yb);
+    k.outer.push(OuterDim { trip: reps, strides: vec![] });
+    k.body.push(Stmt::Store {
+        arr: y,
+        idx: aff(0),
+        value: Expr::bin(
+            BinOp::Add,
+            Expr::bin(BinOp::Mul, Expr::ConstF(a), Expr::load(x, aff(0))),
+            Expr::load(y, aff(0)),
+        ),
+    });
+    // y updates in place: y_final = ys + reps*a*xs
+    let want: Vec<f64> = (0..n as usize).map(|i| ys[i] + reps as f64 * a * xs[i]).collect();
+    Workload {
+        name: "stream_triad",
+        group: Group::Right,
+        kind: Kind::Loop(k),
+        mem,
+        checks: vec![Check::F64Slice { base: yb, want, tol: 1e-12 }],
+        max_insts: 100_000_000,
+    }
+}
+
+/// HACCmk: short-range force with TWO conditional assignments (§5) —
+/// NEON cannot vectorize, SVE if-converts.
+pub fn haccmk() -> Workload {
+    let n = 4096u64;
+    let reps = 4u64;
+    let (rmax2, eps2) = (16.0f32, 1e-3f32);
+    const POLY: [f32; 6] = [0.269327, -0.0750978, 0.0114808, -0.00109313, 5.63434e-05,
+        -1.26461e-06];
+    let mut mem = Memory::new();
+    let mut rng = Rng::new(77);
+    let (px, py, pz) = (0.1f32, -0.2, 0.3);
+    let xb = mem.alloc(4 * n, 64);
+    let yb = mem.alloc(4 * n, 64);
+    let zb = mem.alloc(4 * n, 64);
+    let mb = mem.alloc(4 * n, 64);
+    let out = mem.alloc(8, 8);
+    let xs: Vec<f32> = (0..n).map(|_| rng.f32_range(-4.0, 4.0)).collect();
+    let ys: Vec<f32> = (0..n).map(|_| rng.f32_range(-4.0, 4.0)).collect();
+    let zs: Vec<f32> = (0..n).map(|_| rng.f32_range(-4.0, 4.0)).collect();
+    let ms: Vec<f32> = (0..n).map(|_| rng.f32_range(0.5, 2.0)).collect();
+    mem.write_f32_slice(xb, &xs);
+    mem.write_f32_slice(yb, &ys);
+    mem.write_f32_slice(zb, &zs);
+    mem.write_f32_slice(mb, &ms);
+
+    let mut k = Kernel::new("haccmk", Ty::F32, Trip::Count(n));
+    let xa = k.array("x", Ty::F32, xb);
+    let ya = k.array("y", Ty::F32, yb);
+    let za = k.array("z", Ty::F32, zb);
+    let ma = k.array("m", Ty::F32, mb);
+    k.outer.push(OuterDim { trip: reps, strides: vec![] });
+    k.red_out = vec![out];
+    // locals: dx, dy, dz, r2
+    let dx = Expr::bin(BinOp::Sub, Expr::load(xa, aff(0)), Expr::ConstF(px as f64));
+    let dy = Expr::bin(BinOp::Sub, Expr::load(ya, aff(0)), Expr::ConstF(py as f64));
+    let dz = Expr::bin(BinOp::Sub, Expr::load(za, aff(0)), Expr::ConstF(pz as f64));
+    let r2 = Expr::bin(
+        BinOp::Add,
+        Expr::bin(BinOp::Mul, Expr::Local(0), Expr::Local(0)),
+        Expr::bin(
+            BinOp::Add,
+            Expr::bin(BinOp::Mul, Expr::Local(1), Expr::Local(1)),
+            Expr::bin(BinOp::Mul, Expr::Local(2), Expr::Local(2)),
+        ),
+    );
+    k.locals = vec![dx, dy, dz, r2];
+    let r2e = || Expr::Local(3);
+    // conditional assignment #1: softening r2s = (r2 > eps2) ? r2 : eps2
+    let r2s = Expr::select(
+        Expr::cmp(CmpKind::Gt, r2e(), Expr::ConstF(eps2 as f64)),
+        r2e(),
+        Expr::ConstF(eps2 as f64),
+    );
+    // poly(r2s) = 1/(r2s*sqrt(r2s)) - (c0 + r2s*(c1 + ...))
+    let mut p: Expr = Expr::ConstF(POLY[5] as f64);
+    for c in [POLY[4], POLY[3], POLY[2], POLY[1], POLY[0]] {
+        p = Expr::bin(BinOp::Add, Expr::bin(BinOp::Mul, p, r2s.clone()), Expr::ConstF(c as f64));
+    }
+    let inv = Expr::bin(
+        BinOp::Div,
+        Expr::ConstF(1.0),
+        Expr::bin(BinOp::Mul, r2s.clone(), Expr::Un { op: UnOp::Sqrt, a: Box::new(r2s.clone()) }),
+    );
+    let f = Expr::bin(BinOp::Sub, inv, p);
+    // conditional assignment #2: cutoff (r2 < rmax2) ? f : 0
+    let f = Expr::select(Expr::cmp(CmpKind::Lt, r2e(), Expr::ConstF(rmax2 as f64)), f,
+        Expr::ConstF(0.0));
+    k.reductions.push(Reduction {
+        kind: RedKind::SumF,
+        value: Expr::bin(BinOp::Mul, Expr::bin(BinOp::Mul, f, Expr::load(ma, aff(0))),
+            Expr::Local(0)),
+    });
+    // reference (f64 accumulate for a stable target value)
+    let mut acc = 0.0f64;
+    for i in 0..n as usize {
+        let (dx, dy, dz) = (xs[i] - px, ys[i] - py, zs[i] - pz);
+        let r2 = dx * dx + dy * dy + dz * dz;
+        let r2s = if r2 > eps2 { r2 } else { eps2 };
+        let mut p = POLY[5];
+        for c in [POLY[4], POLY[3], POLY[2], POLY[1], POLY[0]] {
+            p = p * r2s + c;
+        }
+        let f = if r2 < rmax2 { 1.0 / (r2s * r2s.sqrt()) - p } else { 0.0 };
+        acc += (f * ms[i] * dx) as f64;
+    }
+    let want = acc * reps as f64;
+    Workload {
+        name: "haccmk",
+        group: Group::Right,
+        kind: Kind::Loop(k),
+        mem,
+        // f32 arithmetic with differing reduction orders: loose tolerance
+        checks: vec![Check::F32At { addr: out, want: want as f32, tol: 2e-2 }],
+        max_insts: 200_000_000,
+    }
+}
+
+/// HimenoBMT: 19-point Jacobi sweep (f32). Contiguous in k; the working
+/// set spills L1D, denting VL scaling (§5).
+pub fn himenobmt() -> Workload {
+    let (ni, nj, nk) = (18usize, 18, 66);
+    let mut mem = Memory::new();
+    let mut rng = Rng::new(303);
+    let cells = ni * nj * nk;
+    let pb = mem.alloc(4 * cells as u64, 64);
+    let ob = mem.alloc(4 * cells as u64, 64);
+    let ps: Vec<f32> = (0..cells).map(|_| rng.f32_range(0.0, 1.0)).collect();
+    mem.write_f32_slice(pb, &ps);
+    const OMEGA: f32 = 0.8;
+    const OFFS: [(i64, i64, i64); 18] = [
+        (-1, 0, 0), (1, 0, 0), (0, -1, 0), (0, 1, 0), (0, 0, -1), (0, 0, 1),
+        (-1, -1, 0), (-1, 1, 0), (1, -1, 0), (1, 1, 0),
+        (-1, 0, -1), (-1, 0, 1), (1, 0, -1), (1, 0, 1),
+        (0, -1, -1), (0, -1, 1), (0, 1, -1), (0, 1, 1),
+    ];
+
+    let mut k = Kernel::new("himenobmt", Ty::F32, Trip::Count((nk - 2) as u64));
+    let p = k.array("p", Ty::F32, pb);
+    let o = k.array("out", Ty::F32, ob);
+    // outer dims walk i and j over the interior; bases advance by rows
+    k.outer.push(OuterDim {
+        trip: (ni - 2) as u64,
+        strides: vec![(p, (nj * nk) as i64), (o, (nj * nk) as i64)],
+    });
+    k.outer.push(OuterDim { trip: (nj - 2) as u64, strides: vec![(p, nk as i64), (o, nk as i64)] });
+    // inner iv = k-1; cell (1,1,iv+1) relative to the shifted base
+    let at = |di: i64, dj: i64, dk: i64| {
+        Expr::load(p, aff((di + 1) * (nj * nk) as i64 + (dj + 1) * nk as i64 + dk + 1))
+    };
+    let mut s = at(OFFS[0].0, OFFS[0].1, OFFS[0].2);
+    for &(di, dj, dk) in &OFFS[1..] {
+        s = Expr::bin(BinOp::Add, s, at(di, dj, dk));
+    }
+    let c = at(0, 0, 0);
+    let new = Expr::bin(
+        BinOp::Add,
+        c.clone(),
+        Expr::bin(
+            BinOp::Mul,
+            Expr::ConstF(OMEGA as f64),
+            Expr::bin(BinOp::Sub, Expr::bin(BinOp::Mul, s, Expr::ConstF(1.0 / 18.0)), c),
+        ),
+    );
+    k.body.push(Stmt::Store { arr: o, idx: aff((nj * nk + nk + 1) as i64), value: new });
+
+    // reference sweep
+    let idx = |i: usize, j: usize, kk: usize| i * nj * nk + j * nk + kk;
+    let mut want = vec![0.0f32; cells];
+    for i in 1..ni - 1 {
+        for j in 1..nj - 1 {
+            for kk in 1..nk - 1 {
+                let mut s = 0.0f32;
+                for &(di, dj, dk) in &OFFS {
+                    s += ps[idx(
+                        (i as i64 + di) as usize,
+                        (j as i64 + dj) as usize,
+                        (kk as i64 + dk) as usize,
+                    )];
+                }
+                let c = ps[idx(i, j, kk)];
+                want[idx(i, j, kk)] = c + OMEGA * (s / 18.0 - c);
+            }
+        }
+    }
+    // check a representative interior pencil
+    let row = idx(ni / 2, nj / 2, 1);
+    Workload {
+        name: "himenobmt",
+        group: Group::Right,
+        kind: Kind::Loop(k),
+        mem,
+        checks: vec![Check::F32Slice {
+            base: ob + 4 * row as u64,
+            want: want[row..row + nk - 2].to_vec(),
+            tol: 1e-4,
+        }],
+        max_insts: 200_000_000,
+    }
+}
+
+/// LULESH hourglass-control proxy: conditional EOS clamp.
+pub fn lulesh_hour() -> Workload {
+    let n = 8192u64;
+    let reps = 3u64;
+    let cut = 0.2f64;
+    let (c1, c2) = (1.25f64, -0.5);
+    let mut mem = Memory::new();
+    let mut rng = Rng::new(55);
+    let eb = mem.alloc(8 * n, 64);
+    let qb = mem.alloc(8 * n, 64);
+    let es: Vec<f64> = (0..n).map(|_| rng.f64_range(-1.0, 1.0)).collect();
+    mem.write_f64_slice(eb, &es);
+    let mut k = Kernel::new("lulesh_hour", Ty::F64, Trip::Count(n));
+    let e = k.array("e", Ty::F64, eb);
+    let q = k.array("q", Ty::F64, qb);
+    k.outer.push(OuterDim { trip: reps, strides: vec![] });
+    let ei = Expr::load(e, aff(0));
+    k.body.push(Stmt::Store {
+        arr: q,
+        idx: aff(0),
+        value: Expr::select(
+            Expr::cmp(CmpKind::Gt, ei.clone(), Expr::ConstF(cut)),
+            Expr::bin(BinOp::Add, Expr::bin(BinOp::Mul, Expr::ConstF(c1), ei), Expr::ConstF(c2)),
+            Expr::ConstF(0.0),
+        ),
+    });
+    let want: Vec<f64> = es.iter().map(|&e| if e > cut { c1 * e + c2 } else { 0.0 }).collect();
+    Workload {
+        name: "lulesh_hour",
+        group: Group::Right,
+        kind: Kind::Loop(k),
+        mem,
+        checks: vec![Check::F64Slice { base: qb, want, tol: 1e-12 }],
+        max_insts: 100_000_000,
+    }
+}
+
+/// ELL-format SpMV (f32): gather-enabled vectorization; cracked gathers
+/// keep it from scaling with VL.
+pub fn spmv_ell() -> Workload {
+    let rows = 512u64;
+    let nnz = 32u64; // per row
+    let cols = 4096usize;
+    let mut mem = Memory::new();
+    let mut rng = Rng::new(999);
+    let xb = mem.alloc(4 * cols as u64, 64);
+    let vb = mem.alloc(4 * rows * nnz, 64);
+    let ib = mem.alloc(4 * rows * nnz, 64);
+    let out = mem.alloc(8, 8);
+    let xs: Vec<f32> = (0..cols).map(|_| rng.f32_range(-1.0, 1.0)).collect();
+    mem.write_f32_slice(xb, &xs);
+    let vals: Vec<f32> = (0..rows * nnz).map(|_| rng.f32_range(-1.0, 1.0)).collect();
+    mem.write_f32_slice(vb, &vals);
+    let idxs: Vec<u32> = (0..rows * nnz).map(|_| rng.usize_below(cols) as u32).collect();
+    mem.write_u32_slice(ib, &idxs);
+
+    let mut k = Kernel::new("spmv_ell", Ty::F32, Trip::Count(nnz));
+    let x = k.array("x", Ty::F32, xb);
+    let v = k.array("vals", Ty::F32, vb);
+    let idx = k.array("cols", Ty::I32, ib);
+    k.outer.push(OuterDim { trip: rows, strides: vec![(v, nnz as i64), (idx, nnz as i64)] });
+    k.red_out = vec![out];
+    k.reductions.push(Reduction {
+        kind: RedKind::SumF,
+        value: Expr::bin(
+            BinOp::Mul,
+            Expr::load(v, aff(0)),
+            Expr::load(x, Index::Indirect { idx_arr: idx, offset: 0 }),
+        ),
+    });
+    let mut want = 0.0f64;
+    for r in 0..(rows * nnz) as usize {
+        want += (vals[r] * xs[idxs[r] as usize]) as f64;
+    }
+    Workload {
+        name: "spmv_ell",
+        group: Group::Right,
+        kind: Kind::Loop(k),
+        mem,
+        checks: vec![Check::F32At { addr: out, want: want as f32, tol: 1e-2 }],
+        max_insts: 100_000_000,
+    }
+}
+
+/// strlen over a 256KB string — data-dependent exit; only SVE's
+/// first-faulting speculation vectorizes it (Fig. 5).
+pub fn strlen1m() -> Workload {
+    let len = 262_144u64;
+    let mut mem = Memory::new();
+    let sb = mem.alloc(len + 64, 64);
+    for i in 0..len {
+        mem.write_byte(sb + i, b'a' + (i % 23) as u8).unwrap();
+    }
+    mem.write_byte(sb + len, 0).unwrap();
+    let out = mem.alloc(8, 8);
+    let mut k = Kernel::new("strlen1m", Ty::U8, Trip::DataDependent { max: 1 << 26 });
+    let s = k.array("s", Ty::U8, sb);
+    k.count_out = Some(out);
+    k.body.push(Stmt::Break {
+        cond: Expr::cmp(CmpKind::Eq, Expr::load(s, aff(0)), Expr::ConstI(0)),
+    });
+    Workload {
+        name: "strlen1m",
+        group: Group::Right,
+        kind: Kind::Loop(k),
+        mem,
+        checks: vec![Check::U64At { addr: out, want: len }],
+        max_insts: 100_000_000,
+    }
+}
+
+// ===================== middle group =====================
+
+/// SMG2000: semicoarsening multigrid residual with stencil-offset
+/// indirection — vectorizes with heavy cracked gathers (§5: "very small
+/// benefit for SVE" — and NEON cannot vectorize it at all).
+pub fn smg2000() -> Workload {
+    let n = 8192u64;
+    let reps = 2u64;
+    let mut mem = Memory::new();
+    let mut rng = Rng::new(404);
+    let ub = mem.alloc(8 * (n + 64), 64);
+    let fb = mem.alloc(8 * n, 64);
+    let i0b = mem.alloc(8 * n, 64);
+    let i1b = mem.alloc(8 * n, 64);
+    let rb = mem.alloc(8 * n, 64);
+    let us: Vec<f64> = (0..n + 64).map(|_| rng.f64_range(-1.0, 1.0)).collect();
+    let fs: Vec<f64> = (0..n).map(|_| rng.f64_range(-1.0, 1.0)).collect();
+    mem.write_f64_slice(ub, &us);
+    mem.write_f64_slice(fb, &fs);
+    let i0: Vec<u64> = (0..n).map(|i| (i + rng.below(32)) % n).collect();
+    let i1: Vec<u64> = (0..n).map(|i| (i + 32 + rng.below(32)) % n).collect();
+    mem.write_u64_slice(i0b, &i0);
+    mem.write_u64_slice(i1b, &i1);
+    let (c0, c1, c2) = (0.5f64, 0.25, -1.75);
+
+    let mut k = Kernel::new("smg2000", Ty::F64, Trip::Count(n));
+    let u = k.array("u", Ty::F64, ub);
+    let f = k.array("f", Ty::F64, fb);
+    let a0 = k.array("st0", Ty::I64, i0b);
+    let a1 = k.array("st1", Ty::I64, i1b);
+    let r = k.array("r", Ty::F64, rb);
+    k.outer.push(OuterDim { trip: reps, strides: vec![] });
+    let term = |cc: f64, idx_arr: usize| {
+        Expr::bin(
+            BinOp::Mul,
+            Expr::ConstF(cc),
+            Expr::load(u, Index::Indirect { idx_arr, offset: 0 }),
+        )
+    };
+    k.body.push(Stmt::Store {
+        arr: r,
+        idx: aff(0),
+        value: Expr::bin(
+            BinOp::Sub,
+            Expr::load(f, aff(0)),
+            Expr::bin(
+                BinOp::Add,
+                Expr::bin(BinOp::Add, term(c0, a0), term(c1, a1)),
+                Expr::bin(BinOp::Mul, Expr::ConstF(c2), Expr::load(u, aff(0))),
+            ),
+        ),
+    });
+    let want: Vec<f64> = (0..n as usize)
+        .map(|i| fs[i] - (c0 * us[i0[i] as usize] + c1 * us[i1[i] as usize] + c2 * us[i]))
+        .collect();
+    Workload {
+        name: "smg2000",
+        group: Group::Middle,
+        kind: Kind::Loop(k),
+        mem,
+        checks: vec![Check::F64Slice { base: rb, want, tol: 1e-12 }],
+        max_insts: 100_000_000,
+    }
+}
+
+/// MILCmk: su(3)-style complex multiply. Contiguous and NEON-friendly,
+/// but the SVE compiler "vectorizes the outermost loop ... generating
+/// unnecessary overheads" (§5) — reproduced via [`Quirk::MilcOuterLoop`].
+pub fn milcmk() -> Workload {
+    let n = 8192u64;
+    let reps = 2u64;
+    let mut mem = Memory::new();
+    let mut rng = Rng::new(606);
+    let are = mem.alloc(4 * n, 64);
+    let aim = mem.alloc(4 * n, 64);
+    let bre = mem.alloc(4 * n, 64);
+    let bim = mem.alloc(4 * n, 64);
+    let cre = mem.alloc(4 * n, 64);
+    let cim = mem.alloc(4 * n, 64);
+    let mut fill = |mem: &mut Memory, b: u64, rng: &mut Rng| -> Vec<f32> {
+        let xs: Vec<f32> = (0..n).map(|_| rng.f32_range(-1.0, 1.0)).collect();
+        mem.write_f32_slice(b, &xs);
+        xs
+    };
+    let ares = fill(&mut mem, are, &mut rng);
+    let aims = fill(&mut mem, aim, &mut rng);
+    let bres = fill(&mut mem, bre, &mut rng);
+    let bims = fill(&mut mem, bim, &mut rng);
+
+    let mut k = Kernel::new("milcmk", Ty::F32, Trip::Count(n));
+    let ar = k.array("are", Ty::F32, are);
+    let ai = k.array("aim", Ty::F32, aim);
+    let br = k.array("bre", Ty::F32, bre);
+    let bi = k.array("bim", Ty::F32, bim);
+    let cr = k.array("cre", Ty::F32, cre);
+    let ci = k.array("cim", Ty::F32, cim);
+    k.outer.push(OuterDim { trip: reps, strides: vec![] });
+    k.quirk = Quirk::MilcOuterLoop;
+    k.body.push(Stmt::Store {
+        arr: cr,
+        idx: aff(0),
+        value: Expr::bin(
+            BinOp::Sub,
+            Expr::bin(BinOp::Mul, Expr::load(ar, aff(0)), Expr::load(br, aff(0))),
+            Expr::bin(BinOp::Mul, Expr::load(ai, aff(0)), Expr::load(bi, aff(0))),
+        ),
+    });
+    k.body.push(Stmt::Store {
+        arr: ci,
+        idx: aff(0),
+        value: Expr::bin(
+            BinOp::Add,
+            Expr::bin(BinOp::Mul, Expr::load(ar, aff(0)), Expr::load(bi, aff(0))),
+            Expr::bin(BinOp::Mul, Expr::load(ai, aff(0)), Expr::load(br, aff(0))),
+        ),
+    });
+    let wre: Vec<f32> = (0..n as usize).map(|i| ares[i] * bres[i] - aims[i] * bims[i]).collect();
+    let wim: Vec<f32> = (0..n as usize).map(|i| ares[i] * bims[i] + aims[i] * bres[i]).collect();
+    Workload {
+        name: "milcmk",
+        group: Group::Middle,
+        kind: Kind::Loop(k),
+        mem,
+        checks: vec![
+            Check::F32Slice { base: cre, want: wre, tol: 1e-5 },
+            Check::F32Slice { base: cim, want: wim, tol: 1e-5 },
+        ],
+        max_insts: 100_000_000,
+    }
+}
+
+/// HPGMG restriction: stride-2 fine-to-coarse transfer — SVE gathers,
+/// NEON cannot.
+pub fn hpgmg() -> Workload {
+    let n = 8192u64; // coarse cells
+    let reps = 2u64;
+    let mut mem = Memory::new();
+    let mut rng = Rng::new(505);
+    let fineb = mem.alloc(4 * (2 * n + 2), 64);
+    let coarseb = mem.alloc(4 * n, 64);
+    let fines: Vec<f32> = (0..2 * n + 2).map(|_| rng.f32_range(0.0, 1.0)).collect();
+    mem.write_f32_slice(fineb, &fines);
+    let mut k = Kernel::new("hpgmg", Ty::F32, Trip::Count(n));
+    let f = k.array("fine", Ty::F32, fineb);
+    let c = k.array("coarse", Ty::F32, coarseb);
+    k.outer.push(OuterDim { trip: reps, strides: vec![] });
+    let at = |off: i64| Expr::load(f, Index::Strided { scale: 2, offset: off });
+    k.body.push(Stmt::Store {
+        arr: c,
+        idx: aff(0),
+        value: Expr::bin(
+            BinOp::Mul,
+            Expr::ConstF(0.25),
+            Expr::bin(
+                BinOp::Add,
+                Expr::bin(BinOp::Add, at(0), at(2)),
+                Expr::bin(BinOp::Mul, Expr::ConstF(2.0), at(1)),
+            ),
+        ),
+    });
+    let want: Vec<f32> = (0..n as usize)
+        .map(|i| 0.25 * (fines[2 * i] + fines[2 * i + 2] + 2.0 * fines[2 * i + 1]))
+        .collect();
+    Workload {
+        name: "hpgmg",
+        group: Group::Middle,
+        kind: Kind::Loop(k),
+        mem,
+        checks: vec![Check::F32Slice { base: coarseb, want, tol: 1e-5 }],
+        max_insts: 100_000_000,
+    }
+}
+
+// ===================== left group =====================
+
+/// Graph500 proxy: BFS-like pointer chase over a shuffled node list.
+/// "We do not expect SVE to help here" (§5) — the scalarized sub-loop is
+/// not profitable for a bare XOR payload, so both ISAs run scalar.
+pub fn graph500() -> Workload {
+    let n = 65536usize;
+    let mut mem = Memory::new();
+    let mut rng = Rng::new(808);
+    let nodes = mem.alloc(16 * n as u64, 64);
+    let mut order: Vec<u64> = (0..n as u64).collect();
+    rng.shuffle(&mut order);
+    let mut expected = 0u64;
+    for i in 0..n {
+        let addr = nodes + 16 * order[i];
+        let val = rng.next_u64() >> 1;
+        expected ^= val;
+        mem.write_u64(addr, val).unwrap();
+        let next = if i + 1 < n { nodes + 16 * order[i + 1] } else { 0 };
+        mem.write_u64(addr + 8, next).unwrap();
+    }
+    let result = mem.alloc(8, 8);
+    Workload {
+        name: "graph500",
+        group: Group::Left,
+        kind: Kind::Chase(ChaseKernel {
+            name: "graph500".into(),
+            head: nodes + 16 * order[0],
+            next_off: 8,
+            val_off: 0,
+            result,
+        }),
+        mem,
+        checks: vec![Check::U64At { addr: result, want: expected }],
+        max_insts: 100_000_000,
+    }
+}
+
+/// CoMD Lennard-Jones proxy: neighbour-list force update accumulating
+/// *into* the force array through the index — a possible intra-vector
+/// output dependence, so the vectorizer must stay scalar ("by
+/// restructuring the code in CoMD we can achieve significant
+/// improvement", §5).
+pub fn comd_lj() -> Workload {
+    let n = 4096u64; // neighbour entries
+    let atoms = 1024usize;
+    let reps = 2u64;
+    let mut mem = Memory::new();
+    let mut rng = Rng::new(909);
+    let rb = mem.alloc(8 * atoms as u64, 64);
+    let nb = mem.alloc(8 * n, 64);
+    let fb = mem.alloc(8 * atoms as u64, 64);
+    let rs: Vec<f64> = (0..atoms).map(|_| rng.f64_range(0.8, 3.0)).collect();
+    mem.write_f64_slice(rb, &rs);
+    let nbrs: Vec<u64> = (0..n).map(|i| (i * 733 + 17) % atoms as u64).collect();
+    mem.write_u64_slice(nb, &nbrs);
+
+    let mut k = Kernel::new("comd_lj", Ty::F64, Trip::Count(n));
+    let r = k.array("r2", Ty::F64, rb);
+    let nbr = k.array("nbr", Ty::I64, nb);
+    let force = k.array("force", Ty::F64, fb);
+    k.outer.push(OuterDim { trip: reps, strides: vec![] });
+    let r2 = Expr::load(r, Index::Indirect { idx_arr: nbr, offset: 0 });
+    k.locals = vec![r2];
+    let r2e = || Expr::Local(0);
+    let inv = Expr::bin(BinOp::Div, Expr::ConstF(1.0), r2e());
+    let inv6 =
+        Expr::bin(BinOp::Mul, Expr::bin(BinOp::Mul, inv.clone(), inv.clone()), inv.clone());
+    let lj = Expr::bin(
+        BinOp::Sub,
+        Expr::bin(BinOp::Mul, inv6.clone(), inv6.clone()),
+        Expr::bin(BinOp::Mul, Expr::ConstF(0.5), inv6),
+    );
+    let contrib =
+        Expr::select(Expr::cmp(CmpKind::Lt, r2e(), Expr::ConstF(6.25)), lj, Expr::ConstF(0.0));
+    // force[nbr[i]] += contrib  — the scatter-accumulate
+    k.body.push(Stmt::Store {
+        arr: force,
+        idx: Index::Indirect { idx_arr: nbr, offset: 0 },
+        value: Expr::bin(
+            BinOp::Add,
+            Expr::load(force, Index::Indirect { idx_arr: nbr, offset: 0 }),
+            contrib,
+        ),
+    });
+    // reference
+    let mut want = vec![0.0f64; atoms];
+    for _ in 0..reps {
+        for i in 0..n as usize {
+            let a = nbrs[i] as usize;
+            let r2 = rs[a];
+            let inv = 1.0 / r2;
+            let inv6 = inv * inv * inv;
+            let lj = inv6 * inv6 - 0.5 * inv6;
+            if r2 < 6.25 {
+                want[a] += lj;
+            }
+        }
+    }
+    Workload {
+        name: "comd_lj",
+        group: Group::Left,
+        kind: Kind::Loop(k),
+        mem,
+        checks: vec![Check::F64Slice { base: fb, want, tol: 1e-9 }],
+        max_insts: 100_000_000,
+    }
+}
+
+/// NAS EP proxy: the hot loop calls `log` — no vector math library, so
+/// nothing vectorizes (§5: "inhibit vectorization of loops ... e.g., in
+/// EP").
+pub fn nas_ep() -> Workload {
+    let n = 4096u64;
+    let reps = 2u64;
+    let mut mem = Memory::new();
+    let mut rng = Rng::new(111);
+    let xb = mem.alloc(8 * n, 64);
+    let out = mem.alloc(8, 8);
+    let xs: Vec<f64> = (0..n).map(|_| rng.f64_range(0.1, 10.0)).collect();
+    mem.write_f64_slice(xb, &xs);
+    let mut k = Kernel::new("nas_ep", Ty::F64, Trip::Count(n));
+    let x = k.array("x", Ty::F64, xb);
+    k.outer.push(OuterDim { trip: reps, strides: vec![] });
+    k.red_out = vec![out];
+    k.reductions.push(Reduction {
+        kind: RedKind::SumF,
+        value: Expr::Opaque { f: OpaqueFn::Log, args: vec![Expr::load(x, aff(0))] },
+    });
+    let want: f64 = xs.iter().map(|&v| v.ln()).sum::<f64>() * reps as f64;
+    Workload {
+        name: "nas_ep",
+        group: Group::Left,
+        kind: Kind::Loop(k),
+        mem,
+        checks: vec![Check::F64At { addr: out, want, tol: 1e-9 }],
+        max_insts: 100_000_000,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::Executor;
+
+    /// Every workload, on every target, must pass its own checks — the
+    /// fundamental scalar/NEON/SVE equivalence property.
+    #[test]
+    fn all_workloads_correct_on_all_targets() {
+        for name in NAMES {
+            for target in [Target::Scalar, Target::Neon, Target::Sve] {
+                let w = build(name);
+                let c = w.compile(target);
+                let mut ex = Executor::new(256, w.mem.clone());
+                ex.run(&c.program, w.max_insts)
+                    .unwrap_or_else(|e| panic!("{name} trapped: {e:?}"));
+                w.verify(&ex.mem).unwrap_or_else(|e| {
+                    panic!(
+                        "{name} target={} vectorized={} failed: {e}",
+                        match target {
+                            Target::Scalar => "scalar",
+                            Target::Neon => "neon",
+                            Target::Sve => "sve",
+                        },
+                        c.vectorized
+                    )
+                });
+            }
+        }
+    }
+
+    /// SVE results must be identical across vector lengths (the VLA
+    /// guarantee, §2.2) — checks pass at every VL.
+    #[test]
+    fn sve_results_vl_agnostic() {
+        for name in NAMES {
+            for vl in [128, 512, 2048] {
+                let w = build(name);
+                let c = w.compile(Target::Sve);
+                let mut ex = Executor::new(vl, w.mem.clone());
+                ex.run(&c.program, w.max_insts).unwrap();
+                w.verify(&ex.mem).unwrap_or_else(|e| panic!("{name} vl={vl}: {e}"));
+            }
+        }
+    }
+
+    /// The vectorization decisions must match the paper's Fig. 8 groups.
+    #[test]
+    fn vectorization_matrix_matches_fig8_groups() {
+        let expect: &[(&str, bool, bool)] = &[
+            // (name, neon_vectorized, sve_vectorized)
+            ("graph500", false, false),
+            ("comd_lj", false, false),
+            ("nas_ep", false, false),
+            ("smg2000", false, true),
+            ("milcmk", true, true),
+            ("hpgmg", false, true),
+            ("haccmk", false, true),
+            ("himenobmt", true, true),
+            ("stream_triad", true, true),
+            ("lulesh_hour", false, true),
+            ("spmv_ell", false, true),
+            ("strlen1m", false, true),
+        ];
+        for &(name, neon, sve) in expect {
+            let w = build(name);
+            let cn = w.compile(Target::Neon);
+            let cs = w.compile(Target::Sve);
+            assert_eq!(cn.vectorized, neon, "{name} NEON: {:?}", cn.why_not);
+            assert_eq!(cs.vectorized, sve, "{name} SVE: {:?}", cs.why_not);
+        }
+    }
+}

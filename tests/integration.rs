@@ -1,0 +1,55 @@
+//! End-to-end integration tests: the full pipeline (IR -> vectorizer ->
+//! codegen -> functional execution -> timing -> validation) plus the
+//! PJRT golden cross-check.
+
+use sve_repro::coordinator::{run_fig8, run_one, Isa};
+use sve_repro::workloads;
+
+#[test]
+fn mini_fig8_sweep_end_to_end() {
+    let vls = [128usize, 512];
+    let rows = run_fig8(&vls, &["haccmk", "graph500", "stream_triad"]).expect("sweep");
+    assert_eq!(rows.len(), 3);
+    let hacc = &rows[0];
+    assert!(hacc.speedup(0) > 1.5, "HACC at equal VL: {}", hacc.speedup(0));
+    assert!(hacc.speedup(1) > hacc.speedup(0), "HACC scales with VL");
+    assert!(hacc.extra_vectorization > 0.3, "HACC gains vectorization");
+    let g500 = &rows[1];
+    assert!((0.9..1.1).contains(&g500.speedup(1)), "graph500 flat");
+    assert_eq!(g500.extra_vectorization, 0.0);
+}
+
+#[test]
+fn every_benchmark_runs_and_validates_on_sve_256() {
+    for name in workloads::NAMES {
+        run_one(name, Isa::Sve(256)).unwrap_or_else(|e| panic!("{e}"));
+    }
+}
+
+#[test]
+fn scalar_is_never_faster_than_the_chosen_vector_code() {
+    // the vectorizer's profitability contract, checked on real timings
+    for name in ["stream_triad", "lulesh_hour", "hpgmg"] {
+        let s = run_one(name, Isa::Scalar).unwrap();
+        let v = run_one(name, Isa::Sve(256)).unwrap();
+        assert!(
+            v.cycles < s.cycles,
+            "{name}: sve {} !< scalar {}",
+            v.cycles,
+            s.cycles
+        );
+    }
+}
+
+#[test]
+fn pjrt_golden_cross_validation() {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("daxpy.hlo.txt").exists() {
+        eprintln!("skipping PJRT validation: run `make artifacts` first");
+        return;
+    }
+    let vs = sve_repro::runtime::validate_all(dir).expect("validation harness");
+    for v in &vs {
+        assert!(v.ok, "{} mismatch: {}", v.name, v.max_abs_err);
+    }
+}
