@@ -1,33 +1,74 @@
 //! §Perf: simulator hot-path throughput — the numbers EXPERIMENTS.md
 //! §Perf tracks. Measures (a) functional-only execution and (b) the full
 //! functional+timing pipeline, in host Minst/s, across representative
-//! kernels.
+//! kernels, and writes the machine-readable trajectory to
+//! `BENCH_hotpath.json` so the perf history is diffable across PRs.
 //!
-//!     cargo bench --bench perf_hotpath
+//!     cargo bench --bench perf_hotpath            # full run
+//!     cargo bench --bench perf_hotpath -- --smoke # CI smoke subset
 
-use sve_repro::bench_util::{bench_n, report_throughput};
+use sve_repro::bench_util::{bench_n, report_throughput, Sample};
 use sve_repro::compiler::Target;
 use sve_repro::exec::Executor;
 use sve_repro::uarch::{run_timed, UarchConfig};
 use sve_repro::workloads;
 
+const VL_BITS: usize = 256;
+const KERNELS: [&str; 4] = ["stream_triad", "haccmk", "strlen1m", "graph500"];
+
+struct Row {
+    name: &'static str,
+    insts: f64,
+    functional: Sample,
+    func_timing: Sample,
+}
+
 fn main() {
-    for name in ["stream_triad", "haccmk", "strlen1m", "graph500"] {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let (names, samples): (&[&str], usize) = if smoke { (&KERNELS[..2], 2) } else { (&KERNELS, 5) };
+
+    let mut rows: Vec<Row> = Vec::new();
+    for &name in names {
         let w = workloads::build(name);
         let c = w.compile(Target::Sve);
         let insts = {
-            let mut ex = Executor::new(256, w.mem.clone());
+            let mut ex = Executor::new(VL_BITS, w.mem.clone());
             ex.run(&c.program, w.max_insts).unwrap().insts as f64
         };
-        let f = bench_n(5, || {
-            let mut ex = Executor::new(256, w.mem.clone());
+        let f = bench_n(samples, || {
+            let mut ex = Executor::new(VL_BITS, w.mem.clone());
             ex.run(&c.program, w.max_insts).unwrap().insts
         });
         report_throughput(&format!("functional {name} ({insts:.0} insts)"), &f, insts, "inst");
-        let t = bench_n(5, || {
-            let mut ex = Executor::new(256, w.mem.clone());
+        let t = bench_n(samples, || {
+            let mut ex = Executor::new(VL_BITS, w.mem.clone());
             run_timed(&mut ex, &c.program, UarchConfig::default(), w.max_insts).unwrap().1.cycles
         });
         report_throughput(&format!("func+timing {name}"), &t, insts, "inst");
+        rows.push(Row { name, insts, functional: f, func_timing: t });
     }
+
+    // Hand-rolled JSON (the offline image has no serde); schema kept
+    // deliberately flat so future PRs can diff the trajectory.
+    let mut json = String::new();
+    json.push_str("{\n");
+    json.push_str("  \"schema\": \"sve-repro/perf-hotpath/v1\",\n");
+    json.push_str(&format!("  \"vl_bits\": {VL_BITS},\n"));
+    json.push_str(&format!("  \"smoke\": {smoke},\n"));
+    json.push_str("  \"kernels\": {\n");
+    for (i, r) in rows.iter().enumerate() {
+        let sep = if i + 1 < rows.len() { "," } else { "" };
+        json.push_str(&format!(
+            "    \"{}\": {{ \"insts\": {:.0}, \"functional_minst_s\": {:.3}, \
+             \"func_timing_minst_s\": {:.3} }}{}\n",
+            r.name,
+            r.insts,
+            r.functional.throughput(r.insts) / 1e6,
+            r.func_timing.throughput(r.insts) / 1e6,
+            sep,
+        ));
+    }
+    json.push_str("  }\n}\n");
+    std::fs::write("BENCH_hotpath.json", &json).expect("write BENCH_hotpath.json");
+    println!("wrote BENCH_hotpath.json");
 }

@@ -23,6 +23,8 @@ impl Flags {
     /// most-significant element order (§2.3.1), and — per the ARM ARM —
     /// relative to the *governing* predicate `pg`: "first" is the first
     /// element active in pg, "last" the last element active in pg.
+    /// Entirely word-parallel: this runs once per predicate-setting
+    /// instruction, i.e. twice per vector-loop iteration.
     pub fn from_pred_result(pg: &PredReg, result: &PredReg, e: Esize, vl_bytes: usize) -> Flags {
         let first = pg
             .first_active(e, vl_bytes)
@@ -32,7 +34,7 @@ impl Flags {
             .last_active(e, vl_bytes)
             .map(|i| result.active(e, i))
             .unwrap_or(false);
-        let none = pg_and_none(pg, result, e, vl_bytes);
+        let none = pg.and_none(result, e, vl_bytes);
         Flags { n: first, z: none, c: !last, v: false }
     }
 
@@ -80,10 +82,6 @@ impl Flags {
             Cond::Le => !(!self.z && self.n == self.v),
         }
     }
-}
-
-fn pg_and_none(pg: &PredReg, result: &PredReg, e: Esize, vl_bytes: usize) -> bool {
-    (0..e.lanes(vl_bytes)).all(|i| !(pg.active(e, i) && result.active(e, i)))
 }
 
 /// AArch64 condition codes, with the SVE aliases of §2.3 spelled out.

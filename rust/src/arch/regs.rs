@@ -6,6 +6,11 @@
 //! `VL/8` bytes. A [`PredReg`] holds one bit per vector *byte* (§2.3.1:
 //! "eight enable bits per 64-bit vector element"); for element size `E`
 //! only the least-significant bit of each element's group is the enable.
+//!
+//! Predicates are stored as four `u64` words, and every operation the
+//! simulator's hot loops need — logic under a governing predicate,
+//! prefix construction/detection for `whilelt`, break masks, population
+//! counts, first/last scans — is word-parallel rather than per-lane.
 
 use crate::VL_MAX_BYTES;
 
@@ -219,20 +224,97 @@ impl PredReg {
         }
     }
 
+    /// Mask of word `w`'s bits that fall below `vl_bytes`.
+    #[inline]
+    const fn word_mask(vl_bytes: usize, w: usize) -> u64 {
+        let lo = w * 64;
+        if vl_bytes >= lo + 64 {
+            u64::MAX
+        } else if vl_bytes > lo {
+            (1u64 << (vl_bytes - lo)) - 1
+        } else {
+            0
+        }
+    }
+
     /// Canonical all-true at element size `e` over `vl_bytes`
     /// (word-parallel: this is on the simulator's hottest path).
     pub fn set_all(&mut self, e: Esize, vl_bytes: usize) {
         let pat = Self::elem_pattern(e);
         for (w, word) in self.words.iter_mut().enumerate() {
-            let lo = w * 64;
-            *word = if vl_bytes >= lo + 64 {
-                pat
-            } else if vl_bytes > lo {
-                pat & ((1u64 << (vl_bytes - lo)) - 1)
-            } else {
-                0
-            };
+            *word = pat & Self::word_mask(vl_bytes, w);
         }
+    }
+
+    /// Canonical prefix: exactly the first `k` elements of size `e`
+    /// active (the shape `whilelt` produces).
+    pub fn set_prefix(&mut self, e: Esize, k: usize, vl_bytes: usize) {
+        self.set_all(e, (k * e.bytes()).min(vl_bytes));
+    }
+
+    /// `Some(k)` iff exactly the first `k` elements are active (`k` may
+    /// be 0). This is the shape every `ptrue`/`whilelt` governing
+    /// predicate has, and what lets contiguous loads/stores collapse to
+    /// one bulk copy.
+    pub fn prefix_len(&self, e: Esize, vl_bytes: usize) -> Option<usize> {
+        let pat = Self::elem_pattern(e);
+        let mut k = 0usize;
+        let mut ended = false;
+        for (w, &word) in self.words.iter().enumerate() {
+            let full = pat & Self::word_mask(vl_bytes, w);
+            let bits = word & full;
+            if ended || full == 0 {
+                if bits != 0 {
+                    return None; // active lane after a gap
+                }
+                continue;
+            }
+            if bits == full {
+                k += full.count_ones() as usize;
+            } else if bits == 0 {
+                ended = true;
+            } else {
+                // partial word: actives must be bottom-contiguous in full
+                let top = 63 - bits.leading_zeros() as usize;
+                let below = if top == 63 { u64::MAX } else { (1u64 << (top + 1)) - 1 };
+                if bits != full & below {
+                    return None;
+                }
+                k += bits.count_ones() as usize;
+                ended = true;
+            }
+        }
+        Some(k)
+    }
+
+    /// Clear every enable bit at byte lane >= `from_byte` (the FFR
+    /// partition update of §2.3.3, and break masks of §2.3.4).
+    pub fn clear_from(&mut self, from_byte: usize) {
+        for (w, word) in self.words.iter_mut().enumerate() {
+            let lo = w * 64;
+            if from_byte <= lo {
+                *word = 0;
+            } else if from_byte < lo + 64 {
+                *word &= (1u64 << (from_byte - lo)) - 1;
+            }
+        }
+    }
+
+    /// Word-parallel predicate logic under a governing predicate:
+    /// `result = f(n, m) & g`, masked to `vl_bytes` (B-granule — every
+    /// bit is an element enable).
+    pub fn combine(
+        n: &PredReg,
+        m: &PredReg,
+        g: &PredReg,
+        vl_bytes: usize,
+        f: impl Fn(u64, u64) -> u64,
+    ) -> PredReg {
+        let mut r = PredReg::default();
+        for w in 0..r.words.len() {
+            r.words[w] = f(n.words[w], m.words[w]) & g.words[w] & Self::word_mask(vl_bytes, w);
+        }
+        r
     }
 
     /// Number of active elements at size `e` within `vl_bytes`.
@@ -240,15 +322,7 @@ impl PredReg {
         let pat = Self::elem_pattern(e);
         let mut n = 0;
         for (w, &word) in self.words.iter().enumerate() {
-            let lo = w * 64;
-            let mask = if vl_bytes >= lo + 64 {
-                u64::MAX
-            } else if vl_bytes > lo {
-                (1u64 << (vl_bytes - lo)) - 1
-            } else {
-                break;
-            };
-            n += (word & pat & mask).count_ones() as usize;
+            n += (word & pat & Self::word_mask(vl_bytes, w)).count_ones() as usize;
         }
         n
     }
@@ -256,14 +330,26 @@ impl PredReg {
     /// Index of the first active element, if any (§2.3.1 "Implicit
     /// order": least- to most-significant).
     pub fn first_active(&self, e: Esize, vl_bytes: usize) -> Option<usize> {
+        self.first_active_from(e, 0, vl_bytes)
+    }
+
+    /// Index of the first active element at lane >= `from`, if any
+    /// (the `pnext` scan of §2.3.5).
+    pub fn first_active_from(&self, e: Esize, from: usize, vl_bytes: usize) -> Option<usize> {
         let pat = Self::elem_pattern(e);
+        let start_bit = from * e.bytes();
         for (w, &word) in self.words.iter().enumerate() {
             let lo = w * 64;
+            if lo + 64 <= start_bit {
+                continue;
+            }
             if lo >= vl_bytes {
                 break;
             }
-            let mask = if vl_bytes >= lo + 64 { u64::MAX } else { (1u64 << (vl_bytes - lo)) - 1 };
-            let bits = word & pat & mask;
+            let mut bits = word & pat & Self::word_mask(vl_bytes, w);
+            if start_bit > lo {
+                bits &= !((1u64 << (start_bit - lo)) - 1);
+            }
             if bits != 0 {
                 return Some((lo + bits.trailing_zeros() as usize) / e.bytes());
             }
@@ -276,11 +362,9 @@ impl PredReg {
         let pat = Self::elem_pattern(e);
         let words = vl_bytes.div_ceil(64).min(self.words.len());
         for w in (0..words).rev() {
-            let lo = w * 64;
-            let mask = if vl_bytes >= lo + 64 { u64::MAX } else { (1u64 << (vl_bytes - lo)) - 1 };
-            let bits = self.words[w] & pat & mask;
+            let bits = self.words[w] & pat & Self::word_mask(vl_bytes, w);
             if bits != 0 {
-                return Some((lo + 63 - bits.leading_zeros() as usize) / e.bytes());
+                return Some((w * 64 + 63 - bits.leading_zeros() as usize) / e.bytes());
             }
         }
         None
@@ -298,6 +382,18 @@ impl PredReg {
             *w = self.words[i] & other.words[i];
         }
         r
+    }
+
+    /// Is `self & other` empty at element granularity within `vl_bytes`?
+    /// (The Table 1 "None" flag, word-parallel.)
+    pub fn and_none(&self, other: &PredReg, e: Esize, vl_bytes: usize) -> bool {
+        let pat = Self::elem_pattern(e);
+        for w in 0..self.words.len() {
+            if self.words[w] & other.words[w] & pat & Self::word_mask(vl_bytes, w) != 0 {
+                return false;
+            }
+        }
+        true
     }
 }
 
@@ -386,6 +482,8 @@ mod tests {
         assert_eq!(p.first_active(Esize::S, vlb), Some(2));
         assert_eq!(p.last_active(Esize::S, vlb), Some(5));
         assert_eq!(p.count_active(Esize::S, vlb), 2);
+        assert_eq!(p.first_active_from(Esize::S, 3, vlb), Some(5));
+        assert_eq!(p.first_active_from(Esize::S, 6, vlb), None);
     }
 
     #[test]
@@ -398,6 +496,72 @@ mod tests {
         let c = a.and(&b);
         assert!(c.active(Esize::D, 0));
         assert!(!c.active(Esize::D, 1));
+        assert!(!a.and_none(&b, Esize::D, vlb));
+        assert!(b.and_none(&PredReg::default(), Esize::D, vlb));
+    }
+
+    #[test]
+    fn prefix_construction_and_detection_agree() {
+        check("prefix_construction_and_detection_agree", 400, |g| {
+            let e = *g.choose(&Esize::ALL);
+            let vlb = 16 * g.usize_in(1, 16);
+            let lanes = e.lanes(vlb);
+            let k = g.usize_in(0, lanes);
+            let mut p = PredReg::default();
+            p.set_prefix(e, k, vlb);
+            for i in 0..lanes {
+                assert_eq!(p.active(e, i), i < k, "lane {i} of prefix {k}");
+            }
+            assert_eq!(p.prefix_len(e, vlb), Some(k));
+            // poke an interior hole (or a detached lane): shape breaks
+            if k >= 3 {
+                p.set_active(e, k / 2, false); // k/2 <= k-2: hole, not a shorter prefix
+                assert_eq!(p.prefix_len(e, vlb), None);
+            } else if k + 2 <= lanes {
+                p.set_active(e, k + 1, true);
+                assert_eq!(p.prefix_len(e, vlb), None);
+            }
+        });
+    }
+
+    #[test]
+    fn clear_from_partitions_the_register() {
+        let vlb = 32;
+        let mut p = PredReg::default();
+        p.set_all(Esize::B, vlb);
+        p.clear_from(10);
+        for i in 0..vlb {
+            assert_eq!(p.active(Esize::B, i), i < 10, "lane {i}");
+        }
+        // clearing across a word boundary
+        let mut q = PredReg::default();
+        q.set_all(Esize::B, 256);
+        q.clear_from(70);
+        assert_eq!(q.count_active(Esize::B, 256), 70);
+    }
+
+    #[test]
+    fn combine_matches_per_lane_reference() {
+        check("combine_matches_per_lane_reference", 300, |g| {
+            let vlb = 16 * g.usize_in(1, 16);
+            let mut n = PredReg::default();
+            let mut m = PredReg::default();
+            let mut pg = PredReg::default();
+            for i in 0..vlb {
+                n.set_bit(i, g.bool());
+                m.set_bit(i, g.bool());
+                pg.set_bit(i, g.bool());
+            }
+            let r = PredReg::combine(&n, &m, &pg, vlb, |a, b| a & !b); // bic
+            for i in 0..vlb {
+                let want = n.get_bit(i) && !m.get_bit(i) && pg.get_bit(i);
+                assert_eq!(r.get_bit(i), want, "lane {i}");
+            }
+            // nothing beyond VL survives
+            for i in vlb..VL_MAX_BYTES {
+                assert!(!r.get_bit(i));
+            }
+        });
     }
 
     #[test]

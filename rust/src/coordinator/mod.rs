@@ -2,11 +2,11 @@
 //! validates every run's architectural results, aggregates statistics and
 //! regenerates the paper's figures/tables (Fig. 8 foremost).
 
-use crate::compiler::Target;
+use crate::compiler::{Compiled, Target};
 use crate::csvutil::{f, Table};
 use crate::exec::Executor;
 use crate::uarch::{run_timed, UarchConfig};
-use crate::workloads::{self, Group};
+use crate::workloads::{self, Group, Workload};
 
 /// One simulated configuration.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -59,6 +59,15 @@ pub struct RunRecord {
 pub fn run_one(name: &'static str, isa: Isa) -> Result<RunRecord, String> {
     let w = workloads::build(name);
     let compiled = w.compile(isa.target());
+    run_compiled(&w, &compiled, isa)
+}
+
+/// Run an already-built workload with an already-compiled program.
+/// SVE binaries are vector-length agnostic (§2.2), so a sweep compiles
+/// each (benchmark, target) once and reuses the program at every VL —
+/// only the executor's hardware VL changes between runs.
+pub fn run_compiled(w: &Workload, compiled: &Compiled, isa: Isa) -> Result<RunRecord, String> {
+    let name = w.name;
     let mut ex = Executor::new(isa.vl(), w.mem.clone());
     let (stats, timing) =
         run_timed(&mut ex, &compiled.program, UarchConfig::default(), w.max_insts)
@@ -100,17 +109,22 @@ impl Fig8Row {
 }
 
 /// Run the full Fig. 8 sweep (all benchmarks × NEON + SVE at `vls`),
-/// parallelized over benchmarks with std threads.
+/// parallelized over benchmarks with std threads. Each benchmark is
+/// built and compiled once per target; the same SVE program is swept
+/// across every VL (vector-length agnosticism, §2.2).
 pub fn run_fig8(vls: &[usize], names: &[&'static str]) -> Result<Vec<Fig8Row>, String> {
     let mut rows: Vec<Option<Fig8Row>> = (0..names.len()).map(|_| None).collect();
     std::thread::scope(|s| {
         let mut handles = vec![];
         for &name in names {
             handles.push(s.spawn(move || -> Result<Fig8Row, String> {
-                let neon = run_one(name, Isa::Neon)?;
+                let w = workloads::build(name);
+                let compiled_neon = w.compile(Target::Neon);
+                let neon = run_compiled(&w, &compiled_neon, Isa::Neon)?;
+                let compiled_sve = w.compile(Target::Sve);
                 let mut sve = vec![];
                 for &vl in vls {
-                    sve.push(run_one(name, Isa::Sve(vl))?);
+                    sve.push(run_compiled(&w, &compiled_sve, Isa::Sve(vl))?);
                 }
                 let extra = (sve[0].vector_fraction - neon.vector_fraction).max(0.0);
                 Ok(Fig8Row {
@@ -196,6 +210,19 @@ mod tests {
             s.cycles,
             r.cycles
         );
+    }
+
+    #[test]
+    fn compile_once_sweep_is_bit_identical_to_per_run_compile() {
+        // reusing one compiled SVE program across VLs (VLA, §2.2) must
+        // not change any reported number
+        let rows = run_fig8(&[128, 512], &["stream_triad"]).unwrap();
+        let d128 = run_one("stream_triad", Isa::Sve(128)).unwrap();
+        let d512 = run_one("stream_triad", Isa::Sve(512)).unwrap();
+        assert_eq!(rows[0].sve[0].cycles, d128.cycles);
+        assert_eq!(rows[0].sve[1].cycles, d512.cycles);
+        assert_eq!(rows[0].sve[0].insts, d128.insts);
+        assert_eq!(rows[0].sve[0].vector_fraction, d128.vector_fraction);
     }
 
     #[test]

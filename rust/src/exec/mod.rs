@@ -2,6 +2,22 @@
 //! SVE subsets. Timing is *not* modelled here — the executor streams
 //! retired-instruction information to a callback, which the
 //! [`crate::uarch`] model consumes (classic trace-driven split).
+//!
+//! # Hot-path design
+//!
+//! The retire loop is the simulator's innermost loop (hundreds of
+//! millions of iterations per Fig. 8 sweep), so:
+//!
+//! * a direct-mapped **software TLB** ([`Tlb`]) caches page→slot
+//!   translations into [`Memory`]'s page table, validated against
+//!   [`Memory::epoch`] so any `map`/`unmap_page` (or wholesale memory
+//!   replacement) invalidates every entry — contiguous vector accesses
+//!   translate once per *page* instead of once per lane, while
+//!   first-fault loads still observe per-element faults (see
+//!   `exec/sve.rs`);
+//! * per-instruction static metadata (µop class, SVE/NEON/vector bits)
+//!   is precomputed once per [`Executor::run_with`] call instead of
+//!   re-deriving it from the `Inst` enum on every retire.
 
 mod neon;
 mod scalar;
@@ -9,8 +25,8 @@ mod sve;
 
 use crate::arch::CpuState;
 use crate::asm::Program;
-use crate::isa::Inst;
-use crate::mem::{MemFault, Memory};
+use crate::isa::{Inst, UopClass};
+use crate::mem::{MemFault, Memory, PAGE_SHIFT, PAGE_SIZE};
 
 /// One architectural memory access, as seen by the LSU/cache model.
 /// Contiguous vector accesses are reported as a single span (the LSU
@@ -36,6 +52,8 @@ pub enum Trap {
 pub struct StepInfo<'a> {
     pub pc: usize,
     pub inst: &'a Inst,
+    /// µop class, precomputed per pc (identical to `inst.class()`).
+    pub class: UopClass,
     /// For branches: was it taken?
     pub taken: bool,
     pub mem: &'a [MemAccess],
@@ -63,10 +81,82 @@ impl RunStats {
     }
 }
 
+const TLB_SLOTS: usize = 32;
+const TLB_INVALID_PAGE: u64 = u64::MAX;
+
+/// Direct-mapped software TLB: page number → [`Memory`] slot handle.
+///
+/// Entries are valid only for the [`Memory::epoch`] they were filled at;
+/// the epoch changes on every `map`/`unmap_page`/page-table growth and
+/// on every new `Memory` value, so a mismatch flushes the whole TLB.
+/// All-safe-Rust: a (hypothetically) stale handle panics in
+/// `Memory::slot_frame` rather than reading the wrong page.
+pub(crate) struct Tlb {
+    epoch: u64,
+    pages: [u64; TLB_SLOTS],
+    slots: [u32; TLB_SLOTS],
+}
+
+impl Tlb {
+    fn new() -> Self {
+        // memory epochs are >= 1, so epoch 0 can never validate
+        Tlb { epoch: 0, pages: [TLB_INVALID_PAGE; TLB_SLOTS], slots: [0; TLB_SLOTS] }
+    }
+
+    /// Translate `addr`'s page to a slot handle, filling on miss.
+    /// `None` means the page is unmapped (the caller faults).
+    #[inline]
+    fn lookup(&mut self, mem: &Memory, addr: u64) -> Option<u32> {
+        if self.epoch != mem.epoch() {
+            self.pages = [TLB_INVALID_PAGE; TLB_SLOTS];
+            self.epoch = mem.epoch();
+        }
+        let page = addr >> PAGE_SHIFT;
+        let i = (page as usize) & (TLB_SLOTS - 1);
+        if self.pages[i] == page {
+            return Some(self.slots[i]);
+        }
+        let slot = mem.slot_handle(addr)?;
+        self.pages[i] = page;
+        self.slots[i] = slot;
+        Some(slot)
+    }
+}
+
+/// Per-pc static metadata, precomputed once per run.
+#[derive(Clone, Copy)]
+struct InstMeta {
+    class: UopClass,
+    flags: u8,
+}
+
+const META_SVE: u8 = 1;
+const META_NEON: u8 = 2;
+const META_VECTOR: u8 = 4;
+
+impl InstMeta {
+    fn of(inst: &Inst) -> InstMeta {
+        let class = inst.class();
+        let mut flags = 0u8;
+        if inst.is_sve() {
+            flags |= META_SVE;
+        }
+        if inst.is_neon() {
+            flags |= META_NEON;
+        }
+        if class.is_vector() {
+            flags |= META_VECTOR;
+        }
+        InstMeta { class, flags }
+    }
+}
+
 /// The functional core: architectural state + memory.
 pub struct Executor {
     pub state: CpuState,
     pub mem: Memory,
+    /// Software TLB over `mem`'s page table.
+    pub(crate) tlb: Tlb,
     /// Scratch buffer of the current instruction's memory accesses.
     pub(crate) accesses: Vec<MemAccess>,
     /// PC override set by a taken branch during `exec_inst`.
@@ -82,6 +172,7 @@ impl Executor {
         Executor {
             state: CpuState::new(vl_bits),
             mem,
+            tlb: Tlb::new(),
             accesses: Vec::with_capacity(64),
             next_pc: None,
             lane_scratch: vec![0; 256],
@@ -92,18 +183,25 @@ impl Executor {
     /// Execute one instruction at `state.pc`. On success advances the PC
     /// and returns whether a branch was taken.
     pub fn step(&mut self, prog: &Program) -> Result<bool, Trap> {
-        let pc = self.state.pc;
+        self.exec_at(prog, self.state.pc)
+    }
+
+    /// Execute the instruction at `pc` and advance the PC — the single
+    /// shared body behind [`Executor::step`] and the `run_with` loop.
+    #[inline(always)]
+    fn exec_at(&mut self, prog: &Program, pc: usize) -> Result<bool, Trap> {
         let inst = &prog.insts[pc];
         self.accesses.clear();
         self.next_pc = None;
-        match self.exec_inst(inst) {
-            Ok(()) => {
-                let taken = self.next_pc.is_some();
-                self.state.pc = self.next_pc.unwrap_or(pc + 1);
-                Ok(taken)
-            }
-            Err(fault) => Err(Trap::Fault { fault, pc }),
+        if let Err(fault) = self.exec_inst(inst) {
+            return Err(Trap::Fault { fault, pc });
         }
+        let taken = self.next_pc.is_some();
+        self.state.pc = match self.next_pc {
+            Some(t) => t,
+            None => pc + 1,
+        };
+        Ok(taken)
     }
 
     /// Run until Halt/Ret (Ok) or a trap (Err), streaming retire info.
@@ -113,25 +211,23 @@ impl Executor {
         max_insts: u64,
         mut on_retire: impl FnMut(StepInfo<'_>),
     ) -> Result<RunStats, Trap> {
+        // One pass over the static program instead of three enum matches
+        // per retired instruction.
+        let meta: Vec<InstMeta> = prog.insts.iter().map(InstMeta::of).collect();
         let mut stats = RunStats::default();
         while !self.halted {
             if stats.insts >= max_insts {
                 return Err(Trap::Budget);
             }
             let pc = self.state.pc;
-            let taken = self.step(prog)?;
+            let taken = self.exec_at(prog, pc)?;
             let inst = &prog.insts[pc];
+            let m = meta[pc];
             stats.insts += 1;
-            if inst.is_sve() {
-                stats.sve_insts += 1;
-            }
-            if inst.is_neon() {
-                stats.neon_insts += 1;
-            }
-            if inst.class().is_vector() {
-                stats.vector_insts += 1;
-            }
-            on_retire(StepInfo { pc, inst, taken, mem: &self.accesses });
+            stats.sve_insts += u64::from(m.flags & META_SVE != 0);
+            stats.neon_insts += u64::from(m.flags & META_NEON != 0);
+            stats.vector_insts += u64::from(m.flags & META_VECTOR != 0);
+            on_retire(StepInfo { pc, inst, class: m.class, taken, mem: &self.accesses });
         }
         Ok(stats)
     }
@@ -178,6 +274,62 @@ impl Executor {
     pub(crate) fn record_store(&mut self, addr: u64, len: u32) {
         self.accesses.push(MemAccess { addr, len, is_store: true });
     }
+
+    /// Contiguous read through the TLB: one translation per page
+    /// touched, `copy_from_slice` within each page. Copies until the
+    /// first unmapped byte; returns bytes copied plus the fault, if any
+    /// (the fault address is the exact first unmapped byte, matching the
+    /// per-byte path's reporting).
+    pub(crate) fn read_contig_partial(
+        &mut self,
+        addr: u64,
+        out: &mut [u8],
+    ) -> (usize, Option<MemFault>) {
+        let mut done = 0usize;
+        while done < out.len() {
+            let a = addr + done as u64;
+            let off = (a as usize) & (PAGE_SIZE - 1);
+            let chunk = (PAGE_SIZE - off).min(out.len() - done);
+            match self.tlb.lookup(&self.mem, a) {
+                Some(slot) => {
+                    out[done..done + chunk]
+                        .copy_from_slice(&self.mem.slot_frame(slot)[off..off + chunk]);
+                    done += chunk;
+                }
+                None => return (done, Some(MemFault { addr: a, is_store: false })),
+            }
+        }
+        (done, None)
+    }
+
+    /// All-or-fault contiguous read through the TLB.
+    pub(crate) fn read_contig(&mut self, addr: u64, out: &mut [u8]) -> Result<(), MemFault> {
+        match self.read_contig_partial(addr, out) {
+            (_, Some(fault)) => Err(fault),
+            _ => Ok(()),
+        }
+    }
+
+    /// Contiguous write through the TLB (one translation per page).
+    /// Pages before the first unmapped byte stay written on fault, the
+    /// same observable behaviour as the per-element path (a fault aborts
+    /// the whole run).
+    pub(crate) fn write_contig(&mut self, addr: u64, src: &[u8]) -> Result<(), MemFault> {
+        let mut done = 0usize;
+        while done < src.len() {
+            let a = addr + done as u64;
+            let off = (a as usize) & (PAGE_SIZE - 1);
+            let chunk = (PAGE_SIZE - off).min(src.len() - done);
+            let slot = self
+                .tlb
+                .lookup(&self.mem, a)
+                .ok_or(MemFault { addr: a, is_store: true })?;
+            self.mem.slot_frame_mut(slot)[off..off + chunk]
+                .copy_from_slice(&src[done..done + chunk]);
+            done += chunk;
+        }
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -213,5 +365,39 @@ mod tests {
         let s = RunStats { insts: 10, sve_insts: 4, neon_insts: 0, vector_insts: 5 };
         assert!((s.vector_fraction() - 0.5).abs() < 1e-12);
         assert_eq!(RunStats::default().vector_fraction(), 0.0);
+    }
+
+    #[test]
+    fn step_info_class_matches_inst_class() {
+        let mut a = Asm::new();
+        a.push(Inst::MovImm { xd: 0, imm: 1 });
+        a.push(Inst::Setffr);
+        a.push(Inst::NeonMoviZero { vd: 0 });
+        a.push(Inst::Halt);
+        let p = a.finish();
+        let mut ex = Executor::new(128, Memory::new());
+        ex.run_with(&p, 100, |info| {
+            assert_eq!(info.class, info.inst.class(), "pc {}", info.pc);
+        })
+        .unwrap();
+    }
+
+    #[test]
+    fn contig_helpers_roundtrip_and_fault() {
+        let mut mem = Memory::new();
+        mem.map(0x1000, 2 * PAGE_SIZE as u64); // third page unmapped
+        let mut ex = Executor::new(128, mem);
+        let base = 0x1000 + PAGE_SIZE as u64 - 8; // straddles a boundary
+        let src: Vec<u8> = (0..64u8).collect();
+        ex.write_contig(base, &src).unwrap();
+        let mut out = [0u8; 64];
+        ex.read_contig(base, &mut out).unwrap();
+        assert_eq!(&out[..], &src[..]);
+        // partial read up to the hole after page 2
+        let tail = 0x1000 + 2 * PAGE_SIZE as u64 - 4;
+        let mut buf = [0u8; 16];
+        let (copied, fault) = ex.read_contig_partial(tail, &mut buf);
+        assert_eq!(copied, 4);
+        assert_eq!(fault, Some(MemFault { addr: 0x3000, is_store: false }));
     }
 }

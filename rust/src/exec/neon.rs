@@ -16,10 +16,9 @@ impl Executor {
         match *inst {
             NeonLd1 { esize: _, vt, base, off } => {
                 let addr = self.neon_ea(base, off);
+                // bulk path: one TLB translation per page touched
                 let mut bytes = [0u8; NEON_BYTES];
-                for (k, b) in bytes.iter_mut().enumerate() {
-                    *b = self.mem.read_byte(addr + k as u64)?;
-                }
+                self.read_contig(addr, &mut bytes)?;
                 self.record_load(addr, NEON_BYTES as u32);
                 let r = &mut self.state.z[vt as usize];
                 r.bytes[..NEON_BYTES].copy_from_slice(&bytes);
@@ -29,9 +28,7 @@ impl Executor {
                 let addr = self.neon_ea(base, off);
                 let bytes: [u8; NEON_BYTES] =
                     self.state.z[vt as usize].bytes[..NEON_BYTES].try_into().unwrap();
-                for (k, b) in bytes.iter().enumerate() {
-                    self.mem.write_byte(addr + k as u64, *b)?;
-                }
+                self.write_contig(addr, &bytes)?;
                 self.record_store(addr, NEON_BYTES as u32);
             }
             NeonDupX { esize, vd, xn } => {

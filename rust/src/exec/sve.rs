@@ -8,6 +8,7 @@ use crate::exec::neon::{fcmp, icmp_signed, icmp_unsigned, int_bin};
 use crate::exec::scalar::{fp_bin, fp_bin32, fp_un, fp_un32};
 use crate::isa::{GatherAddr, Inst, PLogicOp, RedOp, RegOrImm, SveMemOff, ZmOrImm};
 use crate::mem::MemFault;
+use crate::VL_MAX_BYTES;
 
 impl Executor {
     pub(crate) fn exec_sve(&mut self, inst: &Inst) -> Result<(), MemFault> {
@@ -20,30 +21,38 @@ impl Executor {
                 p.set_all(esize, vlb);
                 self.state.p[pd as usize] = p;
                 if s {
-                    let mut all = PredReg::default();
-                    all.set_all(esize, vlb);
-                    self.state.flags = Flags::from_pred_result(&all, &p, esize, vlb);
+                    // governing predicate of ptrue is itself
+                    self.state.flags = Flags::from_pred_result(&p, &p, esize, vlb);
                 }
             }
             Pfalse { pd } => self.state.p[pd as usize].clear(),
             While { pd, esize, xn, xm, unsigned } => {
                 // §2.3.2 — the governing predicate a sequential loop
                 // would compute, with wrap-around handled like the
-                // original sequential code.
+                // original sequential code. whilelt/whilelo produce a
+                // *prefix* predicate by construction, so the lane loop
+                // collapses to a count plus one word-parallel fill.
                 let lanes = esize.lanes(vlb);
-                let mut p = PredReg::default();
                 let (a, b) = (self.state.get_x(xn), self.state.get_x(xm));
-                for i in 0..lanes {
-                    let active = if unsigned {
-                        a.wrapping_add(i as u64) >= a // no wrap so far
-                            && a.wrapping_add(i as u64) < b
+                let count = if unsigned {
+                    if a >= b {
+                        0
                     } else {
-                        let ai = (a as i64).wrapping_add(i as i64);
-                        ai >= a as i64 && ai < b as i64
-                    };
-                    p.set_active(esize, i, active);
-                }
-                // whilelt produces a "prefix" predicate by construction
+                        // lanes stay active until the counter reaches b;
+                        // a wrapped counter compares below a and stops.
+                        ((b - a) as u128).min(lanes as u128) as usize
+                    }
+                } else {
+                    let (a, b) = (a as i64, b as i64);
+                    if a >= b {
+                        0
+                    } else {
+                        let remaining = (i64::MAX as i128) - (a as i128) + 1; // until wrap
+                        ((b as i128) - (a as i128)).min(remaining).min(lanes as i128) as usize
+                    }
+                };
+                let mut p = PredReg::default();
+                p.set_prefix(esize, count, vlb);
                 self.state.p[pd as usize] = p;
                 let mut all = PredReg::default();
                 all.set_all(esize, vlb);
@@ -64,57 +73,49 @@ impl Executor {
                     None => 0,
                 };
                 let mut r = PredReg::default();
-                for i in start..esize.lanes(vlb) {
-                    if g.active(esize, i) {
-                        r.set_active(esize, i, true);
-                        break;
-                    }
+                if let Some(i) = g.first_active_from(esize, start, vlb) {
+                    r.set_active(esize, i, true);
                 }
                 self.state.p[pdn as usize] = r;
                 self.state.flags = Flags::from_pred_result(&g, &r, esize, vlb);
             }
             Brk { pd, pg, pn, before, s } => {
                 // §2.3.4 — vector partitioning: the before-break (brkb)
-                // or up-to-and-including-break (brka) partition. B-granule.
+                // or up-to-and-including-break (brka) partition,
+                // B-granule, zeroing form: keep pg's lanes strictly
+                // before (brkb) / up to and including (brka) the first
+                // active break lane — one scan plus one mask.
                 let g = self.state.p[pg as usize];
                 let n = self.state.p[pn as usize];
-                let lanes = vlb; // .b lanes
-                let brk = (0..lanes).find(|&i| g.active(Esize::B, i) && n.active(Esize::B, i));
-                let mut r = PredReg::default();
-                for i in 0..lanes {
-                    let keep = match brk {
-                        None => true,
-                        Some(k) => {
-                            if before {
-                                i < k
-                            } else {
-                                i <= k
-                            }
+                let keep = match g.and(&n).first_active(Esize::B, vlb) {
+                    None => vlb,
+                    Some(k) => {
+                        if before {
+                            k
+                        } else {
+                            k + 1
                         }
-                    };
-                    // zeroing form: result only within pg
-                    r.set_active(Esize::B, i, keep && g.active(Esize::B, i));
-                }
+                    }
+                };
+                let mut r = g;
+                r.clear_from(keep.min(vlb));
                 self.state.p[pd as usize] = r;
                 if s {
                     self.state.flags = Flags::from_pred_result(&g, &r, Esize::B, vlb);
                 }
             }
             PredLogic { op, pd, pg, pn, pm, s } => {
+                // word-parallel: at .b granularity every bit is an
+                // element enable, so the lane loop is four u64 ops
                 let g = self.state.p[pg as usize];
                 let n = self.state.p[pn as usize];
                 let m = self.state.p[pm as usize];
-                let mut r = PredReg::default();
-                for i in 0..vlb {
-                    let (a, b) = (n.active(Esize::B, i), m.active(Esize::B, i));
-                    let v = match op {
-                        PLogicOp::And => a && b,
-                        PLogicOp::Orr => a || b,
-                        PLogicOp::Eor => a != b,
-                        PLogicOp::Bic => a && !b,
-                    };
-                    r.set_active(Esize::B, i, v && g.active(Esize::B, i));
-                }
+                let r = match op {
+                    PLogicOp::And => PredReg::combine(&n, &m, &g, vlb, |a, b| a & b),
+                    PLogicOp::Orr => PredReg::combine(&n, &m, &g, vlb, |a, b| a | b),
+                    PLogicOp::Eor => PredReg::combine(&n, &m, &g, vlb, |a, b| a ^ b),
+                    PLogicOp::Bic => PredReg::combine(&n, &m, &g, vlb, |a, b| a & !b),
+                };
                 self.state.p[pd as usize] = r;
                 if s {
                     self.state.flags = Flags::from_pred_result(&g, &r, Esize::B, vlb);
@@ -265,20 +266,33 @@ impl Executor {
                 let ebytes = esize.bytes();
                 let baddr = self.sve_contig_base(base, off, ebytes, vlb);
                 let g = self.state.p[pg as usize];
-                let z = self.state.z[zt as usize];
-                let mut span: Option<(u64, u64)> = None;
-                for i in 0..esize.lanes(vlb) {
-                    if g.active(esize, i) {
-                        let addr = baddr + (i * ebytes) as u64;
-                        self.mem.write(addr, ebytes, z.get(esize, i))?;
-                        span = Some(match span {
-                            None => (addr, addr + ebytes as u64),
-                            Some((lo, hi)) => (lo.min(addr), hi.max(addr + ebytes as u64)),
-                        });
+                if let Some(k) = g.prefix_len(esize, vlb) {
+                    // dense-prefix fast path (ptrue/whilelt predicates):
+                    // the little-endian register image *is* the memory
+                    // image, so the store is one bulk copy per page
+                    if k > 0 {
+                        let total = k * ebytes;
+                        let zbytes = self.state.z[zt as usize].bytes;
+                        self.write_contig(baddr, &zbytes[..total])?;
+                        self.record_store(baddr, total as u32);
                     }
-                }
-                if let Some((lo, hi)) = span {
-                    self.record_store(lo, (hi - lo) as u32);
+                } else {
+                    // sparse predicate: element-at-a-time semantics
+                    let z = self.state.z[zt as usize];
+                    let mut span: Option<(u64, u64)> = None;
+                    for i in 0..esize.lanes(vlb) {
+                        if g.active(esize, i) {
+                            let addr = baddr + (i * ebytes) as u64;
+                            self.mem.write(addr, ebytes, z.get(esize, i))?;
+                            span = Some(match span {
+                                None => (addr, addr + ebytes as u64),
+                                Some((lo, hi)) => (lo.min(addr), hi.max(addr + ebytes as u64)),
+                            });
+                        }
+                    }
+                    if let Some((lo, hi)) = span {
+                        self.record_store(lo, (hi - lo) as u32);
+                    }
                 }
             }
             SveLdGather { zt, pg, esize, addr, ff } => {
@@ -698,6 +712,15 @@ impl Executor {
     }
 
     /// Contiguous (optionally first-faulting) predicated load.
+    ///
+    /// Dense-prefix predicates (what `ptrue`/`whilelt` produce — the
+    /// only shape the compiler emits for contiguous loops) take a bulk
+    /// path: one TLB translation per page and one `copy_from_slice`
+    /// straight into the little-endian register image. First-fault
+    /// semantics are preserved exactly — the bulk copy stops at the
+    /// first unmapped byte, which identifies the same faulting element
+    /// the per-lane walk would find (elements before it sit entirely in
+    /// mapped pages), and the FFR partition update is one bitwise mask.
     fn sve_ld1(
         &mut self,
         zt: u8,
@@ -712,6 +735,36 @@ impl Executor {
         let baddr = self.sve_contig_base(base, off, ebytes, vlb);
         let g = self.state.p[pg as usize];
         let lanes = esize.lanes(vlb);
+        if let Some(k) = g.prefix_len(esize, vlb) {
+            let total = k * ebytes;
+            let mut buf = [0u8; VL_MAX_BYTES];
+            let (copied, fault) = self.read_contig_partial(baddr, &mut buf[..total]);
+            let loaded = match fault {
+                Some(f) => {
+                    // element containing the first unmapped byte
+                    let fl = copied / ebytes;
+                    if !ff || fl == 0 {
+                        // non-ff loads, or a fault on the FIRST active
+                        // element, trap for real (§2.3.3)
+                        return Err(f);
+                    }
+                    // clear FFR from the faulting element onward
+                    self.state.ffr.clear_from(fl * ebytes);
+                    fl
+                }
+                None => k,
+            };
+            if loaded > 0 {
+                self.record_load(baddr, (loaded * ebytes) as u32);
+            }
+            let z = &mut self.state.z[zt as usize];
+            z.zero();
+            z.bytes[..loaded * ebytes].copy_from_slice(&buf[..loaded * ebytes]);
+            return Ok(());
+        }
+        // sparse predicate: element-at-a-time (zeroing predication, and
+        // inactive lanes never touch memory — a hole under an inactive
+        // lane is not a fault)
         let mut vals = std::mem::take(&mut self.lane_scratch);
         vals[..lanes].fill(0);
         let mut span: Option<(u64, u64)> = None;
@@ -719,7 +772,7 @@ impl Executor {
         let first_active = g.first_active(esize, vlb);
         for i in 0..lanes {
             if !g.active(esize, i) {
-                continue; // zeroing predication
+                continue;
             }
             let addr = baddr + (i * ebytes) as u64;
             match self.mem.read(addr, ebytes) {
@@ -732,8 +785,6 @@ impl Executor {
                 }
                 Err(fault) => {
                     if !ff || Some(i) == first_active {
-                        // non-ff loads, or a fault on the FIRST active
-                        // element, trap for real (§2.3.3)
                         self.lane_scratch = vals;
                         return Err(fault);
                     }
@@ -744,9 +795,7 @@ impl Executor {
         }
         if let Some(fl) = fault_lane {
             // clear FFR from the faulting element onward
-            for i in fl..lanes {
-                self.state.ffr.set_active(esize, i, false);
-            }
+            self.state.ffr.clear_from(fl * ebytes);
         }
         if let Some((lo, hi)) = span {
             self.record_load(lo, (hi - lo) as u32);
@@ -812,9 +861,8 @@ impl Executor {
             }
         }
         if let Some(fl) = fault_lane {
-            for i in fl..lanes {
-                self.state.ffr.set_active(esize, i, false);
-            }
+            // clear FFR from the faulting element onward (bitwise mask)
+            self.state.ffr.clear_from(fl * esize.bytes());
         }
         let z = &mut self.state.z[zt as usize];
         z.zero();
@@ -1401,6 +1449,185 @@ mod tests {
         });
         assert_eq!(ex.state.z[3].get_f64(0), 12.0);
         assert_eq!(ex.state.z[1].get_f64(0), 5.0, "source unchanged (constructive)");
+    }
+
+    // ============ software-TLB / bulk-path regression tests ============
+
+    #[test]
+    fn tlb_invalidated_after_unmap_page() {
+        let mut mem = Memory::new();
+        let page = 0x40_000u64;
+        mem.map(page, PAGE_SIZE as u64);
+        mem.write_u64(page, 77).unwrap();
+        let mut a = Asm::new();
+        a.push(Inst::MovImm { xd: 0, imm: page });
+        a.push(Inst::Ptrue { pd: 0, esize: Esize::D, s: false });
+        a.push(Inst::SveLd1 {
+            zt: 0,
+            pg: 0,
+            esize: Esize::D,
+            base: 0,
+            off: SveMemOff::ImmVl(0),
+            ff: false,
+        });
+        a.push(Inst::Halt);
+        let p = a.finish();
+        let mut ex = Executor::new(128, mem);
+        ex.run(&p, 100).unwrap(); // warms the TLB entry for `page`
+        assert_eq!(ex.state.z[0].get(Esize::D, 0), 77);
+        // unmap must invalidate the cached translation
+        ex.mem.unmap_page(page);
+        ex.halted = false;
+        ex.state.pc = 0;
+        match ex.run(&p, 100) {
+            Err(Trap::Fault { fault, .. }) => assert_eq!(fault.addr, page),
+            other => panic!("expected fault after unmap, got {other:?}"),
+        }
+        // and a remap must resolve to the fresh (zeroed) page
+        ex.mem.map(page, PAGE_SIZE as u64);
+        ex.halted = false;
+        ex.state.pc = 0;
+        ex.run(&p, 100).unwrap();
+        assert_eq!(ex.state.z[0].get(Esize::D, 0), 0, "remapped page is zeroed");
+    }
+
+    #[test]
+    fn tlb_cross_page_contiguous_load_and_store() {
+        let mut mem = Memory::new();
+        let base = 0x10_000u64;
+        mem.map(base, 2 * PAGE_SIZE as u64);
+        let start = base + PAGE_SIZE as u64 - 16; // spans both pages
+        for k in 0..32u64 {
+            mem.write_byte(start + k, k as u8 + 1).unwrap();
+        }
+        let ex = exec_with(256, mem, |a| {
+            a.push(Inst::MovImm { xd: 0, imm: start });
+            a.push(Inst::MovImm { xd: 1, imm: start + 32 });
+            a.push(Inst::Ptrue { pd: 0, esize: Esize::B, s: false });
+            a.push(Inst::SveLd1 {
+                zt: 0,
+                pg: 0,
+                esize: Esize::B,
+                base: 0,
+                off: SveMemOff::ImmVl(0),
+                ff: false,
+            });
+            a.push(Inst::SveSt1 { zt: 0, pg: 0, esize: Esize::B, base: 1, off: SveMemOff::ImmVl(0) });
+        });
+        for k in 0..32u64 {
+            assert_eq!(ex.state.z[0].get(Esize::B, k as usize), k + 1, "lane {k}");
+            assert_eq!(ex.mem.read_byte(start + 32 + k).unwrap(), k as u8 + 1, "stored {k}");
+        }
+    }
+
+    #[test]
+    fn sparse_predicate_load_skips_unmapped_inactive_lanes() {
+        // non-prefix predicate -> element-at-a-time path: inactive lanes
+        // never touch memory even if their addresses are unmapped
+        let mut mem = Memory::new();
+        let page = 0x60_000u64;
+        mem.map(page, PAGE_SIZE as u64);
+        let start = page + PAGE_SIZE as u64 - 16; // lanes 0..2 mapped, 2.. not
+        mem.write_u64(start, 10).unwrap();
+        mem.write_u64(start + 8, 20).unwrap();
+        let ex = exec_with(256, mem, |a| {
+            a.push(Inst::MovImm { xd: 0, imm: start });
+            a.push(Inst::Ptrue { pd: 0, esize: Esize::D, s: false });
+            a.push(Inst::Index {
+                zd: 1,
+                esize: Esize::D,
+                base: RegOrImm::Imm(0),
+                step: RegOrImm::Imm(1),
+            });
+            a.push(Inst::SveIntCmp {
+                op: CmpOp::Eq,
+                unsigned: false,
+                pd: 1,
+                pg: 0,
+                zn: 1,
+                rhs: ZmOrImm::Imm(1),
+                esize: Esize::D,
+            });
+            a.push(Inst::SveLd1 {
+                zt: 0,
+                pg: 1,
+                esize: Esize::D,
+                base: 0,
+                off: SveMemOff::ImmVl(0),
+                ff: false,
+            });
+        });
+        assert_eq!(ex.state.z[0].get(Esize::D, 0), 0, "inactive lane zeroed");
+        assert_eq!(ex.state.z[0].get(Esize::D, 1), 20);
+        assert_eq!(ex.state.z[0].get(Esize::D, 2), 0, "unmapped inactive lane skipped");
+    }
+
+    #[test]
+    fn prop_first_fault_ffr_matches_per_lane_reference() {
+        use crate::proptest_lite::check;
+        check("prop_first_fault_ffr_matches_per_lane_reference", 60, |g| {
+            let vl = *g.choose(&[128usize, 256, 512, 2048]);
+            let esize = *g.choose(&Esize::ALL);
+            let vlb = vl / 8;
+            let lanes = esize.lanes(vlb);
+            // one mapped page followed by a hole
+            let page = 0x80_000u64;
+            let mut mem = Memory::new();
+            mem.map(page, PAGE_SIZE as u64);
+            for i in 0..PAGE_SIZE as u64 {
+                mem.write_byte(page + i, (i % 251) as u8).unwrap();
+            }
+            // random start near (possibly at/after) the end of the page
+            let back = g.usize_in(0, 2 * vlb) as u64;
+            let start = page + PAGE_SIZE as u64 - back;
+            // prefix predicate of random length via whilelt
+            let k = g.usize_in(0, lanes);
+            let mut a = Asm::new();
+            a.push(Inst::MovImm { xd: 0, imm: start });
+            a.push(Inst::MovImm { xd: 1, imm: 0 });
+            a.push(Inst::MovImm { xd: 2, imm: k as u64 });
+            a.push(Inst::While { pd: 0, esize, xn: 1, xm: 2, unsigned: false });
+            a.push(Inst::Setffr);
+            a.push(Inst::SveLd1 {
+                zt: 0,
+                pg: 0,
+                esize,
+                base: 0,
+                off: SveMemOff::ImmVl(0),
+                ff: true,
+            });
+            a.push(Inst::Halt);
+            let p = a.finish();
+            let mut ex = Executor::new(vl, mem.clone());
+            let result = ex.run(&p, 100);
+            // reference: the per-lane walk §2.3.3 describes
+            let mapped_until = page + PAGE_SIZE as u64;
+            let elem_ok = |i: usize| start + ((i + 1) * esize.bytes()) as u64 <= mapped_until;
+            let expect_trap = k > 0 && !elem_ok(0); // first active element faults
+            match result {
+                Err(Trap::Fault { .. }) => {
+                    assert!(expect_trap, "unexpected trap (vl={vl} k={k} back={back})");
+                }
+                Ok(_) => {
+                    assert!(!expect_trap, "missed trap (vl={vl} k={k} back={back})");
+                    let fl = (0..k).find(|&i| !elem_ok(i));
+                    let safe = fl.unwrap_or(k);
+                    for i in 0..safe {
+                        let addr = start + (i * esize.bytes()) as u64;
+                        let want = mem.read(addr, esize.bytes()).unwrap();
+                        assert_eq!(ex.state.z[0].get(esize, i), want, "lane {i}");
+                        assert!(ex.state.ffr.active(esize, i), "ffr keeps lane {i}");
+                    }
+                    for i in safe..lanes {
+                        if fl.is_some() {
+                            assert!(!ex.state.ffr.active(esize, i), "ffr cleared at lane {i}");
+                        }
+                        assert_eq!(ex.state.z[0].get(esize, i), 0, "zeroing at lane {i}");
+                    }
+                }
+                Err(other) => panic!("unexpected {other:?}"),
+            }
+        });
     }
 
     #[test]

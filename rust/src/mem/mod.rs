@@ -6,32 +6,47 @@
 //! executor turns either into a trap (scalar access, or the first active
 //! element of a first-fault load) or into an FFR update (any other
 //! element of a first-fault load).
+//!
+//! # Hot-path design
+//!
+//! Pages live in an in-house open-addressing table (linear probing,
+//! multiplicative hashing, tombstoned deletes) rather than a `HashMap`:
+//! a translation is one multiply plus, typically, one tag compare, and a
+//! slot index is a plain integer the executor's software TLB can cache
+//! across instructions (see [`crate::exec`]).
+//!
+//! Two mechanisms keep cached translations safe without `unsafe`:
+//!
+//! * every structural change (page insert, unmap, table growth, clone)
+//!   stamps the memory with a fresh globally-unique [`Memory::epoch`],
+//!   so a TLB that remembers the epoch it filled at can discard stale
+//!   slot handles wholesale;
+//! * bulk accessors ([`Memory::read_into`] / [`Memory::write_from`])
+//!   translate once per *page* and move whole in-page slices with
+//!   `copy_from_slice`, instead of translating (and shifting bytes) once
+//!   per lane.
 
-use std::collections::HashMap;
-use std::hash::{BuildHasherDefault, Hasher};
-
-/// Trivial multiply-mix hasher for page numbers (SipHash is the hot spot
-/// otherwise — pages are already well-distributed keys).
-#[derive(Default)]
-pub struct PageHasher(u64);
-
-impl Hasher for PageHasher {
-    fn finish(&self) -> u64 {
-        self.0
-    }
-    fn write(&mut self, bytes: &[u8]) {
-        for &b in bytes {
-            self.0 = (self.0 ^ b as u64).wrapping_mul(0x100000001b3);
-        }
-    }
-    fn write_u64(&mut self, v: u64) {
-        self.0 = v.wrapping_mul(0x9E3779B97F4A7C15);
-        self.0 ^= self.0 >> 29;
-    }
-}
+use std::sync::atomic::{AtomicU64, Ordering};
 
 pub const PAGE_SIZE: usize = 4096;
 pub const PAGE_SHIFT: u32 = 12;
+const PAGE_MASK: u64 = PAGE_SIZE as u64 - 1;
+
+/// Tag of an empty page-table slot (never a valid page number: pages are
+/// addresses shifted right by 12, so they fit in 52 bits).
+const EMPTY: u64 = u64::MAX;
+/// Tag of a tombstoned (unmapped) slot — probes continue across it.
+const TOMB: u64 = u64::MAX - 1;
+
+/// Monotone source of epoch stamps. Global (not per-Memory) so that two
+/// distinct `Memory` values can never carry the same epoch: replacing an
+/// executor's memory wholesale invalidates its TLB just like an unmap.
+static EPOCH_SOURCE: AtomicU64 = AtomicU64::new(0);
+
+#[inline]
+fn fresh_epoch() -> u64 {
+    EPOCH_SOURCE.fetch_add(1, Ordering::Relaxed) + 1
+}
 
 /// A failed translation.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -41,21 +56,156 @@ pub struct MemFault {
 }
 
 /// Sparse paged memory.
-#[derive(Default, Clone)]
 pub struct Memory {
-    pages: HashMap<u64, Box<[u8; PAGE_SIZE]>, BuildHasherDefault<PageHasher>>,
+    /// Page number per slot, or `EMPTY` / `TOMB`.
+    tags: Vec<u64>,
+    /// Page frames, parallel to `tags` (`Some` iff the tag is a page).
+    frames: Vec<Option<Box<[u8; PAGE_SIZE]>>>,
+    mask: usize,
+    /// Mapped pages.
+    live: usize,
+    /// Mapped pages + tombstones (drives table growth).
+    used: usize,
     /// Monotone bump pointer for [`Memory::alloc`].
     brk: u64,
+    epoch: u64,
+}
+
+impl Default for Memory {
+    fn default() -> Self {
+        Memory::new()
+    }
+}
+
+impl Clone for Memory {
+    fn clone(&self) -> Self {
+        Memory {
+            tags: self.tags.clone(),
+            frames: self.frames.clone(),
+            mask: self.mask,
+            live: self.live,
+            used: self.used,
+            brk: self.brk,
+            // a clone has its own frames: stale TLB handles into the
+            // original must not validate against it
+            epoch: fresh_epoch(),
+        }
+    }
 }
 
 impl Memory {
     pub fn new() -> Self {
-        Memory { pages: HashMap::default(), brk: 0x0001_0000 }
+        let cap = 256;
+        let mut frames = Vec::with_capacity(cap);
+        frames.resize_with(cap, || None);
+        Memory {
+            tags: vec![EMPTY; cap],
+            frames,
+            mask: cap - 1,
+            live: 0,
+            used: 0,
+            brk: 0x0001_0000,
+            epoch: fresh_epoch(),
+        }
     }
 
     #[inline]
     fn page_of(addr: u64) -> u64 {
         addr >> PAGE_SHIFT
+    }
+
+    /// Multiplicative hash of a page number (pages are well-distributed
+    /// keys, so a single mix step suffices).
+    #[inline]
+    fn hash(page: u64) -> usize {
+        let h = page.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        (h ^ (h >> 29)) as usize
+    }
+
+    /// Slot of an existing page, if mapped.
+    #[inline]
+    fn slot_of(&self, page: u64) -> Option<usize> {
+        let mut i = Self::hash(page) & self.mask;
+        loop {
+            let t = self.tags[i];
+            if t == page {
+                return Some(i);
+            }
+            if t == EMPTY {
+                return None;
+            }
+            i = (i + 1) & self.mask;
+        }
+    }
+
+    /// Insert (or find) `page`, returning its slot.
+    fn ensure_page(&mut self, page: u64) -> usize {
+        debug_assert!(page < TOMB);
+        if (self.used + 1) * 10 > self.tags.len() * 7 {
+            self.grow();
+        }
+        let mut i = Self::hash(page) & self.mask;
+        let mut tomb: Option<usize> = None;
+        loop {
+            let t = self.tags[i];
+            if t == page {
+                return i;
+            }
+            if t == EMPTY {
+                let j = match tomb {
+                    Some(j) => j,
+                    None => {
+                        self.used += 1;
+                        i
+                    }
+                };
+                self.tags[j] = page;
+                self.frames[j] = Some(Box::new([0u8; PAGE_SIZE]));
+                self.live += 1;
+                self.epoch = fresh_epoch();
+                return j;
+            }
+            if t == TOMB && tomb.is_none() {
+                tomb = Some(i);
+            }
+            i = (i + 1) & self.mask;
+        }
+    }
+
+    fn grow(&mut self) {
+        let cap = self.tags.len() * 2;
+        let mask = cap - 1;
+        let mut tags = vec![EMPTY; cap];
+        let mut frames: Vec<Option<Box<[u8; PAGE_SIZE]>>> = Vec::with_capacity(cap);
+        frames.resize_with(cap, || None);
+        for k in 0..self.tags.len() {
+            let t = self.tags[k];
+            if t < TOMB {
+                let mut i = Self::hash(t) & mask;
+                while tags[i] != EMPTY {
+                    i = (i + 1) & mask;
+                }
+                tags[i] = t;
+                frames[i] = self.frames[k].take();
+            }
+        }
+        self.tags = tags;
+        self.frames = frames;
+        self.mask = mask;
+        self.used = self.live;
+        self.epoch = fresh_epoch();
+    }
+
+    #[inline]
+    fn frame_of(&self, addr: u64) -> Option<&[u8; PAGE_SIZE]> {
+        let i = self.slot_of(Self::page_of(addr))?;
+        self.frames[i].as_deref()
+    }
+
+    #[inline]
+    fn frame_mut_of(&mut self, addr: u64) -> Option<&mut [u8; PAGE_SIZE]> {
+        let i = self.slot_of(Self::page_of(addr))?;
+        self.frames[i].as_deref_mut()
     }
 
     /// Map all pages covering `[base, base+len)` (idempotent).
@@ -66,17 +216,22 @@ impl Memory {
         let first = Self::page_of(base);
         let last = Self::page_of(base + len - 1);
         for p in first..=last {
-            self.pages.entry(p).or_insert_with(|| Box::new([0u8; PAGE_SIZE]));
+            self.ensure_page(p);
         }
     }
 
     /// Remove the mapping of the page containing `addr` (for fault tests).
     pub fn unmap_page(&mut self, addr: u64) {
-        self.pages.remove(&Self::page_of(addr));
+        if let Some(i) = self.slot_of(Self::page_of(addr)) {
+            self.tags[i] = TOMB;
+            self.frames[i] = None;
+            self.live -= 1;
+            self.epoch = fresh_epoch();
+        }
     }
 
     pub fn is_mapped(&self, addr: u64) -> bool {
-        self.pages.contains_key(&Self::page_of(addr))
+        self.slot_of(Self::page_of(addr)).is_some()
     }
 
     /// Bump-allocate `len` bytes with `align` alignment; maps the range.
@@ -91,23 +246,49 @@ impl Memory {
         base
     }
 
+    // ---- translation-cache (TLB) interface ----
+
+    /// Epoch stamp: changes on every page insert/unmap/table growth and
+    /// on every new `Memory` value (including clones). A cached slot
+    /// handle is valid exactly as long as the epoch it was obtained at.
+    #[inline]
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// Slot handle of `addr`'s page, stable until [`Memory::epoch`]
+    /// changes. This is what the executor's software TLB caches.
+    #[inline]
+    pub fn slot_handle(&self, addr: u64) -> Option<u32> {
+        self.slot_of(Self::page_of(addr)).map(|i| i as u32)
+    }
+
+    /// Page frame behind a slot handle obtained at the current epoch.
+    /// Panics on a stale handle (a TLB bug), never yields wrong bytes.
+    #[inline]
+    pub fn slot_frame(&self, slot: u32) -> &[u8; PAGE_SIZE] {
+        self.frames[slot as usize].as_deref().expect("stale TLB slot handle")
+    }
+
+    /// Mutable page frame behind a slot handle (current epoch only).
+    #[inline]
+    pub fn slot_frame_mut(&mut self, slot: u32) -> &mut [u8; PAGE_SIZE] {
+        self.frames[slot as usize].as_deref_mut().expect("stale TLB slot handle")
+    }
+
+    // ---- scalar accessors ----
+
     /// Read up to 8 bytes (little-endian) as a u64. The access may cross
     /// a page boundary; it faults if *any* byte is unmapped.
     #[inline]
     pub fn read(&self, addr: u64, size: usize) -> Result<u64, MemFault> {
         debug_assert!(size <= 8);
-        // fast path: fully inside one page
-        let off = (addr & (PAGE_SIZE as u64 - 1)) as usize;
+        let off = (addr & PAGE_MASK) as usize;
         if off + size <= PAGE_SIZE {
-            let page = self
-                .pages
-                .get(&Self::page_of(addr))
-                .ok_or(MemFault { addr, is_store: false })?;
-            let mut v = 0u64;
-            for k in 0..size {
-                v |= (page[off + k] as u64) << (8 * k);
-            }
-            Ok(v)
+            let frame = self.frame_of(addr).ok_or(MemFault { addr, is_store: false })?;
+            let mut w = [0u8; 8];
+            w[..size].copy_from_slice(&frame[off..off + size]);
+            Ok(u64::from_le_bytes(w))
         } else {
             let mut v = 0u64;
             for k in 0..size {
@@ -119,26 +300,18 @@ impl Memory {
 
     #[inline]
     pub fn read_byte(&self, addr: u64) -> Result<u8, MemFault> {
-        let page = self
-            .pages
-            .get(&Self::page_of(addr))
-            .ok_or(MemFault { addr, is_store: false })?;
-        Ok(page[(addr & (PAGE_SIZE as u64 - 1)) as usize])
+        let frame = self.frame_of(addr).ok_or(MemFault { addr, is_store: false })?;
+        Ok(frame[(addr & PAGE_MASK) as usize])
     }
 
     /// Write up to 8 bytes (little-endian).
     #[inline]
     pub fn write(&mut self, addr: u64, size: usize, v: u64) -> Result<(), MemFault> {
         debug_assert!(size <= 8);
-        let off = (addr & (PAGE_SIZE as u64 - 1)) as usize;
+        let off = (addr & PAGE_MASK) as usize;
         if off + size <= PAGE_SIZE {
-            let page = self
-                .pages
-                .get_mut(&Self::page_of(addr))
-                .ok_or(MemFault { addr, is_store: true })?;
-            for k in 0..size {
-                page[off + k] = (v >> (8 * k)) as u8;
-            }
+            let frame = self.frame_mut_of(addr).ok_or(MemFault { addr, is_store: true })?;
+            frame[off..off + size].copy_from_slice(&v.to_le_bytes()[..size]);
             Ok(())
         } else {
             for k in 0..size {
@@ -150,11 +323,41 @@ impl Memory {
 
     #[inline]
     pub fn write_byte(&mut self, addr: u64, v: u8) -> Result<(), MemFault> {
-        let page = self
-            .pages
-            .get_mut(&Self::page_of(addr))
-            .ok_or(MemFault { addr, is_store: true })?;
-        page[(addr & (PAGE_SIZE as u64 - 1)) as usize] = v;
+        let frame = self.frame_mut_of(addr).ok_or(MemFault { addr, is_store: true })?;
+        frame[(addr & PAGE_MASK) as usize] = v;
+        Ok(())
+    }
+
+    // ---- bulk accessors (one translation per page touched) ----
+
+    /// Copy `out.len()` contiguous bytes starting at `addr` into `out`.
+    /// Faults at the exact address of the first unmapped byte; bytes in
+    /// earlier (mapped) pages are already copied at that point.
+    pub fn read_into(&self, addr: u64, out: &mut [u8]) -> Result<(), MemFault> {
+        let mut done = 0usize;
+        while done < out.len() {
+            let a = addr + done as u64;
+            let off = (a & PAGE_MASK) as usize;
+            let chunk = (PAGE_SIZE - off).min(out.len() - done);
+            let frame = self.frame_of(a).ok_or(MemFault { addr: a, is_store: false })?;
+            out[done..done + chunk].copy_from_slice(&frame[off..off + chunk]);
+            done += chunk;
+        }
+        Ok(())
+    }
+
+    /// Copy `src` to `[addr, addr+src.len())`. Faults at the exact
+    /// address of the first unmapped byte; earlier pages stay written.
+    pub fn write_from(&mut self, addr: u64, src: &[u8]) -> Result<(), MemFault> {
+        let mut done = 0usize;
+        while done < src.len() {
+            let a = addr + done as u64;
+            let off = (a & PAGE_MASK) as usize;
+            let chunk = (PAGE_SIZE - off).min(src.len() - done);
+            let frame = self.frame_mut_of(a).ok_or(MemFault { addr: a, is_store: true })?;
+            frame[off..off + chunk].copy_from_slice(&src[done..done + chunk]);
+            done += chunk;
+        }
         Ok(())
     }
 
@@ -192,46 +395,67 @@ impl Memory {
         self.write(addr, 4, v as u64)
     }
 
-    /// Bulk fill of f64 slice.
+    /// Bulk fill of f64 slice (one page-granular copy via
+    /// [`Memory::write_from`] — workload images are megabytes).
     pub fn write_f64_slice(&mut self, base: u64, xs: &[f64]) {
-        for (i, &v) in xs.iter().enumerate() {
-            self.write_f64(base + 8 * i as u64, v).expect("mapped");
+        let mut bytes = Vec::with_capacity(xs.len() * 8);
+        for &v in xs {
+            bytes.extend_from_slice(&v.to_bits().to_le_bytes());
         }
+        self.write_from(base, &bytes).expect("mapped");
     }
 
     pub fn read_f64_slice(&self, base: u64, n: usize) -> Vec<f64> {
-        (0..n).map(|i| self.read_f64(base + 8 * i as u64).expect("mapped")).collect()
+        let mut bytes = vec![0u8; n * 8];
+        self.read_into(base, &mut bytes).expect("mapped");
+        bytes
+            .chunks_exact(8)
+            .map(|c| f64::from_bits(u64::from_le_bytes(c.try_into().unwrap())))
+            .collect()
     }
 
     pub fn write_f32_slice(&mut self, base: u64, xs: &[f32]) {
-        for (i, &v) in xs.iter().enumerate() {
-            self.write_f32(base + 4 * i as u64, v).expect("mapped");
+        let mut bytes = Vec::with_capacity(xs.len() * 4);
+        for &v in xs {
+            bytes.extend_from_slice(&v.to_bits().to_le_bytes());
         }
+        self.write_from(base, &bytes).expect("mapped");
     }
 
     pub fn read_f32_slice(&self, base: u64, n: usize) -> Vec<f32> {
-        (0..n).map(|i| self.read_f32(base + 4 * i as u64).expect("mapped")).collect()
+        let mut bytes = vec![0u8; n * 4];
+        self.read_into(base, &mut bytes).expect("mapped");
+        bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_bits(u32::from_le_bytes(c.try_into().unwrap())))
+            .collect()
     }
 
     pub fn write_u64_slice(&mut self, base: u64, xs: &[u64]) {
-        for (i, &v) in xs.iter().enumerate() {
-            self.write_u64(base + 8 * i as u64, v).expect("mapped");
+        let mut bytes = Vec::with_capacity(xs.len() * 8);
+        for &v in xs {
+            bytes.extend_from_slice(&v.to_le_bytes());
         }
+        self.write_from(base, &bytes).expect("mapped");
     }
 
     pub fn read_u64_slice(&self, base: u64, n: usize) -> Vec<u64> {
-        (0..n).map(|i| self.read_u64(base + 8 * i as u64).expect("mapped")).collect()
+        let mut bytes = vec![0u8; n * 8];
+        self.read_into(base, &mut bytes).expect("mapped");
+        bytes.chunks_exact(8).map(|c| u64::from_le_bytes(c.try_into().unwrap())).collect()
     }
 
     pub fn write_u32_slice(&mut self, base: u64, xs: &[u32]) {
-        for (i, &v) in xs.iter().enumerate() {
-            self.write_u32(base + 4 * i as u64, v).expect("mapped");
+        let mut bytes = Vec::with_capacity(xs.len() * 4);
+        for &v in xs {
+            bytes.extend_from_slice(&v.to_le_bytes());
         }
+        self.write_from(base, &bytes).expect("mapped");
     }
 
     /// Number of mapped pages (footprint metric).
     pub fn mapped_pages(&self) -> usize {
-        self.pages.len()
+        self.live
     }
 }
 
@@ -286,6 +510,35 @@ mod tests {
     }
 
     #[test]
+    fn remap_after_unmap_yields_fresh_zero_page() {
+        let mut m = Memory::new();
+        m.map(0x3000, 8);
+        m.write_u64(0x3000, 0xDEAD_BEEF).unwrap();
+        m.unmap_page(0x3000);
+        m.map(0x3000, 8); // reuses the tombstoned slot
+        assert_eq!(m.read_u64(0x3000).unwrap(), 0, "remapped page must be zeroed");
+        assert_eq!(m.mapped_pages(), 1);
+    }
+
+    #[test]
+    fn table_growth_preserves_all_pages() {
+        let mut m = Memory::new();
+        let base = 0x10_0000u64;
+        let n = 1000u64; // forces several doublings past the 256-slot start
+        for i in 0..n {
+            let a = base + i * PAGE_SIZE as u64;
+            m.map(a, 8);
+            m.write_u64(a, i).unwrap();
+        }
+        assert_eq!(m.mapped_pages(), n as usize);
+        for i in 0..n {
+            assert_eq!(m.read_u64(base + i * PAGE_SIZE as u64).unwrap(), i, "page {i}");
+        }
+        // and unmapped holes still fault
+        assert!(!m.is_mapped(base + n * PAGE_SIZE as u64));
+    }
+
+    #[test]
     fn alloc_alignment_and_guard_pages() {
         let mut m = Memory::new();
         let a = m.alloc(100, 64);
@@ -330,5 +583,63 @@ mod tests {
         let xs: Vec<f64> = (0..16).map(|i| i as f64 * 1.5).collect();
         m.write_f64_slice(base, &xs);
         assert_eq!(m.read_f64_slice(base, 16), xs);
+    }
+
+    #[test]
+    fn bulk_read_write_roundtrip_across_pages() {
+        let mut m = Memory::new();
+        m.map(0x1000, 3 * PAGE_SIZE as u64);
+        let src: Vec<u8> = (0..(PAGE_SIZE + 100)).map(|i| (i * 7) as u8).collect();
+        let base = 0x1000 + PAGE_SIZE as u64 - 50; // straddles two boundaries
+        m.write_from(base, &src).unwrap();
+        let mut out = vec![0u8; src.len()];
+        m.read_into(base, &mut out).unwrap();
+        assert_eq!(out, src);
+        // spot-check against the scalar path
+        assert_eq!(m.read_byte(base).unwrap(), src[0]);
+        assert_eq!(m.read_byte(base + 100).unwrap(), src[100]);
+    }
+
+    #[test]
+    fn bulk_read_faults_at_first_unmapped_byte() {
+        let mut m = Memory::new();
+        m.map(0x1000, PAGE_SIZE as u64); // second page unmapped
+        let mut out = [0u8; 64];
+        let base = 0x1000 + PAGE_SIZE as u64 - 16;
+        let f = m.read_into(base, &mut out).unwrap_err();
+        assert_eq!(f.addr, 0x2000, "fault at the first unmapped byte");
+        assert!(!f.is_store);
+        let f = m.write_from(base, &[0u8; 64]).unwrap_err();
+        assert_eq!(f.addr, 0x2000);
+        assert!(f.is_store);
+    }
+
+    #[test]
+    fn epoch_tracks_structural_changes() {
+        let mut m = Memory::new();
+        let e0 = m.epoch();
+        m.map(0x1000, 8);
+        let e1 = m.epoch();
+        assert_ne!(e0, e1, "mapping a new page must bump the epoch");
+        m.map(0x1000, 8); // idempotent remap of an existing page
+        assert_eq!(m.epoch(), e1, "no structural change, no bump");
+        m.write_u64(0x1000, 3).unwrap();
+        assert_eq!(m.epoch(), e1, "plain data writes do not bump");
+        m.unmap_page(0x1000);
+        assert_ne!(m.epoch(), e1, "unmap must bump");
+        let c = m.clone();
+        assert_ne!(c.epoch(), m.epoch(), "clones never share an epoch");
+    }
+
+    #[test]
+    fn slot_handles_resolve_current_frames() {
+        let mut m = Memory::new();
+        m.map(0x7000, 8);
+        m.write_u64(0x7000, 0x0102_0304_0506_0708).unwrap();
+        let slot = m.slot_handle(0x7000).unwrap();
+        assert_eq!(m.slot_frame(slot)[0], 0x08);
+        m.slot_frame_mut(slot)[1] = 0xFF;
+        assert_eq!(m.read(0x7001, 1).unwrap(), 0xFF);
+        assert!(m.slot_handle(0x9000).is_none());
     }
 }

@@ -7,231 +7,39 @@
 //! to (a) the simulator running compiler-generated SVE code and (b) the
 //! PJRT-executed Pallas kernels, and the results must agree. This proves
 //! all three layers compose.
+//!
+//! The real path needs the external `xla` and `anyhow` crates, which the
+//! offline image cannot fetch, so it is gated behind the `pjrt` cargo
+//! feature (vendor the crates and wire them to the feature to enable
+//! it). The default build compiles a dependency-free stub whose
+//! [`validate_all`] returns an explanatory error; the CLI `validate`
+//! subcommand reports it and the integration test self-skips because the
+//! artifacts directory is absent.
 
-use crate::rng::Rng;
-use anyhow::{Context, Result};
-use std::path::{Path, PathBuf};
+#[cfg(feature = "pjrt")]
+mod pjrt;
+#[cfg(feature = "pjrt")]
+pub use pjrt::*;
 
-/// A loaded golden-model executable.
-pub struct Golden {
-    exe: xla::PjRtLoadedExecutable,
-    pub name: String,
-}
+#[cfg(not(feature = "pjrt"))]
+mod stub {
+    use std::path::Path;
 
-/// The PJRT client + artifact directory.
-pub struct Runtime {
-    client: xla::PjRtClient,
-    dir: PathBuf,
-}
-
-impl Runtime {
-    pub fn new(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
-        Ok(Runtime {
-            client: xla::PjRtClient::cpu().context("create PJRT CPU client")?,
-            dir: artifacts_dir.as_ref().to_path_buf(),
-        })
+    /// One validation outcome.
+    #[derive(Debug)]
+    pub struct Validation {
+        pub name: String,
+        pub max_abs_err: f64,
+        pub ok: bool,
     }
 
-    /// Load and compile one artifact (HLO text — see aot.py for why text).
-    pub fn load(&self, name: &str) -> Result<Golden> {
-        let path = self.dir.join(format!("{name}.hlo.txt"));
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().context("artifact path not UTF-8")?,
-        )
-        .with_context(|| format!("parse {path:?}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self.client.compile(&comp).with_context(|| format!("compile {name}"))?;
-        Ok(Golden { exe, name: name.to_string() })
+    /// Stub: the build has no PJRT backend.
+    pub fn validate_all(_artifacts_dir: impl AsRef<Path>) -> Result<Vec<Validation>, String> {
+        Err("built without the `pjrt` feature: PJRT golden validation needs the \
+             external `xla` crate (vendor it and enable the feature)"
+            .into())
     }
 }
 
-impl Golden {
-    /// Execute with literal inputs; returns the single tuple element
-    /// (aot.py lowers with return_tuple=True).
-    pub fn run(&self, args: &[xla::Literal]) -> Result<xla::Literal> {
-        let result = self.exe.execute::<xla::Literal>(args)?[0][0].to_literal_sync()?;
-        Ok(result.to_tuple1()?)
-    }
-}
-
-/// One validation outcome.
-#[derive(Debug)]
-pub struct Validation {
-    pub name: String,
-    pub max_abs_err: f64,
-    pub ok: bool,
-}
-
-/// Cross-validate the PJRT daxpy golden against the simulator's SVE
-/// daxpy (Fig. 2c semantics through the whole stack).
-pub fn validate_daxpy(rt: &Runtime) -> Result<Validation> {
-    use crate::compiler::{compile, BinOp, Expr, Index, Kernel, Stmt, Target, Trip, Ty};
-    use crate::exec::Executor;
-    use crate::mem::Memory;
-
-    const N: usize = 1024; // must match python/compile/model.py DAXPY_N
-    let mut rng = Rng::new(2024);
-    let a = 2.5f64;
-    let n_active = 1000i32; // non-multiple-of-VL tail
-    let xs: Vec<f64> = (0..N).map(|_| rng.f64_range(-2.0, 2.0)).collect();
-    let ys: Vec<f64> = (0..N).map(|_| rng.f64_range(-2.0, 2.0)).collect();
-
-    // PJRT side
-    let g = rt.load("daxpy")?;
-    let ln = xla::Literal::vec1(&[n_active]);
-    let la = xla::Literal::vec1(&[a]);
-    let lx = xla::Literal::vec1(&xs);
-    let ly = xla::Literal::vec1(&ys);
-    let out = g.run(&[ln, la, lx, ly])?;
-    let golden: Vec<f64> = out.to_vec()?;
-
-    // simulator side: compiler-generated SVE daxpy
-    let mut mem = Memory::new();
-    let xb = mem.alloc(8 * N as u64, 64);
-    let yb = mem.alloc(8 * N as u64, 64);
-    mem.write_f64_slice(xb, &xs);
-    mem.write_f64_slice(yb, &ys);
-    let mut k = Kernel::new("daxpy", Ty::F64, Trip::Count(n_active as u64));
-    let x = k.array("x", Ty::F64, xb);
-    let y = k.array("y", Ty::F64, yb);
-    k.body.push(Stmt::Store {
-        arr: y,
-        idx: Index::Affine { offset: 0 },
-        value: Expr::bin(
-            BinOp::Add,
-            Expr::bin(BinOp::Mul, Expr::ConstF(a), Expr::load(x, Index::Affine { offset: 0 })),
-            Expr::load(y, Index::Affine { offset: 0 }),
-        ),
-    });
-    let c = compile(&k, Target::Sve);
-    let mut ex = Executor::new(512, mem);
-    ex.run(&c.program, 10_000_000).map_err(|e| anyhow::anyhow!("sim trap {e:?}"))?;
-    let sim = ex.mem.read_f64_slice(yb, N);
-
-    let mut max_err = 0.0f64;
-    for i in 0..N {
-        max_err = max_err.max((sim[i] - golden[i]).abs());
-    }
-    Ok(Validation { name: "daxpy".into(), max_abs_err: max_err, ok: max_err < 1e-12 })
-}
-
-/// Cross-validate the ordered (fadda) and tree (faddv) reductions: the
-/// simulator's SveFadda/FAddV against the Pallas goldens.
-pub fn validate_reductions(rt: &Runtime) -> Result<Vec<Validation>> {
-    use crate::arch::Esize;
-    use crate::asm::Asm;
-    use crate::exec::Executor;
-    use crate::isa::{Inst, RedOp, SveMemOff};
-    use crate::mem::Memory;
-
-    const N: usize = 256; // must match model.py RED_N
-    let mut rng = Rng::new(7777);
-    let xs: Vec<f64> = (0..N).map(|_| rng.f64_range(-1e6, 1e6)).collect();
-    let n_active = 200i32;
-
-    let mut out = vec![];
-    for (name, op) in [("fadda", None), ("faddv", Some(RedOp::FAddV))] {
-        let g = rt.load(name)?;
-        let golden: Vec<f64> =
-            g.run(&[xla::Literal::vec1(&[n_active]), xla::Literal::vec1(&xs)])?.to_vec()?;
-
-        // simulator: one whilelt-governed pass accumulating across the
-        // whole array (vector loop for tree; fadda for ordered)
-        let mut mem = Memory::new();
-        let xb = mem.alloc(8 * N as u64, 64);
-        mem.write_f64_slice(xb, &xs);
-        let mut a = Asm::new();
-        a.push(Inst::MovImm { xd: 0, imm: xb });
-        a.push(Inst::MovImm { xd: 20, imm: 0 });
-        a.push(Inst::MovImm { xd: 21, imm: n_active as u64 });
-        a.push(Inst::FmovImm { dbl: true, dd: 24, bits: 0 });
-        a.push(Inst::DupImm { zd: 16, esize: Esize::D, imm: 0 });
-        a.push(Inst::Ptrue { pd: 6, esize: Esize::D, s: false });
-        a.push(Inst::While { pd: 0, esize: Esize::D, xn: 20, xm: 21, unsigned: false });
-        a.label("loop");
-        a.push(Inst::SveLd1 {
-            zt: 0,
-            pg: 0,
-            esize: Esize::D,
-            base: 0,
-            off: SveMemOff::RegScaled(20),
-            ff: false,
-        });
-        match op {
-            None => a.push(Inst::SveFadda { vdn: 24, pg: 0, zm: 0, dbl: true }),
-            Some(_) => a.push(Inst::SveFpBin {
-                op: crate::isa::FpOp::Add,
-                zdn: 16,
-                pg: 0,
-                zm: 0,
-                dbl: true,
-            }),
-        };
-        a.push(Inst::IncDec { xdn: 20, esize: Esize::D, dec: false });
-        a.push(Inst::While { pd: 0, esize: Esize::D, xn: 20, xm: 21, unsigned: false });
-        a.push_branch(Inst::BCond { cond: crate::arch::Cond::FIRST, target: 0 }, "loop");
-        if op.is_some() {
-            a.push(Inst::SveReduce { op: RedOp::FAddV, vd: 24, pg: 6, zn: 16, esize: Esize::D });
-        }
-        a.push(Inst::Halt);
-        let p = a.finish();
-        // VL = 2048 == 256 f64 lanes == the whole golden array: the tree
-        // shapes then agree exactly
-        let mut ex = Executor::new(2048, mem);
-        ex.run(&p, 1_000_000).map_err(|e| anyhow::anyhow!("sim trap {e:?}"))?;
-        let sim = ex.state.get_d(24);
-        let err = (sim - golden[0]).abs();
-        let tol = match name {
-            "fadda" => 0.0,       // strictly ordered: must be bitwise equal
-            _ => 1e-6,            // tree shapes may associate differently
-        };
-        out.push(Validation { name: name.into(), max_abs_err: err, ok: err <= tol });
-    }
-    Ok(out)
-}
-
-/// Validate the eorv golden (integer XOR is exact).
-pub fn validate_eorv(rt: &Runtime) -> Result<Validation> {
-    const N: usize = 256;
-    let mut rng = Rng::new(31337);
-    let xs: Vec<i64> = (0..N).map(|_| (rng.next_u64() >> 2) as i64).collect();
-    let n_active = 170i32;
-    let g = rt.load("eorv")?;
-    let golden: Vec<i64> =
-        g.run(&[xla::Literal::vec1(&[n_active]), xla::Literal::vec1(&xs)])?.to_vec()?;
-    let want = xs[..n_active as usize].iter().fold(0i64, |a, &b| a ^ b);
-    let ok = golden[0] == want;
-    Ok(Validation { name: "eorv".into(), max_abs_err: if ok { 0.0 } else { 1.0 }, ok })
-}
-
-/// Run every cross-validation; returns one record per golden.
-pub fn validate_all(artifacts_dir: impl AsRef<Path>) -> Result<Vec<Validation>> {
-    let rt = Runtime::new(artifacts_dir)?;
-    let mut v = vec![validate_daxpy(&rt)?];
-    v.extend(validate_reductions(&rt)?);
-    v.push(validate_eorv(&rt)?);
-    Ok(v)
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    fn artifacts() -> Option<PathBuf> {
-        let p = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-        p.join("daxpy.hlo.txt").exists().then_some(p)
-    }
-
-    #[test]
-    fn pjrt_goldens_match_simulator() {
-        let Some(dir) = artifacts() else {
-            eprintln!("skipping: run `make artifacts` first");
-            return;
-        };
-        let vs = validate_all(dir).expect("validation harness");
-        for v in &vs {
-            assert!(v.ok, "{}: max_abs_err={}", v.name, v.max_abs_err);
-        }
-        assert_eq!(vs.len(), 4);
-    }
-}
+#[cfg(not(feature = "pjrt"))]
+pub use stub::*;

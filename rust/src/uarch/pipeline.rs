@@ -168,8 +168,10 @@ pub struct Pipeline {
     pub result: TimingResult,
     /// when Some, record per-instruction timelines (Fig. 3 traces)
     pub trace: Option<Vec<InstTiming>>,
-    reads_buf: Vec<RegId>,
-    writes_buf: Vec<RegId>,
+    /// Register-dependence lists cached per pc: the program is fixed for
+    /// a Pipeline's lifetime and hot loops retire the same pcs millions
+    /// of times, so `Inst::deps` runs once per static instruction.
+    deps_cache: Vec<Option<Box<(Vec<RegId>, Vec<RegId>)>>>,
 }
 
 impl Pipeline {
@@ -192,8 +194,7 @@ impl Pipeline {
             store_usage: UsageWindow::new(),
             result: TimingResult::default(),
             trace: None,
-            reads_buf: Vec::with_capacity(8),
-            writes_buf: Vec::with_capacity(8),
+            deps_cache: Vec::new(),
         }
     }
 
@@ -241,9 +242,11 @@ impl Pipeline {
     }
 
     /// Feed one retired instruction from the functional executor.
+    /// A Pipeline is per-program: per-pc caches assume the instruction
+    /// at a given pc never changes across calls.
     pub fn on_retire(&mut self, info: &StepInfo<'_>) {
         let cfg_decode = self.cfg.decode_width;
-        let class = info.inst.class();
+        let class = info.class; // precomputed by the executor, == inst.class()
         // ---------------- fetch/decode/dispatch ----------------
         // I-cache: charge a first-touch penalty per 64B of program text
         let iaddr = (info.pc as u64) * 4 + 0x4000_0000;
@@ -272,9 +275,16 @@ impl Pipeline {
         self.fetched_this_cycle += 1;
 
         // ---------------- issue ----------------
-        let mut reads = std::mem::take(&mut self.reads_buf);
-        let mut writes = std::mem::take(&mut self.writes_buf);
-        info.inst.deps(&mut reads, &mut writes);
+        if self.deps_cache.len() <= info.pc {
+            self.deps_cache.resize_with(info.pc + 1, || None);
+        }
+        let deps = self.deps_cache[info.pc].take().unwrap_or_else(|| {
+            let mut reads = Vec::new();
+            let mut writes = Vec::new();
+            info.inst.deps(&mut reads, &mut writes);
+            Box::new((reads, writes))
+        });
+        let (reads, writes) = &*deps;
         let mut ready = dispatch + 1;
         for r in reads.iter() {
             ready = ready.max(self.reg_ready[reg_slot(*r)]);
@@ -354,8 +364,7 @@ impl Pipeline {
         for w in writes.iter() {
             self.reg_ready[reg_slot(*w)] = complete;
         }
-        self.reads_buf = reads;
-        self.writes_buf = writes;
+        self.deps_cache[info.pc] = Some(deps);
 
         // ---------------- branch resolution ----------------
         if info.inst.is_cond_branch() {

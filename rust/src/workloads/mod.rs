@@ -463,10 +463,13 @@ pub fn strlen1m() -> Workload {
     let len = 262_144u64;
     let mut mem = Memory::new();
     let sb = mem.alloc(len + 64, 64);
-    for i in 0..len {
-        mem.write_byte(sb + i, b'a' + (i % 23) as u8).unwrap();
+    // one bulk image write instead of 256K per-byte stores: workloads
+    // are rebuilt per (isa, vl) run, so setup time shows in the sweep
+    let mut s = vec![0u8; len as usize + 1];
+    for (i, b) in s[..len as usize].iter_mut().enumerate() {
+        *b = b'a' + (i % 23) as u8;
     }
-    mem.write_byte(sb + len, 0).unwrap();
+    mem.write_from(sb, &s).unwrap();
     let out = mem.alloc(8, 8);
     let mut k = Kernel::new("strlen1m", Ty::U8, Trip::DataDependent { max: 1 << 26 });
     let s = k.array("s", Ty::U8, sb);
