@@ -1,27 +1,37 @@
 //! Regenerates Fig. 8: speedup of SVE@{128,256,512} over Advanced SIMD
-//! plus the extra-vectorization bars, for all 12 benchmark proxies.
-//! Writes reports/fig8.csv. This is also the end-to-end driver: every
-//! run is validated against its golden outputs.
+//! plus the extra-vectorization bars, for all 12 benchmark proxies —
+//! on the sharded sweep engine, with JSON/CSV/Markdown artifacts under
+//! reports/. This is also the end-to-end driver: every run is validated
+//! against its golden outputs.
 //!
 //!     cargo bench --bench fig8_sweep
 
 use std::time::Instant;
-use sve_repro::coordinator::{fig8_chart, fig8_table, run_fig8};
+use sve_repro::coordinator::{run_sweep, SweepConfig};
+use sve_repro::report::fig8;
 use sve_repro::workloads::NAMES;
 
 fn main() {
     let vls = [128usize, 256, 512];
+    let mut cfg = SweepConfig::new(&vls, &NAMES);
+    cfg.out_dir = Some("reports".into());
+    cfg.resume = std::env::args().any(|a| a == "--resume");
     let t0 = Instant::now();
-    let rows = run_fig8(&vls, &NAMES).expect("sweep failed");
+    let outcome = run_sweep(&cfg).expect("sweep failed");
     let dt = t0.elapsed();
-    let table = fig8_table(&rows, &vls);
-    println!("{}", table.to_markdown());
-    println!("{}", fig8_chart(&rows, &vls));
-    table.write_csv("reports/fig8.csv").expect("write");
+    let rows = &outcome.rows;
+    println!("{}", fig8::table(rows, &vls).to_markdown());
+    println!("{}", fig8::chart(rows, &vls));
+    for p in fig8::write_artifacts(rows, &vls, "reports").expect("write artifacts") {
+        println!("wrote {}", p.display());
+    }
     println!(
-        "full sweep ({} benchmarks x (1 NEON + {} SVE VLs), every run validated) in {:.1}s",
+        "full sweep ({} benchmarks x (1 NEON + {} SVE VLs), {} simulated + {} cached, \
+         every run validated) in {:.1}s",
         NAMES.len(),
         vls.len(),
+        outcome.simulated,
+        outcome.reloaded,
         dt.as_secs_f64()
     );
     // shape assertions from the paper's narrative

@@ -63,6 +63,12 @@ pub fn bench<T>(warmup: Duration, measure: Duration, mut f: impl FnMut() -> T) -
 }
 
 /// Convenience: default 0.3s warmup / 1.2s measurement.
+///
+/// ```no_run
+/// use sve_repro::bench_util::{bench_default, report};
+/// let sample = bench_default(|| (0..1_000u64).sum::<u64>());
+/// report("sum-1k", &sample);
+/// ```
 pub fn bench_default<T>(f: impl FnMut() -> T) -> Sample {
     bench(Duration::from_millis(300), Duration::from_millis(1200), f)
 }

@@ -1,10 +1,35 @@
-//! Sweep coordinator: runs (benchmark × ISA × VL) jobs across threads,
-//! validates every run's architectural results, aggregates statistics and
-//! regenerates the paper's figures/tables (Fig. 8 foremost).
+//! Sweep coordinator: the driver behind the paper's headline experiment.
+//!
+//! The Fig. 8 sweep is a (benchmark × ISA × VL) job matrix. This module
+//! turns that matrix into an explicit list of [`Job`]s, shards it across
+//! a self-scheduling thread pool ([`run_sweep`]), validates every run's
+//! architectural results, and — when an output directory is configured —
+//! persists each job's [`RunRecord`] under a content-hash key so later
+//! invocations can **resume** instead of re-simulating (see
+//! [`crate::report::store`]).
+//!
+//! Three entry points, from low to high level:
+//!
+//! * [`run_one`] / [`run_compiled`] — one (workload, ISA, VL) job.
+//! * [`run_fig8_sequential`] — the plain in-process reference loop; the
+//!   sharded engine is pinned bit-identical to it by tests.
+//! * [`run_sweep`] — the production driver: sharded, resumable,
+//!   cache-aware. [`run_fig8`] is the convenience wrapper used by tests
+//!   and benches.
+//!
+//! Determinism is the load-bearing property: the simulator is fully
+//! deterministic, every job is independent, and results are assembled
+//! in matrix order — so thread count, scheduling order, and cache hits
+//! cannot change a single reported number. Rendering of the collected
+//! rows into JSON/CSV/Markdown artifacts lives in [`crate::report`].
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
 
 use crate::compiler::{Compiled, Target};
-use crate::csvutil::{f, Table};
 use crate::exec::Executor;
+use crate::report::store::{job_key, JobStore};
 use crate::uarch::{run_timed, UarchConfig};
 use crate::workloads::{self, Group, Workload};
 
@@ -39,6 +64,25 @@ impl Isa {
             Isa::Sve(v) => format!("sve{v}"),
         }
     }
+
+    /// Inverse of [`Isa::label`]: `"scalar"`, `"neon"`, or `"sve<bits>"`.
+    ///
+    /// ```
+    /// use sve_repro::coordinator::Isa;
+    /// assert_eq!(Isa::parse_label("sve512"), Some(Isa::Sve(512)));
+    /// assert_eq!(Isa::parse_label("neon"), Some(Isa::Neon));
+    /// assert_eq!(Isa::parse_label("avx"), None);
+    /// ```
+    pub fn parse_label(s: &str) -> Option<Isa> {
+        match s {
+            "scalar" => Some(Isa::Scalar),
+            "neon" => Some(Isa::Neon),
+            _ => {
+                let bits = s.strip_prefix("sve")?;
+                bits.parse::<usize>().ok().map(Isa::Sve)
+            }
+        }
+    }
 }
 
 /// One run's record.
@@ -56,22 +100,41 @@ pub struct RunRecord {
 }
 
 /// Run one workload on one configuration, with output validation.
+///
+/// ```
+/// use sve_repro::coordinator::{run_one, Isa};
+/// // HACCmk is the paper's flagship: NEON cannot vectorize the
+/// // conditional assignments, SVE if-converts them (§5).
+/// let neon = run_one("haccmk", Isa::Neon).unwrap();
+/// let sve = run_one("haccmk", Isa::Sve(256)).unwrap();
+/// assert!(!neon.vectorized && sve.vectorized);
+/// assert!(sve.cycles < neon.cycles);
+/// ```
 pub fn run_one(name: &'static str, isa: Isa) -> Result<RunRecord, String> {
     let w = workloads::build(name);
     let compiled = w.compile(isa.target());
     run_compiled(&w, &compiled, isa)
 }
 
+/// [`run_compiled_with`] at the paper's Table 2 configuration.
+pub fn run_compiled(w: &Workload, compiled: &Compiled, isa: Isa) -> Result<RunRecord, String> {
+    run_compiled_with(w, compiled, isa, &UarchConfig::default())
+}
+
 /// Run an already-built workload with an already-compiled program.
 /// SVE binaries are vector-length agnostic (§2.2), so a sweep compiles
 /// each (benchmark, target) once and reuses the program at every VL —
 /// only the executor's hardware VL changes between runs.
-pub fn run_compiled(w: &Workload, compiled: &Compiled, isa: Isa) -> Result<RunRecord, String> {
+pub fn run_compiled_with(
+    w: &Workload,
+    compiled: &Compiled,
+    isa: Isa,
+    cfg: &UarchConfig,
+) -> Result<RunRecord, String> {
     let name = w.name;
     let mut ex = Executor::new(isa.vl(), w.mem.clone());
-    let (stats, timing) =
-        run_timed(&mut ex, &compiled.program, UarchConfig::default(), w.max_insts)
-            .map_err(|e| format!("{name}/{}: trap {e:?}", isa.label()))?;
+    let (stats, timing) = run_timed(&mut ex, &compiled.program, cfg.clone(), w.max_insts)
+        .map_err(|e| format!("{name}/{}: trap {e:?}", isa.label()))?;
     w.verify(&ex.mem).map_err(|e| format!("{name}/{}: {e}", isa.label()))?;
     let mem_accesses = timing.l1d_hits + timing.l1d_misses;
     Ok(RunRecord {
@@ -108,89 +171,255 @@ impl Fig8Row {
     }
 }
 
-/// Run the full Fig. 8 sweep (all benchmarks × NEON + SVE at `vls`),
-/// parallelized over benchmarks with std threads. Each benchmark is
-/// built and compiled once per target; the same SVE program is swept
-/// across every VL (vector-length agnosticism, §2.2).
-pub fn run_fig8(vls: &[usize], names: &[&'static str]) -> Result<Vec<Fig8Row>, String> {
-    let mut rows: Vec<Option<Fig8Row>> = (0..names.len()).map(|_| None).collect();
-    std::thread::scope(|s| {
-        let mut handles = vec![];
-        for &name in names {
-            handles.push(s.spawn(move || -> Result<Fig8Row, String> {
-                let w = workloads::build(name);
-                let compiled_neon = w.compile(Target::Neon);
-                let neon = run_compiled(&w, &compiled_neon, Isa::Neon)?;
-                let compiled_sve = w.compile(Target::Sve);
-                let mut sve = vec![];
-                for &vl in vls {
-                    sve.push(run_compiled(&w, &compiled_sve, Isa::Sve(vl))?);
+/// One cell of the sweep's job matrix.
+#[derive(Clone, Copy, Debug)]
+pub struct Job {
+    pub bench: &'static str,
+    pub isa: Isa,
+}
+
+/// Configuration for [`run_sweep`].
+#[derive(Clone, Debug)]
+pub struct SweepConfig {
+    /// SVE vector lengths to sweep (bits). Must be non-empty.
+    pub vls: Vec<usize>,
+    /// Benchmarks to run (subset of [`workloads::NAMES`]).
+    pub names: Vec<&'static str>,
+    /// Worker threads; `0` means one per available CPU.
+    pub jobs: usize,
+    /// Reuse job files already present in `out_dir` instead of
+    /// re-simulating. Without an `out_dir` this is a no-op.
+    pub resume: bool,
+    /// Where to persist per-job records (under `<out_dir>/jobs/`).
+    /// `None` disables persistence (pure in-memory sweep).
+    pub out_dir: Option<PathBuf>,
+    /// Timing-model parameters; part of every job's cache key.
+    pub uarch: UarchConfig,
+}
+
+impl SweepConfig {
+    /// An in-memory, non-resumable sweep at the Table 2 configuration.
+    pub fn new(vls: &[usize], names: &[&'static str]) -> SweepConfig {
+        SweepConfig {
+            vls: vls.to_vec(),
+            names: names.to_vec(),
+            jobs: 0,
+            resume: false,
+            out_dir: None,
+            uarch: UarchConfig::default(),
+        }
+    }
+}
+
+/// What [`run_sweep`] did, beyond the rows themselves.
+#[derive(Clone, Debug)]
+pub struct SweepOutcome {
+    pub rows: Vec<Fig8Row>,
+    /// Jobs actually simulated this invocation.
+    pub simulated: usize,
+    /// Jobs reloaded from the on-disk cache.
+    pub reloaded: usize,
+}
+
+fn worker_count(requested: usize, pending: usize) -> usize {
+    let n = if requested == 0 {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    } else {
+        requested
+    };
+    n.clamp(1, pending.max(1))
+}
+
+/// The production sweep driver: shard the (benchmark × ISA × VL) job
+/// matrix across a self-scheduling thread pool, reusing cached job
+/// records when resuming. Results are deterministic and independent of
+/// `jobs`, scheduling order, and cache state (pinned by tests against
+/// [`run_fig8_sequential`]).
+pub fn run_sweep(cfg: &SweepConfig) -> Result<SweepOutcome, String> {
+    if cfg.vls.is_empty() {
+        return Err("sweep needs at least one vector length".into());
+    }
+    if cfg.names.is_empty() {
+        return Err("sweep needs at least one benchmark".into());
+    }
+    for &vl in &cfg.vls {
+        if !crate::vl_is_legal(vl) {
+            return Err(format!("illegal SVE vector length {vl} (§2.2: 128..2048, step 128)"));
+        }
+    }
+    for &name in &cfg.names {
+        if !workloads::NAMES.contains(&name) {
+            return Err(format!("unknown benchmark '{name}'"));
+        }
+    }
+    let store = match &cfg.out_dir {
+        Some(dir) => {
+            Some(JobStore::open(dir).map_err(|e| format!("open job store in {dir:?}: {e}"))?)
+        }
+        None => None,
+    };
+
+    // the job matrix, in deterministic (bench-major, NEON first) order
+    let mut jobs: Vec<Job> = Vec::with_capacity(cfg.names.len() * (1 + cfg.vls.len()));
+    for &name in &cfg.names {
+        jobs.push(Job { bench: name, isa: Isa::Neon });
+        for &vl in &cfg.vls {
+            jobs.push(Job { bench: name, isa: Isa::Sve(vl) });
+        }
+    }
+
+    // resume pass: adopt every valid cached record
+    let mut records: Vec<Option<RunRecord>> = vec![None; jobs.len()];
+    let mut pending: Vec<usize> = Vec::new();
+    let mut reloaded = 0usize;
+    for (i, job) in jobs.iter().enumerate() {
+        if cfg.resume {
+            if let Some(st) = &store {
+                let key = job_key(job.bench, job.isa, &cfg.uarch);
+                if let Some(r) = st.load(&key, job.bench, job.isa) {
+                    records[i] = Some(r);
+                    reloaded += 1;
+                    continue;
                 }
-                let extra = (sve[0].vector_fraction - neon.vector_fraction).max(0.0);
-                Ok(Fig8Row {
-                    bench: name,
-                    group: neon.group,
-                    neon,
-                    sve,
-                    extra_vectorization: extra,
-                })
-            }));
+            }
         }
-        for (i, h) in handles.into_iter().enumerate() {
-            rows[i] = Some(h.join().map_err(|_| "worker panicked".to_string())??);
+        pending.push(i);
+    }
+
+    // build each workload and compile each needed target ONCE per
+    // benchmark, shared read-only across all of its jobs — SVE binaries
+    // are VL-agnostic (§2.2), so the whole VL column reuses one program.
+    // Benchmarks whose jobs were all reloaded from cache skip this.
+    struct Prep {
+        w: Workload,
+        neon: Compiled,
+        sve: Compiled,
+    }
+    let stride = 1 + cfg.vls.len();
+    let mut preps: Vec<Option<Prep>> = Vec::with_capacity(cfg.names.len());
+    for (bi, &name) in cfg.names.iter().enumerate() {
+        if pending.iter().any(|&i| i / stride == bi) {
+            let w = workloads::build(name);
+            let neon = w.compile(Target::Neon);
+            let sve = w.compile(Target::Sve);
+            preps.push(Some(Prep { w, neon, sve }));
+        } else {
+            preps.push(None);
         }
-        Ok::<(), String>(())
-    })?;
-    Ok(rows.into_iter().map(|r| r.unwrap()).collect())
+    }
+
+    // shard the remaining jobs: workers pull the next job index from a
+    // shared atomic cursor until the queue is drained (self-scheduling,
+    // so a slow benchmark never strands idle threads the way the old
+    // one-thread-per-benchmark split did)
+    let simulated = pending.len();
+    let cursor = AtomicUsize::new(0);
+    let done: Mutex<Vec<(usize, Result<RunRecord, String>)>> = Mutex::new(Vec::new());
+    let nworkers = worker_count(cfg.jobs, pending.len());
+    std::thread::scope(|s| {
+        for _ in 0..nworkers {
+            s.spawn(|| loop {
+                let n = cursor.fetch_add(1, Ordering::Relaxed);
+                if n >= pending.len() {
+                    break;
+                }
+                let i = pending[n];
+                let job = jobs[i];
+                // a panicking job must fail the sweep, not abort the
+                // process (thread::scope re-raises worker panics)
+                let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+                    || -> Result<RunRecord, String> {
+                        let prep = preps[i / stride]
+                            .as_ref()
+                            .ok_or_else(|| format!("{}: missing prep", job.bench))?;
+                        let compiled = match job.isa {
+                            Isa::Neon => &prep.neon,
+                            _ => &prep.sve,
+                        };
+                        let r = run_compiled_with(&prep.w, compiled, job.isa, &cfg.uarch)?;
+                        if let Some(st) = &store {
+                            let key = job_key(job.bench, job.isa, &cfg.uarch);
+                            st.save(&key, &r).map_err(|e| {
+                                format!("persist {}/{}: {e}", job.bench, job.isa.label())
+                            })?;
+                        }
+                        Ok(r)
+                    },
+                ))
+                .unwrap_or_else(|_| {
+                    Err(format!("{}/{}: job panicked", job.bench, job.isa.label()))
+                });
+                done.lock().unwrap().push((i, res));
+            });
+        }
+    });
+    for (i, res) in done.into_inner().map_err(|_| "result mutex poisoned".to_string())? {
+        records[i] = Some(res?);
+    }
+
+    // assemble rows in matrix order — independent of completion order
+    let mut rows = Vec::with_capacity(cfg.names.len());
+    for (bi, &name) in cfg.names.iter().enumerate() {
+        let neon = records[bi * stride].take().ok_or_else(|| format!("{name}: neon job lost"))?;
+        let sve: Vec<RunRecord> = (0..cfg.vls.len())
+            .map(|vi| {
+                records[bi * stride + 1 + vi]
+                    .take()
+                    .ok_or_else(|| format!("{name}: sve job {vi} lost"))
+            })
+            .collect::<Result<_, String>>()?;
+        let extra = (sve[0].vector_fraction - neon.vector_fraction).max(0.0);
+        rows.push(Fig8Row {
+            bench: name,
+            group: neon.group,
+            neon,
+            sve,
+            extra_vectorization: extra,
+        });
+    }
+    Ok(SweepOutcome { rows, simulated, reloaded })
 }
 
-/// Render the Fig. 8 table (speedups + extra vectorization).
-pub fn fig8_table(rows: &[Fig8Row], vls: &[usize]) -> Table {
-    let mut header = vec!["bench".to_string(), "group".to_string(), "extra_vec_%".to_string()];
-    for vl in vls {
-        header.push(format!("speedup_sve{vl}"));
-    }
-    header.push("neon_cycles".into());
-    let mut t = Table::new(header);
-    for r in rows {
-        let mut row = vec![
-            r.bench.to_string(),
-            format!("{:?}", r.group),
-            f(100.0 * r.extra_vectorization, 1),
-        ];
-        for i in 0..vls.len() {
-            row.push(f(r.speedup(i), 2));
-        }
-        row.push(r.neon.cycles.to_string());
-        t.push_row(row);
-    }
-    t
+/// Run the full Fig. 8 sweep (all benchmarks × NEON + SVE at `vls`)
+/// on the sharded engine, without persistence.
+///
+/// ```
+/// use sve_repro::coordinator::run_fig8;
+/// let rows = run_fig8(&[128, 512], &["haccmk"]).unwrap();
+/// assert!(rows[0].speedup(0) > 1.5, "SVE wins at equal VL");
+/// assert!(rows[0].speedup(1) > rows[0].speedup(0), "and scales with VL");
+/// ```
+pub fn run_fig8(vls: &[usize], names: &[&'static str]) -> Result<Vec<Fig8Row>, String> {
+    run_sweep(&SweepConfig::new(vls, names)).map(|o| o.rows)
 }
 
-/// ASCII rendition of Fig. 8: one row per benchmark, speedup bars per VL
-/// plus the extra-vectorization percentage.
-pub fn fig8_chart(rows: &[Fig8Row], vls: &[usize]) -> String {
-    use std::fmt::Write as _;
-    let mut out = String::new();
-    let _ = writeln!(
-        out,
-        "Fig. 8 — speedup over Advanced SIMD (bracket: extra vectorization %)\n"
-    );
-    for r in rows {
-        let _ = writeln!(
-            out,
-            "{:<13} [{:>5.1}% extra vectorization]  {:?}",
-            r.bench,
-            100.0 * r.extra_vectorization,
-            r.group
-        );
-        for (i, vl) in vls.iter().enumerate() {
-            let sp = r.speedup(i);
-            let bar_len = (sp * 8.0).round() as usize;
-            let _ = writeln!(out, "  sve-{:<4} {:>5.2}x |{}", vl, sp, "#".repeat(bar_len.min(80)));
+/// The plain sequential in-process sweep: one loop, no threads, no
+/// cache, compile-once per (benchmark, target). This is the semantic
+/// reference the sharded driver is pinned against — keep it boring.
+pub fn run_fig8_sequential(
+    vls: &[usize],
+    names: &[&'static str],
+) -> Result<Vec<Fig8Row>, String> {
+    let mut rows = Vec::with_capacity(names.len());
+    for &name in names {
+        let w = workloads::build(name);
+        let compiled_neon = w.compile(Target::Neon);
+        let neon = run_compiled(&w, &compiled_neon, Isa::Neon)?;
+        let compiled_sve = w.compile(Target::Sve);
+        let mut sve = Vec::with_capacity(vls.len());
+        for &vl in vls {
+            sve.push(run_compiled(&w, &compiled_sve, Isa::Sve(vl))?);
         }
+        let extra = (sve[0].vector_fraction - neon.vector_fraction).max(0.0);
+        rows.push(Fig8Row {
+            bench: name,
+            group: neon.group,
+            neon,
+            sve,
+            extra_vectorization: extra,
+        });
     }
-    out
+    Ok(rows)
 }
 
 #[cfg(test)]
@@ -216,13 +445,45 @@ mod tests {
     fn compile_once_sweep_is_bit_identical_to_per_run_compile() {
         // reusing one compiled SVE program across VLs (VLA, §2.2) must
         // not change any reported number
-        let rows = run_fig8(&[128, 512], &["stream_triad"]).unwrap();
+        let rows = run_fig8_sequential(&[128, 512], &["stream_triad"]).unwrap();
         let d128 = run_one("stream_triad", Isa::Sve(128)).unwrap();
         let d512 = run_one("stream_triad", Isa::Sve(512)).unwrap();
         assert_eq!(rows[0].sve[0].cycles, d128.cycles);
         assert_eq!(rows[0].sve[1].cycles, d512.cycles);
         assert_eq!(rows[0].sve[0].insts, d128.insts);
         assert_eq!(rows[0].sve[0].vector_fraction, d128.vector_fraction);
+    }
+
+    #[test]
+    fn sharded_sweep_is_bit_identical_to_sequential() {
+        let vls = [128usize, 512];
+        let names = ["stream_triad", "graph500"];
+        let seq = run_fig8_sequential(&vls, &names).unwrap();
+        let mut cfg = SweepConfig::new(&vls, &names);
+        cfg.jobs = 3; // deliberately not a divisor of the 6-job matrix
+        let out = run_sweep(&cfg).unwrap();
+        assert_eq!(out.simulated, 6);
+        assert_eq!(out.reloaded, 0);
+        for (a, b) in seq.iter().zip(&out.rows) {
+            assert_eq!(a.bench, b.bench);
+            assert_eq!(a.neon.cycles, b.neon.cycles);
+            assert_eq!(a.extra_vectorization.to_bits(), b.extra_vectorization.to_bits());
+            for (ra, rb) in a.sve.iter().zip(&b.sve) {
+                assert_eq!(ra.cycles, rb.cycles);
+                assert_eq!(ra.insts, rb.insts);
+                assert_eq!(ra.vector_fraction.to_bits(), rb.vector_fraction.to_bits());
+                assert_eq!(ra.ipc.to_bits(), rb.ipc.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn sweep_rejects_bad_matrix() {
+        assert!(run_sweep(&SweepConfig::new(&[], &["haccmk"])).is_err());
+        assert!(run_sweep(&SweepConfig::new(&[256], &[])).is_err());
+        assert!(run_sweep(&SweepConfig::new(&[192], &["haccmk"])).is_err());
+        // unknown names are an Err, not a worker panic/abort
+        assert!(run_sweep(&SweepConfig::new(&[256], &["nosuchbench"])).is_err());
     }
 
     #[test]

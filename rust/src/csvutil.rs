@@ -4,6 +4,17 @@ use std::fmt::Write as _;
 use std::path::Path;
 
 /// A rectangular table with a header row.
+///
+/// The backing for every CSV/Markdown table the CLI and the report
+/// emitters produce:
+///
+/// ```
+/// use sve_repro::csvutil::Table;
+/// let mut t = Table::new(vec!["bench", "cycles"]);
+/// t.push_row(vec!["daxpy", "1234"]);
+/// assert_eq!(t.to_csv(), "bench,cycles\ndaxpy,1234\n");
+/// assert!(t.to_markdown().starts_with("| bench | cycles |"));
+/// ```
 #[derive(Clone, Debug, Default)]
 pub struct Table {
     pub header: Vec<String>,

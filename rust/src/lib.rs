@@ -20,8 +20,10 @@
 //! * [`uarch`] — the trace-driven out-of-order timing model configured
 //!   per Table 2.
 //! * [`workloads`] — the HPC proxy benchmark suite behind Fig. 8.
-//! * [`coordinator`] — (benchmark × ISA × VL) sweep runner, stats and
-//!   report generation.
+//! * [`coordinator`] — the sharded, resumable (benchmark × ISA × VL)
+//!   sweep engine.
+//! * [`report`] — JSON/CSV/Markdown artifact emitters for Figs. 2, 7
+//!   and 8, plus the content-addressed job cache behind `--resume`.
 //! * [`runtime`] — PJRT golden-model loader (`artifacts/*.hlo.txt`,
 //!   produced once at build time by `python/compile/aot.py`).
 
@@ -35,6 +37,7 @@ pub mod exec;
 pub mod isa;
 pub mod mem;
 pub mod proptest_lite;
+pub mod report;
 pub mod rng;
 pub mod runtime;
 pub mod uarch;
@@ -50,6 +53,12 @@ pub const VL_STEP_BITS: usize = 128;
 pub const VL_MAX_BYTES: usize = VL_MAX_BITS / 8;
 
 /// Validate a vector length choice per §2.2.
+///
+/// ```
+/// assert!(sve_repro::vl_is_legal(256));
+/// assert!(!sve_repro::vl_is_legal(192)); // multiple of 64, not of 128
+/// assert!(!sve_repro::vl_is_legal(4096)); // beyond the architectural max
+/// ```
 pub fn vl_is_legal(vl_bits: usize) -> bool {
     (VL_MIN_BITS..=VL_MAX_BITS).contains(&vl_bits) && vl_bits % VL_STEP_BITS == 0
 }

@@ -1,28 +1,181 @@
 //! `sve` — CLI for the SVE-paper reproduction.
 //!
-//! Subcommands:
-//!   run <bench> [--isa scalar|neon|sve] [--vl BITS]   one benchmark
-//!   sweep [--vls 128,256,512] [--out reports/]        the Fig. 8 sweep
-//!   trace <bench> [--vl BITS] [--limit N]             Fig. 3-style trace
-//!   encoding                                          Fig. 7 report
-//!   validate [--artifacts DIR]                        PJRT cross-check
-//!   list                                              benchmarks
+//! ```text
+//! sve list                                              benchmarks
+//! sve run <bench> [--isa scalar|neon|sve] [--vl BITS]   one benchmark
+//! sve sweep [--vls 128,256,512] [--benches a,b] [--out reports]
+//!           [--jobs N] [--resume]                       the Fig. 8 sweep
+//! sve report [--out reports] [--vls ...] [--jobs N]     all figure artifacts
+//! sve trace <bench> [--vl BITS] [--limit N]             Fig. 3-style trace
+//! sve encoding                                          Fig. 7 terminal report
+//! sve validate [--artifacts DIR]                        PJRT cross-check
+//! ```
+//!
+//! Exit codes: `0` success, `1` runtime failure (a simulation trapped,
+//! validation failed), `2` usage error (unknown subcommand/benchmark,
+//! malformed or illegal `--vl`/`--isa`/`--jobs` values).
 
-use sve_repro::coordinator::{self, Isa};
+use std::path::PathBuf;
+
+use sve_repro::coordinator::{self, Isa, SweepConfig};
 use sve_repro::csvutil::Table;
 use sve_repro::exec::Executor;
 use sve_repro::isa::encoding;
+use sve_repro::report;
 use sve_repro::uarch::UarchConfig;
 use sve_repro::workloads;
 
+const USAGE: &str = "sve — ARM SVE paper reproduction
+
+usage: sve <command> [options]
+
+commands:
+  list                       list the Fig. 8 benchmark proxies
+  run <bench>                run one benchmark
+      --isa scalar|neon|sve  target ISA (default sve)
+      --vl BITS              SVE vector length, 128..2048 step 128 (default 256)
+  sweep                      the Fig. 8 sweep, sharded + resumable
+      --vls A,B,C            SVE vector lengths (default 128,256,512)
+      --benches a,b          benchmark subset (default: all)
+      --out DIR              artifact/cache directory (default reports)
+      --jobs N               worker threads (default: one per CPU)
+      --resume               reuse completed jobs cached under DIR/jobs/
+  report                     emit Fig. 2 + Fig. 7 + Fig. 8 artifacts
+      --out DIR  --vls A,B,C  --benches a,b  --jobs N   (as for sweep;
+                             the Fig. 8 part always resumes from DIR/jobs/)
+  trace <bench>              Fig. 3-style cycle-by-cycle timeline
+      --vl BITS  --limit N
+  encoding                   Fig. 7 encoding-budget report (terminal)
+  validate [--artifacts DIR] PJRT golden cross-check
+
+exit codes: 0 ok, 1 runtime failure, 2 usage error";
+
 fn flag(args: &[String], name: &str) -> Option<String> {
     args.iter().position(|a| a == name).and_then(|i| args.get(i + 1).cloned())
+}
+
+fn has_flag(args: &[String], name: &str) -> bool {
+    args.iter().any(|a| a == name)
+}
+
+/// Usage error: message + usage to stderr, exit 2.
+fn die_usage(msg: &str) -> ! {
+    eprintln!("error: {msg}\n\n{USAGE}");
+    std::process::exit(2)
+}
+
+/// Runtime failure: message to stderr, exit 1.
+fn die_run(msg: &str) -> ! {
+    eprintln!("FAILED: {msg}");
+    std::process::exit(1)
+}
+
+fn parse_bench(args: &[String], cmd: &str) -> &'static str {
+    let Some(bench) = args.get(1) else {
+        die_usage(&format!("usage: sve {cmd} <bench>"));
+    };
+    match workloads::NAMES.iter().find(|n| *n == bench) {
+        Some(&n) => n,
+        None => die_usage(&format!(
+            "unknown benchmark '{bench}' (try: {})",
+            workloads::NAMES.join(", ")
+        )),
+    }
+}
+
+fn parse_vl(args: &[String], default: usize) -> usize {
+    let Some(text) = flag(args, "--vl") else { return default };
+    let Ok(vl) = text.parse::<usize>() else {
+        die_usage(&format!("--vl '{text}' is not a number"));
+    };
+    if !sve_repro::vl_is_legal(vl) {
+        die_usage(&format!("--vl {vl} is illegal (§2.2: 128..2048 in steps of 128)"));
+    }
+    vl
+}
+
+fn parse_vls(args: &[String]) -> Vec<usize> {
+    let text = flag(args, "--vls").unwrap_or_else(|| "128,256,512".into());
+    let mut vls = Vec::new();
+    for part in text.split(',') {
+        let Ok(vl) = part.trim().parse::<usize>() else {
+            die_usage(&format!("--vls component '{part}' is not a number"));
+        };
+        if !sve_repro::vl_is_legal(vl) {
+            die_usage(&format!("--vls {vl} is illegal (§2.2: 128..2048 in steps of 128)"));
+        }
+        vls.push(vl);
+    }
+    vls
+}
+
+fn parse_jobs(args: &[String]) -> usize {
+    let Some(text) = flag(args, "--jobs") else { return 0 };
+    match text.parse::<usize>() {
+        Ok(n) => n,
+        Err(_) => die_usage(&format!("--jobs '{text}' is not a number")),
+    }
+}
+
+fn parse_benches(args: &[String]) -> Vec<&'static str> {
+    let Some(text) = flag(args, "--benches") else {
+        return workloads::NAMES.to_vec();
+    };
+    let mut names = Vec::new();
+    for part in text.split(',') {
+        let part = part.trim();
+        match workloads::NAMES.iter().find(|n| **n == part) {
+            Some(n) => names.push(*n),
+            None => die_usage(&format!(
+                "unknown benchmark '{part}' in --benches (try: {})",
+                workloads::NAMES.join(", ")
+            )),
+        }
+    }
+    names
+}
+
+fn sweep_config(args: &[String]) -> (SweepConfig, PathBuf) {
+    let out: PathBuf = flag(args, "--out").unwrap_or_else(|| "reports".into()).into();
+    let mut cfg = SweepConfig::new(&parse_vls(args), &parse_benches(args));
+    cfg.jobs = parse_jobs(args);
+    cfg.resume = has_flag(args, "--resume");
+    cfg.out_dir = Some(out.clone());
+    (cfg, out)
+}
+
+fn run_sweep_and_emit(cfg: &SweepConfig, out: &PathBuf) {
+    let outcome = match coordinator::run_sweep(cfg) {
+        Ok(o) => o,
+        Err(e) => die_run(&e),
+    };
+    let t = report::fig8::table(&outcome.rows, &cfg.vls);
+    println!("{}", t.to_markdown());
+    println!("{}", report::fig8::chart(&outcome.rows, &cfg.vls));
+    match report::fig8::write_artifacts(&outcome.rows, &cfg.vls, out) {
+        Ok(paths) => {
+            for p in paths {
+                println!("wrote {}", p.display());
+            }
+        }
+        Err(e) => die_run(&format!("write artifacts: {e}")),
+    }
+    println!(
+        "{} jobs: {} simulated, {} reloaded from {}/jobs/",
+        outcome.simulated + outcome.reloaded,
+        outcome.simulated,
+        outcome.reloaded,
+        out.display()
+    );
 }
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let cmd = args.first().map(String::as_str).unwrap_or("help");
     match cmd {
+        "help" | "--help" | "-h" => {
+            println!("{USAGE}");
+        }
         "list" => {
             for n in workloads::NAMES {
                 let w = workloads::build(n);
@@ -30,17 +183,16 @@ fn main() {
             }
         }
         "run" => {
-            let bench = args.get(1).expect("usage: sve run <bench>");
-            let name = workloads::NAMES
-                .iter()
-                .find(|n| *n == bench)
-                .unwrap_or_else(|| panic!("unknown benchmark {bench}"));
+            let name = parse_bench(&args, "run");
+            // validate --vl whatever the ISA: a typo'd value must never
+            // be silently ignored (scalar/neon fix the width at 128)
+            let vl = parse_vl(&args, 256);
             let isa = match flag(&args, "--isa").as_deref() {
                 Some("scalar") => Isa::Scalar,
                 Some("neon") => Isa::Neon,
-                _ => {
-                    let vl = flag(&args, "--vl").and_then(|v| v.parse().ok()).unwrap_or(256);
-                    Isa::Sve(vl)
+                Some("sve") | None => Isa::Sve(vl),
+                Some(other) => {
+                    die_usage(&format!("unknown --isa '{other}' (scalar, neon or sve)"))
                 }
             };
             match coordinator::run_one(name, isa) {
@@ -58,31 +210,39 @@ fn main() {
                         100.0 * r.l1d_miss_rate
                     );
                 }
-                Err(e) => {
-                    eprintln!("FAILED: {e}");
-                    std::process::exit(1);
-                }
+                Err(e) => die_run(&e),
             }
         }
         "sweep" => {
-            let vls: Vec<usize> = flag(&args, "--vls")
-                .unwrap_or_else(|| "128,256,512".into())
-                .split(',')
-                .map(|v| v.parse().expect("vl"))
-                .collect();
-            let out = flag(&args, "--out").unwrap_or_else(|| "reports".into());
-            let rows = coordinator::run_fig8(&vls, &workloads::NAMES).expect("sweep");
-            let t = coordinator::fig8_table(&rows, &vls);
-            println!("{}", t.to_markdown());
-            println!("{}", coordinator::fig8_chart(&rows, &vls));
-            t.write_csv(format!("{out}/fig8.csv")).expect("write csv");
-            println!("wrote {out}/fig8.csv");
+            let (cfg, out) = sweep_config(&args);
+            run_sweep_and_emit(&cfg, &out);
+        }
+        "report" => {
+            let (mut cfg, out) = sweep_config(&args);
+            // `report` is idempotent by design: always reuse cached jobs
+            cfg.resume = true;
+            let fig2 = report::fig2::build(report::fig2::DAXPY_N);
+            match report::fig2::write_artifacts(&fig2, &out) {
+                Ok(paths) => paths.iter().for_each(|p| println!("wrote {}", p.display())),
+                Err(e) => die_run(&format!("write fig2 artifacts: {e}")),
+            }
+            match report::fig7::write_artifacts(&out) {
+                Ok(paths) => paths.iter().for_each(|p| println!("wrote {}", p.display())),
+                Err(e) => die_run(&format!("write fig7 artifacts: {e}")),
+            }
+            run_sweep_and_emit(&cfg, &out);
         }
         "trace" => {
-            let bench = args.get(1).expect("usage: sve trace <bench>");
-            let vl = flag(&args, "--vl").and_then(|v| v.parse().ok()).unwrap_or(256);
-            let limit: u64 = flag(&args, "--limit").and_then(|v| v.parse().ok()).unwrap_or(64);
-            let w = workloads::build(bench);
+            let name = parse_bench(&args, "trace");
+            let vl = parse_vl(&args, 256);
+            let limit: u64 = match flag(&args, "--limit") {
+                Some(t) => match t.parse() {
+                    Ok(n) => n,
+                    Err(_) => die_usage(&format!("--limit '{t}' is not a number")),
+                },
+                None => 64,
+            };
+            let w = workloads::build(name);
             let c = w.compile(sve_repro::compiler::Target::Sve);
             let mut ex = Executor::new(vl, w.mem.clone());
             let mut pipe = sve_repro::uarch::Pipeline::new(UarchConfig::default(), vl);
@@ -113,9 +273,9 @@ fn main() {
             let (d, c) = encoding::constructive_counterfactual();
             println!(
                 "§4 counterfactual (full {}-opcode dp set): destructive+movprfx = {d} \
-                 points; fully-constructive = {c} points ({}x the whole region)",
+                 points; fully-constructive = {c} points ({:.1}x the whole region)",
                 encoding::FULL_DP_OPCODES,
-                c / encoding::SVE_REGION_POINTS
+                c as f64 / encoding::SVE_REGION_POINTS as f64
             );
         }
         "validate" => {
@@ -140,12 +300,8 @@ fn main() {
                 }
             }
         }
-        _ => {
-            println!(
-                "sve — ARM SVE paper reproduction\n\
-                 usage: sve <list|run|sweep|trace|encoding|validate> [options]\n\
-                 see `cargo doc` and README.md"
-            );
+        other => {
+            die_usage(&format!("unknown command '{other}'"));
         }
     }
 }

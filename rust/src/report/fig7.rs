@@ -1,0 +1,144 @@
+//! Fig. 7 artifact emitters: the SVE encoding-budget model — how much
+//! of the architecture's single 28-bit encoding region each instruction
+//! group consumes, plus the §4 destructive-vs-constructive
+//! counterfactual. Emits `fig7.json` (schema [`FIG7_SCHEMA`]) +
+//! `fig7.csv` + `fig7.md`.
+
+use std::io;
+use std::path::{Path, PathBuf};
+
+use crate::csvutil::Table;
+use crate::isa::encoding::{self, sve_region_report};
+use crate::report::json::Json;
+
+/// Schema tag of the `fig7.json` artifact.
+pub const FIG7_SCHEMA: &str = "sve-repro/fig7/v1";
+
+/// The per-group CSV table.
+pub fn table() -> Table {
+    let (groups, total) = sve_region_report();
+    let mut t = Table::new(vec!["group", "points", "share_of_region_%"]);
+    for g in &groups {
+        t.push_row(vec![
+            g.group.clone(),
+            g.points.to_string(),
+            format!("{:.3}", 100.0 * g.share_of_region),
+        ]);
+    }
+    t.push_row(vec![
+        "total".to_string(),
+        total.to_string(),
+        format!("{:.3}", 100.0 * total as f64 / encoding::SVE_REGION_POINTS as f64),
+    ]);
+    t
+}
+
+/// The machine-readable Fig. 7 document.
+pub fn to_json() -> Json {
+    let (groups, total) = sve_region_report();
+    let (destructive, constructive) = encoding::constructive_counterfactual();
+    Json::Obj(vec![
+        ("schema".into(), Json::str(FIG7_SCHEMA)),
+        ("figure".into(), Json::str("fig7")),
+        ("title".into(), Json::str("SVE encoding budget within one 28-bit region")),
+        ("region_bits".into(), Json::u64(encoding::SVE_REGION_BITS as u64)),
+        ("region_points".into(), Json::Num(encoding::SVE_REGION_POINTS.to_string())),
+        (
+            "groups".into(),
+            Json::Arr(
+                groups
+                    .iter()
+                    .map(|g| {
+                        Json::Obj(vec![
+                            ("group".into(), Json::str(g.group.clone())),
+                            ("points".into(), Json::Num(g.points.to_string())),
+                            ("share_of_region".into(), Json::f64(g.share_of_region)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        ("total_points".into(), Json::Num(total.to_string())),
+        (
+            "counterfactual".into(),
+            Json::Obj(vec![
+                ("full_dp_opcodes".into(), Json::u64(encoding::FULL_DP_OPCODES as u64)),
+                ("destructive_plus_movprfx_points".into(), Json::Num(destructive.to_string())),
+                ("fully_constructive_points".into(), Json::Num(constructive.to_string())),
+            ]),
+        ),
+    ])
+}
+
+/// The human-readable Markdown artifact (`fig7.md`).
+pub fn to_markdown() -> String {
+    use std::fmt::Write as _;
+    let (_, total) = sve_region_report();
+    let (destructive, constructive) = encoding::constructive_counterfactual();
+    let mut out = String::new();
+    let _ = writeln!(out, "# Fig. 7 — SVE encoding budget\n");
+    let _ = writeln!(
+        out,
+        "Schema: `{FIG7_SCHEMA}` · SVE fits one {}-bit region of the \
+         AArch64 opcode space ({} encoding points).\n",
+        encoding::SVE_REGION_BITS,
+        encoding::SVE_REGION_POINTS
+    );
+    let _ = writeln!(out, "{}", table().to_markdown());
+    let _ = writeln!(
+        out,
+        "Used: {total} of {} points ({:.2}%).\n",
+        encoding::SVE_REGION_POINTS,
+        100.0 * total as f64 / encoding::SVE_REGION_POINTS as f64
+    );
+    let _ = writeln!(
+        out,
+        "§4 counterfactual (full {}-opcode data-processing set): \
+         destructive forms plus `movprfx` need {destructive} points; \
+         fully-constructive forms would need {constructive} points — \
+         {:.1}x the entire region. This is why SVE keeps destructive \
+         destinations and pairs them with `movprfx`.\n",
+        encoding::FULL_DP_OPCODES,
+        constructive as f64 / encoding::SVE_REGION_POINTS as f64
+    );
+    let _ = writeln!(
+        out,
+        "Regenerate with `sve report --out <dir>` or `sve encoding`; \
+         machine-readable copies: `fig7.json`, `fig7.csv`."
+    );
+    out
+}
+
+/// Write `fig7.json`, `fig7.csv` and `fig7.md` under `out_dir`.
+pub fn write_artifacts(out_dir: impl AsRef<Path>) -> io::Result<Vec<PathBuf>> {
+    let dir = out_dir.as_ref();
+    std::fs::create_dir_all(dir)?;
+    let json_path = dir.join("fig7.json");
+    std::fs::write(&json_path, to_json().render_pretty())?;
+    let csv_path = dir.join("fig7.csv");
+    std::fs::write(&csv_path, table().to_csv())?;
+    let md_path = dir.join("fig7.md");
+    std::fs::write(&md_path, to_markdown())?;
+    Ok(vec![json_path, csv_path, md_path])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig7_artifacts_are_consistent() {
+        let v = to_json();
+        let back = Json::parse(&v.render_pretty()).unwrap();
+        assert_eq!(back, v);
+        let total: u128 = match back.get("total_points").unwrap() {
+            Json::Num(n) => n.parse().unwrap(),
+            other => panic!("total_points must be a number, got {other:?}"),
+        };
+        assert!(total < encoding::SVE_REGION_POINTS, "SVE fits in one region");
+        let t = table();
+        assert!(t.rows.len() >= 2);
+        assert_eq!(t.rows.last().unwrap()[0], "total");
+        assert!(to_markdown().contains("movprfx"));
+    }
+}

@@ -1,0 +1,229 @@
+//! Fig. 8 artifact emitters: speedup-over-Advanced-SIMD sweep results
+//! as machine-readable JSON (schema [`FIG8_SCHEMA`]) + CSV and
+//! human-readable Markdown. All three renderings are pure functions of
+//! the row data — no timestamps, no environment — so they are
+//! byte-stable and golden-tested (`tests/report_golden.rs`).
+
+use std::io;
+use std::path::{Path, PathBuf};
+
+use crate::coordinator::{Fig8Row, RunRecord};
+use crate::csvutil::{f, Table};
+use crate::report::json::Json;
+
+/// Schema tag of the `fig8.json` artifact.
+pub const FIG8_SCHEMA: &str = "sve-repro/fig8/v1";
+
+/// Render the Fig. 8 table (speedups + extra vectorization).
+pub fn table(rows: &[Fig8Row], vls: &[usize]) -> Table {
+    let mut header = vec!["bench".to_string(), "group".to_string(), "extra_vec_%".to_string()];
+    for vl in vls {
+        header.push(format!("speedup_sve{vl}"));
+    }
+    header.push("neon_cycles".into());
+    let mut t = Table::new(header);
+    for r in rows {
+        let mut row = vec![
+            r.bench.to_string(),
+            r.group.short().to_string(),
+            f(100.0 * r.extra_vectorization, 1),
+        ];
+        for i in 0..vls.len() {
+            row.push(f(r.speedup(i), 2));
+        }
+        row.push(r.neon.cycles.to_string());
+        t.push_row(row);
+    }
+    t
+}
+
+/// ASCII rendition of Fig. 8: one row per benchmark, speedup bars per VL
+/// plus the extra-vectorization percentage.
+pub fn chart(rows: &[Fig8Row], vls: &[usize]) -> String {
+    use std::fmt::Write as _;
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "Fig. 8 — speedup over Advanced SIMD (bracket: extra vectorization %)\n"
+    );
+    for r in rows {
+        let _ = writeln!(
+            out,
+            "{:<13} [{:>5.1}% extra vectorization]  {}",
+            r.bench,
+            100.0 * r.extra_vectorization,
+            r.group.short()
+        );
+        for (i, vl) in vls.iter().enumerate() {
+            let sp = r.speedup(i);
+            let bar_len = (sp * 8.0).round() as usize;
+            let _ = writeln!(out, "  sve-{:<4} {:>5.2}x |{}", vl, sp, "#".repeat(bar_len.min(80)));
+        }
+    }
+    out
+}
+
+fn run_json(r: &RunRecord, speedup: Option<f64>) -> Json {
+    let mut fields = vec![("vl_bits".to_string(), Json::u64(r.isa.vl() as u64))];
+    if let Some(sp) = speedup {
+        fields.push(("speedup".into(), Json::f64(sp)));
+    }
+    fields.extend([
+        ("cycles".to_string(), Json::u64(r.cycles)),
+        ("insts".to_string(), Json::u64(r.insts)),
+        ("ipc".to_string(), Json::f64(r.ipc)),
+        ("vectorized".to_string(), Json::Bool(r.vectorized)),
+        ("vector_fraction".to_string(), Json::f64(r.vector_fraction)),
+        ("l1d_miss_rate".to_string(), Json::f64(r.l1d_miss_rate)),
+    ]);
+    Json::Obj(fields)
+}
+
+/// The machine-readable Fig. 8 document.
+pub fn to_json(rows: &[Fig8Row], vls: &[usize]) -> Json {
+    let benchmarks = rows
+        .iter()
+        .map(|r| {
+            Json::Obj(vec![
+                ("bench".into(), Json::str(r.bench)),
+                ("group".into(), Json::str(r.group.short())),
+                ("extra_vectorization".into(), Json::f64(r.extra_vectorization)),
+                ("neon".into(), run_json(&r.neon, None)),
+                (
+                    "sve".into(),
+                    Json::Arr(
+                        r.sve
+                            .iter()
+                            .enumerate()
+                            .map(|(i, s)| run_json(s, Some(r.speedup(i))))
+                            .collect(),
+                    ),
+                ),
+            ])
+        })
+        .collect();
+    Json::Obj(vec![
+        ("schema".into(), Json::str(FIG8_SCHEMA)),
+        ("figure".into(), Json::str("fig8")),
+        (
+            "title".into(),
+            Json::str("SVE speedup over Advanced SIMD across vector lengths"),
+        ),
+        ("vls_bits".into(), Json::Arr(vls.iter().map(|&v| Json::u64(v as u64)).collect())),
+        ("benchmarks".into(), Json::Arr(benchmarks)),
+    ])
+}
+
+/// The human-readable Markdown artifact (`fig8.md`).
+pub fn to_markdown(rows: &[Fig8Row], vls: &[usize]) -> String {
+    let vl_list = vls.iter().map(|v| v.to_string()).collect::<Vec<_>>().join(", ");
+    format!(
+        "# Fig. 8 — SVE speedup over Advanced SIMD\n\
+         \n\
+         Schema: `{FIG8_SCHEMA}` · SVE vector lengths: {vl_list} bits · \
+         {nb} benchmarks, every run validated against its golden outputs.\n\
+         \n\
+         Speedup is NEON cycles / SVE cycles at each vector length; \
+         `extra_vec_%` is the dynamic vector-instruction fraction SVE \
+         gains over NEON at VL=128 (the paper's grey bars).\n\
+         \n\
+         {table}\n\
+         ```\n\
+         {chart}```\n\
+         \n\
+         Regenerate with `sve sweep --out <dir>` (add `--resume` to reuse \
+         cached jobs); machine-readable copies: `fig8.json`, `fig8.csv`.\n",
+        nb = rows.len(),
+        table = table(rows, vls).to_markdown(),
+        chart = chart(rows, vls),
+    )
+}
+
+/// Write `fig8.json`, `fig8.csv` and `fig8.md` under `out_dir`,
+/// returning the paths written.
+pub fn write_artifacts(
+    rows: &[Fig8Row],
+    vls: &[usize],
+    out_dir: impl AsRef<Path>,
+) -> io::Result<Vec<PathBuf>> {
+    let dir = out_dir.as_ref();
+    std::fs::create_dir_all(dir)?;
+    let json_path = dir.join("fig8.json");
+    std::fs::write(&json_path, to_json(rows, vls).render_pretty())?;
+    let csv_path = dir.join("fig8.csv");
+    std::fs::write(&csv_path, table(rows, vls).to_csv())?;
+    let md_path = dir.join("fig8.md");
+    std::fs::write(&md_path, to_markdown(rows, vls))?;
+    Ok(vec![json_path, csv_path, md_path])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::Isa;
+    use crate::workloads::Group;
+
+    fn rec(bench: &'static str, isa: Isa, cycles: u64) -> RunRecord {
+        RunRecord {
+            bench,
+            group: Group::Right,
+            isa,
+            cycles,
+            insts: 10 * cycles,
+            vector_fraction: 0.5,
+            vectorized: true,
+            l1d_miss_rate: 0.125,
+            ipc: 1.5,
+        }
+    }
+
+    fn rows() -> Vec<Fig8Row> {
+        let neon = rec("stream_triad", Isa::Neon, 1000);
+        let sve = vec![rec("stream_triad", Isa::Sve(128), 800), rec("stream_triad", Isa::Sve(256), 400)];
+        vec![Fig8Row {
+            bench: "stream_triad",
+            group: Group::Right,
+            extra_vectorization: 0.25,
+            neon,
+            sve,
+        }]
+    }
+
+    #[test]
+    fn json_is_parseable_and_complete() {
+        let v = to_json(&rows(), &[128, 256]);
+        let back = Json::parse(&v.render_pretty()).unwrap();
+        assert_eq!(back, v);
+        assert_eq!(back.get("schema").unwrap().as_str(), Some(FIG8_SCHEMA));
+        let benches = back.get("benchmarks").unwrap().as_arr().unwrap();
+        assert_eq!(benches.len(), 1);
+        let sve = benches[0].get("sve").unwrap().as_arr().unwrap();
+        assert_eq!(sve[0].get("speedup").unwrap().as_f64(), Some(1.25));
+        assert_eq!(sve[1].get("speedup").unwrap().as_f64(), Some(2.5));
+    }
+
+    #[test]
+    fn csv_and_markdown_have_expected_shape() {
+        let t = table(&rows(), &[128, 256]);
+        let csv = t.to_csv();
+        assert_eq!(csv.lines().count(), 2);
+        assert!(csv.starts_with("bench,group,extra_vec_%,speedup_sve128,speedup_sve256,neon_cycles"));
+        assert!(csv.contains("stream_triad,right,25.0,1.25,2.50,1000"));
+        let md = to_markdown(&rows(), &[128, 256]);
+        assert!(md.contains("# Fig. 8"));
+        assert!(md.contains(FIG8_SCHEMA));
+        assert!(md.contains("| stream_triad"));
+    }
+
+    #[test]
+    fn artifacts_written_to_disk() {
+        let dir = std::env::temp_dir().join(format!("sve-fig8-test-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let paths = write_artifacts(&rows(), &[128, 256], &dir).unwrap();
+        assert_eq!(paths.len(), 3);
+        for p in &paths {
+            assert!(p.exists(), "{p:?} missing");
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

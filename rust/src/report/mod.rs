@@ -1,0 +1,37 @@
+//! Report generation: machine-readable (JSON, CSV) and human-readable
+//! (Markdown) artifacts for the paper's figures, plus the persistence
+//! layer that makes sweeps resumable.
+//!
+//! The coordinator produces data ([`crate::coordinator::Fig8Row`],
+//! [`crate::coordinator::RunRecord`]); this module owns every rendering
+//! of it:
+//!
+//! * [`json`] — dependency-free JSON value/writer/parser with exact
+//!   number round-trips (the foundation of resume bit-identity).
+//! * [`store`] — the content-addressed job cache under
+//!   `<out>/jobs/<fnv1a-key>.json`; `sve sweep --resume` reloads
+//!   completed jobs from here instead of re-simulating them.
+//! * [`fig2`] — daxpy codegen listings + cycles across VLs.
+//! * [`fig7`] — the encoding-budget model and §4 counterfactual.
+//! * [`fig8`] — the headline speedup sweep.
+//!
+//! Every emitter is a pure function of its inputs — no timestamps, no
+//! host details — so artifacts are byte-stable across machines and
+//! reruns, and the golden-file tests in `tests/report_golden.rs` can
+//! pin them exactly.
+//!
+//! Layout of a populated `reports/` directory:
+//!
+//! ```text
+//! reports/
+//! ├── fig2.{json,csv,md}     sve report
+//! ├── fig7.{json,csv,md}     sve report
+//! ├── fig8.{json,csv,md}     sve sweep / sve report
+//! └── jobs/<key>.json        one cached RunRecord per sweep job
+//! ```
+
+pub mod fig2;
+pub mod fig7;
+pub mod fig8;
+pub mod json;
+pub mod store;

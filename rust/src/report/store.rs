@@ -1,0 +1,206 @@
+//! Content-addressed persistence for sweep jobs.
+//!
+//! Every (workload, target, VL, [`UarchConfig`]) job is identified by a
+//! 64-bit FNV-1a hash of its full configuration ([`job_key`]). A
+//! [`JobStore`] maps that key to a small JSON file
+//! (`<out>/jobs/<key>.json`, schema [`JOB_SCHEMA`]) holding the job's
+//! [`RunRecord`]. A resumed sweep loads the file instead of
+//! re-simulating; because floats are serialized with shortest
+//! round-trip formatting (see [`super::json`]), a reloaded record is
+//! bit-identical to the freshly simulated one.
+//!
+//! Any mismatch — missing file, parse error, schema drift, or a record
+//! whose identity fields disagree with the requested job — is treated
+//! as a cache miss, never an error: the job is simply re-simulated.
+
+use std::path::{Path, PathBuf};
+
+use crate::coordinator::{Isa, RunRecord};
+use crate::report::json::Json;
+use crate::uarch::UarchConfig;
+use crate::workloads::{self, Group};
+
+/// Schema tag written into every job file; bump on layout changes so
+/// stale caches self-invalidate.
+pub const JOB_SCHEMA: &str = "sve-repro/fig8-job/v1";
+
+/// 64-bit FNV-1a. Tiny, dependency-free, and stable across platforms —
+/// exactly what a cache key needs (this is not a security boundary).
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+/// The content hash identifying one sweep job.
+///
+/// Covers the schema version, workload name, ISA + vector length, and
+/// every field of the microarchitecture config (via its `Debug`
+/// rendering — all fields are integers, so the text is exact). Changing
+/// any model parameter therefore changes every key, and a stale
+/// `reports/jobs/` directory can never leak old numbers into a new
+/// sweep.
+pub fn job_key(bench: &str, isa: Isa, cfg: &UarchConfig) -> String {
+    let ident = format!("{JOB_SCHEMA}|{bench}|{}|{}|{cfg:?}", isa.label(), isa.vl());
+    format!("{:016x}", fnv1a(ident.as_bytes()))
+}
+
+/// On-disk job cache under `<out>/jobs/`.
+pub struct JobStore {
+    dir: PathBuf,
+}
+
+impl JobStore {
+    /// Open (creating if needed) the job cache under `out_dir/jobs`.
+    pub fn open(out_dir: impl AsRef<Path>) -> std::io::Result<JobStore> {
+        let dir = out_dir.as_ref().join("jobs");
+        std::fs::create_dir_all(&dir)?;
+        Ok(JobStore { dir })
+    }
+
+    /// Path of one job file.
+    pub fn job_path(&self, key: &str) -> PathBuf {
+        self.dir.join(format!("{key}.json"))
+    }
+
+    /// Persist one record under `key`.
+    pub fn save(&self, key: &str, r: &RunRecord) -> std::io::Result<()> {
+        std::fs::write(self.job_path(key), record_to_json(key, r).render_pretty())
+    }
+
+    /// Load the record cached under `key`, if present and valid.
+    /// Returns `None` (cache miss) on any missing/corrupt/mismatched
+    /// file — the caller re-simulates.
+    pub fn load(&self, key: &str, bench: &str, isa: Isa) -> Option<RunRecord> {
+        let text = std::fs::read_to_string(self.job_path(key)).ok()?;
+        let r = record_from_json(&Json::parse(&text).ok()?)?;
+        // identity check: the file must describe exactly this job
+        if r.bench != bench || r.isa != isa {
+            return None;
+        }
+        Some(r)
+    }
+}
+
+/// Serialize one [`RunRecord`] (plus its key, for human inspection).
+pub fn record_to_json(key: &str, r: &RunRecord) -> Json {
+    Json::Obj(vec![
+        ("schema".into(), Json::str(JOB_SCHEMA)),
+        ("key".into(), Json::str(key)),
+        ("bench".into(), Json::str(r.bench)),
+        ("group".into(), Json::str(r.group.short())),
+        ("isa".into(), Json::str(r.isa.label())),
+        ("vl_bits".into(), Json::u64(r.isa.vl() as u64)),
+        ("cycles".into(), Json::u64(r.cycles)),
+        ("insts".into(), Json::u64(r.insts)),
+        ("vector_fraction".into(), Json::f64(r.vector_fraction)),
+        ("vectorized".into(), Json::Bool(r.vectorized)),
+        ("l1d_miss_rate".into(), Json::f64(r.l1d_miss_rate)),
+        ("ipc".into(), Json::f64(r.ipc)),
+    ])
+}
+
+/// Deserialize a job file back into a [`RunRecord`]. `None` on any
+/// schema or field problem (treated as a cache miss by [`JobStore`]).
+pub fn record_from_json(v: &Json) -> Option<RunRecord> {
+    if v.get("schema")?.as_str()? != JOB_SCHEMA {
+        return None;
+    }
+    let bench_name = v.get("bench")?.as_str()?;
+    // intern against the static workload list: records always describe
+    // known workloads, and RunRecord carries a &'static str
+    let bench = *workloads::NAMES.iter().find(|n| **n == bench_name)?;
+    let group = Group::from_short(v.get("group")?.as_str()?)?;
+    let isa = Isa::parse_label(v.get("isa")?.as_str()?)?;
+    Some(RunRecord {
+        bench,
+        group,
+        isa,
+        cycles: v.get("cycles")?.as_u64()?,
+        insts: v.get("insts")?.as_u64()?,
+        vector_fraction: v.get("vector_fraction")?.as_f64()?,
+        vectorized: v.get("vectorized")?.as_bool()?,
+        l1d_miss_rate: v.get("l1d_miss_rate")?.as_f64()?,
+        ipc: v.get("ipc")?.as_f64()?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> RunRecord {
+        RunRecord {
+            bench: "stream_triad",
+            group: Group::Right,
+            isa: Isa::Sve(512),
+            cycles: 123_456,
+            insts: 98_765,
+            vector_fraction: 0.9375,
+            vectorized: true,
+            l1d_miss_rate: f64::from_bits(0x3fb999999999999a), // ~0.1, awkward bits
+            ipc: 1.75,
+        }
+    }
+
+    #[test]
+    fn record_roundtrip_is_bitwise() {
+        let r = sample();
+        let v = record_to_json("deadbeefdeadbeef", &r);
+        let back = record_from_json(&Json::parse(&v.render_pretty()).unwrap()).unwrap();
+        assert_eq!(back.bench, r.bench);
+        assert_eq!(back.group, r.group);
+        assert_eq!(back.isa, r.isa);
+        assert_eq!(back.cycles, r.cycles);
+        assert_eq!(back.insts, r.insts);
+        assert_eq!(back.vector_fraction.to_bits(), r.vector_fraction.to_bits());
+        assert_eq!(back.vectorized, r.vectorized);
+        assert_eq!(back.l1d_miss_rate.to_bits(), r.l1d_miss_rate.to_bits());
+        assert_eq!(back.ipc.to_bits(), r.ipc.to_bits());
+    }
+
+    #[test]
+    fn keys_separate_every_dimension() {
+        let cfg = UarchConfig::default();
+        let base = job_key("stream_triad", Isa::Sve(256), &cfg);
+        assert_eq!(base.len(), 16);
+        assert_ne!(base, job_key("haccmk", Isa::Sve(256), &cfg));
+        assert_ne!(base, job_key("stream_triad", Isa::Sve(512), &cfg));
+        assert_ne!(base, job_key("stream_triad", Isa::Neon, &cfg));
+        let mut slow = UarchConfig::default();
+        slow.mem_lat += 1;
+        assert_ne!(base, job_key("stream_triad", Isa::Sve(256), &slow));
+    }
+
+    #[test]
+    fn store_save_load_and_miss_semantics() {
+        let dir = std::env::temp_dir()
+            .join(format!("sve-store-test-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let st = JobStore::open(&dir).unwrap();
+        let r = sample();
+        let key = job_key(r.bench, r.isa, &UarchConfig::default());
+        assert!(st.load(&key, r.bench, r.isa).is_none(), "empty store misses");
+        st.save(&key, &r).unwrap();
+        let got = st.load(&key, r.bench, r.isa).unwrap();
+        assert_eq!(got.cycles, r.cycles);
+        // identity mismatch -> miss, not a wrong answer
+        assert!(st.load(&key, "haccmk", r.isa).is_none());
+        assert!(st.load(&key, r.bench, Isa::Sve(256)).is_none());
+        // corrupt file -> miss
+        std::fs::write(st.job_path(&key), "not json").unwrap();
+        assert!(st.load(&key, r.bench, r.isa).is_none());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn fnv1a_known_vectors() {
+        // standard FNV-1a test vectors
+        assert_eq!(fnv1a(b""), 0xcbf29ce484222325);
+        assert_eq!(fnv1a(b"a"), 0xaf63dc4c8601ec8c);
+        assert_eq!(fnv1a(b"foobar"), 0x85944171f73967e8);
+    }
+}

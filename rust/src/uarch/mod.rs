@@ -1,5 +1,16 @@
-//! Trace-driven out-of-order timing model configured per Table 2, plus
-//! the cycle-by-cycle trace renderer behind Fig. 3.
+//! Trace-driven out-of-order timing model, plus the cycle-by-cycle
+//! trace renderer behind Fig. 3.
+//!
+//! The model consumes the functional executor's retire stream: the
+//! executor calls back once per retired instruction and the
+//! [`Pipeline`] charges decode/issue/execute/retire cycles against a
+//! "typical, medium sized, out-of-order microprocessor" — caches,
+//! schedulers, ROB and port widths exactly as in the paper's Table 2
+//! ([`UarchConfig::default`]), with the §5 prose rules for cache-line
+//! splits and VL-proportional cross-lane penalties. The model is fully
+//! deterministic: identical (program, VL, config) inputs produce
+//! identical cycle counts, which is what lets the sweep coordinator
+//! cache and resume jobs bit-identically.
 
 pub mod cache;
 pub mod config;
@@ -13,6 +24,30 @@ use crate::asm::Program;
 use crate::exec::{Executor, RunStats, Trap};
 
 /// Run `prog` functionally and through the timing model in one pass.
+///
+/// Returns the functional view (instruction counts) alongside the
+/// timing view (cycles, cache statistics, IPC):
+///
+/// ```
+/// use sve_repro::asm::Asm;
+/// use sve_repro::exec::Executor;
+/// use sve_repro::isa::Inst;
+/// use sve_repro::mem::Memory;
+/// use sve_repro::uarch::{run_timed, UarchConfig};
+///
+/// let mut a = Asm::new();
+/// a.push(Inst::MovImm { xd: 0, imm: 7 });
+/// a.push(Inst::AddImm { xd: 1, xn: 0, imm: 35 });
+/// a.push(Inst::Halt);
+/// let prog = a.finish();
+///
+/// let mut ex = Executor::new(256, Memory::new());
+/// let (stats, timing) =
+///     run_timed(&mut ex, &prog, UarchConfig::default(), 1_000).unwrap();
+/// assert_eq!(stats.insts, 3);
+/// assert_eq!(ex.state.x[1], 42);
+/// assert!(timing.cycles > 0);
+/// ```
 pub fn run_timed(
     ex: &mut Executor,
     prog: &Program,

@@ -33,6 +33,31 @@ impl Group {
             Group::Right => "right (vectorized, scales)",
         }
     }
+
+    /// Machine-readable name, used in report artifacts and job files.
+    pub fn short(self) -> &'static str {
+        match self {
+            Group::Left => "left",
+            Group::Middle => "middle",
+            Group::Right => "right",
+        }
+    }
+
+    /// Inverse of [`Group::short`].
+    ///
+    /// ```
+    /// use sve_repro::workloads::Group;
+    /// assert_eq!(Group::from_short("middle"), Some(Group::Middle));
+    /// assert_eq!(Group::from_short("center"), None);
+    /// ```
+    pub fn from_short(s: &str) -> Option<Group> {
+        match s {
+            "left" => Some(Group::Left),
+            "middle" => Some(Group::Middle),
+            "right" => Some(Group::Right),
+            _ => None,
+        }
+    }
 }
 
 /// What to simulate.
@@ -129,7 +154,15 @@ pub const NAMES: [&str; 12] = [
     "haccmk", "himenobmt", "stream_triad", "lulesh_hour", "spmv_ell", "strlen1m", // right
 ];
 
-/// Build a workload by name (panics on unknown names).
+/// Build a workload by name (panics on unknown names — the CLI
+/// validates user input against [`NAMES`] before calling this).
+///
+/// ```
+/// use sve_repro::{compiler::Target, workloads};
+/// let w = workloads::build("stream_triad");
+/// assert_eq!(w.name, "stream_triad");
+/// assert!(w.compile(Target::Sve).vectorized);
+/// ```
 pub fn build(name: &str) -> Workload {
     match name {
         "graph500" => graph500(),

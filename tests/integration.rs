@@ -1,9 +1,44 @@
 //! End-to-end integration tests: the full pipeline (IR -> vectorizer ->
-//! codegen -> functional execution -> timing -> validation) plus the
-//! PJRT golden cross-check.
+//! codegen -> functional execution -> timing -> validation), the
+//! sharded/resumable sweep driver, the CLI's exit-code contract, and
+//! the PJRT golden cross-check.
 
-use sve_repro::coordinator::{run_fig8, run_one, Isa};
+use std::path::PathBuf;
+use std::process::Command;
+
+use sve_repro::coordinator::{
+    run_fig8, run_fig8_sequential, run_one, run_sweep, Fig8Row, Isa, SweepConfig,
+};
+use sve_repro::report::store::job_key;
+use sve_repro::uarch::UarchConfig;
 use sve_repro::workloads;
+
+fn temp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("sve-itest-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn assert_rows_bit_identical(a: &[Fig8Row], b: &[Fig8Row]) {
+    assert_eq!(a.len(), b.len());
+    for (ra, rb) in a.iter().zip(b) {
+        assert_eq!(ra.bench, rb.bench);
+        assert_eq!(ra.group, rb.group);
+        assert_eq!(ra.extra_vectorization.to_bits(), rb.extra_vectorization.to_bits());
+        let pairs =
+            std::iter::once((&ra.neon, &rb.neon)).chain(ra.sve.iter().zip(rb.sve.iter()));
+        for (x, y) in pairs {
+            assert_eq!(x.bench, y.bench);
+            assert_eq!(x.isa, y.isa);
+            assert_eq!(x.cycles, y.cycles, "{} {}", x.bench, x.isa.label());
+            assert_eq!(x.insts, y.insts);
+            assert_eq!(x.vectorized, y.vectorized);
+            assert_eq!(x.vector_fraction.to_bits(), y.vector_fraction.to_bits());
+            assert_eq!(x.l1d_miss_rate.to_bits(), y.l1d_miss_rate.to_bits());
+            assert_eq!(x.ipc.to_bits(), y.ipc.to_bits());
+        }
+    }
+}
 
 #[test]
 fn mini_fig8_sweep_end_to_end() {
@@ -17,6 +52,44 @@ fn mini_fig8_sweep_end_to_end() {
     let g500 = &rows[1];
     assert!((0.9..1.1).contains(&g500.speedup(1)), "graph500 flat");
     assert_eq!(g500.extra_vectorization, 0.0);
+}
+
+/// The acceptance pin: the sharded, persisted, resumed sweep emits rows
+/// bit-identical to the plain sequential in-process sweep, and resuming
+/// reloads every completed job instead of re-simulating it.
+#[test]
+fn sharded_resumed_sweep_bit_identical_to_sequential() {
+    let vls = [128usize, 512];
+    let names = ["haccmk", "stream_triad", "graph500"];
+    let seq = run_fig8_sequential(&vls, &names).expect("sequential sweep");
+
+    let dir = temp_dir("resume");
+    let mut cfg = SweepConfig::new(&vls, &names);
+    cfg.jobs = 4;
+    cfg.out_dir = Some(dir.clone());
+
+    // cold run: everything simulated, rows match the sequential reference
+    let cold = run_sweep(&cfg).expect("cold sweep");
+    assert_eq!((cold.simulated, cold.reloaded), (9, 0));
+    assert_rows_bit_identical(&seq, &cold.rows);
+
+    // resumed run: nothing simulated, rows still bit-identical
+    cfg.resume = true;
+    let warm = run_sweep(&cfg).expect("warm sweep");
+    assert_eq!((warm.simulated, warm.reloaded), (0, 9));
+    assert_rows_bit_identical(&seq, &warm.rows);
+
+    // delete exactly one job file: only that job recomputes
+    let key = job_key("stream_triad", Isa::Sve(512), &UarchConfig::default());
+    let victim = dir.join("jobs").join(format!("{key}.json"));
+    assert!(victim.exists(), "expected job file {victim:?}");
+    std::fs::remove_file(&victim).unwrap();
+    let patched = run_sweep(&cfg).expect("patched sweep");
+    assert_eq!((patched.simulated, patched.reloaded), (1, 8));
+    assert_rows_bit_identical(&seq, &patched.rows);
+    assert!(victim.exists(), "recomputed job must be re-persisted");
+
+    let _ = std::fs::remove_dir_all(&dir);
 }
 
 #[test]
@@ -38,6 +111,69 @@ fn scalar_is_never_faster_than_the_chosen_vector_code() {
             v.cycles,
             s.cycles
         );
+    }
+}
+
+// ---------------------------------------------------------------------
+// CLI exit-code contract: 0 ok, 1 runtime failure, 2 usage error
+// ---------------------------------------------------------------------
+
+fn sve(args: &[&str]) -> std::process::Output {
+    Command::new(env!("CARGO_BIN_EXE_sve")).args(args).output().expect("spawn sve")
+}
+
+#[test]
+fn cli_usage_errors_exit_2_without_panicking() {
+    for (args, needle) in [
+        (&["frobnicate"][..], "unknown command"),
+        (&["run", "nosuchbench"][..], "unknown benchmark"),
+        (&["run"][..], "usage: sve run"),
+        (&["run", "stream_triad", "--vl", "abc"][..], "not a number"),
+        (&["run", "stream_triad", "--vl", "192"][..], "illegal"),
+        (&["run", "stream_triad", "--isa", "neon", "--vl", "abc"][..], "not a number"),
+        (&["run", "stream_triad", "--isa", "avx"][..], "unknown --isa"),
+        (&["trace", "nosuchbench"][..], "unknown benchmark"),
+        (&["sweep", "--vls", "128,xyz"][..], "not a number"),
+        (&["sweep", "--vls", "4096"][..], "illegal"),
+        (&["sweep", "--jobs", "many"][..], "not a number"),
+        (&["sweep", "--benches", "nosuchbench"][..], "unknown benchmark"),
+    ] {
+        let out = sve(args);
+        assert_eq!(
+            out.status.code(),
+            Some(2),
+            "sve {args:?}: expected exit 2, got {:?}\nstderr: {}",
+            out.status.code(),
+            String::from_utf8_lossy(&out.stderr)
+        );
+        let stderr = String::from_utf8_lossy(&out.stderr);
+        assert!(
+            stderr.contains(needle),
+            "sve {args:?}: stderr missing '{needle}': {stderr}"
+        );
+        assert!(
+            stderr.contains("usage: sve"),
+            "sve {args:?}: usage text missing from stderr"
+        );
+        assert!(
+            !stderr.contains("panicked"),
+            "sve {args:?}: must not panic: {stderr}"
+        );
+    }
+}
+
+#[test]
+fn cli_help_and_list_exit_0() {
+    for args in [&[][..], &["help"][..], &["--help"][..]] {
+        let out = sve(args);
+        assert_eq!(out.status.code(), Some(0), "sve {args:?}");
+        assert!(String::from_utf8_lossy(&out.stdout).contains("usage: sve"));
+    }
+    let out = sve(&["list"]);
+    assert_eq!(out.status.code(), Some(0));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    for name in workloads::NAMES {
+        assert!(stdout.contains(name), "list missing {name}");
     }
 }
 

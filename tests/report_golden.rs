@@ -1,0 +1,101 @@
+//! Golden-file tests for the Fig. 8 report emitters: the JSON, CSV and
+//! Markdown renderings of a fixed synthetic row set are pinned
+//! byte-for-byte against `tests/golden/fig8.{json,csv,md}`. Synthetic
+//! inputs (rather than simulated ones) keep the goldens independent of
+//! the timing model, so this suite fails only when the *emitters*
+//! change — at which point the golden files must be updated in the same
+//! commit, making every artifact-format change reviewable.
+//!
+//! All float inputs are dyadic rationals, so their shortest-round-trip
+//! renderings are short and platform-independent.
+
+use sve_repro::coordinator::{Fig8Row, Isa, RunRecord};
+use sve_repro::report::fig8;
+use sve_repro::report::json::Json;
+use sve_repro::workloads::Group;
+
+const VLS: [usize; 2] = [128, 256];
+
+#[allow(clippy::too_many_arguments)]
+fn rec(
+    bench: &'static str,
+    group: Group,
+    isa: Isa,
+    cycles: u64,
+    insts: u64,
+    ipc: f64,
+    vectorized: bool,
+    vector_fraction: f64,
+    l1d_miss_rate: f64,
+) -> RunRecord {
+    RunRecord { bench, group, isa, cycles, insts, vector_fraction, vectorized, l1d_miss_rate, ipc }
+}
+
+/// Must stay in sync with the generator notes in `tests/golden/`.
+fn rows() -> Vec<Fig8Row> {
+    let triad_neon =
+        rec("stream_triad", Group::Right, Isa::Neon, 1000, 10000, 1.5, true, 0.5, 0.125);
+    let triad_sve = vec![
+        rec("stream_triad", Group::Right, Isa::Sve(128), 800, 9000, 2.5, true, 0.75, 0.0625),
+        rec("stream_triad", Group::Right, Isa::Sve(256), 400, 4500, 3.5, true, 0.75, 0.03125),
+    ];
+    let g500_neon =
+        rec("graph500", Group::Left, Isa::Neon, 2000, 20000, 0.5, false, 0.0, 0.25);
+    let g500_sve = vec![
+        rec("graph500", Group::Left, Isa::Sve(128), 2000, 20000, 0.5, false, 0.0, 0.25),
+        rec("graph500", Group::Left, Isa::Sve(256), 2000, 20000, 0.5, false, 0.0, 0.25),
+    ];
+    vec![
+        Fig8Row {
+            bench: "stream_triad",
+            group: Group::Right,
+            neon: triad_neon,
+            sve: triad_sve,
+            extra_vectorization: 0.25,
+        },
+        Fig8Row {
+            bench: "graph500",
+            group: Group::Left,
+            neon: g500_neon,
+            sve: g500_sve,
+            extra_vectorization: 0.0,
+        },
+    ]
+}
+
+#[test]
+fn fig8_json_matches_golden_and_roundtrips() {
+    let v = fig8::to_json(&rows(), &VLS);
+    let rendered = v.render_pretty();
+    assert_eq!(rendered, include_str!("golden/fig8.json"), "fig8.json emitter drifted");
+    // round-trip: the artifact parses back to the identical value tree
+    assert_eq!(Json::parse(&rendered).unwrap(), v);
+}
+
+#[test]
+fn fig8_csv_matches_golden() {
+    let csv = fig8::table(&rows(), &VLS).to_csv();
+    assert_eq!(csv, include_str!("golden/fig8.csv"), "fig8.csv emitter drifted");
+}
+
+#[test]
+fn fig8_markdown_matches_golden() {
+    let md = fig8::to_markdown(&rows(), &VLS);
+    assert_eq!(md, include_str!("golden/fig8.md"), "fig8.md emitter drifted");
+}
+
+#[test]
+fn artifact_writer_emits_the_same_bytes() {
+    let dir =
+        std::env::temp_dir().join(format!("sve-golden-artifacts-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let paths = fig8::write_artifacts(&rows(), &VLS, &dir).unwrap();
+    let by_name = |suffix: &str| {
+        let p = paths.iter().find(|p| p.to_string_lossy().ends_with(suffix)).unwrap();
+        std::fs::read_to_string(p).unwrap()
+    };
+    assert_eq!(by_name("fig8.json"), include_str!("golden/fig8.json"));
+    assert_eq!(by_name("fig8.csv"), include_str!("golden/fig8.csv"));
+    assert_eq!(by_name("fig8.md"), include_str!("golden/fig8.md"));
+    let _ = std::fs::remove_dir_all(&dir);
+}
