@@ -1,0 +1,63 @@
+//! The design-space sweep as an end-to-end bench: three core sizes
+//! (small-core / table2 / big-core) across the Fig. 8 matrix for a
+//! bandwidth-bound subset, with JSON/CSV/Markdown artifacts under
+//! reports/ and PPA-shape assertions — resources scaled down must never
+//! make a benchmark faster, resources scaled up must never make it
+//! slower.
+//!
+//!     cargo bench --bench dse_sweep             # full 3-variant matrix
+//!     cargo bench --bench dse_sweep -- --resume # reuse cached jobs
+
+use std::time::Instant;
+use sve_repro::coordinator::{run_dse, SweepConfig};
+use sve_repro::report::dse;
+use sve_repro::uarch::parse_variants;
+
+fn main() {
+    let vls = [128usize, 256, 512];
+    let names = ["stream_triad", "haccmk", "lulesh_hour", "graph500"];
+    let mut cfg = SweepConfig::new(&vls, &names);
+    cfg.out_dir = Some("reports".into());
+    cfg.resume = std::env::args().any(|a| a == "--resume");
+    let variants = parse_variants("small-core,table2,big-core").expect("variant spec");
+    let t0 = Instant::now();
+    let outcome = run_dse(&cfg, &variants).expect("dse sweep failed");
+    let dt = t0.elapsed();
+    println!("{}", dse::pivot(&outcome.variants, &vls).to_markdown());
+    for p in dse::write_artifacts(&outcome.variants, &vls, "reports").expect("write artifacts")
+    {
+        println!("wrote {}", p.display());
+    }
+    println!(
+        "dse sweep ({} variants x {} benchmarks x (1 NEON + {} SVE VLs), {} simulated + \
+         {} cached, every run validated) in {:.1}s",
+        variants.len(),
+        names.len(),
+        vls.len(),
+        outcome.simulated,
+        outcome.reloaded,
+        dt.as_secs_f64()
+    );
+    // PPA-shape assertions: cycle counts must respond monotonically to
+    // resources on the bandwidth-bound kernel
+    let cycles = |vi: usize, bench: &str| {
+        let row = outcome.variants[vi].rows.iter().find(|r| r.bench == bench).unwrap();
+        (row.neon.cycles, row.sve.last().unwrap().cycles)
+    };
+    for bench in ["stream_triad", "haccmk"] {
+        let small = cycles(0, bench);
+        let t2 = cycles(1, bench);
+        let big = cycles(2, bench);
+        assert!(small.0 >= t2.0 && small.1 >= t2.1, "{bench}: small-core beat table2");
+        assert!(t2.0 >= big.0 && t2.1 >= big.1, "{bench}: table2 beat big-core");
+    }
+    // graph500 is a dependent pointer chase: core width cannot help it
+    let (g_small, _) = cycles(0, "graph500");
+    let (g_big, _) = cycles(2, "graph500");
+    let ratio = g_small as f64 / g_big as f64;
+    assert!(
+        ratio < 1.5,
+        "graph500 must stay latency-bound across core sizes: {ratio:.2}"
+    );
+    println!("shape assertions PASS");
+}

@@ -1,21 +1,26 @@
 //! Sweep coordinator: the driver behind the paper's headline experiment.
 //!
-//! The Fig. 8 sweep is a (benchmark × ISA × VL) job matrix. This module
-//! turns that matrix into an explicit list of [`Job`]s, shards it across
-//! a self-scheduling thread pool ([`run_sweep`]), validates every run's
-//! architectural results, and — when an output directory is configured —
-//! persists each job's [`RunRecord`] under a content-hash key so later
-//! invocations can **resume** instead of re-simulating (see
-//! [`crate::report::store`]).
+//! The Fig. 8 sweep is a (benchmark × ISA × VL) job matrix; the
+//! design-space sweep behind `sve dse` adds a fourth axis, the
+//! microarchitecture variant ([`crate::uarch::UarchVariant`]). This
+//! module turns that matrix into an explicit list of [`Job`]s, shards
+//! it across a self-scheduling thread pool ([`run_dse`]), validates
+//! every run's architectural results, and — when an output directory is
+//! configured — persists each job's [`RunRecord`] under a content-hash
+//! key so later invocations can **resume** instead of re-simulating
+//! (see [`crate::report::store`]).
 //!
-//! Three entry points, from low to high level:
+//! Entry points, from low to high level:
 //!
 //! * [`run_one`] / [`run_compiled`] — one (workload, ISA, VL) job.
 //! * [`run_fig8_sequential`] — the plain in-process reference loop; the
 //!   sharded engine is pinned bit-identical to it by tests.
-//! * [`run_sweep`] — the production driver: sharded, resumable,
-//!   cache-aware. [`run_fig8`] is the convenience wrapper used by tests
-//!   and benches.
+//! * [`run_sweep`] — the Fig. 8 production driver: sharded, resumable,
+//!   cache-aware, at one microarchitecture. [`run_fig8`] is the
+//!   convenience wrapper used by tests and benches.
+//! * [`run_dse`] — the full design-space driver: the same engine over
+//!   (variant × benchmark × ISA × VL). [`run_sweep`] is exactly
+//!   [`run_dse`] with a single variant.
 //!
 //! Determinism is the load-bearing property: the simulator is fully
 //! deterministic, every job is independent, and results are assembled
@@ -30,7 +35,7 @@ use std::sync::Mutex;
 use crate::compiler::{Compiled, Target};
 use crate::exec::Executor;
 use crate::report::store::{job_key, JobStore};
-use crate::uarch::{run_timed, UarchConfig};
+use crate::uarch::{run_timed, UarchConfig, UarchVariant};
 use crate::workloads::{self, Group, Workload};
 
 /// One simulated configuration.
@@ -176,6 +181,8 @@ impl Fig8Row {
 pub struct Job {
     pub bench: &'static str,
     pub isa: Isa,
+    /// Index into the sweep's variant list (always 0 for [`run_sweep`]).
+    pub variant: usize,
 }
 
 /// Configuration for [`run_sweep`].
@@ -221,6 +228,27 @@ pub struct SweepOutcome {
     pub reloaded: usize,
 }
 
+/// One microarchitecture variant's complete Fig. 8 row set within a
+/// design-space sweep.
+#[derive(Clone, Debug)]
+pub struct VariantRows {
+    /// Display name, e.g. `table2` or `small-core+l2_bytes=524288`.
+    pub name: String,
+    /// The configuration the rows were timed under.
+    pub uarch: UarchConfig,
+    pub rows: Vec<Fig8Row>,
+}
+
+/// What [`run_dse`] did: per-variant rows, in the variant order given.
+#[derive(Clone, Debug)]
+pub struct DseOutcome {
+    pub variants: Vec<VariantRows>,
+    /// Jobs actually simulated this invocation.
+    pub simulated: usize,
+    /// Jobs reloaded from the on-disk cache.
+    pub reloaded: usize,
+}
+
 fn worker_count(requested: usize, pending: usize) -> usize {
     let n = if requested == 0 {
         std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
@@ -230,17 +258,42 @@ fn worker_count(requested: usize, pending: usize) -> usize {
     n.clamp(1, pending.max(1))
 }
 
-/// The production sweep driver: shard the (benchmark × ISA × VL) job
-/// matrix across a self-scheduling thread pool, reusing cached job
-/// records when resuming. Results are deterministic and independent of
-/// `jobs`, scheduling order, and cache state (pinned by tests against
-/// [`run_fig8_sequential`]).
+/// The Fig. 8 production sweep driver: [`run_dse`] at a single
+/// microarchitecture point (`cfg.uarch`). Results are deterministic and
+/// independent of `jobs`, scheduling order, and cache state (pinned by
+/// tests against [`run_fig8_sequential`]).
 pub fn run_sweep(cfg: &SweepConfig) -> Result<SweepOutcome, String> {
+    // label the single design point honestly in diagnostics: "table2"
+    // only when it actually is the paper's configuration
+    let name = if cfg.uarch == UarchConfig::default() { "table2" } else { "custom" };
+    let variant = UarchVariant { name: name.into(), cfg: cfg.uarch.clone() };
+    let mut dse = run_dse(cfg, std::slice::from_ref(&variant))?;
+    let rows = dse.variants.pop().expect("single-variant sweep has one row set").rows;
+    Ok(SweepOutcome { rows, simulated: dse.simulated, reloaded: dse.reloaded })
+}
+
+/// The design-space sweep driver: shard the full
+/// (variant × benchmark × ISA × VL) job matrix across one
+/// self-scheduling thread pool, reusing cached job records when
+/// resuming. `cfg.uarch` is ignored — each job is timed under its
+/// variant's configuration, and each job's cache key covers that
+/// configuration (`job_key`), so design points never collide in
+/// `<out>/jobs/` and a `table2` variant shares cache entries with plain
+/// `sve sweep` runs over the same matrix.
+///
+/// Workloads are built and programs compiled **once per benchmark**,
+/// shared read-only across every variant and VL — programs depend only
+/// on the target ISA, never on the timing model, and SVE binaries are
+/// VL-agnostic (§2.2).
+pub fn run_dse(cfg: &SweepConfig, variants: &[UarchVariant]) -> Result<DseOutcome, String> {
     if cfg.vls.is_empty() {
         return Err("sweep needs at least one vector length".into());
     }
     if cfg.names.is_empty() {
         return Err("sweep needs at least one benchmark".into());
+    }
+    if variants.is_empty() {
+        return Err("design-space sweep needs at least one µarch variant".into());
     }
     for &vl in &cfg.vls {
         if !crate::vl_is_legal(vl) {
@@ -252,6 +305,10 @@ pub fn run_sweep(cfg: &SweepConfig) -> Result<SweepOutcome, String> {
             return Err(format!("unknown benchmark '{name}'"));
         }
     }
+    // same rules as parse_variants: unique names, unique configs,
+    // realizable geometry (an unrealizable one panics every worker) —
+    // API callers constructing variants directly get an Err, not a panic
+    crate::uarch::check_variants(variants)?;
     let store = match &cfg.out_dir {
         Some(dir) => {
             Some(JobStore::open(dir).map_err(|e| format!("open job store in {dir:?}: {e}"))?)
@@ -259,12 +316,17 @@ pub fn run_sweep(cfg: &SweepConfig) -> Result<SweepOutcome, String> {
         None => None,
     };
 
-    // the job matrix, in deterministic (bench-major, NEON first) order
-    let mut jobs: Vec<Job> = Vec::with_capacity(cfg.names.len() * (1 + cfg.vls.len()));
-    for &name in &cfg.names {
-        jobs.push(Job { bench: name, isa: Isa::Neon });
-        for &vl in &cfg.vls {
-            jobs.push(Job { bench: name, isa: Isa::Sve(vl) });
+    // the job matrix, in deterministic (variant-major, then bench-major,
+    // NEON first) order
+    let stride = 1 + cfg.vls.len(); // jobs per benchmark
+    let block = cfg.names.len() * stride; // jobs per variant
+    let mut jobs: Vec<Job> = Vec::with_capacity(variants.len() * block);
+    for vi in 0..variants.len() {
+        for &name in &cfg.names {
+            jobs.push(Job { bench: name, isa: Isa::Neon, variant: vi });
+            for &vl in &cfg.vls {
+                jobs.push(Job { bench: name, isa: Isa::Sve(vl), variant: vi });
+            }
         }
     }
 
@@ -275,7 +337,7 @@ pub fn run_sweep(cfg: &SweepConfig) -> Result<SweepOutcome, String> {
     for (i, job) in jobs.iter().enumerate() {
         if cfg.resume {
             if let Some(st) = &store {
-                let key = job_key(job.bench, job.isa, &cfg.uarch);
+                let key = job_key(job.bench, job.isa, &variants[job.variant].cfg);
                 if let Some(r) = st.load(&key, job.bench, job.isa) {
                     records[i] = Some(r);
                     reloaded += 1;
@@ -287,18 +349,17 @@ pub fn run_sweep(cfg: &SweepConfig) -> Result<SweepOutcome, String> {
     }
 
     // build each workload and compile each needed target ONCE per
-    // benchmark, shared read-only across all of its jobs — SVE binaries
-    // are VL-agnostic (§2.2), so the whole VL column reuses one program.
+    // benchmark, shared read-only across all of its jobs — across every
+    // variant too, since programs don't depend on the timing model.
     // Benchmarks whose jobs were all reloaded from cache skip this.
     struct Prep {
         w: Workload,
         neon: Compiled,
         sve: Compiled,
     }
-    let stride = 1 + cfg.vls.len();
     let mut preps: Vec<Option<Prep>> = Vec::with_capacity(cfg.names.len());
     for (bi, &name) in cfg.names.iter().enumerate() {
-        if pending.iter().any(|&i| i / stride == bi) {
+        if pending.iter().any(|&i| (i % block) / stride == bi) {
             let w = workloads::build(name);
             let neon = w.compile(Target::Neon);
             let sve = w.compile(Target::Sve);
@@ -329,16 +390,17 @@ pub fn run_sweep(cfg: &SweepConfig) -> Result<SweepOutcome, String> {
                 // process (thread::scope re-raises worker panics)
                 let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
                     || -> Result<RunRecord, String> {
-                        let prep = preps[i / stride]
+                        let prep = preps[(i % block) / stride]
                             .as_ref()
                             .ok_or_else(|| format!("{}: missing prep", job.bench))?;
                         let compiled = match job.isa {
                             Isa::Neon => &prep.neon,
                             _ => &prep.sve,
                         };
-                        let r = run_compiled_with(&prep.w, compiled, job.isa, &cfg.uarch)?;
+                        let uarch = &variants[job.variant].cfg;
+                        let r = run_compiled_with(&prep.w, compiled, job.isa, uarch)?;
                         if let Some(st) = &store {
-                            let key = job_key(job.bench, job.isa, &cfg.uarch);
+                            let key = job_key(job.bench, job.isa, uarch);
                             st.save(&key, &r).map_err(|e| {
                                 format!("persist {}/{}: {e}", job.bench, job.isa.label())
                             })?;
@@ -358,26 +420,32 @@ pub fn run_sweep(cfg: &SweepConfig) -> Result<SweepOutcome, String> {
     }
 
     // assemble rows in matrix order — independent of completion order
-    let mut rows = Vec::with_capacity(cfg.names.len());
-    for (bi, &name) in cfg.names.iter().enumerate() {
-        let neon = records[bi * stride].take().ok_or_else(|| format!("{name}: neon job lost"))?;
-        let sve: Vec<RunRecord> = (0..cfg.vls.len())
-            .map(|vi| {
-                records[bi * stride + 1 + vi]
-                    .take()
-                    .ok_or_else(|| format!("{name}: sve job {vi} lost"))
-            })
-            .collect::<Result<_, String>>()?;
-        let extra = (sve[0].vector_fraction - neon.vector_fraction).max(0.0);
-        rows.push(Fig8Row {
-            bench: name,
-            group: neon.group,
-            neon,
-            sve,
-            extra_vectorization: extra,
-        });
+    let mut out = Vec::with_capacity(variants.len());
+    for (vi, variant) in variants.iter().enumerate() {
+        let mut rows = Vec::with_capacity(cfg.names.len());
+        for (bi, &name) in cfg.names.iter().enumerate() {
+            let base = vi * block + bi * stride;
+            let neon =
+                records[base].take().ok_or_else(|| format!("{name}: neon job lost"))?;
+            let sve: Vec<RunRecord> = (0..cfg.vls.len())
+                .map(|i| {
+                    records[base + 1 + i]
+                        .take()
+                        .ok_or_else(|| format!("{name}: sve job {i} lost"))
+                })
+                .collect::<Result<_, String>>()?;
+            let extra = (sve[0].vector_fraction - neon.vector_fraction).max(0.0);
+            rows.push(Fig8Row {
+                bench: name,
+                group: neon.group,
+                neon,
+                sve,
+                extra_vectorization: extra,
+            });
+        }
+        out.push(VariantRows { name: variant.name.clone(), uarch: variant.cfg.clone(), rows });
     }
-    Ok(SweepOutcome { rows, simulated, reloaded })
+    Ok(DseOutcome { variants: out, simulated, reloaded })
 }
 
 /// Run the full Fig. 8 sweep (all benchmarks × NEON + SVE at `vls`)
@@ -484,6 +552,43 @@ mod tests {
         assert!(run_sweep(&SweepConfig::new(&[192], &["haccmk"])).is_err());
         // unknown names are an Err, not a worker panic/abort
         assert!(run_sweep(&SweepConfig::new(&[256], &["nosuchbench"])).is_err());
+        // and the variant axis rejects empty/duplicate variant lists
+        let cfg = SweepConfig::new(&[256], &["haccmk"]);
+        assert!(run_dse(&cfg, &[]).is_err());
+        let v = UarchVariant { name: "table2".into(), cfg: UarchConfig::default() };
+        assert!(run_dse(&cfg, &[v.clone(), v]).is_err());
+    }
+
+    #[test]
+    fn dse_table2_variant_is_bit_identical_to_plain_sweep() {
+        let vls = [128usize, 512];
+        let names = ["stream_triad", "haccmk"];
+        let cfg = SweepConfig::new(&vls, &names);
+        let plain = run_sweep(&cfg).unwrap();
+        let variants = crate::uarch::parse_variants("table2,small-core").unwrap();
+        let dse = run_dse(&cfg, &variants).unwrap();
+        assert_eq!(dse.simulated, 2 * names.len() * (1 + vls.len()));
+        assert_eq!(dse.variants.len(), 2);
+        assert_eq!(dse.variants[0].name, "table2");
+        for (a, b) in plain.rows.iter().zip(&dse.variants[0].rows) {
+            assert_eq!(a.bench, b.bench);
+            assert_eq!(a.neon.cycles, b.neon.cycles);
+            for (ra, rb) in a.sve.iter().zip(&b.sve) {
+                assert_eq!(ra.cycles, rb.cycles);
+                assert_eq!(ra.insts, rb.insts);
+            }
+        }
+        // the variant axis is real: a halved core times differently,
+        // while functional results (instruction counts) are untouched
+        let t2 = &dse.variants[0].rows[0];
+        let small = &dse.variants[1].rows[0];
+        assert_eq!(t2.neon.insts, small.neon.insts);
+        assert!(
+            small.neon.cycles > t2.neon.cycles,
+            "small-core must be slower on stream_triad: {} vs {}",
+            small.neon.cycles,
+            t2.neon.cycles
+        );
     }
 
     #[test]

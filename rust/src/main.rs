@@ -5,15 +5,21 @@
 //! sve run <bench> [--isa scalar|neon|sve] [--vl BITS]   one benchmark
 //! sve sweep [--vls 128,256,512] [--benches a,b] [--out reports]
 //!           [--jobs N] [--resume]                       the Fig. 8 sweep
+//! sve dse [--uarch table2,small-core,...] [--vls ...]   design-space sweep
+//!         [--benches a,b] [--out reports] [--jobs N] [--resume]
 //! sve report [--out reports] [--vls ...] [--jobs N]     all figure artifacts
+//! sve report --compare A.json B.json [--fail-on-regress PCT]
+//!                                                       diff two artifacts
 //! sve trace <bench> [--vl BITS] [--limit N]             Fig. 3-style trace
 //! sve encoding                                          Fig. 7 terminal report
 //! sve validate [--artifacts DIR]                        PJRT cross-check
 //! ```
 //!
 //! Exit codes: `0` success, `1` runtime failure (a simulation trapped,
-//! validation failed), `2` usage error (unknown subcommand/benchmark,
-//! malformed or illegal `--vl`/`--isa`/`--jobs` values).
+//! validation failed, an artifact is unreadable, or `--compare` found a
+//! regression beyond `--fail-on-regress`), `2` usage error (unknown
+//! subcommand/benchmark/variant, malformed or illegal
+//! `--vl`/`--isa`/`--jobs`/`--uarch` values).
 
 use std::path::PathBuf;
 
@@ -22,7 +28,9 @@ use sve_repro::csvutil::Table;
 use sve_repro::exec::Executor;
 use sve_repro::isa::encoding;
 use sve_repro::report;
-use sve_repro::uarch::UarchConfig;
+use sve_repro::report::compare::{self, SpeedupPoint};
+use sve_repro::report::json::Json;
+use sve_repro::uarch::{parse_variants, UarchConfig, VARIANT_NAMES};
 use sve_repro::workloads;
 
 const USAGE: &str = "sve — ARM SVE paper reproduction
@@ -40,9 +48,20 @@ commands:
       --out DIR              artifact/cache directory (default reports)
       --jobs N               worker threads (default: one per CPU)
       --resume               reuse completed jobs cached under DIR/jobs/
+  dse                        design-space sweep across uarch variants
+      --uarch a,b[,k=v]      variants: table2, small-core, big-core,
+                             narrow-mem, deep-rob (default: all five);
+                             key=value overrides modify the variant named
+                             before them (l2_bytes=512K, loads_per_cycle=1)
+      --vls/--benches/--out/--jobs/--resume   as for sweep
   report                     emit Fig. 2 + Fig. 7 + Fig. 8 artifacts
       --out DIR  --vls A,B,C  --benches a,b  --jobs N   (as for sweep;
                              the Fig. 8 part always resumes from DIR/jobs/)
+      --compare A.json B.json  diff two fig8/dse artifacts instead of
+                             emitting figures: prints a per-(variant,
+                             bench, VL) speedup delta table
+      --fail-on-regress PCT  with --compare: exit 1 if any speedup drops
+                             more than PCT percent, or a point disappears
   trace <bench>              Fig. 3-style cycle-by-cycle timeline
       --vl BITS  --limit N
   encoding                   Fig. 7 encoding-budget report (terminal)
@@ -50,8 +69,16 @@ commands:
 
 exit codes: 0 ok, 1 runtime failure, 2 usage error";
 
+/// Value of `name`, or `None` when the flag is absent. A flag present
+/// with no trailing value is a usage error, never a silent default —
+/// `--fail-on-regress $PCT` with `PCT` unset in a CI shell must not
+/// quietly disable the regression wall.
 fn flag(args: &[String], name: &str) -> Option<String> {
-    args.iter().position(|a| a == name).and_then(|i| args.get(i + 1).cloned())
+    let i = args.iter().position(|a| a == name)?;
+    match args.get(i + 1) {
+        Some(v) => Some(v.clone()),
+        None => die_usage(&format!("{name} needs a value")),
+    }
 }
 
 fn has_flag(args: &[String], name: &str) -> bool {
@@ -144,6 +171,33 @@ fn sweep_config(args: &[String]) -> (SweepConfig, PathBuf) {
     (cfg, out)
 }
 
+/// Print the written artifact paths and the cache summary line shared
+/// by `sweep`, `report` and `dse` (CI greps the exact
+/// "N simulated, M reloaded" wording — keep it in one place).
+fn emit_paths_and_counts(
+    paths: std::io::Result<Vec<PathBuf>>,
+    what: &str,
+    simulated: usize,
+    reloaded: usize,
+    out: &PathBuf,
+) {
+    match paths {
+        Ok(paths) => {
+            for p in paths {
+                println!("wrote {}", p.display());
+            }
+        }
+        Err(e) => die_run(&format!("write {what} artifacts: {e}")),
+    }
+    println!(
+        "{} jobs: {} simulated, {} reloaded from {}/jobs/",
+        simulated + reloaded,
+        simulated,
+        reloaded,
+        out.display()
+    );
+}
+
 fn run_sweep_and_emit(cfg: &SweepConfig, out: &PathBuf) {
     let outcome = match coordinator::run_sweep(cfg) {
         Ok(o) => o,
@@ -152,21 +206,44 @@ fn run_sweep_and_emit(cfg: &SweepConfig, out: &PathBuf) {
     let t = report::fig8::table(&outcome.rows, &cfg.vls);
     println!("{}", t.to_markdown());
     println!("{}", report::fig8::chart(&outcome.rows, &cfg.vls));
-    match report::fig8::write_artifacts(&outcome.rows, &cfg.vls, out) {
-        Ok(paths) => {
-            for p in paths {
-                println!("wrote {}", p.display());
-            }
-        }
-        Err(e) => die_run(&format!("write artifacts: {e}")),
-    }
-    println!(
-        "{} jobs: {} simulated, {} reloaded from {}/jobs/",
-        outcome.simulated + outcome.reloaded,
+    emit_paths_and_counts(
+        report::fig8::write_artifacts(&outcome.rows, &cfg.vls, out),
+        "fig8",
         outcome.simulated,
         outcome.reloaded,
-        out.display()
+        out,
     );
+}
+
+/// Load an artifact and extract its speedup points, dying with exit 1
+/// (runtime failure) on unreadable/unparseable/unsupported files.
+fn load_points(path: &str) -> Vec<SpeedupPoint> {
+    let text = std::fs::read_to_string(path)
+        .unwrap_or_else(|e| die_run(&format!("read {path}: {e}")));
+    let doc =
+        Json::parse(&text).unwrap_or_else(|e| die_run(&format!("parse {path}: {e}")));
+    compare::extract_points(&doc).unwrap_or_else(|e| die_run(&format!("{path}: {e}")))
+}
+
+/// `sve report --compare A B [--fail-on-regress PCT]`.
+fn run_compare(args: &[String]) -> ! {
+    let i = args.iter().position(|a| a == "--compare").expect("checked by caller");
+    let (a, b) = match (args.get(i + 1), args.get(i + 2)) {
+        (Some(a), Some(b)) if !a.starts_with("--") && !b.starts_with("--") => (a, b),
+        _ => die_usage("--compare needs two artifact paths (A.json B.json)"),
+    };
+    let fail_below_pct = flag(args, "--fail-on-regress").map(|t| match t.parse::<f64>() {
+        Ok(pct) if pct.is_finite() && pct >= 0.0 => pct,
+        _ => die_usage(&format!(
+            "--fail-on-regress '{t}' is not a non-negative number"
+        )),
+    });
+    let cmp = compare::compare(&load_points(a), &load_points(b), fail_below_pct);
+    print!("{}", compare::render(&cmp));
+    if cmp.failed() {
+        die_run("speedup regression beyond threshold (see delta table above)");
+    }
+    std::process::exit(0)
 }
 
 fn main() {
@@ -217,6 +294,33 @@ fn main() {
             let (cfg, out) = sweep_config(&args);
             run_sweep_and_emit(&cfg, &out);
         }
+        "dse" => {
+            let (cfg, out) = sweep_config(&args);
+            let spec =
+                flag(&args, "--uarch").unwrap_or_else(|| VARIANT_NAMES.join(","));
+            let variants = match parse_variants(&spec) {
+                Ok(v) => v,
+                Err(e) => die_usage(&e),
+            };
+            let outcome = match coordinator::run_dse(&cfg, &variants) {
+                Ok(o) => o,
+                Err(e) => die_run(&e),
+            };
+            for v in &outcome.variants {
+                println!("## {}\n", v.name);
+                println!("{}", report::fig8::table(&v.rows, &cfg.vls).to_markdown());
+            }
+            println!("## Cross-variant pivot — speedup over NEON\n");
+            println!("{}", report::dse::pivot(&outcome.variants, &cfg.vls).to_markdown());
+            emit_paths_and_counts(
+                report::dse::write_artifacts(&outcome.variants, &cfg.vls, &out),
+                "dse",
+                outcome.simulated,
+                outcome.reloaded,
+                &out,
+            );
+        }
+        "report" if has_flag(&args, "--compare") => run_compare(&args),
         "report" => {
             let (mut cfg, out) = sweep_config(&args);
             // `report` is idempotent by design: always reuse cached jobs

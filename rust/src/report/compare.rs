@@ -1,0 +1,331 @@
+//! Cross-commit artifact diffing: `sve report --compare A.json B.json`.
+//!
+//! Parses two `fig8.json` or `dse.json` artifacts (any mix — a fig8
+//! document is treated as the `table2` variant), matches their
+//! (variant, benchmark, VL) speedup points, and renders a delta table.
+//! With a `--fail-on-regress PCT` threshold the comparison **fails**
+//! when any speedup in A drops by more than PCT percent in B, or when a
+//! point of A is missing from B entirely — the primitive CI uses as a
+//! regression wall. The rendering is a pure function of the two
+//! documents (golden-tested in `tests/dse_compare_golden.rs`), and the
+//! exit-code policy lives in `main.rs`: 0 clean, 1 failed comparison,
+//! 2 usage error.
+
+use crate::csvutil::{f, Table};
+use crate::report::json::Json;
+use crate::report::{dse, fig8};
+
+/// One (variant, benchmark, VL) speedup extracted from an artifact.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SpeedupPoint {
+    /// `table2` for fig8 artifacts; the variant name for dse artifacts.
+    pub variant: String,
+    pub bench: String,
+    pub vl_bits: u64,
+    /// NEON cycles / SVE cycles, as recorded in the artifact.
+    pub speedup: f64,
+}
+
+impl SpeedupPoint {
+    fn key(&self) -> (&str, &str, u64) {
+        (&self.variant, &self.bench, self.vl_bits)
+    }
+
+    fn label(&self) -> String {
+        format!("{}/{}@vl{}", self.variant, self.bench, self.vl_bits)
+    }
+}
+
+fn points_from_benchmarks(
+    variant: &str,
+    benches: Option<&Json>,
+    out: &mut Vec<SpeedupPoint>,
+) -> Result<(), String> {
+    let arr = benches
+        .and_then(Json::as_arr)
+        .ok_or_else(|| "artifact has no \"benchmarks\" array".to_string())?;
+    for b in arr {
+        let bench = b
+            .get("bench")
+            .and_then(Json::as_str)
+            .ok_or_else(|| "benchmark entry has no \"bench\" name".to_string())?;
+        let sve = b
+            .get("sve")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| format!("benchmark '{bench}' has no \"sve\" array"))?;
+        for run in sve {
+            let vl = run
+                .get("vl_bits")
+                .and_then(Json::as_u64)
+                .ok_or_else(|| format!("benchmark '{bench}': sve run has no \"vl_bits\""))?;
+            let speedup = run
+                .get("speedup")
+                .and_then(Json::as_f64)
+                .ok_or_else(|| format!("benchmark '{bench}': sve run has no \"speedup\""))?;
+            out.push(SpeedupPoint {
+                variant: variant.to_string(),
+                bench: bench.to_string(),
+                vl_bits: vl,
+                speedup,
+            });
+        }
+    }
+    Ok(())
+}
+
+/// Extract every speedup point from a parsed `fig8.json` or `dse.json`
+/// document, in document order.
+pub fn extract_points(doc: &Json) -> Result<Vec<SpeedupPoint>, String> {
+    let schema = doc
+        .get("schema")
+        .and_then(Json::as_str)
+        .ok_or_else(|| "artifact has no \"schema\" field".to_string())?;
+    let mut points = Vec::new();
+    match schema {
+        fig8::FIG8_SCHEMA => {
+            points_from_benchmarks("table2", doc.get("benchmarks"), &mut points)?;
+        }
+        dse::DSE_SCHEMA => {
+            let variants = doc
+                .get("variants")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| "dse artifact has no \"variants\" array".to_string())?;
+            for v in variants {
+                let name = v
+                    .get("name")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| "dse variant has no \"name\"".to_string())?;
+                points_from_benchmarks(name, v.get("benchmarks"), &mut points)?;
+            }
+        }
+        other => {
+            return Err(format!(
+                "unsupported artifact schema '{other}' (expected {} or {})",
+                fig8::FIG8_SCHEMA,
+                dse::DSE_SCHEMA
+            ))
+        }
+    }
+    Ok(points)
+}
+
+/// The outcome of diffing two artifacts' speedup points.
+#[derive(Clone, Debug)]
+pub struct Comparison {
+    /// Per-matched-point delta rows, in A's order.
+    pub table: Table,
+    /// Points present in both artifacts.
+    pub compared: usize,
+    /// Formatted descriptions of every speedup beyond the threshold.
+    pub regressions: Vec<String>,
+    /// Labels of points only in A — a silently dropped configuration,
+    /// counted as a failure when a threshold is set.
+    pub only_in_a: Vec<String>,
+    /// Labels of points only in B (new configurations; never a failure).
+    pub only_in_b: Vec<String>,
+    /// The `--fail-on-regress` threshold the comparison ran under.
+    pub fail_below_pct: Option<f64>,
+}
+
+impl Comparison {
+    /// Does this comparison fail the regression wall? Only a set
+    /// threshold can fail; without one the comparison is informational.
+    pub fn failed(&self) -> bool {
+        self.fail_below_pct.is_some()
+            && (!self.regressions.is_empty() || !self.only_in_a.is_empty())
+    }
+}
+
+/// Match A's points against B's and compute per-point deltas. A point
+/// regresses when its B speedup drops below `a * (1 - pct/100)`.
+pub fn compare(
+    a: &[SpeedupPoint],
+    b: &[SpeedupPoint],
+    fail_below_pct: Option<f64>,
+) -> Comparison {
+    let with_variant =
+        a.iter().chain(b.iter()).any(|p| p.variant != "table2");
+    let mut header = Vec::new();
+    if with_variant {
+        header.push("variant".to_string());
+    }
+    header.extend(
+        ["bench", "vl_bits", "speedup_a", "speedup_b", "delta_%", "status"]
+            .map(String::from),
+    );
+    let mut table = Table::new(header);
+    let mut compared = 0usize;
+    let mut regressions = Vec::new();
+    let mut only_in_a = Vec::new();
+    for pa in a {
+        let Some(pb) = b.iter().find(|p| p.key() == pa.key()) else {
+            only_in_a.push(pa.label());
+            continue;
+        };
+        compared += 1;
+        let delta_pct = (pb.speedup / pa.speedup - 1.0) * 100.0;
+        let regressed = fail_below_pct
+            .is_some_and(|pct| pb.speedup < pa.speedup * (1.0 - pct / 100.0));
+        if regressed {
+            regressions.push(format!(
+                "{}: {} -> {} ({:+.2}%)",
+                pa.label(),
+                f(pa.speedup, 3),
+                f(pb.speedup, 3),
+                delta_pct
+            ));
+        }
+        let mut cells = Vec::new();
+        if with_variant {
+            cells.push(pa.variant.clone());
+        }
+        cells.extend([
+            pa.bench.clone(),
+            pa.vl_bits.to_string(),
+            f(pa.speedup, 3),
+            f(pb.speedup, 3),
+            format!("{delta_pct:+.2}"),
+            if regressed { "REGRESS".to_string() } else { "ok".to_string() },
+        ]);
+        table.push_row(cells);
+    }
+    let only_in_b = b
+        .iter()
+        .filter(|pb| !a.iter().any(|pa| pa.key() == pb.key()))
+        .map(SpeedupPoint::label)
+        .collect();
+    Comparison { table, compared, regressions, only_in_a, only_in_b, fail_below_pct }
+}
+
+/// Render the full comparison report: delta table, regression lines,
+/// mismatched-point notes, one-line summary.
+pub fn render(c: &Comparison) -> String {
+    use std::fmt::Write as _;
+    let mut out = String::new();
+    out.push_str(&c.table.to_markdown());
+    for r in &c.regressions {
+        let _ = writeln!(out, "regression: {r}");
+    }
+    for l in &c.only_in_a {
+        let _ = writeln!(out, "only in A (missing from B): {l}");
+    }
+    for l in &c.only_in_b {
+        let _ = writeln!(out, "only in B (new): {l}");
+    }
+    match c.fail_below_pct {
+        Some(pct) => {
+            let failures = c.regressions.len() + c.only_in_a.len();
+            let _ = writeln!(
+                out,
+                "compared {} point(s) against a {pct}% regression threshold: \
+                 {failures} failure(s)",
+                c.compared
+            );
+        }
+        None => {
+            let _ = writeln!(
+                out,
+                "compared {} point(s); no regression threshold set",
+                c.compared
+            );
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{Fig8Row, Isa, RunRecord};
+    use crate::workloads::Group;
+
+    fn point(variant: &str, bench: &str, vl: u64, speedup: f64) -> SpeedupPoint {
+        SpeedupPoint { variant: variant.into(), bench: bench.into(), vl_bits: vl, speedup }
+    }
+
+    fn fig8_doc() -> Json {
+        let neon = RunRecord {
+            bench: "stream_triad",
+            group: Group::Right,
+            isa: Isa::Neon,
+            cycles: 1000,
+            insts: 10000,
+            vector_fraction: 0.5,
+            vectorized: true,
+            l1d_miss_rate: 0.125,
+            ipc: 1.5,
+        };
+        let sve = vec![
+            RunRecord { isa: Isa::Sve(128), cycles: 800, ..neon.clone() },
+            RunRecord { isa: Isa::Sve(256), cycles: 400, ..neon.clone() },
+        ];
+        let rows = vec![Fig8Row {
+            bench: "stream_triad",
+            group: Group::Right,
+            neon,
+            sve,
+            extra_vectorization: 0.25,
+        }];
+        fig8::to_json(&rows, &[128, 256])
+    }
+
+    #[test]
+    fn extracts_fig8_points_as_table2() {
+        let pts = extract_points(&fig8_doc()).unwrap();
+        assert_eq!(
+            pts,
+            vec![
+                point("table2", "stream_triad", 128, 1.25),
+                point("table2", "stream_triad", 256, 2.5),
+            ]
+        );
+    }
+
+    #[test]
+    fn rejects_unknown_schema_and_malformed_docs() {
+        let bad = Json::Obj(vec![("schema".into(), Json::str("sve-repro/fig2/v1"))]);
+        assert!(extract_points(&bad).unwrap_err().contains("unsupported artifact schema"));
+        assert!(extract_points(&Json::Obj(vec![])).is_err());
+        let no_benches =
+            Json::Obj(vec![("schema".into(), Json::str(fig8::FIG8_SCHEMA))]);
+        assert!(extract_points(&no_benches).is_err());
+    }
+
+    #[test]
+    fn identical_points_never_fail() {
+        let a = vec![point("table2", "haccmk", 256, 2.0)];
+        let c = compare(&a, &a, Some(0.0));
+        assert_eq!(c.compared, 1);
+        assert!(!c.failed());
+        assert!(render(&c).contains("1 point(s) against a 0% regression threshold"));
+    }
+
+    #[test]
+    fn regression_beyond_threshold_fails_and_within_does_not() {
+        let a = vec![point("table2", "haccmk", 256, 2.0)];
+        let slight = vec![point("table2", "haccmk", 256, 1.98)]; // -1%
+        let bad = vec![point("table2", "haccmk", 256, 1.5)]; // -25%
+        assert!(!compare(&a, &slight, Some(2.0)).failed());
+        let c = compare(&a, &bad, Some(2.0));
+        assert!(c.failed());
+        assert_eq!(c.regressions.len(), 1);
+        assert!(render(&c).contains("REGRESS"));
+        assert!(render(&c).contains("-25.00"));
+        // without a threshold the same delta is informational
+        assert!(!compare(&a, &bad, None).failed());
+    }
+
+    #[test]
+    fn missing_points_fail_only_under_a_threshold() {
+        let a = vec![point("table2", "haccmk", 256, 2.0), point("table2", "haccmk", 512, 3.0)];
+        let b = vec![point("table2", "haccmk", 256, 2.0), point("big-core", "haccmk", 256, 4.0)];
+        let c = compare(&a, &b, Some(2.0));
+        assert_eq!(c.compared, 1);
+        assert_eq!(c.only_in_a, vec!["table2/haccmk@vl512"]);
+        assert_eq!(c.only_in_b, vec!["big-core/haccmk@vl256"]);
+        assert!(c.failed());
+        assert!(!compare(&a, &b, None).failed());
+        // the variant column appears because a non-table2 point exists
+        assert_eq!(c.table.header[0], "variant");
+    }
+}

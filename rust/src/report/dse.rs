@@ -1,0 +1,305 @@
+//! Design-space exploration artifacts: the `sve dse` sweep rendered as
+//! machine-readable JSON (schema [`DSE_SCHEMA`]) + long-form CSV and
+//! human-readable Markdown with a cross-variant pivot. Like the Fig. 8
+//! emitters, every rendering is a pure function of the row data — no
+//! timestamps, no environment — so the artifacts are byte-stable and
+//! golden-tested (`tests/dse_compare_golden.rs`).
+//!
+//! The per-variant benchmark payload is exactly the Fig. 8 shape
+//! ([`crate::report::fig8::benchmarks_json`]), which is what lets
+//! `sve report --compare` diff `fig8.json` and `dse.json` artifacts
+//! interchangeably.
+
+use std::io;
+use std::path::{Path, PathBuf};
+
+use crate::coordinator::VariantRows;
+use crate::csvutil::{f, Table};
+use crate::report::fig8;
+use crate::report::json::Json;
+use crate::uarch::UarchConfig;
+
+/// Schema tag of the `dse.json` artifact.
+pub const DSE_SCHEMA: &str = "sve-repro/dse/v1";
+
+/// Every [`UarchConfig`] field as a flat JSON object, in declaration
+/// order — the artifact records the exact design point it was timed
+/// under, so two artifacts are comparable without access to the CLI
+/// invocation that produced them. Built from the single field
+/// enumeration in `uarch::config` ([`crate::uarch::OVERRIDE_KEYS`] +
+/// [`crate::uarch::field_value`]), so a new config field automatically
+/// appears here.
+pub fn uarch_json(c: &UarchConfig) -> Json {
+    Json::Obj(
+        crate::uarch::OVERRIDE_KEYS
+            .iter()
+            .map(|&key| {
+                let v = crate::uarch::field_value(c, key)
+                    .expect("every OVERRIDE_KEYS entry is readable");
+                (key.to_string(), Json::u64(v))
+            })
+            .collect(),
+    )
+}
+
+/// One-line human summary of a design point, used as the section
+/// subtitle in `dse.md`.
+pub fn uarch_summary(c: &UarchConfig) -> String {
+    format!(
+        "L1D {}K/{}-way · L2 {}K/{}-way · decode/retire {}/{} · ROB {} · \
+         issue {}i+{}v · {} ld / {} st per cycle",
+        c.l1d_bytes / 1024,
+        c.l1d_assoc,
+        c.l2_bytes / 1024,
+        c.l2_assoc,
+        c.decode_width,
+        c.retire_width,
+        c.rob,
+        c.int_issue_per_cycle,
+        c.vec_issue_per_cycle,
+        c.loads_per_cycle,
+        c.stores_per_cycle
+    )
+}
+
+/// The cross-variant pivot: one row per (benchmark, VL), one speedup
+/// column per variant — the paper's PPA question ("which design point
+/// suits my targets?") on a single screen.
+pub fn pivot(variants: &[VariantRows], vls: &[usize]) -> Table {
+    let mut header = vec!["bench".to_string(), "vl_bits".to_string()];
+    for v in variants {
+        header.push(v.name.clone());
+    }
+    let mut t = Table::new(header);
+    let Some(first) = variants.first() else { return t };
+    for (bi, row0) in first.rows.iter().enumerate() {
+        for (vi, vl) in vls.iter().enumerate() {
+            let mut cells = vec![row0.bench.to_string(), vl.to_string()];
+            for v in variants {
+                cells.push(f(v.rows[bi].speedup(vi), 2));
+            }
+            t.push_row(cells);
+        }
+    }
+    t
+}
+
+/// The long-form table behind `dse.csv`: one row per
+/// (variant, benchmark, VL) — the shape plotting tools want.
+pub fn table(variants: &[VariantRows], vls: &[usize]) -> Table {
+    let mut t = Table::new(vec![
+        "variant",
+        "bench",
+        "group",
+        "extra_vec_%",
+        "vl_bits",
+        "speedup",
+        "neon_cycles",
+        "sve_cycles",
+    ]);
+    for v in variants {
+        for r in &v.rows {
+            for (vi, vl) in vls.iter().enumerate() {
+                t.push_row(vec![
+                    v.name.clone(),
+                    r.bench.to_string(),
+                    r.group.short().to_string(),
+                    f(100.0 * r.extra_vectorization, 1),
+                    vl.to_string(),
+                    f(r.speedup(vi), 2),
+                    r.neon.cycles.to_string(),
+                    r.sve[vi].cycles.to_string(),
+                ]);
+            }
+        }
+    }
+    t
+}
+
+/// The machine-readable DSE document: per variant, the exact design
+/// point ([`uarch_json`]) plus the Fig. 8-shaped benchmark payload.
+pub fn to_json(variants: &[VariantRows], vls: &[usize]) -> Json {
+    Json::Obj(vec![
+        ("schema".into(), Json::str(DSE_SCHEMA)),
+        ("figure".into(), Json::str("dse")),
+        (
+            "title".into(),
+            Json::str("SVE speedup over Advanced SIMD across microarchitecture design points"),
+        ),
+        ("vls_bits".into(), Json::Arr(vls.iter().map(|&v| Json::u64(v as u64)).collect())),
+        (
+            "variants".into(),
+            Json::Arr(
+                variants
+                    .iter()
+                    .map(|v| {
+                        Json::Obj(vec![
+                            ("name".into(), Json::str(v.name.clone())),
+                            ("uarch".into(), uarch_json(&v.uarch)),
+                            ("benchmarks".into(), fig8::benchmarks_json(&v.rows)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+/// The human-readable Markdown artifact (`dse.md`).
+pub fn to_markdown(variants: &[VariantRows], vls: &[usize]) -> String {
+    use std::fmt::Write as _;
+    let vl_list = vls.iter().map(|v| v.to_string()).collect::<Vec<_>>().join(", ");
+    let mut out = String::new();
+    let _ = write!(
+        out,
+        "# DSE — SVE speedup across µarch design points\n\
+         \n\
+         Schema: `{DSE_SCHEMA}` · SVE vector lengths: {vl_list} bits · \
+         {nv} variants × {nb} benchmarks, every run validated against its \
+         golden outputs.\n\
+         \n\
+         Each variant section is the Fig. 8 table timed under that design \
+         point; the pivot at the end puts every variant's speedup-vs-VL \
+         side by side (speedup is NEON cycles / SVE cycles at the same \
+         design point).\n\
+         \n",
+        nv = variants.len(),
+        nb = variants.first().map_or(0, |v| v.rows.len()),
+    );
+    for v in variants {
+        let _ = write!(
+            out,
+            "## {}\n\n{}\n\n{}\n",
+            v.name,
+            uarch_summary(&v.uarch),
+            fig8::table(&v.rows, vls).to_markdown(),
+        );
+    }
+    let _ = write!(
+        out,
+        "## Cross-variant pivot — speedup over NEON\n\n{}\n\
+         Regenerate with `sve dse --uarch <variants> --out <dir>` (add \
+         `--resume` to reuse cached jobs); machine-readable copies: \
+         `dse.json`, `dse.csv`.\n",
+        pivot(variants, vls).to_markdown(),
+    );
+    out
+}
+
+/// Write `dse.json`, `dse.csv` and `dse.md` under `out_dir`, returning
+/// the paths written.
+pub fn write_artifacts(
+    variants: &[VariantRows],
+    vls: &[usize],
+    out_dir: impl AsRef<Path>,
+) -> io::Result<Vec<PathBuf>> {
+    let dir = out_dir.as_ref();
+    std::fs::create_dir_all(dir)?;
+    let json_path = dir.join("dse.json");
+    std::fs::write(&json_path, to_json(variants, vls).render_pretty())?;
+    let csv_path = dir.join("dse.csv");
+    std::fs::write(&csv_path, table(variants, vls).to_csv())?;
+    let md_path = dir.join("dse.md");
+    std::fs::write(&md_path, to_markdown(variants, vls))?;
+    Ok(vec![json_path, csv_path, md_path])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{Fig8Row, Isa, RunRecord};
+    use crate::uarch::base_variant;
+    use crate::workloads::Group;
+
+    fn rec(bench: &'static str, isa: Isa, cycles: u64) -> RunRecord {
+        RunRecord {
+            bench,
+            group: Group::Right,
+            isa,
+            cycles,
+            insts: 10 * cycles,
+            vector_fraction: 0.5,
+            vectorized: true,
+            l1d_miss_rate: 0.125,
+            ipc: 1.5,
+        }
+    }
+
+    fn variant(name: &str, base: &str, neon_cycles: u64) -> VariantRows {
+        let sve = vec![
+            rec("stream_triad", Isa::Sve(128), neon_cycles * 4 / 5),
+            rec("stream_triad", Isa::Sve(256), neon_cycles * 2 / 5),
+        ];
+        VariantRows {
+            name: name.into(),
+            uarch: base_variant(base).unwrap(),
+            rows: vec![Fig8Row {
+                bench: "stream_triad",
+                group: Group::Right,
+                neon: rec("stream_triad", Isa::Neon, neon_cycles),
+                sve,
+                extra_vectorization: 0.25,
+            }],
+        }
+    }
+
+    fn fixture() -> Vec<VariantRows> {
+        vec![variant("table2", "table2", 1000), variant("small-core", "small-core", 2000)]
+    }
+
+    #[test]
+    fn json_has_schema_uarch_and_fig8_shaped_benchmarks() {
+        let v = to_json(&fixture(), &[128, 256]);
+        let back = Json::parse(&v.render_pretty()).unwrap();
+        assert_eq!(back, v);
+        assert_eq!(back.get("schema").unwrap().as_str(), Some(DSE_SCHEMA));
+        let variants = back.get("variants").unwrap().as_arr().unwrap();
+        assert_eq!(variants.len(), 2);
+        assert_eq!(variants[0].get("name").unwrap().as_str(), Some("table2"));
+        assert_eq!(
+            variants[1].get("uarch").unwrap().get("l2_bytes").unwrap().as_u64(),
+            Some(128 * 1024)
+        );
+        let benches = variants[0].get("benchmarks").unwrap().as_arr().unwrap();
+        let sve = benches[0].get("sve").unwrap().as_arr().unwrap();
+        assert_eq!(sve[0].get("speedup").unwrap().as_f64(), Some(1.25));
+    }
+
+    #[test]
+    fn empty_variant_slice_renders_without_panicking() {
+        let p = pivot(&[], &[128, 256]);
+        assert_eq!(p.header, vec!["bench", "vl_bits"]);
+        assert!(p.rows.is_empty());
+        assert!(to_markdown(&[], &[128]).contains("0 variants"));
+    }
+
+    #[test]
+    fn pivot_and_csv_have_expected_shape() {
+        let p = pivot(&fixture(), &[128, 256]);
+        assert_eq!(p.header, vec!["bench", "vl_bits", "table2", "small-core"]);
+        assert_eq!(p.rows.len(), 2); // 1 bench x 2 VLs
+        assert_eq!(p.rows[0], vec!["stream_triad", "128", "1.25", "1.25"]);
+        let csv = table(&fixture(), &[128, 256]).to_csv();
+        assert_eq!(csv.lines().count(), 5); // header + 2 variants x 2 VLs
+        assert!(csv.starts_with("variant,bench,group,extra_vec_%,vl_bits,speedup"));
+        assert!(csv.contains("small-core,stream_triad,right,25.0,256,2.50,2000,800"));
+    }
+
+    #[test]
+    fn markdown_sections_and_artifacts() {
+        let md = to_markdown(&fixture(), &[128, 256]);
+        assert!(md.contains("# DSE"));
+        assert!(md.contains("## table2"));
+        assert!(md.contains("## small-core"));
+        assert!(md.contains("## Cross-variant pivot"));
+        assert!(md.contains(DSE_SCHEMA));
+        let dir = std::env::temp_dir().join(format!("sve-dse-test-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let paths = write_artifacts(&fixture(), &[128, 256], &dir).unwrap();
+        assert_eq!(paths.len(), 3);
+        for p in &paths {
+            assert!(p.exists(), "{p:?} missing");
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -79,29 +79,38 @@ fn run_json(r: &RunRecord, speedup: Option<f64>) -> Json {
     Json::Obj(fields)
 }
 
+/// The per-benchmark array shared by the Fig. 8 and DSE documents: one
+/// object per row with the NEON baseline and the per-VL SVE runs
+/// (including speedups). `sve report --compare` understands exactly
+/// this shape, wherever it appears.
+pub fn benchmarks_json(rows: &[Fig8Row]) -> Json {
+    Json::Arr(
+        rows.iter()
+            .map(|r| {
+                Json::Obj(vec![
+                    ("bench".into(), Json::str(r.bench)),
+                    ("group".into(), Json::str(r.group.short())),
+                    ("extra_vectorization".into(), Json::f64(r.extra_vectorization)),
+                    ("neon".into(), run_json(&r.neon, None)),
+                    (
+                        "sve".into(),
+                        Json::Arr(
+                            r.sve
+                                .iter()
+                                .enumerate()
+                                .map(|(i, s)| run_json(s, Some(r.speedup(i))))
+                                .collect(),
+                        ),
+                    ),
+                ])
+            })
+            .collect(),
+    )
+}
+
 /// The machine-readable Fig. 8 document.
 pub fn to_json(rows: &[Fig8Row], vls: &[usize]) -> Json {
-    let benchmarks = rows
-        .iter()
-        .map(|r| {
-            Json::Obj(vec![
-                ("bench".into(), Json::str(r.bench)),
-                ("group".into(), Json::str(r.group.short())),
-                ("extra_vectorization".into(), Json::f64(r.extra_vectorization)),
-                ("neon".into(), run_json(&r.neon, None)),
-                (
-                    "sve".into(),
-                    Json::Arr(
-                        r.sve
-                            .iter()
-                            .enumerate()
-                            .map(|(i, s)| run_json(s, Some(r.speedup(i))))
-                            .collect(),
-                    ),
-                ),
-            ])
-        })
-        .collect();
+    let benchmarks = benchmarks_json(rows);
     Json::Obj(vec![
         ("schema".into(), Json::str(FIG8_SCHEMA)),
         ("figure".into(), Json::str("fig8")),
@@ -110,7 +119,7 @@ pub fn to_json(rows: &[Fig8Row], vls: &[usize]) -> Json {
             Json::str("SVE speedup over Advanced SIMD across vector lengths"),
         ),
         ("vls_bits".into(), Json::Arr(vls.iter().map(|&v| Json::u64(v as u64)).collect())),
-        ("benchmarks".into(), Json::Arr(benchmarks)),
+        ("benchmarks".into(), benchmarks),
     ])
 }
 

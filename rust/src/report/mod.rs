@@ -14,11 +14,16 @@
 //! * [`fig2`] — daxpy codegen listings + cycles across VLs.
 //! * [`fig7`] — the encoding-budget model and §4 counterfactual.
 //! * [`fig8`] — the headline speedup sweep.
+//! * [`dse`] — the design-space sweep across µarch variants
+//!   (`sve dse`), per-variant Fig. 8 tables + cross-variant pivot.
+//! * [`compare`] — cross-commit diffing of fig8/dse artifacts
+//!   (`sve report --compare`), the primitive behind CI's regression
+//!   wall.
 //!
 //! Every emitter is a pure function of its inputs — no timestamps, no
 //! host details — so artifacts are byte-stable across machines and
-//! reruns, and the golden-file tests in `tests/report_golden.rs` can
-//! pin them exactly.
+//! reruns, and the golden-file tests in `tests/report_golden.rs` and
+//! `tests/dse_compare_golden.rs` can pin them exactly.
 //!
 //! Layout of a populated `reports/` directory:
 //!
@@ -27,9 +32,12 @@
 //! ├── fig2.{json,csv,md}     sve report
 //! ├── fig7.{json,csv,md}     sve report
 //! ├── fig8.{json,csv,md}     sve sweep / sve report
-//! └── jobs/<key>.json        one cached RunRecord per sweep job
+//! ├── dse.{json,csv,md}      sve dse
+//! └── jobs/<key>.json        one cached RunRecord per sweep/dse job
 //! ```
 
+pub mod compare;
+pub mod dse;
 pub mod fig2;
 pub mod fig7;
 pub mod fig8;

@@ -2,7 +2,7 @@
 
 /// Microarchitecture parameters. `Default` reproduces Table 2: a
 /// "typical, medium sized, out-of-order microprocessor".
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub struct UarchConfig {
     // ---- Table 2 rows ----
     /// L1 instruction cache: 64KB, 4-way, 64B line.
@@ -85,6 +85,395 @@ impl Default for UarchConfig {
     }
 }
 
+/// A named point in the microarchitecture design space: the base
+/// variant's name plus any `+key=value` overrides, and the resulting
+/// configuration. The paper's PPA claim (§1: "choose the vector length
+/// most suitable for their power, performance, and area targets") is
+/// exercised by sweeping these points — see `sve dse`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct UarchVariant {
+    /// Display name: the base variant plus canonicalized overrides,
+    /// e.g. `small-core` or `table2+l2_bytes=524288`.
+    pub name: String,
+    pub cfg: UarchConfig,
+}
+
+/// The named base variants accepted by [`parse_variants`], in canonical
+/// order. `table2` is the paper's configuration; the others scale it
+/// toward the corners CPU designers trade between.
+pub const VARIANT_NAMES: [&str; 5] =
+    ["table2", "small-core", "big-core", "narrow-mem", "deep-rob"];
+
+/// Every `key=value` override name accepted by [`set_field`], in
+/// [`UarchConfig`] declaration order.
+pub const OVERRIDE_KEYS: [&str; 26] = [
+    "l1i_bytes",
+    "l1i_assoc",
+    "l1d_bytes",
+    "l1d_assoc",
+    "mshrs",
+    "l2_bytes",
+    "l2_assoc",
+    "line_bytes",
+    "decode_width",
+    "retire_width",
+    "rob",
+    "int_issue_per_cycle",
+    "int_sched_entries",
+    "vec_issue_per_cycle",
+    "vec_sched_entries",
+    "loads_per_cycle",
+    "stores_per_cycle",
+    "ls_sched_entries",
+    "port_bytes",
+    "line_cross_penalty",
+    "cross_lane_per_128b",
+    "l1_lat",
+    "l2_lat",
+    "mem_lat",
+    "branch_mispredict_penalty",
+    "opaque_lat",
+];
+
+/// Look up a named base variant. `None` for unknown names (the CLI
+/// turns that into a usage error listing [`VARIANT_NAMES`]).
+///
+/// * `table2` — the paper's Table 2 configuration ([`UarchConfig::default`]).
+/// * `small-core` — halved caches, widths, schedulers and window.
+/// * `big-core` — doubled caches, widths, schedulers and window.
+/// * `narrow-mem` — Table 2 with a single load port.
+/// * `deep-rob` — Table 2 with a doubled ROB and scheduler depth.
+pub fn base_variant(name: &str) -> Option<UarchConfig> {
+    let mut c = UarchConfig::default();
+    match name {
+        "table2" => {}
+        "small-core" => {
+            c.l1i_bytes = 32 * 1024;
+            c.l1d_bytes = 32 * 1024;
+            c.mshrs = 6;
+            c.l2_bytes = 128 * 1024;
+            c.l2_assoc = 4;
+            c.decode_width = 2;
+            c.retire_width = 2;
+            c.rob = 64;
+            c.int_issue_per_cycle = 1;
+            c.int_sched_entries = 12;
+            c.vec_issue_per_cycle = 1;
+            c.vec_sched_entries = 12;
+            c.loads_per_cycle = 1;
+            c.stores_per_cycle = 1;
+            c.ls_sched_entries = 12;
+        }
+        "big-core" => {
+            c.l1i_bytes = 128 * 1024;
+            c.l1d_bytes = 128 * 1024;
+            c.mshrs = 24;
+            c.l2_bytes = 512 * 1024;
+            c.l2_assoc = 16;
+            c.decode_width = 8;
+            c.retire_width = 8;
+            c.rob = 256;
+            c.int_issue_per_cycle = 4;
+            c.int_sched_entries = 48;
+            c.vec_issue_per_cycle = 4;
+            c.vec_sched_entries = 48;
+            c.loads_per_cycle = 4;
+            c.stores_per_cycle = 2;
+            c.ls_sched_entries = 48;
+        }
+        "narrow-mem" => {
+            c.loads_per_cycle = 1;
+        }
+        "deep-rob" => {
+            c.rob = 256;
+            c.int_sched_entries = 48;
+            c.vec_sched_entries = 48;
+            c.ls_sched_entries = 48;
+        }
+        _ => return None,
+    }
+    Some(c)
+}
+
+/// Parse an integer with an optional binary suffix: `80`, `512K`, `1M`.
+fn parse_size(s: &str) -> Option<u64> {
+    let (digits, mult) = match s.as_bytes().last()? {
+        b'K' | b'k' => (&s[..s.len() - 1], 1024),
+        b'M' | b'm' => (&s[..s.len() - 1], 1024 * 1024),
+        _ => (s, 1),
+    };
+    digits.parse::<u64>().ok()?.checked_mul(mult)
+}
+
+/// Check that a configuration can actually be instantiated by the
+/// timing model. The cache constructor requires a power-of-two set
+/// count per level, which constrains (bytes, line_bytes, assoc)
+/// *jointly* — a per-field ≥ 1 check cannot catch an unrealizable
+/// combination, and an invalid one would panic every sweep worker.
+pub fn validate(cfg: &UarchConfig) -> Result<(), String> {
+    if !cfg.line_bytes.is_power_of_two() {
+        return Err(format!("line_bytes={} must be a power of two", cfg.line_bytes));
+    }
+    for (name, bytes, assoc) in [
+        ("l1i", cfg.l1i_bytes, cfg.l1i_assoc),
+        ("l1d", cfg.l1d_bytes, cfg.l1d_assoc),
+        ("l2", cfg.l2_bytes, cfg.l2_assoc),
+    ] {
+        let lines = bytes / cfg.line_bytes;
+        if assoc == 0 || lines == 0 || lines % assoc != 0 || !(lines / assoc).is_power_of_two()
+        {
+            return Err(format!(
+                "{name} cache geometry is unrealizable: {bytes} bytes / {}B lines / \
+                 {assoc} ways must give a power-of-two set count",
+                cfg.line_bytes
+            ));
+        }
+    }
+    Ok(())
+}
+
+/// Apply one `key=value` override to a configuration, returning the
+/// parsed value. Keys are the [`UarchConfig`] field names
+/// ([`OVERRIDE_KEYS`]); values are integers with an optional `K`/`M`
+/// binary suffix. Structural parameters (widths, sizes, queue depths)
+/// must stay ≥ 1 — a zero-wide pipeline cannot make progress — while
+/// penalties and latencies may be 0. Joint constraints (cache
+/// geometry) are checked by [`validate`] once a full configuration is
+/// assembled.
+pub fn set_field(cfg: &mut UarchConfig, key: &str, value: &str) -> Result<u64, String> {
+    let v = parse_size(value).ok_or_else(|| {
+        format!(
+            "--uarch override '{key}={value}': value is not a number \
+             (integer, optional K/M suffix)"
+        )
+    })?;
+    let zero_ok = matches!(
+        key,
+        "line_cross_penalty"
+            | "cross_lane_per_128b"
+            | "l1_lat"
+            | "l2_lat"
+            | "mem_lat"
+            | "branch_mispredict_penalty"
+            | "opaque_lat"
+    );
+    if v == 0 && !zero_ok {
+        return Err(format!(
+            "--uarch override '{key}=0': structural parameters must be >= 1"
+        ));
+    }
+    let u = v as usize;
+    match key {
+        "l1i_bytes" => cfg.l1i_bytes = u,
+        "l1i_assoc" => cfg.l1i_assoc = u,
+        "l1d_bytes" => cfg.l1d_bytes = u,
+        "l1d_assoc" => cfg.l1d_assoc = u,
+        "mshrs" => cfg.mshrs = u,
+        "l2_bytes" => cfg.l2_bytes = u,
+        "l2_assoc" => cfg.l2_assoc = u,
+        "line_bytes" => cfg.line_bytes = u,
+        "decode_width" => cfg.decode_width = v,
+        "retire_width" => cfg.retire_width = v,
+        "rob" => cfg.rob = u,
+        "int_issue_per_cycle" => cfg.int_issue_per_cycle = v,
+        "int_sched_entries" => cfg.int_sched_entries = u,
+        "vec_issue_per_cycle" => cfg.vec_issue_per_cycle = v,
+        "vec_sched_entries" => cfg.vec_sched_entries = u,
+        "loads_per_cycle" => cfg.loads_per_cycle = v,
+        "stores_per_cycle" => cfg.stores_per_cycle = v,
+        "ls_sched_entries" => cfg.ls_sched_entries = u,
+        "port_bytes" => cfg.port_bytes = u,
+        "line_cross_penalty" => cfg.line_cross_penalty = v,
+        "cross_lane_per_128b" => cfg.cross_lane_per_128b = v,
+        "l1_lat" => cfg.l1_lat = v,
+        "l2_lat" => cfg.l2_lat = v,
+        "mem_lat" => cfg.mem_lat = v,
+        "branch_mispredict_penalty" => cfg.branch_mispredict_penalty = v,
+        "opaque_lat" => cfg.opaque_lat = v,
+        _ => {
+            return Err(format!(
+                "--uarch override: unknown parameter '{key}' (known: {})",
+                OVERRIDE_KEYS.join(", ")
+            ))
+        }
+    }
+    Ok(v)
+}
+
+/// Read one field by its [`OVERRIDE_KEYS`] name (the inverse of
+/// [`set_field`]); `None` for unknown keys. Together with
+/// [`OVERRIDE_KEYS`] this is the single field enumeration the report
+/// emitters build on — adding a `UarchConfig` field means extending
+/// [`OVERRIDE_KEYS`], [`set_field`] and this function, and every
+/// artifact then carries it automatically.
+pub fn field_value(cfg: &UarchConfig, key: &str) -> Option<u64> {
+    Some(match key {
+        "l1i_bytes" => cfg.l1i_bytes as u64,
+        "l1i_assoc" => cfg.l1i_assoc as u64,
+        "l1d_bytes" => cfg.l1d_bytes as u64,
+        "l1d_assoc" => cfg.l1d_assoc as u64,
+        "mshrs" => cfg.mshrs as u64,
+        "l2_bytes" => cfg.l2_bytes as u64,
+        "l2_assoc" => cfg.l2_assoc as u64,
+        "line_bytes" => cfg.line_bytes as u64,
+        "decode_width" => cfg.decode_width,
+        "retire_width" => cfg.retire_width,
+        "rob" => cfg.rob as u64,
+        "int_issue_per_cycle" => cfg.int_issue_per_cycle,
+        "int_sched_entries" => cfg.int_sched_entries as u64,
+        "vec_issue_per_cycle" => cfg.vec_issue_per_cycle,
+        "vec_sched_entries" => cfg.vec_sched_entries as u64,
+        "loads_per_cycle" => cfg.loads_per_cycle,
+        "stores_per_cycle" => cfg.stores_per_cycle,
+        "ls_sched_entries" => cfg.ls_sched_entries as u64,
+        "port_bytes" => cfg.port_bytes as u64,
+        "line_cross_penalty" => cfg.line_cross_penalty,
+        "cross_lane_per_128b" => cfg.cross_lane_per_128b,
+        "l1_lat" => cfg.l1_lat,
+        "l2_lat" => cfg.l2_lat,
+        "mem_lat" => cfg.mem_lat,
+        "branch_mispredict_penalty" => cfg.branch_mispredict_penalty,
+        "opaque_lat" => cfg.opaque_lat,
+        _ => return None,
+    })
+}
+
+/// One variant being assembled by [`parse_variants`]: the base name,
+/// the base configuration (for detecting no-op overrides), the
+/// configuration so far, and the effective overrides (last value wins
+/// per key) for canonical naming.
+struct PendingVariant {
+    base: String,
+    base_cfg: UarchConfig,
+    cfg: UarchConfig,
+    /// ([`OVERRIDE_KEYS`] index, parsed value), deduplicated by key.
+    overrides: Vec<(usize, u64)>,
+}
+
+impl PendingVariant {
+    fn new(base: &str, cfg: UarchConfig) -> PendingVariant {
+        PendingVariant {
+            base: base.to_string(),
+            base_cfg: cfg.clone(),
+            cfg,
+            overrides: Vec::new(),
+        }
+    }
+
+    fn finish(mut self) -> UarchVariant {
+        // canonical name: overrides in UarchConfig declaration order,
+        // independent of the order (or repetition) they were spelled in
+        self.overrides.sort_by_key(|&(ki, _)| ki);
+        let mut name = self.base;
+        for (ki, v) in self.overrides {
+            name.push_str(&format!("+{}={v}", OVERRIDE_KEYS[ki]));
+        }
+        UarchVariant { name, cfg: self.cfg }
+    }
+}
+
+/// Validate a finished variant list: unique names, unique
+/// configurations, realizable cache geometry. Shared by
+/// [`parse_variants`] and the sweep engine (`coordinator::run_dse`),
+/// so API callers constructing variants directly get the same
+/// guarantees as the CLI.
+pub fn check_variants(variants: &[UarchVariant]) -> Result<(), String> {
+    for (i, v) in variants.iter().enumerate() {
+        if variants[i + 1..].iter().any(|w| w.name == v.name) {
+            return Err(format!("duplicate variant '{}'", v.name));
+        }
+        // identical configurations under different labels would simulate
+        // every job twice and emit two identically-timed columns
+        if let Some(twin) = variants[i + 1..].iter().find(|w| w.cfg == v.cfg) {
+            return Err(format!(
+                "'{}' and '{}' are the same configuration",
+                v.name, twin.name
+            ));
+        }
+        validate(&v.cfg).map_err(|e| format!("variant '{}': {e}", v.name))?;
+    }
+    Ok(())
+}
+
+/// Parse a `--uarch` specification into a list of variants.
+///
+/// The spec is comma-separated. A bare name starts a new variant
+/// ([`base_variant`]); a `key=value` item overrides a field of the
+/// variant named before it (a leading override starts from `table2`).
+/// Overrides become part of the variant's display name in **canonical
+/// form** — trimmed key, parsed integer value, field declaration
+/// order, last value per key wins, no-ops restating the base's own
+/// value dropped — so equivalent spellings (`l2_bytes=512K` vs
+/// `l2_bytes=524288`, reordered or repeated keys) produce the same
+/// name and `sve report --compare` matches their points across
+/// artifacts; the job-cache key covers the resulting configuration
+/// itself (see `report::store::job_key`). Each finished list passes
+/// [`check_variants`], so a duplicate design point or an unrealizable
+/// combination is a parse error here, not a worker panic mid-sweep.
+///
+/// ```
+/// use sve_repro::uarch::parse_variants;
+/// let vs = parse_variants("table2,small-core,l2_bytes=512K").unwrap();
+/// assert_eq!(vs.len(), 2);
+/// assert_eq!(vs[0].name, "table2");
+/// assert_eq!(vs[1].name, "small-core+l2_bytes=524288");
+/// assert_eq!(vs[1].cfg.l2_bytes, 512 * 1024);
+/// assert!(parse_variants("no-such-core").is_err());
+/// assert!(parse_variants("table2,decode_width=0").is_err());
+/// assert!(parse_variants("table2,l1d_assoc=3").is_err()); // 341 sets
+/// ```
+pub fn parse_variants(spec: &str) -> Result<Vec<UarchVariant>, String> {
+    let mut out: Vec<UarchVariant> = Vec::new();
+    let mut cur: Option<PendingVariant> = None;
+    for raw in spec.split(',') {
+        let item = raw.trim();
+        if item.is_empty() {
+            return Err("--uarch: empty entry (check for stray commas)".into());
+        }
+        if let Some((key, value)) = item.split_once('=') {
+            let pending = cur.get_or_insert_with(|| {
+                PendingVariant::new("table2", UarchConfig::default())
+            });
+            let key = key.trim();
+            let v = set_field(&mut pending.cfg, key, value.trim())?;
+            let ki = OVERRIDE_KEYS
+                .iter()
+                .position(|k| *k == key)
+                .expect("set_field accepted the key");
+            if field_value(&pending.base_cfg, key) == Some(v) {
+                // no-op override (the base variant's own value): keep it
+                // out of the canonical name, so the same design point is
+                // named identically however it was spelled
+                pending.overrides.retain(|&(i, _)| i != ki);
+            } else {
+                match pending.overrides.iter_mut().find(|(i, _)| *i == ki) {
+                    Some(entry) => entry.1 = v,
+                    None => pending.overrides.push((ki, v)),
+                }
+            }
+        } else {
+            let cfg = base_variant(item).ok_or_else(|| {
+                format!(
+                    "--uarch: unknown variant '{item}' (known: {})",
+                    VARIANT_NAMES.join(", ")
+                )
+            })?;
+            if let Some(done) = cur.take() {
+                out.push(done.finish());
+            }
+            cur = Some(PendingVariant::new(item, cfg));
+        }
+    }
+    if let Some(done) = cur.take() {
+        out.push(done.finish());
+    }
+    if out.is_empty() {
+        return Err("--uarch: no variants given".into());
+    }
+    check_variants(&out).map_err(|e| format!("--uarch: {e}"))?;
+    Ok(out)
+}
+
 /// Execution latency (cycles) of a µop class, before memory/cross-lane
 /// adjustments. Scalar/vector ALU latencies follow common RTL-derived
 /// values for a mid-range core (A72-class).
@@ -143,6 +532,119 @@ mod tests {
         assert_eq!((c.vec_issue_per_cycle, c.vec_sched_entries), (2, 24));
         assert_eq!((c.loads_per_cycle, c.stores_per_cycle), (2, 1));
         assert_eq!(c.port_bytes * 8, 512, "max access = full line, 512 bits");
+    }
+
+    #[test]
+    fn every_named_variant_resolves_and_table2_is_default() {
+        for name in VARIANT_NAMES {
+            let cfg = base_variant(name).unwrap_or_else(|| panic!("{name} must resolve"));
+            assert!(cfg.decode_width >= 1 && cfg.loads_per_cycle >= 1, "{name} must be runnable");
+        }
+        assert_eq!(base_variant("table2").unwrap(), UarchConfig::default());
+        assert!(base_variant("huge-core").is_none());
+        // the scaled corners actually move the Table 2 knobs
+        let small = base_variant("small-core").unwrap();
+        let big = base_variant("big-core").unwrap();
+        let t2 = UarchConfig::default();
+        assert!(small.l2_bytes < t2.l2_bytes && big.l2_bytes > t2.l2_bytes);
+        assert!(small.decode_width < t2.decode_width && big.decode_width > t2.decode_width);
+        assert_eq!(base_variant("narrow-mem").unwrap().loads_per_cycle, 1);
+        assert_eq!(base_variant("deep-rob").unwrap().rob, 2 * t2.rob);
+    }
+
+    #[test]
+    fn overrides_parse_sizes_and_guard_zeros() {
+        let mut c = UarchConfig::default();
+        set_field(&mut c, "l2_bytes", "512K").unwrap();
+        assert_eq!(c.l2_bytes, 512 * 1024);
+        set_field(&mut c, "l1d_bytes", "1M").unwrap();
+        assert_eq!(c.l1d_bytes, 1024 * 1024);
+        set_field(&mut c, "loads_per_cycle", "1").unwrap();
+        assert_eq!(c.loads_per_cycle, 1);
+        set_field(&mut c, "line_cross_penalty", "0").unwrap();
+        assert_eq!(c.line_cross_penalty, 0);
+        assert!(set_field(&mut c, "decode_width", "0").is_err());
+        assert!(set_field(&mut c, "l2_bytes", "banana").is_err());
+        assert!(set_field(&mut c, "not_a_knob", "4").is_err());
+        // every advertised key is actually settable
+        let mut d = UarchConfig::default();
+        for key in OVERRIDE_KEYS {
+            set_field(&mut d, key, "7").unwrap_or_else(|e| panic!("{key}: {e}"));
+        }
+    }
+
+    #[test]
+    fn variant_spec_parsing_names_and_overrides() {
+        let vs = parse_variants("table2,small-core,l2_bytes=512K,big-core").unwrap();
+        assert_eq!(vs.len(), 3);
+        assert_eq!(vs[0].name, "table2");
+        assert_eq!(vs[1].name, "small-core+l2_bytes=524288");
+        assert_eq!(vs[1].cfg.l2_bytes, 512 * 1024);
+        // the override touches only the variant it follows
+        assert_eq!(vs[0].cfg.l2_bytes, 256 * 1024);
+        assert_eq!(vs[2].cfg, base_variant("big-core").unwrap());
+        // equivalent spellings canonicalize to one display name, so
+        // --compare matches their points across artifacts
+        let exact = parse_variants("small-core,l2_bytes=524288").unwrap();
+        assert_eq!(vs[1].name, exact[0].name);
+        assert_eq!(vs[1].cfg, exact[0].cfg);
+        // a leading override starts from table2
+        let lead = parse_variants("loads_per_cycle=1").unwrap();
+        assert_eq!(lead[0].name, "table2+loads_per_cycle=1");
+        assert_eq!(lead[0].cfg.loads_per_cycle, 1);
+        // canonical name: declaration order regardless of spec order,
+        // and a repeated key collapses to its last value
+        let ab = parse_variants("table2,rob=256,mem_lat=100").unwrap();
+        let ba = parse_variants("table2,mem_lat=100,rob=256").unwrap();
+        assert_eq!(ab[0].name, "table2+rob=256+mem_lat=100");
+        assert_eq!(ab[0].name, ba[0].name);
+        assert_eq!(ab[0].cfg, ba[0].cfg);
+        let rep = parse_variants("table2,rob=128,rob=256").unwrap();
+        assert_eq!(rep[0].name, "table2+rob=256");
+        assert_eq!(rep[0].cfg.rob, 256);
+        // an override restating the base's own value is name-neutral —
+        // the same design point is named identically however spelled
+        let noop = parse_variants("table2,rob=128").unwrap();
+        assert_eq!(noop[0].name, "table2");
+        assert_eq!(noop[0].cfg, UarchConfig::default());
+        let undone = parse_variants("table2,rob=256,rob=128").unwrap();
+        assert_eq!(undone[0].name, "table2");
+        // reordered duplicates are therefore caught as duplicates
+        assert!(
+            parse_variants("table2,rob=256,mem_lat=100,table2,mem_lat=100,rob=256").is_err()
+        );
+        // errors
+        assert!(parse_variants("").is_err());
+        assert!(parse_variants("table2,,big-core").is_err());
+        assert!(parse_variants("table2,table2").is_err());
+        assert!(parse_variants("small-core,rob=banana").is_err());
+        // spelled differently but identical configs are still duplicates
+        assert!(parse_variants("table2,l2_bytes=512K,table2,l2_bytes=524288").is_err());
+        // even when the labels differ: narrow-mem IS table2 with 1 load
+        let err = parse_variants("narrow-mem,table2,loads_per_cycle=1").unwrap_err();
+        assert!(err.contains("same configuration"), "{err}");
+    }
+
+    #[test]
+    fn validate_rejects_unrealizable_cache_geometry() {
+        for name in VARIANT_NAMES {
+            validate(&base_variant(name).unwrap())
+                .unwrap_or_else(|e| panic!("{name} must validate: {e}"));
+        }
+        // 1024 lines / 3 ways = 341 sets, not a power of two
+        let c = UarchConfig { l1d_assoc: 3, ..UarchConfig::default() };
+        assert!(validate(&c).unwrap_err().contains("l1d"));
+        let c = UarchConfig { line_bytes: 48, ..UarchConfig::default() };
+        assert!(validate(&c).unwrap_err().contains("power of two"));
+        // 1536 lines / 8 ways = 192 sets
+        let c = UarchConfig { l2_bytes: 96 * 1024, ..UarchConfig::default() };
+        assert!(validate(&c).is_err());
+        // zero lines
+        let c = UarchConfig { l1i_bytes: 1, ..UarchConfig::default() };
+        assert!(validate(&c).is_err());
+        // parse_variants surfaces it as a parse error (CLI exit 2), so a
+        // bad combination can never reach the sweep workers
+        assert!(parse_variants("table2,l1d_assoc=3").unwrap_err().contains("geometry"));
     }
 
     #[test]

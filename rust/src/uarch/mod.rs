@@ -17,7 +17,10 @@ pub mod config;
 pub mod pipeline;
 pub mod trace;
 
-pub use config::UarchConfig;
+pub use config::{
+    base_variant, check_variants, field_value, parse_variants, set_field, validate,
+    UarchConfig, UarchVariant, OVERRIDE_KEYS, VARIANT_NAMES,
+};
 pub use pipeline::{InstTiming, Pipeline, TimingResult};
 
 use crate::asm::Program;

@@ -11,8 +11,10 @@
 //!   (HACCmk, HimenoBMT, STREAM-triad, LULESH, SpMV, strlen).
 
 use crate::compiler::chase::{compile_chase, ChaseKernel};
-use crate::compiler::{compile, BinOp, CmpKind, Compiled, Expr, Index, Kernel, OuterDim, Quirk,
-                      RedKind, Reduction, Stmt, Target, Trip, Ty, UnOp};
+use crate::compiler::{
+    compile, BinOp, CmpKind, Compiled, Expr, Index, Kernel, OuterDim, Quirk, RedKind, Reduction,
+    Stmt, Target, Trip, Ty, UnOp,
+};
 use crate::isa::OpaqueFn;
 use crate::mem::Memory;
 use crate::rng::Rng;

@@ -1,0 +1,178 @@
+//! Golden-file tests for the DSE and compare emitters: the JSON, CSV
+//! and Markdown renderings of a fixed synthetic variant set — and the
+//! compare report over a doctored copy of it — are pinned byte-for-byte
+//! against `tests/golden/dse.{json,csv,md}` and
+//! `tests/golden/compare.txt`. Synthetic inputs keep the goldens
+//! independent of the timing model, so these suites fail only when the
+//! *emitters* change — at which point the golden files must be updated
+//! in the same commit (regenerate with `python3 tools/gen_goldens.py`),
+//! making every artifact-format change reviewable.
+//!
+//! All float inputs are dyadic rationals, so their shortest-round-trip
+//! renderings are short and platform-independent.
+
+use sve_repro::coordinator::{Fig8Row, Isa, RunRecord, VariantRows};
+use sve_repro::report::compare::{self, SpeedupPoint};
+use sve_repro::report::dse;
+use sve_repro::report::json::Json;
+use sve_repro::uarch::parse_variants;
+use sve_repro::workloads::Group;
+
+const VLS: [usize; 2] = [128, 256];
+
+#[allow(clippy::too_many_arguments)]
+fn rec(
+    bench: &'static str,
+    group: Group,
+    isa: Isa,
+    cycles: u64,
+    insts: u64,
+    ipc: f64,
+    vectorized: bool,
+    vector_fraction: f64,
+    l1d_miss_rate: f64,
+) -> RunRecord {
+    RunRecord { bench, group, isa, cycles, insts, vector_fraction, vectorized, l1d_miss_rate, ipc }
+}
+
+fn rows(triad_cycles: [u64; 3], triad_ipc: [f64; 3], g500_cycles: u64, g500_ipc: f64) -> Vec<Fig8Row> {
+    let triad_neon = rec(
+        "stream_triad",
+        Group::Right,
+        Isa::Neon,
+        triad_cycles[0],
+        10000,
+        triad_ipc[0],
+        true,
+        0.5,
+        0.125,
+    );
+    let triad_sve = vec![
+        rec(
+            "stream_triad",
+            Group::Right,
+            Isa::Sve(128),
+            triad_cycles[1],
+            9000,
+            triad_ipc[1],
+            true,
+            0.75,
+            0.0625,
+        ),
+        rec(
+            "stream_triad",
+            Group::Right,
+            Isa::Sve(256),
+            triad_cycles[2],
+            4500,
+            triad_ipc[2],
+            true,
+            0.75,
+            0.03125,
+        ),
+    ];
+    let g500 = rec("graph500", Group::Left, Isa::Neon, g500_cycles, 20000, g500_ipc, false, 0.0, 0.25);
+    let g500_sve = vec![
+        rec("graph500", Group::Left, Isa::Sve(128), g500_cycles, 20000, g500_ipc, false, 0.0, 0.25),
+        rec("graph500", Group::Left, Isa::Sve(256), g500_cycles, 20000, g500_ipc, false, 0.0, 0.25),
+    ];
+    vec![
+        Fig8Row {
+            bench: "stream_triad",
+            group: Group::Right,
+            neon: triad_neon,
+            sve: triad_sve,
+            extra_vectorization: 0.25,
+        },
+        Fig8Row {
+            bench: "graph500",
+            group: Group::Left,
+            neon: g500,
+            sve: g500_sve,
+            extra_vectorization: 0.0,
+        },
+    ]
+}
+
+/// Must stay in sync with `tools/gen_goldens.py`.
+fn variants() -> Vec<VariantRows> {
+    let parsed = parse_variants("table2,small-core,l2_bytes=512K").unwrap();
+    vec![
+        VariantRows {
+            name: parsed[0].name.clone(),
+            uarch: parsed[0].cfg.clone(),
+            rows: rows([1000, 800, 400], [1.5, 2.5, 3.5], 2000, 0.5),
+        },
+        VariantRows {
+            name: parsed[1].name.clone(),
+            uarch: parsed[1].cfg.clone(),
+            rows: rows([2000, 1600, 1000], [0.75, 1.25, 2.25], 4000, 0.25),
+        },
+    ]
+}
+
+#[test]
+fn dse_json_matches_golden_and_roundtrips() {
+    let v = dse::to_json(&variants(), &VLS);
+    let rendered = v.render_pretty();
+    assert_eq!(rendered, include_str!("golden/dse.json"), "dse.json emitter drifted");
+    assert_eq!(Json::parse(&rendered).unwrap(), v);
+}
+
+#[test]
+fn dse_csv_matches_golden() {
+    let csv = dse::table(&variants(), &VLS).to_csv();
+    assert_eq!(csv, include_str!("golden/dse.csv"), "dse.csv emitter drifted");
+}
+
+#[test]
+fn dse_markdown_matches_golden() {
+    let md = dse::to_markdown(&variants(), &VLS);
+    assert_eq!(md, include_str!("golden/dse.md"), "dse.md emitter drifted");
+}
+
+#[test]
+fn dse_artifact_writer_emits_the_same_bytes() {
+    let dir =
+        std::env::temp_dir().join(format!("sve-dse-golden-artifacts-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let paths = dse::write_artifacts(&variants(), &VLS, &dir).unwrap();
+    let by_name = |suffix: &str| {
+        let p = paths.iter().find(|p| p.to_string_lossy().ends_with(suffix)).unwrap();
+        std::fs::read_to_string(p).unwrap()
+    };
+    assert_eq!(by_name("dse.json"), include_str!("golden/dse.json"));
+    assert_eq!(by_name("dse.csv"), include_str!("golden/dse.csv"));
+    assert_eq!(by_name("dse.md"), include_str!("golden/dse.md"));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The compare report over the golden DSE artifact and a doctored copy:
+/// one -10% regression, one +3% improvement, one point dropped, one
+/// point added — pinned byte-for-byte, including the failure summary.
+#[test]
+fn compare_report_matches_golden() {
+    let a = compare::extract_points(&dse::to_json(&variants(), &VLS)).unwrap();
+    assert_eq!(a.len(), 8, "fixture drifted");
+    let mut b: Vec<SpeedupPoint> = a.clone();
+    // -10% on table2/stream_triad@256 (beyond the 2% threshold)
+    b[1].speedup = 2.25;
+    // +3% on table2/graph500@128 (improvements never fail)
+    b[2].speedup = 1.03;
+    // drop small-core+l2_bytes=524288/graph500@256, add table2/haccmk@128
+    b.remove(7);
+    b.push(SpeedupPoint {
+        variant: "table2".into(),
+        bench: "haccmk".into(),
+        vl_bits: 128,
+        speedup: 1.5,
+    });
+    let cmp = compare::compare(&a, &b, Some(2.0));
+    assert!(cmp.failed(), "one regression + one missing point must fail");
+    assert_eq!(cmp.compared, 7);
+    let rendered = compare::render(&cmp);
+    assert_eq!(rendered, include_str!("golden/compare.txt"), "compare renderer drifted");
+    // and the clean self-comparison stays clean
+    let clean = compare::compare(&a, &a, Some(2.0));
+    assert!(!clean.failed());
+}

@@ -7,11 +7,14 @@ use std::path::PathBuf;
 use std::process::Command;
 
 use sve_repro::coordinator::{
-    run_fig8, run_fig8_sequential, run_one, run_sweep, Fig8Row, Isa, SweepConfig,
+    run_dse, run_fig8, run_fig8_sequential, run_one, run_sweep, Fig8Row, Isa, RunRecord,
+    SweepConfig,
 };
-use sve_repro::report::store::job_key;
-use sve_repro::uarch::UarchConfig;
-use sve_repro::workloads;
+use sve_repro::report::store::{job_key, JobStore};
+use sve_repro::uarch::{
+    base_variant, parse_variants, set_field, UarchConfig, OVERRIDE_KEYS, VARIANT_NAMES,
+};
+use sve_repro::workloads::{self, Group};
 
 fn temp_dir(tag: &str) -> PathBuf {
     let dir = std::env::temp_dir().join(format!("sve-itest-{tag}-{}", std::process::id()));
@@ -92,6 +95,120 @@ fn sharded_resumed_sweep_bit_identical_to_sequential() {
     let _ = std::fs::remove_dir_all(&dir);
 }
 
+/// The DSE acceptance pin: a two-variant design-space sweep populates
+/// the job cache cold, a second invocation reloads every job
+/// bit-identically, and the `table2` variant matches the plain
+/// sequential Fig. 8 sweep exactly. The cache is shared with plain
+/// `sve sweep` runs over the same matrix.
+#[test]
+fn dse_sweep_resumes_bit_identically_and_shares_the_job_cache() {
+    let vls = [128usize, 256];
+    let names = ["stream_triad", "haccmk"];
+    let dir = temp_dir("dse-resume");
+    let mut cfg = SweepConfig::new(&vls, &names);
+    cfg.jobs = 2;
+    cfg.out_dir = Some(dir.clone());
+    let variants = parse_variants("table2,small-core").unwrap();
+
+    // cold: the full (2 variants x 2 benches x (1 NEON + 2 VLs)) matrix
+    let cold = run_dse(&cfg, &variants).expect("cold dse");
+    assert_eq!((cold.simulated, cold.reloaded), (12, 0));
+    let seq = run_fig8_sequential(&vls, &names).expect("sequential reference");
+    assert_rows_bit_identical(&seq, &cold.variants[0].rows);
+    // the variant axis changes timing but never functional results
+    let t2 = &cold.variants[0].rows[0];
+    let small = &cold.variants[1].rows[0];
+    assert_eq!(t2.neon.insts, small.neon.insts);
+    assert!(small.neon.cycles > t2.neon.cycles, "halved core must be slower");
+
+    // warm: every job reloads, rows stay bit-identical
+    cfg.resume = true;
+    let warm = run_dse(&cfg, &variants).expect("warm dse");
+    assert_eq!((warm.simulated, warm.reloaded), (0, 12));
+    for (a, b) in cold.variants.iter().zip(&warm.variants) {
+        assert_eq!(a.name, b.name);
+        assert_rows_bit_identical(&a.rows, &b.rows);
+    }
+
+    // a plain table2 sweep over the same matrix hits the same cache
+    let plain = run_sweep(&cfg).expect("plain sweep over dse cache");
+    assert_eq!((plain.simulated, plain.reloaded), (0, 6));
+    assert_rows_bit_identical(&seq, &plain.rows);
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Property: `--uarch` overrides round-trip through `job_key` — equal
+/// configurations always produce equal keys (cache hits), distinct
+/// configurations always produce distinct keys (no stale-number leaks).
+#[test]
+fn uarch_overrides_roundtrip_through_job_key() {
+    sve_repro::proptest_lite::check("uarch_override_job_key", 64, |g| {
+        let base = *g.choose(&VARIANT_NAMES);
+        let mut a = base_variant(base).unwrap();
+        let mut b = a.clone();
+        for _ in 0..g.usize_in(0, 4) {
+            let key = *g.choose(&OVERRIDE_KEYS);
+            let va = g.u64_in(1, 512).to_string();
+            set_field(&mut a, key, &va).unwrap();
+            // sometimes apply the same override to b, sometimes diverge
+            if g.bool() {
+                set_field(&mut b, key, &va).unwrap();
+            } else {
+                set_field(&mut b, key, &g.u64_in(513, 1024).to_string()).unwrap();
+            }
+        }
+        let ka = job_key("stream_triad", Isa::Sve(256), &a);
+        let kb = job_key("stream_triad", Isa::Sve(256), &b);
+        assert_eq!(
+            a == b,
+            ka == kb,
+            "configs {}equal but keys {}equal:\n  a = {a:?}\n  b = {b:?}",
+            if a == b { "" } else { "un" },
+            if ka == kb { "" } else { "un" },
+        );
+    });
+}
+
+/// Differently-spelled overrides that produce the same configuration
+/// share one cache entry; a genuinely different value misses.
+#[test]
+fn equivalent_override_spellings_hit_the_same_cache_entry() {
+    let spelled = parse_variants("small-core,l2_bytes=512K").unwrap();
+    let exact = parse_variants("small-core,l2_bytes=524288").unwrap();
+    assert_eq!(spelled[0].cfg, exact[0].cfg);
+    // canonical display names too, so --compare matches their points
+    assert_eq!(spelled[0].name, exact[0].name);
+    let key = job_key("stream_triad", Isa::Sve(256), &spelled[0].cfg);
+    assert_eq!(key, job_key("stream_triad", Isa::Sve(256), &exact[0].cfg));
+
+    let dir = temp_dir("uarch-cache");
+    let st = JobStore::open(&dir).unwrap();
+    let r = RunRecord {
+        bench: "stream_triad",
+        group: Group::Right,
+        isa: Isa::Sve(256),
+        cycles: 4321,
+        insts: 1234,
+        vector_fraction: 0.75,
+        vectorized: true,
+        l1d_miss_rate: 0.0625,
+        ipc: 1.25,
+    };
+    st.save(&key, &r).unwrap();
+    // the equivalent spelling hits...
+    let hit = st
+        .load(&job_key("stream_triad", Isa::Sve(256), &exact[0].cfg), r.bench, r.isa)
+        .expect("equivalent spelling must hit");
+    assert_eq!(hit.cycles, r.cycles);
+    // ...a different value misses
+    let other = parse_variants("small-core,l2_bytes=256K").unwrap();
+    let miss_key = job_key("stream_triad", Isa::Sve(256), &other[0].cfg);
+    assert_ne!(key, miss_key);
+    assert!(st.load(&miss_key, r.bench, r.isa).is_none());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
 #[test]
 fn every_benchmark_runs_and_validates_on_sve_256() {
     for name in workloads::NAMES {
@@ -137,6 +254,34 @@ fn cli_usage_errors_exit_2_without_panicking() {
         (&["sweep", "--vls", "4096"][..], "illegal"),
         (&["sweep", "--jobs", "many"][..], "not a number"),
         (&["sweep", "--benches", "nosuchbench"][..], "unknown benchmark"),
+        (&["dse", "--uarch", "no-such-core"][..], "unknown variant"),
+        (&["dse", "--uarch", "table2,table2"][..], "duplicate variant"),
+        (&["dse", "--uarch", "table2,decode_width=0"][..], "must be >= 1"),
+        (&["dse", "--uarch", "table2,l1d_assoc=3"][..], "geometry"),
+        (&["dse", "--uarch"][..], "--uarch needs a value"),
+        (&["sweep", "--vls"][..], "--vls needs a value"),
+        (&["dse", "--uarch", "table2,l2_bytes=banana"][..], "not a number"),
+        (&["dse", "--uarch", "table2,not_a_knob=4"][..], "unknown parameter"),
+        (&["dse", "--uarch", ""][..], "empty entry"),
+        (&["dse", "--benches", "nosuchbench"][..], "unknown benchmark"),
+        (&["report", "--compare"][..], "two artifact paths"),
+        (&["report", "--compare", "only-one.json"][..], "two artifact paths"),
+        (
+            &["report", "--compare", "a.json", "--fail-on-regress", "2"][..],
+            "two artifact paths",
+        ),
+        (
+            &["report", "--compare", "a.json", "b.json", "--fail-on-regress", "x"][..],
+            "not a non-negative number",
+        ),
+        (
+            &["report", "--compare", "a.json", "b.json", "--fail-on-regress", "-3"][..],
+            "not a non-negative number",
+        ),
+        (
+            &["report", "--compare", "a.json", "b.json", "--fail-on-regress"][..],
+            "--fail-on-regress needs a value",
+        ),
     ] {
         let out = sve(args);
         assert_eq!(
@@ -175,6 +320,100 @@ fn cli_help_and_list_exit_0() {
     for name in workloads::NAMES {
         assert!(stdout.contains(name), "list missing {name}");
     }
+}
+
+/// A fig8-schema artifact with one benchmark and two VL points, with
+/// the given speedups — just enough structure for `--compare`.
+fn fig8_artifact(sp128: &str, sp256: &str) -> String {
+    format!(
+        r#"{{
+  "schema": "sve-repro/fig8/v1",
+  "benchmarks": [
+    {{
+      "bench": "stream_triad",
+      "sve": [
+        {{ "vl_bits": 128, "speedup": {sp128} }},
+        {{ "vl_bits": 256, "speedup": {sp256} }}
+      ]
+    }}
+  ]
+}}
+"#
+    )
+}
+
+#[test]
+fn cli_compare_exit_code_contract() {
+    let dir = temp_dir("cli-compare");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = |name: &str| dir.join(name).to_string_lossy().into_owned();
+    std::fs::write(dir.join("a.json"), fig8_artifact("1.25", "2.5")).unwrap();
+    std::fs::write(dir.join("same.json"), fig8_artifact("1.25", "2.5")).unwrap();
+    std::fs::write(dir.join("regress.json"), fig8_artifact("1.25", "2.25")).unwrap();
+    std::fs::write(dir.join("garbage.json"), "not json at all").unwrap();
+
+    // identical artifacts: exit 0, readable delta table on stdout
+    let out = sve(&[
+        "report", "--compare", &path("a.json"), &path("same.json"),
+        "--fail-on-regress", "2",
+    ]);
+    assert_eq!(out.status.code(), Some(0), "identical inputs must pass");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("| stream_triad"), "delta table missing: {stdout}");
+    assert!(stdout.contains("0 failure(s)"), "summary missing: {stdout}");
+
+    // a -10% speedup drop against a 2% threshold: exit 1, REGRESS row
+    let out = sve(&[
+        "report", "--compare", &path("a.json"), &path("regress.json"),
+        "--fail-on-regress", "2",
+    ]);
+    assert_eq!(out.status.code(), Some(1), "regression must fail the wall");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("REGRESS"), "regression not flagged: {stdout}");
+    assert!(stdout.contains("-10.00"), "delta missing: {stdout}");
+
+    // the same drop without a threshold is informational: exit 0
+    let out = sve(&["report", "--compare", &path("a.json"), &path("regress.json")]);
+    assert_eq!(out.status.code(), Some(0), "no threshold, no failure");
+
+    // unreadable / unparseable inputs are runtime failures: exit 1
+    let out = sve(&["report", "--compare", &path("missing.json"), &path("a.json")]);
+    assert_eq!(out.status.code(), Some(1));
+    let out = sve(&["report", "--compare", &path("a.json"), &path("garbage.json")]);
+    assert_eq!(out.status.code(), Some(1));
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn cli_dse_writes_artifacts_and_reports_cache_counts() {
+    let dir = temp_dir("cli-dse");
+    let out_dir = dir.to_string_lossy().into_owned();
+    let out = sve(&[
+        "dse", "--uarch", "narrow-mem", "--vls", "128", "--benches", "stream_triad",
+        "--out", &out_dir, "--jobs", "1",
+    ]);
+    assert_eq!(
+        out.status.code(),
+        Some(0),
+        "stderr: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("2 jobs: 2 simulated, 0 reloaded"), "{stdout}");
+    assert!(stdout.contains("Cross-variant pivot"), "{stdout}");
+    for name in ["dse.json", "dse.csv", "dse.md"] {
+        assert!(dir.join(name).exists(), "{name} missing");
+    }
+    // resumed: both jobs reload from the cache
+    let out = sve(&[
+        "dse", "--uarch", "narrow-mem", "--vls", "128", "--benches", "stream_triad",
+        "--out", &out_dir, "--jobs", "1", "--resume",
+    ]);
+    assert_eq!(out.status.code(), Some(0));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("2 jobs: 0 simulated, 2 reloaded"), "{stdout}");
+    let _ = std::fs::remove_dir_all(&dir);
 }
 
 #[test]

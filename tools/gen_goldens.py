@@ -1,0 +1,392 @@
+#!/usr/bin/env python3
+"""Author the DSE/compare golden files without a Rust toolchain.
+
+This is a line-for-line Python mirror of the Rust emitters in
+`rust/src/report/{json,dse,compare,fig8}.rs` and `rust/src/csvutil.rs`,
+used to (re)generate `tests/golden/dse.{json,csv,md}` and
+`tests/golden/compare.txt` for the byte-for-byte golden tests in
+`tests/dse_compare_golden.rs` (whose fixture must stay in sync with
+`variants()` below). The authoring containers for this repo carry no
+cargo, so the goldens are produced here and *verified* against the Rust
+emitters by CI's `cargo test`.
+
+All float inputs are dyadic rationals: Rust renders floats with
+shortest-round-trip Display (integral floats print without ".0"), and
+`rust_float` below reproduces that for the value range used here.
+"""
+
+import os
+
+GOLDEN_DIR = os.path.join(os.path.dirname(__file__), "..", "tests", "golden")
+
+DSE_SCHEMA = "sve-repro/dse/v1"
+
+
+# ---------------------------------------------------------------------
+# rust/src/report/json.rs — Json::render_pretty
+# ---------------------------------------------------------------------
+
+def rust_float(v):
+    """Rust `format!("{v}")` for f64: shortest repr, no trailing .0."""
+    if v == int(v):
+        return str(int(v))
+    return repr(v)
+
+
+def render_json(v, indent=0):
+    pad = "  " * indent
+    pad_in = "  " * (indent + 1)
+    if isinstance(v, bool):
+        return "true" if v else "false"
+    if isinstance(v, int):
+        return str(v)
+    if isinstance(v, float):
+        return rust_float(v)
+    if isinstance(v, str):
+        return '"%s"' % v  # no escapes needed in golden data
+    if isinstance(v, list):
+        if not v:
+            return "[]"
+        items = ",\n".join(pad_in + render_json(x, indent + 1) for x in v)
+        return "[\n%s\n%s]" % (items, pad)
+    if isinstance(v, dict):
+        if not v:
+            return "{}"
+        items = ",\n".join(
+            '%s"%s": %s' % (pad_in, k, render_json(x, indent + 1)) for k, x in v.items()
+        )
+        return "{\n%s\n%s}" % (items, pad)
+    raise TypeError(type(v))
+
+
+def render_pretty(v):
+    return render_json(v) + "\n"
+
+
+# ---------------------------------------------------------------------
+# rust/src/csvutil.rs — Table
+# ---------------------------------------------------------------------
+
+class Table:
+    def __init__(self, header):
+        self.header = list(header)
+        self.rows = []
+
+    def push_row(self, row):
+        assert len(row) == len(self.header), "ragged row"
+        self.rows.append([str(c) for c in row])
+
+    def to_csv(self):
+        out = [",".join(self.header)]
+        out += [",".join(r) for r in self.rows]
+        return "\n".join(out) + "\n"
+
+    def to_markdown(self):
+        widths = [len(h) for h in self.header]
+        for r in self.rows:
+            for i, c in enumerate(r):
+                widths[i] = max(widths[i], len(c))
+        def fmt_row(cells):
+            return "|" + "".join(" %s |" % c.ljust(w) for c, w in zip(cells, widths))
+        sep = "|" + "".join("-" * (w + 2) + "|" for w in widths)
+        lines = [fmt_row(self.header), sep] + [fmt_row(r) for r in self.rows]
+        return "\n".join(lines) + "\n"
+
+
+def f(v, prec):
+    return "%.*f" % (prec, v)
+
+
+# ---------------------------------------------------------------------
+# the synthetic fixture — must stay in sync with
+# tests/dse_compare_golden.rs::variants()
+# ---------------------------------------------------------------------
+
+def rec(bench, group, vl_bits, cycles, insts, ipc, vectorized, vf, miss):
+    return {
+        "bench": bench, "group": group, "vl_bits": vl_bits, "cycles": cycles,
+        "insts": insts, "ipc": ipc, "vectorized": vectorized,
+        "vector_fraction": vf, "l1d_miss_rate": miss,
+    }
+
+
+def rows(triad_cycles, triad_ipc, g500_cycles, g500_ipc):
+    triad_neon = rec("stream_triad", "right", 128, triad_cycles[0], 10000,
+                     triad_ipc[0], True, 0.5, 0.125)
+    triad_sve = [
+        rec("stream_triad", "right", 128, triad_cycles[1], 9000, triad_ipc[1],
+            True, 0.75, 0.0625),
+        rec("stream_triad", "right", 256, triad_cycles[2], 4500, triad_ipc[2],
+            True, 0.75, 0.03125),
+    ]
+    g500_neon = rec("graph500", "left", 128, g500_cycles, 20000, g500_ipc,
+                    False, 0.0, 0.25)
+    g500_sve = [
+        rec("graph500", "left", 128, g500_cycles, 20000, g500_ipc, False, 0.0, 0.25),
+        rec("graph500", "left", 256, g500_cycles, 20000, g500_ipc, False, 0.0, 0.25),
+    ]
+    return [
+        {"bench": "stream_triad", "group": "right", "extra": 0.25,
+         "neon": triad_neon, "sve": triad_sve},
+        {"bench": "graph500", "group": "left", "extra": 0.0,
+         "neon": g500_neon, "sve": g500_sve},
+    ]
+
+
+def table2_uarch():
+    return {
+        "l1i_bytes": 64 * 1024, "l1i_assoc": 4, "l1d_bytes": 64 * 1024,
+        "l1d_assoc": 4, "mshrs": 12, "l2_bytes": 256 * 1024, "l2_assoc": 8,
+        "line_bytes": 64, "decode_width": 4, "retire_width": 4, "rob": 128,
+        "int_issue_per_cycle": 2, "int_sched_entries": 24,
+        "vec_issue_per_cycle": 2, "vec_sched_entries": 24,
+        "loads_per_cycle": 2, "stores_per_cycle": 1, "ls_sched_entries": 24,
+        "port_bytes": 64, "line_cross_penalty": 2, "cross_lane_per_128b": 1,
+        "l1_lat": 4, "l2_lat": 12, "mem_lat": 80,
+        "branch_mispredict_penalty": 12, "opaque_lat": 40,
+    }
+
+
+def small_core_l2_512k_uarch():
+    c = table2_uarch()
+    c.update({
+        "l1i_bytes": 32 * 1024, "l1d_bytes": 32 * 1024, "mshrs": 6,
+        "l2_bytes": 128 * 1024, "l2_assoc": 4, "decode_width": 2,
+        "retire_width": 2, "rob": 64, "int_issue_per_cycle": 1,
+        "int_sched_entries": 12, "vec_issue_per_cycle": 1,
+        "vec_sched_entries": 12, "loads_per_cycle": 1, "stores_per_cycle": 1,
+        "ls_sched_entries": 12,
+    })
+    c["l2_bytes"] = 512 * 1024  # the +l2_bytes=512K override
+    return c
+
+
+VLS = [128, 256]
+
+
+def variants():
+    return [
+        {"name": "table2", "uarch": table2_uarch(),
+         "rows": rows([1000, 800, 400], [1.5, 2.5, 3.5], 2000, 0.5)},
+        {"name": "small-core+l2_bytes=524288", "uarch": small_core_l2_512k_uarch(),
+         "rows": rows([2000, 1600, 1000], [0.75, 1.25, 2.25], 4000, 0.25)},
+    ]
+
+
+# ---------------------------------------------------------------------
+# rust/src/report/fig8.rs — run_json / benchmarks_json / table
+# ---------------------------------------------------------------------
+
+def speedup(row, i):
+    return row["neon"]["cycles"] / row["sve"][i]["cycles"]
+
+
+def run_json(r, sp=None):
+    out = {"vl_bits": r["vl_bits"]}
+    if sp is not None:
+        out["speedup"] = float(sp)
+    out.update({
+        "cycles": r["cycles"], "insts": r["insts"], "ipc": float(r["ipc"]),
+        "vectorized": r["vectorized"],
+        "vector_fraction": float(r["vector_fraction"]),
+        "l1d_miss_rate": float(r["l1d_miss_rate"]),
+    })
+    return out
+
+
+def benchmarks_json(rws):
+    return [
+        {
+            "bench": r["bench"], "group": r["group"],
+            "extra_vectorization": float(r["extra"]),
+            "neon": run_json(r["neon"]),
+            "sve": [run_json(s, speedup(r, i)) for i, s in enumerate(r["sve"])],
+        }
+        for r in rws
+    ]
+
+
+def fig8_table(rws, vls):
+    header = ["bench", "group", "extra_vec_%"]
+    header += ["speedup_sve%d" % vl for vl in vls]
+    header.append("neon_cycles")
+    t = Table(header)
+    for r in rws:
+        row = [r["bench"], r["group"], f(100.0 * r["extra"], 1)]
+        row += [f(speedup(r, i), 2) for i in range(len(vls))]
+        row.append(str(r["neon"]["cycles"]))
+        t.push_row(row)
+    return t
+
+
+# ---------------------------------------------------------------------
+# rust/src/report/dse.rs — to_json / table / pivot / to_markdown
+# ---------------------------------------------------------------------
+
+def uarch_summary(c):
+    return (
+        "L1D %dK/%d-way · L2 %dK/%d-way · decode/retire %d/%d · ROB %d · "
+        "issue %di+%dv · %d ld / %d st per cycle"
+        % (c["l1d_bytes"] // 1024, c["l1d_assoc"], c["l2_bytes"] // 1024,
+           c["l2_assoc"], c["decode_width"], c["retire_width"], c["rob"],
+           c["int_issue_per_cycle"], c["vec_issue_per_cycle"],
+           c["loads_per_cycle"], c["stores_per_cycle"])
+    )
+
+
+def dse_to_json(vs, vls):
+    return {
+        "schema": DSE_SCHEMA,
+        "figure": "dse",
+        "title": "SVE speedup over Advanced SIMD across microarchitecture design points",
+        "vls_bits": vls,
+        "variants": [
+            {"name": v["name"], "uarch": v["uarch"],
+             "benchmarks": benchmarks_json(v["rows"])}
+            for v in vs
+        ],
+    }
+
+
+def dse_table(vs, vls):
+    t = Table(["variant", "bench", "group", "extra_vec_%", "vl_bits",
+               "speedup", "neon_cycles", "sve_cycles"])
+    for v in vs:
+        for r in v["rows"]:
+            for i, vl in enumerate(vls):
+                t.push_row([
+                    v["name"], r["bench"], r["group"], f(100.0 * r["extra"], 1),
+                    str(vl), f(speedup(r, i), 2), str(r["neon"]["cycles"]),
+                    str(r["sve"][i]["cycles"]),
+                ])
+    return t
+
+
+def dse_pivot(vs, vls):
+    t = Table(["bench", "vl_bits"] + [v["name"] for v in vs])
+    for bi, row0 in enumerate(vs[0]["rows"]):
+        for vi, vl in enumerate(vls):
+            t.push_row([row0["bench"], str(vl)]
+                       + [f(speedup(v["rows"][bi], vi), 2) for v in vs])
+    return t
+
+
+def dse_to_markdown(vs, vls):
+    vl_list = ", ".join(str(v) for v in vls)
+    out = (
+        "# DSE — SVE speedup across µarch design points\n"
+        "\n"
+        "Schema: `%s` · SVE vector lengths: %s bits · "
+        "%d variants × %d benchmarks, every run validated against its "
+        "golden outputs.\n"
+        "\n"
+        "Each variant section is the Fig. 8 table timed under that design "
+        "point; the pivot at the end puts every variant's speedup-vs-VL "
+        "side by side (speedup is NEON cycles / SVE cycles at the same "
+        "design point).\n"
+        "\n" % (DSE_SCHEMA, vl_list, len(vs), len(vs[0]["rows"]))
+    )
+    for v in vs:
+        out += "## %s\n\n%s\n\n%s\n" % (
+            v["name"], uarch_summary(v["uarch"]),
+            fig8_table(v["rows"], vls).to_markdown(),
+        )
+    out += (
+        "## Cross-variant pivot — speedup over NEON\n\n%s\n"
+        "Regenerate with `sve dse --uarch <variants> --out <dir>` (add "
+        "`--resume` to reuse cached jobs); machine-readable copies: "
+        "`dse.json`, `dse.csv`.\n" % dse_pivot(vs, vls).to_markdown()
+    )
+    return out
+
+
+# ---------------------------------------------------------------------
+# rust/src/report/compare.rs — extract_points / compare / render
+# ---------------------------------------------------------------------
+
+def extract_points(vs):
+    pts = []
+    for v in vs:
+        for r in v["rows"]:
+            for i, s in enumerate(r["sve"]):
+                pts.append([v["name"], r["bench"], s["vl_bits"], speedup(r, i)])
+    return pts
+
+
+def label(p):
+    return "%s/%s@vl%d" % (p[0], p[1], p[2])
+
+
+def compare(a, b, fail_below_pct):
+    with_variant = any(p[0] != "table2" for p in a + b)
+    header = (["variant"] if with_variant else []) + [
+        "bench", "vl_bits", "speedup_a", "speedup_b", "delta_%", "status"]
+    t = Table(header)
+    compared, regressions, only_in_a = 0, [], []
+    for pa in a:
+        pb = next((p for p in b if p[:3] == pa[:3]), None)
+        if pb is None:
+            only_in_a.append(label(pa))
+            continue
+        compared += 1
+        delta_pct = (pb[3] / pa[3] - 1.0) * 100.0
+        regressed = (fail_below_pct is not None
+                     and pb[3] < pa[3] * (1.0 - fail_below_pct / 100.0))
+        if regressed:
+            regressions.append("%s: %s -> %s (%+.2f%%)"
+                               % (label(pa), f(pa[3], 3), f(pb[3], 3), delta_pct))
+        cells = ([pa[0]] if with_variant else []) + [
+            pa[1], str(pa[2]), f(pa[3], 3), f(pb[3], 3), "%+.2f" % delta_pct,
+            "REGRESS" if regressed else "ok"]
+        t.push_row(cells)
+    only_in_b = [label(pb) for pb in b if not any(pa[:3] == pb[:3] for pa in a)]
+    return t, compared, regressions, only_in_a, only_in_b, fail_below_pct
+
+
+def render(cmp):
+    t, compared, regressions, only_in_a, only_in_b, pct = cmp
+    out = t.to_markdown()
+    for r in regressions:
+        out += "regression: %s\n" % r
+    for l in only_in_a:
+        out += "only in A (missing from B): %s\n" % l
+    for l in only_in_b:
+        out += "only in B (new): %s\n" % l
+    if pct is not None:
+        out += ("compared %d point(s) against a %s%% regression threshold: "
+                "%d failure(s)\n"
+                % (compared, rust_float(pct), len(regressions) + len(only_in_a)))
+    else:
+        out += "compared %d point(s); no regression threshold set\n" % compared
+    return out
+
+
+def compare_fixture():
+    """Mirror of tests/dse_compare_golden.rs::compare_report_matches_golden."""
+    a = extract_points(variants())
+    assert len(a) == 8
+    b = [list(p) for p in a]
+    b[1][3] = 2.25
+    b[2][3] = 1.03
+    del b[7]
+    b.append(["table2", "haccmk", 128, 1.5])
+    return a, b
+
+
+def main():
+    vs = variants()
+    out = {
+        "dse.json": render_pretty(dse_to_json(vs, VLS)),
+        "dse.csv": dse_table(vs, VLS).to_csv(),
+        "dse.md": dse_to_markdown(vs, VLS),
+        "compare.txt": render(compare(*compare_fixture(), 2.0)),
+    }
+    for name, text in out.items():
+        path = os.path.join(GOLDEN_DIR, name)
+        with open(path, "w", encoding="utf-8") as fh:
+            fh.write(text)
+        print("wrote %s (%d bytes)" % (os.path.normpath(path), len(text)))
+
+
+if __name__ == "__main__":
+    main()
