@@ -11,7 +11,7 @@
 use std::time::Instant;
 use sve_repro::coordinator::{run_dse, SweepConfig};
 use sve_repro::report::dse;
-use sve_repro::uarch::parse_variants;
+use sve_repro::uarch::{parse_variants, ppa};
 
 fn main() {
     let vls = [128usize, 256, 512];
@@ -60,4 +60,35 @@ fn main() {
         "graph500 must stay latency-bound across core sizes: {ratio:.2}"
     );
     println!("shape assertions PASS");
+    // PPA-shape assertions: the area proxy must order the cores at
+    // every VL, every run's energy proxy must be positive, and the
+    // Pareto ranking must cover the full (variant x VL) matrix with a
+    // non-empty frontier
+    for &vl in &vls {
+        let a_small = ppa::area_um2(&outcome.variants[0].uarch, vl).total_um2;
+        let a_t2 = ppa::area_um2(&outcome.variants[1].uarch, vl).total_um2;
+        let a_big = ppa::area_um2(&outcome.variants[2].uarch, vl).total_um2;
+        assert!(
+            a_small < a_t2 && a_t2 < a_big,
+            "VL {vl}: area proxy must order the cores: {a_small} / {a_t2} / {a_big}"
+        );
+    }
+    for v in &outcome.variants {
+        for r in &v.rows {
+            for run in std::iter::once(&r.neon).chain(r.sve.iter()) {
+                let e = dse::run_energy_pj(run, &v.uarch);
+                assert!(
+                    e.is_finite() && e > 0.0,
+                    "{}/{}: energy proxy must be positive, got {e}",
+                    v.name,
+                    run.bench
+                );
+            }
+        }
+    }
+    let pts = dse::pareto(&outcome.variants, &vls);
+    assert_eq!(pts.len(), outcome.variants.len() * vls.len());
+    assert!(pts.iter().any(|p| p.frontier), "frontier must be non-empty");
+    println!("{}", dse::pareto_table(&pts).to_markdown());
+    println!("ppa assertions PASS");
 }

@@ -35,7 +35,7 @@ use std::sync::Mutex;
 use crate::compiler::{Compiled, Target};
 use crate::exec::Executor;
 use crate::report::store::{job_key, JobStore};
-use crate::uarch::{run_timed, UarchConfig, UarchVariant};
+use crate::uarch::{run_timed, PpaCounters, UarchConfig, UarchVariant};
 use crate::workloads::{self, Group, Workload};
 
 /// One simulated configuration.
@@ -102,6 +102,10 @@ pub struct RunRecord {
     pub vectorized: bool,
     pub l1d_miss_rate: f64,
     pub ipc: f64,
+    /// Raw pipeline event counters behind the §PPA energy proxy
+    /// ([`crate::uarch::ppa`]); persisted in every job file so cached
+    /// runs can be re-ranked without re-simulating.
+    pub counters: PpaCounters,
 }
 
 /// Run one workload on one configuration, with output validation.
@@ -156,6 +160,13 @@ pub fn run_compiled_with(
             timing.l1d_misses as f64 / mem_accesses as f64
         },
         ipc: timing.ipc(),
+        counters: PpaCounters {
+            l1d_accesses: mem_accesses,
+            l2_accesses: timing.l1d_misses,
+            mem_accesses: timing.l2_misses,
+            mispredicts: timing.mispredicts,
+            cracked_elems: timing.cracked_elems,
+        },
     })
 }
 

@@ -28,7 +28,7 @@ use sve_repro::csvutil::Table;
 use sve_repro::exec::Executor;
 use sve_repro::isa::encoding;
 use sve_repro::report;
-use sve_repro::report::compare::{self, SpeedupPoint};
+use sve_repro::report::compare::{self, MetricPoint};
 use sve_repro::report::json::Json;
 use sve_repro::uarch::{parse_variants, UarchConfig, VARIANT_NAMES};
 use sve_repro::workloads;
@@ -48,19 +48,23 @@ commands:
       --out DIR              artifact/cache directory (default reports)
       --jobs N               worker threads (default: one per CPU)
       --resume               reuse completed jobs cached under DIR/jobs/
-  dse                        design-space sweep across uarch variants
-      --uarch a,b[,k=v]      variants: table2, small-core, big-core,
+  dse                        design-space sweep across uarch variants,
+                             with PPA proxies + Pareto ranking
+      --uarch a,b[,k=v,...]  variants: table2, small-core, big-core,
                              narrow-mem, deep-rob (default: all five);
                              key=value overrides modify the variant named
-                             before them (l2_bytes=512K, loads_per_cycle=1)
+                             before them (l2_bytes=512K, loads_per_cycle=1);
+                             key=a,b,c sweeps a cartesian grid over the
+                             listed values (rob=64,128,256; max 64 points)
       --vls/--benches/--out/--jobs/--resume   as for sweep
   report                     emit Fig. 2 + Fig. 7 + Fig. 8 artifacts
       --out DIR  --vls A,B,C  --benches a,b  --jobs N   (as for sweep;
                              the Fig. 8 part always resumes from DIR/jobs/)
       --compare A.json B.json  diff two fig8/dse artifacts instead of
                              emitting figures: prints a per-(variant,
-                             bench, VL) speedup delta table
-      --fail-on-regress PCT  with --compare: exit 1 if any speedup drops
+                             bench, VL, metric) delta table covering
+                             speedups and (dse/v2) perf/W + perf/mm2
+      --fail-on-regress PCT  with --compare: exit 1 if any value drops
                              more than PCT percent, or a point disappears
   trace <bench>              Fig. 3-style cycle-by-cycle timeline
       --vl BITS  --limit N
@@ -217,7 +221,7 @@ fn run_sweep_and_emit(cfg: &SweepConfig, out: &PathBuf) {
 
 /// Load an artifact and extract its speedup points, dying with exit 1
 /// (runtime failure) on unreadable/unparseable/unsupported files.
-fn load_points(path: &str) -> Vec<SpeedupPoint> {
+fn load_points(path: &str) -> Vec<MetricPoint> {
     let text = std::fs::read_to_string(path)
         .unwrap_or_else(|e| die_run(&format!("read {path}: {e}")));
     let doc =
@@ -241,7 +245,12 @@ fn run_compare(args: &[String]) -> ! {
     let cmp = compare::compare(&load_points(a), &load_points(b), fail_below_pct);
     print!("{}", compare::render(&cmp));
     if cmp.failed() {
-        die_run("speedup regression beyond threshold (see delta table above)");
+        die_run(&format!(
+            "comparison failed the regression threshold: {} regression(s), \
+             {} point(s) missing from B (see report above)",
+            cmp.regressions.len(),
+            cmp.only_in_a.len()
+        ));
     }
     std::process::exit(0)
 }
@@ -310,8 +319,11 @@ fn main() {
                 println!("## {}\n", v.name);
                 println!("{}", report::fig8::table(&v.rows, &cfg.vls).to_markdown());
             }
-            println!("## Cross-variant pivot — speedup over NEON\n");
+            println!("## Cross-variant pivot — speedup, perf/W, perf/mm2 over NEON\n");
             println!("{}", report::dse::pivot(&outcome.variants, &cfg.vls).to_markdown());
+            println!("## Pareto frontier — performance vs energy vs area\n");
+            let pts = report::dse::pareto(&outcome.variants, &cfg.vls);
+            println!("{}", report::dse::pareto_table(&pts).to_markdown());
             emit_paths_and_counts(
                 report::dse::write_artifacts(&outcome.variants, &cfg.vls, &out),
                 "dse",

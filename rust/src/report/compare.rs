@@ -2,44 +2,55 @@
 //!
 //! Parses two `fig8.json` or `dse.json` artifacts (any mix — a fig8
 //! document is treated as the `table2` variant), matches their
-//! (variant, benchmark, VL) speedup points, and renders a delta table.
-//! With a `--fail-on-regress PCT` threshold the comparison **fails**
-//! when any speedup in A drops by more than PCT percent in B, or when a
-//! point of A is missing from B entirely — the primitive CI uses as a
-//! regression wall. The rendering is a pure function of the two
-//! documents (golden-tested in `tests/dse_compare_golden.rs`), and the
-//! exit-code policy lives in `main.rs`: 0 clean, 1 failed comparison,
-//! 2 usage error.
+//! (variant, benchmark, VL, metric) points, and renders a delta table.
+//! Metrics are `speedup` for every artifact and, for `sve-repro/dse/v2`
+//! documents, the §PPA `perf_per_watt` / `perf_per_mm2` values too —
+//! all "higher is better", so one regression rule covers them. With a
+//! `--fail-on-regress PCT` threshold the comparison **fails** when any
+//! value in A drops by more than PCT percent in B, or when a point of A
+//! is missing from B entirely — the primitive CI uses as a regression
+//! wall. The rendering is a pure function of the two documents
+//! (golden-tested in `tests/dse_compare_golden.rs`), and the exit-code
+//! policy lives in `main.rs`: 0 clean, 1 failed comparison, 2 usage
+//! error.
 
 use crate::csvutil::{f, Table};
 use crate::report::json::Json;
 use crate::report::{dse, fig8};
 
-/// One (variant, benchmark, VL) speedup extracted from an artifact.
+/// One (variant, benchmark, VL, metric) value extracted from an
+/// artifact. Every metric is oriented so that **higher is better**.
 #[derive(Clone, Debug, PartialEq)]
-pub struct SpeedupPoint {
+pub struct MetricPoint {
     /// `table2` for fig8 artifacts; the variant name for dse artifacts.
     pub variant: String,
     pub bench: String,
     pub vl_bits: u64,
-    /// NEON cycles / SVE cycles, as recorded in the artifact.
-    pub speedup: f64,
+    /// `speedup`, `perf_per_watt` or `perf_per_mm2`.
+    pub metric: String,
+    /// The value as recorded in the artifact.
+    pub value: f64,
 }
 
-impl SpeedupPoint {
-    fn key(&self) -> (&str, &str, u64) {
-        (&self.variant, &self.bench, self.vl_bits)
+impl MetricPoint {
+    fn key(&self) -> (&str, &str, u64, &str) {
+        (&self.variant, &self.bench, self.vl_bits, &self.metric)
     }
 
     fn label(&self) -> String {
-        format!("{}/{}@vl{}", self.variant, self.bench, self.vl_bits)
+        let base = format!("{}/{}@vl{}", self.variant, self.bench, self.vl_bits);
+        if self.metric == "speedup" {
+            base
+        } else {
+            format!("{base}:{}", self.metric)
+        }
     }
 }
 
 fn points_from_benchmarks(
     variant: &str,
     benches: Option<&Json>,
-    out: &mut Vec<SpeedupPoint>,
+    out: &mut Vec<MetricPoint>,
 ) -> Result<(), String> {
     let arr = benches
         .and_then(Json::as_arr)
@@ -62,20 +73,63 @@ fn points_from_benchmarks(
                 .get("speedup")
                 .and_then(Json::as_f64)
                 .ok_or_else(|| format!("benchmark '{bench}': sve run has no \"speedup\""))?;
-            out.push(SpeedupPoint {
+            out.push(MetricPoint {
                 variant: variant.to_string(),
                 bench: bench.to_string(),
                 vl_bits: vl,
-                speedup,
+                metric: "speedup".to_string(),
+                value: speedup,
             });
         }
     }
     Ok(())
 }
 
-/// Extract every speedup point from a parsed `fig8.json` or `dse.json`
-/// document, in document order.
-pub fn extract_points(doc: &Json) -> Result<Vec<SpeedupPoint>, String> {
+/// Extract the §PPA points of one v2 dse variant: `perf_per_watt` and
+/// `perf_per_mm2` per (benchmark, VL), from the `energy_pj` section.
+fn ppa_points_from_variant(
+    variant: &str,
+    energy: Option<&Json>,
+    out: &mut Vec<MetricPoint>,
+) -> Result<(), String> {
+    let arr = energy
+        .and_then(Json::as_arr)
+        .ok_or_else(|| "dse variant has no \"energy_pj\" array".to_string())?;
+    for b in arr {
+        let bench = b
+            .get("bench")
+            .and_then(Json::as_str)
+            .ok_or_else(|| "energy_pj entry has no \"bench\" name".to_string())?;
+        let sve = b
+            .get("sve")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| format!("energy_pj '{bench}' has no \"sve\" array"))?;
+        for run in sve {
+            let vl = run
+                .get("vl_bits")
+                .and_then(Json::as_u64)
+                .ok_or_else(|| format!("energy_pj '{bench}': run has no \"vl_bits\""))?;
+            for metric in ["perf_per_watt", "perf_per_mm2"] {
+                let value = run.get(metric).and_then(Json::as_f64).ok_or_else(|| {
+                    format!("energy_pj '{bench}': run has no \"{metric}\"")
+                })?;
+                out.push(MetricPoint {
+                    variant: variant.to_string(),
+                    bench: bench.to_string(),
+                    vl_bits: vl,
+                    metric: metric.to_string(),
+                    value,
+                });
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Extract every comparable point from a parsed `fig8.json` or
+/// `dse.json` document, in document order: per variant, the speedup
+/// points first, then (v2 only) the §PPA points.
+pub fn extract_points(doc: &Json) -> Result<Vec<MetricPoint>, String> {
     let schema = doc
         .get("schema")
         .and_then(Json::as_str)
@@ -85,7 +139,7 @@ pub fn extract_points(doc: &Json) -> Result<Vec<SpeedupPoint>, String> {
         fig8::FIG8_SCHEMA => {
             points_from_benchmarks("table2", doc.get("benchmarks"), &mut points)?;
         }
-        dse::DSE_SCHEMA => {
+        dse::DSE_SCHEMA | dse::DSE_SCHEMA_V1 => {
             let variants = doc
                 .get("variants")
                 .and_then(Json::as_arr)
@@ -96,27 +150,31 @@ pub fn extract_points(doc: &Json) -> Result<Vec<SpeedupPoint>, String> {
                     .and_then(Json::as_str)
                     .ok_or_else(|| "dse variant has no \"name\"".to_string())?;
                 points_from_benchmarks(name, v.get("benchmarks"), &mut points)?;
+                if schema == dse::DSE_SCHEMA {
+                    ppa_points_from_variant(name, v.get("energy_pj"), &mut points)?;
+                }
             }
         }
         other => {
             return Err(format!(
-                "unsupported artifact schema '{other}' (expected {} or {})",
+                "unsupported artifact schema '{other}' (expected {}, {} or {})",
                 fig8::FIG8_SCHEMA,
-                dse::DSE_SCHEMA
+                dse::DSE_SCHEMA,
+                dse::DSE_SCHEMA_V1
             ))
         }
     }
     Ok(points)
 }
 
-/// The outcome of diffing two artifacts' speedup points.
+/// The outcome of diffing two artifacts' points.
 #[derive(Clone, Debug)]
 pub struct Comparison {
     /// Per-matched-point delta rows, in A's order.
     pub table: Table,
     /// Points present in both artifacts.
     pub compared: usize,
-    /// Formatted descriptions of every speedup beyond the threshold.
+    /// Formatted descriptions of every value drop beyond the threshold.
     pub regressions: Vec<String>,
     /// Labels of points only in A — a silently dropped configuration,
     /// counted as a failure when a threshold is set.
@@ -137,22 +195,21 @@ impl Comparison {
 }
 
 /// Match A's points against B's and compute per-point deltas. A point
-/// regresses when its B speedup drops below `a * (1 - pct/100)`.
-pub fn compare(
-    a: &[SpeedupPoint],
-    b: &[SpeedupPoint],
-    fail_below_pct: Option<f64>,
-) -> Comparison {
-    let with_variant =
-        a.iter().chain(b.iter()).any(|p| p.variant != "table2");
+/// regresses when its B value drops below `a * (1 - pct/100)` — the
+/// same contract for speedups and the §PPA metrics, since every metric
+/// is higher-is-better.
+pub fn compare(a: &[MetricPoint], b: &[MetricPoint], fail_below_pct: Option<f64>) -> Comparison {
+    let with_variant = a.iter().chain(b.iter()).any(|p| p.variant != "table2");
+    let with_metric = a.iter().chain(b.iter()).any(|p| p.metric != "speedup");
     let mut header = Vec::new();
     if with_variant {
         header.push("variant".to_string());
     }
-    header.extend(
-        ["bench", "vl_bits", "speedup_a", "speedup_b", "delta_%", "status"]
-            .map(String::from),
-    );
+    header.extend(["bench", "vl_bits"].map(String::from));
+    if with_metric {
+        header.push("metric".to_string());
+    }
+    header.extend(["value_a", "value_b", "delta_%", "status"].map(String::from));
     let mut table = Table::new(header);
     let mut compared = 0usize;
     let mut regressions = Vec::new();
@@ -163,15 +220,15 @@ pub fn compare(
             continue;
         };
         compared += 1;
-        let delta_pct = (pb.speedup / pa.speedup - 1.0) * 100.0;
-        let regressed = fail_below_pct
-            .is_some_and(|pct| pb.speedup < pa.speedup * (1.0 - pct / 100.0));
+        let delta_pct = (pb.value / pa.value - 1.0) * 100.0;
+        let regressed =
+            fail_below_pct.is_some_and(|pct| pb.value < pa.value * (1.0 - pct / 100.0));
         if regressed {
             regressions.push(format!(
                 "{}: {} -> {} ({:+.2}%)",
                 pa.label(),
-                f(pa.speedup, 3),
-                f(pb.speedup, 3),
+                f(pa.value, 3),
+                f(pb.value, 3),
                 delta_pct
             ));
         }
@@ -179,11 +236,13 @@ pub fn compare(
         if with_variant {
             cells.push(pa.variant.clone());
         }
+        cells.extend([pa.bench.clone(), pa.vl_bits.to_string()]);
+        if with_metric {
+            cells.push(pa.metric.clone());
+        }
         cells.extend([
-            pa.bench.clone(),
-            pa.vl_bits.to_string(),
-            f(pa.speedup, 3),
-            f(pb.speedup, 3),
+            f(pa.value, 3),
+            f(pb.value, 3),
             format!("{delta_pct:+.2}"),
             if regressed { "REGRESS".to_string() } else { "ok".to_string() },
         ]);
@@ -192,7 +251,7 @@ pub fn compare(
     let only_in_b = b
         .iter()
         .filter(|pb| !a.iter().any(|pa| pa.key() == pb.key()))
-        .map(SpeedupPoint::label)
+        .map(MetricPoint::label)
         .collect();
     Comparison { table, compared, regressions, only_in_a, only_in_b, fail_below_pct }
 }
@@ -237,10 +296,17 @@ pub fn render(c: &Comparison) -> String {
 mod tests {
     use super::*;
     use crate::coordinator::{Fig8Row, Isa, RunRecord};
+    use crate::uarch::PpaCounters;
     use crate::workloads::Group;
 
-    fn point(variant: &str, bench: &str, vl: u64, speedup: f64) -> SpeedupPoint {
-        SpeedupPoint { variant: variant.into(), bench: bench.into(), vl_bits: vl, speedup }
+    fn point(variant: &str, bench: &str, vl: u64, value: f64) -> MetricPoint {
+        MetricPoint {
+            variant: variant.into(),
+            bench: bench.into(),
+            vl_bits: vl,
+            metric: "speedup".into(),
+            value,
+        }
     }
 
     fn fig8_doc() -> Json {
@@ -254,6 +320,7 @@ mod tests {
             vectorized: true,
             l1d_miss_rate: 0.125,
             ipc: 1.5,
+            counters: PpaCounters::default(),
         };
         let sve = vec![
             RunRecord { isa: Isa::Sve(128), cycles: 800, ..neon.clone() },
@@ -282,6 +349,59 @@ mod tests {
     }
 
     #[test]
+    fn extracts_ppa_points_from_v2_dse_docs() {
+        use crate::coordinator::VariantRows;
+        use crate::uarch::base_variant;
+        let neon = RunRecord {
+            bench: "stream_triad",
+            group: Group::Right,
+            isa: Isa::Neon,
+            cycles: 1000,
+            insts: 10000,
+            vector_fraction: 0.5,
+            vectorized: true,
+            l1d_miss_rate: 0.125,
+            ipc: 1.5,
+            counters: PpaCounters {
+                l1d_accesses: 2000,
+                l2_accesses: 250,
+                mem_accesses: 60,
+                mispredicts: 10,
+                cracked_elems: 0,
+            },
+        };
+        let sve = vec![RunRecord { isa: Isa::Sve(128), cycles: 800, ..neon.clone() }];
+        let variants = vec![VariantRows {
+            name: "table2".into(),
+            uarch: base_variant("table2").unwrap(),
+            rows: vec![Fig8Row {
+                bench: "stream_triad",
+                group: Group::Right,
+                neon,
+                sve,
+                extra_vectorization: 0.25,
+            }],
+        }];
+        let doc = dse::to_json(&variants, &[128]);
+        let pts = extract_points(&doc).unwrap();
+        // 1 speedup + perf_per_watt + perf_per_mm2
+        assert_eq!(pts.len(), 3);
+        assert_eq!(pts[0].metric, "speedup");
+        assert_eq!(pts[1].metric, "perf_per_watt");
+        assert_eq!(pts[2].metric, "perf_per_mm2");
+        assert!(pts[1].value > 0.0 && pts[2].value > 0.0);
+        assert_eq!(pts[1].label(), "table2/stream_triad@vl128:perf_per_watt");
+        // a PPA regression fails under the same contract as a speedup one
+        let mut b = pts.clone();
+        b[1].value *= 0.5;
+        let c = compare(&pts, &b, Some(2.0));
+        assert!(c.failed());
+        assert!(render(&c).contains("perf_per_watt"));
+        // the metric column appears because non-speedup points exist
+        assert!(c.table.header.contains(&"metric".to_string()));
+    }
+
+    #[test]
     fn rejects_unknown_schema_and_malformed_docs() {
         let bad = Json::Obj(vec![("schema".into(), Json::str("sve-repro/fig2/v1"))]);
         assert!(extract_points(&bad).unwrap_err().contains("unsupported artifact schema"));
@@ -289,6 +409,27 @@ mod tests {
         let no_benches =
             Json::Obj(vec![("schema".into(), Json::str(fig8::FIG8_SCHEMA))]);
         assert!(extract_points(&no_benches).is_err());
+    }
+
+    #[test]
+    fn v1_dse_docs_compare_by_speedup_only() {
+        // a hand-built v1 document (no energy_pj section) still parses
+        let doc = Json::parse(
+            r#"{
+  "schema": "sve-repro/dse/v1",
+  "variants": [
+    {
+      "name": "table2",
+      "benchmarks": [
+        { "bench": "haccmk", "sve": [ { "vl_bits": 256, "speedup": 2.0 } ] }
+      ]
+    }
+  ]
+}"#,
+        )
+        .unwrap();
+        let pts = extract_points(&doc).unwrap();
+        assert_eq!(pts, vec![point("table2", "haccmk", 256, 2.0)]);
     }
 
     #[test]
@@ -327,5 +468,7 @@ mod tests {
         assert!(!compare(&a, &b, None).failed());
         // the variant column appears because a non-table2 point exists
         assert_eq!(c.table.header[0], "variant");
+        // all-speedup comparisons do not grow a metric column
+        assert!(!c.table.header.contains(&"metric".to_string()));
     }
 }

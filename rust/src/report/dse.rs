@@ -1,26 +1,37 @@
 //! Design-space exploration artifacts: the `sve dse` sweep rendered as
 //! machine-readable JSON (schema [`DSE_SCHEMA`]) + long-form CSV and
-//! human-readable Markdown with a cross-variant pivot. Like the Fig. 8
-//! emitters, every rendering is a pure function of the row data — no
-//! timestamps, no environment — so the artifacts are byte-stable and
-//! golden-tested (`tests/dse_compare_golden.rs`).
+//! human-readable Markdown with a cross-variant pivot, a §PPA
+//! area/energy layer ([`crate::uarch::ppa`]) and a Pareto-frontier
+//! ranking of design points. Like the Fig. 8 emitters, every rendering
+//! is a pure function of the row data — no timestamps, no environment —
+//! so the artifacts are byte-stable and golden-tested
+//! (`tests/dse_compare_golden.rs`).
 //!
 //! The per-variant benchmark payload is exactly the Fig. 8 shape
 //! ([`crate::report::fig8::benchmarks_json`]), which is what lets
 //! `sve report --compare` diff `fig8.json` and `dse.json` artifacts
-//! interchangeably.
+//! interchangeably. On top of that, v2 adds per-variant `area_proxy`
+//! and `energy_pj` sections (whose perf/W and perf/mm² values are also
+//! compared, under the same `--fail-on-regress` contract) and a
+//! top-level `pareto` ranking.
 
 use std::io;
 use std::path::{Path, PathBuf};
 
-use crate::coordinator::VariantRows;
+use crate::coordinator::{RunRecord, VariantRows};
 use crate::csvutil::{f, Table};
 use crate::report::fig8;
 use crate::report::json::Json;
-use crate::uarch::UarchConfig;
+use crate::uarch::{ppa, UarchConfig};
 
-/// Schema tag of the `dse.json` artifact.
-pub const DSE_SCHEMA: &str = "sve-repro/dse/v1";
+/// Schema tag of the `dse.json` artifact. v2 added the §PPA layer
+/// (`area_proxy`, `energy_pj`, `pareto`); v1 artifacts are still
+/// accepted by `sve report --compare` ([`DSE_SCHEMA_V1`]).
+pub const DSE_SCHEMA: &str = "sve-repro/dse/v2";
+
+/// The pre-PPA schema tag, kept so `--compare` can still diff
+/// artifacts produced before the v2 migration.
+pub const DSE_SCHEMA_V1: &str = "sve-repro/dse/v1";
 
 /// Every [`UarchConfig`] field as a flat JSON object, in declaration
 /// order — the artifact records the exact design point it was timed
@@ -62,13 +73,230 @@ pub fn uarch_summary(c: &UarchConfig) -> String {
     )
 }
 
-/// The cross-variant pivot: one row per (benchmark, VL), one speedup
-/// column per variant — the paper's PPA question ("which design point
-/// suits my targets?") on a single screen.
+/// Total §PPA energy proxy of one run under its variant's
+/// configuration (pJ) — the glue between [`RunRecord`] (which carries
+/// the raw counters) and [`ppa::energy_pj`].
+pub fn run_energy_pj(r: &RunRecord, cfg: &UarchConfig) -> f64 {
+    ppa::energy_pj(cfg, r.isa.vl(), r.insts, r.vector_fraction, r.cycles, &r.counters)
+        .total_pj
+}
+
+/// The `area_proxy` object of one variant: the VL-independent core
+/// area plus the per-VL vector datapath and totals.
+pub fn area_json(cfg: &UarchConfig, vls: &[usize]) -> Json {
+    let core = ppa::area_um2(cfg, 128).core_um2;
+    Json::Obj(vec![
+        ("core_um2".into(), Json::f64(core)),
+        (
+            "per_vl".into(),
+            Json::Arr(
+                vls.iter()
+                    .map(|&vl| {
+                        let a = ppa::area_um2(cfg, vl);
+                        Json::Obj(vec![
+                            ("vl_bits".into(), Json::u64(vl as u64)),
+                            ("vector_um2".into(), Json::f64(a.vector_um2)),
+                            ("total_um2".into(), Json::f64(a.total_um2)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+/// The `energy_pj` array of one variant: per benchmark, the NEON
+/// baseline energy and the per-VL SVE energies with the derived
+/// perf/W (runs per joule) and perf/mm² (runs per second per mm² at a
+/// nominal 1 GHz) metrics `--compare` diffs.
+pub fn energy_json(v: &VariantRows, vls: &[usize]) -> Json {
+    Json::Arr(
+        v.rows
+            .iter()
+            .map(|r| {
+                Json::Obj(vec![
+                    ("bench".into(), Json::str(r.bench)),
+                    ("neon_pj".into(), Json::f64(run_energy_pj(&r.neon, &v.uarch))),
+                    (
+                        "sve".into(),
+                        Json::Arr(
+                            vls.iter()
+                                .enumerate()
+                                .map(|(i, &vl)| {
+                                    let e = run_energy_pj(&r.sve[i], &v.uarch);
+                                    let a = ppa::area_um2(&v.uarch, vl);
+                                    Json::Obj(vec![
+                                        ("vl_bits".into(), Json::u64(vl as u64)),
+                                        ("energy_pj".into(), Json::f64(e)),
+                                        (
+                                            "perf_per_watt".into(),
+                                            Json::f64(ppa::perf_per_watt(e)),
+                                        ),
+                                        (
+                                            "perf_per_mm2".into(),
+                                            Json::f64(ppa::perf_per_mm2(
+                                                r.sve[i].cycles,
+                                                a.total_um2,
+                                            )),
+                                        ),
+                                    ])
+                                })
+                                .collect(),
+                        ),
+                    ),
+                ])
+            })
+            .collect(),
+    )
+}
+
+/// One (variant, VL) design point in the Pareto ranking.
+#[derive(Clone, Debug)]
+pub struct ParetoPoint {
+    /// The variant's display name.
+    pub variant: String,
+    /// The SVE vector length of this point.
+    pub vl_bits: usize,
+    /// Across-benchmark arithmetic mean of SVE speedup over NEON.
+    pub mean_speedup: f64,
+    /// Total §PPA energy of the SVE runs across benchmarks (pJ).
+    pub energy_pj: f64,
+    /// Area proxy of the variant at this VL (µm²).
+    pub area_um2: f64,
+    /// On the Pareto frontier: no other point is at least as good on
+    /// all three axes and strictly better on one.
+    pub frontier: bool,
+    /// `variant@vlN` label of a point that dominates this one.
+    pub dominated_by: Option<String>,
+}
+
+/// Rank every (variant, VL) design point on the
+/// (mean speedup ↑, energy ↓, area ↓) axes: mark dominated points and
+/// sort frontier-first, then by mean speedup descending (matrix order
+/// breaks exact ties, so the ranking is fully deterministic).
+pub fn pareto(variants: &[VariantRows], vls: &[usize]) -> Vec<ParetoPoint> {
+    let mut pts: Vec<ParetoPoint> = Vec::new();
+    for v in variants {
+        for (vi, &vl) in vls.iter().enumerate() {
+            let mut sp = 0.0;
+            let mut e = 0.0;
+            for r in &v.rows {
+                sp += r.speedup(vi);
+                e += run_energy_pj(&r.sve[vi], &v.uarch);
+            }
+            let mean_speedup = if v.rows.is_empty() { 0.0 } else { sp / v.rows.len() as f64 };
+            pts.push(ParetoPoint {
+                variant: v.name.clone(),
+                vl_bits: vl,
+                mean_speedup,
+                energy_pj: e,
+                area_um2: ppa::area_um2(&v.uarch, vl).total_um2,
+                frontier: true,
+                dominated_by: None,
+            });
+        }
+    }
+    // mark dominated points (the first dominator in matrix order is
+    // recorded; domination chains all terminate on the frontier)
+    let dominated: Vec<Option<String>> = pts
+        .iter()
+        .map(|p| {
+            pts.iter()
+                .find(|q| {
+                    q.mean_speedup >= p.mean_speedup
+                        && q.energy_pj <= p.energy_pj
+                        && q.area_um2 <= p.area_um2
+                        && (q.mean_speedup > p.mean_speedup
+                            || q.energy_pj < p.energy_pj
+                            || q.area_um2 < p.area_um2)
+                })
+                .map(|q| format!("{}@vl{}", q.variant, q.vl_bits))
+        })
+        .collect();
+    for (p, dom) in pts.iter_mut().zip(dominated) {
+        if let Some(label) = dom {
+            p.frontier = false;
+            p.dominated_by = Some(label);
+        }
+    }
+    let mut order: Vec<usize> = (0..pts.len()).collect();
+    order.sort_by(|&a, &b| {
+        pts[b]
+            .frontier
+            .cmp(&pts[a].frontier)
+            .then(pts[b].mean_speedup.total_cmp(&pts[a].mean_speedup))
+            .then(a.cmp(&b))
+    });
+    order.into_iter().map(|i| pts[i].clone()).collect()
+}
+
+/// The Pareto ranking as a table (for `dse.md` and the CLI).
+pub fn pareto_table(pts: &[ParetoPoint]) -> Table {
+    let mut t = Table::new(vec![
+        "rank",
+        "variant",
+        "vl_bits",
+        "mean_speedup",
+        "energy_pj",
+        "area_mm2",
+        "pareto",
+        "dominated_by",
+    ]);
+    for (i, p) in pts.iter().enumerate() {
+        t.push_row(vec![
+            (i + 1).to_string(),
+            p.variant.clone(),
+            p.vl_bits.to_string(),
+            f(p.mean_speedup, 2),
+            f(p.energy_pj, 1),
+            f(p.area_um2 / 1.0e6, 3),
+            if p.frontier { "frontier".to_string() } else { "dominated".to_string() },
+            p.dominated_by.clone().unwrap_or_else(|| "-".to_string()),
+        ]);
+    }
+    t
+}
+
+/// The `pareto` section of `dse.json`.
+pub fn pareto_json(pts: &[ParetoPoint]) -> Json {
+    Json::Arr(
+        pts.iter()
+            .map(|p| {
+                Json::Obj(vec![
+                    ("variant".into(), Json::str(p.variant.clone())),
+                    ("vl_bits".into(), Json::u64(p.vl_bits as u64)),
+                    ("mean_speedup".into(), Json::f64(p.mean_speedup)),
+                    ("energy_pj".into(), Json::f64(p.energy_pj)),
+                    ("area_um2".into(), Json::f64(p.area_um2)),
+                    ("frontier".into(), Json::Bool(p.frontier)),
+                    (
+                        "dominated_by".into(),
+                        match &p.dominated_by {
+                            Some(l) => Json::str(l.clone()),
+                            None => Json::Null,
+                        },
+                    ),
+                ])
+            })
+            .collect(),
+    )
+}
+
+/// The cross-variant pivot: one row per (benchmark, VL); per variant a
+/// speedup column, a perf/W column (runs per joule) and a perf/mm²
+/// column (runs per second per mm² at a nominal 1 GHz) — the paper's
+/// PPA question ("which design point suits my targets?") on a single
+/// screen.
 pub fn pivot(variants: &[VariantRows], vls: &[usize]) -> Table {
     let mut header = vec!["bench".to_string(), "vl_bits".to_string()];
     for v in variants {
         header.push(v.name.clone());
+    }
+    for v in variants {
+        header.push(format!("{} perf/W", v.name));
+    }
+    for v in variants {
+        header.push(format!("{} perf/mm2", v.name));
     }
     let mut t = Table::new(header);
     let Some(first) = variants.first() else { return t };
@@ -78,6 +306,14 @@ pub fn pivot(variants: &[VariantRows], vls: &[usize]) -> Table {
             for v in variants {
                 cells.push(f(v.rows[bi].speedup(vi), 2));
             }
+            for v in variants {
+                let e = run_energy_pj(&v.rows[bi].sve[vi], &v.uarch);
+                cells.push(f(ppa::perf_per_watt(e), 1));
+            }
+            for v in variants {
+                let a = ppa::area_um2(&v.uarch, *vl);
+                cells.push(f(ppa::perf_per_mm2(v.rows[bi].sve[vi].cycles, a.total_um2), 1));
+            }
             t.push_row(cells);
         }
     }
@@ -85,7 +321,8 @@ pub fn pivot(variants: &[VariantRows], vls: &[usize]) -> Table {
 }
 
 /// The long-form table behind `dse.csv`: one row per
-/// (variant, benchmark, VL) — the shape plotting tools want.
+/// (variant, benchmark, VL) — the shape plotting tools want — with the
+/// §PPA columns alongside the timing ones.
 pub fn table(variants: &[VariantRows], vls: &[usize]) -> Table {
     let mut t = Table::new(vec![
         "variant",
@@ -96,10 +333,16 @@ pub fn table(variants: &[VariantRows], vls: &[usize]) -> Table {
         "speedup",
         "neon_cycles",
         "sve_cycles",
+        "energy_pj",
+        "perf_per_watt",
+        "perf_per_mm2",
+        "area_um2",
     ]);
     for v in variants {
         for r in &v.rows {
             for (vi, vl) in vls.iter().enumerate() {
+                let e = run_energy_pj(&r.sve[vi], &v.uarch);
+                let a = ppa::area_um2(&v.uarch, *vl);
                 t.push_row(vec![
                     v.name.clone(),
                     r.bench.to_string(),
@@ -109,6 +352,10 @@ pub fn table(variants: &[VariantRows], vls: &[usize]) -> Table {
                     f(r.speedup(vi), 2),
                     r.neon.cycles.to_string(),
                     r.sve[vi].cycles.to_string(),
+                    f(e, 1),
+                    f(ppa::perf_per_watt(e), 1),
+                    f(ppa::perf_per_mm2(r.sve[vi].cycles, a.total_um2), 1),
+                    f(a.total_um2, 0),
                 ]);
             }
         }
@@ -117,7 +364,9 @@ pub fn table(variants: &[VariantRows], vls: &[usize]) -> Table {
 }
 
 /// The machine-readable DSE document: per variant, the exact design
-/// point ([`uarch_json`]) plus the Fig. 8-shaped benchmark payload.
+/// point ([`uarch_json`]), the §PPA area/energy proxies and the
+/// Fig. 8-shaped benchmark payload; at the top level, the Pareto
+/// ranking of every (variant, VL) design point.
 pub fn to_json(variants: &[VariantRows], vls: &[usize]) -> Json {
     Json::Obj(vec![
         ("schema".into(), Json::str(DSE_SCHEMA)),
@@ -136,12 +385,15 @@ pub fn to_json(variants: &[VariantRows], vls: &[usize]) -> Json {
                         Json::Obj(vec![
                             ("name".into(), Json::str(v.name.clone())),
                             ("uarch".into(), uarch_json(&v.uarch)),
+                            ("area_proxy".into(), area_json(&v.uarch, vls)),
+                            ("energy_pj".into(), energy_json(v, vls)),
                             ("benchmarks".into(), fig8::benchmarks_json(&v.rows)),
                         ])
                     })
                     .collect(),
             ),
         ),
+        ("pareto".into(), pareto_json(&pareto(variants, vls))),
     ])
 }
 
@@ -159,9 +411,11 @@ pub fn to_markdown(variants: &[VariantRows], vls: &[usize]) -> String {
          golden outputs.\n\
          \n\
          Each variant section is the Fig. 8 table timed under that design \
-         point; the pivot at the end puts every variant's speedup-vs-VL \
-         side by side (speedup is NEON cycles / SVE cycles at the same \
-         design point).\n\
+         point; the pivot puts every variant's speedup, perf/W (runs per \
+         joule) and perf/mm² (runs per second per mm² at a nominal 1 GHz) \
+         side by side, and the Pareto table ranks every (variant, VL) \
+         design point on the (performance, energy, area) axes — the §PPA \
+         proxy formulas are documented in EXPERIMENTS.md §PPA.\n\
          \n",
         nv = variants.len(),
         nb = variants.first().map_or(0, |v| v.rows.len()),
@@ -177,11 +431,21 @@ pub fn to_markdown(variants: &[VariantRows], vls: &[usize]) -> String {
     }
     let _ = write!(
         out,
-        "## Cross-variant pivot — speedup over NEON\n\n{}\n\
+        "## Cross-variant pivot — speedup, perf/W, perf/mm² over NEON\n\n{}\n",
+        pivot(variants, vls).to_markdown(),
+    );
+    let _ = write!(
+        out,
+        "## Pareto frontier — performance vs energy vs area\n\n\
+         `mean_speedup` averages SVE speedup over NEON across benchmarks; \
+         `energy_pj` sums the energy proxy over the SVE runs; `area_mm2` \
+         is the area proxy at that VL. `frontier` marks non-dominated \
+         points: no other design point is at least as good on all three \
+         axes and strictly better on one.\n\n{}\n\
          Regenerate with `sve dse --uarch <variants> --out <dir>` (add \
          `--resume` to reuse cached jobs); machine-readable copies: \
          `dse.json`, `dse.csv`.\n",
-        pivot(variants, vls).to_markdown(),
+        pareto_table(&pareto(variants, vls)).to_markdown(),
     );
     out
 }
@@ -208,7 +472,7 @@ pub fn write_artifacts(
 mod tests {
     use super::*;
     use crate::coordinator::{Fig8Row, Isa, RunRecord};
-    use crate::uarch::base_variant;
+    use crate::uarch::{base_variant, PpaCounters};
     use crate::workloads::Group;
 
     fn rec(bench: &'static str, isa: Isa, cycles: u64) -> RunRecord {
@@ -222,6 +486,13 @@ mod tests {
             vectorized: true,
             l1d_miss_rate: 0.125,
             ipc: 1.5,
+            counters: PpaCounters {
+                l1d_accesses: 2 * cycles,
+                l2_accesses: cycles / 4,
+                mem_accesses: cycles / 16,
+                mispredicts: cycles / 100,
+                cracked_elems: 0,
+            },
         }
     }
 
@@ -248,7 +519,7 @@ mod tests {
     }
 
     #[test]
-    fn json_has_schema_uarch_and_fig8_shaped_benchmarks() {
+    fn json_has_schema_uarch_ppa_and_fig8_shaped_benchmarks() {
         let v = to_json(&fixture(), &[128, 256]);
         let back = Json::parse(&v.render_pretty()).unwrap();
         assert_eq!(back, v);
@@ -263,6 +534,23 @@ mod tests {
         let benches = variants[0].get("benchmarks").unwrap().as_arr().unwrap();
         let sve = benches[0].get("sve").unwrap().as_arr().unwrap();
         assert_eq!(sve[0].get("speedup").unwrap().as_f64(), Some(1.25));
+        // v2: the PPA layer is present and internally consistent
+        let area = variants[0].get("area_proxy").unwrap();
+        let core = area.get("core_um2").unwrap().as_f64().unwrap();
+        let per_vl = area.get("per_vl").unwrap().as_arr().unwrap();
+        assert_eq!(per_vl.len(), 2);
+        let total0 = per_vl[0].get("total_um2").unwrap().as_f64().unwrap();
+        let vec0 = per_vl[0].get("vector_um2").unwrap().as_f64().unwrap();
+        assert_eq!(total0, core + vec0);
+        let energy = variants[0].get("energy_pj").unwrap().as_arr().unwrap();
+        let erun = &energy[0].get("sve").unwrap().as_arr().unwrap()[0];
+        let e = erun.get("energy_pj").unwrap().as_f64().unwrap();
+        assert!(e > 0.0);
+        assert_eq!(erun.get("perf_per_watt").unwrap().as_f64(), Some(1.0e12 / e));
+        // the pareto ranking covers every (variant, VL) point
+        let pareto = back.get("pareto").unwrap().as_arr().unwrap();
+        assert_eq!(pareto.len(), 4);
+        assert!(pareto.iter().any(|p| p.get("frontier").unwrap().as_bool() == Some(true)));
     }
 
     #[test]
@@ -271,18 +559,61 @@ mod tests {
         assert_eq!(p.header, vec!["bench", "vl_bits"]);
         assert!(p.rows.is_empty());
         assert!(to_markdown(&[], &[128]).contains("0 variants"));
+        assert!(pareto(&[], &[128]).is_empty());
     }
 
     #[test]
     fn pivot_and_csv_have_expected_shape() {
         let p = pivot(&fixture(), &[128, 256]);
-        assert_eq!(p.header, vec!["bench", "vl_bits", "table2", "small-core"]);
+        assert_eq!(
+            p.header,
+            vec![
+                "bench",
+                "vl_bits",
+                "table2",
+                "small-core",
+                "table2 perf/W",
+                "small-core perf/W",
+                "table2 perf/mm2",
+                "small-core perf/mm2",
+            ]
+        );
         assert_eq!(p.rows.len(), 2); // 1 bench x 2 VLs
-        assert_eq!(p.rows[0], vec!["stream_triad", "128", "1.25", "1.25"]);
+        assert_eq!(p.rows[0][..4], ["stream_triad", "128", "1.25", "1.25"]);
         let csv = table(&fixture(), &[128, 256]).to_csv();
         assert_eq!(csv.lines().count(), 5); // header + 2 variants x 2 VLs
-        assert!(csv.starts_with("variant,bench,group,extra_vec_%,vl_bits,speedup"));
-        assert!(csv.contains("small-core,stream_triad,right,25.0,256,2.50,2000,800"));
+        assert!(csv.starts_with(
+            "variant,bench,group,extra_vec_%,vl_bits,speedup,neon_cycles,sve_cycles,\
+             energy_pj,perf_per_watt,perf_per_mm2,area_um2"
+        ));
+        assert!(csv.contains("small-core,stream_triad,right,25.0,256,2.50,2000,800,"));
+    }
+
+    #[test]
+    fn pareto_marks_dominated_points() {
+        // same benchmark timings on a small and a big core: the big
+        // core burns more area and energy for identical mean speedup,
+        // so every big-core point is dominated by its small-core twin
+        let same = vec![
+            variant("small-core", "small-core", 1000),
+            variant("big-core", "big-core", 1000),
+        ];
+        let pts = pareto(&same, &[128, 256]);
+        assert_eq!(pts.len(), 4);
+        for p in &pts {
+            if p.variant == "big-core" {
+                assert!(!p.frontier, "{p:?} should be dominated");
+                assert!(p.dominated_by.as_deref().unwrap().starts_with("small-core"));
+            } else {
+                assert!(p.frontier, "{p:?} should be on the frontier");
+            }
+        }
+        // frontier points rank first
+        assert!(pts[0].frontier && pts[1].frontier);
+        let t = pareto_table(&pts);
+        assert_eq!(t.rows.len(), 4);
+        assert_eq!(t.rows[0][0], "1");
+        assert!(t.rows[3][6] == "dominated");
     }
 
     #[test]
@@ -292,6 +623,7 @@ mod tests {
         assert!(md.contains("## table2"));
         assert!(md.contains("## small-core"));
         assert!(md.contains("## Cross-variant pivot"));
+        assert!(md.contains("## Pareto frontier"));
         assert!(md.contains(DSE_SCHEMA));
         let dir = std::env::temp_dir().join(format!("sve-dse-test-{}", std::process::id()));
         let _ = std::fs::remove_dir_all(&dir);

@@ -170,6 +170,7 @@ pub fn write_artifacts(
 mod tests {
     use super::*;
     use crate::coordinator::Isa;
+    use crate::uarch::PpaCounters;
     use crate::workloads::Group;
 
     fn rec(bench: &'static str, isa: Isa, cycles: u64) -> RunRecord {
@@ -183,6 +184,7 @@ mod tests {
             vectorized: true,
             l1d_miss_rate: 0.125,
             ipc: 1.5,
+            counters: PpaCounters::default(),
         }
     }
 

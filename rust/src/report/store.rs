@@ -17,12 +17,15 @@ use std::path::{Path, PathBuf};
 
 use crate::coordinator::{Isa, RunRecord};
 use crate::report::json::Json;
-use crate::uarch::UarchConfig;
+use crate::uarch::{PpaCounters, UarchConfig};
 use crate::workloads::{self, Group};
 
 /// Schema tag written into every job file; bump on layout changes so
-/// stale caches self-invalidate.
-pub const JOB_SCHEMA: &str = "sve-repro/fig8-job/v1";
+/// stale caches self-invalidate. v2 added the §PPA event counters
+/// ([`crate::uarch::PpaCounters`]); v1 files are treated as cache
+/// misses (the schema is part of every [`job_key`], so old keys are
+/// simply never looked up again) and re-simulated.
+pub const JOB_SCHEMA: &str = "sve-repro/fig8-job/v2";
 
 /// 64-bit FNV-1a. Tiny, dependency-free, and stable across platforms —
 /// exactly what a cache key needs (this is not a security boundary).
@@ -100,6 +103,11 @@ pub fn record_to_json(key: &str, r: &RunRecord) -> Json {
         ("vectorized".into(), Json::Bool(r.vectorized)),
         ("l1d_miss_rate".into(), Json::f64(r.l1d_miss_rate)),
         ("ipc".into(), Json::f64(r.ipc)),
+        ("l1d_accesses".into(), Json::u64(r.counters.l1d_accesses)),
+        ("l2_accesses".into(), Json::u64(r.counters.l2_accesses)),
+        ("mem_accesses".into(), Json::u64(r.counters.mem_accesses)),
+        ("mispredicts".into(), Json::u64(r.counters.mispredicts)),
+        ("cracked_elems".into(), Json::u64(r.counters.cracked_elems)),
     ])
 }
 
@@ -125,6 +133,13 @@ pub fn record_from_json(v: &Json) -> Option<RunRecord> {
         vectorized: v.get("vectorized")?.as_bool()?,
         l1d_miss_rate: v.get("l1d_miss_rate")?.as_f64()?,
         ipc: v.get("ipc")?.as_f64()?,
+        counters: PpaCounters {
+            l1d_accesses: v.get("l1d_accesses")?.as_u64()?,
+            l2_accesses: v.get("l2_accesses")?.as_u64()?,
+            mem_accesses: v.get("mem_accesses")?.as_u64()?,
+            mispredicts: v.get("mispredicts")?.as_u64()?,
+            cracked_elems: v.get("cracked_elems")?.as_u64()?,
+        },
     })
 }
 
@@ -143,6 +158,13 @@ mod tests {
             vectorized: true,
             l1d_miss_rate: f64::from_bits(0x3fb999999999999a), // ~0.1, awkward bits
             ipc: 1.75,
+            counters: PpaCounters {
+                l1d_accesses: 40_000,
+                l2_accesses: 4_000,
+                mem_accesses: 500,
+                mispredicts: 123,
+                cracked_elems: 7,
+            },
         }
     }
 
@@ -160,6 +182,30 @@ mod tests {
         assert_eq!(back.vectorized, r.vectorized);
         assert_eq!(back.l1d_miss_rate.to_bits(), r.l1d_miss_rate.to_bits());
         assert_eq!(back.ipc.to_bits(), r.ipc.to_bits());
+        assert_eq!(back.counters, r.counters);
+    }
+
+    #[test]
+    fn v1_job_files_are_cache_misses() {
+        // a pre-PPA record (old schema tag, no counters) must reload as
+        // a miss, never as a record with invented counters
+        let r = sample();
+        let mut v = record_to_json("deadbeefdeadbeef", &r);
+        if let Json::Obj(fields) = &mut v {
+            fields.retain(|(k, _)| !k.ends_with("_accesses"));
+            for (k, val) in fields.iter_mut() {
+                if k == "schema" {
+                    *val = Json::str("sve-repro/fig8-job/v1");
+                }
+            }
+        }
+        assert!(record_from_json(&v).is_none(), "v1 file must miss");
+        // same layout but current schema tag with counters missing: miss
+        let mut v = record_to_json("deadbeefdeadbeef", &r);
+        if let Json::Obj(fields) = &mut v {
+            fields.retain(|(k, _)| k != "mispredicts");
+        }
+        assert!(record_from_json(&v).is_none(), "missing counter must miss");
     }
 
     #[test]

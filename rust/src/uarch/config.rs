@@ -205,20 +205,44 @@ fn parse_size(s: &str) -> Option<u64> {
     digits.parse::<u64>().ok()?.checked_mul(mult)
 }
 
+/// Largest cache (per level) the model instantiates; beyond this the
+/// cache constructor's allocations would abort the process, so bigger
+/// values are usage errors at parse time.
+const MAX_CACHE_BYTES: usize = 1 << 30;
+/// Largest cache line the model accepts.
+const MAX_LINE_BYTES: usize = 4096;
+/// Largest reorder buffer the model accepts (the pipeline keeps one
+/// completion slot per ROB entry).
+const MAX_ROB: usize = 1 << 20;
+
 /// Check that a configuration can actually be instantiated by the
 /// timing model. The cache constructor requires a power-of-two set
 /// count per level, which constrains (bytes, line_bytes, assoc)
 /// *jointly* — a per-field ≥ 1 check cannot catch an unrealizable
 /// combination, and an invalid one would panic every sweep worker.
+/// Size bounds are enforced for the same reason: a power-of-two but
+/// absurd `l2_bytes=512G` would pass the geometry check and then abort
+/// every worker on allocation.
 pub fn validate(cfg: &UarchConfig) -> Result<(), String> {
-    if !cfg.line_bytes.is_power_of_two() {
-        return Err(format!("line_bytes={} must be a power of two", cfg.line_bytes));
+    if !cfg.line_bytes.is_power_of_two() || cfg.line_bytes > MAX_LINE_BYTES {
+        return Err(format!(
+            "line_bytes={} must be a power of two no larger than {MAX_LINE_BYTES}",
+            cfg.line_bytes
+        ));
+    }
+    if cfg.rob > MAX_ROB {
+        return Err(format!("rob={} exceeds the model's {MAX_ROB}-entry bound", cfg.rob));
     }
     for (name, bytes, assoc) in [
         ("l1i", cfg.l1i_bytes, cfg.l1i_assoc),
         ("l1d", cfg.l1d_bytes, cfg.l1d_assoc),
         ("l2", cfg.l2_bytes, cfg.l2_assoc),
     ] {
+        if bytes > MAX_CACHE_BYTES {
+            return Err(format!(
+                "{name} cache is {bytes} bytes; the model caps caches at {MAX_CACHE_BYTES}"
+            ));
+        }
         let lines = bytes / cfg.line_bytes;
         if assoc == 0 || lines == 0 || lines % assoc != 0 || !(lines / assoc).is_power_of_two()
         {
@@ -338,38 +362,96 @@ pub fn field_value(cfg: &UarchConfig, key: &str) -> Option<u64> {
     })
 }
 
+/// Upper bound on the number of design points a single `--uarch` spec
+/// may expand to (counted before canonicalization dedupe). Grids are
+/// cartesian, so a few extra values per key multiplies quickly; past
+/// this bound the spec is a usage error, not a day-long sweep.
+pub const MAX_GRID_POINTS: usize = 64;
+
 /// One variant being assembled by [`parse_variants`]: the base name,
-/// the base configuration (for detecting no-op overrides), the
-/// configuration so far, and the effective overrides (last value wins
-/// per key) for canonical naming.
+/// the base configuration (for detecting no-op overrides), and the
+/// per-key grid value lists for cartesian expansion.
 struct PendingVariant {
     base: String,
     base_cfg: UarchConfig,
-    cfg: UarchConfig,
-    /// ([`OVERRIDE_KEYS`] index, parsed value), deduplicated by key.
-    overrides: Vec<(usize, u64)>,
+    /// Per-key grids: ([`OVERRIDE_KEYS`] index, values in spelled
+    /// order). Respelling `key=` replaces that key's whole list; bare
+    /// values extend the most recently named key's list.
+    grids: Vec<(usize, Vec<u64>)>,
+    /// The key bare grid values attach to (the last `key=` seen).
+    last_key: Option<usize>,
 }
 
 impl PendingVariant {
     fn new(base: &str, cfg: UarchConfig) -> PendingVariant {
         PendingVariant {
             base: base.to_string(),
-            base_cfg: cfg.clone(),
-            cfg,
-            overrides: Vec::new(),
+            base_cfg: cfg,
+            grids: Vec::new(),
+            last_key: None,
         }
     }
 
-    fn finish(mut self) -> UarchVariant {
-        // canonical name: overrides in UarchConfig declaration order,
-        // independent of the order (or repetition) they were spelled in
-        self.overrides.sort_by_key(|&(ki, _)| ki);
-        let mut name = self.base;
-        for (ki, v) in self.overrides {
-            name.push_str(&format!("+{}={v}", OVERRIDE_KEYS[ki]));
-        }
-        UarchVariant { name, cfg: self.cfg }
+    /// Number of grid points this variant expands to (before dedupe).
+    fn grid_points(&self) -> usize {
+        self.grids.iter().fold(1usize, |n, (_, vs)| n.saturating_mul(vs.len()))
     }
+
+    /// Expand the cartesian grid into concrete variants. Names are
+    /// canonical: overrides in `UarchConfig` declaration order, no-ops
+    /// restating the base's own value dropped — so grid points that
+    /// only differ in spelling collapse to one design point here
+    /// (dedupe by configuration), and every survivor shares the
+    /// `job_key` cache with its equivalently-spelled twins.
+    fn finish(mut self) -> Result<Vec<UarchVariant>, String> {
+        // canonical declaration order, independent of spec order
+        self.grids.sort_by_key(|&(ki, _)| ki);
+        let mut out: Vec<UarchVariant> = Vec::new();
+        let mut idx = vec![0usize; self.grids.len()];
+        loop {
+            let mut cfg = self.base_cfg.clone();
+            let mut name = self.base.clone();
+            for (d, (ki, vs)) in self.grids.iter().enumerate() {
+                let v = vs[idx[d]];
+                set_field(&mut cfg, OVERRIDE_KEYS[*ki], &v.to_string())?;
+                if field_value(&self.base_cfg, OVERRIDE_KEYS[*ki]) != Some(v) {
+                    name.push_str(&format!("+{}={v}", OVERRIDE_KEYS[*ki]));
+                }
+            }
+            // canonicalization dedupe: equivalent spellings (512K vs
+            // 524288, a value restating the base) are one design point
+            if !out.iter().any(|w| w.cfg == cfg) {
+                out.push(UarchVariant { name, cfg });
+            }
+            // odometer over the grid, last key fastest
+            let mut d = idx.len();
+            loop {
+                if d == 0 {
+                    return Ok(out);
+                }
+                d -= 1;
+                idx[d] += 1;
+                if idx[d] < self.grids[d].1.len() {
+                    break;
+                }
+                idx[d] = 0;
+            }
+        }
+    }
+}
+
+/// Finish one pending variant into `out`, enforcing [`MAX_GRID_POINTS`]
+/// across the whole spec before any expansion work happens.
+fn push_finished(p: PendingVariant, out: &mut Vec<UarchVariant>) -> Result<(), String> {
+    let total = out.len().saturating_add(p.grid_points());
+    if total > MAX_GRID_POINTS {
+        return Err(format!(
+            "--uarch: grid expands to {total} design points (limit {MAX_GRID_POINTS}); \
+             narrow the value lists"
+        ));
+    }
+    out.extend(p.finish()?);
+    Ok(())
 }
 
 /// Validate a finished variant list: unique names, unique
@@ -391,6 +473,9 @@ pub fn check_variants(variants: &[UarchVariant]) -> Result<(), String> {
             ));
         }
         validate(&v.cfg).map_err(|e| format!("variant '{}': {e}", v.name))?;
+        // the PPA proxies must also be well-defined for every accepted
+        // design point, or a pathological override would rank as NaN
+        super::ppa::check_model(&v.cfg).map_err(|e| format!("variant '{}': {e}", v.name))?;
     }
     Ok(())
 }
@@ -402,7 +487,7 @@ pub fn check_variants(variants: &[UarchVariant]) -> Result<(), String> {
 /// variant named before it (a leading override starts from `table2`).
 /// Overrides become part of the variant's display name in **canonical
 /// form** — trimmed key, parsed integer value, field declaration
-/// order, last value per key wins, no-ops restating the base's own
+/// order, last spelling per key wins, no-ops restating the base's own
 /// value dropped — so equivalent spellings (`l2_bytes=512K` vs
 /// `l2_bytes=524288`, reordered or repeated keys) produce the same
 /// name and `sve report --compare` matches their points across
@@ -422,6 +507,30 @@ pub fn check_variants(variants: &[UarchVariant]) -> Result<(), String> {
 /// assert!(parse_variants("table2,decode_width=0").is_err());
 /// assert!(parse_variants("table2,l1d_assoc=3").is_err()); // 341 sets
 /// ```
+///
+/// # Grid expansion
+///
+/// A `key=` item may be followed by additional bare values, which
+/// extend that key's value list: `rob=64,128,256` sweeps ROB over all
+/// three values. Several gridded keys on one variant expand to their
+/// **cartesian product** (values in spelled order, the last key in
+/// declaration order varying fastest). Expansion is bounded at
+/// [`MAX_GRID_POINTS`] design points per spec, and points that only
+/// differ in spelling — a value restating the base's own, `512K` vs
+/// `524288` — collapse to one canonical design point, so every grid
+/// point shares the `job_key` cache with its equivalently-spelled
+/// twins.
+///
+/// ```
+/// use sve_repro::uarch::parse_variants;
+/// let grid = parse_variants("table2,rob=64,128,256").unwrap();
+/// let names: Vec<&str> = grid.iter().map(|v| v.name.as_str()).collect();
+/// // rob=128 restates table2's own ROB, so that point *is* table2
+/// assert_eq!(names, ["table2+rob=64", "table2", "table2+rob=256"]);
+/// let two = parse_variants("small-core,rob=32,64,mem_lat=80,100").unwrap();
+/// assert_eq!(two.len(), 4); // 2 x 2 cartesian product
+/// assert!(parse_variants("table2,128").is_err()); // value without a key
+/// ```
 pub fn parse_variants(spec: &str) -> Result<Vec<UarchVariant>, String> {
     let mut out: Vec<UarchVariant> = Vec::new();
     let mut cur: Option<PendingVariant> = None;
@@ -435,22 +544,39 @@ pub fn parse_variants(spec: &str) -> Result<Vec<UarchVariant>, String> {
                 PendingVariant::new("table2", UarchConfig::default())
             });
             let key = key.trim();
-            let v = set_field(&mut pending.cfg, key, value.trim())?;
+            // validate the (key, value) pair on a scratch config; the
+            // real application happens per grid point in finish()
+            let mut scratch = pending.base_cfg.clone();
+            let v = set_field(&mut scratch, key, value.trim())?;
             let ki = OVERRIDE_KEYS
                 .iter()
                 .position(|k| *k == key)
                 .expect("set_field accepted the key");
-            if field_value(&pending.base_cfg, key) == Some(v) {
-                // no-op override (the base variant's own value): keep it
-                // out of the canonical name, so the same design point is
-                // named identically however it was spelled
-                pending.overrides.retain(|&(i, _)| i != ki);
-            } else {
-                match pending.overrides.iter_mut().find(|(i, _)| *i == ki) {
-                    Some(entry) => entry.1 = v,
-                    None => pending.overrides.push((ki, v)),
-                }
-            }
+            // respelling a key replaces its whole value list
+            pending.grids.retain(|(i, _)| *i != ki);
+            pending.grids.push((ki, vec![v]));
+            pending.last_key = Some(ki);
+        } else if item.as_bytes()[0].is_ascii_digit() {
+            // bare grid value: extends the last `key=`'s value list
+            let pending = cur
+                .as_mut()
+                .filter(|p| p.last_key.is_some())
+                .ok_or_else(|| {
+                    format!(
+                        "--uarch: grid value '{item}' needs a preceding key=value \
+                         override (e.g. rob=64,128,256)"
+                    )
+                })?;
+            let ki = pending.last_key.expect("filtered above");
+            let mut scratch = pending.base_cfg.clone();
+            let v = set_field(&mut scratch, OVERRIDE_KEYS[ki], item)?;
+            let list = &mut pending
+                .grids
+                .iter_mut()
+                .find(|(i, _)| *i == ki)
+                .expect("last_key always has a grid entry")
+                .1;
+            list.push(v);
         } else {
             let cfg = base_variant(item).ok_or_else(|| {
                 format!(
@@ -459,13 +585,13 @@ pub fn parse_variants(spec: &str) -> Result<Vec<UarchVariant>, String> {
                 )
             })?;
             if let Some(done) = cur.take() {
-                out.push(done.finish());
+                push_finished(done, &mut out)?;
             }
             cur = Some(PendingVariant::new(item, cfg));
         }
     }
     if let Some(done) = cur.take() {
-        out.push(done.finish());
+        push_finished(done, &mut out)?;
     }
     if out.is_empty() {
         return Err("--uarch: no variants given".into());
@@ -626,6 +752,76 @@ mod tests {
     }
 
     #[test]
+    fn grid_expansion_is_cartesian_in_declaration_order() {
+        // one gridded key: values in spelled order
+        let vs = parse_variants("table2,rob=64,128,256").unwrap();
+        let names: Vec<&str> = vs.iter().map(|v| v.name.as_str()).collect();
+        assert_eq!(names, ["table2+rob=64", "table2", "table2+rob=256"]);
+        assert_eq!(vs[0].cfg.rob, 64);
+        assert_eq!(vs[1].cfg, UarchConfig::default());
+        // two gridded keys: cartesian, declaration order, last fastest
+        let vs = parse_variants("table2,rob=64,256,mem_lat=80,100").unwrap();
+        let names: Vec<&str> = vs.iter().map(|v| v.name.as_str()).collect();
+        assert_eq!(
+            names,
+            [
+                "table2+rob=64",            // mem_lat=80 is table2's own value
+                "table2+rob=64+mem_lat=100",
+                "table2+rob=256",
+                "table2+rob=256+mem_lat=100",
+            ]
+        );
+        // the grid only touches the variant it follows
+        let vs = parse_variants("table2,rob=64,256,small-core").unwrap();
+        assert_eq!(vs.len(), 3);
+        assert_eq!(vs[2].cfg, base_variant("small-core").unwrap());
+        // respelling a key replaces its whole list
+        let vs = parse_variants("table2,rob=64,256,rob=512").unwrap();
+        assert_eq!(vs.len(), 1);
+        assert_eq!(vs[0].name, "table2+rob=512");
+    }
+
+    #[test]
+    fn grid_values_dedupe_via_canonicalization() {
+        // equivalent spellings collapse to one design point
+        let vs = parse_variants("table2,l2_bytes=512K,524288").unwrap();
+        assert_eq!(vs.len(), 1);
+        assert_eq!(vs[0].name, "table2+l2_bytes=524288");
+        // a value restating the base's own collapses into the base point
+        let vs = parse_variants("table2,rob=128,128").unwrap();
+        assert_eq!(vs.len(), 1);
+        assert_eq!(vs[0].name, "table2");
+        // K/M suffixes work as grid values
+        let vs = parse_variants("table2,l2_bytes=128K,512K").unwrap();
+        assert_eq!(vs.len(), 2);
+        assert_eq!(vs[1].cfg.l2_bytes, 512 * 1024);
+    }
+
+    #[test]
+    fn grid_errors_are_usage_errors() {
+        // a bare value with no preceding key
+        let err = parse_variants("table2,128").unwrap_err();
+        assert!(err.contains("needs a preceding"), "{err}");
+        assert!(parse_variants("128").is_err());
+        // grid values hit the same zero-guards as single overrides
+        assert!(parse_variants("table2,decode_width=2,0").is_err());
+        assert!(parse_variants("table2,rob=64,banana").is_err());
+        // unrealizable geometry anywhere in the grid is a parse error
+        let err = parse_variants("table2,l2_bytes=256K,96K").unwrap_err();
+        assert!(err.contains("geometry"), "{err}");
+        // expansion is bounded at MAX_GRID_POINTS design points
+        let vals: Vec<String> = (1..=65).map(|v| v.to_string()).collect();
+        let err = parse_variants(&format!("table2,mem_lat={}", vals.join(","))).unwrap_err();
+        assert!(err.contains("limit 64"), "{err}");
+        // a cartesian blow-up across keys trips the same bound
+        let err = parse_variants(
+            "table2,mem_lat=1,2,3,4,5,6,7,8,9,l1_lat=1,2,3,4,5,6,7,8,9",
+        )
+        .unwrap_err();
+        assert!(err.contains("limit 64"), "{err}");
+    }
+
+    #[test]
     fn validate_rejects_unrealizable_cache_geometry() {
         for name in VARIANT_NAMES {
             validate(&base_variant(name).unwrap())
@@ -642,6 +838,15 @@ mod tests {
         // zero lines
         let c = UarchConfig { l1i_bytes: 1, ..UarchConfig::default() };
         assert!(validate(&c).is_err());
+        // absurd-but-power-of-two sizes are usage errors, not worker
+        // aborts inside the cache/pipeline constructors
+        let c = UarchConfig { l2_bytes: 1 << 39, ..UarchConfig::default() };
+        assert!(validate(&c).unwrap_err().contains("caps caches"));
+        let c = UarchConfig { rob: 1 << 24, ..UarchConfig::default() };
+        assert!(validate(&c).unwrap_err().contains("bound"));
+        let c = UarchConfig { line_bytes: 1 << 16, ..UarchConfig::default() };
+        assert!(validate(&c).is_err());
+        assert!(parse_variants("table2,l2_bytes=524288M").unwrap_err().contains("caps"));
         // parse_variants surfaces it as a parse error (CLI exit 2), so a
         // bad combination can never reach the sweep workers
         assert!(parse_variants("table2,l1d_assoc=3").unwrap_err().contains("geometry"));

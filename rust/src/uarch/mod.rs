@@ -11,17 +11,24 @@
 //! deterministic: identical (program, VL, config) inputs produce
 //! identical cycle counts, which is what lets the sweep coordinator
 //! cache and resume jobs bit-identically.
+//!
+//! [`ppa`] adds the other two PPA axes: dependency-free area and
+//! energy proxies over the same configuration (and the pipeline's
+//! event counters), so the design-space sweep can rank points by
+//! perf/W and perf/mm² instead of only timing them.
 
 pub mod cache;
 pub mod config;
 pub mod pipeline;
+pub mod ppa;
 pub mod trace;
 
 pub use config::{
     base_variant, check_variants, field_value, parse_variants, set_field, validate,
-    UarchConfig, UarchVariant, OVERRIDE_KEYS, VARIANT_NAMES,
+    UarchConfig, UarchVariant, MAX_GRID_POINTS, OVERRIDE_KEYS, VARIANT_NAMES,
 };
 pub use pipeline::{InstTiming, Pipeline, TimingResult};
+pub use ppa::PpaCounters;
 
 use crate::asm::Program;
 use crate::exec::{Executor, RunStats, Trap};

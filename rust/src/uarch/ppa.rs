@@ -1,0 +1,376 @@
+//! PPA cost model: dependency-free **area** and **energy** proxies for
+//! a [`UarchConfig`] design point, closing the "P and A" gap in the
+//! paper's central claim — implementers "choose the vector length most
+//! suitable for their power, performance, and area targets" (§1). The
+//! timing model supplies performance; this module supplies the other
+//! two axes so `sve dse` can rank design points instead of only timing
+//! them.
+//!
+//! Both proxies are **relative**, not calibrated silicon numbers: the
+//! constants are plausible 16FF-class magnitudes chosen so that the
+//! *ordering* of design points is meaningful (double the ROB and the
+//! core grows; double the VL and the vector datapath grows; miss to
+//! DRAM and the energy bill dwarfs an ALU op). Assumptions and limits
+//! are documented in EXPERIMENTS.md §PPA.
+//!
+//! * [`area_um2`] — a µm²-proxy derived purely from the configuration
+//!   and the vector length: SRAM arrays, width-quadratic decode/retire
+//!   logic, ROB/scheduler CAMs, load/store ports, and a VL-proportional
+//!   vector datapath (register file + functional units).
+//! * [`energy_pj`] — a pJ-proxy derived from the retired-op and
+//!   cache-event counters the pipeline already tracks
+//!   ([`super::pipeline::TimingResult`]), carried per run as
+//!   [`PpaCounters`]: per-inst front-end energy, per-lane vector
+//!   energy, per-level cache access energy, DRAM accesses, mispredict
+//!   flushes, cracked gather/scatter elements, and area-proportional
+//!   static leakage integrated over the run's cycles.
+//!
+//! Every function is a pure, deterministic function of integers and
+//! IEEE-754 double arithmetic — no host state — so the derived
+//! artifacts stay byte-stable and golden-testable like every other
+//! report (`tools/gen_goldens.py` mirrors these formulas line for
+//! line).
+
+use super::config::UarchConfig;
+
+// ---- area constants (µm², 16FF-class relative magnitudes) ----
+const SRAM_UM2_PER_BYTE: f64 = 0.35;
+const TAG_UM2_PER_WAY: f64 = 220.0;
+const DECODE_UM2_PER_SLOT2: f64 = 1800.0; // × decode_width²
+const RETIRE_UM2_PER_SLOT2: f64 = 1200.0; // × retire_width²
+const ROB_UM2_PER_ENTRY: f64 = 85.0;
+const SCHED_UM2_PER_ENTRY_PORT: f64 = 60.0;
+const MSHR_UM2_PER_ENTRY: f64 = 150.0;
+const LSU_UM2_PER_PORT_BYTE: f64 = 9.0;
+const VEC_FU_UM2_PER_LANE_ISSUE: f64 = 5200.0;
+const VREG_UM2_PER_BIT: f64 = 22.0;
+
+// ---- energy constants (pJ) ----
+const E_INST_BASE_PJ: f64 = 4.0;
+const E_INST_PER_DECODE_SLOT_PJ: f64 = 0.5;
+const E_VLANE_PJ: f64 = 1.0;
+const E_L1D_BASE_PJ: f64 = 8.0;
+const E_L1D_PER_LOG2KB_PJ: f64 = 0.5;
+const E_L2_BASE_PJ: f64 = 28.0;
+const E_L2_PER_LOG2KB_PJ: f64 = 1.0;
+const E_MEM_PJ: f64 = 2200.0;
+const E_FLUSH_PER_DECODE_SLOT_PJ: f64 = 6.0;
+const E_FLUSH_PER_ROB_ENTRY_PJ: f64 = 0.25;
+const E_CRACKED_ELEM_PJ: f64 = 3.0;
+const LEAK_PJ_PER_UM2_CYCLE: f64 = 0.00002;
+
+/// The raw pipeline event counters the energy proxy consumes, recorded
+/// per run (in `RunRecord` and every `sve-repro/fig8-job/v2` cache
+/// file) so artifacts can be re-ranked under a revised model without
+/// re-simulating. All counters come from
+/// [`super::pipeline::TimingResult`]; note `l2_accesses` equals the
+/// L1D miss count and `mem_accesses` the L2 miss count by construction
+/// of the two-level hierarchy.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PpaCounters {
+    /// L1D accesses (hits + misses), after port splitting.
+    pub l1d_accesses: u64,
+    /// L2 accesses — every L1D miss, whether it hits L2 or not.
+    pub l2_accesses: u64,
+    /// DRAM accesses — every L2 miss.
+    pub mem_accesses: u64,
+    /// Resolved conditional-branch mispredictions.
+    pub mispredicts: u64,
+    /// Port-slots consumed by cracked gather/scatter elements (§4).
+    pub cracked_elems: u64,
+}
+
+/// Area proxy of one design point, split into the VL-independent core
+/// and the VL-proportional vector datapath.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct AreaBreakdown {
+    /// Caches, frontend, ROB, schedulers, MSHRs, load/store ports.
+    pub core_um2: f64,
+    /// Vector functional units + Z/P register file at this VL.
+    pub vector_um2: f64,
+    /// `core_um2 + vector_um2`.
+    pub total_um2: f64,
+}
+
+/// Energy proxy of one run, split by source. `total_pj` is the sum of
+/// the components in declaration order.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct EnergyBreakdown {
+    /// Fetch/decode/rename/retire energy, per retired instruction.
+    pub front_pj: f64,
+    /// Per-lane vector execution energy (scales with VL).
+    pub vector_pj: f64,
+    /// L1D access energy (size-dependent per access).
+    pub l1d_pj: f64,
+    /// L2 access energy (size-dependent per access).
+    pub l2_pj: f64,
+    /// DRAM access energy.
+    pub mem_pj: f64,
+    /// Mispredict pipeline-flush energy (width- and ROB-dependent).
+    pub flush_pj: f64,
+    /// Cracked gather/scatter element overhead.
+    pub cracked_pj: f64,
+    /// Area-proportional leakage integrated over the run's cycles.
+    pub static_pj: f64,
+    /// Sum of all components.
+    pub total_pj: f64,
+}
+
+/// `log2(bytes / 1KB)`, floored at 0 — the access-energy scale factor
+/// for an SRAM of `bytes` capacity.
+fn log2_kb(bytes: usize) -> f64 {
+    ((bytes / 1024).max(1) as u64).ilog2() as f64
+}
+
+/// Area proxy (µm²) of `cfg` instantiated at `vl_bits`.
+///
+/// The core part is a linear model over the structural parameters, with
+/// decode/retire width entering **quadratically** (rename and bypass
+/// networks scale with width²); the vector part scales with the lane
+/// count (`vl_bits / 128`) times the vector issue width, plus the Z/P
+/// register file at `vl_bits`. Deterministic: same inputs, same bits.
+///
+/// ```
+/// use sve_repro::uarch::{base_variant, ppa};
+/// let t2 = base_variant("table2").unwrap();
+/// let big = base_variant("big-core").unwrap();
+/// // more resources cost area, and so does a longer vector
+/// assert!(ppa::area_um2(&big, 256).total_um2 > ppa::area_um2(&t2, 256).total_um2);
+/// assert!(ppa::area_um2(&t2, 2048).total_um2 > ppa::area_um2(&t2, 128).total_um2);
+/// // the split is exact
+/// let a = ppa::area_um2(&t2, 512);
+/// assert_eq!(a.total_um2, a.core_um2 + a.vector_um2);
+/// ```
+pub fn area_um2(cfg: &UarchConfig, vl_bits: usize) -> AreaBreakdown {
+    let sram = (cfg.l1i_bytes + cfg.l1d_bytes + cfg.l2_bytes) as f64 * SRAM_UM2_PER_BYTE;
+    let tags = (cfg.l1i_assoc + cfg.l1d_assoc + cfg.l2_assoc) as f64 * TAG_UM2_PER_WAY;
+    let decode = (cfg.decode_width * cfg.decode_width) as f64 * DECODE_UM2_PER_SLOT2;
+    let retire = (cfg.retire_width * cfg.retire_width) as f64 * RETIRE_UM2_PER_SLOT2;
+    let rob = cfg.rob as f64 * ROB_UM2_PER_ENTRY;
+    let sched = (cfg.int_sched_entries as u64 * cfg.int_issue_per_cycle
+        + cfg.vec_sched_entries as u64 * cfg.vec_issue_per_cycle
+        + cfg.ls_sched_entries as u64 * (cfg.loads_per_cycle + cfg.stores_per_cycle))
+        as f64
+        * SCHED_UM2_PER_ENTRY_PORT;
+    let mshr = cfg.mshrs as f64 * MSHR_UM2_PER_ENTRY;
+    let lsu = ((cfg.loads_per_cycle + cfg.stores_per_cycle) * cfg.port_bytes as u64) as f64
+        * LSU_UM2_PER_PORT_BYTE;
+    let core_um2 = sram + tags + decode + retire + rob + sched + mshr + lsu;
+    let lanes = (vl_bits / 128) as u64;
+    let fu = (lanes * cfg.vec_issue_per_cycle) as f64 * VEC_FU_UM2_PER_LANE_ISSUE;
+    let vreg = vl_bits as f64 * VREG_UM2_PER_BIT;
+    let vector_um2 = fu + vreg;
+    AreaBreakdown { core_um2, vector_um2, total_um2: core_um2 + vector_um2 }
+}
+
+/// Energy proxy (pJ) of one run: `insts` retired instructions of which
+/// `vector_fraction` were vector, taking `cycles`, with the cache/flush
+/// event counts in `c`, on `cfg` instantiated at `vl_bits`.
+///
+/// ```
+/// use sve_repro::uarch::{ppa, UarchConfig};
+/// let cfg = UarchConfig::default();
+/// let c = ppa::PpaCounters {
+///     l1d_accesses: 2500, l2_accesses: 300, mem_accesses: 40,
+///     mispredicts: 100, cracked_elems: 0,
+/// };
+/// let e = ppa::energy_pj(&cfg, 256, 10_000, 0.5, 8_000, &c);
+/// assert!(e.total_pj > 0.0 && e.total_pj.is_finite());
+/// // a DRAM miss costs orders of magnitude more than an ALU op
+/// let mut more = c;
+/// more.mem_accesses += 100;
+/// let e2 = ppa::energy_pj(&cfg, 256, 10_000, 0.5, 8_000, &more);
+/// assert!(e2.total_pj > e.total_pj + 100_000.0);
+/// // longer vectors spend more per vector instruction (and more leakage)
+/// let wide = ppa::energy_pj(&cfg, 2048, 10_000, 0.5, 8_000, &c);
+/// assert!(wide.total_pj > e.total_pj);
+/// ```
+pub fn energy_pj(
+    cfg: &UarchConfig,
+    vl_bits: usize,
+    insts: u64,
+    vector_fraction: f64,
+    cycles: u64,
+    c: &PpaCounters,
+) -> EnergyBreakdown {
+    let lanes = (vl_bits / 128) as f64;
+    let front_pj =
+        insts as f64 * (E_INST_BASE_PJ + cfg.decode_width as f64 * E_INST_PER_DECODE_SLOT_PJ);
+    let vector_pj = insts as f64 * vector_fraction * lanes * E_VLANE_PJ;
+    let l1d_pj = c.l1d_accesses as f64
+        * (E_L1D_BASE_PJ + log2_kb(cfg.l1d_bytes) * E_L1D_PER_LOG2KB_PJ);
+    let l2_pj =
+        c.l2_accesses as f64 * (E_L2_BASE_PJ + log2_kb(cfg.l2_bytes) * E_L2_PER_LOG2KB_PJ);
+    let mem_pj = c.mem_accesses as f64 * E_MEM_PJ;
+    let flush_pj = c.mispredicts as f64
+        * (cfg.decode_width as f64 * E_FLUSH_PER_DECODE_SLOT_PJ
+            + cfg.rob as f64 * E_FLUSH_PER_ROB_ENTRY_PJ);
+    let cracked_pj = c.cracked_elems as f64 * E_CRACKED_ELEM_PJ;
+    let static_pj =
+        cycles as f64 * area_um2(cfg, vl_bits).total_um2 * LEAK_PJ_PER_UM2_CYCLE;
+    let total_pj = front_pj
+        + vector_pj
+        + l1d_pj
+        + l2_pj
+        + mem_pj
+        + flush_pj
+        + cracked_pj
+        + static_pj;
+    EnergyBreakdown {
+        front_pj,
+        vector_pj,
+        l1d_pj,
+        l2_pj,
+        mem_pj,
+        flush_pj,
+        cracked_pj,
+        static_pj,
+        total_pj,
+    }
+}
+
+/// Performance per watt, in kernel runs per joule. At a nominal 1 GHz,
+/// power = `energy_pj / cycles` pJ/ns and perf = `1e9 / cycles` runs/s,
+/// so the quotient collapses to `1e12 / energy_pj` — independent of the
+/// clock.
+///
+/// ```
+/// assert_eq!(sve_repro::uarch::ppa::perf_per_watt(2.0e12), 0.5);
+/// ```
+pub fn perf_per_watt(energy_pj: f64) -> f64 {
+    1.0e12 / energy_pj
+}
+
+/// Performance per area, in kernel runs per second per mm² at a nominal
+/// 1 GHz: `(1e9 / cycles) / (area_um2 / 1e6)`.
+///
+/// ```
+/// assert_eq!(sve_repro::uarch::ppa::perf_per_mm2(1_000, 1.0e6), 1.0e6);
+/// ```
+pub fn perf_per_mm2(cycles: u64, area_um2: f64) -> f64 {
+    1.0e15 / (cycles as f64 * area_um2)
+}
+
+/// Guard in the style of `check_variants`: verify the proxies produce
+/// positive finite numbers for `cfg` across the legal VL range, so a
+/// pathological override is a parse error instead of a NaN quietly
+/// ranking design points. Called for every variant accepted by
+/// [`super::config::check_variants`].
+pub fn check_model(cfg: &UarchConfig) -> Result<(), String> {
+    let probe = PpaCounters {
+        l1d_accesses: 1 << 20,
+        l2_accesses: 1 << 16,
+        mem_accesses: 1 << 12,
+        mispredicts: 1 << 10,
+        cracked_elems: 1 << 10,
+    };
+    for vl in [128usize, 2048] {
+        let a = area_um2(cfg, vl);
+        if !a.total_um2.is_finite() || a.total_um2 <= 0.0 {
+            return Err(format!("area proxy at VL {vl} is not positive and finite"));
+        }
+        let e = energy_pj(cfg, vl, 1 << 24, 0.5, 1 << 24, &probe);
+        if !e.total_pj.is_finite() || e.total_pj <= 0.0 {
+            return Err(format!("energy proxy at VL {vl} is not positive and finite"));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::uarch::{base_variant, VARIANT_NAMES};
+
+    fn counters() -> PpaCounters {
+        PpaCounters {
+            l1d_accesses: 10_000,
+            l2_accesses: 1_000,
+            mem_accesses: 100,
+            mispredicts: 50,
+            cracked_elems: 20,
+        }
+    }
+
+    #[test]
+    fn area_orders_the_named_cores() {
+        let small = base_variant("small-core").unwrap();
+        let t2 = base_variant("table2").unwrap();
+        let big = base_variant("big-core").unwrap();
+        for vl in [128usize, 512, 2048] {
+            let a_small = area_um2(&small, vl).total_um2;
+            let a_t2 = area_um2(&t2, vl).total_um2;
+            let a_big = area_um2(&big, vl).total_um2;
+            assert!(
+                a_small < a_t2 && a_t2 < a_big,
+                "VL {vl}: {a_small} !< {a_t2} !< {a_big}"
+            );
+        }
+        // deep-rob costs area over table2 but keeps the same caches
+        let deep = base_variant("deep-rob").unwrap();
+        assert!(area_um2(&deep, 256).core_um2 > area_um2(&t2, 256).core_um2);
+    }
+
+    #[test]
+    fn area_scales_with_vl_in_the_vector_part_only() {
+        let t2 = base_variant("table2").unwrap();
+        let a128 = area_um2(&t2, 128);
+        let a2048 = area_um2(&t2, 2048);
+        assert_eq!(a128.core_um2, a2048.core_um2, "core area is VL-independent");
+        assert!(a2048.vector_um2 > 8.0 * a128.vector_um2, "16x lanes, >8x datapath");
+        assert_eq!(a128.total_um2, a128.core_um2 + a128.vector_um2);
+    }
+
+    #[test]
+    fn energy_components_respond_to_their_events() {
+        let cfg = base_variant("table2").unwrap();
+        let base = energy_pj(&cfg, 256, 100_000, 0.5, 80_000, &counters());
+        assert!(base.total_pj > 0.0);
+        let sum = base.front_pj
+            + base.vector_pj
+            + base.l1d_pj
+            + base.l2_pj
+            + base.mem_pj
+            + base.flush_pj
+            + base.cracked_pj
+            + base.static_pj;
+        assert_eq!(base.total_pj, sum, "total is the component sum");
+        // each counter moves its component and the total
+        let mut c = counters();
+        c.mem_accesses *= 10;
+        let memy = energy_pj(&cfg, 256, 100_000, 0.5, 80_000, &c);
+        assert!(memy.mem_pj > base.mem_pj && memy.total_pj > base.total_pj);
+        let mut c = counters();
+        c.mispredicts *= 10;
+        let flushy = energy_pj(&cfg, 256, 100_000, 0.5, 80_000, &c);
+        assert!(flushy.flush_pj > base.flush_pj);
+        // fewer cycles -> less leakage
+        let quick = energy_pj(&cfg, 256, 100_000, 0.5, 40_000, &counters());
+        assert!(quick.static_pj < base.static_pj);
+        // a DRAM access costs far more than an L1 hit
+        assert!(E_MEM_PJ > 100.0 * E_L1D_BASE_PJ);
+    }
+
+    #[test]
+    fn perf_metrics_are_reciprocal_in_their_cost() {
+        assert!(perf_per_watt(1.0e6) > perf_per_watt(2.0e6));
+        assert!(perf_per_mm2(1_000, 1.0e6) > perf_per_mm2(2_000, 1.0e6));
+        assert!(perf_per_mm2(1_000, 1.0e6) > perf_per_mm2(1_000, 2.0e6));
+    }
+
+    #[test]
+    fn check_model_accepts_every_named_variant() {
+        for name in VARIANT_NAMES {
+            let cfg = base_variant(name).unwrap();
+            check_model(&cfg).unwrap_or_else(|e| panic!("{name}: {e}"));
+        }
+    }
+
+    #[test]
+    fn log2_kb_floors_small_srams() {
+        assert_eq!(log2_kb(512), 0.0);
+        assert_eq!(log2_kb(1024), 0.0);
+        assert_eq!(log2_kb(64 * 1024), 6.0);
+        assert_eq!(log2_kb(256 * 1024), 8.0);
+    }
+}

@@ -8,14 +8,16 @@
 //! in the same commit (regenerate with `python3 tools/gen_goldens.py`),
 //! making every artifact-format change reviewable.
 //!
-//! All float inputs are dyadic rationals, so their shortest-round-trip
-//! renderings are short and platform-independent.
+//! Timing-side float inputs are dyadic rationals; the §PPA values are
+//! derived through fixed IEEE-754 double arithmetic that the Python
+//! generator mirrors operation for operation, so both produce the same
+//! bits and therefore the same shortest-round-trip rendering.
 
 use sve_repro::coordinator::{Fig8Row, Isa, RunRecord, VariantRows};
-use sve_repro::report::compare::{self, SpeedupPoint};
+use sve_repro::report::compare::{self, MetricPoint};
 use sve_repro::report::dse;
 use sve_repro::report::json::Json;
-use sve_repro::uarch::parse_variants;
+use sve_repro::uarch::{parse_variants, PpaCounters};
 use sve_repro::workloads::Group;
 
 const VLS: [usize; 2] = [128, 256];
@@ -32,7 +34,26 @@ fn rec(
     vector_fraction: f64,
     l1d_miss_rate: f64,
 ) -> RunRecord {
-    RunRecord { bench, group, isa, cycles, insts, vector_fraction, vectorized, l1d_miss_rate, ipc }
+    RunRecord {
+        bench,
+        group,
+        isa,
+        cycles,
+        insts,
+        vector_fraction,
+        vectorized,
+        l1d_miss_rate,
+        ipc,
+        // fixture counters are a fixed function of insts — mirrored by
+        // tools/gen_goldens.py — so the energy proxies are reproducible
+        counters: PpaCounters {
+            l1d_accesses: insts / 4,
+            l2_accesses: insts / 32,
+            mem_accesses: insts / 128,
+            mispredicts: insts / 100,
+            cracked_elems: 0,
+        },
+    }
 }
 
 fn rows(triad_cycles: [u64; 3], triad_ipc: [f64; 3], g500_cycles: u64, g500_ipc: f64) -> Vec<Fig8Row> {
@@ -148,28 +169,38 @@ fn dse_artifact_writer_emits_the_same_bytes() {
 }
 
 /// The compare report over the golden DSE artifact and a doctored copy:
-/// one -10% regression, one +3% improvement, one point dropped, one
-/// point added — pinned byte-for-byte, including the failure summary.
+/// one -10% speedup regression, one +3% improvement, one -50% perf/W
+/// regression (the §PPA metrics fail under the same contract), one
+/// point dropped, one point added — pinned byte-for-byte, including the
+/// failure summary.
 #[test]
 fn compare_report_matches_golden() {
     let a = compare::extract_points(&dse::to_json(&variants(), &VLS)).unwrap();
-    assert_eq!(a.len(), 8, "fixture drifted");
-    let mut b: Vec<SpeedupPoint> = a.clone();
-    // -10% on table2/stream_triad@256 (beyond the 2% threshold)
-    b[1].speedup = 2.25;
-    // +3% on table2/graph500@128 (improvements never fail)
-    b[2].speedup = 1.03;
-    // drop small-core+l2_bytes=524288/graph500@256, add table2/haccmk@128
-    b.remove(7);
-    b.push(SpeedupPoint {
+    // per variant: 4 speedup points + 2 benches x 2 VLs x 2 PPA metrics
+    assert_eq!(a.len(), 24, "fixture drifted");
+    let mut b: Vec<MetricPoint> = a.clone();
+    // -10% on table2/stream_triad@256 speedup (beyond the 2% threshold)
+    b[1].value = 2.25;
+    // +3% on table2/graph500@128 speedup (improvements never fail)
+    b[2].value = 1.03;
+    // -50% on small-core+l2/stream_triad@128 perf_per_watt: the PPA
+    // metrics ride the same regression contract
+    assert_eq!(b[16].metric, "perf_per_watt");
+    b[16].value *= 0.5;
+    // drop small-core+l2/graph500@256 perf_per_mm2, add table2/haccmk@128
+    assert_eq!(b[23].metric, "perf_per_mm2");
+    b.remove(23);
+    b.push(MetricPoint {
         variant: "table2".into(),
         bench: "haccmk".into(),
         vl_bits: 128,
-        speedup: 1.5,
+        metric: "speedup".into(),
+        value: 1.5,
     });
     let cmp = compare::compare(&a, &b, Some(2.0));
-    assert!(cmp.failed(), "one regression + one missing point must fail");
-    assert_eq!(cmp.compared, 7);
+    assert!(cmp.failed(), "two regressions + one missing point must fail");
+    assert_eq!(cmp.compared, 23);
+    assert_eq!(cmp.regressions.len(), 2);
     let rendered = compare::render(&cmp);
     assert_eq!(rendered, include_str!("golden/compare.txt"), "compare renderer drifted");
     // and the clean self-comparison stays clean

@@ -12,7 +12,8 @@ use sve_repro::coordinator::{
 };
 use sve_repro::report::store::{job_key, JobStore};
 use sve_repro::uarch::{
-    base_variant, parse_variants, set_field, UarchConfig, OVERRIDE_KEYS, VARIANT_NAMES,
+    base_variant, parse_variants, set_field, PpaCounters, UarchConfig, OVERRIDE_KEYS,
+    VARIANT_NAMES,
 };
 use sve_repro::workloads::{self, Group};
 
@@ -194,6 +195,13 @@ fn equivalent_override_spellings_hit_the_same_cache_entry() {
         vectorized: true,
         l1d_miss_rate: 0.0625,
         ipc: 1.25,
+        counters: PpaCounters {
+            l1d_accesses: 400,
+            l2_accesses: 50,
+            mem_accesses: 10,
+            mispredicts: 5,
+            cracked_elems: 2,
+        },
     };
     st.save(&key, &r).unwrap();
     // the equivalent spelling hits...
@@ -382,6 +390,53 @@ fn cli_compare_exit_code_contract() {
     let out = sve(&["report", "--compare", &path("a.json"), &path("garbage.json")]);
     assert_eq!(out.status.code(), Some(1));
 
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn cli_uarch_grid_usage_errors_exit_2() {
+    // a >64-point grid is a usage error, not a day-long sweep
+    let vals: Vec<String> = (1..=65).map(|v| v.to_string()).collect();
+    let spec = format!("table2,mem_lat={}", vals.join(","));
+    let out = sve(&["dse", "--uarch", &spec]);
+    assert_eq!(out.status.code(), Some(2), "oversized grid must be a usage error");
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("limit 64"), "{stderr}");
+    // a bare grid value with no preceding key=value
+    let out = sve(&["dse", "--uarch", "table2,128"]);
+    assert_eq!(out.status.code(), Some(2));
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("needs a preceding"), "{stderr}");
+    // grid values hit the same zero-guards as single overrides
+    let out = sve(&["dse", "--uarch", "table2,decode_width=2,0"]);
+    assert_eq!(out.status.code(), Some(2));
+    assert!(String::from_utf8_lossy(&out.stderr).contains("must be >= 1"));
+}
+
+#[test]
+fn cli_dse_grid_expansion_runs_end_to_end() {
+    let dir = temp_dir("cli-dse-grid");
+    let out_dir = dir.to_string_lossy().into_owned();
+    // mem_lat=80 restates deep-rob's own latency, so the grid expands
+    // to exactly {deep-rob, deep-rob+mem_lat=100}
+    let out = sve(&[
+        "dse", "--uarch", "deep-rob,mem_lat=80,100", "--vls", "128", "--benches",
+        "stream_triad", "--out", &out_dir, "--jobs", "1",
+    ]);
+    assert_eq!(
+        out.status.code(),
+        Some(0),
+        "stderr: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("## deep-rob\n"), "{stdout}");
+    assert!(stdout.contains("## deep-rob+mem_lat=100\n"), "{stdout}");
+    assert!(stdout.contains("4 jobs: 4 simulated, 0 reloaded"), "{stdout}");
+    assert!(stdout.contains("Pareto frontier"), "{stdout}");
+    let json = std::fs::read_to_string(dir.join("dse.json")).unwrap();
+    assert!(json.contains("\"schema\": \"sve-repro/dse/v2\""), "v2 schema expected");
+    assert!(json.contains("\"perf_per_watt\""), "PPA fields expected");
     let _ = std::fs::remove_dir_all(&dir);
 }
 

@@ -12,6 +12,7 @@
 use sve_repro::coordinator::{Fig8Row, Isa, RunRecord};
 use sve_repro::report::fig8;
 use sve_repro::report::json::Json;
+use sve_repro::uarch::PpaCounters;
 use sve_repro::workloads::Group;
 
 const VLS: [usize; 2] = [128, 256];
@@ -28,7 +29,20 @@ fn rec(
     vector_fraction: f64,
     l1d_miss_rate: f64,
 ) -> RunRecord {
-    RunRecord { bench, group, isa, cycles, insts, vector_fraction, vectorized, l1d_miss_rate, ipc }
+    // the fig8 emitters do not render the PPA counters, so the goldens
+    // are independent of them
+    RunRecord {
+        bench,
+        group,
+        isa,
+        cycles,
+        insts,
+        vector_fraction,
+        vectorized,
+        l1d_miss_rate,
+        ipc,
+        counters: PpaCounters::default(),
+    }
 }
 
 /// Must stay in sync with the generator notes in `tests/golden/`.

@@ -2,24 +2,27 @@
 """Author the DSE/compare golden files without a Rust toolchain.
 
 This is a line-for-line Python mirror of the Rust emitters in
-`rust/src/report/{json,dse,compare,fig8}.rs` and `rust/src/csvutil.rs`,
-used to (re)generate `tests/golden/dse.{json,csv,md}` and
-`tests/golden/compare.txt` for the byte-for-byte golden tests in
-`tests/dse_compare_golden.rs` (whose fixture must stay in sync with
-`variants()` below). The authoring containers for this repo carry no
-cargo, so the goldens are produced here and *verified* against the Rust
-emitters by CI's `cargo test`.
+`rust/src/report/{json,dse,compare,fig8}.rs`, `rust/src/csvutil.rs` and
+the §PPA proxies in `rust/src/uarch/ppa.rs`, used to (re)generate
+`tests/golden/dse.{json,csv,md}` and `tests/golden/compare.txt` for the
+byte-for-byte golden tests in `tests/dse_compare_golden.rs` (whose
+fixture must stay in sync with `variants()` below). The authoring
+containers for this repo carry no cargo, so the goldens are produced
+here and *verified* against the Rust emitters by CI's `cargo test`.
 
-All float inputs are dyadic rationals: Rust renders floats with
-shortest-round-trip Display (integral floats print without ".0"), and
-`rust_float` below reproduces that for the value range used here.
+Float parity: Python floats are IEEE-754 doubles with the same
+round-to-nearest arithmetic as Rust, every formula below replicates the
+Rust operation order exactly, and both languages render doubles with
+the shortest representation that round-trips — so derived values (the
+§PPA energies, perf/W, perf/mm²) serialize to identical bytes. The
+timing-side inputs remain dyadic rationals as before.
 """
 
 import os
 
 GOLDEN_DIR = os.path.join(os.path.dirname(__file__), "..", "tests", "golden")
 
-DSE_SCHEMA = "sve-repro/dse/v1"
+DSE_SCHEMA = "sve-repro/dse/v2"
 
 
 # ---------------------------------------------------------------------
@@ -27,15 +30,29 @@ DSE_SCHEMA = "sve-repro/dse/v1"
 # ---------------------------------------------------------------------
 
 def rust_float(v):
-    """Rust `format!("{v}")` for f64: shortest repr, no trailing .0."""
-    if v == int(v):
+    """Rust `format!("{v}")` for f64: shortest repr, no trailing .0.
+
+    Rust's Display never uses scientific notation; Python's repr does
+    for very large/small magnitudes. Rather than silently emitting a
+    golden byte sequence the Rust emitters can never reproduce, fail
+    loudly if a fixture value ever leaves the decimal-notation range.
+    """
+    if v == int(v) and abs(v) < 1e16:
         return str(int(v))
-    return repr(v)
+    out = repr(v)
+    if "e" in out or "E" in out:
+        raise ValueError(
+            "%r renders as %s in Python but Rust Display never uses "
+            "scientific notation; keep fixture values in decimal range" % (v, out)
+        )
+    return out
 
 
 def render_json(v, indent=0):
     pad = "  " * indent
     pad_in = "  " * (indent + 1)
+    if v is None:
+        return "null"
     if isinstance(v, bool):
         return "true" if v else "false"
     if isinstance(v, int):
@@ -98,6 +115,68 @@ def f(v, prec):
 
 
 # ---------------------------------------------------------------------
+# rust/src/uarch/ppa.rs — area_um2 / energy_pj / perf metrics
+# (operation order mirrored exactly; see the float-parity note above)
+# ---------------------------------------------------------------------
+
+def log2_kb(nbytes):
+    return float(max(nbytes // 1024, 1).bit_length() - 1)
+
+
+def area_um2(c, vl_bits):
+    """Returns (core_um2, vector_um2, total_um2)."""
+    sram = float(c["l1i_bytes"] + c["l1d_bytes"] + c["l2_bytes"]) * 0.35
+    tags = float(c["l1i_assoc"] + c["l1d_assoc"] + c["l2_assoc"]) * 220.0
+    decode = float(c["decode_width"] * c["decode_width"]) * 1800.0
+    retire = float(c["retire_width"] * c["retire_width"]) * 1200.0
+    rob = float(c["rob"]) * 85.0
+    sched = float(
+        c["int_sched_entries"] * c["int_issue_per_cycle"]
+        + c["vec_sched_entries"] * c["vec_issue_per_cycle"]
+        + c["ls_sched_entries"] * (c["loads_per_cycle"] + c["stores_per_cycle"])
+    ) * 60.0
+    mshr = float(c["mshrs"]) * 150.0
+    lsu = float((c["loads_per_cycle"] + c["stores_per_cycle"]) * c["port_bytes"]) * 9.0
+    core = sram + tags + decode + retire + rob + sched + mshr + lsu
+    lanes = vl_bits // 128
+    fu = float(lanes * c["vec_issue_per_cycle"]) * 5200.0
+    vreg = float(vl_bits) * 22.0
+    vector = fu + vreg
+    return core, vector, core + vector
+
+
+def energy_pj(c, vl_bits, insts, vector_fraction, cycles, cnt):
+    """Total energy proxy (the Rust EnergyBreakdown.total_pj)."""
+    lanes = float(vl_bits // 128)
+    front = float(insts) * (4.0 + float(c["decode_width"]) * 0.5)
+    vector = float(insts) * vector_fraction * lanes * 1.0
+    l1d = float(cnt["l1d_accesses"]) * (8.0 + log2_kb(c["l1d_bytes"]) * 0.5)
+    l2 = float(cnt["l2_accesses"]) * (28.0 + log2_kb(c["l2_bytes"]) * 1.0)
+    mem = float(cnt["mem_accesses"]) * 2200.0
+    flush = float(cnt["mispredicts"]) * (
+        float(c["decode_width"]) * 6.0 + float(c["rob"]) * 0.25
+    )
+    cracked = float(cnt["cracked_elems"]) * 3.0
+    static_ = float(cycles) * area_um2(c, vl_bits)[2] * 0.00002
+    return front + vector + l1d + l2 + mem + flush + cracked + static_
+
+
+def perf_per_watt(e):
+    return 1.0e12 / e
+
+
+def perf_per_mm2(cycles, area):
+    return 1.0e15 / (float(cycles) * area)
+
+
+def run_energy(rec_, uarch):
+    return energy_pj(
+        uarch, rec_["vl_bits"], rec_["insts"], rec_["vector_fraction"], rec_["cycles"],
+        rec_["counters"],
+    )
+
+
+# ---------------------------------------------------------------------
 # the synthetic fixture — must stay in sync with
 # tests/dse_compare_golden.rs::variants()
 # ---------------------------------------------------------------------
@@ -107,6 +186,14 @@ def rec(bench, group, vl_bits, cycles, insts, ipc, vectorized, vf, miss):
         "bench": bench, "group": group, "vl_bits": vl_bits, "cycles": cycles,
         "insts": insts, "ipc": ipc, "vectorized": vectorized,
         "vector_fraction": vf, "l1d_miss_rate": miss,
+        # fixed function of insts, mirrored from the Rust fixture
+        "counters": {
+            "l1d_accesses": insts // 4,
+            "l2_accesses": insts // 32,
+            "mem_accesses": insts // 128,
+            "mispredicts": insts // 100,
+            "cracked_elems": 0,
+        },
     }
 
 
@@ -220,7 +307,7 @@ def fig8_table(rws, vls):
 
 
 # ---------------------------------------------------------------------
-# rust/src/report/dse.rs — to_json / table / pivot / to_markdown
+# rust/src/report/dse.rs — to_json / table / pivot / pareto / markdown
 # ---------------------------------------------------------------------
 
 def uarch_summary(c):
@@ -234,6 +321,90 @@ def uarch_summary(c):
     )
 
 
+def area_json(uarch, vls):
+    per_vl = []
+    for vl in vls:
+        core, vector, total = area_um2(uarch, vl)
+        per_vl.append({"vl_bits": vl, "vector_um2": vector, "total_um2": total})
+    return {"core_um2": area_um2(uarch, 128)[0], "per_vl": per_vl}
+
+
+def energy_json(v, vls):
+    out = []
+    for r in v["rows"]:
+        sve = []
+        for i, vl in enumerate(vls):
+            e = run_energy(r["sve"][i], v["uarch"])
+            total = area_um2(v["uarch"], vl)[2]
+            sve.append({
+                "vl_bits": vl, "energy_pj": e,
+                "perf_per_watt": perf_per_watt(e),
+                "perf_per_mm2": perf_per_mm2(r["sve"][i]["cycles"], total),
+            })
+        out.append({
+            "bench": r["bench"],
+            "neon_pj": run_energy(r["neon"], v["uarch"]),
+            "sve": sve,
+        })
+    return out
+
+
+def pareto(vs, vls):
+    pts = []
+    for v in vs:
+        for vi, vl in enumerate(vls):
+            sp = 0.0
+            e = 0.0
+            for r in v["rows"]:
+                sp += speedup(r, vi)
+                e += run_energy(r["sve"][vi], v["uarch"])
+            mean = sp / float(len(v["rows"])) if v["rows"] else 0.0
+            pts.append({
+                "variant": v["name"], "vl_bits": vl, "mean_speedup": mean,
+                "energy_pj": e, "area_um2": area_um2(v["uarch"], vl)[2],
+                "frontier": True, "dominated_by": None,
+            })
+    for p in pts:
+        for q in pts:
+            if (q["mean_speedup"] >= p["mean_speedup"]
+                    and q["energy_pj"] <= p["energy_pj"]
+                    and q["area_um2"] <= p["area_um2"]
+                    and (q["mean_speedup"] > p["mean_speedup"]
+                         or q["energy_pj"] < p["energy_pj"]
+                         or q["area_um2"] < p["area_um2"])):
+                p["frontier"] = False
+                p["dominated_by"] = "%s@vl%d" % (q["variant"], q["vl_bits"])
+                break
+    order = sorted(
+        range(len(pts)),
+        key=lambda i: (not pts[i]["frontier"], -pts[i]["mean_speedup"], i),
+    )
+    return [pts[i] for i in order]
+
+
+def pareto_table(pts):
+    t = Table(["rank", "variant", "vl_bits", "mean_speedup", "energy_pj",
+               "area_mm2", "pareto", "dominated_by"])
+    for i, p in enumerate(pts):
+        t.push_row([
+            str(i + 1), p["variant"], str(p["vl_bits"]), f(p["mean_speedup"], 2),
+            f(p["energy_pj"], 1), f(p["area_um2"] / 1.0e6, 3),
+            "frontier" if p["frontier"] else "dominated",
+            p["dominated_by"] if p["dominated_by"] is not None else "-",
+        ])
+    return t
+
+
+def pareto_json(pts):
+    return [
+        {"variant": p["variant"], "vl_bits": p["vl_bits"],
+         "mean_speedup": p["mean_speedup"], "energy_pj": p["energy_pj"],
+         "area_um2": p["area_um2"], "frontier": p["frontier"],
+         "dominated_by": p["dominated_by"]}
+        for p in pts
+    ]
+
+
 def dse_to_json(vs, vls):
     return {
         "schema": DSE_SCHEMA,
@@ -242,32 +413,52 @@ def dse_to_json(vs, vls):
         "vls_bits": vls,
         "variants": [
             {"name": v["name"], "uarch": v["uarch"],
+             "area_proxy": area_json(v["uarch"], vls),
+             "energy_pj": energy_json(v, vls),
              "benchmarks": benchmarks_json(v["rows"])}
             for v in vs
         ],
+        "pareto": pareto_json(pareto(vs, vls)),
     }
 
 
 def dse_table(vs, vls):
     t = Table(["variant", "bench", "group", "extra_vec_%", "vl_bits",
-               "speedup", "neon_cycles", "sve_cycles"])
+               "speedup", "neon_cycles", "sve_cycles", "energy_pj",
+               "perf_per_watt", "perf_per_mm2", "area_um2"])
     for v in vs:
         for r in v["rows"]:
             for i, vl in enumerate(vls):
+                e = run_energy(r["sve"][i], v["uarch"])
+                total = area_um2(v["uarch"], vl)[2]
                 t.push_row([
                     v["name"], r["bench"], r["group"], f(100.0 * r["extra"], 1),
                     str(vl), f(speedup(r, i), 2), str(r["neon"]["cycles"]),
-                    str(r["sve"][i]["cycles"]),
+                    str(r["sve"][i]["cycles"]), f(e, 1),
+                    f(perf_per_watt(e), 1),
+                    f(perf_per_mm2(r["sve"][i]["cycles"], total), 1),
+                    f(total, 0),
                 ])
     return t
 
 
 def dse_pivot(vs, vls):
-    t = Table(["bench", "vl_bits"] + [v["name"] for v in vs])
+    header = ["bench", "vl_bits"]
+    header += [v["name"] for v in vs]
+    header += ["%s perf/W" % v["name"] for v in vs]
+    header += ["%s perf/mm2" % v["name"] for v in vs]
+    t = Table(header)
     for bi, row0 in enumerate(vs[0]["rows"]):
         for vi, vl in enumerate(vls):
-            t.push_row([row0["bench"], str(vl)]
-                       + [f(speedup(v["rows"][bi], vi), 2) for v in vs])
+            cells = [row0["bench"], str(vl)]
+            cells += [f(speedup(v["rows"][bi], vi), 2) for v in vs]
+            for v in vs:
+                e = run_energy(v["rows"][bi]["sve"][vi], v["uarch"])
+                cells.append(f(perf_per_watt(e), 1))
+            for v in vs:
+                total = area_um2(v["uarch"], vl)[2]
+                cells.append(f(perf_per_mm2(v["rows"][bi]["sve"][vi]["cycles"], total), 1))
+            t.push_row(cells)
     return t
 
 
@@ -281,9 +472,11 @@ def dse_to_markdown(vs, vls):
         "golden outputs.\n"
         "\n"
         "Each variant section is the Fig. 8 table timed under that design "
-        "point; the pivot at the end puts every variant's speedup-vs-VL "
-        "side by side (speedup is NEON cycles / SVE cycles at the same "
-        "design point).\n"
+        "point; the pivot puts every variant's speedup, perf/W (runs per "
+        "joule) and perf/mm² (runs per second per mm² at a nominal 1 GHz) "
+        "side by side, and the Pareto table ranks every (variant, VL) "
+        "design point on the (performance, energy, area) axes — the §PPA "
+        "proxy formulas are documented in EXPERIMENTS.md §PPA.\n"
         "\n" % (DSE_SCHEMA, vl_list, len(vs), len(vs[0]["rows"]))
     )
     for v in vs:
@@ -292,54 +485,89 @@ def dse_to_markdown(vs, vls):
             fig8_table(v["rows"], vls).to_markdown(),
         )
     out += (
-        "## Cross-variant pivot — speedup over NEON\n\n%s\n"
+        "## Cross-variant pivot — speedup, perf/W, perf/mm² over NEON\n\n%s\n"
+        % dse_pivot(vs, vls).to_markdown()
+    )
+    out += (
+        "## Pareto frontier — performance vs energy vs area\n\n"
+        "`mean_speedup` averages SVE speedup over NEON across benchmarks; "
+        "`energy_pj` sums the energy proxy over the SVE runs; `area_mm2` "
+        "is the area proxy at that VL. `frontier` marks non-dominated "
+        "points: no other design point is at least as good on all three "
+        "axes and strictly better on one.\n\n%s\n"
         "Regenerate with `sve dse --uarch <variants> --out <dir>` (add "
         "`--resume` to reuse cached jobs); machine-readable copies: "
-        "`dse.json`, `dse.csv`.\n" % dse_pivot(vs, vls).to_markdown()
+        "`dse.json`, `dse.csv`.\n" % pareto_table(pareto(vs, vls)).to_markdown()
     )
     return out
 
 
 # ---------------------------------------------------------------------
 # rust/src/report/compare.rs — extract_points / compare / render
+# (points are dicts with variant/bench/vl_bits/metric/value)
 # ---------------------------------------------------------------------
 
-def extract_points(vs):
+def extract_points(vs, vls):
     pts = []
     for v in vs:
         for r in v["rows"]:
             for i, s in enumerate(r["sve"]):
-                pts.append([v["name"], r["bench"], s["vl_bits"], speedup(r, i)])
+                pts.append({"variant": v["name"], "bench": r["bench"],
+                            "vl_bits": s["vl_bits"], "metric": "speedup",
+                            "value": speedup(r, i)})
+        for r in v["rows"]:
+            for i, vl in enumerate(vls):
+                e = run_energy(r["sve"][i], v["uarch"])
+                total = area_um2(v["uarch"], vl)[2]
+                for metric, value in [
+                    ("perf_per_watt", perf_per_watt(e)),
+                    ("perf_per_mm2",
+                     perf_per_mm2(r["sve"][i]["cycles"], total)),
+                ]:
+                    pts.append({"variant": v["name"], "bench": r["bench"],
+                                "vl_bits": vl, "metric": metric, "value": value})
     return pts
 
 
+def key(p):
+    return (p["variant"], p["bench"], p["vl_bits"], p["metric"])
+
+
 def label(p):
-    return "%s/%s@vl%d" % (p[0], p[1], p[2])
+    base = "%s/%s@vl%d" % (p["variant"], p["bench"], p["vl_bits"])
+    if p["metric"] == "speedup":
+        return base
+    return "%s:%s" % (base, p["metric"])
 
 
 def compare(a, b, fail_below_pct):
-    with_variant = any(p[0] != "table2" for p in a + b)
-    header = (["variant"] if with_variant else []) + [
-        "bench", "vl_bits", "speedup_a", "speedup_b", "delta_%", "status"]
+    with_variant = any(p["variant"] != "table2" for p in a + b)
+    with_metric = any(p["metric"] != "speedup" for p in a + b)
+    header = (["variant"] if with_variant else []) + ["bench", "vl_bits"]
+    header += (["metric"] if with_metric else [])
+    header += ["value_a", "value_b", "delta_%", "status"]
     t = Table(header)
     compared, regressions, only_in_a = 0, [], []
     for pa in a:
-        pb = next((p for p in b if p[:3] == pa[:3]), None)
+        pb = next((p for p in b if key(p) == key(pa)), None)
         if pb is None:
             only_in_a.append(label(pa))
             continue
         compared += 1
-        delta_pct = (pb[3] / pa[3] - 1.0) * 100.0
+        delta_pct = (pb["value"] / pa["value"] - 1.0) * 100.0
         regressed = (fail_below_pct is not None
-                     and pb[3] < pa[3] * (1.0 - fail_below_pct / 100.0))
+                     and pb["value"] < pa["value"] * (1.0 - fail_below_pct / 100.0))
         if regressed:
-            regressions.append("%s: %s -> %s (%+.2f%%)"
-                               % (label(pa), f(pa[3], 3), f(pb[3], 3), delta_pct))
-        cells = ([pa[0]] if with_variant else []) + [
-            pa[1], str(pa[2]), f(pa[3], 3), f(pb[3], 3), "%+.2f" % delta_pct,
-            "REGRESS" if regressed else "ok"]
+            regressions.append(
+                "%s: %s -> %s (%+.2f%%)"
+                % (label(pa), f(pa["value"], 3), f(pb["value"], 3), delta_pct))
+        cells = ([pa["variant"]] if with_variant else []) + [
+            pa["bench"], str(pa["vl_bits"])]
+        cells += ([pa["metric"]] if with_metric else [])
+        cells += [f(pa["value"], 3), f(pb["value"], 3), "%+.2f" % delta_pct,
+                  "REGRESS" if regressed else "ok"]
         t.push_row(cells)
-    only_in_b = [label(pb) for pb in b if not any(pa[:3] == pb[:3] for pa in a)]
+    only_in_b = [label(pb) for pb in b if not any(key(pa) == key(pb) for pa in a)]
     return t, compared, regressions, only_in_a, only_in_b, fail_below_pct
 
 
@@ -363,13 +591,17 @@ def render(cmp):
 
 def compare_fixture():
     """Mirror of tests/dse_compare_golden.rs::compare_report_matches_golden."""
-    a = extract_points(variants())
-    assert len(a) == 8
-    b = [list(p) for p in a]
-    b[1][3] = 2.25
-    b[2][3] = 1.03
-    del b[7]
-    b.append(["table2", "haccmk", 128, 1.5])
+    a = extract_points(variants(), VLS)
+    assert len(a) == 24
+    b = [dict(p) for p in a]
+    b[1]["value"] = 2.25
+    b[2]["value"] = 1.03
+    assert b[16]["metric"] == "perf_per_watt"
+    b[16]["value"] = b[16]["value"] * 0.5
+    assert b[23]["metric"] == "perf_per_mm2"
+    del b[23]
+    b.append({"variant": "table2", "bench": "haccmk", "vl_bits": 128,
+              "metric": "speedup", "value": 1.5})
     return a, b
 
 

@@ -1,0 +1,58 @@
+#!/usr/bin/env python3
+"""Render BENCH_hotpath.json files as the EXPERIMENTS.md §Perf table.
+
+Usage:
+    perf_table.py LABEL=path/to/BENCH_hotpath.json [LABEL=path ...]
+
+Each argument names one table column: LABEL is the column header (e.g.
+"PR 4"), the path points at a `sve-repro/perf-hotpath/v1` document
+written by `cargo bench --bench perf_hotpath`. The output is a GitHub
+markdown table whose cells are `functional / func_timing` in Minst/s —
+exactly the §Perf format — so filling a column of EXPERIMENTS.md is
+copy-paste from a CI run's job summary (the "Publish perf + figure
+numbers" step runs this script on the run's own artifact).
+"""
+
+import json
+import sys
+
+
+def main(argv):
+    if len(argv) < 2:
+        sys.stderr.write(__doc__)
+        return 2
+    cols = []
+    for arg in argv[1:]:
+        label, sep, path = arg.partition("=")
+        if not sep:
+            sys.stderr.write("argument %r is not LABEL=path\n" % arg)
+            return 2
+        with open(path, encoding="utf-8") as fh:
+            doc = json.load(fh)
+        if doc.get("schema") != "sve-repro/perf-hotpath/v1":
+            sys.stderr.write("%s: unexpected schema %r\n" % (path, doc.get("schema")))
+            return 2
+        cols.append((label, doc))
+    kernels = []
+    for _, doc in cols:
+        for k in doc["kernels"]:
+            if k not in kernels:
+                kernels.append(k)
+    print("| kernel | " + " | ".join(label for label, _ in cols) + " |")
+    print("|--------|" + "|".join("-" * (len(label) + 2) for label, _ in cols) + "|")
+    for k in kernels:
+        cells = []
+        for _, doc in cols:
+            r = doc["kernels"].get(k)
+            if r is None:
+                cells.append("n/a")
+            else:
+                cells.append(
+                    "%.1f / %.1f" % (r["functional_minst_s"], r["func_timing_minst_s"])
+                )
+        print("| %s | %s |" % (k, " | ".join(cells)))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))
