@@ -46,8 +46,14 @@ fn main() {
     ] {
         let c = compile(&k, t);
         let mut ex = Executor::new(vl, mem.clone());
-        let (stats, tm) = run_timed(&mut ex, &c.program, UarchConfig::default(), 10_000_000).unwrap();
-        println!("  {label:<9} {:>8} cycles  {:>7} insts  ipc {:.2}", tm.cycles, stats.insts, tm.ipc());
+        let (stats, tm) =
+            run_timed(&mut ex, &c.program, UarchConfig::default(), 10_000_000).unwrap();
+        println!(
+            "  {label:<9} {:>8} cycles  {:>7} insts  ipc {:.2}",
+            tm.cycles,
+            stats.insts,
+            tm.ipc()
+        );
     }
     // host-side throughput of the whole simulate pipeline (functional+timing)
     let c = compile(&k, Target::Sve);

@@ -10,7 +10,7 @@
 use sve_repro::bench_util::{bench_n, report_throughput, Sample};
 use sve_repro::compiler::Target;
 use sve_repro::exec::Executor;
-use sve_repro::uarch::{run_timed, UarchConfig};
+use sve_repro::uarch::{run_timed_decoded, UarchConfig};
 use sve_repro::workloads;
 
 const VL_BITS: usize = 256;
@@ -30,19 +30,24 @@ fn main() {
     let mut rows: Vec<Row> = Vec::new();
     for &name in names {
         let w = workloads::build(name);
+        // decode-once: the measured loops run the pre-decoded µop
+        // program, like the sweep coordinator does
         let c = w.compile(Target::Sve);
         let insts = {
             let mut ex = Executor::new(VL_BITS, w.mem.clone());
-            ex.run(&c.program, w.max_insts).unwrap().insts as f64
+            ex.run_decoded(&c.decoded, w.max_insts).unwrap().insts as f64
         };
         let f = bench_n(samples, || {
             let mut ex = Executor::new(VL_BITS, w.mem.clone());
-            ex.run(&c.program, w.max_insts).unwrap().insts
+            ex.run_decoded(&c.decoded, w.max_insts).unwrap().insts
         });
         report_throughput(&format!("functional {name} ({insts:.0} insts)"), &f, insts, "inst");
         let t = bench_n(samples, || {
             let mut ex = Executor::new(VL_BITS, w.mem.clone());
-            run_timed(&mut ex, &c.program, UarchConfig::default(), w.max_insts).unwrap().1.cycles
+            run_timed_decoded(&mut ex, &c.decoded, UarchConfig::default(), w.max_insts)
+                .unwrap()
+                .1
+                .cycles
         });
         report_throughput(&format!("func+timing {name}"), &t, insts, "inst");
         rows.push(Row { name, insts, functional: f, func_timing: t });

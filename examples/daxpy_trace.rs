@@ -27,14 +27,22 @@ fn main() {
             idx: Index::Affine { offset: 0 },
             value: Expr::bin(
                 BinOp::Add,
-                Expr::bin(BinOp::Mul, Expr::ConstF(2.0), Expr::load(x, Index::Affine { offset: 0 })),
+                Expr::bin(
+                    BinOp::Mul,
+                    Expr::ConstF(2.0),
+                    Expr::load(x, Index::Affine { offset: 0 }),
+                ),
                 Expr::load(y, Index::Affine { offset: 0 })),
         });
         let c = compile(&k, Target::Sve);
         let mut ex = Executor::new(vl, mem);
         let (stats, timing, tr) =
             run_traced(&mut ex, &c.program, UarchConfig::default(), 10_000).unwrap();
-        println!("== Fig. 3 (VL = {vl} bits): daxpy n=3, {} insts, {} cycles ==\n", stats.insts, timing.cycles);
+        println!(
+            "== Fig. 3 (VL = {vl} bits): daxpy n=3, {} insts, {} cycles ==\n",
+            stats.insts,
+            timing.cycles
+        );
         println!("{}", render_timeline(&c.program, &tr));
         for i in 0..n {
             println!("y[{i}] = {}", ex.mem.read_f64(yb + 8 * i).unwrap());

@@ -28,7 +28,13 @@ fn main() {
         mem.write_u64(addr + 8, next).unwrap();
     }
     let result = mem.alloc(8, 8);
-    let k = ChaseKernel { name: "list".into(), head: nodes + 16 * order[0], next_off: 8, val_off: 0, result };
+    let k = ChaseKernel {
+        name: "list".into(),
+        head: nodes + 16 * order[0],
+        next_off: 8,
+        val_off: 0,
+        result,
+    };
 
     println!("== Fig. 6: linked-list XOR reduction, {n} shuffled nodes ==\n");
     // the honest compiler decision first
@@ -48,7 +54,11 @@ fn main() {
         let (_, t) = run_timed(&mut ex, &c.program, UarchConfig::default(), 50_000_000).unwrap();
         assert_eq!(ex.mem.read_u64(result).unwrap(), expected, "XOR result");
         if base == 0 { base = t.cycles; }
-        println!("{label:<20} {:>9} cycles  vs scalar {:>5.2}x", t.cycles, base as f64 / t.cycles as f64);
+        println!(
+            "{label:<20} {:>9} cycles  vs scalar {:>5.2}x",
+            t.cycles,
+            base as f64 / t.cycles as f64
+        );
     }
     println!("\n(the paper: \"the performance gained may not be sufficient to justify\n vectorization for this loop, but it serves to illustrate the principle\")");
 }

@@ -26,9 +26,22 @@ fn main() {
     let mut a = Asm::new();
     a.push(Inst::MovImm { xd: 1, imm: addrs });
     a.push(Inst::Ptrue { pd: 1, esize: Esize::D, s: false });
-    a.push(Inst::SveLd1 { zt: 3, pg: 1, esize: Esize::D, base: 1, off: SveMemOff::ImmVl(0), ff: false });
+    a.push(Inst::SveLd1 {
+        zt: 3,
+        pg: 1,
+        esize: Esize::D,
+        base: 1,
+        off: SveMemOff::ImmVl(0),
+        ff: false,
+    });
     a.push(Inst::Setffr);
-    a.push(Inst::SveLdGather { zt: 0, pg: 1, esize: Esize::D, addr: GatherAddr::VecImm(3, 0), ff: true });
+    a.push(Inst::SveLdGather {
+        zt: 0,
+        pg: 1,
+        esize: Esize::D,
+        addr: GatherAddr::VecImm(3, 0),
+        ff: true,
+    });
     a.push(Inst::Rdffr { pd: 2, pg: Some(1), s: false });
     a.push(Inst::Halt);
     let p = a.finish();
@@ -41,7 +54,11 @@ fn main() {
         if i < 3 { print!(", "); }
     }
     println!("]  (paper: true, true, false, false)");
-    println!("loaded lanes: z0 = [{}, {}, -, -]\n", ex.state.z[0].get(Esize::D, 0), ex.state.z[0].get(Esize::D, 1));
+    println!(
+        "loaded lanes: z0 = [{}, {}, -, -]\n",
+        ex.state.z[0].get(Esize::D, 0),
+        ex.state.z[0].get(Esize::D, 1)
+    );
 
     // ---- Fig. 5: strlen ----
     println!("== Fig. 5: vectorized strlen over a page-exact string ==\n");
@@ -70,9 +87,12 @@ fn main() {
     assert!(sve.vectorized);
 
     let mut base = 0;
-    for (label, c, vl) in
-        [("scalar", &scalar, 128), ("sve-128", &sve, 128), ("sve-512", &sve, 512), ("sve-2048", &sve, 2048)]
-    {
+    for (label, c, vl) in [
+        ("scalar", &scalar, 128),
+        ("sve-128", &sve, 128),
+        ("sve-512", &sve, 512),
+        ("sve-2048", &sve, 2048),
+    ] {
         let mut ex = Executor::new(vl, mem.clone());
         let (_, t) = run_timed(&mut ex, &c.program, UarchConfig::default(), 50_000_000).unwrap();
         assert_eq!(ex.mem.read_u64(out).unwrap(), len, "length correct");

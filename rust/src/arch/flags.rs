@@ -162,7 +162,8 @@ mod tests {
         assert_eq!(f, Flags { n: true, z: false, c: false, v: false });
 
         // partial from the front: First=1, Last=0 => N=1 C=1
-        let f = Flags::from_pred_result(&pg, &pred_from_bits(e, &[true, true, false, false]), e, vlb);
+        let f =
+            Flags::from_pred_result(&pg, &pred_from_bits(e, &[true, true, false, false]), e, vlb);
         assert_eq!(f, Flags { n: true, z: false, c: true, v: false });
 
         // empty: None=1 => Z=1, N=0, C=1

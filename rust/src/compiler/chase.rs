@@ -70,7 +70,7 @@ fn compile_chase_scalar(k: &ChaseKernel) -> Compiled {
     a.push(Inst::MovImm { xd: 3, imm: k.result });
     a.push(Inst::Str { size: 8, xt: 16, base: 3, off: MemOff::Imm(0) });
     a.push(Inst::Halt);
-    Compiled { program: a.finish(), vectorized: false, why_not: None }
+    Compiled::new(a.finish(), false, None)
 }
 
 /// Fig. 6c, transliterated: serialized pointer chase into Z1, vectorized
@@ -99,14 +99,16 @@ fn compile_chase_sve(k: &ChaseKernel) -> Compiled {
         addr: GatherAddr::VecImm(1, k.val_off), // val' = p->val
         ff: false,
     });
-    a.push(Inst::SveIntBin { op: IntOp::Eor, zdn: 0, pg: 2, zm: 2, esize: Esize::D }); // res' ^= val'
+    // res' ^= val'
+    a.push(Inst::SveIntBin { op: IntOp::Eor, zdn: 0, pg: 2, zm: 2, esize: Esize::D });
     a.push_branch(Inst::Cbnz { xn: 1, target: 0 }, "outer"); // while p != NULL
-    a.push(Inst::SveReduce { op: RedOp::EorV, vd: 0, pg: 0, zn: 0, esize: Esize::D }); // d0 = eor(res')
+    // d0 = eor(res')
+    a.push(Inst::SveReduce { op: RedOp::EorV, vd: 0, pg: 0, zn: 0, esize: Esize::D });
     a.push(Inst::FmovDtoX { xd: 0, dn: 0 }); // return d0
     a.push(Inst::MovImm { xd: 3, imm: k.result });
     a.push(Inst::Str { size: 8, xt: 0, base: 3, off: MemOff::Imm(0) });
     a.push(Inst::Halt);
-    Compiled { program: a.finish(), vectorized: true, why_not: None }
+    Compiled::new(a.finish(), true, None)
 }
 
 #[cfg(test)]

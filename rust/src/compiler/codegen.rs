@@ -56,7 +56,7 @@ const LANE0: u8 = 20; // z20..z23
 const FACC: u8 = 24; // d24..d27
 const LOCAL0: u8 = 28; // z28..z31 / d28..d31
 
-#[derive(Clone, Copy, PartialEq)]
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub enum Target {
     Scalar,
     Neon,
@@ -260,7 +260,11 @@ impl<'k> Cg<'k> {
                 // vector accumulators
                 match red.kind {
                     RedKind::XorI => {
-                        self.asm.push(Inst::DupImm { zd: VACC + r, esize: self.elem_esize(), imm: 0 });
+                        self.asm.push(Inst::DupImm {
+                            zd: VACC + r,
+                            esize: self.elem_esize(),
+                            imm: 0,
+                        });
                     }
                     RedKind::SumF => {
                         self.asm.push(Inst::FdupImm { zd: VACC + r, dbl, bits: 0 });
@@ -341,7 +345,12 @@ impl<'k> Cg<'k> {
             self.asm.push(Inst::MovImm { xd: SCR, imm: addr });
             match red.kind {
                 RedKind::XorI => {
-                    self.asm.push(Inst::Str { size: 8, xt: XACC + r, base: SCR, off: MemOff::Imm(0) })
+                    self.asm.push(Inst::Str {
+                        size: 8,
+                        xt: XACC + r,
+                        base: SCR,
+                        off: MemOff::Imm(0),
+                    })
                 }
                 _ => self.asm.push(Inst::StrFp {
                     dbl,
@@ -461,17 +470,34 @@ impl<'k> Cg<'k> {
                         };
                         let xd = XSTACK + it;
                         match op {
-                            BinOp::Add => self.asm.push(Inst::AddReg { xd, xn: xd, xm: rb, lsl: 0 }),
+                            BinOp::Add => {
+                                self.asm.push(Inst::AddReg { xd, xn: xd, xm: rb, lsl: 0 })
+                            }
                             BinOp::Sub => self.asm.push(Inst::SubReg { xd, xn: xd, xm: rb }),
                             BinOp::Mul => self.asm.push(Inst::Madd { xd, xn: xd, xm: rb, xa: 31 }),
                             BinOp::Xor => {
-                                self.asm.push(Inst::LogReg { op: PLogicOp::Eor, xd, xn: xd, xm: rb })
+                                self.asm.push(Inst::LogReg {
+                                    op: PLogicOp::Eor,
+                                    xd,
+                                    xn: xd,
+                                    xm: rb,
+                                })
                             }
                             BinOp::And => {
-                                self.asm.push(Inst::LogReg { op: PLogicOp::And, xd, xn: xd, xm: rb })
+                                self.asm.push(Inst::LogReg {
+                                    op: PLogicOp::And,
+                                    xd,
+                                    xn: xd,
+                                    xm: rb,
+                                })
                             }
                             BinOp::Or => {
-                                self.asm.push(Inst::LogReg { op: PLogicOp::Orr, xd, xn: xd, xm: rb })
+                                self.asm.push(Inst::LogReg {
+                                    op: PLogicOp::Orr,
+                                    xd,
+                                    xn: xd,
+                                    xm: rb,
+                                })
                             }
                             _ => panic!("fp op on ints"),
                         };
@@ -762,7 +788,11 @@ mod tests {
             idx: Index::Affine { offset: 0 },
             value: Expr::bin(
                 BinOp::Add,
-                Expr::bin(BinOp::Mul, Expr::ConstF(3.0), Expr::load(x, Index::Affine { offset: 0 })),
+                Expr::bin(
+                    BinOp::Mul,
+                    Expr::ConstF(3.0),
+                    Expr::load(x, Index::Affine { offset: 0 }),
+                ),
                 Expr::load(y, Index::Affine { offset: 0 }),
             ),
         });
@@ -821,7 +851,11 @@ mod tests {
         let s = k.array("s", Ty::U8, sb);
         k.count_out = Some(out);
         k.body.push(Stmt::Break {
-            cond: Expr::cmp(CmpKind::Eq, Expr::load(s, Index::Affine { offset: 0 }), Expr::ConstI(0)),
+            cond: Expr::cmp(
+                CmpKind::Eq,
+                Expr::load(s, Index::Affine { offset: 0 }),
+                Expr::ConstI(0),
+            ),
         });
         let p = compile_scalar(&k);
         let mut ex = Executor::new(128, mem);

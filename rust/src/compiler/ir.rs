@@ -286,14 +286,34 @@ impl Kernel {
     }
 }
 
-/// A compiled kernel.
+/// A compiled kernel: the program plus its one-time lowering through
+/// the shared decode layer ([`crate::isa::uop`]). Decoding happens here
+/// — once per (kernel, target) — and the
+/// [`crate::isa::uop::DecodedProgram`] is shared read-only across every
+/// vector length and µarch variant a sweep runs, since µops are
+/// VL-agnostic (§2.2).
 #[derive(Clone, Debug)]
 pub struct Compiled {
     pub program: crate::asm::Program,
+    /// The pre-decoded µop form both the executor and the timing
+    /// pipeline consume.
+    pub decoded: crate::isa::uop::DecodedProgram,
     /// Did the vectorizer fire for this target?
     pub vectorized: bool,
     /// Human-readable reason when it did not.
     pub why_not: Option<String>,
+}
+
+impl Compiled {
+    /// Wrap a finished program, decoding it once.
+    pub fn new(
+        program: crate::asm::Program,
+        vectorized: bool,
+        why_not: Option<String>,
+    ) -> Compiled {
+        let decoded = crate::isa::uop::DecodedProgram::decode(&program);
+        Compiled { program, decoded, vectorized, why_not }
+    }
 }
 
 #[cfg(test)]

@@ -76,18 +76,18 @@ pub fn compile(k: &Kernel, target: Target) -> Compiled {
         Target::Scalar => {
             let mut cg = Cg::new(k, Target::Scalar);
             cg.emit_scalar_program();
-            Compiled { program: cg.asm.finish(), vectorized: false, why_not: None }
+            Compiled::new(cg.asm.finish(), false, None)
         }
         Target::Neon => match vectorize::neon_legal(k) {
             Ok(()) => {
                 let mut cg = Cg::new(k, Target::Neon);
                 cg.emit_neon_program();
-                Compiled { program: cg.asm.finish(), vectorized: true, why_not: None }
+                Compiled::new(cg.asm.finish(), true, None)
             }
             Err(why) => {
                 let mut cg = Cg::new(k, Target::Neon);
                 cg.emit_scalar_program();
-                Compiled { program: cg.asm.finish(), vectorized: false, why_not: Some(why) }
+                Compiled::new(cg.asm.finish(), false, Some(why))
             }
         },
         Target::Sve => match vectorize::sve_legal(k) {
@@ -101,12 +101,12 @@ pub fn compile(k: &Kernel, target: Target) -> Compiled {
                 };
                 let mut cg = Cg::new(k2, Target::Sve);
                 cg.emit_sve_program();
-                Compiled { program: cg.asm.finish(), vectorized: true, why_not: None }
+                Compiled::new(cg.asm.finish(), true, None)
             }
             Err(why) => {
                 let mut cg = Cg::new(k, Target::Sve);
                 cg.emit_scalar_program();
-                Compiled { program: cg.asm.finish(), vectorized: false, why_not: Some(why) }
+                Compiled::new(cg.asm.finish(), false, Some(why))
             }
         },
     }

@@ -232,7 +232,11 @@ mod tests {
             idx: Index::Affine { offset: 0 },
             value: Expr::bin(
                 BinOp::Add,
-                Expr::bin(BinOp::Mul, Expr::ConstF(2.0), Expr::load(x, Index::Affine { offset: 0 })),
+                Expr::bin(
+                    BinOp::Mul,
+                    Expr::ConstF(2.0),
+                    Expr::load(x, Index::Affine { offset: 0 }),
+                ),
                 Expr::load(y, Index::Affine { offset: 0 }),
             ),
         });
@@ -316,7 +320,11 @@ mod tests {
         k.body.push(Stmt::Store {
             arr: y,
             idx: Index::Affine { offset: 0 },
-            value: Expr::bin(BinOp::Mul, Expr::load(x, Index::Affine { offset: 0 }), Expr::ConstF(3.0)),
+            value: Expr::bin(
+                BinOp::Mul,
+                Expr::load(x, Index::Affine { offset: 0 }),
+                Expr::ConstF(3.0),
+            ),
         });
         let c = compile(&k, Target::Neon);
         assert!(c.vectorized);

@@ -476,7 +476,11 @@ mod tests {
             idx: Index::Affine { offset: 0 },
             value: Expr::bin(
                 BinOp::Add,
-                Expr::bin(BinOp::Mul, Expr::ConstF(3.0), Expr::load(x, Index::Affine { offset: 0 })),
+                Expr::bin(
+                    BinOp::Mul,
+                    Expr::ConstF(3.0),
+                    Expr::load(x, Index::Affine { offset: 0 }),
+                ),
                 Expr::load(y, Index::Affine { offset: 0 }),
             ),
         });
@@ -647,7 +651,11 @@ mod tests {
         let s = k.array("s", Ty::U8, sb);
         k.count_out = Some(out);
         k.body.push(Stmt::Break {
-            cond: Expr::cmp(CmpKind::Eq, Expr::load(s, Index::Affine { offset: 0 }), Expr::ConstI(0)),
+            cond: Expr::cmp(
+                CmpKind::Eq,
+                Expr::load(s, Index::Affine { offset: 0 }),
+                Expr::ConstI(0),
+            ),
         });
         let c = compile(&k, Target::Sve);
         assert!(c.vectorized, "{:?}", c.why_not);
@@ -676,7 +684,11 @@ mod tests {
         let s = k.array("s", Ty::U8, page);
         k.count_out = Some(out_page);
         k.body.push(Stmt::Break {
-            cond: Expr::cmp(CmpKind::Eq, Expr::load(s, Index::Affine { offset: 0 }), Expr::ConstI(0)),
+            cond: Expr::cmp(
+                CmpKind::Eq,
+                Expr::load(s, Index::Affine { offset: 0 }),
+                Expr::ConstI(0),
+            ),
         });
         let c = compile(&k, Target::Sve);
         let mut ex = Executor::new(2048, mem);

@@ -202,7 +202,11 @@ mod tests {
             idx: Index::Affine { offset: 0 },
             value: Expr::bin(
                 BinOp::Add,
-                Expr::bin(BinOp::Mul, Expr::ConstF(3.0), Expr::load(x, Index::Affine { offset: 0 })),
+                Expr::bin(
+                    BinOp::Mul,
+                    Expr::ConstF(3.0),
+                    Expr::load(x, Index::Affine { offset: 0 }),
+                ),
                 Expr::load(y, Index::Affine { offset: 0 }),
             ),
         });
@@ -236,7 +240,11 @@ mod tests {
         let mut k = Kernel::new("strlen", Ty::U8, Trip::DataDependent { max: 1 << 20 });
         let s = k.array("s", Ty::U8, 0x1000);
         k.body.push(Stmt::Break {
-            cond: Expr::cmp(CmpKind::Eq, Expr::load(s, Index::Affine { offset: 0 }), Expr::ConstI(0)),
+            cond: Expr::cmp(
+                CmpKind::Eq,
+                Expr::load(s, Index::Affine { offset: 0 }),
+                Expr::ConstI(0),
+            ),
         });
         assert!(neon_legal(&k).unwrap_err().contains("data-dependent exit"));
         assert!(sve_legal(&k).is_ok(), "first-faulting loads make this legal");

@@ -35,7 +35,7 @@ use std::sync::Mutex;
 use crate::compiler::{Compiled, Target};
 use crate::exec::Executor;
 use crate::report::store::{job_key, JobStore};
-use crate::uarch::{run_timed, PpaCounters, UarchConfig, UarchVariant};
+use crate::uarch::{run_timed_decoded, PpaCounters, UarchConfig, UarchVariant};
 use crate::workloads::{self, Group, Workload};
 
 /// One simulated configuration.
@@ -132,8 +132,10 @@ pub fn run_compiled(w: &Workload, compiled: &Compiled, isa: Isa) -> Result<RunRe
 
 /// Run an already-built workload with an already-compiled program.
 /// SVE binaries are vector-length agnostic (§2.2), so a sweep compiles
-/// each (benchmark, target) once and reuses the program at every VL —
-/// only the executor's hardware VL changes between runs.
+/// **and decodes** each (benchmark, target) once and reuses the µop
+/// program ([`Compiled::decoded`]) at every VL and µarch variant — only
+/// the executor's hardware VL and the timing configuration change
+/// between runs.
 pub fn run_compiled_with(
     w: &Workload,
     compiled: &Compiled,
@@ -142,7 +144,7 @@ pub fn run_compiled_with(
 ) -> Result<RunRecord, String> {
     let name = w.name;
     let mut ex = Executor::new(isa.vl(), w.mem.clone());
-    let (stats, timing) = run_timed(&mut ex, &compiled.program, cfg.clone(), w.max_insts)
+    let (stats, timing) = run_timed_decoded(&mut ex, &compiled.decoded, cfg.clone(), w.max_insts)
         .map_err(|e| format!("{name}/{}: trap {e:?}", isa.label()))?;
     w.verify(&ex.mem).map_err(|e| format!("{name}/{}: {e}", isa.label()))?;
     let mem_accesses = timing.l1d_hits + timing.l1d_misses;
@@ -292,9 +294,10 @@ pub fn run_sweep(cfg: &SweepConfig) -> Result<SweepOutcome, String> {
 /// `<out>/jobs/` and a `table2` variant shares cache entries with plain
 /// `sve sweep` runs over the same matrix.
 ///
-/// Workloads are built and programs compiled **once per benchmark**,
-/// shared read-only across every variant and VL — programs depend only
-/// on the target ISA, never on the timing model, and SVE binaries are
+/// Workloads are built and programs compiled **and decoded once per
+/// benchmark**, shared read-only across every variant and VL — the
+/// decoded µop stream ([`Compiled::decoded`]) depends only on the
+/// target ISA, never on the timing model or VL, and SVE binaries are
 /// VL-agnostic (§2.2).
 pub fn run_dse(cfg: &SweepConfig, variants: &[UarchVariant]) -> Result<DseOutcome, String> {
     if cfg.vls.is_empty() {

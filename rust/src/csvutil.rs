@@ -41,7 +41,8 @@ impl Table {
                 s.to_string()
             }
         };
-        let _ = writeln!(out, "{}", self.header.iter().map(|s| esc(s)).collect::<Vec<_>>().join(","));
+        let header: Vec<String> = self.header.iter().map(|s| esc(s)).collect();
+        let _ = writeln!(out, "{}", header.join(","));
         for r in &self.rows {
             let _ = writeln!(out, "{}", r.iter().map(|s| esc(s)).collect::<Vec<_>>().join(","));
         }

@@ -1,0 +1,770 @@
+//! The legacy `Inst`-matching interpreter, kept **test-only** as the
+//! reference the decoded dispatch path is compared against bit-for-bit
+//! (memory, registers, flags, traps and `RunStats`). Production code
+//! never matches `Inst` — that happens once, in
+//! [`crate::isa::uop::DecodedProgram::decode`].
+//!
+//! Pure-compute scalar/NEON arms restate the original semantics
+//! inline (an independent second implementation); memory operations and
+//! all SVE operations call the same parameterized [`Executor`] methods
+//! as the µop handlers, fed straight from the `Inst` payloads — so a
+//! decoder operand-packing mistake shows up as a divergence here.
+
+use super::{ExecResult, Executor, RunStats, Trap};
+use crate::arch::Flags;
+use crate::asm::Program;
+use crate::exec::neon::{fcmp, icmp_signed, int_bin, NEON_BYTES};
+use crate::exec::scalar::{fp_bin, fp_bin32, fp_un, fp_un32};
+use crate::isa::{Inst, OpaqueFn, PLogicOp};
+
+impl Executor {
+    /// One architectural step of the legacy interpreter (shared
+    /// fetch/advance logic lives in [`Executor::run_legacy`]).
+    pub(crate) fn exec_inst_legacy(&mut self, inst: &Inst) -> ExecResult {
+        use Inst::*;
+        match *inst {
+            // ---- scalar integer ----
+            MovImm { xd, imm } => self.state.set_x(xd, imm),
+            MovReg { xd, xn } => {
+                let v = self.state.get_x(xn);
+                self.state.set_x(xd, v)
+            }
+            AddImm { xd, xn, imm } => {
+                let v = self.state.get_x(xn).wrapping_add(imm as u64);
+                self.state.set_x(xd, v)
+            }
+            AddReg { xd, xn, xm, lsl } => {
+                let v = self.state.get_x(xn).wrapping_add(self.state.get_x(xm) << lsl);
+                self.state.set_x(xd, v)
+            }
+            SubReg { xd, xn, xm } => {
+                let v = self.state.get_x(xn).wrapping_sub(self.state.get_x(xm));
+                self.state.set_x(xd, v)
+            }
+            Madd { xd, xn, xm, xa } => {
+                let v = self
+                    .state
+                    .get_x(xa)
+                    .wrapping_add(self.state.get_x(xn).wrapping_mul(self.state.get_x(xm)));
+                self.state.set_x(xd, v)
+            }
+            Udiv { xd, xn, xm } => {
+                let d = self.state.get_x(xm);
+                let v = if d == 0 { 0 } else { self.state.get_x(xn) / d };
+                self.state.set_x(xd, v)
+            }
+            AndImm { xd, xn, imm } => {
+                let v = self.state.get_x(xn) & imm;
+                self.state.set_x(xd, v)
+            }
+            LogReg { op, xd, xn, xm } => {
+                let (a, b) = (self.state.get_x(xn), self.state.get_x(xm));
+                let v = match op {
+                    PLogicOp::And => a & b,
+                    PLogicOp::Orr => a | b,
+                    PLogicOp::Eor => a ^ b,
+                    PLogicOp::Bic => a & !b,
+                };
+                self.state.set_x(xd, v)
+            }
+            LslImm { xd, xn, sh } => {
+                let v = self.state.get_x(xn) << sh;
+                self.state.set_x(xd, v)
+            }
+            LsrImm { xd, xn, sh } => {
+                let v = self.state.get_x(xn) >> sh;
+                self.state.set_x(xd, v)
+            }
+            AsrImm { xd, xn, sh } => {
+                let v = (self.state.get_x(xn) as i64) >> sh;
+                self.state.set_x(xd, v as u64)
+            }
+            Csel { xd, xn, xm, cond } => {
+                let v = if self.state.flags.cond(cond) {
+                    self.state.get_x(xn)
+                } else {
+                    self.state.get_x(xm)
+                };
+                self.state.set_x(xd, v)
+            }
+            Ldr { size, signed, xt, base, off } => {
+                let addr = self.ea(base, off);
+                self.ldr_at(addr, size as usize, signed, xt)?;
+            }
+            Str { size, xt, base, off } => {
+                let addr = self.ea(base, off);
+                self.str_at(addr, size as usize, xt)?;
+            }
+            LdrFp { dbl, vt, base, off } => {
+                let addr = self.ea(base, off);
+                self.ldr_fp_at(addr, dbl, vt)?;
+            }
+            StrFp { dbl, vt, base, off } => {
+                let addr = self.ea(base, off);
+                self.str_fp_at(addr, dbl, vt)?;
+            }
+            CmpImm { xn, imm } => {
+                self.state.flags = Flags::from_sub(self.state.get_x(xn), imm);
+            }
+            CmpReg { xn, xm } => {
+                self.state.flags = Flags::from_sub(self.state.get_x(xn), self.state.get_x(xm));
+            }
+            B { target } => self.next_pc = Some(target),
+            BCond { cond, target } => {
+                if self.state.flags.cond(cond) {
+                    self.next_pc = Some(target);
+                }
+            }
+            Cbz { xn, target } => {
+                if self.state.get_x(xn) == 0 {
+                    self.next_pc = Some(target);
+                }
+            }
+            Cbnz { xn, target } => {
+                if self.state.get_x(xn) != 0 {
+                    self.next_pc = Some(target);
+                }
+            }
+            Ret | Halt => self.halted = true,
+            Nop => {}
+            // ---- scalar FP ----
+            FmovImm { dbl, dd, bits } => {
+                if dbl {
+                    self.state.set_d(dd, f64::from_bits(bits));
+                } else {
+                    self.state.set_s(dd, f32::from_bits(bits as u32));
+                }
+            }
+            FmovXtoD { dd, xn } => {
+                let v = self.state.get_x(xn);
+                self.state.set_d(dd, f64::from_bits(v));
+            }
+            FmovReg { dbl, dd, dn } => {
+                if dbl {
+                    let v = self.state.get_d(dn);
+                    self.state.set_d(dd, v);
+                } else {
+                    let v = self.state.get_s(dn);
+                    self.state.set_s(dd, v);
+                }
+            }
+            FmovDtoX { xd, dn } => {
+                let v = self.state.get_d(dn).to_bits();
+                self.state.set_x(xd, v);
+            }
+            FpBin { op, dbl, dd, dn, dm } => {
+                if dbl {
+                    let (a, b) = (self.state.get_d(dn), self.state.get_d(dm));
+                    self.state.set_d(dd, fp_bin(op, a, b));
+                } else {
+                    let (a, b) = (self.state.get_s(dn), self.state.get_s(dm));
+                    self.state.set_s(dd, fp_bin32(op, a, b));
+                }
+            }
+            FpUn { op, dbl, dd, dn } => {
+                if dbl {
+                    let a = self.state.get_d(dn);
+                    self.state.set_d(dd, fp_un(op, a));
+                } else {
+                    let a = self.state.get_s(dn);
+                    self.state.set_s(dd, fp_un32(op, a));
+                }
+            }
+            Fmadd { dbl, dd, dn, dm, da, sub } => {
+                if dbl {
+                    let (n, m, a) =
+                        (self.state.get_d(dn), self.state.get_d(dm), self.state.get_d(da));
+                    let prod = if sub { -(n * m) } else { n * m };
+                    self.state.set_d(dd, a + prod);
+                } else {
+                    let (n, m, a) =
+                        (self.state.get_s(dn), self.state.get_s(dm), self.state.get_s(da));
+                    let prod = if sub { -(n * m) } else { n * m };
+                    self.state.set_s(dd, a + prod);
+                }
+            }
+            Fcmp { dbl, dn, dm } => {
+                let (a, b) = if dbl {
+                    (self.state.get_d(dn), self.state.get_d(dm))
+                } else {
+                    (self.state.get_s(dn) as f64, self.state.get_s(dm) as f64)
+                };
+                self.state.flags = Flags::from_fcmp(a, b);
+            }
+            Scvtf { dbl, dd, xn } => {
+                let v = self.state.get_x(xn) as i64;
+                if dbl {
+                    self.state.set_d(dd, v as f64);
+                } else {
+                    self.state.set_s(dd, v as f32);
+                }
+            }
+            Fcvtzs { dbl, xd, dn } => {
+                let v = if dbl { self.state.get_d(dn) } else { self.state.get_s(dn) as f64 };
+                self.state.set_x(xd, v.trunc() as i64 as u64);
+            }
+            OpaqueCall { f, dd, dn, dm } => {
+                let a = self.state.get_d(dn);
+                let b = dm.map(|m| self.state.get_d(m));
+                let v = match f {
+                    OpaqueFn::Exp => a.exp(),
+                    OpaqueFn::Log => a.ln(),
+                    OpaqueFn::Pow => a.powf(b.expect("pow needs 2 args")),
+                    OpaqueFn::Sqrt => a.sqrt(),
+                    OpaqueFn::Sin => a.sin(),
+                };
+                self.state.set_d(dd, v);
+            }
+            // ---- Advanced SIMD (NEON) ----
+            NeonLd1 { esize: _, vt, base, off } => {
+                let addr = self.neon_ea(base, off);
+                self.neon_ld1_at(addr, vt)?;
+            }
+            NeonSt1 { esize: _, vt, base, off } => {
+                let addr = self.neon_ea(base, off);
+                self.neon_st1_at(addr, vt)?;
+            }
+            NeonDupX { esize, vd, xn } => {
+                let v = self.state.get_x(xn);
+                let r = &mut self.state.z[vd as usize];
+                for i in 0..esize.lanes(NEON_BYTES) {
+                    r.set(esize, i, v);
+                }
+                r.zero_from(NEON_BYTES);
+            }
+            NeonDupLane0 { esize, vd, vn } => {
+                let v = self.state.z[vn as usize].get(esize, 0);
+                let r = &mut self.state.z[vd as usize];
+                for i in 0..esize.lanes(NEON_BYTES) {
+                    r.set(esize, i, v);
+                }
+                r.zero_from(NEON_BYTES);
+            }
+            NeonMoviZero { vd } => self.state.z[vd as usize].zero(),
+            NeonFpBin { op, dbl, vd, vn, vm } => {
+                let (zn, zm) = (self.state.z[vn as usize], self.state.z[vm as usize]);
+                let r = &mut self.state.z[vd as usize];
+                if dbl {
+                    for i in 0..2 {
+                        r.set_f64(i, fp_bin(op, zn.get_f64(i), zm.get_f64(i)));
+                    }
+                } else {
+                    for i in 0..4 {
+                        r.set_f32(i, fp_bin32(op, zn.get_f32(i), zm.get_f32(i)));
+                    }
+                }
+                r.zero_from(NEON_BYTES);
+            }
+            NeonFpUn { op, dbl, vd, vn } => {
+                let zn = self.state.z[vn as usize];
+                let r = &mut self.state.z[vd as usize];
+                if dbl {
+                    for i in 0..2 {
+                        r.set_f64(i, fp_un(op, zn.get_f64(i)));
+                    }
+                } else {
+                    for i in 0..4 {
+                        r.set_f32(i, fp_un32(op, zn.get_f32(i)));
+                    }
+                }
+                r.zero_from(NEON_BYTES);
+            }
+            NeonFmla { dbl, vd, vn, vm, sub } => {
+                let (zn, zm) = (self.state.z[vn as usize], self.state.z[vm as usize]);
+                let r = &mut self.state.z[vd as usize];
+                if dbl {
+                    for i in 0..2 {
+                        let p = zn.get_f64(i) * zm.get_f64(i);
+                        let p = if sub { -p } else { p };
+                        r.set_f64(i, r.get_f64(i) + p);
+                    }
+                } else {
+                    for i in 0..4 {
+                        let p = zn.get_f32(i) * zm.get_f32(i);
+                        let p = if sub { -p } else { p };
+                        r.set_f32(i, r.get_f32(i) + p);
+                    }
+                }
+                r.zero_from(NEON_BYTES);
+            }
+            NeonIntBin { op, esize, vd, vn, vm } => {
+                let (zn, zm) = (self.state.z[vn as usize], self.state.z[vm as usize]);
+                let r = &mut self.state.z[vd as usize];
+                for i in 0..esize.lanes(NEON_BYTES) {
+                    let v = int_bin(op, esize, zn.get(esize, i), zm.get(esize, i));
+                    r.set(esize, i, v);
+                }
+                r.zero_from(NEON_BYTES);
+            }
+            NeonFcm { op, dbl, vd, vn, vm } => {
+                let (zn, zm) = (self.state.z[vn as usize], self.state.z[vm as usize]);
+                let r = &mut self.state.z[vd as usize];
+                if dbl {
+                    for i in 0..2 {
+                        let t = fcmp(op, zn.get_f64(i), zm.get_f64(i));
+                        r.set(crate::arch::Esize::D, i, if t { u64::MAX } else { 0 });
+                    }
+                } else {
+                    for i in 0..4 {
+                        let t = fcmp(op, zn.get_f32(i) as f64, zm.get_f32(i) as f64);
+                        r.set(crate::arch::Esize::S, i, if t { 0xFFFF_FFFF } else { 0 });
+                    }
+                }
+                r.zero_from(NEON_BYTES);
+            }
+            NeonCm { op, esize, vd, vn, vm } => {
+                let (zn, zm) = (self.state.z[vn as usize], self.state.z[vm as usize]);
+                let r = &mut self.state.z[vd as usize];
+                let ones = if esize.bytes() == 8 {
+                    u64::MAX
+                } else {
+                    (1u64 << (esize.bytes() * 8)) - 1
+                };
+                for i in 0..esize.lanes(NEON_BYTES) {
+                    let t = icmp_signed(op, zn.get_signed(esize, i), zm.get_signed(esize, i));
+                    r.set(esize, i, if t { ones } else { 0 });
+                }
+                r.zero_from(NEON_BYTES);
+            }
+            NeonBsl { vd, vn, vm } => {
+                let (zn, zm) = (self.state.z[vn as usize], self.state.z[vm as usize]);
+                let r = &mut self.state.z[vd as usize];
+                for k in 0..NEON_BYTES {
+                    r.bytes[k] = (r.bytes[k] & zn.bytes[k]) | (!r.bytes[k] & zm.bytes[k]);
+                }
+                r.zero_from(NEON_BYTES);
+            }
+            NeonFaddv { dbl, dd, vn } => {
+                let zn = self.state.z[vn as usize];
+                if dbl {
+                    let v = zn.get_f64(0) + zn.get_f64(1);
+                    self.state.set_d(dd, v);
+                } else {
+                    let (a, b) =
+                        (zn.get_f32(0) + zn.get_f32(1), zn.get_f32(2) + zn.get_f32(3));
+                    self.state.set_s(dd, a + b);
+                }
+            }
+            NeonAddv { esize, dd, vn } => {
+                let zn = self.state.z[vn as usize];
+                let mut acc = 0u64;
+                for i in 0..esize.lanes(NEON_BYTES) {
+                    acc = acc.wrapping_add(zn.get(esize, i));
+                }
+                let r = &mut self.state.z[dd as usize];
+                r.zero();
+                r.set(esize, 0, acc);
+            }
+            NeonUmov { esize, xd, vn, lane } => {
+                let v = self.state.z[vn as usize].get(esize, lane as usize);
+                self.state.set_x(xd, v);
+            }
+            NeonInsX { esize, vd, lane, xn } => {
+                let v = self.state.get_x(xn);
+                let r = &mut self.state.z[vd as usize];
+                r.set(esize, lane as usize, v);
+                r.zero_from(NEON_BYTES);
+            }
+            // ---- SVE (shared parameterized bodies) ----
+            Ptrue { pd, esize, s } => self.sve_ptrue(pd, esize, s),
+            Pfalse { pd } => self.sve_pfalse(pd),
+            While { pd, esize, xn, xm, unsigned } => self.sve_while(pd, esize, xn, xm, unsigned),
+            Ptest { pg, pn } => self.sve_ptest(pg, pn),
+            Pnext { pdn, pg, esize } => self.sve_pnext(pdn, pg, esize),
+            Brk { pd, pg, pn, before, s } => self.sve_brk(pd, pg, pn, before, s),
+            PredLogic { op, pd, pg, pn, pm, s } => self.sve_pred_logic(op, pd, pg, pn, pm, s),
+            Rdffr { pd, pg, s } => self.sve_rdffr(pd, pg, s),
+            Setffr => self.sve_setffr(),
+            Wrffr { pn } => self.sve_wrffr(pn),
+            Cnt { xd, esize } => self.sve_cnt(xd, esize),
+            IncDec { xdn, esize, dec } => self.sve_inc_dec(xdn, esize, dec),
+            IncpX { xdn, pm, esize } => self.sve_incp(xdn, pm, esize),
+            Index { zd, esize, base, step } => self.sve_index(zd, esize, base, step),
+            DupImm { zd, esize, imm } => self.sve_dup_imm(zd, esize, imm),
+            FdupImm { zd, dbl, bits } => self.sve_fdup(zd, dbl, bits),
+            DupX { zd, esize, xn } => self.sve_dup_x(zd, esize, xn),
+            CpyX { zd, pg, xn, esize } => self.sve_cpy_x(zd, pg, xn, esize),
+            Sel { zd, pg, zn, zm, esize } => self.sve_sel(zd, pg, zn, zm, esize),
+            Movprfx { zd, zn, pg } => self.sve_movprfx(zd, zn, pg),
+            Last { xd, pg, zn, esize, before } => self.sve_last(xd, pg, zn, esize, before),
+            SveLd1 { zt, pg, esize, base, off, ff } => {
+                self.sve_ld1(zt, pg, esize, base, off, ff)?;
+            }
+            SveLd1R { zt, pg, esize, base, imm } => {
+                self.sve_ld1r(zt, pg, esize, base, imm)?;
+            }
+            SveSt1 { zt, pg, esize, base, off } => {
+                self.sve_st1(zt, pg, esize, base, off)?;
+            }
+            SveLdGather { zt, pg, esize, addr, ff } => {
+                self.sve_gather(zt, pg, esize, addr, ff)?;
+            }
+            SveStScatter { zt, pg, esize, addr } => {
+                self.sve_scatter(zt, pg, esize, addr)?;
+            }
+            SveIntBin { op, zdn, pg, zm, esize } => self.sve_int_bin(op, zdn, pg, zm, esize),
+            SveIntBinU { op, zd, zn, zm, esize } => self.sve_int_bin_u(op, zd, zn, zm, esize),
+            SveAddImm { zdn, esize, imm } => self.sve_add_imm(zdn, esize, imm),
+            SveFpBin { op, zdn, pg, zm, dbl } => self.sve_fp_bin(op, zdn, pg, zm, dbl),
+            SveFpUn { op, zd, pg, zn, dbl } => self.sve_fp_un(op, zd, pg, zn, dbl),
+            SveFmla { zda, pg, zn, zm, dbl, sub } => self.sve_fmla(zda, pg, zn, zm, dbl, sub),
+            SveScvtf { zd, pg, zn, dbl } => self.sve_scvtf(zd, pg, zn, dbl),
+            SveIntCmp { op, unsigned, pd, pg, zn, rhs, esize } => {
+                self.sve_int_cmp(op, unsigned, pd, pg, zn, rhs, esize)
+            }
+            SveFpCmp { op, pd, pg, zn, rhs, dbl } => self.sve_fp_cmp(op, pd, pg, zn, rhs, dbl),
+            SveReduce { op, vd, pg, zn, esize } => self.sve_reduce(op, vd, pg, zn, esize),
+            SveFadda { vdn, pg, zm, dbl } => self.sve_fadda(vdn, pg, zm, dbl),
+            SveRev { zd, zn, esize } => self.sve_rev(zd, zn, esize),
+            SveExt { zdn, zm, imm } => self.sve_ext(zdn, zm, imm),
+            SveZip { zd, zn, zm, esize, hi } => self.sve_zip(zd, zn, zm, esize, hi),
+            SveUzp { zd, zn, zm, esize, odd } => self.sve_uzp(zd, zn, zm, esize, odd),
+            SveTrn { zd, zn, zm, esize, odd } => self.sve_trn(zd, zn, zm, esize, odd),
+            SveTbl { zd, zn, zm, esize } => self.sve_tbl(zd, zn, zm, esize),
+            SveCompact { zd, pg, zn, esize } => self.sve_compact(zd, pg, zn, esize),
+            SveSplice { zdn, pg, zm, esize } => self.sve_splice(zdn, pg, zm, esize),
+            Cterm { xn, xm, ne } => self.sve_cterm(xn, xm, ne),
+        }
+        Ok(())
+    }
+
+    /// One legacy step with the same fetch/advance contract as
+    /// `Executor::exec_at`.
+    pub(crate) fn legacy_step(&mut self, prog: &Program) -> Result<bool, Trap> {
+        let pc = self.state.pc;
+        let inst = &prog.insts[pc];
+        self.accesses.clear();
+        self.next_pc = None;
+        if let Err(fault) = self.exec_inst_legacy(inst) {
+            return Err(Trap::Fault { fault, pc });
+        }
+        let taken = self.next_pc.is_some();
+        self.state.pc = match self.next_pc {
+            Some(t) => t,
+            None => pc + 1,
+        };
+        Ok(taken)
+    }
+
+    /// Run to Halt/trap on the legacy interpreter, deriving the dynamic
+    /// mix from the `Inst` metadata (how `run_with` worked before the
+    /// shared decode layer).
+    pub(crate) fn run_legacy(&mut self, prog: &Program, max_insts: u64) -> Result<RunStats, Trap> {
+        let mut stats = RunStats::default();
+        while !self.halted {
+            if stats.insts >= max_insts {
+                return Err(Trap::Budget);
+            }
+            let pc = self.state.pc;
+            self.legacy_step(prog)?;
+            let inst = &prog.insts[pc];
+            stats.insts += 1;
+            stats.sve_insts += u64::from(inst.is_sve());
+            stats.neon_insts += u64::from(inst.is_neon());
+            stats.vector_insts += u64::from(inst.class().is_vector());
+        }
+        Ok(stats)
+    }
+}
+
+#[cfg(test)]
+mod bitident {
+    use super::*;
+    use crate::arch::Esize;
+    use crate::asm::Asm;
+    use crate::compiler::{self, Compiled, Expr, Index, Kernel, Stmt, Target, Trip, Ty};
+    use crate::isa::uop::DecodedProgram;
+    use crate::mem::Memory;
+    use crate::proptest_lite::{check, Gen};
+    use crate::workloads;
+
+    /// Assert two executors reached bit-identical architectural state.
+    fn assert_state_eq(a: &Executor, b: &Executor, what: &str) {
+        assert_eq!(a.state.pc, b.state.pc, "{what}: pc");
+        assert_eq!(a.halted, b.halted, "{what}: halted");
+        assert_eq!(a.state.x, b.state.x, "{what}: x registers");
+        assert_eq!(a.state.flags, b.state.flags, "{what}: NZCV");
+        for r in 0..a.state.z.len() {
+            assert_eq!(a.state.z[r].bytes, b.state.z[r].bytes, "{what}: z{r}");
+        }
+        assert_eq!(a.state.p, b.state.p, "{what}: predicates");
+        assert_eq!(a.state.ffr, b.state.ffr, "{what}: FFR");
+        assert_eq!(a.accesses, b.accesses, "{what}: memory-access stream");
+    }
+
+    /// Compare a memory range byte-for-byte.
+    fn assert_mem_eq(a: &Memory, b: &Memory, lo: u64, len: u64, what: &str) {
+        for off in (0..len).step_by(8) {
+            let n = (len - off).min(8) as usize;
+            assert_eq!(
+                a.read(lo + off, n).ok(),
+                b.read(lo + off, n).ok(),
+                "{what}: memory at {:#x}",
+                lo + off
+            );
+        }
+    }
+
+    /// Run `prog` to completion on both paths and compare everything.
+    fn run_both(
+        prog: &crate::asm::Program,
+        mem: &Memory,
+        vl: usize,
+        max: u64,
+        regions: &[(u64, u64)],
+        what: &str,
+    ) {
+        let mut legacy = Executor::new(vl, mem.clone());
+        let ra = legacy.run_legacy(prog, max);
+        let dec = DecodedProgram::decode(prog);
+        let mut decoded = Executor::new(vl, mem.clone());
+        let rb = decoded.run_decoded(&dec, max);
+        assert_eq!(ra, rb, "{what}: run results (stats/trap)");
+        assert_state_eq(&legacy, &decoded, what);
+        for &(lo, len) in regions {
+            assert_mem_eq(&legacy.mem, &decoded.mem, lo, len, what);
+        }
+    }
+
+    const SCRATCH: u64 = 0x10_000;
+    const SCRATCH_LEN: u64 = 0x10_000;
+
+    /// The mapped, pattern-filled scratch region behind [`seeded`]
+    /// (built once per test and cloned per sample).
+    fn scratch_mem() -> Memory {
+        let mut mem = Memory::new();
+        mem.map(SCRATCH, SCRATCH_LEN);
+        for i in 0..SCRATCH_LEN {
+            mem.write_byte(SCRATCH + i, (i % 253) as u8).unwrap();
+        }
+        mem
+    }
+
+    /// An executor with deterministic non-trivial state: a mapped,
+    /// pattern-filled scratch region, x registers pointing into it, lane
+    /// patterns in the vector file and a mixed predicate file.
+    fn seeded(vl: usize, mem: &Memory) -> Executor {
+        let mut ex = Executor::new(vl, mem.clone());
+        for r in 0..31u8 {
+            ex.state.set_x(r, SCRATCH + r as u64 * 0x3F8);
+        }
+        for r in 0..32 {
+            for i in 0..ex.state.vl_bytes() {
+                ex.state.z[r].bytes[i] = (r as u8).wrapping_mul(37).wrapping_add(i as u8);
+            }
+        }
+        for r in 0..16 {
+            for lane in 0..ex.state.vl_bytes() {
+                ex.state.p[r].set_bit(lane, (lane + r) % (r + 2) == 0);
+            }
+        }
+        ex.state.ffr = ex.state.p[3];
+        ex.state.flags = crate::arch::Flags { n: true, z: false, c: true, v: false };
+        ex
+    }
+
+    /// Every decoded shape, single-stepped from identical seeded state:
+    /// the legacy interpreter and the tag dispatch must agree on the
+    /// resulting state — or fault identically.
+    #[test]
+    fn every_uop_shape_steps_identically_to_legacy() {
+        let mem = scratch_mem();
+        for vl in [128usize, 256, 1024] {
+            for (i, inst) in crate::isa::uop::tests::samples().into_iter().enumerate() {
+                let mut a = Asm::new();
+                a.push(inst.clone());
+                let prog = a.finish();
+                let dec = DecodedProgram::decode(&prog);
+                let mut legacy = seeded(vl, &mem);
+                let mut decoded = seeded(vl, &mem);
+                let ra = legacy.legacy_step(&prog);
+                let rb = decoded.step(&dec);
+                let what = format!("sample {i} ({inst:?}) at VL {vl}");
+                assert_eq!(ra, rb, "{what}: step outcome");
+                assert_state_eq(&legacy, &decoded, &what);
+                assert_mem_eq(&legacy.mem, &decoded.mem, SCRATCH, SCRATCH_LEN, &what);
+            }
+        }
+    }
+
+    /// Real compiled workloads, all three targets, several VLs.
+    #[test]
+    fn compiled_workloads_are_bit_identical_across_paths() {
+        for name in ["stream_triad", "haccmk", "graph500", "spmv_ell", "strlen1m"] {
+            let w = workloads::build(name);
+            for target in [Target::Scalar, Target::Neon, Target::Sve] {
+                let c = w.compile(target);
+                let vls: &[usize] = match target {
+                    Target::Sve => &[128, 384, 1024],
+                    _ => &[128],
+                };
+                for &vl in vls {
+                    run_both(
+                        &c.program,
+                        &w.mem,
+                        vl,
+                        w.max_insts,
+                        &[],
+                        &format!("{name}/{target:?}@vl{vl}"),
+                    );
+                }
+            }
+        }
+    }
+
+    // ---- random IR kernels through the real compiler ----
+
+    struct RandKernel {
+        kernel: Kernel,
+        mem: Memory,
+        regions: Vec<(u64, u64)>,
+    }
+
+    fn random_expr(g: &mut Gen, arrays: &[usize], idx_arr: usize, depth: usize) -> Expr {
+        use crate::compiler::{BinOp, CmpKind, UnOp};
+        let leaf = depth == 0 || g.bool();
+        if leaf {
+            match g.usize_in(0, 3) {
+                0 => Expr::ConstF(g.f64_in(-4.0, 4.0)),
+                1 => Expr::IvAsF,
+                _ => {
+                    let arr = *g.choose(arrays);
+                    let idx = match g.usize_in(0, 3) {
+                        0 | 1 => Index::Affine { offset: 0 },
+                        2 => Index::Strided { scale: 2, offset: 0 },
+                        _ => Index::Indirect { idx_arr, offset: 0 },
+                    };
+                    Expr::load(arr, idx)
+                }
+            }
+        } else {
+            match g.usize_in(0, 5) {
+                0..=2 => {
+                    let op = *g.choose(&[
+                        BinOp::Add,
+                        BinOp::Sub,
+                        BinOp::Mul,
+                        BinOp::Max,
+                        BinOp::Min,
+                    ]);
+                    Expr::bin(
+                        op,
+                        random_expr(g, arrays, idx_arr, depth - 1),
+                        random_expr(g, arrays, idx_arr, depth - 1),
+                    )
+                }
+                3 => Expr::Un {
+                    op: *g.choose(&[UnOp::Neg, UnOp::Abs]),
+                    a: Box::new(random_expr(g, arrays, idx_arr, depth - 1)),
+                },
+                _ => {
+                    let op = *g.choose(&[CmpKind::Gt, CmpKind::Le, CmpKind::Ne]);
+                    Expr::select(
+                        Expr::cmp(
+                            op,
+                            random_expr(g, arrays, idx_arr, depth - 1),
+                            Expr::ConstF(g.f64_in(-2.0, 2.0)),
+                        ),
+                        random_expr(g, arrays, idx_arr, depth - 1),
+                        random_expr(g, arrays, idx_arr, depth - 1),
+                    )
+                }
+            }
+        }
+    }
+
+    fn random_kernel(g: &mut Gen) -> RandKernel {
+        let n = g.u64_in(0, 64);
+        let mut mem = Memory::new();
+        let mut k = Kernel::new("prop", Ty::F64, Trip::Count(n));
+        let elems = 2 * n + 16; // covers Strided{scale: 2} accesses
+        let mut regions = Vec::new();
+        let mut inputs = Vec::new();
+        for name in ["a", "b"] {
+            let base = mem.alloc(8 * elems, 16);
+            for e in 0..elems {
+                mem.write_f64(base + 8 * e, g.f64_in(-8.0, 8.0)).unwrap();
+            }
+            regions.push((base, 8 * elems));
+            inputs.push(k.array(name, Ty::F64, base));
+        }
+        let ibase = mem.alloc(8 * elems, 16);
+        for e in 0..elems {
+            mem.write_u64(ibase + 8 * e, g.u64_in(0, n.max(1) - 1)).unwrap();
+        }
+        regions.push((ibase, 8 * elems));
+        let idx_arr = k.array("idx", Ty::I64, ibase);
+        let obase = mem.alloc(8 * elems, 16);
+        regions.push((obase, 8 * elems));
+        let out = k.array("out", Ty::F64, obase);
+        let value = random_expr(g, &inputs, idx_arr, 3);
+        k.body.push(Stmt::Store { arr: out, idx: Index::Affine { offset: 0 }, value });
+        if g.bool() {
+            let kind = *g.choose(&[
+                crate::compiler::RedKind::SumF,
+                crate::compiler::RedKind::MaxF,
+            ]);
+            let value = random_expr(g, &inputs, idx_arr, 2);
+            k.reductions.push(crate::compiler::Reduction { kind, value });
+            let rout = mem.alloc(8, 8);
+            mem.write_f64(rout, 0.0).unwrap();
+            regions.push((rout, 8));
+            k.red_out.push(rout);
+        }
+        RandKernel { kernel: k, mem, regions }
+    }
+
+    /// The tentpole property: random kernels × all three targets ×
+    /// several VLs execute bit-identically on the legacy interpreter and
+    /// the decoded dispatch path (memory, registers, flags, RunStats).
+    #[test]
+    fn prop_random_kernels_bit_identical_legacy_vs_decoded() {
+        check("prop_random_kernels_bit_identical_legacy_vs_decoded", 24, |g| {
+            let rk = random_kernel(g);
+            for target in [Target::Scalar, Target::Neon, Target::Sve] {
+                let c: Compiled = compiler::compile(&rk.kernel, target);
+                let vls: &[usize] = match target {
+                    Target::Sve => &[128, 256, 512, 2048],
+                    _ => &[128],
+                };
+                for &vl in vls {
+                    run_both(
+                        &c.program,
+                        &rk.mem,
+                        vl,
+                        10_000_000,
+                        &rk.regions,
+                        &format!("random kernel on {target:?}@vl{vl}"),
+                    );
+                }
+            }
+        });
+    }
+
+    /// Budget exhaustion and faults trap identically on both paths.
+    #[test]
+    fn traps_agree_across_paths() {
+        // budget
+        let mut a = Asm::new();
+        a.label("spin");
+        a.push_branch(crate::isa::Inst::B { target: 0 }, "spin");
+        let prog = a.finish();
+        run_both(&prog, &Memory::new(), 128, 100, &[], "budget trap");
+        // fault with a precise address
+        let mut a = Asm::new();
+        a.push(crate::isa::Inst::MovImm { xd: 0, imm: 0xBAD_000 });
+        a.push(crate::isa::Inst::SveLd1 {
+            zt: 0,
+            pg: 0,
+            esize: Esize::D,
+            base: 0,
+            off: crate::isa::SveMemOff::ImmVl(0),
+            ff: false,
+        });
+        a.push(crate::isa::Inst::Halt);
+        let prog = a.finish();
+        let mut mem = Memory::new();
+        mem.map(0x1000, 0x1000);
+        run_both(&prog, &mem, 256, 100, &[], "fault trap");
+    }
+}

@@ -8,24 +8,31 @@
 //! The retire loop is the simulator's innermost loop (hundreds of
 //! millions of iterations per Fig. 8 sweep), so:
 //!
+//! * programs are **decoded once** into µops
+//!   ([`crate::isa::uop::DecodedProgram`]) — operand fields, µop class,
+//!   cracking rule and register-dependence slots are pre-resolved, and
+//!   the execute loop dispatches through the tag-indexed [`DISPATCH`]
+//!   table instead of re-matching the `Inst` enum per retire (the
+//!   decoder is the only place `Inst` is matched);
 //! * a direct-mapped **software TLB** ([`Tlb`]) caches page→slot
 //!   translations into [`Memory`]'s page table, validated against
 //!   [`Memory::epoch`] so any `map`/`unmap_page` (or wholesale memory
 //!   replacement) invalidates every entry — contiguous vector accesses
 //!   translate once per *page* instead of once per lane, while
 //!   first-fault loads still observe per-element faults (see
-//!   `exec/sve.rs`);
-//! * per-instruction static metadata (µop class, SVE/NEON/vector bits)
-//!   is precomputed once per [`Executor::run_with`] call instead of
-//!   re-deriving it from the `Inst` enum on every retire.
+//!   `exec/sve.rs`).
 
 mod neon;
 mod scalar;
 mod sve;
 
+#[cfg(test)]
+mod legacy;
+
 use crate::arch::CpuState;
 use crate::asm::Program;
-use crate::isa::{Inst, UopClass};
+use crate::isa::uop::{DecodedProgram, Uop, UopTag};
+use crate::isa::Inst;
 use crate::mem::{MemFault, Memory, PAGE_SHIFT, PAGE_SIZE};
 
 /// One architectural memory access, as seen by the LSU/cache model.
@@ -48,12 +55,20 @@ pub enum Trap {
     Budget,
 }
 
-/// Per-retired-instruction view handed to the timing callback.
+/// Per-retired-instruction view handed to the timing callback. All
+/// static metadata comes from the shared decode layer: the timing model
+/// never re-derives classes or dependence sets from the `Inst`.
 pub struct StepInfo<'a> {
     pub pc: usize,
+    /// The decoded µop: class, cracking rule, operand metadata.
+    pub uop: &'a Uop,
+    /// The source instruction — for disassembly/trace rendering only.
     pub inst: &'a Inst,
-    /// µop class, precomputed per pc (identical to `inst.class()`).
-    pub class: UopClass,
+    /// Scoreboard slots read, pre-mapped by the decoder
+    /// ([`crate::isa::uop::reg_slot`]).
+    pub reads: &'a [u8],
+    /// Scoreboard slots written.
+    pub writes: &'a [u8],
     /// For branches: was it taken?
     pub taken: bool,
     pub mem: &'a [MemAccess],
@@ -123,32 +138,136 @@ impl Tlb {
     }
 }
 
-/// Per-pc static metadata, precomputed once per run.
-#[derive(Clone, Copy)]
-struct InstMeta {
-    class: UopClass,
-    flags: u8,
+/// Result type of every µop handler.
+pub(crate) type ExecResult = Result<(), MemFault>;
+
+/// A µop handler: executes one decoded µop against the architectural
+/// state.
+pub(crate) type Handler = fn(&mut Executor, &Uop) -> ExecResult;
+
+fn h_invalid(_ex: &mut Executor, u: &Uop) -> ExecResult {
+    unreachable!("no handler wired for µop tag {:?}", u.tag)
 }
 
-const META_SVE: u8 = 1;
-const META_NEON: u8 = 2;
-const META_VECTOR: u8 = 4;
+/// The tag-indexed dispatch table: one handler per [`UopTag`]. Built at
+/// compile time; [`h_invalid`] only remains for tags the decoder can
+/// never produce (there are none — pinned by the decode-coverage test).
+pub(crate) static DISPATCH: [Handler; UopTag::COUNT] = dispatch_table();
 
-impl InstMeta {
-    fn of(inst: &Inst) -> InstMeta {
-        let class = inst.class();
-        let mut flags = 0u8;
-        if inst.is_sve() {
-            flags |= META_SVE;
-        }
-        if inst.is_neon() {
-            flags |= META_NEON;
-        }
-        if class.is_vector() {
-            flags |= META_VECTOR;
-        }
-        InstMeta { class, flags }
-    }
+const fn dispatch_table() -> [Handler; UopTag::COUNT] {
+    use UopTag as T;
+    let mut t: [Handler; UopTag::COUNT] = [h_invalid as Handler; UopTag::COUNT];
+    t[T::MovImm as usize] = scalar::h_mov_imm;
+    t[T::MovReg as usize] = scalar::h_mov_reg;
+    t[T::AddImm as usize] = scalar::h_add_imm;
+    t[T::AddReg as usize] = scalar::h_add_reg;
+    t[T::SubReg as usize] = scalar::h_sub_reg;
+    t[T::Madd as usize] = scalar::h_madd;
+    t[T::Udiv as usize] = scalar::h_udiv;
+    t[T::AndImm as usize] = scalar::h_and_imm;
+    t[T::LogReg as usize] = scalar::h_log_reg;
+    t[T::LslImm as usize] = scalar::h_lsl_imm;
+    t[T::LsrImm as usize] = scalar::h_lsr_imm;
+    t[T::AsrImm as usize] = scalar::h_asr_imm;
+    t[T::Csel as usize] = scalar::h_csel;
+    t[T::LdrImm as usize] = scalar::h_ldr_imm;
+    t[T::LdrReg as usize] = scalar::h_ldr_reg;
+    t[T::StrImm as usize] = scalar::h_str_imm;
+    t[T::StrReg as usize] = scalar::h_str_reg;
+    t[T::LdrFpImm as usize] = scalar::h_ldr_fp_imm;
+    t[T::LdrFpReg as usize] = scalar::h_ldr_fp_reg;
+    t[T::StrFpImm as usize] = scalar::h_str_fp_imm;
+    t[T::StrFpReg as usize] = scalar::h_str_fp_reg;
+    t[T::CmpImm as usize] = scalar::h_cmp_imm;
+    t[T::CmpReg as usize] = scalar::h_cmp_reg;
+    t[T::B as usize] = scalar::h_b;
+    t[T::BCond as usize] = scalar::h_b_cond;
+    t[T::Cbz as usize] = scalar::h_cbz;
+    t[T::Cbnz as usize] = scalar::h_cbnz;
+    t[T::Halt as usize] = scalar::h_halt;
+    t[T::Nop as usize] = scalar::h_nop;
+    t[T::FmovImm as usize] = scalar::h_fmov_imm;
+    t[T::FmovXtoD as usize] = scalar::h_fmov_x_to_d;
+    t[T::FmovReg as usize] = scalar::h_fmov_reg;
+    t[T::FmovDtoX as usize] = scalar::h_fmov_d_to_x;
+    t[T::FpBin as usize] = scalar::h_fp_bin;
+    t[T::FpUn as usize] = scalar::h_fp_un;
+    t[T::Fmadd as usize] = scalar::h_fmadd;
+    t[T::Fcmp as usize] = scalar::h_fcmp;
+    t[T::Scvtf as usize] = scalar::h_scvtf;
+    t[T::Fcvtzs as usize] = scalar::h_fcvtzs;
+    t[T::OpaqueCall as usize] = scalar::h_opaque_call;
+    t[T::NeonLd1Imm as usize] = neon::h_neon_ld1_imm;
+    t[T::NeonLd1Reg as usize] = neon::h_neon_ld1_reg;
+    t[T::NeonSt1Imm as usize] = neon::h_neon_st1_imm;
+    t[T::NeonSt1Reg as usize] = neon::h_neon_st1_reg;
+    t[T::NeonDupX as usize] = neon::h_neon_dup_x;
+    t[T::NeonDupLane0 as usize] = neon::h_neon_dup_lane0;
+    t[T::NeonMoviZero as usize] = neon::h_neon_movi_zero;
+    t[T::NeonFpBin as usize] = neon::h_neon_fp_bin;
+    t[T::NeonFpUn as usize] = neon::h_neon_fp_un;
+    t[T::NeonFmla as usize] = neon::h_neon_fmla;
+    t[T::NeonIntBin as usize] = neon::h_neon_int_bin;
+    t[T::NeonFcm as usize] = neon::h_neon_fcm;
+    t[T::NeonCm as usize] = neon::h_neon_cm;
+    t[T::NeonBsl as usize] = neon::h_neon_bsl;
+    t[T::NeonFaddv as usize] = neon::h_neon_faddv;
+    t[T::NeonAddv as usize] = neon::h_neon_addv;
+    t[T::NeonUmov as usize] = neon::h_neon_umov;
+    t[T::NeonInsX as usize] = neon::h_neon_ins_x;
+    t[T::Ptrue as usize] = sve::h_ptrue;
+    t[T::Pfalse as usize] = sve::h_pfalse;
+    t[T::While as usize] = sve::h_while;
+    t[T::Ptest as usize] = sve::h_ptest;
+    t[T::Pnext as usize] = sve::h_pnext;
+    t[T::Brk as usize] = sve::h_brk;
+    t[T::PredLogic as usize] = sve::h_pred_logic;
+    t[T::Rdffr as usize] = sve::h_rdffr;
+    t[T::Setffr as usize] = sve::h_setffr;
+    t[T::Wrffr as usize] = sve::h_wrffr;
+    t[T::Cnt as usize] = sve::h_cnt;
+    t[T::IncDec as usize] = sve::h_inc_dec;
+    t[T::IncpX as usize] = sve::h_incp_x;
+    t[T::Index as usize] = sve::h_index;
+    t[T::DupImm as usize] = sve::h_dup_imm;
+    t[T::FdupImm as usize] = sve::h_fdup_imm;
+    t[T::DupX as usize] = sve::h_dup_x;
+    t[T::CpyX as usize] = sve::h_cpy_x;
+    t[T::Sel as usize] = sve::h_sel;
+    t[T::Movprfx as usize] = sve::h_movprfx;
+    t[T::Last as usize] = sve::h_last;
+    t[T::SveLd1ImmVl as usize] = sve::h_sve_ld1_imm_vl;
+    t[T::SveLd1Reg as usize] = sve::h_sve_ld1_reg;
+    t[T::SveLd1R as usize] = sve::h_sve_ld1r;
+    t[T::SveSt1ImmVl as usize] = sve::h_sve_st1_imm_vl;
+    t[T::SveSt1Reg as usize] = sve::h_sve_st1_reg;
+    t[T::SveGatherVecImm as usize] = sve::h_sve_gather_vec_imm;
+    t[T::SveGatherBaseVec as usize] = sve::h_sve_gather_base_vec;
+    t[T::SveScatterVecImm as usize] = sve::h_sve_scatter_vec_imm;
+    t[T::SveScatterBaseVec as usize] = sve::h_sve_scatter_base_vec;
+    t[T::SveIntBin as usize] = sve::h_sve_int_bin;
+    t[T::SveIntBinU as usize] = sve::h_sve_int_bin_u;
+    t[T::SveAddImm as usize] = sve::h_sve_add_imm;
+    t[T::SveFpBin as usize] = sve::h_sve_fp_bin;
+    t[T::SveFpUn as usize] = sve::h_sve_fp_un;
+    t[T::SveFmla as usize] = sve::h_sve_fmla;
+    t[T::SveScvtf as usize] = sve::h_sve_scvtf;
+    t[T::SveIntCmpZ as usize] = sve::h_sve_int_cmp_z;
+    t[T::SveIntCmpImm as usize] = sve::h_sve_int_cmp_imm;
+    t[T::SveFpCmpV as usize] = sve::h_sve_fp_cmp_v;
+    t[T::SveFpCmp0 as usize] = sve::h_sve_fp_cmp_0;
+    t[T::SveReduce as usize] = sve::h_sve_reduce;
+    t[T::SveFadda as usize] = sve::h_sve_fadda;
+    t[T::SveRev as usize] = sve::h_sve_rev;
+    t[T::SveExt as usize] = sve::h_sve_ext;
+    t[T::SveZip as usize] = sve::h_sve_zip;
+    t[T::SveUzp as usize] = sve::h_sve_uzp;
+    t[T::SveTrn as usize] = sve::h_sve_trn;
+    t[T::SveTbl as usize] = sve::h_sve_tbl;
+    t[T::SveCompact as usize] = sve::h_sve_compact;
+    t[T::SveSplice as usize] = sve::h_sve_splice;
+    t[T::Cterm as usize] = sve::h_cterm;
+    t
 }
 
 /// The functional core: architectural state + memory.
@@ -159,7 +278,7 @@ pub struct Executor {
     pub(crate) tlb: Tlb,
     /// Scratch buffer of the current instruction's memory accesses.
     pub(crate) accesses: Vec<MemAccess>,
-    /// PC override set by a taken branch during `exec_inst`.
+    /// PC override set by a taken branch during µop execution.
     pub(crate) next_pc: Option<usize>,
     /// Scratch lane buffer for vector loads (avoids per-inst allocation).
     pub(crate) lane_scratch: Vec<u64>,
@@ -180,20 +299,20 @@ impl Executor {
         }
     }
 
-    /// Execute one instruction at `state.pc`. On success advances the PC
-    /// and returns whether a branch was taken.
-    pub fn step(&mut self, prog: &Program) -> Result<bool, Trap> {
-        self.exec_at(prog, self.state.pc)
+    /// Execute one µop at `state.pc`. On success advances the PC and
+    /// returns whether a branch was taken.
+    pub fn step(&mut self, dec: &DecodedProgram) -> Result<bool, Trap> {
+        self.exec_at(dec, self.state.pc)
     }
 
-    /// Execute the instruction at `pc` and advance the PC — the single
-    /// shared body behind [`Executor::step`] and the `run_with` loop.
+    /// Execute the µop at `pc` and advance the PC — the single shared
+    /// body behind [`Executor::step`] and the `run_decoded_with` loop.
     #[inline(always)]
-    fn exec_at(&mut self, prog: &Program, pc: usize) -> Result<bool, Trap> {
-        let inst = &prog.insts[pc];
+    fn exec_at(&mut self, dec: &DecodedProgram, pc: usize) -> Result<bool, Trap> {
+        let u = &dec.uops()[pc];
         self.accesses.clear();
         self.next_pc = None;
-        if let Err(fault) = self.exec_inst(inst) {
+        if let Err(fault) = DISPATCH[u.tag as usize](self, u) {
             return Err(Trap::Fault { fault, pc });
         }
         let taken = self.next_pc.is_some();
@@ -204,63 +323,64 @@ impl Executor {
         Ok(taken)
     }
 
-    /// Run until Halt/Ret (Ok) or a trap (Err), streaming retire info.
-    pub fn run_with(
+    /// Run a pre-decoded program until Halt/Ret (Ok) or a trap (Err),
+    /// streaming retire info. This is the hot path: the sweep
+    /// coordinator decodes each program once per (benchmark, target)
+    /// and shares it across every VL and µarch variant.
+    pub fn run_decoded_with(
         &mut self,
-        prog: &Program,
+        dec: &DecodedProgram,
         max_insts: u64,
         mut on_retire: impl FnMut(StepInfo<'_>),
     ) -> Result<RunStats, Trap> {
-        // One pass over the static program instead of three enum matches
-        // per retired instruction.
-        let meta: Vec<InstMeta> = prog.insts.iter().map(InstMeta::of).collect();
+        let uops = dec.uops();
+        let insts = dec.insts();
         let mut stats = RunStats::default();
         while !self.halted {
             if stats.insts >= max_insts {
                 return Err(Trap::Budget);
             }
             let pc = self.state.pc;
-            let taken = self.exec_at(prog, pc)?;
-            let inst = &prog.insts[pc];
-            let m = meta[pc];
+            let taken = self.exec_at(dec, pc)?;
+            let u = &uops[pc];
             stats.insts += 1;
-            stats.sve_insts += u64::from(m.flags & META_SVE != 0);
-            stats.neon_insts += u64::from(m.flags & META_NEON != 0);
-            stats.vector_insts += u64::from(m.flags & META_VECTOR != 0);
-            on_retire(StepInfo { pc, inst, class: m.class, taken, mem: &self.accesses });
+            stats.sve_insts += u64::from(u.is_sve());
+            stats.neon_insts += u64::from(u.is_neon());
+            stats.vector_insts += u64::from(u.is_vector());
+            on_retire(StepInfo {
+                pc,
+                uop: u,
+                inst: &insts[pc],
+                reads: dec.reads(u),
+                writes: dec.writes(u),
+                taken,
+                mem: &self.accesses,
+            });
         }
         Ok(stats)
     }
 
-    /// Run without a timing consumer.
-    pub fn run(&mut self, prog: &Program, max_insts: u64) -> Result<RunStats, Trap> {
-        self.run_with(prog, max_insts, |_| {})
+    /// Run a pre-decoded program without a timing consumer.
+    pub fn run_decoded(&mut self, dec: &DecodedProgram, max_insts: u64) -> Result<RunStats, Trap> {
+        self.run_decoded_with(dec, max_insts, |_| {})
     }
 
-    /// Dispatch. Implementations live in `scalar.rs`, `neon.rs`, `sve.rs`.
-    fn exec_inst(&mut self, inst: &Inst) -> Result<(), MemFault> {
-        use Inst::*;
-        match inst {
-            // scalar (incl. scalar fp)
-            MovImm { .. } | MovReg { .. } | AddImm { .. } | AddReg { .. } | SubReg { .. }
-            | Madd { .. } | Udiv { .. } | AndImm { .. } | LogReg { .. } | LslImm { .. }
-            | LsrImm { .. } | AsrImm { .. } | Csel { .. } | Ldr { .. } | Str { .. }
-            | LdrFp { .. } | StrFp { .. } | CmpImm { .. } | CmpReg { .. } | B { .. }
-            | BCond { .. } | Cbz { .. } | Cbnz { .. } | Ret | Halt | Nop | FmovImm { .. }
-            | FmovXtoD { .. } | FmovDtoX { .. } | FmovReg { .. } | FpBin { .. } | FpUn { .. } | Fmadd { .. }
-            | Fcmp { .. } | Scvtf { .. } | Fcvtzs { .. } | OpaqueCall { .. } => {
-                self.exec_scalar(inst)
-            }
-            // NEON
-            NeonLd1 { .. } | NeonSt1 { .. } | NeonDupX { .. } | NeonDupLane0 { .. }
-            | NeonMoviZero { .. } | NeonFpBin { .. } | NeonFpUn { .. } | NeonFmla { .. }
-            | NeonIntBin { .. } | NeonFcm { .. } | NeonCm { .. } | NeonBsl { .. }
-            | NeonFaddv { .. } | NeonAddv { .. } | NeonUmov { .. } | NeonInsX { .. } => {
-                self.exec_neon(inst)
-            }
-            // SVE
-            _ => self.exec_sve(inst),
-        }
+    /// Decode `prog` and run it (convenience wrapper; callers on the
+    /// hot path pre-decode with [`DecodedProgram::decode`] and use
+    /// [`Executor::run_decoded_with`] to share the decode).
+    pub fn run_with(
+        &mut self,
+        prog: &Program,
+        max_insts: u64,
+        on_retire: impl FnMut(StepInfo<'_>),
+    ) -> Result<RunStats, Trap> {
+        let dec = DecodedProgram::decode(prog);
+        self.run_decoded_with(&dec, max_insts, on_retire)
+    }
+
+    /// Decode and run without a timing consumer.
+    pub fn run(&mut self, prog: &Program, max_insts: u64) -> Result<RunStats, Trap> {
+        self.run_with(prog, max_insts, |_| {})
     }
 
     // ---- shared helpers ----
@@ -368,7 +488,7 @@ mod tests {
     }
 
     #[test]
-    fn step_info_class_matches_inst_class() {
+    fn step_info_carries_decoded_metadata() {
         let mut a = Asm::new();
         a.push(Inst::MovImm { xd: 0, imm: 1 });
         a.push(Inst::Setffr);
@@ -377,9 +497,27 @@ mod tests {
         let p = a.finish();
         let mut ex = Executor::new(128, Memory::new());
         ex.run_with(&p, 100, |info| {
-            assert_eq!(info.class, info.inst.class(), "pc {}", info.pc);
+            assert_eq!(info.uop.class, info.inst.class(), "pc {}", info.pc);
+            assert_eq!(info.uop.is_sve(), info.inst.is_sve(), "pc {}", info.pc);
         })
         .unwrap();
+    }
+
+    #[test]
+    fn step_executes_one_uop_at_a_time() {
+        let mut a = Asm::new();
+        a.push(Inst::MovImm { xd: 0, imm: 5 });
+        a.push_branch(Inst::B { target: 0 }, "end");
+        a.push(Inst::Nop);
+        a.label("end");
+        a.push(Inst::Halt);
+        let p = a.finish();
+        let dec = DecodedProgram::decode(&p);
+        let mut ex = Executor::new(128, Memory::new());
+        assert!(!ex.step(&dec).unwrap(), "mov is not a taken branch");
+        assert_eq!(ex.state.get_x(0), 5);
+        assert!(ex.step(&dec).unwrap(), "unconditional branch is taken");
+        assert_eq!(ex.state.pc, 3);
     }
 
     #[test]

@@ -1,191 +1,244 @@
 //! Advanced SIMD (NEON) semantics: fixed 128-bit operations on the low
-//! 16 bytes of the vector file. Every NEON write zeroes the extended
-//! bits (§4 — "avoiding partial updates").
+//! 16 bytes of the vector file, as µop handlers over the decoded form.
+//! Every NEON write zeroes the extended bits (§4 — "avoiding partial
+//! updates"). The memory bodies are shared with the `cfg(test)` legacy
+//! interpreter.
 
-use super::Executor;
+use super::{ExecResult, Executor};
 use crate::arch::Esize;
 use crate::exec::scalar::{fp_bin, fp_bin32, fp_un, fp_un32};
-use crate::isa::{CmpOp, Inst, IntOp, MemOff};
-use crate::mem::MemFault;
+use crate::isa::uop::{Uop, F_DBL, F_SUB};
+use crate::isa::{CmpOp, IntOp, MemOff};
 
-const NEON_BYTES: usize = 16;
+pub(crate) const NEON_BYTES: usize = 16;
 
 impl Executor {
-    pub(crate) fn exec_neon(&mut self, inst: &Inst) -> Result<(), MemFault> {
-        use Inst::*;
-        match *inst {
-            NeonLd1 { esize: _, vt, base, off } => {
-                let addr = self.neon_ea(base, off);
-                // bulk path: one TLB translation per page touched
-                let mut bytes = [0u8; NEON_BYTES];
-                self.read_contig(addr, &mut bytes)?;
-                self.record_load(addr, NEON_BYTES as u32);
-                let r = &mut self.state.z[vt as usize];
-                r.bytes[..NEON_BYTES].copy_from_slice(&bytes);
-                r.zero_from(NEON_BYTES);
-            }
-            NeonSt1 { esize: _, vt, base, off } => {
-                let addr = self.neon_ea(base, off);
-                let bytes: [u8; NEON_BYTES] =
-                    self.state.z[vt as usize].bytes[..NEON_BYTES].try_into().unwrap();
-                self.write_contig(addr, &bytes)?;
-                self.record_store(addr, NEON_BYTES as u32);
-            }
-            NeonDupX { esize, vd, xn } => {
-                let v = self.state.get_x(xn);
-                let r = &mut self.state.z[vd as usize];
-                for i in 0..esize.lanes(NEON_BYTES) {
-                    r.set(esize, i, v);
-                }
-                r.zero_from(NEON_BYTES);
-            }
-            NeonDupLane0 { esize, vd, vn } => {
-                let v = self.state.z[vn as usize].get(esize, 0);
-                let r = &mut self.state.z[vd as usize];
-                for i in 0..esize.lanes(NEON_BYTES) {
-                    r.set(esize, i, v);
-                }
-                r.zero_from(NEON_BYTES);
-            }
-            NeonMoviZero { vd } => self.state.z[vd as usize].zero(),
-            NeonFpBin { op, dbl, vd, vn, vm } => {
-                let (zn, zm) = (self.state.z[vn as usize], self.state.z[vm as usize]);
-                let r = &mut self.state.z[vd as usize];
-                if dbl {
-                    for i in 0..2 {
-                        r.set_f64(i, fp_bin(op, zn.get_f64(i), zm.get_f64(i)));
-                    }
-                } else {
-                    for i in 0..4 {
-                        r.set_f32(i, fp_bin32(op, zn.get_f32(i), zm.get_f32(i)));
-                    }
-                }
-                r.zero_from(NEON_BYTES);
-            }
-            NeonFpUn { op, dbl, vd, vn } => {
-                let zn = self.state.z[vn as usize];
-                let r = &mut self.state.z[vd as usize];
-                if dbl {
-                    for i in 0..2 {
-                        r.set_f64(i, fp_un(op, zn.get_f64(i)));
-                    }
-                } else {
-                    for i in 0..4 {
-                        r.set_f32(i, fp_un32(op, zn.get_f32(i)));
-                    }
-                }
-                r.zero_from(NEON_BYTES);
-            }
-            NeonFmla { dbl, vd, vn, vm, sub } => {
-                let (zn, zm) = (self.state.z[vn as usize], self.state.z[vm as usize]);
-                let r = &mut self.state.z[vd as usize];
-                if dbl {
-                    for i in 0..2 {
-                        let p = zn.get_f64(i) * zm.get_f64(i);
-                        let p = if sub { -p } else { p };
-                        r.set_f64(i, r.get_f64(i) + p);
-                    }
-                } else {
-                    for i in 0..4 {
-                        let p = zn.get_f32(i) * zm.get_f32(i);
-                        let p = if sub { -p } else { p };
-                        r.set_f32(i, r.get_f32(i) + p);
-                    }
-                }
-                r.zero_from(NEON_BYTES);
-            }
-            NeonIntBin { op, esize, vd, vn, vm } => {
-                let (zn, zm) = (self.state.z[vn as usize], self.state.z[vm as usize]);
-                let r = &mut self.state.z[vd as usize];
-                for i in 0..esize.lanes(NEON_BYTES) {
-                    let v = int_bin(op, esize, zn.get(esize, i), zm.get(esize, i));
-                    r.set(esize, i, v);
-                }
-                r.zero_from(NEON_BYTES);
-            }
-            NeonFcm { op, dbl, vd, vn, vm } => {
-                let (zn, zm) = (self.state.z[vn as usize], self.state.z[vm as usize]);
-                let r = &mut self.state.z[vd as usize];
-                if dbl {
-                    for i in 0..2 {
-                        let t = fcmp(op, zn.get_f64(i), zm.get_f64(i));
-                        r.set(Esize::D, i, if t { u64::MAX } else { 0 });
-                    }
-                } else {
-                    for i in 0..4 {
-                        let t = fcmp(op, zn.get_f32(i) as f64, zm.get_f32(i) as f64);
-                        r.set(Esize::S, i, if t { 0xFFFF_FFFF } else { 0 });
-                    }
-                }
-                r.zero_from(NEON_BYTES);
-            }
-            NeonCm { op, esize, vd, vn, vm } => {
-                let (zn, zm) = (self.state.z[vn as usize], self.state.z[vm as usize]);
-                let r = &mut self.state.z[vd as usize];
-                let ones = if esize.bytes() == 8 {
-                    u64::MAX
-                } else {
-                    (1u64 << (esize.bytes() * 8)) - 1
-                };
-                for i in 0..esize.lanes(NEON_BYTES) {
-                    let t = icmp_signed(op, zn.get_signed(esize, i), zm.get_signed(esize, i));
-                    r.set(esize, i, if t { ones } else { 0 });
-                }
-                r.zero_from(NEON_BYTES);
-            }
-            NeonBsl { vd, vn, vm } => {
-                let (zn, zm) = (self.state.z[vn as usize], self.state.z[vm as usize]);
-                let r = &mut self.state.z[vd as usize];
-                for k in 0..NEON_BYTES {
-                    r.bytes[k] = (r.bytes[k] & zn.bytes[k]) | (!r.bytes[k] & zm.bytes[k]);
-                }
-                r.zero_from(NEON_BYTES);
-            }
-            NeonFaddv { dbl, dd, vn } => {
-                let zn = self.state.z[vn as usize];
-                if dbl {
-                    // 2 lanes: single pairwise add
-                    let v = zn.get_f64(0) + zn.get_f64(1);
-                    self.state.set_d(dd, v);
-                } else {
-                    // 4 lanes: faddp tree
-                    let (a, b) = (zn.get_f32(0) + zn.get_f32(1), zn.get_f32(2) + zn.get_f32(3));
-                    self.state.set_s(dd, a + b);
-                }
-            }
-            NeonAddv { esize, dd, vn } => {
-                let zn = self.state.z[vn as usize];
-                let mut acc = 0u64;
-                for i in 0..esize.lanes(NEON_BYTES) {
-                    acc = acc.wrapping_add(zn.get(esize, i));
-                }
-                let r = &mut self.state.z[dd as usize];
-                r.zero();
-                r.set(esize, 0, acc);
-            }
-            NeonUmov { esize, xd, vn, lane } => {
-                let v = self.state.z[vn as usize].get(esize, lane as usize);
-                self.state.set_x(xd, v);
-            }
-            NeonInsX { esize, vd, lane, xn } => {
-                let v = self.state.get_x(xn);
-                let r = &mut self.state.z[vd as usize];
-                r.set(esize, lane as usize, v);
-                r.zero_from(NEON_BYTES);
-            }
-            _ => unreachable!("non-NEON inst routed to exec_neon: {inst:?}"),
-        }
-        Ok(())
-    }
-
     #[inline]
-    fn neon_ea(&self, base: u8, off: MemOff) -> u64 {
+    pub(crate) fn neon_ea(&self, base: u8, off: MemOff) -> u64 {
         let b = self.state.get_x(base);
         match off {
             MemOff::Imm(i) => b.wrapping_add(i as u64),
             MemOff::RegLsl(xm, sh) => b.wrapping_add(self.state.get_x(xm) << sh),
         }
     }
+
+    /// 128-bit contiguous load at `addr` into `vt` (high bits zeroed).
+    pub(crate) fn neon_ld1_at(&mut self, addr: u64, vt: u8) -> ExecResult {
+        // bulk path: one TLB translation per page touched
+        let mut bytes = [0u8; NEON_BYTES];
+        self.read_contig(addr, &mut bytes)?;
+        self.record_load(addr, NEON_BYTES as u32);
+        let r = &mut self.state.z[vt as usize];
+        r.bytes[..NEON_BYTES].copy_from_slice(&bytes);
+        r.zero_from(NEON_BYTES);
+        Ok(())
+    }
+
+    /// 128-bit contiguous store of `vt` at `addr`.
+    pub(crate) fn neon_st1_at(&mut self, addr: u64, vt: u8) -> ExecResult {
+        let bytes: [u8; NEON_BYTES] =
+            self.state.z[vt as usize].bytes[..NEON_BYTES].try_into().unwrap();
+        self.write_contig(addr, &bytes)?;
+        self.record_store(addr, NEON_BYTES as u32);
+        Ok(())
+    }
+}
+
+// ---- µop handlers (tag-indexed; see exec::DISPATCH) ----
+
+pub(crate) fn h_neon_ld1_imm(ex: &mut Executor, u: &Uop) -> ExecResult {
+    let addr = ex.neon_ea(u.b, MemOff::Imm(u.imm));
+    ex.neon_ld1_at(addr, u.a)
+}
+
+pub(crate) fn h_neon_ld1_reg(ex: &mut Executor, u: &Uop) -> ExecResult {
+    let addr = ex.neon_ea(u.b, MemOff::RegLsl(u.c, u.imm2 as u8));
+    ex.neon_ld1_at(addr, u.a)
+}
+
+pub(crate) fn h_neon_st1_imm(ex: &mut Executor, u: &Uop) -> ExecResult {
+    let addr = ex.neon_ea(u.b, MemOff::Imm(u.imm));
+    ex.neon_st1_at(addr, u.a)
+}
+
+pub(crate) fn h_neon_st1_reg(ex: &mut Executor, u: &Uop) -> ExecResult {
+    let addr = ex.neon_ea(u.b, MemOff::RegLsl(u.c, u.imm2 as u8));
+    ex.neon_st1_at(addr, u.a)
+}
+
+pub(crate) fn h_neon_dup_x(ex: &mut Executor, u: &Uop) -> ExecResult {
+    let v = ex.state.get_x(u.b);
+    let r = &mut ex.state.z[u.a as usize];
+    for i in 0..u.esize.lanes(NEON_BYTES) {
+        r.set(u.esize, i, v);
+    }
+    r.zero_from(NEON_BYTES);
+    Ok(())
+}
+
+pub(crate) fn h_neon_dup_lane0(ex: &mut Executor, u: &Uop) -> ExecResult {
+    let v = ex.state.z[u.b as usize].get(u.esize, 0);
+    let r = &mut ex.state.z[u.a as usize];
+    for i in 0..u.esize.lanes(NEON_BYTES) {
+        r.set(u.esize, i, v);
+    }
+    r.zero_from(NEON_BYTES);
+    Ok(())
+}
+
+pub(crate) fn h_neon_movi_zero(ex: &mut Executor, u: &Uop) -> ExecResult {
+    ex.state.z[u.a as usize].zero();
+    Ok(())
+}
+
+pub(crate) fn h_neon_fp_bin(ex: &mut Executor, u: &Uop) -> ExecResult {
+    let op = u.sub.fp();
+    let (zn, zm) = (ex.state.z[u.b as usize], ex.state.z[u.c as usize]);
+    let r = &mut ex.state.z[u.a as usize];
+    if u.has(F_DBL) {
+        for i in 0..2 {
+            r.set_f64(i, fp_bin(op, zn.get_f64(i), zm.get_f64(i)));
+        }
+    } else {
+        for i in 0..4 {
+            r.set_f32(i, fp_bin32(op, zn.get_f32(i), zm.get_f32(i)));
+        }
+    }
+    r.zero_from(NEON_BYTES);
+    Ok(())
+}
+
+pub(crate) fn h_neon_fp_un(ex: &mut Executor, u: &Uop) -> ExecResult {
+    let op = u.sub.fp_un();
+    let zn = ex.state.z[u.b as usize];
+    let r = &mut ex.state.z[u.a as usize];
+    if u.has(F_DBL) {
+        for i in 0..2 {
+            r.set_f64(i, fp_un(op, zn.get_f64(i)));
+        }
+    } else {
+        for i in 0..4 {
+            r.set_f32(i, fp_un32(op, zn.get_f32(i)));
+        }
+    }
+    r.zero_from(NEON_BYTES);
+    Ok(())
+}
+
+pub(crate) fn h_neon_fmla(ex: &mut Executor, u: &Uop) -> ExecResult {
+    let sub = u.has(F_SUB);
+    let (zn, zm) = (ex.state.z[u.b as usize], ex.state.z[u.c as usize]);
+    let r = &mut ex.state.z[u.a as usize];
+    if u.has(F_DBL) {
+        for i in 0..2 {
+            let p = zn.get_f64(i) * zm.get_f64(i);
+            let p = if sub { -p } else { p };
+            r.set_f64(i, r.get_f64(i) + p);
+        }
+    } else {
+        for i in 0..4 {
+            let p = zn.get_f32(i) * zm.get_f32(i);
+            let p = if sub { -p } else { p };
+            r.set_f32(i, r.get_f32(i) + p);
+        }
+    }
+    r.zero_from(NEON_BYTES);
+    Ok(())
+}
+
+pub(crate) fn h_neon_int_bin(ex: &mut Executor, u: &Uop) -> ExecResult {
+    let op = u.sub.int();
+    let (zn, zm) = (ex.state.z[u.b as usize], ex.state.z[u.c as usize]);
+    let r = &mut ex.state.z[u.a as usize];
+    for i in 0..u.esize.lanes(NEON_BYTES) {
+        let v = int_bin(op, u.esize, zn.get(u.esize, i), zm.get(u.esize, i));
+        r.set(u.esize, i, v);
+    }
+    r.zero_from(NEON_BYTES);
+    Ok(())
+}
+
+pub(crate) fn h_neon_fcm(ex: &mut Executor, u: &Uop) -> ExecResult {
+    let op = u.sub.cmp();
+    let (zn, zm) = (ex.state.z[u.b as usize], ex.state.z[u.c as usize]);
+    let r = &mut ex.state.z[u.a as usize];
+    if u.has(F_DBL) {
+        for i in 0..2 {
+            let t = fcmp(op, zn.get_f64(i), zm.get_f64(i));
+            r.set(Esize::D, i, if t { u64::MAX } else { 0 });
+        }
+    } else {
+        for i in 0..4 {
+            let t = fcmp(op, zn.get_f32(i) as f64, zm.get_f32(i) as f64);
+            r.set(Esize::S, i, if t { 0xFFFF_FFFF } else { 0 });
+        }
+    }
+    r.zero_from(NEON_BYTES);
+    Ok(())
+}
+
+pub(crate) fn h_neon_cm(ex: &mut Executor, u: &Uop) -> ExecResult {
+    let op = u.sub.cmp();
+    let esize = u.esize;
+    let (zn, zm) = (ex.state.z[u.b as usize], ex.state.z[u.c as usize]);
+    let r = &mut ex.state.z[u.a as usize];
+    let ones = if esize.bytes() == 8 { u64::MAX } else { (1u64 << (esize.bytes() * 8)) - 1 };
+    for i in 0..esize.lanes(NEON_BYTES) {
+        let t = icmp_signed(op, zn.get_signed(esize, i), zm.get_signed(esize, i));
+        r.set(esize, i, if t { ones } else { 0 });
+    }
+    r.zero_from(NEON_BYTES);
+    Ok(())
+}
+
+pub(crate) fn h_neon_bsl(ex: &mut Executor, u: &Uop) -> ExecResult {
+    let (zn, zm) = (ex.state.z[u.b as usize], ex.state.z[u.c as usize]);
+    let r = &mut ex.state.z[u.a as usize];
+    for k in 0..NEON_BYTES {
+        r.bytes[k] = (r.bytes[k] & zn.bytes[k]) | (!r.bytes[k] & zm.bytes[k]);
+    }
+    r.zero_from(NEON_BYTES);
+    Ok(())
+}
+
+pub(crate) fn h_neon_faddv(ex: &mut Executor, u: &Uop) -> ExecResult {
+    let zn = ex.state.z[u.b as usize];
+    if u.has(F_DBL) {
+        // 2 lanes: single pairwise add
+        let v = zn.get_f64(0) + zn.get_f64(1);
+        ex.state.set_d(u.a, v);
+    } else {
+        // 4 lanes: faddp tree
+        let (a, b) = (zn.get_f32(0) + zn.get_f32(1), zn.get_f32(2) + zn.get_f32(3));
+        ex.state.set_s(u.a, a + b);
+    }
+    Ok(())
+}
+
+pub(crate) fn h_neon_addv(ex: &mut Executor, u: &Uop) -> ExecResult {
+    let zn = ex.state.z[u.b as usize];
+    let mut acc = 0u64;
+    for i in 0..u.esize.lanes(NEON_BYTES) {
+        acc = acc.wrapping_add(zn.get(u.esize, i));
+    }
+    let r = &mut ex.state.z[u.a as usize];
+    r.zero();
+    r.set(u.esize, 0, acc);
+    Ok(())
+}
+
+pub(crate) fn h_neon_umov(ex: &mut Executor, u: &Uop) -> ExecResult {
+    let v = ex.state.z[u.b as usize].get(u.esize, u.imm as usize);
+    ex.state.set_x(u.a, v);
+    Ok(())
+}
+
+pub(crate) fn h_neon_ins_x(ex: &mut Executor, u: &Uop) -> ExecResult {
+    let v = ex.state.get_x(u.b);
+    let r = &mut ex.state.z[u.a as usize];
+    r.set(u.esize, u.imm as usize, v);
+    r.zero_from(NEON_BYTES);
+    Ok(())
 }
 
 pub(crate) fn int_bin(op: IntOp, esize: Esize, a: u64, b: u64) -> u64 {
@@ -267,6 +320,7 @@ pub(crate) fn icmp_unsigned(op: CmpOp, a: u64, b: u64) -> bool {
 mod tests {
     use super::*;
     use crate::asm::Asm;
+    use crate::isa::Inst;
     use crate::mem::Memory;
 
     fn run(mem: Memory, build: impl FnOnce(&mut Asm)) -> Executor {

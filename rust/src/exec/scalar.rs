@@ -1,233 +1,364 @@
-//! AArch64 scalar (integer + FP) semantics.
+//! AArch64 scalar (integer + FP) semantics, as µop handlers over the
+//! decoded form ([`crate::isa::uop`]). Operand fields arrive
+//! pre-resolved in the [`Uop`]; the shared memory bodies
+//! ([`Executor::ldr_at`] and friends) are also used by the `cfg(test)`
+//! legacy interpreter so the two paths can be compared bit-for-bit.
 
-use super::Executor;
+use super::{ExecResult, Executor};
 use crate::arch::Flags;
-use crate::isa::{FpOp, FpUnOp, Inst, MemOff, OpaqueFn, PLogicOp};
-use crate::mem::MemFault;
+use crate::isa::uop::{Uop, F_DBL, F_OPT, F_SIGNED, F_SUB};
+use crate::isa::{FpOp, FpUnOp, MemOff, OpaqueFn, PLogicOp};
 
 impl Executor {
-    pub(crate) fn exec_scalar(&mut self, inst: &Inst) -> Result<(), MemFault> {
-        use Inst::*;
-        let s = &mut self.state;
-        match *inst {
-            MovImm { xd, imm } => s.set_x(xd, imm),
-            MovReg { xd, xn } => {
-                let v = s.get_x(xn);
-                s.set_x(xd, v)
-            }
-            AddImm { xd, xn, imm } => {
-                let v = s.get_x(xn).wrapping_add(imm as u64);
-                s.set_x(xd, v)
-            }
-            AddReg { xd, xn, xm, lsl } => {
-                let v = s.get_x(xn).wrapping_add(s.get_x(xm) << lsl);
-                s.set_x(xd, v)
-            }
-            SubReg { xd, xn, xm } => {
-                let v = s.get_x(xn).wrapping_sub(s.get_x(xm));
-                s.set_x(xd, v)
-            }
-            Madd { xd, xn, xm, xa } => {
-                let v = s.get_x(xa).wrapping_add(s.get_x(xn).wrapping_mul(s.get_x(xm)));
-                s.set_x(xd, v)
-            }
-            Udiv { xd, xn, xm } => {
-                let d = s.get_x(xm);
-                let v = if d == 0 { 0 } else { s.get_x(xn) / d }; // A64: div by 0 = 0
-                s.set_x(xd, v)
-            }
-            AndImm { xd, xn, imm } => {
-                let v = s.get_x(xn) & imm;
-                s.set_x(xd, v)
-            }
-            LogReg { op, xd, xn, xm } => {
-                let (a, b) = (s.get_x(xn), s.get_x(xm));
-                let v = match op {
-                    PLogicOp::And => a & b,
-                    PLogicOp::Orr => a | b,
-                    PLogicOp::Eor => a ^ b,
-                    PLogicOp::Bic => a & !b,
-                };
-                s.set_x(xd, v)
-            }
-            LslImm { xd, xn, sh } => {
-                let v = s.get_x(xn) << sh;
-                s.set_x(xd, v)
-            }
-            LsrImm { xd, xn, sh } => {
-                let v = s.get_x(xn) >> sh;
-                s.set_x(xd, v)
-            }
-            AsrImm { xd, xn, sh } => {
-                let v = (s.get_x(xn) as i64) >> sh;
-                s.set_x(xd, v as u64)
-            }
-            Csel { xd, xn, xm, cond } => {
-                let v = if s.flags.cond(cond) { s.get_x(xn) } else { s.get_x(xm) };
-                s.set_x(xd, v)
-            }
-            Ldr { size, signed, xt, base, off } => {
-                let addr = self.ea(base, off);
-                let raw = self.mem.read(addr, size as usize)?;
-                self.record_load(addr, size as u32);
-                let v = if signed {
-                    let bits = size as u32 * 8;
-                    if bits == 64 {
-                        raw
-                    } else {
-                        (((raw << (64 - bits)) as i64) >> (64 - bits)) as u64
-                    }
-                } else {
-                    raw
-                };
-                self.state.set_x(xt, v);
-            }
-            Str { size, xt, base, off } => {
-                let addr = self.ea(base, off);
-                let v = self.state.get_x(xt);
-                self.mem.write(addr, size as usize, v)?;
-                self.record_store(addr, size as u32);
-            }
-            LdrFp { dbl, vt, base, off } => {
-                let addr = self.ea(base, off);
-                let size = if dbl { 8 } else { 4 };
-                let raw = self.mem.read(addr, size)?;
-                self.record_load(addr, size as u32);
-                if dbl {
-                    self.state.set_d(vt, f64::from_bits(raw));
-                } else {
-                    self.state.set_s(vt, f32::from_bits(raw as u32));
-                }
-            }
-            StrFp { dbl, vt, base, off } => {
-                let addr = self.ea(base, off);
-                if dbl {
-                    self.mem.write(addr, 8, self.state.get_d(vt).to_bits())?;
-                    self.record_store(addr, 8);
-                } else {
-                    self.mem.write(addr, 4, self.state.get_s(vt).to_bits() as u64)?;
-                    self.record_store(addr, 4);
-                }
-            }
-            CmpImm { xn, imm } => s.flags = Flags::from_sub(s.get_x(xn), imm),
-            CmpReg { xn, xm } => s.flags = Flags::from_sub(s.get_x(xn), s.get_x(xm)),
-            B { target } => self.next_pc = Some(target),
-            BCond { cond, target } => {
-                if s.flags.cond(cond) {
-                    self.next_pc = Some(target);
-                }
-            }
-            Cbz { xn, target } => {
-                if s.get_x(xn) == 0 {
-                    self.next_pc = Some(target);
-                }
-            }
-            Cbnz { xn, target } => {
-                if s.get_x(xn) != 0 {
-                    self.next_pc = Some(target);
-                }
-            }
-            Ret | Halt => self.halted = true,
-            Nop => {}
-            FmovImm { dbl, dd, bits } => {
-                if dbl {
-                    s.set_d(dd, f64::from_bits(bits));
-                } else {
-                    s.set_s(dd, f32::from_bits(bits as u32));
-                }
-            }
-            FmovXtoD { dd, xn } => {
-                let v = s.get_x(xn);
-                s.set_d(dd, f64::from_bits(v));
-            }
-            FmovReg { dbl, dd, dn } => {
-                if dbl {
-                    let v = s.get_d(dn);
-                    s.set_d(dd, v);
-                } else {
-                    let v = s.get_s(dn);
-                    s.set_s(dd, v);
-                }
-            }
-            FmovDtoX { xd, dn } => {
-                let v = s.get_d(dn).to_bits();
-                s.set_x(xd, v);
-            }
-            FpBin { op, dbl, dd, dn, dm } => {
-                if dbl {
-                    let (a, b) = (s.get_d(dn), s.get_d(dm));
-                    s.set_d(dd, fp_bin(op, a, b));
-                } else {
-                    let (a, b) = (s.get_s(dn), s.get_s(dm));
-                    s.set_s(dd, fp_bin32(op, a, b));
-                }
-            }
-            FpUn { op, dbl, dd, dn } => {
-                if dbl {
-                    let a = s.get_d(dn);
-                    s.set_d(dd, fp_un(op, a));
-                } else {
-                    let a = s.get_s(dn);
-                    s.set_s(dd, fp_un32(op, a));
-                }
-            }
-            Fmadd { dbl, dd, dn, dm, da, sub } => {
-                if dbl {
-                    let (n, m, a) = (s.get_d(dn), s.get_d(dm), s.get_d(da));
-                    let prod = if sub { -(n * m) } else { n * m };
-                    s.set_d(dd, a + prod);
-                } else {
-                    let (n, m, a) = (s.get_s(dn), s.get_s(dm), s.get_s(da));
-                    let prod = if sub { -(n * m) } else { n * m };
-                    s.set_s(dd, a + prod);
-                }
-            }
-            Fcmp { dbl, dn, dm } => {
-                let (a, b) = if dbl {
-                    (s.get_d(dn), s.get_d(dm))
-                } else {
-                    (s.get_s(dn) as f64, s.get_s(dm) as f64)
-                };
-                s.flags = Flags::from_fcmp(a, b);
-            }
-            Scvtf { dbl, dd, xn } => {
-                let v = s.get_x(xn) as i64;
-                if dbl {
-                    s.set_d(dd, v as f64);
-                } else {
-                    s.set_s(dd, v as f32);
-                }
-            }
-            Fcvtzs { dbl, xd, dn } => {
-                let v = if dbl { s.get_d(dn) } else { s.get_s(dn) as f64 };
-                s.set_x(xd, v.trunc() as i64 as u64);
-            }
-            OpaqueCall { f, dd, dn, dm } => {
-                let a = s.get_d(dn);
-                let b = dm.map(|m| s.get_d(m));
-                let v = match f {
-                    OpaqueFn::Exp => a.exp(),
-                    OpaqueFn::Log => a.ln(),
-                    OpaqueFn::Pow => a.powf(b.expect("pow needs 2 args")),
-                    OpaqueFn::Sqrt => a.sqrt(),
-                    OpaqueFn::Sin => a.sin(),
-                };
-                s.set_d(dd, v);
-            }
-            _ => unreachable!("non-scalar inst routed to exec_scalar: {inst:?}"),
-        }
-        Ok(())
-    }
-
     /// Effective address of a scalar memory operand.
     #[inline]
-    fn ea(&self, base: u8, off: MemOff) -> u64 {
+    pub(crate) fn ea(&self, base: u8, off: MemOff) -> u64 {
         let b = self.state.get_x(base);
         match off {
             MemOff::Imm(i) => b.wrapping_add(i as u64),
             MemOff::RegLsl(xm, sh) => b.wrapping_add(self.state.get_x(xm) << sh),
         }
     }
+
+    /// Scalar integer load at `addr` (`size` bytes, optionally
+    /// sign-extending) into `xt`.
+    pub(crate) fn ldr_at(&mut self, addr: u64, size: usize, signed: bool, xt: u8) -> ExecResult {
+        let raw = self.mem.read(addr, size)?;
+        self.record_load(addr, size as u32);
+        let v = if signed {
+            let bits = size as u32 * 8;
+            if bits == 64 {
+                raw
+            } else {
+                (((raw << (64 - bits)) as i64) >> (64 - bits)) as u64
+            }
+        } else {
+            raw
+        };
+        self.state.set_x(xt, v);
+        Ok(())
+    }
+
+    /// Scalar integer store of `xt` at `addr` (`size` bytes).
+    pub(crate) fn str_at(&mut self, addr: u64, size: usize, xt: u8) -> ExecResult {
+        let v = self.state.get_x(xt);
+        self.mem.write(addr, size, v)?;
+        self.record_store(addr, size as u32);
+        Ok(())
+    }
+
+    /// Scalar FP load at `addr` into `vt` (d- or s-view).
+    pub(crate) fn ldr_fp_at(&mut self, addr: u64, dbl: bool, vt: u8) -> ExecResult {
+        let size = if dbl { 8 } else { 4 };
+        let raw = self.mem.read(addr, size)?;
+        self.record_load(addr, size as u32);
+        if dbl {
+            self.state.set_d(vt, f64::from_bits(raw));
+        } else {
+            self.state.set_s(vt, f32::from_bits(raw as u32));
+        }
+        Ok(())
+    }
+
+    /// Scalar FP store of `vt` at `addr`.
+    pub(crate) fn str_fp_at(&mut self, addr: u64, dbl: bool, vt: u8) -> ExecResult {
+        if dbl {
+            self.mem.write(addr, 8, self.state.get_d(vt).to_bits())?;
+            self.record_store(addr, 8);
+        } else {
+            self.mem.write(addr, 4, self.state.get_s(vt).to_bits() as u64)?;
+            self.record_store(addr, 4);
+        }
+        Ok(())
+    }
+}
+
+// ---- µop handlers (tag-indexed; see exec::DISPATCH) ----
+
+pub(crate) fn h_mov_imm(ex: &mut Executor, u: &Uop) -> ExecResult {
+    ex.state.set_x(u.a, u.imm as u64);
+    Ok(())
+}
+
+pub(crate) fn h_mov_reg(ex: &mut Executor, u: &Uop) -> ExecResult {
+    let v = ex.state.get_x(u.b);
+    ex.state.set_x(u.a, v);
+    Ok(())
+}
+
+pub(crate) fn h_add_imm(ex: &mut Executor, u: &Uop) -> ExecResult {
+    let v = ex.state.get_x(u.b).wrapping_add(u.imm as u64);
+    ex.state.set_x(u.a, v);
+    Ok(())
+}
+
+pub(crate) fn h_add_reg(ex: &mut Executor, u: &Uop) -> ExecResult {
+    let v = ex.state.get_x(u.b).wrapping_add(ex.state.get_x(u.c) << u.imm2);
+    ex.state.set_x(u.a, v);
+    Ok(())
+}
+
+pub(crate) fn h_sub_reg(ex: &mut Executor, u: &Uop) -> ExecResult {
+    let v = ex.state.get_x(u.b).wrapping_sub(ex.state.get_x(u.c));
+    ex.state.set_x(u.a, v);
+    Ok(())
+}
+
+pub(crate) fn h_madd(ex: &mut Executor, u: &Uop) -> ExecResult {
+    let s = &mut ex.state;
+    let v = s.get_x(u.d).wrapping_add(s.get_x(u.b).wrapping_mul(s.get_x(u.c)));
+    s.set_x(u.a, v);
+    Ok(())
+}
+
+pub(crate) fn h_udiv(ex: &mut Executor, u: &Uop) -> ExecResult {
+    let d = ex.state.get_x(u.c);
+    let v = if d == 0 { 0 } else { ex.state.get_x(u.b) / d }; // A64: div by 0 = 0
+    ex.state.set_x(u.a, v);
+    Ok(())
+}
+
+pub(crate) fn h_and_imm(ex: &mut Executor, u: &Uop) -> ExecResult {
+    let v = ex.state.get_x(u.b) & u.imm as u64;
+    ex.state.set_x(u.a, v);
+    Ok(())
+}
+
+pub(crate) fn h_log_reg(ex: &mut Executor, u: &Uop) -> ExecResult {
+    let (a, b) = (ex.state.get_x(u.b), ex.state.get_x(u.c));
+    let v = match u.sub.plogic() {
+        PLogicOp::And => a & b,
+        PLogicOp::Orr => a | b,
+        PLogicOp::Eor => a ^ b,
+        PLogicOp::Bic => a & !b,
+    };
+    ex.state.set_x(u.a, v);
+    Ok(())
+}
+
+pub(crate) fn h_lsl_imm(ex: &mut Executor, u: &Uop) -> ExecResult {
+    let v = ex.state.get_x(u.b) << u.imm;
+    ex.state.set_x(u.a, v);
+    Ok(())
+}
+
+pub(crate) fn h_lsr_imm(ex: &mut Executor, u: &Uop) -> ExecResult {
+    let v = ex.state.get_x(u.b) >> u.imm;
+    ex.state.set_x(u.a, v);
+    Ok(())
+}
+
+pub(crate) fn h_asr_imm(ex: &mut Executor, u: &Uop) -> ExecResult {
+    let v = (ex.state.get_x(u.b) as i64) >> u.imm;
+    ex.state.set_x(u.a, v as u64);
+    Ok(())
+}
+
+pub(crate) fn h_csel(ex: &mut Executor, u: &Uop) -> ExecResult {
+    let s = &mut ex.state;
+    let v = if s.flags.cond(u.sub.cond()) { s.get_x(u.b) } else { s.get_x(u.c) };
+    s.set_x(u.a, v);
+    Ok(())
+}
+
+pub(crate) fn h_ldr_imm(ex: &mut Executor, u: &Uop) -> ExecResult {
+    let addr = ex.ea(u.b, MemOff::Imm(u.imm));
+    ex.ldr_at(addr, u.esize.bytes(), u.has(F_SIGNED), u.a)
+}
+
+pub(crate) fn h_ldr_reg(ex: &mut Executor, u: &Uop) -> ExecResult {
+    let addr = ex.ea(u.b, MemOff::RegLsl(u.c, u.imm2 as u8));
+    ex.ldr_at(addr, u.esize.bytes(), u.has(F_SIGNED), u.a)
+}
+
+pub(crate) fn h_str_imm(ex: &mut Executor, u: &Uop) -> ExecResult {
+    let addr = ex.ea(u.b, MemOff::Imm(u.imm));
+    ex.str_at(addr, u.esize.bytes(), u.a)
+}
+
+pub(crate) fn h_str_reg(ex: &mut Executor, u: &Uop) -> ExecResult {
+    let addr = ex.ea(u.b, MemOff::RegLsl(u.c, u.imm2 as u8));
+    ex.str_at(addr, u.esize.bytes(), u.a)
+}
+
+pub(crate) fn h_ldr_fp_imm(ex: &mut Executor, u: &Uop) -> ExecResult {
+    let addr = ex.ea(u.b, MemOff::Imm(u.imm));
+    ex.ldr_fp_at(addr, u.dbl(), u.a)
+}
+
+pub(crate) fn h_ldr_fp_reg(ex: &mut Executor, u: &Uop) -> ExecResult {
+    let addr = ex.ea(u.b, MemOff::RegLsl(u.c, u.imm2 as u8));
+    ex.ldr_fp_at(addr, u.dbl(), u.a)
+}
+
+pub(crate) fn h_str_fp_imm(ex: &mut Executor, u: &Uop) -> ExecResult {
+    let addr = ex.ea(u.b, MemOff::Imm(u.imm));
+    ex.str_fp_at(addr, u.dbl(), u.a)
+}
+
+pub(crate) fn h_str_fp_reg(ex: &mut Executor, u: &Uop) -> ExecResult {
+    let addr = ex.ea(u.b, MemOff::RegLsl(u.c, u.imm2 as u8));
+    ex.str_fp_at(addr, u.dbl(), u.a)
+}
+
+pub(crate) fn h_cmp_imm(ex: &mut Executor, u: &Uop) -> ExecResult {
+    ex.state.flags = Flags::from_sub(ex.state.get_x(u.b), u.imm as u64);
+    Ok(())
+}
+
+pub(crate) fn h_cmp_reg(ex: &mut Executor, u: &Uop) -> ExecResult {
+    ex.state.flags = Flags::from_sub(ex.state.get_x(u.b), ex.state.get_x(u.c));
+    Ok(())
+}
+
+pub(crate) fn h_b(ex: &mut Executor, u: &Uop) -> ExecResult {
+    ex.next_pc = Some(u.imm as usize);
+    Ok(())
+}
+
+pub(crate) fn h_b_cond(ex: &mut Executor, u: &Uop) -> ExecResult {
+    if ex.state.flags.cond(u.sub.cond()) {
+        ex.next_pc = Some(u.imm as usize);
+    }
+    Ok(())
+}
+
+pub(crate) fn h_cbz(ex: &mut Executor, u: &Uop) -> ExecResult {
+    if ex.state.get_x(u.b) == 0 {
+        ex.next_pc = Some(u.imm as usize);
+    }
+    Ok(())
+}
+
+pub(crate) fn h_cbnz(ex: &mut Executor, u: &Uop) -> ExecResult {
+    if ex.state.get_x(u.b) != 0 {
+        ex.next_pc = Some(u.imm as usize);
+    }
+    Ok(())
+}
+
+pub(crate) fn h_halt(ex: &mut Executor, _u: &Uop) -> ExecResult {
+    ex.halted = true;
+    Ok(())
+}
+
+pub(crate) fn h_nop(_ex: &mut Executor, _u: &Uop) -> ExecResult {
+    Ok(())
+}
+
+pub(crate) fn h_fmov_imm(ex: &mut Executor, u: &Uop) -> ExecResult {
+    if u.has(F_DBL) {
+        ex.state.set_d(u.a, f64::from_bits(u.imm as u64));
+    } else {
+        ex.state.set_s(u.a, f32::from_bits(u.imm as u32));
+    }
+    Ok(())
+}
+
+pub(crate) fn h_fmov_x_to_d(ex: &mut Executor, u: &Uop) -> ExecResult {
+    let v = ex.state.get_x(u.b);
+    ex.state.set_d(u.a, f64::from_bits(v));
+    Ok(())
+}
+
+pub(crate) fn h_fmov_reg(ex: &mut Executor, u: &Uop) -> ExecResult {
+    if u.has(F_DBL) {
+        let v = ex.state.get_d(u.b);
+        ex.state.set_d(u.a, v);
+    } else {
+        let v = ex.state.get_s(u.b);
+        ex.state.set_s(u.a, v);
+    }
+    Ok(())
+}
+
+pub(crate) fn h_fmov_d_to_x(ex: &mut Executor, u: &Uop) -> ExecResult {
+    let v = ex.state.get_d(u.b).to_bits();
+    ex.state.set_x(u.a, v);
+    Ok(())
+}
+
+pub(crate) fn h_fp_bin(ex: &mut Executor, u: &Uop) -> ExecResult {
+    let s = &mut ex.state;
+    let op = u.sub.fp();
+    if u.has(F_DBL) {
+        let (a, b) = (s.get_d(u.b), s.get_d(u.c));
+        s.set_d(u.a, fp_bin(op, a, b));
+    } else {
+        let (a, b) = (s.get_s(u.b), s.get_s(u.c));
+        s.set_s(u.a, fp_bin32(op, a, b));
+    }
+    Ok(())
+}
+
+pub(crate) fn h_fp_un(ex: &mut Executor, u: &Uop) -> ExecResult {
+    let s = &mut ex.state;
+    let op = u.sub.fp_un();
+    if u.has(F_DBL) {
+        let a = s.get_d(u.b);
+        s.set_d(u.a, fp_un(op, a));
+    } else {
+        let a = s.get_s(u.b);
+        s.set_s(u.a, fp_un32(op, a));
+    }
+    Ok(())
+}
+
+pub(crate) fn h_fmadd(ex: &mut Executor, u: &Uop) -> ExecResult {
+    let s = &mut ex.state;
+    let sub = u.has(F_SUB);
+    if u.has(F_DBL) {
+        let (n, m, a) = (s.get_d(u.b), s.get_d(u.c), s.get_d(u.d));
+        let prod = if sub { -(n * m) } else { n * m };
+        s.set_d(u.a, a + prod);
+    } else {
+        let (n, m, a) = (s.get_s(u.b), s.get_s(u.c), s.get_s(u.d));
+        let prod = if sub { -(n * m) } else { n * m };
+        s.set_s(u.a, a + prod);
+    }
+    Ok(())
+}
+
+pub(crate) fn h_fcmp(ex: &mut Executor, u: &Uop) -> ExecResult {
+    let s = &mut ex.state;
+    let (a, b) = if u.has(F_DBL) {
+        (s.get_d(u.b), s.get_d(u.c))
+    } else {
+        (s.get_s(u.b) as f64, s.get_s(u.c) as f64)
+    };
+    s.flags = Flags::from_fcmp(a, b);
+    Ok(())
+}
+
+pub(crate) fn h_scvtf(ex: &mut Executor, u: &Uop) -> ExecResult {
+    let v = ex.state.get_x(u.b) as i64;
+    if u.has(F_DBL) {
+        ex.state.set_d(u.a, v as f64);
+    } else {
+        ex.state.set_s(u.a, v as f32);
+    }
+    Ok(())
+}
+
+pub(crate) fn h_fcvtzs(ex: &mut Executor, u: &Uop) -> ExecResult {
+    let v = if u.has(F_DBL) { ex.state.get_d(u.b) } else { ex.state.get_s(u.b) as f64 };
+    ex.state.set_x(u.a, v.trunc() as i64 as u64);
+    Ok(())
+}
+
+pub(crate) fn h_opaque_call(ex: &mut Executor, u: &Uop) -> ExecResult {
+    let s = &mut ex.state;
+    let a = s.get_d(u.b);
+    let b = if u.has(F_OPT) { Some(s.get_d(u.c)) } else { None };
+    let v = match u.sub.opaque() {
+        OpaqueFn::Exp => a.exp(),
+        OpaqueFn::Log => a.ln(),
+        OpaqueFn::Pow => a.powf(b.expect("pow needs 2 args")),
+        OpaqueFn::Sqrt => a.sqrt(),
+        OpaqueFn::Sin => a.sin(),
+    };
+    s.set_d(u.a, v);
+    Ok(())
 }
 
 pub(crate) fn fp_bin(op: FpOp, a: f64, b: f64) -> f64 {
@@ -276,6 +407,7 @@ mod tests {
     use crate::arch::Cond;
     use crate::asm::Asm;
     use crate::exec::Trap;
+    use crate::isa::Inst;
     use crate::mem::Memory;
 
     fn run_prog(build: impl FnOnce(&mut Asm)) -> Executor {

@@ -1,697 +1,825 @@
 //! SVE semantics: predication, while-loops, first-faulting loads, vector
 //! partitioning, gather/scatter, horizontal reductions, permutes — every
 //! mechanism of §2.
+//!
+//! Each operation is one parameterized [`Executor`] method; the `h_*`
+//! functions below are the tag-indexed µop handlers that feed those
+//! methods from the decoded operand fields ([`crate::isa::uop`]). The
+//! `cfg(test)` legacy interpreter drives the same methods straight from
+//! the `Inst` payloads, which is what the bit-identity property tests
+//! compare against.
 
-use super::Executor;
+use super::{ExecResult, Executor};
 use crate::arch::{Esize, Flags, PredReg};
 use crate::exec::neon::{fcmp, icmp_signed, icmp_unsigned, int_bin};
 use crate::exec::scalar::{fp_bin, fp_bin32, fp_un, fp_un32};
-use crate::isa::{GatherAddr, Inst, PLogicOp, RedOp, RegOrImm, SveMemOff, ZmOrImm};
+use crate::isa::uop::{
+    Uop, F_BEFORE, F_FF, F_HI, F_NE, F_OPT, F_SCALED, F_SETFLAGS, F_SUB, F_UNSIGNED, F_ZEROING,
+};
+use crate::isa::{
+    CmpOp, FpOp, FpUnOp, GatherAddr, IntOp, PLogicOp, RedOp, RegOrImm, SveMemOff, ZmOrImm,
+};
 use crate::mem::MemFault;
 use crate::VL_MAX_BYTES;
 
 impl Executor {
-    pub(crate) fn exec_sve(&mut self, inst: &Inst) -> Result<(), MemFault> {
-        use Inst::*;
+    // ====================== predicates ======================
+
+    pub(crate) fn sve_ptrue(&mut self, pd: u8, esize: Esize, s: bool) {
         let vlb = self.state.vl_bytes();
-        match *inst {
-            // ====================== predicates ======================
-            Ptrue { pd, esize, s } => {
-                let mut p = PredReg::default();
-                p.set_all(esize, vlb);
-                self.state.p[pd as usize] = p;
-                if s {
-                    // governing predicate of ptrue is itself
-                    self.state.flags = Flags::from_pred_result(&p, &p, esize, vlb);
-                }
-            }
-            Pfalse { pd } => self.state.p[pd as usize].clear(),
-            While { pd, esize, xn, xm, unsigned } => {
-                // §2.3.2 — the governing predicate a sequential loop
-                // would compute, with wrap-around handled like the
-                // original sequential code. whilelt/whilelo produce a
-                // *prefix* predicate by construction, so the lane loop
-                // collapses to a count plus one word-parallel fill.
-                let lanes = esize.lanes(vlb);
-                let (a, b) = (self.state.get_x(xn), self.state.get_x(xm));
-                let count = if unsigned {
-                    if a >= b {
-                        0
-                    } else {
-                        // lanes stay active until the counter reaches b;
-                        // a wrapped counter compares below a and stops.
-                        ((b - a) as u128).min(lanes as u128) as usize
-                    }
-                } else {
-                    let (a, b) = (a as i64, b as i64);
-                    if a >= b {
-                        0
-                    } else {
-                        let remaining = (i64::MAX as i128) - (a as i128) + 1; // until wrap
-                        ((b as i128) - (a as i128)).min(remaining).min(lanes as i128) as usize
-                    }
-                };
-                let mut p = PredReg::default();
-                p.set_prefix(esize, count, vlb);
-                self.state.p[pd as usize] = p;
-                let mut all = PredReg::default();
-                all.set_all(esize, vlb);
-                self.state.flags = Flags::from_pred_result(&all, &p, esize, vlb);
-            }
-            Ptest { pg, pn } => {
-                let g = self.state.p[pg as usize];
-                let n = self.state.p[pn as usize];
-                // PTEST interprets at .b granularity
-                self.state.flags = Flags::from_pred_result(&g, &n.and(&g), Esize::B, vlb);
-            }
-            Pnext { pdn, pg, esize } => {
-                // §2.3.5 — next active element of pg after pdn's last.
-                let g = self.state.p[pg as usize];
-                let cur = self.state.p[pdn as usize];
-                let start = match cur.last_active(esize, vlb) {
-                    Some(i) => i + 1,
-                    None => 0,
-                };
-                let mut r = PredReg::default();
-                if let Some(i) = g.first_active_from(esize, start, vlb) {
-                    r.set_active(esize, i, true);
-                }
-                self.state.p[pdn as usize] = r;
-                self.state.flags = Flags::from_pred_result(&g, &r, esize, vlb);
-            }
-            Brk { pd, pg, pn, before, s } => {
-                // §2.3.4 — vector partitioning: the before-break (brkb)
-                // or up-to-and-including-break (brka) partition,
-                // B-granule, zeroing form: keep pg's lanes strictly
-                // before (brkb) / up to and including (brka) the first
-                // active break lane — one scan plus one mask.
-                let g = self.state.p[pg as usize];
-                let n = self.state.p[pn as usize];
-                let keep = match g.and(&n).first_active(Esize::B, vlb) {
-                    None => vlb,
-                    Some(k) => {
-                        if before {
-                            k
-                        } else {
-                            k + 1
-                        }
-                    }
-                };
-                let mut r = g;
-                r.clear_from(keep.min(vlb));
-                self.state.p[pd as usize] = r;
-                if s {
-                    self.state.flags = Flags::from_pred_result(&g, &r, Esize::B, vlb);
-                }
-            }
-            PredLogic { op, pd, pg, pn, pm, s } => {
-                // word-parallel: at .b granularity every bit is an
-                // element enable, so the lane loop is four u64 ops
-                let g = self.state.p[pg as usize];
-                let n = self.state.p[pn as usize];
-                let m = self.state.p[pm as usize];
-                let r = match op {
-                    PLogicOp::And => PredReg::combine(&n, &m, &g, vlb, |a, b| a & b),
-                    PLogicOp::Orr => PredReg::combine(&n, &m, &g, vlb, |a, b| a | b),
-                    PLogicOp::Eor => PredReg::combine(&n, &m, &g, vlb, |a, b| a ^ b),
-                    PLogicOp::Bic => PredReg::combine(&n, &m, &g, vlb, |a, b| a & !b),
-                };
-                self.state.p[pd as usize] = r;
-                if s {
-                    self.state.flags = Flags::from_pred_result(&g, &r, Esize::B, vlb);
-                }
-            }
-            Rdffr { pd, pg, s } => {
-                let f = self.state.ffr;
-                let r = match pg {
-                    Some(g) => f.and(&self.state.p[g as usize]),
-                    None => f,
-                };
-                self.state.p[pd as usize] = r;
-                if s {
-                    let g = match pg {
-                        Some(g) => self.state.p[g as usize],
-                        None => {
-                            let mut all = PredReg::default();
-                            all.set_all(Esize::B, vlb);
-                            all
-                        }
-                    };
-                    self.state.flags = Flags::from_pred_result(&g, &r, Esize::B, vlb);
-                }
-            }
-            Setffr => {
-                let mut f = PredReg::default();
-                f.set_all(Esize::B, vlb);
-                self.state.ffr = f;
-            }
-            Wrffr { pn } => self.state.ffr = self.state.p[pn as usize],
+        let mut p = PredReg::default();
+        p.set_all(esize, vlb);
+        self.state.p[pd as usize] = p;
+        if s {
+            // governing predicate of ptrue is itself
+            self.state.flags = Flags::from_pred_result(&p, &p, esize, vlb);
+        }
+    }
 
-            // ====================== counting ======================
-            Cnt { xd, esize } => {
-                self.state.set_x(xd, esize.lanes(vlb) as u64);
-            }
-            IncDec { xdn, esize, dec } => {
-                let d = esize.lanes(vlb) as u64;
-                let v = self.state.get_x(xdn);
-                self.state.set_x(xdn, if dec { v.wrapping_sub(d) } else { v.wrapping_add(d) });
-            }
-            IncpX { xdn, pm, esize } => {
-                let c = self.state.p[pm as usize].count_active(esize, vlb) as u64;
-                let v = self.state.get_x(xdn).wrapping_add(c);
-                self.state.set_x(xdn, v);
-            }
-            Index { zd, esize, base, step } => {
-                let b = self.ri(base);
-                let st = self.ri(step);
-                let z = &mut self.state.z[zd as usize];
-                for i in 0..esize.lanes(vlb) {
-                    z.set(esize, i, (b.wrapping_add(st.wrapping_mul(i as i64))) as u64);
-                }
-            }
+    pub(crate) fn sve_pfalse(&mut self, pd: u8) {
+        self.state.p[pd as usize].clear();
+    }
 
-            // ====================== data movement ======================
-            DupImm { zd, esize, imm } => {
-                let z = &mut self.state.z[zd as usize];
-                z.zero();
-                for i in 0..esize.lanes(vlb) {
-                    z.set(esize, i, imm as u64);
-                }
+    /// §2.3.2 — the governing predicate a sequential loop would compute,
+    /// with wrap-around handled like the original sequential code.
+    /// whilelt/whilelo produce a *prefix* predicate by construction, so
+    /// the lane loop collapses to a count plus one word-parallel fill.
+    pub(crate) fn sve_while(&mut self, pd: u8, esize: Esize, xn: u8, xm: u8, unsigned: bool) {
+        let vlb = self.state.vl_bytes();
+        let lanes = esize.lanes(vlb);
+        let (a, b) = (self.state.get_x(xn), self.state.get_x(xm));
+        let count = if unsigned {
+            if a >= b {
+                0
+            } else {
+                // lanes stay active until the counter reaches b;
+                // a wrapped counter compares below a and stops.
+                ((b - a) as u128).min(lanes as u128) as usize
             }
-            FdupImm { zd, dbl, bits } => {
-                let z = &mut self.state.z[zd as usize];
-                z.zero();
-                let e = if dbl { Esize::D } else { Esize::S };
-                for i in 0..e.lanes(vlb) {
-                    z.set(e, i, bits);
-                }
+        } else {
+            let (a, b) = (a as i64, b as i64);
+            if a >= b {
+                0
+            } else {
+                let remaining = (i64::MAX as i128) - (a as i128) + 1; // until wrap
+                ((b as i128) - (a as i128)).min(remaining).min(lanes as i128) as usize
             }
-            DupX { zd, esize, xn } => {
-                let v = self.state.get_x(xn);
-                let z = &mut self.state.z[zd as usize];
-                z.zero();
-                for i in 0..esize.lanes(vlb) {
-                    z.set(esize, i, v);
-                }
-            }
-            CpyX { zd, pg, xn, esize } => {
-                let v = self.state.get_x(xn);
-                let g = self.state.p[pg as usize];
-                let z = &mut self.state.z[zd as usize];
-                for i in 0..esize.lanes(vlb) {
-                    if g.active(esize, i) {
-                        z.set(esize, i, v);
-                    }
-                }
-            }
-            Sel { zd, pg, zn, zm, esize } => {
-                let g = self.state.p[pg as usize];
-                let (n, m) = (self.state.z[zn as usize], self.state.z[zm as usize]);
-                let z = &mut self.state.z[zd as usize];
-                for i in 0..esize.lanes(vlb) {
-                    let v = if g.active(esize, i) { n.get(esize, i) } else { m.get(esize, i) };
-                    z.set(esize, i, v);
-                }
-            }
-            Movprfx { zd, zn, pg } => {
-                let n = self.state.z[zn as usize];
-                match pg {
-                    None => self.state.z[zd as usize] = n,
-                    Some((g, zeroing)) => {
-                        let gp = self.state.p[g as usize];
-                        let z = &mut self.state.z[zd as usize];
-                        // byte-granule merging/zeroing copy
-                        for i in 0..vlb {
-                            if gp.active(Esize::B, i) {
-                                z.bytes[i] = n.bytes[i];
-                            } else if zeroing {
-                                z.bytes[i] = 0;
-                            }
-                        }
-                    }
-                }
-            }
-            Last { xd, pg, zn, esize, before } => {
-                let g = self.state.p[pg as usize];
-                let z = self.state.z[zn as usize];
-                let lanes = esize.lanes(vlb);
-                let idx = match (g.last_active(esize, vlb), before) {
-                    (Some(l), true) => l,                 // lastb
-                    (Some(l), false) => (l + 1) % lanes,  // lasta
-                    (None, true) => lanes - 1,
-                    (None, false) => 0,
-                };
-                self.state.set_x(xd, z.get(esize, idx));
-            }
+        };
+        let mut p = PredReg::default();
+        p.set_prefix(esize, count, vlb);
+        self.state.p[pd as usize] = p;
+        let mut all = PredReg::default();
+        all.set_all(esize, vlb);
+        self.state.flags = Flags::from_pred_result(&all, &p, esize, vlb);
+    }
 
-            // ====================== memory ======================
-            SveLd1 { zt, pg, esize, base, off, ff } => {
-                self.sve_ld1(zt, pg, esize, base, off, ff)?;
-            }
-            SveLd1R { zt, pg, esize, base, imm } => {
-                let addr = self.state.get_x(base).wrapping_add(imm as u64);
-                let g = self.state.p[pg as usize];
-                // load-and-broadcast (§4): one element load
-                let v = self.mem.read(addr, esize.bytes())?;
-                self.record_load(addr, esize.bytes() as u32);
-                let z = &mut self.state.z[zt as usize];
-                z.zero();
-                for i in 0..esize.lanes(vlb) {
-                    if g.active(esize, i) {
-                        z.set(esize, i, v);
-                    }
-                }
-            }
-            SveSt1 { zt, pg, esize, base, off } => {
-                let ebytes = esize.bytes();
-                let baddr = self.sve_contig_base(base, off, ebytes, vlb);
-                let g = self.state.p[pg as usize];
-                if let Some(k) = g.prefix_len(esize, vlb) {
-                    // dense-prefix fast path (ptrue/whilelt predicates):
-                    // the little-endian register image *is* the memory
-                    // image, so the store is one bulk copy per page
-                    if k > 0 {
-                        let total = k * ebytes;
-                        let zbytes = self.state.z[zt as usize].bytes;
-                        self.write_contig(baddr, &zbytes[..total])?;
-                        self.record_store(baddr, total as u32);
-                    }
-                } else {
-                    // sparse predicate: element-at-a-time semantics
-                    let z = self.state.z[zt as usize];
-                    let mut span: Option<(u64, u64)> = None;
-                    for i in 0..esize.lanes(vlb) {
-                        if g.active(esize, i) {
-                            let addr = baddr + (i * ebytes) as u64;
-                            self.mem.write(addr, ebytes, z.get(esize, i))?;
-                            span = Some(match span {
-                                None => (addr, addr + ebytes as u64),
-                                Some((lo, hi)) => (lo.min(addr), hi.max(addr + ebytes as u64)),
-                            });
-                        }
-                    }
-                    if let Some((lo, hi)) = span {
-                        self.record_store(lo, (hi - lo) as u32);
-                    }
-                }
-            }
-            SveLdGather { zt, pg, esize, addr, ff } => {
-                self.sve_gather(zt, pg, esize, addr, ff)?;
-            }
-            SveStScatter { zt, pg, esize, addr } => {
-                let g = self.state.p[pg as usize];
-                let z = self.state.z[zt as usize];
-                let ebytes = esize.bytes();
-                for i in 0..esize.lanes(vlb) {
-                    if g.active(esize, i) {
-                        let a = self.gather_ea(addr, esize, i);
-                        self.mem.write(a, ebytes, z.get(esize, i))?;
-                        self.record_store(a, ebytes as u32);
-                    }
-                }
-            }
+    pub(crate) fn sve_ptest(&mut self, pg: u8, pn: u8) {
+        let vlb = self.state.vl_bytes();
+        let g = self.state.p[pg as usize];
+        let n = self.state.p[pn as usize];
+        // PTEST interprets at .b granularity
+        self.state.flags = Flags::from_pred_result(&g, &n.and(&g), Esize::B, vlb);
+    }
 
-            // ====================== arithmetic ======================
-            SveIntBin { op, zdn, pg, zm, esize } => {
-                let g = self.state.p[pg as usize];
-                let m = self.state.z[zm as usize];
-                let z = &mut self.state.z[zdn as usize];
-                for i in 0..esize.lanes(vlb) {
-                    if g.active(esize, i) {
-                        let v = int_bin(op, esize, z.get(esize, i), m.get(esize, i));
-                        z.set(esize, i, v);
-                    }
-                }
-            }
-            SveIntBinU { op, zd, zn, zm, esize } => {
-                let (n, m) = (self.state.z[zn as usize], self.state.z[zm as usize]);
-                let z = &mut self.state.z[zd as usize];
-                for i in 0..esize.lanes(vlb) {
-                    z.set(esize, i, int_bin(op, esize, n.get(esize, i), m.get(esize, i)));
-                }
-            }
-            SveAddImm { zdn, esize, imm } => {
-                let z = &mut self.state.z[zdn as usize];
-                for i in 0..esize.lanes(vlb) {
-                    z.set(esize, i, z.get(esize, i).wrapping_add(imm));
-                }
-            }
-            SveFpBin { op, zdn, pg, zm, dbl } => {
-                let g = self.state.p[pg as usize];
-                let m = self.state.z[zm as usize];
-                let z = &mut self.state.z[zdn as usize];
-                if dbl {
-                    for i in 0..Esize::D.lanes(vlb) {
-                        if g.active(Esize::D, i) {
-                            z.set_f64(i, fp_bin(op, z.get_f64(i), m.get_f64(i)));
-                        }
-                    }
-                } else {
-                    for i in 0..Esize::S.lanes(vlb) {
-                        if g.active(Esize::S, i) {
-                            z.set_f32(i, fp_bin32(op, z.get_f32(i), m.get_f32(i)));
-                        }
-                    }
-                }
-            }
-            SveFpUn { op, zd, pg, zn, dbl } => {
-                let g = self.state.p[pg as usize];
-                let n = self.state.z[zn as usize];
-                let z = &mut self.state.z[zd as usize];
-                if dbl {
-                    for i in 0..Esize::D.lanes(vlb) {
-                        if g.active(Esize::D, i) {
-                            z.set_f64(i, fp_un(op, n.get_f64(i)));
-                        }
-                    }
-                } else {
-                    for i in 0..Esize::S.lanes(vlb) {
-                        if g.active(Esize::S, i) {
-                            z.set_f32(i, fp_un32(op, n.get_f32(i)));
-                        }
-                    }
-                }
-            }
-            SveFmla { zda, pg, zn, zm, dbl, sub } => {
-                let g = self.state.p[pg as usize];
-                let (n, m) = (self.state.z[zn as usize], self.state.z[zm as usize]);
-                let z = &mut self.state.z[zda as usize];
-                if dbl {
-                    for i in 0..Esize::D.lanes(vlb) {
-                        if g.active(Esize::D, i) {
-                            let p = n.get_f64(i) * m.get_f64(i);
-                            let p = if sub { -p } else { p };
-                            z.set_f64(i, z.get_f64(i) + p);
-                        }
-                    }
-                } else {
-                    for i in 0..Esize::S.lanes(vlb) {
-                        if g.active(Esize::S, i) {
-                            let p = n.get_f32(i) * m.get_f32(i);
-                            let p = if sub { -p } else { p };
-                            z.set_f32(i, z.get_f32(i) + p);
-                        }
-                    }
-                }
-            }
-            SveScvtf { zd, pg, zn, dbl } => {
-                let g = self.state.p[pg as usize];
-                let n = self.state.z[zn as usize];
-                let z = &mut self.state.z[zd as usize];
-                if dbl {
-                    for i in 0..Esize::D.lanes(vlb) {
-                        if g.active(Esize::D, i) {
-                            z.set_f64(i, n.get_signed(Esize::D, i) as f64);
-                        }
-                    }
-                } else {
-                    for i in 0..Esize::S.lanes(vlb) {
-                        if g.active(Esize::S, i) {
-                            z.set_f32(i, n.get_signed(Esize::S, i) as f32);
-                        }
-                    }
-                }
-            }
+    /// §2.3.5 — next active element of pg after pdn's last.
+    pub(crate) fn sve_pnext(&mut self, pdn: u8, pg: u8, esize: Esize) {
+        let vlb = self.state.vl_bytes();
+        let g = self.state.p[pg as usize];
+        let cur = self.state.p[pdn as usize];
+        let start = match cur.last_active(esize, vlb) {
+            Some(i) => i + 1,
+            None => 0,
+        };
+        let mut r = PredReg::default();
+        if let Some(i) = g.first_active_from(esize, start, vlb) {
+            r.set_active(esize, i, true);
+        }
+        self.state.p[pdn as usize] = r;
+        self.state.flags = Flags::from_pred_result(&g, &r, esize, vlb);
+    }
 
-            // ====================== compares ======================
-            SveIntCmp { op, unsigned, pd, pg, zn, rhs, esize } => {
-                let g = self.state.p[pg as usize];
-                let n = self.state.z[zn as usize];
-                let mut r = PredReg::default();
-                for i in 0..esize.lanes(vlb) {
-                    if g.active(esize, i) {
-                        let t = match rhs {
-                            ZmOrImm::Z(zm) => {
-                                let m = self.state.z[zm as usize];
-                                if unsigned {
-                                    icmp_unsigned(op, n.get(esize, i), m.get(esize, i))
-                                } else {
-                                    icmp_signed(op, n.get_signed(esize, i), m.get_signed(esize, i))
-                                }
-                            }
-                            ZmOrImm::Imm(imm) => {
-                                if unsigned {
-                                    icmp_unsigned(op, n.get(esize, i), imm as u64)
-                                } else {
-                                    icmp_signed(op, n.get_signed(esize, i), imm)
-                                }
-                            }
-                        };
-                        r.set_active(esize, i, t);
-                    }
-                }
-                self.state.p[pd as usize] = r;
-                self.state.flags = Flags::from_pred_result(&g, &r, esize, vlb);
-            }
-            SveFpCmp { op, pd, pg, zn, rhs, dbl } => {
-                let g = self.state.p[pg as usize];
-                let n = self.state.z[zn as usize];
-                let e = if dbl { Esize::D } else { Esize::S };
-                let mut r = PredReg::default();
-                for i in 0..e.lanes(vlb) {
-                    if g.active(e, i) {
-                        let a = if dbl { n.get_f64(i) } else { n.get_f32(i) as f64 };
-                        let b = match rhs {
-                            Some(zm) => {
-                                let m = self.state.z[zm as usize];
-                                if dbl {
-                                    m.get_f64(i)
-                                } else {
-                                    m.get_f32(i) as f64
-                                }
-                            }
-                            None => 0.0,
-                        };
-                        r.set_active(e, i, fcmp(op, a, b));
-                    }
-                }
-                self.state.p[pd as usize] = r;
-                self.state.flags = Flags::from_pred_result(&g, &r, e, vlb);
-            }
-
-            // ====================== horizontal (§2.4) ======================
-            SveReduce { op, vd, pg, zn, esize } => {
-                let g = self.state.p[pg as usize];
-                let n = self.state.z[zn as usize];
-                let lanes = esize.lanes(vlb);
-                match op {
-                    RedOp::FAddV | RedOp::FMaxV | RedOp::FMinV => {
-                        // recursive pairwise tree over the full vector with
-                        // identity at inactive lanes
-                        let dbl = esize == Esize::D;
-                        let ident = match op {
-                            RedOp::FAddV => 0.0f64,
-                            RedOp::FMaxV => f64::NEG_INFINITY,
-                            RedOp::FMinV => f64::INFINITY,
-                            _ => unreachable!(),
-                        };
-                        let mut buf: Vec<f64> = (0..lanes)
-                            .map(|i| {
-                                if g.active(esize, i) {
-                                    if dbl {
-                                        n.get_f64(i)
-                                    } else {
-                                        n.get_f32(i) as f64
-                                    }
-                                } else {
-                                    ident
-                                }
-                            })
-                            .collect();
-                        let mut width = lanes;
-                        while width > 1 {
-                            let half = width / 2;
-                            for i in 0..half {
-                                buf[i] = match op {
-                                    RedOp::FAddV => buf[i] + buf[i + half],
-                                    RedOp::FMaxV => buf[i].max(buf[i + half]),
-                                    RedOp::FMinV => buf[i].min(buf[i + half]),
-                                    _ => unreachable!(),
-                                };
-                            }
-                            width = half;
-                        }
-                        if dbl {
-                            self.state.set_d(vd, buf[0]);
-                        } else {
-                            self.state.set_s(vd, buf[0] as f32);
-                        }
-                    }
-                    RedOp::EorV | RedOp::OrV | RedOp::AndV | RedOp::UAddV | RedOp::SMaxV => {
-                        let mut acc: u64 = match op {
-                            RedOp::EorV | RedOp::OrV | RedOp::UAddV => 0,
-                            RedOp::AndV => u64::MAX,
-                            RedOp::SMaxV => i64::MIN as u64,
-                            _ => unreachable!(),
-                        };
-                        for i in 0..lanes {
-                            if g.active(esize, i) {
-                                let v = n.get(esize, i);
-                                acc = match op {
-                                    RedOp::EorV => acc ^ v,
-                                    RedOp::OrV => acc | v,
-                                    RedOp::AndV => acc & v,
-                                    RedOp::UAddV => acc.wrapping_add(v),
-                                    RedOp::SMaxV => {
-                                        (acc as i64).max(n.get_signed(esize, i)) as u64
-                                    }
-                                    _ => unreachable!(),
-                                };
-                            }
-                        }
-                        let z = &mut self.state.z[vd as usize];
-                        z.zero();
-                        z.set(Esize::D, 0, acc);
-                    }
-                }
-            }
-            SveFadda { vdn, pg, zm, dbl } => {
-                // strictly-ordered accumulation (§3.3): scalar dest,
-                // element order = implicit predicate order
-                let g = self.state.p[pg as usize];
-                let m = self.state.z[zm as usize];
-                if dbl {
-                    let mut acc = self.state.get_d(vdn);
-                    for i in 0..Esize::D.lanes(vlb) {
-                        if g.active(Esize::D, i) {
-                            acc += m.get_f64(i);
-                        }
-                    }
-                    self.state.set_d(vdn, acc);
+    /// §2.3.4 — vector partitioning: the before-break (brkb) or
+    /// up-to-and-including-break (brka) partition, B-granule, zeroing
+    /// form: keep pg's lanes strictly before (brkb) / up to and
+    /// including (brka) the first active break lane — one scan plus one
+    /// mask.
+    pub(crate) fn sve_brk(&mut self, pd: u8, pg: u8, pn: u8, before: bool, s: bool) {
+        let vlb = self.state.vl_bytes();
+        let g = self.state.p[pg as usize];
+        let n = self.state.p[pn as usize];
+        let keep = match g.and(&n).first_active(Esize::B, vlb) {
+            None => vlb,
+            Some(k) => {
+                if before {
+                    k
                 } else {
-                    let mut acc = self.state.get_s(vdn);
-                    for i in 0..Esize::S.lanes(vlb) {
-                        if g.active(Esize::S, i) {
-                            acc += m.get_f32(i);
-                        }
-                    }
-                    self.state.set_s(vdn, acc);
+                    k + 1
                 }
             }
+        };
+        let mut r = g;
+        r.clear_from(keep.min(vlb));
+        self.state.p[pd as usize] = r;
+        if s {
+            self.state.flags = Flags::from_pred_result(&g, &r, Esize::B, vlb);
+        }
+    }
 
-            // ====================== permutes ======================
-            SveRev { zd, zn, esize } => {
-                let n = self.state.z[zn as usize];
-                let lanes = esize.lanes(vlb);
-                let z = &mut self.state.z[zd as usize];
-                for i in 0..lanes {
-                    z.set(esize, i, n.get(esize, lanes - 1 - i));
+    /// Word-parallel: at .b granularity every bit is an element enable,
+    /// so the lane loop is four u64 ops.
+    pub(crate) fn sve_pred_logic(&mut self, op: PLogicOp, pd: u8, pg: u8, pn: u8, pm: u8, s: bool) {
+        let vlb = self.state.vl_bytes();
+        let g = self.state.p[pg as usize];
+        let n = self.state.p[pn as usize];
+        let m = self.state.p[pm as usize];
+        let r = match op {
+            PLogicOp::And => PredReg::combine(&n, &m, &g, vlb, |a, b| a & b),
+            PLogicOp::Orr => PredReg::combine(&n, &m, &g, vlb, |a, b| a | b),
+            PLogicOp::Eor => PredReg::combine(&n, &m, &g, vlb, |a, b| a ^ b),
+            PLogicOp::Bic => PredReg::combine(&n, &m, &g, vlb, |a, b| a & !b),
+        };
+        self.state.p[pd as usize] = r;
+        if s {
+            self.state.flags = Flags::from_pred_result(&g, &r, Esize::B, vlb);
+        }
+    }
+
+    pub(crate) fn sve_rdffr(&mut self, pd: u8, pg: Option<u8>, s: bool) {
+        let vlb = self.state.vl_bytes();
+        let f = self.state.ffr;
+        let r = match pg {
+            Some(g) => f.and(&self.state.p[g as usize]),
+            None => f,
+        };
+        self.state.p[pd as usize] = r;
+        if s {
+            let g = match pg {
+                Some(g) => self.state.p[g as usize],
+                None => {
+                    let mut all = PredReg::default();
+                    all.set_all(Esize::B, vlb);
+                    all
                 }
+            };
+            self.state.flags = Flags::from_pred_result(&g, &r, Esize::B, vlb);
+        }
+    }
+
+    pub(crate) fn sve_setffr(&mut self) {
+        let vlb = self.state.vl_bytes();
+        let mut f = PredReg::default();
+        f.set_all(Esize::B, vlb);
+        self.state.ffr = f;
+    }
+
+    pub(crate) fn sve_wrffr(&mut self, pn: u8) {
+        self.state.ffr = self.state.p[pn as usize];
+    }
+
+    // ====================== counting ======================
+
+    pub(crate) fn sve_cnt(&mut self, xd: u8, esize: Esize) {
+        let vlb = self.state.vl_bytes();
+        self.state.set_x(xd, esize.lanes(vlb) as u64);
+    }
+
+    pub(crate) fn sve_inc_dec(&mut self, xdn: u8, esize: Esize, dec: bool) {
+        let vlb = self.state.vl_bytes();
+        let d = esize.lanes(vlb) as u64;
+        let v = self.state.get_x(xdn);
+        self.state.set_x(xdn, if dec { v.wrapping_sub(d) } else { v.wrapping_add(d) });
+    }
+
+    pub(crate) fn sve_incp(&mut self, xdn: u8, pm: u8, esize: Esize) {
+        let vlb = self.state.vl_bytes();
+        let c = self.state.p[pm as usize].count_active(esize, vlb) as u64;
+        let v = self.state.get_x(xdn).wrapping_add(c);
+        self.state.set_x(xdn, v);
+    }
+
+    pub(crate) fn sve_index(&mut self, zd: u8, esize: Esize, base: RegOrImm, step: RegOrImm) {
+        let vlb = self.state.vl_bytes();
+        let b = self.ri(base);
+        let st = self.ri(step);
+        let z = &mut self.state.z[zd as usize];
+        for i in 0..esize.lanes(vlb) {
+            z.set(esize, i, (b.wrapping_add(st.wrapping_mul(i as i64))) as u64);
+        }
+    }
+
+    // ====================== data movement ======================
+
+    pub(crate) fn sve_dup_imm(&mut self, zd: u8, esize: Esize, imm: i64) {
+        let vlb = self.state.vl_bytes();
+        let z = &mut self.state.z[zd as usize];
+        z.zero();
+        for i in 0..esize.lanes(vlb) {
+            z.set(esize, i, imm as u64);
+        }
+    }
+
+    pub(crate) fn sve_fdup(&mut self, zd: u8, dbl: bool, bits: u64) {
+        let vlb = self.state.vl_bytes();
+        let z = &mut self.state.z[zd as usize];
+        z.zero();
+        let e = if dbl { Esize::D } else { Esize::S };
+        for i in 0..e.lanes(vlb) {
+            z.set(e, i, bits);
+        }
+    }
+
+    pub(crate) fn sve_dup_x(&mut self, zd: u8, esize: Esize, xn: u8) {
+        let vlb = self.state.vl_bytes();
+        let v = self.state.get_x(xn);
+        let z = &mut self.state.z[zd as usize];
+        z.zero();
+        for i in 0..esize.lanes(vlb) {
+            z.set(esize, i, v);
+        }
+    }
+
+    pub(crate) fn sve_cpy_x(&mut self, zd: u8, pg: u8, xn: u8, esize: Esize) {
+        let vlb = self.state.vl_bytes();
+        let v = self.state.get_x(xn);
+        let g = self.state.p[pg as usize];
+        let z = &mut self.state.z[zd as usize];
+        for i in 0..esize.lanes(vlb) {
+            if g.active(esize, i) {
+                z.set(esize, i, v);
             }
-            SveExt { zdn, zm, imm } => {
-                let a = self.state.z[zdn as usize];
-                let b = self.state.z[zm as usize];
-                let z = &mut self.state.z[zdn as usize];
+        }
+    }
+
+    pub(crate) fn sve_sel(&mut self, zd: u8, pg: u8, zn: u8, zm: u8, esize: Esize) {
+        let vlb = self.state.vl_bytes();
+        let g = self.state.p[pg as usize];
+        let (n, m) = (self.state.z[zn as usize], self.state.z[zm as usize]);
+        let z = &mut self.state.z[zd as usize];
+        for i in 0..esize.lanes(vlb) {
+            let v = if g.active(esize, i) { n.get(esize, i) } else { m.get(esize, i) };
+            z.set(esize, i, v);
+        }
+    }
+
+    pub(crate) fn sve_movprfx(&mut self, zd: u8, zn: u8, pg: Option<(u8, bool)>) {
+        let vlb = self.state.vl_bytes();
+        let n = self.state.z[zn as usize];
+        match pg {
+            None => self.state.z[zd as usize] = n,
+            Some((g, zeroing)) => {
+                let gp = self.state.p[g as usize];
+                let z = &mut self.state.z[zd as usize];
+                // byte-granule merging/zeroing copy
                 for i in 0..vlb {
-                    let src = i + imm as usize;
-                    z.bytes[i] = if src < vlb { a.bytes[src] } else { b.bytes[src - vlb] };
-                }
-            }
-            SveZip { zd, zn, zm, esize, hi } => {
-                let (n, m) = (self.state.z[zn as usize], self.state.z[zm as usize]);
-                let lanes = esize.lanes(vlb);
-                let half = lanes / 2;
-                let base = if hi { half } else { 0 };
-                let z = &mut self.state.z[zd as usize];
-                for i in 0..half {
-                    z.set(esize, 2 * i, n.get(esize, base + i));
-                    z.set(esize, 2 * i + 1, m.get(esize, base + i));
-                }
-            }
-            SveUzp { zd, zn, zm, esize, odd } => {
-                let (n, m) = (self.state.z[zn as usize], self.state.z[zm as usize]);
-                let lanes = esize.lanes(vlb);
-                let half = lanes / 2;
-                let off = odd as usize;
-                let z = &mut self.state.z[zd as usize];
-                for i in 0..half {
-                    z.set(esize, i, n.get(esize, 2 * i + off));
-                    z.set(esize, half + i, m.get(esize, 2 * i + off));
-                }
-            }
-            SveTrn { zd, zn, zm, esize, odd } => {
-                let (n, m) = (self.state.z[zn as usize], self.state.z[zm as usize]);
-                let lanes = esize.lanes(vlb);
-                let off = odd as usize;
-                let z = &mut self.state.z[zd as usize];
-                for i in 0..lanes / 2 {
-                    z.set(esize, 2 * i, n.get(esize, 2 * i + off));
-                    z.set(esize, 2 * i + 1, m.get(esize, 2 * i + off));
-                }
-            }
-            SveTbl { zd, zn, zm, esize } => {
-                let (n, m) = (self.state.z[zn as usize], self.state.z[zm as usize]);
-                let lanes = esize.lanes(vlb);
-                let z = &mut self.state.z[zd as usize];
-                for i in 0..lanes {
-                    let idx = m.get(esize, i) as usize;
-                    z.set(esize, i, if idx < lanes { n.get(esize, idx) } else { 0 });
-                }
-            }
-            SveCompact { zd, pg, zn, esize } => {
-                let g = self.state.p[pg as usize];
-                let n = self.state.z[zn as usize];
-                let lanes = esize.lanes(vlb);
-                let z = &mut self.state.z[zd as usize];
-                let mut k = 0;
-                let vals: Vec<u64> = (0..lanes)
-                    .filter(|&i| g.active(esize, i))
-                    .map(|i| n.get(esize, i))
-                    .collect();
-                for i in 0..lanes {
-                    z.set(esize, i, 0);
-                }
-                for v in vals {
-                    z.set(esize, k, v);
-                    k += 1;
-                }
-            }
-            SveSplice { zdn, pg, zm, esize } => {
-                let g = self.state.p[pg as usize];
-                let a = self.state.z[zdn as usize];
-                let b = self.state.z[zm as usize];
-                let lanes = esize.lanes(vlb);
-                let z = &mut self.state.z[zdn as usize];
-                let mut out: Vec<u64> = vec![];
-                if let (Some(f), Some(l)) =
-                    (g.first_active(esize, vlb), g.last_active(esize, vlb))
-                {
-                    for i in f..=l {
-                        out.push(a.get(esize, i));
+                    if gp.active(Esize::B, i) {
+                        z.bytes[i] = n.bytes[i];
+                    } else if zeroing {
+                        z.bytes[i] = 0;
                     }
                 }
-                let mut bi = 0;
-                while out.len() < lanes {
-                    out.push(b.get(esize, bi));
-                    bi += 1;
-                }
-                for (i, v) in out.into_iter().enumerate() {
-                    z.set(esize, i, v);
-                }
             }
+        }
+    }
 
-            // ====================== termination ======================
-            Cterm { xn, xm, ne } => {
-                // CTERMEQ/CTERMNE (§2.3.5): if the termination condition
-                // holds, N=1 V=0 (b.tcont fails); otherwise N=0 and
-                // V = !C, so b.tcont (GE) continues iff C was set (the
-                // preceding pnext's "not last" state).
-                let term = if ne {
-                    self.state.get_x(xn) != self.state.get_x(xm)
-                } else {
-                    self.state.get_x(xn) == self.state.get_x(xm)
-                };
-                let c = self.state.flags.c;
-                self.state.flags = if term {
-                    Flags { n: true, z: false, c, v: false }
-                } else {
-                    Flags { n: false, z: false, c, v: !c }
-                };
+    pub(crate) fn sve_last(&mut self, xd: u8, pg: u8, zn: u8, esize: Esize, before: bool) {
+        let vlb = self.state.vl_bytes();
+        let g = self.state.p[pg as usize];
+        let z = self.state.z[zn as usize];
+        let lanes = esize.lanes(vlb);
+        let idx = match (g.last_active(esize, vlb), before) {
+            (Some(l), true) => l,                // lastb
+            (Some(l), false) => (l + 1) % lanes, // lasta
+            (None, true) => lanes - 1,
+            (None, false) => 0,
+        };
+        self.state.set_x(xd, z.get(esize, idx));
+    }
+
+    // ====================== memory ======================
+
+    /// ld1r<esize> — load-and-broadcast (§4): one element load.
+    pub(crate) fn sve_ld1r(
+        &mut self,
+        zt: u8,
+        pg: u8,
+        esize: Esize,
+        base: u8,
+        imm: i64,
+    ) -> ExecResult {
+        let vlb = self.state.vl_bytes();
+        let addr = self.state.get_x(base).wrapping_add(imm as u64);
+        let g = self.state.p[pg as usize];
+        let v = self.mem.read(addr, esize.bytes())?;
+        self.record_load(addr, esize.bytes() as u32);
+        let z = &mut self.state.z[zt as usize];
+        z.zero();
+        for i in 0..esize.lanes(vlb) {
+            if g.active(esize, i) {
+                z.set(esize, i, v);
             }
-            _ => unreachable!("non-SVE inst routed to exec_sve: {inst:?}"),
         }
         Ok(())
     }
+
+    /// Contiguous predicated store.
+    pub(crate) fn sve_st1(
+        &mut self,
+        zt: u8,
+        pg: u8,
+        esize: Esize,
+        base: u8,
+        off: SveMemOff,
+    ) -> ExecResult {
+        let vlb = self.state.vl_bytes();
+        let ebytes = esize.bytes();
+        let baddr = self.sve_contig_base(base, off, ebytes, vlb);
+        let g = self.state.p[pg as usize];
+        if let Some(k) = g.prefix_len(esize, vlb) {
+            // dense-prefix fast path (ptrue/whilelt predicates): the
+            // little-endian register image *is* the memory image, so the
+            // store is one bulk copy per page
+            if k > 0 {
+                let total = k * ebytes;
+                let zbytes = self.state.z[zt as usize].bytes;
+                self.write_contig(baddr, &zbytes[..total])?;
+                self.record_store(baddr, total as u32);
+            }
+        } else {
+            // sparse predicate: element-at-a-time semantics
+            let z = self.state.z[zt as usize];
+            let mut span: Option<(u64, u64)> = None;
+            for i in 0..esize.lanes(vlb) {
+                if g.active(esize, i) {
+                    let addr = baddr + (i * ebytes) as u64;
+                    self.mem.write(addr, ebytes, z.get(esize, i))?;
+                    span = Some(match span {
+                        None => (addr, addr + ebytes as u64),
+                        Some((lo, hi)) => (lo.min(addr), hi.max(addr + ebytes as u64)),
+                    });
+                }
+            }
+            if let Some((lo, hi)) = span {
+                self.record_store(lo, (hi - lo) as u32);
+            }
+        }
+        Ok(())
+    }
+
+    /// Scatter store: one element access per active lane (cracked, §4).
+    pub(crate) fn sve_scatter(
+        &mut self,
+        zt: u8,
+        pg: u8,
+        esize: Esize,
+        addr: GatherAddr,
+    ) -> ExecResult {
+        let vlb = self.state.vl_bytes();
+        let g = self.state.p[pg as usize];
+        let z = self.state.z[zt as usize];
+        let ebytes = esize.bytes();
+        for i in 0..esize.lanes(vlb) {
+            if g.active(esize, i) {
+                let a = self.gather_ea(addr, esize, i);
+                self.mem.write(a, ebytes, z.get(esize, i))?;
+                self.record_store(a, ebytes as u32);
+            }
+        }
+        Ok(())
+    }
+
+    // ====================== arithmetic ======================
+
+    pub(crate) fn sve_int_bin(&mut self, op: IntOp, zdn: u8, pg: u8, zm: u8, esize: Esize) {
+        let vlb = self.state.vl_bytes();
+        let g = self.state.p[pg as usize];
+        let m = self.state.z[zm as usize];
+        let z = &mut self.state.z[zdn as usize];
+        for i in 0..esize.lanes(vlb) {
+            if g.active(esize, i) {
+                let v = int_bin(op, esize, z.get(esize, i), m.get(esize, i));
+                z.set(esize, i, v);
+            }
+        }
+    }
+
+    pub(crate) fn sve_int_bin_u(&mut self, op: IntOp, zd: u8, zn: u8, zm: u8, esize: Esize) {
+        let vlb = self.state.vl_bytes();
+        let (n, m) = (self.state.z[zn as usize], self.state.z[zm as usize]);
+        let z = &mut self.state.z[zd as usize];
+        for i in 0..esize.lanes(vlb) {
+            z.set(esize, i, int_bin(op, esize, n.get(esize, i), m.get(esize, i)));
+        }
+    }
+
+    pub(crate) fn sve_add_imm(&mut self, zdn: u8, esize: Esize, imm: u64) {
+        let vlb = self.state.vl_bytes();
+        let z = &mut self.state.z[zdn as usize];
+        for i in 0..esize.lanes(vlb) {
+            z.set(esize, i, z.get(esize, i).wrapping_add(imm));
+        }
+    }
+
+    pub(crate) fn sve_fp_bin(&mut self, op: FpOp, zdn: u8, pg: u8, zm: u8, dbl: bool) {
+        let vlb = self.state.vl_bytes();
+        let g = self.state.p[pg as usize];
+        let m = self.state.z[zm as usize];
+        let z = &mut self.state.z[zdn as usize];
+        if dbl {
+            for i in 0..Esize::D.lanes(vlb) {
+                if g.active(Esize::D, i) {
+                    z.set_f64(i, fp_bin(op, z.get_f64(i), m.get_f64(i)));
+                }
+            }
+        } else {
+            for i in 0..Esize::S.lanes(vlb) {
+                if g.active(Esize::S, i) {
+                    z.set_f32(i, fp_bin32(op, z.get_f32(i), m.get_f32(i)));
+                }
+            }
+        }
+    }
+
+    pub(crate) fn sve_fp_un(&mut self, op: FpUnOp, zd: u8, pg: u8, zn: u8, dbl: bool) {
+        let vlb = self.state.vl_bytes();
+        let g = self.state.p[pg as usize];
+        let n = self.state.z[zn as usize];
+        let z = &mut self.state.z[zd as usize];
+        if dbl {
+            for i in 0..Esize::D.lanes(vlb) {
+                if g.active(Esize::D, i) {
+                    z.set_f64(i, fp_un(op, n.get_f64(i)));
+                }
+            }
+        } else {
+            for i in 0..Esize::S.lanes(vlb) {
+                if g.active(Esize::S, i) {
+                    z.set_f32(i, fp_un32(op, n.get_f32(i)));
+                }
+            }
+        }
+    }
+
+    pub(crate) fn sve_fmla(&mut self, zda: u8, pg: u8, zn: u8, zm: u8, dbl: bool, sub: bool) {
+        let vlb = self.state.vl_bytes();
+        let g = self.state.p[pg as usize];
+        let (n, m) = (self.state.z[zn as usize], self.state.z[zm as usize]);
+        let z = &mut self.state.z[zda as usize];
+        if dbl {
+            for i in 0..Esize::D.lanes(vlb) {
+                if g.active(Esize::D, i) {
+                    let p = n.get_f64(i) * m.get_f64(i);
+                    let p = if sub { -p } else { p };
+                    z.set_f64(i, z.get_f64(i) + p);
+                }
+            }
+        } else {
+            for i in 0..Esize::S.lanes(vlb) {
+                if g.active(Esize::S, i) {
+                    let p = n.get_f32(i) * m.get_f32(i);
+                    let p = if sub { -p } else { p };
+                    z.set_f32(i, z.get_f32(i) + p);
+                }
+            }
+        }
+    }
+
+    pub(crate) fn sve_scvtf(&mut self, zd: u8, pg: u8, zn: u8, dbl: bool) {
+        let vlb = self.state.vl_bytes();
+        let g = self.state.p[pg as usize];
+        let n = self.state.z[zn as usize];
+        let z = &mut self.state.z[zd as usize];
+        if dbl {
+            for i in 0..Esize::D.lanes(vlb) {
+                if g.active(Esize::D, i) {
+                    z.set_f64(i, n.get_signed(Esize::D, i) as f64);
+                }
+            }
+        } else {
+            for i in 0..Esize::S.lanes(vlb) {
+                if g.active(Esize::S, i) {
+                    z.set_f32(i, n.get_signed(Esize::S, i) as f32);
+                }
+            }
+        }
+    }
+
+    // ====================== compares ======================
+
+    #[allow(clippy::too_many_arguments)] // one operand bundle per compare shape
+    pub(crate) fn sve_int_cmp(
+        &mut self,
+        op: CmpOp,
+        unsigned: bool,
+        pd: u8,
+        pg: u8,
+        zn: u8,
+        rhs: ZmOrImm,
+        esize: Esize,
+    ) {
+        let vlb = self.state.vl_bytes();
+        let g = self.state.p[pg as usize];
+        let n = self.state.z[zn as usize];
+        let mut r = PredReg::default();
+        for i in 0..esize.lanes(vlb) {
+            if g.active(esize, i) {
+                let t = match rhs {
+                    ZmOrImm::Z(zm) => {
+                        let m = self.state.z[zm as usize];
+                        if unsigned {
+                            icmp_unsigned(op, n.get(esize, i), m.get(esize, i))
+                        } else {
+                            icmp_signed(op, n.get_signed(esize, i), m.get_signed(esize, i))
+                        }
+                    }
+                    ZmOrImm::Imm(imm) => {
+                        if unsigned {
+                            icmp_unsigned(op, n.get(esize, i), imm as u64)
+                        } else {
+                            icmp_signed(op, n.get_signed(esize, i), imm)
+                        }
+                    }
+                };
+                r.set_active(esize, i, t);
+            }
+        }
+        self.state.p[pd as usize] = r;
+        self.state.flags = Flags::from_pred_result(&g, &r, esize, vlb);
+    }
+
+    /// FP compare against vector or #0.0 (rhs None).
+    pub(crate) fn sve_fp_cmp(
+        &mut self,
+        op: CmpOp,
+        pd: u8,
+        pg: u8,
+        zn: u8,
+        rhs: Option<u8>,
+        dbl: bool,
+    ) {
+        let vlb = self.state.vl_bytes();
+        let g = self.state.p[pg as usize];
+        let n = self.state.z[zn as usize];
+        let e = if dbl { Esize::D } else { Esize::S };
+        let mut r = PredReg::default();
+        for i in 0..e.lanes(vlb) {
+            if g.active(e, i) {
+                let a = if dbl { n.get_f64(i) } else { n.get_f32(i) as f64 };
+                let b = match rhs {
+                    Some(zm) => {
+                        let m = self.state.z[zm as usize];
+                        if dbl {
+                            m.get_f64(i)
+                        } else {
+                            m.get_f32(i) as f64
+                        }
+                    }
+                    None => 0.0,
+                };
+                r.set_active(e, i, fcmp(op, a, b));
+            }
+        }
+        self.state.p[pd as usize] = r;
+        self.state.flags = Flags::from_pred_result(&g, &r, e, vlb);
+    }
+
+    // ====================== horizontal (§2.4) ======================
+
+    pub(crate) fn sve_reduce(&mut self, op: RedOp, vd: u8, pg: u8, zn: u8, esize: Esize) {
+        let vlb = self.state.vl_bytes();
+        let g = self.state.p[pg as usize];
+        let n = self.state.z[zn as usize];
+        let lanes = esize.lanes(vlb);
+        match op {
+            RedOp::FAddV | RedOp::FMaxV | RedOp::FMinV => {
+                // recursive pairwise tree over the full vector with
+                // identity at inactive lanes
+                let dbl = esize == Esize::D;
+                let ident = match op {
+                    RedOp::FAddV => 0.0f64,
+                    RedOp::FMaxV => f64::NEG_INFINITY,
+                    RedOp::FMinV => f64::INFINITY,
+                    _ => unreachable!(),
+                };
+                let mut buf: Vec<f64> = (0..lanes)
+                    .map(|i| {
+                        if g.active(esize, i) {
+                            if dbl {
+                                n.get_f64(i)
+                            } else {
+                                n.get_f32(i) as f64
+                            }
+                        } else {
+                            ident
+                        }
+                    })
+                    .collect();
+                let mut width = lanes;
+                while width > 1 {
+                    let half = width / 2;
+                    for i in 0..half {
+                        buf[i] = match op {
+                            RedOp::FAddV => buf[i] + buf[i + half],
+                            RedOp::FMaxV => buf[i].max(buf[i + half]),
+                            RedOp::FMinV => buf[i].min(buf[i + half]),
+                            _ => unreachable!(),
+                        };
+                    }
+                    width = half;
+                }
+                if dbl {
+                    self.state.set_d(vd, buf[0]);
+                } else {
+                    self.state.set_s(vd, buf[0] as f32);
+                }
+            }
+            RedOp::EorV | RedOp::OrV | RedOp::AndV | RedOp::UAddV | RedOp::SMaxV => {
+                let mut acc: u64 = match op {
+                    RedOp::EorV | RedOp::OrV | RedOp::UAddV => 0,
+                    RedOp::AndV => u64::MAX,
+                    RedOp::SMaxV => i64::MIN as u64,
+                    _ => unreachable!(),
+                };
+                for i in 0..lanes {
+                    if g.active(esize, i) {
+                        let v = n.get(esize, i);
+                        acc = match op {
+                            RedOp::EorV => acc ^ v,
+                            RedOp::OrV => acc | v,
+                            RedOp::AndV => acc & v,
+                            RedOp::UAddV => acc.wrapping_add(v),
+                            RedOp::SMaxV => (acc as i64).max(n.get_signed(esize, i)) as u64,
+                            _ => unreachable!(),
+                        };
+                    }
+                }
+                let z = &mut self.state.z[vd as usize];
+                z.zero();
+                z.set(Esize::D, 0, acc);
+            }
+        }
+    }
+
+    /// Strictly-ordered accumulation (§3.3): scalar dest, element order
+    /// = implicit predicate order.
+    pub(crate) fn sve_fadda(&mut self, vdn: u8, pg: u8, zm: u8, dbl: bool) {
+        let vlb = self.state.vl_bytes();
+        let g = self.state.p[pg as usize];
+        let m = self.state.z[zm as usize];
+        if dbl {
+            let mut acc = self.state.get_d(vdn);
+            for i in 0..Esize::D.lanes(vlb) {
+                if g.active(Esize::D, i) {
+                    acc += m.get_f64(i);
+                }
+            }
+            self.state.set_d(vdn, acc);
+        } else {
+            let mut acc = self.state.get_s(vdn);
+            for i in 0..Esize::S.lanes(vlb) {
+                if g.active(Esize::S, i) {
+                    acc += m.get_f32(i);
+                }
+            }
+            self.state.set_s(vdn, acc);
+        }
+    }
+
+    // ====================== permutes ======================
+
+    pub(crate) fn sve_rev(&mut self, zd: u8, zn: u8, esize: Esize) {
+        let vlb = self.state.vl_bytes();
+        let n = self.state.z[zn as usize];
+        let lanes = esize.lanes(vlb);
+        let z = &mut self.state.z[zd as usize];
+        for i in 0..lanes {
+            z.set(esize, i, n.get(esize, lanes - 1 - i));
+        }
+    }
+
+    pub(crate) fn sve_ext(&mut self, zdn: u8, zm: u8, imm: u8) {
+        let vlb = self.state.vl_bytes();
+        let a = self.state.z[zdn as usize];
+        let b = self.state.z[zm as usize];
+        let z = &mut self.state.z[zdn as usize];
+        for i in 0..vlb {
+            let src = i + imm as usize;
+            z.bytes[i] = if src < vlb { a.bytes[src] } else { b.bytes[src - vlb] };
+        }
+    }
+
+    pub(crate) fn sve_zip(&mut self, zd: u8, zn: u8, zm: u8, esize: Esize, hi: bool) {
+        let vlb = self.state.vl_bytes();
+        let (n, m) = (self.state.z[zn as usize], self.state.z[zm as usize]);
+        let lanes = esize.lanes(vlb);
+        let half = lanes / 2;
+        let base = if hi { half } else { 0 };
+        let z = &mut self.state.z[zd as usize];
+        for i in 0..half {
+            z.set(esize, 2 * i, n.get(esize, base + i));
+            z.set(esize, 2 * i + 1, m.get(esize, base + i));
+        }
+    }
+
+    pub(crate) fn sve_uzp(&mut self, zd: u8, zn: u8, zm: u8, esize: Esize, odd: bool) {
+        let vlb = self.state.vl_bytes();
+        let (n, m) = (self.state.z[zn as usize], self.state.z[zm as usize]);
+        let lanes = esize.lanes(vlb);
+        let half = lanes / 2;
+        let off = odd as usize;
+        let z = &mut self.state.z[zd as usize];
+        for i in 0..half {
+            z.set(esize, i, n.get(esize, 2 * i + off));
+            z.set(esize, half + i, m.get(esize, 2 * i + off));
+        }
+    }
+
+    pub(crate) fn sve_trn(&mut self, zd: u8, zn: u8, zm: u8, esize: Esize, odd: bool) {
+        let vlb = self.state.vl_bytes();
+        let (n, m) = (self.state.z[zn as usize], self.state.z[zm as usize]);
+        let lanes = esize.lanes(vlb);
+        let off = odd as usize;
+        let z = &mut self.state.z[zd as usize];
+        for i in 0..lanes / 2 {
+            z.set(esize, 2 * i, n.get(esize, 2 * i + off));
+            z.set(esize, 2 * i + 1, m.get(esize, 2 * i + off));
+        }
+    }
+
+    pub(crate) fn sve_tbl(&mut self, zd: u8, zn: u8, zm: u8, esize: Esize) {
+        let vlb = self.state.vl_bytes();
+        let (n, m) = (self.state.z[zn as usize], self.state.z[zm as usize]);
+        let lanes = esize.lanes(vlb);
+        let z = &mut self.state.z[zd as usize];
+        for i in 0..lanes {
+            let idx = m.get(esize, i) as usize;
+            z.set(esize, i, if idx < lanes { n.get(esize, idx) } else { 0 });
+        }
+    }
+
+    pub(crate) fn sve_compact(&mut self, zd: u8, pg: u8, zn: u8, esize: Esize) {
+        let vlb = self.state.vl_bytes();
+        let g = self.state.p[pg as usize];
+        let n = self.state.z[zn as usize];
+        let lanes = esize.lanes(vlb);
+        let z = &mut self.state.z[zd as usize];
+        let mut k = 0;
+        let vals: Vec<u64> = (0..lanes)
+            .filter(|&i| g.active(esize, i))
+            .map(|i| n.get(esize, i))
+            .collect();
+        for i in 0..lanes {
+            z.set(esize, i, 0);
+        }
+        for v in vals {
+            z.set(esize, k, v);
+            k += 1;
+        }
+    }
+
+    pub(crate) fn sve_splice(&mut self, zdn: u8, pg: u8, zm: u8, esize: Esize) {
+        let vlb = self.state.vl_bytes();
+        let g = self.state.p[pg as usize];
+        let a = self.state.z[zdn as usize];
+        let b = self.state.z[zm as usize];
+        let lanes = esize.lanes(vlb);
+        let z = &mut self.state.z[zdn as usize];
+        let mut out: Vec<u64> = vec![];
+        if let (Some(f), Some(l)) = (g.first_active(esize, vlb), g.last_active(esize, vlb)) {
+            for i in f..=l {
+                out.push(a.get(esize, i));
+            }
+        }
+        let mut bi = 0;
+        while out.len() < lanes {
+            out.push(b.get(esize, bi));
+            bi += 1;
+        }
+        for (i, v) in out.into_iter().enumerate() {
+            z.set(esize, i, v);
+        }
+    }
+
+    // ====================== termination ======================
+
+    /// CTERMEQ/CTERMNE (§2.3.5): if the termination condition holds,
+    /// N=1 V=0 (b.tcont fails); otherwise N=0 and V = !C, so b.tcont
+    /// (GE) continues iff C was set (the preceding pnext's "not last"
+    /// state).
+    pub(crate) fn sve_cterm(&mut self, xn: u8, xm: u8, ne: bool) {
+        let term = if ne {
+            self.state.get_x(xn) != self.state.get_x(xm)
+        } else {
+            self.state.get_x(xn) == self.state.get_x(xm)
+        };
+        let c = self.state.flags.c;
+        self.state.flags = if term {
+            Flags { n: true, z: false, c, v: false }
+        } else {
+            Flags { n: false, z: false, c, v: !c }
+        };
+    }
+
+    // ---- shared address/memory helpers ----
 
     fn ri(&self, v: RegOrImm) -> i64 {
         match v {
@@ -701,7 +829,13 @@ impl Executor {
     }
 
     /// Base address of a contiguous SVE access.
-    fn sve_contig_base(&self, base: u8, off: SveMemOff, ebytes: usize, vlb: usize) -> u64 {
+    pub(crate) fn sve_contig_base(
+        &self,
+        base: u8,
+        off: SveMemOff,
+        ebytes: usize,
+        vlb: usize,
+    ) -> u64 {
         let b = self.state.get_x(base);
         match off {
             SveMemOff::ImmVl(imm) => b.wrapping_add((imm * vlb as i64) as u64),
@@ -721,7 +855,7 @@ impl Executor {
     /// first unmapped byte, which identifies the same faulting element
     /// the per-lane walk would find (elements before it sit entirely in
     /// mapped pages), and the FFR partition update is one bitwise mask.
-    fn sve_ld1(
+    pub(crate) fn sve_ld1(
         &mut self,
         zt: u8,
         pg: u8,
@@ -810,7 +944,7 @@ impl Executor {
     }
 
     /// Element address of a gather/scatter lane.
-    fn gather_ea(&self, addr: GatherAddr, esize: Esize, lane: usize) -> u64 {
+    pub(crate) fn gather_ea(&self, addr: GatherAddr, esize: Esize, lane: usize) -> u64 {
         match addr {
             GatherAddr::VecImm(zn, imm) => {
                 self.state.z[zn as usize].get(Esize::D, lane).wrapping_add(imm as u64)
@@ -824,7 +958,7 @@ impl Executor {
     }
 
     /// Gather load (optionally first-faulting).
-    fn sve_gather(
+    pub(crate) fn sve_gather(
         &mut self,
         zt: u8,
         pg: u8,
@@ -874,13 +1008,280 @@ impl Executor {
     }
 }
 
+// ---- µop handlers (tag-indexed; see exec::DISPATCH) ----
+
+pub(crate) fn h_ptrue(ex: &mut Executor, u: &Uop) -> ExecResult {
+    ex.sve_ptrue(u.a, u.esize, u.has(F_SETFLAGS));
+    Ok(())
+}
+
+pub(crate) fn h_pfalse(ex: &mut Executor, u: &Uop) -> ExecResult {
+    ex.sve_pfalse(u.a);
+    Ok(())
+}
+
+pub(crate) fn h_while(ex: &mut Executor, u: &Uop) -> ExecResult {
+    ex.sve_while(u.a, u.esize, u.b, u.c, u.has(F_UNSIGNED));
+    Ok(())
+}
+
+pub(crate) fn h_ptest(ex: &mut Executor, u: &Uop) -> ExecResult {
+    ex.sve_ptest(u.b, u.c);
+    Ok(())
+}
+
+pub(crate) fn h_pnext(ex: &mut Executor, u: &Uop) -> ExecResult {
+    ex.sve_pnext(u.a, u.b, u.esize);
+    Ok(())
+}
+
+pub(crate) fn h_brk(ex: &mut Executor, u: &Uop) -> ExecResult {
+    ex.sve_brk(u.a, u.b, u.c, u.has(F_BEFORE), u.has(F_SETFLAGS));
+    Ok(())
+}
+
+pub(crate) fn h_pred_logic(ex: &mut Executor, u: &Uop) -> ExecResult {
+    ex.sve_pred_logic(u.sub.plogic(), u.a, u.b, u.c, u.d, u.has(F_SETFLAGS));
+    Ok(())
+}
+
+pub(crate) fn h_rdffr(ex: &mut Executor, u: &Uop) -> ExecResult {
+    let pg = if u.has(F_OPT) { Some(u.c) } else { None };
+    ex.sve_rdffr(u.a, pg, u.has(F_SETFLAGS));
+    Ok(())
+}
+
+pub(crate) fn h_setffr(ex: &mut Executor, _u: &Uop) -> ExecResult {
+    ex.sve_setffr();
+    Ok(())
+}
+
+pub(crate) fn h_wrffr(ex: &mut Executor, u: &Uop) -> ExecResult {
+    ex.sve_wrffr(u.b);
+    Ok(())
+}
+
+pub(crate) fn h_cnt(ex: &mut Executor, u: &Uop) -> ExecResult {
+    ex.sve_cnt(u.a, u.esize);
+    Ok(())
+}
+
+pub(crate) fn h_inc_dec(ex: &mut Executor, u: &Uop) -> ExecResult {
+    ex.sve_inc_dec(u.a, u.esize, u.has(crate::isa::uop::F_DEC));
+    Ok(())
+}
+
+pub(crate) fn h_incp_x(ex: &mut Executor, u: &Uop) -> ExecResult {
+    ex.sve_incp(u.a, u.b, u.esize);
+    Ok(())
+}
+
+pub(crate) fn h_index(ex: &mut Executor, u: &Uop) -> ExecResult {
+    let base = if u.has(crate::isa::uop::F_BASE_REG) {
+        RegOrImm::Reg(u.b)
+    } else {
+        RegOrImm::Imm(u.imm)
+    };
+    let step = if u.has(crate::isa::uop::F_STEP_REG) {
+        RegOrImm::Reg(u.c)
+    } else {
+        RegOrImm::Imm(u.imm2)
+    };
+    ex.sve_index(u.a, u.esize, base, step);
+    Ok(())
+}
+
+pub(crate) fn h_dup_imm(ex: &mut Executor, u: &Uop) -> ExecResult {
+    ex.sve_dup_imm(u.a, u.esize, u.imm);
+    Ok(())
+}
+
+pub(crate) fn h_fdup_imm(ex: &mut Executor, u: &Uop) -> ExecResult {
+    ex.sve_fdup(u.a, u.dbl(), u.imm as u64);
+    Ok(())
+}
+
+pub(crate) fn h_dup_x(ex: &mut Executor, u: &Uop) -> ExecResult {
+    ex.sve_dup_x(u.a, u.esize, u.b);
+    Ok(())
+}
+
+pub(crate) fn h_cpy_x(ex: &mut Executor, u: &Uop) -> ExecResult {
+    ex.sve_cpy_x(u.a, u.b, u.c, u.esize);
+    Ok(())
+}
+
+pub(crate) fn h_sel(ex: &mut Executor, u: &Uop) -> ExecResult {
+    ex.sve_sel(u.a, u.b, u.c, u.d, u.esize);
+    Ok(())
+}
+
+pub(crate) fn h_movprfx(ex: &mut Executor, u: &Uop) -> ExecResult {
+    let pg = if u.has(F_OPT) { Some((u.c, u.has(F_ZEROING))) } else { None };
+    ex.sve_movprfx(u.a, u.b, pg);
+    Ok(())
+}
+
+pub(crate) fn h_last(ex: &mut Executor, u: &Uop) -> ExecResult {
+    ex.sve_last(u.a, u.b, u.c, u.esize, u.has(F_BEFORE));
+    Ok(())
+}
+
+pub(crate) fn h_sve_ld1_imm_vl(ex: &mut Executor, u: &Uop) -> ExecResult {
+    ex.sve_ld1(u.a, u.b, u.esize, u.c, SveMemOff::ImmVl(u.imm), u.has(F_FF))
+}
+
+pub(crate) fn h_sve_ld1_reg(ex: &mut Executor, u: &Uop) -> ExecResult {
+    ex.sve_ld1(u.a, u.b, u.esize, u.c, SveMemOff::RegScaled(u.d), u.has(F_FF))
+}
+
+pub(crate) fn h_sve_ld1r(ex: &mut Executor, u: &Uop) -> ExecResult {
+    ex.sve_ld1r(u.a, u.b, u.esize, u.c, u.imm)
+}
+
+pub(crate) fn h_sve_st1_imm_vl(ex: &mut Executor, u: &Uop) -> ExecResult {
+    ex.sve_st1(u.a, u.b, u.esize, u.c, SveMemOff::ImmVl(u.imm))
+}
+
+pub(crate) fn h_sve_st1_reg(ex: &mut Executor, u: &Uop) -> ExecResult {
+    ex.sve_st1(u.a, u.b, u.esize, u.c, SveMemOff::RegScaled(u.d))
+}
+
+pub(crate) fn h_sve_gather_vec_imm(ex: &mut Executor, u: &Uop) -> ExecResult {
+    ex.sve_gather(u.a, u.b, u.esize, GatherAddr::VecImm(u.c, u.imm), u.has(F_FF))
+}
+
+pub(crate) fn h_sve_gather_base_vec(ex: &mut Executor, u: &Uop) -> ExecResult {
+    let addr = GatherAddr::BaseVec { xn: u.c, zm: u.d, scaled: u.has(F_SCALED) };
+    ex.sve_gather(u.a, u.b, u.esize, addr, u.has(F_FF))
+}
+
+pub(crate) fn h_sve_scatter_vec_imm(ex: &mut Executor, u: &Uop) -> ExecResult {
+    ex.sve_scatter(u.a, u.b, u.esize, GatherAddr::VecImm(u.c, u.imm))
+}
+
+pub(crate) fn h_sve_scatter_base_vec(ex: &mut Executor, u: &Uop) -> ExecResult {
+    let addr = GatherAddr::BaseVec { xn: u.c, zm: u.d, scaled: u.has(F_SCALED) };
+    ex.sve_scatter(u.a, u.b, u.esize, addr)
+}
+
+pub(crate) fn h_sve_int_bin(ex: &mut Executor, u: &Uop) -> ExecResult {
+    ex.sve_int_bin(u.sub.int(), u.a, u.b, u.c, u.esize);
+    Ok(())
+}
+
+pub(crate) fn h_sve_int_bin_u(ex: &mut Executor, u: &Uop) -> ExecResult {
+    ex.sve_int_bin_u(u.sub.int(), u.a, u.b, u.c, u.esize);
+    Ok(())
+}
+
+pub(crate) fn h_sve_add_imm(ex: &mut Executor, u: &Uop) -> ExecResult {
+    ex.sve_add_imm(u.a, u.esize, u.imm as u64);
+    Ok(())
+}
+
+pub(crate) fn h_sve_fp_bin(ex: &mut Executor, u: &Uop) -> ExecResult {
+    ex.sve_fp_bin(u.sub.fp(), u.a, u.b, u.c, u.dbl());
+    Ok(())
+}
+
+pub(crate) fn h_sve_fp_un(ex: &mut Executor, u: &Uop) -> ExecResult {
+    ex.sve_fp_un(u.sub.fp_un(), u.a, u.b, u.c, u.dbl());
+    Ok(())
+}
+
+pub(crate) fn h_sve_fmla(ex: &mut Executor, u: &Uop) -> ExecResult {
+    ex.sve_fmla(u.a, u.b, u.c, u.d, u.dbl(), u.has(F_SUB));
+    Ok(())
+}
+
+pub(crate) fn h_sve_scvtf(ex: &mut Executor, u: &Uop) -> ExecResult {
+    ex.sve_scvtf(u.a, u.b, u.c, u.dbl());
+    Ok(())
+}
+
+pub(crate) fn h_sve_int_cmp_z(ex: &mut Executor, u: &Uop) -> ExecResult {
+    ex.sve_int_cmp(u.sub.cmp(), u.has(F_UNSIGNED), u.a, u.b, u.c, ZmOrImm::Z(u.d), u.esize);
+    Ok(())
+}
+
+pub(crate) fn h_sve_int_cmp_imm(ex: &mut Executor, u: &Uop) -> ExecResult {
+    ex.sve_int_cmp(u.sub.cmp(), u.has(F_UNSIGNED), u.a, u.b, u.c, ZmOrImm::Imm(u.imm), u.esize);
+    Ok(())
+}
+
+pub(crate) fn h_sve_fp_cmp_v(ex: &mut Executor, u: &Uop) -> ExecResult {
+    ex.sve_fp_cmp(u.sub.cmp(), u.a, u.b, u.c, Some(u.d), u.dbl());
+    Ok(())
+}
+
+pub(crate) fn h_sve_fp_cmp_0(ex: &mut Executor, u: &Uop) -> ExecResult {
+    ex.sve_fp_cmp(u.sub.cmp(), u.a, u.b, u.c, None, u.dbl());
+    Ok(())
+}
+
+pub(crate) fn h_sve_reduce(ex: &mut Executor, u: &Uop) -> ExecResult {
+    ex.sve_reduce(u.sub.red(), u.a, u.b, u.c, u.esize);
+    Ok(())
+}
+
+pub(crate) fn h_sve_fadda(ex: &mut Executor, u: &Uop) -> ExecResult {
+    ex.sve_fadda(u.a, u.b, u.c, u.dbl());
+    Ok(())
+}
+
+pub(crate) fn h_sve_rev(ex: &mut Executor, u: &Uop) -> ExecResult {
+    ex.sve_rev(u.a, u.b, u.esize);
+    Ok(())
+}
+
+pub(crate) fn h_sve_ext(ex: &mut Executor, u: &Uop) -> ExecResult {
+    ex.sve_ext(u.a, u.c, u.imm as u8);
+    Ok(())
+}
+
+pub(crate) fn h_sve_zip(ex: &mut Executor, u: &Uop) -> ExecResult {
+    ex.sve_zip(u.a, u.b, u.c, u.esize, u.has(F_HI));
+    Ok(())
+}
+
+pub(crate) fn h_sve_uzp(ex: &mut Executor, u: &Uop) -> ExecResult {
+    ex.sve_uzp(u.a, u.b, u.c, u.esize, u.has(F_HI));
+    Ok(())
+}
+
+pub(crate) fn h_sve_trn(ex: &mut Executor, u: &Uop) -> ExecResult {
+    ex.sve_trn(u.a, u.b, u.c, u.esize, u.has(F_HI));
+    Ok(())
+}
+
+pub(crate) fn h_sve_tbl(ex: &mut Executor, u: &Uop) -> ExecResult {
+    ex.sve_tbl(u.a, u.b, u.c, u.esize);
+    Ok(())
+}
+
+pub(crate) fn h_sve_compact(ex: &mut Executor, u: &Uop) -> ExecResult {
+    ex.sve_compact(u.a, u.b, u.c, u.esize);
+    Ok(())
+}
+
+pub(crate) fn h_sve_splice(ex: &mut Executor, u: &Uop) -> ExecResult {
+    ex.sve_splice(u.a, u.b, u.c, u.esize);
+    Ok(())
+}
+
+pub(crate) fn h_cterm(ex: &mut Executor, u: &Uop) -> ExecResult {
+    ex.sve_cterm(u.b, u.c, u.has(F_NE));
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::arch::Cond;
-    use crate::isa::{CmpOp, FpOp};
     use crate::asm::Asm;
     use crate::exec::Trap;
+    use crate::isa::{CmpOp, Inst};
     use crate::mem::{Memory, PAGE_SIZE};
 
     fn exec_with(vl: usize, mem: Memory, build: impl FnOnce(&mut Asm)) -> Executor {
@@ -902,7 +1303,8 @@ mod tests {
         a.push(Inst::MovImm { xd: 2, imm: a_addr });
         a.push(Inst::MovImm { xd: 3, imm: n_addr });
         // ldrsw x3, [x3]
-        a.push(Inst::Ldr { size: 4, signed: true, xt: 3, base: 3, off: crate::isa::MemOff::Imm(0) });
+        let off = crate::isa::MemOff::Imm(0);
+        a.push(Inst::Ldr { size: 4, signed: true, xt: 3, base: 3, off });
         // mov x4, #0
         a.push(Inst::MovImm { xd: 4, imm: 0 });
         // whilelt p0.d, x4, x3
@@ -1133,7 +1535,12 @@ mod tests {
             a.push(Inst::Ptrue { pd: 0, esize: Esize::B, s: false });
             // z0 = [5,5,5,0,5,...] via index+cmp trick: build with dup + insert
             a.push(Inst::DupImm { zd: 0, esize: Esize::B, imm: 5 });
-            a.push(Inst::Index { zd: 1, esize: Esize::B, base: RegOrImm::Imm(0), step: RegOrImm::Imm(1) });
+            a.push(Inst::Index {
+                zd: 1,
+                esize: Esize::B,
+                base: RegOrImm::Imm(0),
+                step: RegOrImm::Imm(1),
+            });
             // p1 = (z1 == 3)  -> lane 3
             a.push(Inst::SveIntCmp {
                 op: CmpOp::Eq,
@@ -1173,7 +1580,12 @@ mod tests {
     fn brka_includes_break_element() {
         let ex = exec_with(128, Memory::new(), |a| {
             a.push(Inst::Ptrue { pd: 0, esize: Esize::B, s: false });
-            a.push(Inst::Index { zd: 1, esize: Esize::B, base: RegOrImm::Imm(0), step: RegOrImm::Imm(1) });
+            a.push(Inst::Index {
+                zd: 1,
+                esize: Esize::B,
+                base: RegOrImm::Imm(0),
+                step: RegOrImm::Imm(1),
+            });
             a.push(Inst::SveIntCmp {
                 op: CmpOp::Eq,
                 unsigned: false,
@@ -1253,7 +1665,12 @@ mod tests {
     #[test]
     fn index_and_vl_scaled_counting() {
         let ex = exec_with(256, Memory::new(), |a| {
-            a.push(Inst::Index { zd: 0, esize: Esize::S, base: RegOrImm::Imm(3), step: RegOrImm::Imm(2) });
+            a.push(Inst::Index {
+                zd: 0,
+                esize: Esize::S,
+                base: RegOrImm::Imm(3),
+                step: RegOrImm::Imm(2),
+            });
             a.push(Inst::Cnt { xd: 1, esize: Esize::D });
             a.push(Inst::MovImm { xd: 2, imm: 0 });
             a.push(Inst::IncDec { xdn: 2, esize: Esize::S, dec: false });
@@ -1297,7 +1714,12 @@ mod tests {
     #[test]
     fn eorv_reduction() {
         let ex = exec_with(256, Memory::new(), |a| {
-            a.push(Inst::Index { zd: 0, esize: Esize::D, base: RegOrImm::Imm(1), step: RegOrImm::Imm(2) });
+            a.push(Inst::Index {
+                zd: 0,
+                esize: Esize::D,
+                base: RegOrImm::Imm(1),
+                step: RegOrImm::Imm(2),
+            });
             a.push(Inst::Ptrue { pd: 0, esize: Esize::D, s: false });
             a.push(Inst::SveReduce { op: RedOp::EorV, vd: 1, pg: 0, zn: 0, esize: Esize::D });
         });
@@ -1327,10 +1749,22 @@ mod tests {
         // the HACC conditional-assignment pattern: p = (a > b); sel
         let ex = exec_with(256, Memory::new(), |a| {
             a.push(Inst::Ptrue { pd: 0, esize: Esize::D, s: false });
-            a.push(Inst::Index { zd: 0, esize: Esize::D, base: RegOrImm::Imm(0), step: RegOrImm::Imm(1) });
+            a.push(Inst::Index {
+                zd: 0,
+                esize: Esize::D,
+                base: RegOrImm::Imm(0),
+                step: RegOrImm::Imm(1),
+            });
             a.push(Inst::SveScvtf { zd: 0, pg: 0, zn: 0, dbl: true }); // [0,1,2,3]
             a.push(Inst::FdupImm { zd: 1, dbl: true, bits: 1.5f64.to_bits() });
-            a.push(Inst::SveFpCmp { op: CmpOp::Gt, pd: 1, pg: 0, zn: 0, rhs: Some(1), dbl: true });
+            a.push(Inst::SveFpCmp {
+                op: CmpOp::Gt,
+                pd: 1,
+                pg: 0,
+                zn: 0,
+                rhs: Some(1),
+                dbl: true,
+            });
             a.push(Inst::Sel { zd: 2, pg: 1, zn: 0, zm: 1, esize: Esize::D });
         });
         assert_eq!(ex.state.z[2].get_f64(0), 1.5);
@@ -1342,9 +1776,19 @@ mod tests {
     #[test]
     fn permutes_rev_zip_compact() {
         let ex = exec_with(256, Memory::new(), |a| {
-            a.push(Inst::Index { zd: 0, esize: Esize::D, base: RegOrImm::Imm(0), step: RegOrImm::Imm(1) });
+            a.push(Inst::Index {
+                zd: 0,
+                esize: Esize::D,
+                base: RegOrImm::Imm(0),
+                step: RegOrImm::Imm(1),
+            });
             a.push(Inst::SveRev { zd: 1, zn: 0, esize: Esize::D });
-            a.push(Inst::Index { zd: 2, esize: Esize::D, base: RegOrImm::Imm(10), step: RegOrImm::Imm(1) });
+            a.push(Inst::Index {
+                zd: 2,
+                esize: Esize::D,
+                base: RegOrImm::Imm(10),
+                step: RegOrImm::Imm(1),
+            });
             a.push(Inst::SveZip { zd: 3, zn: 0, zm: 2, esize: Esize::D, hi: false });
             // compact even lanes
             a.push(Inst::Ptrue { pd: 0, esize: Esize::D, s: false });
@@ -1397,7 +1841,12 @@ mod tests {
                 off: SveMemOff::ImmVl(0),
                 ff: false,
             });
-            a.push(Inst::Index { zd: 2, esize: Esize::D, base: RegOrImm::Imm(100), step: RegOrImm::Imm(1) });
+            a.push(Inst::Index {
+                zd: 2,
+                esize: Esize::D,
+                base: RegOrImm::Imm(100),
+                step: RegOrImm::Imm(1),
+            });
             a.push(Inst::MovImm { xd: 1, imm: tgt });
             a.push(Inst::SveStScatter {
                 zt: 2,
@@ -1512,7 +1961,13 @@ mod tests {
                 off: SveMemOff::ImmVl(0),
                 ff: false,
             });
-            a.push(Inst::SveSt1 { zt: 0, pg: 0, esize: Esize::B, base: 1, off: SveMemOff::ImmVl(0) });
+            a.push(Inst::SveSt1 {
+                zt: 0,
+                pg: 0,
+                esize: Esize::B,
+                base: 1,
+                off: SveMemOff::ImmVl(0),
+            });
         });
         for k in 0..32u64 {
             assert_eq!(ex.state.z[0].get(Esize::B, k as usize), k + 1, "lane {k}");
@@ -1633,7 +2088,12 @@ mod tests {
     #[test]
     fn lastb_extracts_last_active() {
         let ex = exec_with(256, Memory::new(), |a| {
-            a.push(Inst::Index { zd: 0, esize: Esize::D, base: RegOrImm::Imm(40), step: RegOrImm::Imm(1) });
+            a.push(Inst::Index {
+                zd: 0,
+                esize: Esize::D,
+                base: RegOrImm::Imm(40),
+                step: RegOrImm::Imm(1),
+            });
             a.push(Inst::MovImm { xd: 1, imm: 3 });
             a.push(Inst::While { pd: 0, esize: Esize::D, xn: 31, xm: 1, unsigned: false });
             a.push(Inst::Last { xd: 2, pg: 0, zn: 0, esize: Esize::D, before: true });

@@ -417,7 +417,9 @@ impl Inst {
             OpaqueCall { .. } => C::OpaqueCall,
             NeonLd1 { .. } => C::VecLoad,
             NeonSt1 { .. } => C::VecStore,
-            NeonDupX { .. } | NeonDupLane0 { .. } | NeonMoviZero { .. } | NeonInsX { .. } => C::VecIntAlu,
+            NeonDupX { .. } | NeonDupLane0 { .. } | NeonMoviZero { .. } | NeonInsX { .. } => {
+                C::VecIntAlu
+            }
             NeonFpBin { op, .. } => match op {
                 FpOp::Add | FpOp::Sub | FpOp::Max | FpOp::Min => C::VecFpAdd,
                 FpOp::Mul => C::VecFpMul,

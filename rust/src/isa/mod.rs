@@ -1,8 +1,11 @@
 //! Instruction set: AArch64 scalar subset, Advanced SIMD (NEON) 128-bit
 //! baseline subset, and the SVE subset covering every mechanism the paper
-//! describes (§2), plus the encoding-budget model of Fig. 7.
+//! describes (§2), plus the encoding-budget model of Fig. 7 and the
+//! shared decode layer ([`uop`]) that lowers instructions into the µop
+//! form both the executor and the timing pipeline consume.
 
 pub mod encoding;
 mod inst;
+pub mod uop;
 
 pub use inst::*;

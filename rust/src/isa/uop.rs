@@ -1,0 +1,1602 @@
+//! Pre-decoded µop programs: the single decode layer shared by the
+//! functional executor ([`crate::exec`]) and the timing pipeline
+//! ([`crate::uarch`]).
+//!
+//! The paper's implementation model assumes wide SVE instructions are
+//! cracked **once at decode** into µops that both execution and timing
+//! reason about (§5). This module is that decoder: [`DecodedProgram`]
+//! lowers every [`Inst`] of a [`Program`] into a flat array of [`Uop`]s
+//! with
+//!
+//! * a dense dispatch tag ([`UopTag`]) the executor indexes a handler
+//!   table with — addressing modes and optional operands are resolved
+//!   into distinct tags here, so the hot loop never re-matches enum
+//!   payloads;
+//! * pre-resolved operand register indices and immediates in uniform
+//!   fields (`a`/`b`/`c`/`d`, `imm`/`imm2`, packed `F_*` flags,
+//!   [`SubOp`]);
+//! * the µop class and a **cracking rule** ([`Crack`]): the decoded
+//!   stream is shared across vector lengths and µarch variants (SVE
+//!   binaries are VL-agnostic, §2.2), so VL-dependent expansion is
+//!   recorded as a rule the dispatch stage resolves against the run's
+//!   VL — `Per128b` ops charge one slice per 128 bits of VL,
+//!   `PerElem` ops crack into one port slot per active element, which
+//!   is exactly what the §PPA energy proxy bills as `cracked_elems`;
+//! * the per-pc read/write register dependence sets, pre-mapped onto
+//!   the dense scoreboard slots ([`reg_slot`]) the pipeline's renamer
+//!   indexes.
+//!
+//! `Inst` is matched in exactly one place — [`DecodedProgram::decode`]
+//! (together with the static-metadata helpers on [`Inst`] itself that
+//! it calls). Everything downstream dispatches on [`UopTag`].
+
+use crate::arch::{Cond, Esize};
+use crate::asm::Program;
+use crate::isa::{
+    CmpOp, FpOp, FpUnOp, GatherAddr, Inst, IntOp, MemOff, OpaqueFn, PLogicOp, RedOp, RegId,
+    RegOrImm, SveMemOff, UopClass, ZmOrImm,
+};
+
+/// Scoreboard size: X0-30 (31) + Z0-31 (32) + P0-15 (16) + FFR + NZCV.
+pub const REG_SLOTS: usize = 31 + 32 + 16 + 2;
+
+/// Dense index of an architectural register for the renamer/scoreboard.
+/// X31 (xzr) never appears in dependence sets, so slots 0..31 cover the
+/// writable X registers.
+#[inline]
+pub fn reg_slot(r: RegId) -> u8 {
+    match r {
+        RegId::X(n) => n,
+        RegId::Z(n) => 31 + n,
+        RegId::P(n) => 63 + n,
+        RegId::Ffr => 79,
+        RegId::Nzcv => 80,
+    }
+}
+
+/// Dense dispatch tag of a decoded µop. One tag per *resolved* operation
+/// shape: addressing modes ([`MemOff`], [`SveMemOff`], [`GatherAddr`])
+/// and optional operands ([`ZmOrImm`], FP-compare-with-zero) become
+/// distinct tags at decode so execute-time dispatch is a single indexed
+/// call. `Ret` and `Halt` share one tag (identical semantics).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+#[repr(u8)]
+pub enum UopTag {
+    // scalar integer
+    MovImm,
+    MovReg,
+    AddImm,
+    AddReg,
+    SubReg,
+    Madd,
+    Udiv,
+    AndImm,
+    LogReg,
+    LslImm,
+    LsrImm,
+    AsrImm,
+    Csel,
+    LdrImm,
+    LdrReg,
+    StrImm,
+    StrReg,
+    LdrFpImm,
+    LdrFpReg,
+    StrFpImm,
+    StrFpReg,
+    CmpImm,
+    CmpReg,
+    B,
+    BCond,
+    Cbz,
+    Cbnz,
+    Halt,
+    Nop,
+    // scalar FP
+    FmovImm,
+    FmovXtoD,
+    FmovReg,
+    FmovDtoX,
+    FpBin,
+    FpUn,
+    Fmadd,
+    Fcmp,
+    Scvtf,
+    Fcvtzs,
+    OpaqueCall,
+    // Advanced SIMD (NEON)
+    NeonLd1Imm,
+    NeonLd1Reg,
+    NeonSt1Imm,
+    NeonSt1Reg,
+    NeonDupX,
+    NeonDupLane0,
+    NeonMoviZero,
+    NeonFpBin,
+    NeonFpUn,
+    NeonFmla,
+    NeonIntBin,
+    NeonFcm,
+    NeonCm,
+    NeonBsl,
+    NeonFaddv,
+    NeonAddv,
+    NeonUmov,
+    NeonInsX,
+    // SVE predicates
+    Ptrue,
+    Pfalse,
+    While,
+    Ptest,
+    Pnext,
+    Brk,
+    PredLogic,
+    Rdffr,
+    Setffr,
+    Wrffr,
+    // SVE counting / induction
+    Cnt,
+    IncDec,
+    IncpX,
+    Index,
+    // SVE data movement
+    DupImm,
+    FdupImm,
+    DupX,
+    CpyX,
+    Sel,
+    Movprfx,
+    Last,
+    // SVE memory
+    SveLd1ImmVl,
+    SveLd1Reg,
+    SveLd1R,
+    SveSt1ImmVl,
+    SveSt1Reg,
+    SveGatherVecImm,
+    SveGatherBaseVec,
+    SveScatterVecImm,
+    SveScatterBaseVec,
+    // SVE arithmetic
+    SveIntBin,
+    SveIntBinU,
+    SveAddImm,
+    SveFpBin,
+    SveFpUn,
+    SveFmla,
+    SveScvtf,
+    // SVE compares
+    SveIntCmpZ,
+    SveIntCmpImm,
+    SveFpCmpV,
+    SveFpCmp0,
+    // SVE horizontal
+    SveReduce,
+    SveFadda,
+    // SVE permutes
+    SveRev,
+    SveExt,
+    SveZip,
+    SveUzp,
+    SveTrn,
+    SveTbl,
+    SveCompact,
+    SveSplice,
+    // SVE termination
+    Cterm,
+}
+
+impl UopTag {
+    /// Number of distinct tags — the executor's dispatch-table size.
+    pub const COUNT: usize = UopTag::Cterm as usize + 1;
+}
+
+/// Sub-operation selector of a µop (the "function select" lines of the
+/// datapath). Accessors panic on a selector/tag mismatch, which can only
+/// be a decoder bug.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum SubOp {
+    None,
+    Int(IntOp),
+    Fp(FpOp),
+    FpUn(FpUnOp),
+    Cmp(CmpOp),
+    Red(RedOp),
+    PLogic(PLogicOp),
+    Opaque(OpaqueFn),
+    Cond(Cond),
+}
+
+impl SubOp {
+    #[inline]
+    pub fn int(self) -> IntOp {
+        match self {
+            SubOp::Int(op) => op,
+            other => unreachable!("decoder bug: wanted IntOp, found {other:?}"),
+        }
+    }
+
+    #[inline]
+    pub fn fp(self) -> FpOp {
+        match self {
+            SubOp::Fp(op) => op,
+            other => unreachable!("decoder bug: wanted FpOp, found {other:?}"),
+        }
+    }
+
+    #[inline]
+    pub fn fp_un(self) -> FpUnOp {
+        match self {
+            SubOp::FpUn(op) => op,
+            other => unreachable!("decoder bug: wanted FpUnOp, found {other:?}"),
+        }
+    }
+
+    #[inline]
+    pub fn cmp(self) -> CmpOp {
+        match self {
+            SubOp::Cmp(op) => op,
+            other => unreachable!("decoder bug: wanted CmpOp, found {other:?}"),
+        }
+    }
+
+    #[inline]
+    pub fn red(self) -> RedOp {
+        match self {
+            SubOp::Red(op) => op,
+            other => unreachable!("decoder bug: wanted RedOp, found {other:?}"),
+        }
+    }
+
+    #[inline]
+    pub fn plogic(self) -> PLogicOp {
+        match self {
+            SubOp::PLogic(op) => op,
+            other => unreachable!("decoder bug: wanted PLogicOp, found {other:?}"),
+        }
+    }
+
+    #[inline]
+    pub fn opaque(self) -> OpaqueFn {
+        match self {
+            SubOp::Opaque(f) => f,
+            other => unreachable!("decoder bug: wanted OpaqueFn, found {other:?}"),
+        }
+    }
+
+    #[inline]
+    pub fn cond(self) -> Cond {
+        match self {
+            SubOp::Cond(c) => c,
+            other => unreachable!("decoder bug: wanted Cond, found {other:?}"),
+        }
+    }
+}
+
+/// How a µop expands beyond one issue slot. The rule is VL-independent
+/// (so one decoded program serves every vector length and µarch
+/// variant); the dispatch stage resolves it against the executing VL.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Crack {
+    /// One µop regardless of VL.
+    Unit,
+    /// Cross-lane op: one extra slice per 128 bits of VL beyond the
+    /// first (`VL/128 - 1` extra cycles × `cross_lane_per_128b`).
+    Per128b,
+    /// Gather/scatter: cracked by the LSU into one port slot per active
+    /// element (§4/§5) — what the §PPA proxy bills as `cracked_elems`.
+    PerElem,
+}
+
+impl Crack {
+    fn of(class: UopClass) -> Crack {
+        if class.is_cross_lane() {
+            Crack::Per128b
+        } else if matches!(class, UopClass::VecGather | UopClass::VecScatter) {
+            Crack::PerElem
+        } else {
+            Crack::Unit
+        }
+    }
+
+    /// Worst-case µop expansion at `vl_bits` (every lane active) — the
+    /// cracking math EXPERIMENTS.md §Decode and §PPA share.
+    pub fn max_uops(self, vl_bits: usize, esize: Esize) -> u64 {
+        match self {
+            Crack::Unit => 1,
+            Crack::Per128b => (vl_bits / 128) as u64,
+            Crack::PerElem => esize.lanes(vl_bits / 8) as u64,
+        }
+    }
+}
+
+// ---- operand flags (packed into Uop::flags) ----
+
+/// Double-precision (vs single) FP operand width.
+pub const F_DBL: u32 = 1 << 0;
+/// Sign-extending scalar load.
+pub const F_SIGNED: u32 = 1 << 1;
+/// Fused-subtract form (fmsub / fmls).
+pub const F_SUB: u32 = 1 << 2;
+/// First-faulting memory access (§2.3.3).
+pub const F_FF: u32 = 1 << 3;
+/// Flag-setting form (the Table 1 NZCV overload).
+pub const F_SETFLAGS: u32 = 1 << 4;
+/// Unsigned compare/while (whilelo, cmphi...).
+pub const F_UNSIGNED: u32 = 1 << 5;
+/// Before-form (brkb / lastb).
+pub const F_BEFORE: u32 = 1 << 6;
+/// Alternate-half selector (zip2 / uzp2 / trn2).
+pub const F_HI: u32 = 1 << 7;
+/// Element-scaled gather index.
+pub const F_SCALED: u32 = 1 << 8;
+/// Zeroing (vs merging) predication.
+pub const F_ZEROING: u32 = 1 << 9;
+/// Optional operand present (`c` holds it): OpaqueCall's second
+/// argument, Rdffr's / Movprfx's governing predicate.
+pub const F_OPT: u32 = 1 << 10;
+/// Decrement form of IncDec.
+pub const F_DEC: u32 = 1 << 11;
+/// ctermne (vs ctermeq).
+pub const F_NE: u32 = 1 << 12;
+/// Index base is a register (`b`) rather than `imm`.
+pub const F_BASE_REG: u32 = 1 << 13;
+/// Index step is a register (`c`) rather than `imm2`.
+pub const F_STEP_REG: u32 = 1 << 14;
+
+// ---- static metadata flags ----
+
+/// SVE instruction (the paper's dynamic-mix metric).
+pub const F_SVE: u32 = 1 << 16;
+/// Advanced SIMD instruction.
+pub const F_NEON: u32 = 1 << 17;
+/// Vector-class µop (`UopClass::is_vector`).
+pub const F_VECTOR: u32 = 1 << 18;
+/// Conditional branch (feeds the predictor).
+pub const F_COND_BRANCH: u32 = 1 << 19;
+
+/// One decoded µop: dense dispatch tag plus pre-resolved operands and
+/// static metadata. Field meaning is per-tag (documented alongside the
+/// decoder); by convention `a` is the destination (or the data operand
+/// of stores) and `b`/`c`/`d` are sources.
+#[derive(Clone, Copy, Debug)]
+pub struct Uop {
+    /// Dispatch tag — index into the executor's handler table.
+    pub tag: UopTag,
+    /// µop class for the timing model (identical to [`Inst::class`]).
+    pub class: UopClass,
+    /// VL-independent cracking rule, resolved at dispatch.
+    pub crack: Crack,
+    /// Destination register (or store-data register).
+    pub a: u8,
+    /// First source register (governing predicate for predicated ops).
+    pub b: u8,
+    /// Second source register.
+    pub c: u8,
+    /// Third source register.
+    pub d: u8,
+    /// Element size (scalar loads/stores carry their access size here).
+    pub esize: Esize,
+    /// Packed `F_*` operand + metadata flags.
+    pub flags: u32,
+    /// Sub-operation selector.
+    pub sub: SubOp,
+    /// Primary immediate: value, offset, shift amount, branch target,
+    /// FP bit pattern, or lane index, per tag.
+    pub imm: i64,
+    /// Secondary immediate: index-register shift or Index step.
+    pub imm2: i64,
+    reads_off: u32,
+    writes_off: u32,
+    reads_len: u8,
+    writes_len: u8,
+}
+
+impl Uop {
+    #[inline]
+    pub fn has(&self, flag: u32) -> bool {
+        self.flags & flag != 0
+    }
+
+    #[inline]
+    pub fn dbl(&self) -> bool {
+        self.has(F_DBL)
+    }
+
+    #[inline]
+    pub fn is_sve(&self) -> bool {
+        self.has(F_SVE)
+    }
+
+    #[inline]
+    pub fn is_neon(&self) -> bool {
+        self.has(F_NEON)
+    }
+
+    #[inline]
+    pub fn is_vector(&self) -> bool {
+        self.has(F_VECTOR)
+    }
+
+    #[inline]
+    pub fn is_cond_branch(&self) -> bool {
+        self.has(F_COND_BRANCH)
+    }
+}
+
+/// A [`Program`] lowered once into µops: the flat decoded array, the
+/// original instructions (kept for disassembly/traces), and the arena
+/// of pre-mapped register-dependence slots.
+///
+/// Decoding is a pure function of the program — no VL, no µarch
+/// parameter enters it — so one `DecodedProgram` is shared across every
+/// vector length and design-space variant of a sweep, and the job-cache
+/// keys of [`crate::report::store`] are unaffected by the decode layer.
+///
+/// ```
+/// use sve_repro::asm::Asm;
+/// use sve_repro::isa::uop::DecodedProgram;
+/// use sve_repro::isa::{Inst, UopClass};
+///
+/// let mut a = Asm::new();
+/// a.push(Inst::MovImm { xd: 3, imm: 7 });
+/// a.push(Inst::AddImm { xd: 4, xn: 3, imm: 35 });
+/// a.push(Inst::Halt);
+/// let dec = DecodedProgram::decode(&a.finish());
+///
+/// assert_eq!(dec.len(), 3);
+/// assert_eq!(dec.uops()[0].class, UopClass::IntAlu);
+/// assert_eq!(dec.uops()[1].a, 4); // destination pre-resolved
+/// // the add reads x3 (scoreboard slot 3) and writes x4 (slot 4)
+/// assert_eq!(dec.reads(&dec.uops()[1]), &[3]);
+/// assert_eq!(dec.writes(&dec.uops()[1]), &[4]);
+/// ```
+#[derive(Clone, Debug, Default)]
+pub struct DecodedProgram {
+    insts: Vec<Inst>,
+    uops: Vec<Uop>,
+    dep_pool: Vec<u8>,
+}
+
+impl DecodedProgram {
+    /// Lower `prog` into µops — the one `Inst` match in the simulator.
+    pub fn decode(prog: &Program) -> DecodedProgram {
+        let mut uops = Vec::with_capacity(prog.insts.len());
+        let mut dep_pool = Vec::new();
+        let mut reads = Vec::new();
+        let mut writes = Vec::new();
+        for inst in &prog.insts {
+            let mut u = lower(inst);
+            inst.deps(&mut reads, &mut writes);
+            u.reads_off = dep_pool.len() as u32;
+            u.reads_len = reads.len() as u8;
+            dep_pool.extend(reads.iter().map(|&r| reg_slot(r)));
+            u.writes_off = dep_pool.len() as u32;
+            u.writes_len = writes.len() as u8;
+            dep_pool.extend(writes.iter().map(|&w| reg_slot(w)));
+            uops.push(u);
+        }
+        DecodedProgram { insts: prog.insts.clone(), uops, dep_pool }
+    }
+
+    /// Number of architectural instructions (== decoded µop slots).
+    pub fn len(&self) -> usize {
+        self.uops.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.uops.is_empty()
+    }
+
+    /// The flat decoded µop array, indexed by pc.
+    #[inline]
+    pub fn uops(&self) -> &[Uop] {
+        &self.uops
+    }
+
+    /// The source instructions (disassembly/traces only — execution and
+    /// timing never re-match these).
+    #[inline]
+    pub fn insts(&self) -> &[Inst] {
+        &self.insts
+    }
+
+    /// Scoreboard slots `u` reads, pre-mapped via [`reg_slot`].
+    #[inline]
+    pub fn reads(&self, u: &Uop) -> &[u8] {
+        let off = u.reads_off as usize;
+        &self.dep_pool[off..off + u.reads_len as usize]
+    }
+
+    /// Scoreboard slots `u` writes, pre-mapped via [`reg_slot`].
+    #[inline]
+    pub fn writes(&self, u: &Uop) -> &[u8] {
+        let off = u.writes_off as usize;
+        &self.dep_pool[off..off + u.writes_len as usize]
+    }
+}
+
+/// Access size of a scalar load/store, carried as an [`Esize`].
+fn esize_for_bytes(size: u8) -> Esize {
+    match size {
+        1 => Esize::B,
+        2 => Esize::H,
+        4 => Esize::S,
+        _ => Esize::D,
+    }
+}
+
+/// Lower one instruction to its µop (deps are filled in by the caller).
+fn lower(inst: &Inst) -> Uop {
+    use Inst as I;
+    use UopTag as T;
+    let class = inst.class();
+    let mut flags = 0u32;
+    if inst.is_sve() {
+        flags |= F_SVE;
+    }
+    if inst.is_neon() {
+        flags |= F_NEON;
+    }
+    if class.is_vector() {
+        flags |= F_VECTOR;
+    }
+    if inst.is_cond_branch() {
+        flags |= F_COND_BRANCH;
+    }
+    let mut u = Uop {
+        tag: T::Nop,
+        class,
+        crack: Crack::of(class),
+        a: 0,
+        b: 0,
+        c: 0,
+        d: 0,
+        esize: Esize::B,
+        flags,
+        sub: SubOp::None,
+        imm: 0,
+        imm2: 0,
+        reads_off: 0,
+        writes_off: 0,
+        reads_len: 0,
+        writes_len: 0,
+    };
+    let set = |u: &mut Uop, f: u32, on: bool| {
+        if on {
+            u.flags |= f;
+        }
+    };
+    match *inst {
+        // ---- scalar integer ----
+        I::MovImm { xd, imm } => {
+            u.tag = T::MovImm;
+            u.a = xd;
+            u.imm = imm as i64;
+        }
+        I::MovReg { xd, xn } => {
+            u.tag = T::MovReg;
+            u.a = xd;
+            u.b = xn;
+        }
+        I::AddImm { xd, xn, imm } => {
+            u.tag = T::AddImm;
+            u.a = xd;
+            u.b = xn;
+            u.imm = imm;
+        }
+        I::AddReg { xd, xn, xm, lsl } => {
+            u.tag = T::AddReg;
+            u.a = xd;
+            u.b = xn;
+            u.c = xm;
+            u.imm2 = lsl as i64;
+        }
+        I::SubReg { xd, xn, xm } => {
+            u.tag = T::SubReg;
+            u.a = xd;
+            u.b = xn;
+            u.c = xm;
+        }
+        I::Madd { xd, xn, xm, xa } => {
+            u.tag = T::Madd;
+            u.a = xd;
+            u.b = xn;
+            u.c = xm;
+            u.d = xa;
+        }
+        I::Udiv { xd, xn, xm } => {
+            u.tag = T::Udiv;
+            u.a = xd;
+            u.b = xn;
+            u.c = xm;
+        }
+        I::AndImm { xd, xn, imm } => {
+            u.tag = T::AndImm;
+            u.a = xd;
+            u.b = xn;
+            u.imm = imm as i64;
+        }
+        I::LogReg { op, xd, xn, xm } => {
+            u.tag = T::LogReg;
+            u.sub = SubOp::PLogic(op);
+            u.a = xd;
+            u.b = xn;
+            u.c = xm;
+        }
+        I::LslImm { xd, xn, sh } => {
+            u.tag = T::LslImm;
+            u.a = xd;
+            u.b = xn;
+            u.imm = sh as i64;
+        }
+        I::LsrImm { xd, xn, sh } => {
+            u.tag = T::LsrImm;
+            u.a = xd;
+            u.b = xn;
+            u.imm = sh as i64;
+        }
+        I::AsrImm { xd, xn, sh } => {
+            u.tag = T::AsrImm;
+            u.a = xd;
+            u.b = xn;
+            u.imm = sh as i64;
+        }
+        I::Csel { xd, xn, xm, cond } => {
+            u.tag = T::Csel;
+            u.sub = SubOp::Cond(cond);
+            u.a = xd;
+            u.b = xn;
+            u.c = xm;
+        }
+        I::Ldr { size, signed, xt, base, off } => {
+            u.a = xt;
+            u.b = base;
+            u.esize = esize_for_bytes(size);
+            set(&mut u, F_SIGNED, signed);
+            match off {
+                MemOff::Imm(i) => {
+                    u.tag = T::LdrImm;
+                    u.imm = i;
+                }
+                MemOff::RegLsl(xm, sh) => {
+                    u.tag = T::LdrReg;
+                    u.c = xm;
+                    u.imm2 = sh as i64;
+                }
+            }
+        }
+        I::Str { size, xt, base, off } => {
+            u.a = xt;
+            u.b = base;
+            u.esize = esize_for_bytes(size);
+            match off {
+                MemOff::Imm(i) => {
+                    u.tag = T::StrImm;
+                    u.imm = i;
+                }
+                MemOff::RegLsl(xm, sh) => {
+                    u.tag = T::StrReg;
+                    u.c = xm;
+                    u.imm2 = sh as i64;
+                }
+            }
+        }
+        I::LdrFp { dbl, vt, base, off } => {
+            u.a = vt;
+            u.b = base;
+            set(&mut u, F_DBL, dbl);
+            match off {
+                MemOff::Imm(i) => {
+                    u.tag = T::LdrFpImm;
+                    u.imm = i;
+                }
+                MemOff::RegLsl(xm, sh) => {
+                    u.tag = T::LdrFpReg;
+                    u.c = xm;
+                    u.imm2 = sh as i64;
+                }
+            }
+        }
+        I::StrFp { dbl, vt, base, off } => {
+            u.a = vt;
+            u.b = base;
+            set(&mut u, F_DBL, dbl);
+            match off {
+                MemOff::Imm(i) => {
+                    u.tag = T::StrFpImm;
+                    u.imm = i;
+                }
+                MemOff::RegLsl(xm, sh) => {
+                    u.tag = T::StrFpReg;
+                    u.c = xm;
+                    u.imm2 = sh as i64;
+                }
+            }
+        }
+        I::CmpImm { xn, imm } => {
+            u.tag = T::CmpImm;
+            u.b = xn;
+            u.imm = imm as i64;
+        }
+        I::CmpReg { xn, xm } => {
+            u.tag = T::CmpReg;
+            u.b = xn;
+            u.c = xm;
+        }
+        I::B { target } => {
+            u.tag = T::B;
+            u.imm = target as i64;
+        }
+        I::BCond { cond, target } => {
+            u.tag = T::BCond;
+            u.sub = SubOp::Cond(cond);
+            u.imm = target as i64;
+        }
+        I::Cbz { xn, target } => {
+            u.tag = T::Cbz;
+            u.b = xn;
+            u.imm = target as i64;
+        }
+        I::Cbnz { xn, target } => {
+            u.tag = T::Cbnz;
+            u.b = xn;
+            u.imm = target as i64;
+        }
+        I::Ret | I::Halt => u.tag = T::Halt,
+        I::Nop => u.tag = T::Nop,
+        // ---- scalar FP ----
+        I::FmovImm { dbl, dd, bits } => {
+            u.tag = T::FmovImm;
+            u.a = dd;
+            u.imm = bits as i64;
+            set(&mut u, F_DBL, dbl);
+        }
+        I::FmovXtoD { dd, xn } => {
+            u.tag = T::FmovXtoD;
+            u.a = dd;
+            u.b = xn;
+        }
+        I::FmovReg { dbl, dd, dn } => {
+            u.tag = T::FmovReg;
+            u.a = dd;
+            u.b = dn;
+            set(&mut u, F_DBL, dbl);
+        }
+        I::FmovDtoX { xd, dn } => {
+            u.tag = T::FmovDtoX;
+            u.a = xd;
+            u.b = dn;
+        }
+        I::FpBin { op, dbl, dd, dn, dm } => {
+            u.tag = T::FpBin;
+            u.sub = SubOp::Fp(op);
+            u.a = dd;
+            u.b = dn;
+            u.c = dm;
+            set(&mut u, F_DBL, dbl);
+        }
+        I::FpUn { op, dbl, dd, dn } => {
+            u.tag = T::FpUn;
+            u.sub = SubOp::FpUn(op);
+            u.a = dd;
+            u.b = dn;
+            set(&mut u, F_DBL, dbl);
+        }
+        I::Fmadd { dbl, dd, dn, dm, da, sub } => {
+            u.tag = T::Fmadd;
+            u.a = dd;
+            u.b = dn;
+            u.c = dm;
+            u.d = da;
+            set(&mut u, F_DBL, dbl);
+            set(&mut u, F_SUB, sub);
+        }
+        I::Fcmp { dbl, dn, dm } => {
+            u.tag = T::Fcmp;
+            u.b = dn;
+            u.c = dm;
+            set(&mut u, F_DBL, dbl);
+        }
+        I::Scvtf { dbl, dd, xn } => {
+            u.tag = T::Scvtf;
+            u.a = dd;
+            u.b = xn;
+            set(&mut u, F_DBL, dbl);
+        }
+        I::Fcvtzs { dbl, xd, dn } => {
+            u.tag = T::Fcvtzs;
+            u.a = xd;
+            u.b = dn;
+            set(&mut u, F_DBL, dbl);
+        }
+        I::OpaqueCall { f, dd, dn, dm } => {
+            u.tag = T::OpaqueCall;
+            u.sub = SubOp::Opaque(f);
+            u.a = dd;
+            u.b = dn;
+            if let Some(m) = dm {
+                u.c = m;
+                u.flags |= F_OPT;
+            }
+        }
+        // ---- Advanced SIMD (NEON) ----
+        I::NeonLd1 { esize, vt, base, off } => {
+            u.a = vt;
+            u.b = base;
+            u.esize = esize;
+            match off {
+                MemOff::Imm(i) => {
+                    u.tag = T::NeonLd1Imm;
+                    u.imm = i;
+                }
+                MemOff::RegLsl(xm, sh) => {
+                    u.tag = T::NeonLd1Reg;
+                    u.c = xm;
+                    u.imm2 = sh as i64;
+                }
+            }
+        }
+        I::NeonSt1 { esize, vt, base, off } => {
+            u.a = vt;
+            u.b = base;
+            u.esize = esize;
+            match off {
+                MemOff::Imm(i) => {
+                    u.tag = T::NeonSt1Imm;
+                    u.imm = i;
+                }
+                MemOff::RegLsl(xm, sh) => {
+                    u.tag = T::NeonSt1Reg;
+                    u.c = xm;
+                    u.imm2 = sh as i64;
+                }
+            }
+        }
+        I::NeonDupX { esize, vd, xn } => {
+            u.tag = T::NeonDupX;
+            u.a = vd;
+            u.b = xn;
+            u.esize = esize;
+        }
+        I::NeonDupLane0 { esize, vd, vn } => {
+            u.tag = T::NeonDupLane0;
+            u.a = vd;
+            u.b = vn;
+            u.esize = esize;
+        }
+        I::NeonMoviZero { vd } => {
+            u.tag = T::NeonMoviZero;
+            u.a = vd;
+        }
+        I::NeonFpBin { op, dbl, vd, vn, vm } => {
+            u.tag = T::NeonFpBin;
+            u.sub = SubOp::Fp(op);
+            u.a = vd;
+            u.b = vn;
+            u.c = vm;
+            set(&mut u, F_DBL, dbl);
+        }
+        I::NeonFpUn { op, dbl, vd, vn } => {
+            u.tag = T::NeonFpUn;
+            u.sub = SubOp::FpUn(op);
+            u.a = vd;
+            u.b = vn;
+            set(&mut u, F_DBL, dbl);
+        }
+        I::NeonFmla { dbl, vd, vn, vm, sub } => {
+            u.tag = T::NeonFmla;
+            u.a = vd;
+            u.b = vn;
+            u.c = vm;
+            set(&mut u, F_DBL, dbl);
+            set(&mut u, F_SUB, sub);
+        }
+        I::NeonIntBin { op, esize, vd, vn, vm } => {
+            u.tag = T::NeonIntBin;
+            u.sub = SubOp::Int(op);
+            u.a = vd;
+            u.b = vn;
+            u.c = vm;
+            u.esize = esize;
+        }
+        I::NeonFcm { op, dbl, vd, vn, vm } => {
+            u.tag = T::NeonFcm;
+            u.sub = SubOp::Cmp(op);
+            u.a = vd;
+            u.b = vn;
+            u.c = vm;
+            set(&mut u, F_DBL, dbl);
+        }
+        I::NeonCm { op, esize, vd, vn, vm } => {
+            u.tag = T::NeonCm;
+            u.sub = SubOp::Cmp(op);
+            u.a = vd;
+            u.b = vn;
+            u.c = vm;
+            u.esize = esize;
+        }
+        I::NeonBsl { vd, vn, vm } => {
+            u.tag = T::NeonBsl;
+            u.a = vd;
+            u.b = vn;
+            u.c = vm;
+        }
+        I::NeonFaddv { dbl, dd, vn } => {
+            u.tag = T::NeonFaddv;
+            u.a = dd;
+            u.b = vn;
+            set(&mut u, F_DBL, dbl);
+        }
+        I::NeonAddv { esize, dd, vn } => {
+            u.tag = T::NeonAddv;
+            u.a = dd;
+            u.b = vn;
+            u.esize = esize;
+        }
+        I::NeonUmov { esize, xd, vn, lane } => {
+            u.tag = T::NeonUmov;
+            u.a = xd;
+            u.b = vn;
+            u.esize = esize;
+            u.imm = lane as i64;
+        }
+        I::NeonInsX { esize, vd, lane, xn } => {
+            u.tag = T::NeonInsX;
+            u.a = vd;
+            u.b = xn;
+            u.esize = esize;
+            u.imm = lane as i64;
+        }
+        // ---- SVE predicates ----
+        I::Ptrue { pd, esize, s } => {
+            u.tag = T::Ptrue;
+            u.a = pd;
+            u.esize = esize;
+            set(&mut u, F_SETFLAGS, s);
+        }
+        I::Pfalse { pd } => {
+            u.tag = T::Pfalse;
+            u.a = pd;
+        }
+        I::While { pd, esize, xn, xm, unsigned } => {
+            u.tag = T::While;
+            u.a = pd;
+            u.b = xn;
+            u.c = xm;
+            u.esize = esize;
+            set(&mut u, F_UNSIGNED, unsigned);
+        }
+        I::Ptest { pg, pn } => {
+            u.tag = T::Ptest;
+            u.b = pg;
+            u.c = pn;
+        }
+        I::Pnext { pdn, pg, esize } => {
+            u.tag = T::Pnext;
+            u.a = pdn;
+            u.b = pg;
+            u.esize = esize;
+        }
+        I::Brk { pd, pg, pn, before, s } => {
+            u.tag = T::Brk;
+            u.a = pd;
+            u.b = pg;
+            u.c = pn;
+            set(&mut u, F_BEFORE, before);
+            set(&mut u, F_SETFLAGS, s);
+        }
+        I::PredLogic { op, pd, pg, pn, pm, s } => {
+            u.tag = T::PredLogic;
+            u.sub = SubOp::PLogic(op);
+            u.a = pd;
+            u.b = pg;
+            u.c = pn;
+            u.d = pm;
+            set(&mut u, F_SETFLAGS, s);
+        }
+        I::Rdffr { pd, pg, s } => {
+            u.tag = T::Rdffr;
+            u.a = pd;
+            if let Some(g) = pg {
+                u.c = g;
+                u.flags |= F_OPT;
+            }
+            set(&mut u, F_SETFLAGS, s);
+        }
+        I::Setffr => u.tag = T::Setffr,
+        I::Wrffr { pn } => {
+            u.tag = T::Wrffr;
+            u.b = pn;
+        }
+        // ---- SVE counting / induction ----
+        I::Cnt { xd, esize } => {
+            u.tag = T::Cnt;
+            u.a = xd;
+            u.esize = esize;
+        }
+        I::IncDec { xdn, esize, dec } => {
+            u.tag = T::IncDec;
+            u.a = xdn;
+            u.esize = esize;
+            set(&mut u, F_DEC, dec);
+        }
+        I::IncpX { xdn, pm, esize } => {
+            u.tag = T::IncpX;
+            u.a = xdn;
+            u.b = pm;
+            u.esize = esize;
+        }
+        I::Index { zd, esize, base, step } => {
+            u.tag = T::Index;
+            u.a = zd;
+            u.esize = esize;
+            match base {
+                RegOrImm::Reg(r) => {
+                    u.b = r;
+                    u.flags |= F_BASE_REG;
+                }
+                RegOrImm::Imm(i) => u.imm = i,
+            }
+            match step {
+                RegOrImm::Reg(r) => {
+                    u.c = r;
+                    u.flags |= F_STEP_REG;
+                }
+                RegOrImm::Imm(i) => u.imm2 = i,
+            }
+        }
+        // ---- SVE data movement ----
+        I::DupImm { zd, esize, imm } => {
+            u.tag = T::DupImm;
+            u.a = zd;
+            u.esize = esize;
+            u.imm = imm;
+        }
+        I::FdupImm { zd, dbl, bits } => {
+            u.tag = T::FdupImm;
+            u.a = zd;
+            u.imm = bits as i64;
+            set(&mut u, F_DBL, dbl);
+        }
+        I::DupX { zd, esize, xn } => {
+            u.tag = T::DupX;
+            u.a = zd;
+            u.b = xn;
+            u.esize = esize;
+        }
+        I::CpyX { zd, pg, xn, esize } => {
+            u.tag = T::CpyX;
+            u.a = zd;
+            u.b = pg;
+            u.c = xn;
+            u.esize = esize;
+        }
+        I::Sel { zd, pg, zn, zm, esize } => {
+            u.tag = T::Sel;
+            u.a = zd;
+            u.b = pg;
+            u.c = zn;
+            u.d = zm;
+            u.esize = esize;
+        }
+        I::Movprfx { zd, zn, pg } => {
+            u.tag = T::Movprfx;
+            u.a = zd;
+            u.b = zn;
+            if let Some((g, zeroing)) = pg {
+                u.c = g;
+                u.flags |= F_OPT;
+                set(&mut u, F_ZEROING, zeroing);
+            }
+        }
+        I::Last { xd, pg, zn, esize, before } => {
+            u.tag = T::Last;
+            u.a = xd;
+            u.b = pg;
+            u.c = zn;
+            u.esize = esize;
+            set(&mut u, F_BEFORE, before);
+        }
+        // ---- SVE memory ----
+        I::SveLd1 { zt, pg, esize, base, off, ff } => {
+            u.a = zt;
+            u.b = pg;
+            u.c = base;
+            u.esize = esize;
+            set(&mut u, F_FF, ff);
+            match off {
+                SveMemOff::ImmVl(i) => {
+                    u.tag = T::SveLd1ImmVl;
+                    u.imm = i;
+                }
+                SveMemOff::RegScaled(xm) => {
+                    u.tag = T::SveLd1Reg;
+                    u.d = xm;
+                }
+            }
+        }
+        I::SveLd1R { zt, pg, esize, base, imm } => {
+            u.tag = T::SveLd1R;
+            u.a = zt;
+            u.b = pg;
+            u.c = base;
+            u.esize = esize;
+            u.imm = imm;
+        }
+        I::SveSt1 { zt, pg, esize, base, off } => {
+            u.a = zt;
+            u.b = pg;
+            u.c = base;
+            u.esize = esize;
+            match off {
+                SveMemOff::ImmVl(i) => {
+                    u.tag = T::SveSt1ImmVl;
+                    u.imm = i;
+                }
+                SveMemOff::RegScaled(xm) => {
+                    u.tag = T::SveSt1Reg;
+                    u.d = xm;
+                }
+            }
+        }
+        I::SveLdGather { zt, pg, esize, addr, ff } => {
+            u.a = zt;
+            u.b = pg;
+            u.esize = esize;
+            set(&mut u, F_FF, ff);
+            match addr {
+                GatherAddr::VecImm(zn, i) => {
+                    u.tag = T::SveGatherVecImm;
+                    u.c = zn;
+                    u.imm = i;
+                }
+                GatherAddr::BaseVec { xn, zm, scaled } => {
+                    u.tag = T::SveGatherBaseVec;
+                    u.c = xn;
+                    u.d = zm;
+                    set(&mut u, F_SCALED, scaled);
+                }
+            }
+        }
+        I::SveStScatter { zt, pg, esize, addr } => {
+            u.a = zt;
+            u.b = pg;
+            u.esize = esize;
+            match addr {
+                GatherAddr::VecImm(zn, i) => {
+                    u.tag = T::SveScatterVecImm;
+                    u.c = zn;
+                    u.imm = i;
+                }
+                GatherAddr::BaseVec { xn, zm, scaled } => {
+                    u.tag = T::SveScatterBaseVec;
+                    u.c = xn;
+                    u.d = zm;
+                    set(&mut u, F_SCALED, scaled);
+                }
+            }
+        }
+        // ---- SVE arithmetic ----
+        I::SveIntBin { op, zdn, pg, zm, esize } => {
+            u.tag = T::SveIntBin;
+            u.sub = SubOp::Int(op);
+            u.a = zdn;
+            u.b = pg;
+            u.c = zm;
+            u.esize = esize;
+        }
+        I::SveIntBinU { op, zd, zn, zm, esize } => {
+            u.tag = T::SveIntBinU;
+            u.sub = SubOp::Int(op);
+            u.a = zd;
+            u.b = zn;
+            u.c = zm;
+            u.esize = esize;
+        }
+        I::SveAddImm { zdn, esize, imm } => {
+            u.tag = T::SveAddImm;
+            u.a = zdn;
+            u.esize = esize;
+            u.imm = imm as i64;
+        }
+        I::SveFpBin { op, zdn, pg, zm, dbl } => {
+            u.tag = T::SveFpBin;
+            u.sub = SubOp::Fp(op);
+            u.a = zdn;
+            u.b = pg;
+            u.c = zm;
+            set(&mut u, F_DBL, dbl);
+        }
+        I::SveFpUn { op, zd, pg, zn, dbl } => {
+            u.tag = T::SveFpUn;
+            u.sub = SubOp::FpUn(op);
+            u.a = zd;
+            u.b = pg;
+            u.c = zn;
+            set(&mut u, F_DBL, dbl);
+        }
+        I::SveFmla { zda, pg, zn, zm, dbl, sub } => {
+            u.tag = T::SveFmla;
+            u.a = zda;
+            u.b = pg;
+            u.c = zn;
+            u.d = zm;
+            set(&mut u, F_DBL, dbl);
+            set(&mut u, F_SUB, sub);
+        }
+        I::SveScvtf { zd, pg, zn, dbl } => {
+            u.tag = T::SveScvtf;
+            u.a = zd;
+            u.b = pg;
+            u.c = zn;
+            set(&mut u, F_DBL, dbl);
+        }
+        // ---- SVE compares ----
+        I::SveIntCmp { op, unsigned, pd, pg, zn, rhs, esize } => {
+            u.sub = SubOp::Cmp(op);
+            u.a = pd;
+            u.b = pg;
+            u.c = zn;
+            u.esize = esize;
+            set(&mut u, F_UNSIGNED, unsigned);
+            match rhs {
+                ZmOrImm::Z(zm) => {
+                    u.tag = T::SveIntCmpZ;
+                    u.d = zm;
+                }
+                ZmOrImm::Imm(i) => {
+                    u.tag = T::SveIntCmpImm;
+                    u.imm = i;
+                }
+            }
+        }
+        I::SveFpCmp { op, pd, pg, zn, rhs, dbl } => {
+            u.sub = SubOp::Cmp(op);
+            u.a = pd;
+            u.b = pg;
+            u.c = zn;
+            set(&mut u, F_DBL, dbl);
+            match rhs {
+                Some(zm) => {
+                    u.tag = T::SveFpCmpV;
+                    u.d = zm;
+                }
+                None => u.tag = T::SveFpCmp0,
+            }
+        }
+        // ---- SVE horizontal ----
+        I::SveReduce { op, vd, pg, zn, esize } => {
+            u.tag = T::SveReduce;
+            u.sub = SubOp::Red(op);
+            u.a = vd;
+            u.b = pg;
+            u.c = zn;
+            u.esize = esize;
+        }
+        I::SveFadda { vdn, pg, zm, dbl } => {
+            u.tag = T::SveFadda;
+            u.a = vdn;
+            u.b = pg;
+            u.c = zm;
+            set(&mut u, F_DBL, dbl);
+        }
+        // ---- SVE permutes ----
+        I::SveRev { zd, zn, esize } => {
+            u.tag = T::SveRev;
+            u.a = zd;
+            u.b = zn;
+            u.esize = esize;
+        }
+        I::SveExt { zdn, zm, imm } => {
+            u.tag = T::SveExt;
+            u.a = zdn;
+            u.c = zm;
+            u.imm = imm as i64;
+        }
+        I::SveZip { zd, zn, zm, esize, hi } => {
+            u.tag = T::SveZip;
+            u.a = zd;
+            u.b = zn;
+            u.c = zm;
+            u.esize = esize;
+            set(&mut u, F_HI, hi);
+        }
+        I::SveUzp { zd, zn, zm, esize, odd } => {
+            u.tag = T::SveUzp;
+            u.a = zd;
+            u.b = zn;
+            u.c = zm;
+            u.esize = esize;
+            set(&mut u, F_HI, odd);
+        }
+        I::SveTrn { zd, zn, zm, esize, odd } => {
+            u.tag = T::SveTrn;
+            u.a = zd;
+            u.b = zn;
+            u.c = zm;
+            u.esize = esize;
+            set(&mut u, F_HI, odd);
+        }
+        I::SveTbl { zd, zn, zm, esize } => {
+            u.tag = T::SveTbl;
+            u.a = zd;
+            u.b = zn;
+            u.c = zm;
+            u.esize = esize;
+        }
+        I::SveCompact { zd, pg, zn, esize } => {
+            u.tag = T::SveCompact;
+            u.a = zd;
+            u.b = pg;
+            u.c = zn;
+            u.esize = esize;
+        }
+        I::SveSplice { zdn, pg, zm, esize } => {
+            u.tag = T::SveSplice;
+            u.a = zdn;
+            u.b = pg;
+            u.c = zm;
+            u.esize = esize;
+        }
+        // ---- SVE termination ----
+        I::Cterm { xn, xm, ne } => {
+            u.tag = T::Cterm;
+            u.b = xn;
+            u.c = xm;
+            set(&mut u, F_NE, ne);
+        }
+    }
+    u
+}
+
+#[cfg(test)]
+pub(crate) mod tests {
+    use super::*;
+    use crate::asm::Asm;
+
+    /// One sample per decoded shape: every `Inst` variant, with both
+    /// alternatives of every addressing-mode / optional-operand split.
+    pub(crate) fn samples() -> Vec<Inst> {
+        use Inst::*;
+        vec![
+            MovImm { xd: 1, imm: 42 },
+            MovReg { xd: 1, xn: 2 },
+            AddImm { xd: 1, xn: 2, imm: -3 },
+            AddReg { xd: 1, xn: 2, xm: 3, lsl: 1 },
+            SubReg { xd: 1, xn: 2, xm: 3 },
+            Madd { xd: 1, xn: 2, xm: 3, xa: 4 },
+            Udiv { xd: 1, xn: 2, xm: 3 },
+            AndImm { xd: 1, xn: 2, imm: 0xff },
+            LogReg { op: PLogicOp::Eor, xd: 1, xn: 2, xm: 3 },
+            LslImm { xd: 1, xn: 2, sh: 3 },
+            LsrImm { xd: 1, xn: 2, sh: 3 },
+            AsrImm { xd: 1, xn: 2, sh: 3 },
+            Csel { xd: 1, xn: 2, xm: 3, cond: Cond::Lt },
+            Ldr { size: 4, signed: true, xt: 1, base: 2, off: MemOff::Imm(8) },
+            Ldr { size: 8, signed: false, xt: 1, base: 2, off: MemOff::RegLsl(3, 3) },
+            Str { size: 4, xt: 1, base: 2, off: MemOff::Imm(8) },
+            Str { size: 8, xt: 1, base: 2, off: MemOff::RegLsl(3, 3) },
+            LdrFp { dbl: true, vt: 1, base: 2, off: MemOff::Imm(0) },
+            LdrFp { dbl: false, vt: 1, base: 2, off: MemOff::RegLsl(3, 2) },
+            StrFp { dbl: true, vt: 1, base: 2, off: MemOff::Imm(0) },
+            StrFp { dbl: false, vt: 1, base: 2, off: MemOff::RegLsl(3, 2) },
+            CmpImm { xn: 1, imm: 5 },
+            CmpReg { xn: 1, xm: 2 },
+            B { target: 0 },
+            BCond { cond: Cond::Ge, target: 0 },
+            Cbz { xn: 1, target: 0 },
+            Cbnz { xn: 1, target: 0 },
+            Ret,
+            Halt,
+            Nop,
+            FmovImm { dbl: true, dd: 1, bits: 0x3ff0_0000_0000_0000 },
+            FmovXtoD { dd: 1, xn: 2 },
+            FmovReg { dbl: false, dd: 1, dn: 2 },
+            FmovDtoX { xd: 1, dn: 2 },
+            FpBin { op: FpOp::Mul, dbl: true, dd: 1, dn: 2, dm: 3 },
+            FpUn { op: FpUnOp::Sqrt, dbl: false, dd: 1, dn: 2 },
+            Fmadd { dbl: true, dd: 1, dn: 2, dm: 3, da: 4, sub: true },
+            Fcmp { dbl: true, dn: 1, dm: 2 },
+            Scvtf { dbl: true, dd: 1, xn: 2 },
+            Fcvtzs { dbl: false, xd: 1, dn: 2 },
+            OpaqueCall { f: OpaqueFn::Pow, dd: 1, dn: 2, dm: Some(3) },
+            OpaqueCall { f: OpaqueFn::Log, dd: 1, dn: 2, dm: None },
+            NeonLd1 { esize: Esize::D, vt: 1, base: 2, off: MemOff::Imm(0) },
+            NeonLd1 { esize: Esize::S, vt: 1, base: 2, off: MemOff::RegLsl(3, 2) },
+            NeonSt1 { esize: Esize::D, vt: 1, base: 2, off: MemOff::Imm(0) },
+            NeonSt1 { esize: Esize::S, vt: 1, base: 2, off: MemOff::RegLsl(3, 2) },
+            NeonDupX { esize: Esize::D, vd: 1, xn: 2 },
+            NeonDupLane0 { esize: Esize::D, vd: 1, vn: 2 },
+            NeonMoviZero { vd: 1 },
+            NeonFpBin { op: FpOp::Add, dbl: true, vd: 1, vn: 2, vm: 3 },
+            NeonFpUn { op: FpUnOp::Neg, dbl: false, vd: 1, vn: 2 },
+            NeonFmla { dbl: true, vd: 1, vn: 2, vm: 3, sub: false },
+            NeonIntBin { op: IntOp::Add, esize: Esize::S, vd: 1, vn: 2, vm: 3 },
+            NeonFcm { op: CmpOp::Gt, dbl: true, vd: 1, vn: 2, vm: 3 },
+            NeonCm { op: CmpOp::Eq, esize: Esize::S, vd: 1, vn: 2, vm: 3 },
+            NeonBsl { vd: 1, vn: 2, vm: 3 },
+            NeonFaddv { dbl: false, dd: 1, vn: 2 },
+            NeonAddv { esize: Esize::S, dd: 1, vn: 2 },
+            NeonUmov { esize: Esize::D, xd: 1, vn: 2, lane: 1 },
+            NeonInsX { esize: Esize::D, vd: 1, lane: 1, xn: 2 },
+            Ptrue { pd: 1, esize: Esize::D, s: true },
+            Pfalse { pd: 1 },
+            While { pd: 1, esize: Esize::D, xn: 2, xm: 3, unsigned: true },
+            Ptest { pg: 1, pn: 2 },
+            Pnext { pdn: 1, pg: 2, esize: Esize::D },
+            Brk { pd: 1, pg: 2, pn: 3, before: true, s: true },
+            PredLogic { op: PLogicOp::Bic, pd: 1, pg: 2, pn: 3, pm: 4, s: true },
+            Rdffr { pd: 1, pg: Some(2), s: true },
+            Rdffr { pd: 1, pg: None, s: false },
+            Setffr,
+            Wrffr { pn: 1 },
+            Cnt { xd: 1, esize: Esize::D },
+            IncDec { xdn: 1, esize: Esize::D, dec: true },
+            IncpX { xdn: 1, pm: 2, esize: Esize::D },
+            Index { zd: 1, esize: Esize::S, base: RegOrImm::Reg(2), step: RegOrImm::Imm(3) },
+            Index { zd: 1, esize: Esize::S, base: RegOrImm::Imm(0), step: RegOrImm::Reg(3) },
+            DupImm { zd: 1, esize: Esize::B, imm: -1 },
+            FdupImm { zd: 1, dbl: true, bits: 0x4000_0000_0000_0000 },
+            DupX { zd: 1, esize: Esize::D, xn: 2 },
+            CpyX { zd: 1, pg: 2, xn: 3, esize: Esize::D },
+            Sel { zd: 1, pg: 2, zn: 3, zm: 4, esize: Esize::D },
+            Movprfx { zd: 1, zn: 2, pg: Some((3, true)) },
+            Movprfx { zd: 1, zn: 2, pg: None },
+            Last { xd: 1, pg: 2, zn: 3, esize: Esize::D, before: true },
+            SveLd1 { zt: 1, pg: 2, esize: Esize::D, base: 3, off: SveMemOff::ImmVl(1), ff: true },
+            SveLd1 {
+                zt: 1,
+                pg: 2,
+                esize: Esize::D,
+                base: 3,
+                off: SveMemOff::RegScaled(4),
+                ff: false,
+            },
+            SveLd1R { zt: 1, pg: 2, esize: Esize::D, base: 3, imm: 8 },
+            SveSt1 { zt: 1, pg: 2, esize: Esize::D, base: 3, off: SveMemOff::ImmVl(1) },
+            SveSt1 { zt: 1, pg: 2, esize: Esize::D, base: 3, off: SveMemOff::RegScaled(4) },
+            SveLdGather {
+                zt: 1,
+                pg: 2,
+                esize: Esize::D,
+                addr: GatherAddr::VecImm(3, 8),
+                ff: true,
+            },
+            SveLdGather {
+                zt: 1,
+                pg: 2,
+                esize: Esize::D,
+                addr: GatherAddr::BaseVec { xn: 3, zm: 4, scaled: true },
+                ff: false,
+            },
+            SveStScatter { zt: 1, pg: 2, esize: Esize::D, addr: GatherAddr::VecImm(3, 8) },
+            SveStScatter {
+                zt: 1,
+                pg: 2,
+                esize: Esize::D,
+                addr: GatherAddr::BaseVec { xn: 3, zm: 4, scaled: false },
+            },
+            SveIntBin { op: IntOp::Add, zdn: 1, pg: 2, zm: 3, esize: Esize::D },
+            SveIntBinU { op: IntOp::Mul, zd: 1, zn: 2, zm: 3, esize: Esize::D },
+            SveAddImm { zdn: 1, esize: Esize::D, imm: 7 },
+            SveFpBin { op: FpOp::Add, zdn: 1, pg: 2, zm: 3, dbl: true },
+            SveFpUn { op: FpUnOp::Sqrt, zd: 1, pg: 2, zn: 3, dbl: false },
+            SveFmla { zda: 1, pg: 2, zn: 3, zm: 4, dbl: true, sub: true },
+            SveScvtf { zd: 1, pg: 2, zn: 3, dbl: true },
+            SveIntCmp {
+                op: CmpOp::Lt,
+                unsigned: true,
+                pd: 1,
+                pg: 2,
+                zn: 3,
+                rhs: ZmOrImm::Z(4),
+                esize: Esize::D,
+            },
+            SveIntCmp {
+                op: CmpOp::Eq,
+                unsigned: false,
+                pd: 1,
+                pg: 2,
+                zn: 3,
+                rhs: ZmOrImm::Imm(0),
+                esize: Esize::B,
+            },
+            SveFpCmp { op: CmpOp::Gt, pd: 1, pg: 2, zn: 3, rhs: Some(4), dbl: true },
+            SveFpCmp { op: CmpOp::Lt, pd: 1, pg: 2, zn: 3, rhs: None, dbl: false },
+            SveReduce { op: RedOp::FAddV, vd: 1, pg: 2, zn: 3, esize: Esize::D },
+            SveFadda { vdn: 1, pg: 2, zm: 3, dbl: true },
+            SveRev { zd: 1, zn: 2, esize: Esize::D },
+            SveExt { zdn: 1, zm: 2, imm: 8 },
+            SveZip { zd: 1, zn: 2, zm: 3, esize: Esize::D, hi: true },
+            SveUzp { zd: 1, zn: 2, zm: 3, esize: Esize::D, odd: true },
+            SveTrn { zd: 1, zn: 2, zm: 3, esize: Esize::D, odd: false },
+            SveTbl { zd: 1, zn: 2, zm: 3, esize: Esize::D },
+            SveCompact { zd: 1, pg: 2, zn: 3, esize: Esize::D },
+            SveSplice { zdn: 1, pg: 2, zm: 3, esize: Esize::D },
+            Cterm { xn: 1, xm: 2, ne: true },
+        ]
+    }
+
+    #[test]
+    fn every_tag_is_reachable_from_decode() {
+        let mut a = Asm::new();
+        for i in samples() {
+            a.push(i);
+        }
+        let dec = DecodedProgram::decode(&a.finish());
+        let mut seen = [false; UopTag::COUNT];
+        for u in dec.uops() {
+            seen[u.tag as usize] = true;
+        }
+        let missing: Vec<usize> = (0..UopTag::COUNT).filter(|&t| !seen[t]).collect();
+        assert!(missing.is_empty(), "tags with no decode sample: {missing:?}");
+    }
+
+    #[test]
+    fn deps_match_the_inst_metadata() {
+        let mut a = Asm::new();
+        for i in samples() {
+            a.push(i);
+        }
+        let prog = a.finish();
+        let dec = DecodedProgram::decode(&prog);
+        let mut reads = Vec::new();
+        let mut writes = Vec::new();
+        for (pc, inst) in prog.insts.iter().enumerate() {
+            inst.deps(&mut reads, &mut writes);
+            let want_r: Vec<u8> = reads.iter().map(|&r| reg_slot(r)).collect();
+            let want_w: Vec<u8> = writes.iter().map(|&w| reg_slot(w)).collect();
+            let u = &dec.uops()[pc];
+            assert_eq!(dec.reads(u), &want_r[..], "pc {pc} reads of {inst:?}");
+            assert_eq!(dec.writes(u), &want_w[..], "pc {pc} writes of {inst:?}");
+            assert_eq!(u.class, inst.class(), "pc {pc} class of {inst:?}");
+            assert_eq!(u.is_sve(), inst.is_sve(), "pc {pc}");
+            assert_eq!(u.is_neon(), inst.is_neon(), "pc {pc}");
+            assert_eq!(u.is_cond_branch(), inst.is_cond_branch(), "pc {pc}");
+        }
+    }
+
+    #[test]
+    fn crack_rules_follow_the_class() {
+        let gather = lower(&Inst::SveLdGather {
+            zt: 0,
+            pg: 0,
+            esize: Esize::D,
+            addr: GatherAddr::VecImm(1, 0),
+            ff: false,
+        });
+        assert_eq!(gather.crack, Crack::PerElem);
+        assert_eq!(gather.crack.max_uops(512, Esize::D), 8);
+        let fadda = lower(&Inst::SveFadda { vdn: 0, pg: 0, zm: 1, dbl: true });
+        assert_eq!(fadda.crack, Crack::Per128b);
+        assert_eq!(fadda.crack.max_uops(512, Esize::D), 4);
+        let fmla = lower(&Inst::SveFmla { zda: 0, pg: 0, zn: 1, zm: 2, dbl: true, sub: false });
+        assert_eq!(fmla.crack, Crack::Unit);
+        assert_eq!(fmla.crack.max_uops(2048, Esize::D), 1);
+    }
+
+    #[test]
+    fn reg_slots_are_dense_and_distinct() {
+        let mut seen = [false; REG_SLOTS];
+        for n in 0..31 {
+            seen[reg_slot(RegId::X(n)) as usize] = true;
+        }
+        for n in 0..32 {
+            seen[reg_slot(RegId::Z(n)) as usize] = true;
+        }
+        for n in 0..16 {
+            seen[reg_slot(RegId::P(n)) as usize] = true;
+        }
+        seen[reg_slot(RegId::Ffr) as usize] = true;
+        seen[reg_slot(RegId::Nzcv) as usize] = true;
+        assert!(seen.iter().all(|&s| s), "every scoreboard slot is reachable");
+    }
+
+    #[test]
+    fn ret_and_halt_share_a_tag() {
+        assert_eq!(lower(&Inst::Ret).tag, UopTag::Halt);
+        assert_eq!(lower(&Inst::Halt).tag, UopTag::Halt);
+        assert_eq!(lower(&Inst::Ret).class, UopClass::Branch);
+    }
+}

@@ -56,14 +56,17 @@ commands:
                              before them (l2_bytes=512K, loads_per_cycle=1);
                              key=a,b,c sweeps a cartesian grid over the
                              listed values (rob=64,128,256; max 64 points)
+      --pareto-only          filter the report and artifacts to frontier
+                             design points (dominated variants dropped)
       --vls/--benches/--out/--jobs/--resume   as for sweep
   report                     emit Fig. 2 + Fig. 7 + Fig. 8 artifacts
       --out DIR  --vls A,B,C  --benches a,b  --jobs N   (as for sweep;
                              the Fig. 8 part always resumes from DIR/jobs/)
-      --compare A.json B.json  diff two fig8/dse artifacts instead of
-                             emitting figures: prints a per-(variant,
-                             bench, VL, metric) delta table covering
-                             speedups and (dse/v2) perf/W + perf/mm2
+      --compare A.json B.json  diff two artifacts instead of emitting
+                             figures: fig8/dse docs compare by speedup
+                             (and dse/v2 perf/W + perf/mm2); two
+                             BENCH_hotpath.json docs compare by
+                             simulator Minst/s throughput
       --fail-on-regress PCT  with --compare: exit 1 if any value drops
                              more than PCT percent, or a point disappears
   trace <bench>              Fig. 3-style cycle-by-cycle timeline
@@ -315,22 +318,33 @@ fn main() {
                 Ok(o) => o,
                 Err(e) => die_run(&e),
             };
-            for v in &outcome.variants {
+            // --pareto-only: restrict reporting and artifacts to the
+            // frontier design points (ROADMAP open item)
+            let pareto_only = has_flag(&args, "--pareto-only");
+            let (shown, pts) = if pareto_only {
+                report::dse::frontier_only(&outcome.variants, &cfg.vls)
+            } else {
+                let pts = report::dse::pareto(&outcome.variants, &cfg.vls);
+                (outcome.variants.clone(), pts)
+            };
+            for v in &shown {
                 println!("## {}\n", v.name);
                 println!("{}", report::fig8::table(&v.rows, &cfg.vls).to_markdown());
             }
             println!("## Cross-variant pivot — speedup, perf/W, perf/mm2 over NEON\n");
-            println!("{}", report::dse::pivot(&outcome.variants, &cfg.vls).to_markdown());
-            println!("## Pareto frontier — performance vs energy vs area\n");
-            let pts = report::dse::pareto(&outcome.variants, &cfg.vls);
+            println!("{}", report::dse::pivot(&shown, &cfg.vls).to_markdown());
+            if pareto_only {
+                println!("## Pareto frontier (frontier-only view)\n");
+            } else {
+                println!("## Pareto frontier — performance vs energy vs area\n");
+            }
             println!("{}", report::dse::pareto_table(&pts).to_markdown());
-            emit_paths_and_counts(
-                report::dse::write_artifacts(&outcome.variants, &cfg.vls, &out),
-                "dse",
-                outcome.simulated,
-                outcome.reloaded,
-                &out,
-            );
+            let paths = if pareto_only {
+                report::dse::write_artifacts_pareto_only(&outcome.variants, &cfg.vls, &out)
+            } else {
+                report::dse::write_artifacts(&outcome.variants, &cfg.vls, &out)
+            };
+            emit_paths_and_counts(paths, "dse", outcome.simulated, outcome.reloaded, &out);
         }
         "report" if has_flag(&args, "--compare") => run_compare(&args),
         "report" => {

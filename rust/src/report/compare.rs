@@ -1,11 +1,14 @@
 //! Cross-commit artifact diffing: `sve report --compare A.json B.json`.
 //!
-//! Parses two `fig8.json` or `dse.json` artifacts (any mix — a fig8
-//! document is treated as the `table2` variant), matches their
+//! Parses two `fig8.json`, `dse.json` or `BENCH_hotpath.json` artifacts
+//! (any mix — a fig8 document is treated as the `table2` variant, a
+//! perf-hotpath document as the `hotpath` one), matches their
 //! (variant, benchmark, VL, metric) points, and renders a delta table.
-//! Metrics are `speedup` for every artifact and, for `sve-repro/dse/v2`
-//! documents, the §PPA `perf_per_watt` / `perf_per_mm2` values too —
-//! all "higher is better", so one regression rule covers them. With a
+//! Metrics are `speedup` for figure artifacts (plus, for
+//! `sve-repro/dse/v2` documents, the §PPA `perf_per_watt` /
+//! `perf_per_mm2` values) and the simulator-throughput Minst/s values
+//! for perf-hotpath artifacts — all "higher is better", so one
+//! regression rule covers them. With a
 //! `--fail-on-regress PCT` threshold the comparison **fails** when any
 //! value in A drops by more than PCT percent in B, or when a point of A
 //! is missing from B entirely — the primitive CI uses as a regression
@@ -126,9 +129,47 @@ fn ppa_points_from_variant(
     Ok(())
 }
 
-/// Extract every comparable point from a parsed `fig8.json` or
-/// `dse.json` document, in document order: per variant, the speedup
-/// points first, then (v2 only) the §PPA points.
+/// Schema tag of `BENCH_hotpath.json` (written by
+/// `cargo bench --bench perf_hotpath`).
+pub const HOTPATH_SCHEMA: &str = "sve-repro/perf-hotpath/v1";
+
+/// Extract the simulator-throughput points of a perf-hotpath document:
+/// per kernel, the functional and func+timing Minst/s values under the
+/// pseudo-variant `hotpath` (higher is better, like every figure
+/// metric, so the same `--fail-on-regress` contract applies).
+fn points_from_hotpath(doc: &Json, out: &mut Vec<MetricPoint>) -> Result<(), String> {
+    let vl = doc
+        .get("vl_bits")
+        .and_then(Json::as_u64)
+        .ok_or_else(|| "perf-hotpath artifact has no \"vl_bits\"".to_string())?;
+    let kernels = doc
+        .get("kernels")
+        .ok_or_else(|| "perf-hotpath artifact has no \"kernels\" object".to_string())?;
+    let Json::Obj(entries) = kernels else {
+        return Err("perf-hotpath \"kernels\" is not an object".to_string());
+    };
+    for (name, k) in entries {
+        for metric in ["functional_minst_s", "func_timing_minst_s"] {
+            let value = k
+                .get(metric)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| format!("perf-hotpath kernel '{name}' has no \"{metric}\""))?;
+            out.push(MetricPoint {
+                variant: "hotpath".to_string(),
+                bench: name.clone(),
+                vl_bits: vl,
+                metric: metric.to_string(),
+                value,
+            });
+        }
+    }
+    Ok(())
+}
+
+/// Extract every comparable point from a parsed `fig8.json`, `dse.json`
+/// or `BENCH_hotpath.json` document, in document order: per variant,
+/// the speedup points first, then (dse/v2 only) the §PPA points; for
+/// perf-hotpath documents, the per-kernel throughput points.
 pub fn extract_points(doc: &Json) -> Result<Vec<MetricPoint>, String> {
     let schema = doc
         .get("schema")
@@ -155,12 +196,14 @@ pub fn extract_points(doc: &Json) -> Result<Vec<MetricPoint>, String> {
                 }
             }
         }
+        HOTPATH_SCHEMA => points_from_hotpath(doc, &mut points)?,
         other => {
             return Err(format!(
-                "unsupported artifact schema '{other}' (expected {}, {} or {})",
+                "unsupported artifact schema '{other}' (expected {}, {}, {} or {})",
                 fig8::FIG8_SCHEMA,
                 dse::DSE_SCHEMA,
-                dse::DSE_SCHEMA_V1
+                dse::DSE_SCHEMA_V1,
+                HOTPATH_SCHEMA
             ))
         }
     }
@@ -399,6 +442,47 @@ mod tests {
         assert!(render(&c).contains("perf_per_watt"));
         // the metric column appears because non-speedup points exist
         assert!(c.table.header.contains(&"metric".to_string()));
+    }
+
+    #[test]
+    fn extracts_hotpath_points_and_applies_the_regression_contract() {
+        let doc = |triad: f64, hacc: f64| {
+            Json::parse(&format!(
+                r#"{{
+  "schema": "sve-repro/perf-hotpath/v1",
+  "vl_bits": 256,
+  "smoke": true,
+  "kernels": {{
+    "stream_triad": {{ "insts": 120000, "functional_minst_s": {triad},
+                       "func_timing_minst_s": 21.5 }},
+    "haccmk": {{ "insts": 90000, "functional_minst_s": {hacc},
+                 "func_timing_minst_s": 14.25 }}
+  }}
+}}"#
+            ))
+            .unwrap()
+        };
+        let a = extract_points(&doc(80.0, 60.0)).unwrap();
+        assert_eq!(a.len(), 4, "2 kernels x 2 throughput metrics");
+        assert_eq!(a[0].variant, "hotpath");
+        assert_eq!(a[0].bench, "stream_triad");
+        assert_eq!(a[0].metric, "functional_minst_s");
+        assert_eq!(a[0].value, 80.0);
+        assert_eq!(a[0].label(), "hotpath/stream_triad@vl256:functional_minst_s");
+        // identical docs pass; a big functional-throughput drop fails
+        assert!(!compare(&a, &a, Some(5.0)).failed());
+        let b = extract_points(&doc(40.0, 60.0)).unwrap();
+        let c = compare(&a, &b, Some(5.0));
+        assert!(c.failed());
+        assert_eq!(c.regressions.len(), 1);
+        assert!(render(&c).contains("functional_minst_s"));
+        // a malformed kernel entry is an error, not a silent skip
+        let bad = Json::parse(
+            r#"{ "schema": "sve-repro/perf-hotpath/v1", "vl_bits": 256,
+                 "kernels": { "x": { "insts": 1 } } }"#,
+        )
+        .unwrap();
+        assert!(extract_points(&bad).unwrap_err().contains("functional_minst_s"));
     }
 
     #[test]

@@ -282,6 +282,33 @@ pub fn pareto_json(pts: &[ParetoPoint]) -> Json {
     )
 }
 
+/// The `sve dse --pareto-only` view: frontier design points only.
+/// Returns the variants that own at least one frontier point (in the
+/// original variant order) and the frontier points themselves (in
+/// ranking order). Because domination is transitive and every dominator
+/// chain terminates on the frontier, re-ranking the kept variants can
+/// never resurrect a dominated point — filtering is stable.
+pub fn frontier_only(
+    variants: &[VariantRows],
+    vls: &[usize],
+) -> (Vec<VariantRows>, Vec<ParetoPoint>) {
+    let mut pts = pareto(variants, vls);
+    pts.retain(|p| p.frontier);
+    let kept = variants
+        .iter()
+        .filter(|v| pts.iter().any(|p| p.variant == v.name))
+        .cloned()
+        .collect();
+    (kept, pts)
+}
+
+/// The long-form CSV restricted to frontier (variant, VL) rows.
+pub fn frontier_table(variants: &[VariantRows], vls: &[usize], pts: &[ParetoPoint]) -> Table {
+    let mut t = table(variants, vls);
+    t.rows.retain(|r| pts.iter().any(|p| p.variant == r[0] && p.vl_bits.to_string() == r[4]));
+    t
+}
+
 /// The cross-variant pivot: one row per (benchmark, VL); per variant a
 /// speedup column, a perf/W column (runs per joule) and a perf/mm²
 /// column (runs per second per mm² at a nominal 1 GHz) — the paper's
@@ -368,6 +395,12 @@ pub fn table(variants: &[VariantRows], vls: &[usize]) -> Table {
 /// Fig. 8-shaped benchmark payload; at the top level, the Pareto
 /// ranking of every (variant, VL) design point.
 pub fn to_json(variants: &[VariantRows], vls: &[usize]) -> Json {
+    to_json_with(variants, vls, &pareto(variants, vls))
+}
+
+/// [`to_json`] with an explicit `pareto` section — what `--pareto-only`
+/// uses to emit a frontier-only ranking over the kept variants.
+pub fn to_json_with(variants: &[VariantRows], vls: &[usize], pts: &[ParetoPoint]) -> Json {
     Json::Obj(vec![
         ("schema".into(), Json::str(DSE_SCHEMA)),
         ("figure".into(), Json::str("dse")),
@@ -393,12 +426,17 @@ pub fn to_json(variants: &[VariantRows], vls: &[usize]) -> Json {
                     .collect(),
             ),
         ),
-        ("pareto".into(), pareto_json(&pareto(variants, vls))),
+        ("pareto".into(), pareto_json(pts)),
     ])
 }
 
 /// The human-readable Markdown artifact (`dse.md`).
 pub fn to_markdown(variants: &[VariantRows], vls: &[usize]) -> String {
+    to_markdown_with(variants, vls, &pareto(variants, vls))
+}
+
+/// [`to_markdown`] with an explicit Pareto ranking (see [`to_json_with`]).
+pub fn to_markdown_with(variants: &[VariantRows], vls: &[usize], pts: &[ParetoPoint]) -> String {
     use std::fmt::Write as _;
     let vl_list = vls.iter().map(|v| v.to_string()).collect::<Vec<_>>().join(", ");
     let mut out = String::new();
@@ -445,7 +483,7 @@ pub fn to_markdown(variants: &[VariantRows], vls: &[usize]) -> String {
          Regenerate with `sve dse --uarch <variants> --out <dir>` (add \
          `--resume` to reuse cached jobs); machine-readable copies: \
          `dse.json`, `dse.csv`.\n",
-        pareto_table(&pareto(variants, vls)).to_markdown(),
+        pareto_table(pts).to_markdown(),
     );
     out
 }
@@ -465,6 +503,28 @@ pub fn write_artifacts(
     std::fs::write(&csv_path, table(variants, vls).to_csv())?;
     let md_path = dir.join("dse.md");
     std::fs::write(&md_path, to_markdown(variants, vls))?;
+    Ok(vec![json_path, csv_path, md_path])
+}
+
+/// [`write_artifacts`] for `sve dse --pareto-only`: every section is
+/// filtered to frontier design points — dominated variants disappear
+/// from the `variants` payload, the `pareto` ranking lists frontier
+/// points only, and `dse.csv` keeps only rows whose (variant, VL) pair
+/// is on the frontier.
+pub fn write_artifacts_pareto_only(
+    variants: &[VariantRows],
+    vls: &[usize],
+    out_dir: impl AsRef<Path>,
+) -> io::Result<Vec<PathBuf>> {
+    let (kept, pts) = frontier_only(variants, vls);
+    let dir = out_dir.as_ref();
+    std::fs::create_dir_all(dir)?;
+    let json_path = dir.join("dse.json");
+    std::fs::write(&json_path, to_json_with(&kept, vls, &pts).render_pretty())?;
+    let csv_path = dir.join("dse.csv");
+    std::fs::write(&csv_path, frontier_table(&kept, vls, &pts).to_csv())?;
+    let md_path = dir.join("dse.md");
+    std::fs::write(&md_path, to_markdown_with(&kept, vls, &pts))?;
     Ok(vec![json_path, csv_path, md_path])
 }
 
@@ -614,6 +674,56 @@ mod tests {
         assert_eq!(t.rows.len(), 4);
         assert_eq!(t.rows[0][0], "1");
         assert!(t.rows[3][6] == "dominated");
+    }
+
+    #[test]
+    fn frontier_only_drops_dominated_variants_everywhere() {
+        // identical timings on small-core and big-core: every big-core
+        // point is dominated (see pareto_marks_dominated_points), so the
+        // frontier view keeps exactly the small-core variant
+        let same = vec![
+            variant("small-core", "small-core", 1000),
+            variant("big-core", "big-core", 1000),
+        ];
+        let (kept, pts) = frontier_only(&same, &[128, 256]);
+        assert_eq!(kept.len(), 1);
+        assert_eq!(kept[0].name, "small-core");
+        assert_eq!(pts.len(), 2);
+        assert!(pts.iter().all(|p| p.frontier && p.variant == "small-core"));
+        // the frontier json lists only frontier points and kept variants
+        let doc = to_json_with(&kept, &[128, 256], &pts);
+        assert_eq!(doc.get("variants").unwrap().as_arr().unwrap().len(), 1);
+        let pj = doc.get("pareto").unwrap().as_arr().unwrap();
+        assert_eq!(pj.len(), 2);
+        assert!(pj.iter().all(|p| p.get("frontier").unwrap().as_bool() == Some(true)));
+        // the frontier csv keeps only frontier (variant, VL) rows
+        let t = frontier_table(&kept, &[128, 256], &pts);
+        assert_eq!(t.rows.len(), 2);
+        assert!(t.rows.iter().all(|r| r[0] == "small-core"));
+        // an unfiltered emitter run is untouched (golden safety)
+        let full = to_json(&same, &[128, 256]);
+        assert_eq!(full.get("pareto").unwrap().as_arr().unwrap().len(), 4);
+    }
+
+    #[test]
+    fn pareto_only_artifacts_write_filtered_files() {
+        let same = vec![
+            variant("small-core", "small-core", 1000),
+            variant("big-core", "big-core", 1000),
+        ];
+        let dir = std::env::temp_dir()
+            .join(format!("sve-dse-pareto-test-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let paths = write_artifacts_pareto_only(&same, &[128, 256], &dir).unwrap();
+        assert_eq!(paths.len(), 3);
+        let json = std::fs::read_to_string(&paths[0]).unwrap();
+        assert!(!json.contains("big-core"), "dominated variant must be filtered");
+        assert!(!json.contains("\"frontier\": false"));
+        let csv = std::fs::read_to_string(&paths[1]).unwrap();
+        assert!(!csv.contains("big-core"));
+        let md = std::fs::read_to_string(&paths[2]).unwrap();
+        assert!(!md.contains("big-core"), "md sections are frontier-only");
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -190,7 +190,10 @@ mod tests {
 
     fn rows() -> Vec<Fig8Row> {
         let neon = rec("stream_triad", Isa::Neon, 1000);
-        let sve = vec![rec("stream_triad", Isa::Sve(128), 800), rec("stream_triad", Isa::Sve(256), 400)];
+        let sve = vec![
+            rec("stream_triad", Isa::Sve(128), 800),
+            rec("stream_triad", Isa::Sve(256), 400),
+        ];
         vec![Fig8Row {
             bench: "stream_triad",
             group: Group::Right,
@@ -218,7 +221,8 @@ mod tests {
         let t = table(&rows(), &[128, 256]);
         let csv = t.to_csv();
         assert_eq!(csv.lines().count(), 2);
-        assert!(csv.starts_with("bench,group,extra_vec_%,speedup_sve128,speedup_sve256,neon_cycles"));
+        let header = "bench,group,extra_vec_%,speedup_sve128,speedup_sve256,neon_cycles";
+        assert!(csv.starts_with(header));
         assert!(csv.contains("stream_triad,right,25.0,1.25,2.50,1000"));
         let md = to_markdown(&rows(), &[128, 256]);
         assert!(md.contains("# Fig. 8"));

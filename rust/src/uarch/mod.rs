@@ -32,6 +32,7 @@ pub use ppa::PpaCounters;
 
 use crate::asm::Program;
 use crate::exec::{Executor, RunStats, Trap};
+use crate::isa::uop::DecodedProgram;
 
 /// Run `prog` functionally and through the timing model in one pass.
 ///
@@ -64,9 +65,23 @@ pub fn run_timed(
     cfg: UarchConfig,
     max_insts: u64,
 ) -> Result<(RunStats, TimingResult), Trap> {
+    let dec = DecodedProgram::decode(prog);
+    run_timed_decoded(ex, &dec, cfg, max_insts)
+}
+
+/// [`run_timed`] over an already-decoded program — the sweep hot path:
+/// the coordinator decodes each (benchmark, target) once and shares the
+/// [`DecodedProgram`] across every VL and µarch variant, so the timing
+/// pipeline and the functional executor consume the same µop stream.
+pub fn run_timed_decoded(
+    ex: &mut Executor,
+    dec: &DecodedProgram,
+    cfg: UarchConfig,
+    max_insts: u64,
+) -> Result<(RunStats, TimingResult), Trap> {
     let vl = ex.state.vl_bits();
     let mut pipe = Pipeline::new(cfg, vl);
-    let stats = ex.run_with(prog, max_insts, |info| pipe.on_retire(&info))?;
+    let stats = ex.run_decoded_with(dec, max_insts, |info| pipe.on_retire(&info))?;
     Ok((stats, pipe.result))
 }
 
@@ -77,10 +92,11 @@ pub fn run_traced(
     cfg: UarchConfig,
     max_insts: u64,
 ) -> Result<(RunStats, TimingResult, Vec<InstTiming>), Trap> {
+    let dec = DecodedProgram::decode(prog);
     let vl = ex.state.vl_bits();
     let mut pipe = Pipeline::new(cfg, vl);
     pipe.enable_trace();
-    let stats = ex.run_with(prog, max_insts, |info| pipe.on_retire(&info))?;
+    let stats = ex.run_decoded_with(&dec, max_insts, |info| pipe.on_retire(&info))?;
     let trace = pipe.trace.take().unwrap_or_default();
     Ok((stats, pipe.result, trace))
 }

@@ -18,22 +18,8 @@
 use super::cache::{Hierarchy, HitLevel};
 use super::config::{latency, UarchConfig};
 use crate::exec::StepInfo;
-use crate::isa::{RegId, UopClass};
-
-/// Scoreboard size: X0-30 (31) + Z0-31 (32) + P0-15 (16) + FFR + NZCV.
-const REG_SLOTS: usize = 31 + 32 + 16 + 2;
-
-/// Dense index of an architectural register for the scoreboard.
-#[inline]
-fn reg_slot(r: RegId) -> usize {
-    match r {
-        RegId::X(n) => n as usize,          // 0..31 (31/xzr never emitted)
-        RegId::Z(n) => 31 + n as usize,     // 31..63
-        RegId::P(n) => 63 + n as usize,     // 63..79
-        RegId::Ffr => 79,
-        RegId::Nzcv => 80,
-    }
-}
+use crate::isa::uop::{Crack, REG_SLOTS};
+use crate::isa::UopClass;
 
 /// Issue-bandwidth domains.
 #[derive(Clone, Copy, PartialEq, Eq)]
@@ -168,10 +154,6 @@ pub struct Pipeline {
     pub result: TimingResult,
     /// when Some, record per-instruction timelines (Fig. 3 traces)
     pub trace: Option<Vec<InstTiming>>,
-    /// Register-dependence lists cached per pc: the program is fixed for
-    /// a Pipeline's lifetime and hot loops retire the same pcs millions
-    /// of times, so `Inst::deps` runs once per static instruction.
-    deps_cache: Vec<Option<Box<(Vec<RegId>, Vec<RegId>)>>>,
 }
 
 impl Pipeline {
@@ -194,7 +176,6 @@ impl Pipeline {
             store_usage: UsageWindow::new(),
             result: TimingResult::default(),
             trace: None,
-            deps_cache: Vec::new(),
         }
     }
 
@@ -241,12 +222,13 @@ impl Pipeline {
         start + base + crosses * self.cfg.line_cross_penalty
     }
 
-    /// Feed one retired instruction from the functional executor.
-    /// A Pipeline is per-program: per-pc caches assume the instruction
-    /// at a given pc never changes across calls.
+    /// Feed one retired µop from the functional executor. All static
+    /// metadata (class, dependence slots, cracking rule) comes from the
+    /// shared decode layer — the pipeline never re-derives it from the
+    /// `Inst`.
     pub fn on_retire(&mut self, info: &StepInfo<'_>) {
         let cfg_decode = self.cfg.decode_width;
-        let class = info.class; // precomputed by the executor, == inst.class()
+        let class = info.uop.class;
         // ---------------- fetch/decode/dispatch ----------------
         // I-cache: charge a first-touch penalty per 64B of program text
         let iaddr = (info.pc as u64) * 4 + 0x4000_0000;
@@ -275,19 +257,10 @@ impl Pipeline {
         self.fetched_this_cycle += 1;
 
         // ---------------- issue ----------------
-        if self.deps_cache.len() <= info.pc {
-            self.deps_cache.resize_with(info.pc + 1, || None);
-        }
-        let deps = self.deps_cache[info.pc].take().unwrap_or_else(|| {
-            let mut reads = Vec::new();
-            let mut writes = Vec::new();
-            info.inst.deps(&mut reads, &mut writes);
-            Box::new((reads, writes))
-        });
-        let (reads, writes) = &*deps;
+        // RAW readiness over the decoder's pre-mapped scoreboard slots
         let mut ready = dispatch + 1;
-        for r in reads.iter() {
-            ready = ready.max(self.reg_ready[reg_slot(*r)]);
+        for &r in info.reads {
+            ready = ready.max(self.reg_ready[r as usize]);
         }
         let issue = match domain_of(class) {
             Domain::Int => self.int_usage.claim(ready, self.cfg.int_issue_per_cycle),
@@ -298,14 +271,17 @@ impl Pipeline {
         };
 
         // ---------------- execute / complete ----------------
+        // The decoder's cracking rule drives the expansion: `Per128b`
+        // µops pay the §5 cross-lane penalty per 128-bit slice,
+        // `PerElem` µops crack into per-element port slots.
         let mut complete = issue + latency(class, &self.cfg).max(1);
-        if class.is_cross_lane() {
+        if info.uop.crack == Crack::Per128b {
             // §5: cross-lane penalty proportional to VL
             let extra = (self.vl_bits / 128) as u64 - 1;
             complete += extra * self.cfg.cross_lane_per_128b;
         }
-        match class {
-            UopClass::VecGather | UopClass::VecScatter => {
+        match info.uop.crack {
+            Crack::PerElem => {
                 // cracked into per-element accesses (§4): each element
                 // claims its own port slot
                 let cap = if class == UopClass::VecGather {
@@ -324,11 +300,7 @@ impl Pipeline {
                     self.result.cracked_elems += 1;
                 }
             }
-            UopClass::ScalarLoad
-            | UopClass::VecLoad
-            | UopClass::VecLoadBcast
-            | UopClass::ScalarStore
-            | UopClass::VecStore => {
+            Crack::Unit if class.is_mem() => {
                 let is_store = matches!(class, UopClass::ScalarStore | UopClass::VecStore);
                 for a in info.mem {
                     // split at the 512-bit port width
@@ -361,13 +333,12 @@ impl Pipeline {
         }
 
         // ---------------- writeback ----------------
-        for w in writes.iter() {
-            self.reg_ready[reg_slot(*w)] = complete;
+        for &w in info.writes {
+            self.reg_ready[w as usize] = complete;
         }
-        self.deps_cache[info.pc] = Some(deps);
 
         // ---------------- branch resolution ----------------
-        if info.inst.is_cond_branch() {
+        if info.uop.is_cond_branch() {
             self.result.branches += 1;
             if !self.pred.predict_update(info.pc, info.taken) {
                 self.result.mispredicts += 1;

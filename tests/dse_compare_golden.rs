@@ -56,7 +56,12 @@ fn rec(
     }
 }
 
-fn rows(triad_cycles: [u64; 3], triad_ipc: [f64; 3], g500_cycles: u64, g500_ipc: f64) -> Vec<Fig8Row> {
+fn rows(
+    triad_cycles: [u64; 3],
+    triad_ipc: [f64; 3],
+    g500_cycles: u64,
+    g500_ipc: f64,
+) -> Vec<Fig8Row> {
     let triad_neon = rec(
         "stream_triad",
         Group::Right,
@@ -92,7 +97,8 @@ fn rows(triad_cycles: [u64; 3], triad_ipc: [f64; 3], g500_cycles: u64, g500_ipc:
             0.03125,
         ),
     ];
-    let g500 = rec("graph500", Group::Left, Isa::Neon, g500_cycles, 20000, g500_ipc, false, 0.0, 0.25);
+    let g500 =
+        rec("graph500", Group::Left, Isa::Neon, g500_cycles, 20000, g500_ipc, false, 0.0, 0.25);
     let g500_sve = vec![
         rec("graph500", Group::Left, Isa::Sve(128), g500_cycles, 20000, g500_ipc, false, 0.0, 0.25),
         rec("graph500", Group::Left, Isa::Sve(256), g500_cycles, 20000, g500_ipc, false, 0.0, 0.25),
@@ -166,6 +172,22 @@ fn dse_artifact_writer_emits_the_same_bytes() {
     assert_eq!(by_name("dse.csv"), include_str!("golden/dse.csv"));
     assert_eq!(by_name("dse.md"), include_str!("golden/dse.md"));
     let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The `--pareto-only` golden snippet: the frontier-only ranking table
+/// over the standard fixture (where every point happens to be on the
+/// frontier — filtering semantics are pinned by the dse unit tests with
+/// a dominated fixture).
+#[test]
+fn pareto_only_table_matches_golden() {
+    let (kept, pts) = dse::frontier_only(&variants(), &VLS);
+    assert_eq!(
+        dse::pareto_table(&pts).to_markdown(),
+        include_str!("golden/dse-pareto.txt"),
+        "frontier-only pareto table drifted"
+    );
+    assert!(pts.iter().all(|p| p.frontier));
+    assert!(pts.iter().all(|p| kept.iter().any(|v| v.name == p.variant)));
 }
 
 /// The compare report over the golden DSE artifact and a doctored copy:

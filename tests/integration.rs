@@ -441,6 +441,90 @@ fn cli_dse_grid_expansion_runs_end_to_end() {
 }
 
 #[test]
+fn cli_dse_pareto_only_filters_to_frontier_points() {
+    let dir = temp_dir("cli-dse-pareto");
+    let out_dir = dir.to_string_lossy().into_owned();
+    let out = sve(&[
+        "dse", "--uarch", "small-core,big-core", "--vls", "128", "--benches",
+        "stream_triad", "--out", &out_dir, "--jobs", "1", "--pareto-only",
+    ]);
+    assert_eq!(
+        out.status.code(),
+        Some(0),
+        "stderr: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("Pareto frontier (frontier-only view)"), "{stdout}");
+    // no dominated row survives the filter (the status column would
+    // render a " dominated " cell)
+    assert!(!stdout.contains("| dominated "), "{stdout}");
+    let json = std::fs::read_to_string(dir.join("dse.json")).unwrap();
+    assert!(json.contains("\"schema\": \"sve-repro/dse/v2\""));
+    assert!(!json.contains("\"frontier\": false"), "pareto section must be frontier-only");
+    // every variant section printed must still be a variant in the json
+    for line in stdout.lines().filter(|l| l.starts_with("## ")) {
+        let name = line.trim_start_matches("## ").trim();
+        if name.starts_with("Cross-variant") || name.starts_with("Pareto") {
+            continue;
+        }
+        assert!(json.contains(&format!("\"name\": \"{name}\"")), "{name} missing from json");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Two `BENCH_hotpath.json` documents diff through the same compare
+/// path and `--fail-on-regress` contract as the figure artifacts.
+#[test]
+fn cli_compare_accepts_hotpath_artifacts() {
+    let doc = |triad: &str| {
+        format!(
+            r#"{{
+  "schema": "sve-repro/perf-hotpath/v1",
+  "vl_bits": 256,
+  "smoke": true,
+  "kernels": {{
+    "stream_triad": {{ "insts": 120000, "functional_minst_s": {triad},
+                       "func_timing_minst_s": 21.5 }}
+  }}
+}}
+"#
+        )
+    };
+    let dir = temp_dir("cli-compare-hotpath");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = |name: &str| dir.join(name).to_string_lossy().into_owned();
+    std::fs::write(dir.join("a.json"), doc("80.0")).unwrap();
+    std::fs::write(dir.join("same.json"), doc("80.0")).unwrap();
+    std::fs::write(dir.join("slow.json"), doc("40.0")).unwrap();
+
+    // identical throughput docs: exit 0, 2 points compared
+    let out = sve(&[
+        "report", "--compare", &path("a.json"), &path("same.json"),
+        "--fail-on-regress", "50",
+    ]);
+    assert_eq!(out.status.code(), Some(0), "{}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("compared 2 point(s)"), "{stdout}");
+    assert!(stdout.contains("hotpath"), "{stdout}");
+
+    // a halved functional throughput fails a 10% wall
+    let out = sve(&[
+        "report", "--compare", &path("a.json"), &path("slow.json"),
+        "--fail-on-regress", "10",
+    ]);
+    assert_eq!(out.status.code(), Some(1));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("REGRESS"), "{stdout}");
+    assert!(stdout.contains("functional_minst_s"), "{stdout}");
+
+    // without a threshold the same delta is informational: exit 0
+    let out = sve(&["report", "--compare", &path("a.json"), &path("slow.json")]);
+    assert_eq!(out.status.code(), Some(0));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
 fn cli_dse_writes_artifacts_and_reports_cache_counts() {
     let dir = temp_dir("cli-dse");
     let out_dir = dir.to_string_lossy().into_owned();

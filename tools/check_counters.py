@@ -1,0 +1,143 @@
+#!/usr/bin/env python3
+"""CI consistency check: the PPA energies in `dse.json` must be exactly
+reproducible from the raw event counters persisted in the (shared)
+`<out>/jobs/` store — including the cracked gather/scatter element
+counters the decode layer's `PerElem` rule drives.
+
+Usage:
+    python3 tools/check_counters.py <reports-dir> [--expect-cracked]
+
+For every (variant, benchmark, VL) energy point in
+`<reports-dir>/dse.json` (schema sve-repro/dse/v2), the script finds the
+job file in `<reports-dir>/jobs/` whose identity fields (bench, isa,
+vl_bits, cycles, insts, vector_fraction) match that run, recomputes the
+energy proxy from the job's counters with the same formulas the Rust
+emitter uses (imported from `gen_goldens.py`, which mirrors
+`rust/src/uarch/ppa.rs` operation for operation), and compares. A
+missing job or a mismatched energy fails the check: it would mean the
+PPA output was computed from counters the job store (and therefore the
+fig8 sweep sharing it) never saw.
+
+`--expect-cracked` additionally requires at least one matched SVE job to
+carry a nonzero `cracked_elems` counter — used with a gather-heavy
+benchmark (spmv_ell) so the cracked path is actually exercised.
+"""
+
+import glob
+import json
+import math
+import os
+import sys
+
+from gen_goldens import energy_pj
+
+
+def load_jobs(jobs_dir):
+    jobs = []
+    for path in sorted(glob.glob(os.path.join(jobs_dir, "*.json"))):
+        with open(path, encoding="utf-8") as fh:
+            doc = json.load(fh)
+        if doc.get("schema") != "sve-repro/fig8-job/v2":
+            continue
+        doc["_path"] = path
+        jobs.append(doc)
+    return jobs
+
+
+def job_counters(job):
+    return {
+        "l1d_accesses": job["l1d_accesses"],
+        "l2_accesses": job["l2_accesses"],
+        "mem_accesses": job["mem_accesses"],
+        "mispredicts": job["mispredicts"],
+        "cracked_elems": job["cracked_elems"],
+    }
+
+
+def match_job(jobs, bench, isa, run):
+    """The job whose identity fields equal this run's."""
+    out = []
+    for j in jobs:
+        if (
+            j["bench"] == bench
+            and j["isa"] == isa
+            and j["vl_bits"] == run["vl_bits"]
+            and j["cycles"] == run["cycles"]
+            and j["insts"] == run["insts"]
+            and j["vector_fraction"] == run["vector_fraction"]
+        ):
+            out.append(j)
+    return out
+
+
+def main():
+    args = [a for a in sys.argv[1:] if not a.startswith("--")]
+    expect_cracked = "--expect-cracked" in sys.argv[1:]
+    if len(args) != 1:
+        sys.exit(__doc__)
+    reports = args[0]
+    with open(os.path.join(reports, "dse.json"), encoding="utf-8") as fh:
+        dse = json.load(fh)
+    if dse.get("schema") != "sve-repro/dse/v2":
+        sys.exit("FAIL: dse.json is not a sve-repro/dse/v2 document")
+    jobs = load_jobs(os.path.join(reports, "jobs"))
+    if not jobs:
+        sys.exit("FAIL: no v2 job files under %s/jobs/" % reports)
+
+    checked = 0
+    cracked_total = 0
+    for variant in dse["variants"]:
+        uarch = variant["uarch"]
+        runs = {}  # bench -> list of (isa, run-record dict)
+        for b in variant["benchmarks"]:
+            entries = [("neon", b["neon"])]
+            entries += [("sve%d" % r["vl_bits"], r) for r in b["sve"]]
+            runs[b["bench"]] = entries
+        for e in variant["energy_pj"]:
+            bench = e["bench"]
+            points = [("neon", e["neon_pj"])]
+            by_vl = {r["vl_bits"]: r["energy_pj"] for r in e["sve"]}
+            for isa, run in runs[bench]:
+                want = points[0][1] if isa == "neon" else by_vl[run["vl_bits"]]
+                matches = match_job(jobs, bench, isa, run)
+                if not matches:
+                    sys.exit(
+                        "FAIL: no job file matches %s/%s/%s@vl%d — the PPA "
+                        "output is not derivable from the job store"
+                        % (variant["name"], bench, isa, run["vl_bits"])
+                    )
+                ok = False
+                for j in matches:
+                    got = energy_pj(
+                        uarch,
+                        run["vl_bits"],
+                        run["insts"],
+                        run["vector_fraction"],
+                        run["cycles"],
+                        job_counters(j),
+                    )
+                    if math.isclose(got, want, rel_tol=1e-12, abs_tol=0.0):
+                        ok = True
+                        if isa != "neon":
+                            cracked_total += j["cracked_elems"]
+                        break
+                if not ok:
+                    sys.exit(
+                        "FAIL: %s/%s/%s@vl%d: energy %.6f in dse.json is not "
+                        "reproducible from any matching job's counters"
+                        % (variant["name"], bench, isa, run["vl_bits"], want)
+                    )
+                checked += 1
+    if expect_cracked and cracked_total == 0:
+        sys.exit(
+            "FAIL: --expect-cracked set but no matched SVE job carries a "
+            "nonzero cracked_elems counter"
+        )
+    print(
+        "OK: %d energy points reproduced from job-store counters "
+        "(cracked_elems total over SVE jobs: %d)" % (checked, cracked_total)
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -605,6 +605,13 @@ def compare_fixture():
     return a, b
 
 
+def pareto_only_table(vs, vls):
+    """Mirror of dse::frontier_only + pareto_table: the --pareto-only
+    golden snippet is the frontier-only ranking table."""
+    pts = [p for p in pareto(vs, vls) if p["frontier"]]
+    return pareto_table(pts)
+
+
 def main():
     vs = variants()
     out = {
@@ -612,6 +619,7 @@ def main():
         "dse.csv": dse_table(vs, VLS).to_csv(),
         "dse.md": dse_to_markdown(vs, VLS),
         "compare.txt": render(compare(*compare_fixture(), 2.0)),
+        "dse-pareto.txt": pareto_only_table(vs, VLS).to_markdown(),
     }
     for name, text in out.items():
         path = os.path.join(GOLDEN_DIR, name)
