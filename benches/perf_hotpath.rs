@@ -1,30 +1,105 @@
 //! §Perf: simulator hot-path throughput — the numbers EXPERIMENTS.md
 //! §Perf tracks. Measures (a) functional-only execution and (b) the full
 //! functional+timing pipeline, in host Minst/s, across representative
-//! kernels, and writes the machine-readable trajectory to
-//! `BENCH_hotpath.json` so the perf history is diffable across PRs.
+//! kernels, on **both** functional engines — the baseline block
+//! interpreter and the superblock trace engine — and writes the
+//! machine-readable trajectory to `BENCH_hotpath.json` so the perf
+//! history is diffable across PRs.
 //!
-//!     cargo bench --bench perf_hotpath            # full run
-//!     cargo bench --bench perf_hotpath -- --smoke # CI smoke subset
+//! The headline `functional_minst_s` / `func_timing_minst_s` keys carry
+//! the default engine's numbers (trace, or baseline under `--no-trace`),
+//! so `sve report --compare` works unchanged on old and new artifacts;
+//! the per-engine `*_baseline_minst_s` / `*_trace_minst_s` keys are
+//! extra and ignored by the comparator.
+//!
+//! Before timing anything, every kernel is run once on each engine and
+//! the run statistics and every timing counter are required to be
+//! **equal** — a perf number for an engine that diverges from the
+//! baseline would be meaningless, so divergence exits nonzero.
+//!
+//!     cargo bench --bench perf_hotpath                # both engines
+//!     cargo bench --bench perf_hotpath -- --smoke     # CI smoke subset
+//!     cargo bench --bench perf_hotpath -- --no-trace  # baseline only
+//!     cargo bench --bench perf_hotpath -- --out F.json
 
-use sve_repro::bench_util::{bench_n, report_throughput, Sample};
-use sve_repro::compiler::Target;
-use sve_repro::exec::Executor;
-use sve_repro::uarch::{run_timed_decoded, UarchConfig};
-use sve_repro::workloads;
+use sve_repro::bench_util::{bench_n, report_ab, report_throughput, Sample};
+use sve_repro::compiler::{Compiled, Target};
+use sve_repro::exec::{Engine, Executor};
+use sve_repro::uarch::{run_timed_decoded_engine, UarchConfig};
+use sve_repro::workloads::{self, Workload};
 
 const VL_BITS: usize = 256;
 const KERNELS: [&str; 4] = ["stream_triad", "haccmk", "strlen1m", "graph500"];
 
-struct Row {
-    name: &'static str,
-    insts: f64,
+/// One engine's pair of measurements for one kernel.
+struct EngineCols {
     functional: Sample,
     func_timing: Sample,
 }
 
+struct Row {
+    name: &'static str,
+    insts: f64,
+    baseline: EngineCols,
+    /// `None` under `--no-trace`.
+    trace: Option<EngineCols>,
+}
+
+fn measure(w: &Workload, c: &Compiled, engine: Engine, n: usize) -> EngineCols {
+    let f = bench_n(n, || {
+        let mut ex = Executor::new(VL_BITS, w.mem.clone());
+        ex.run_decoded_engine_with(&c.decoded, engine, w.max_insts, |_| {}).unwrap().insts
+    });
+    let t = bench_n(n, || {
+        let mut ex = Executor::new(VL_BITS, w.mem.clone());
+        run_timed_decoded_engine(&mut ex, &c.decoded, engine, UarchConfig::default(), w.max_insts)
+            .unwrap()
+            .1
+            .cycles
+    });
+    EngineCols { functional: f, func_timing: t }
+}
+
+/// Run `w` once per engine through the full functional+timing pipeline
+/// and demand equal statistics and timing counters. Returns the shared
+/// instruction count.
+fn check_engines_agree(name: &str, w: &Workload, c: &Compiled) -> f64 {
+    let mut base = Executor::new(VL_BITS, w.mem.clone());
+    let (bs, bt) = run_timed_decoded_engine(
+        &mut base,
+        &c.decoded,
+        Engine::Baseline,
+        UarchConfig::default(),
+        w.max_insts,
+    )
+    .unwrap();
+    let mut traced = Executor::new(VL_BITS, w.mem.clone());
+    let (ts, tt) = run_timed_decoded_engine(
+        &mut traced,
+        &c.decoded,
+        Engine::Trace,
+        UarchConfig::default(),
+        w.max_insts,
+    )
+    .unwrap();
+    if bs != ts || bt != tt {
+        eprintln!("FAILED: {name}: trace engine diverged from baseline");
+        eprintln!("  baseline stats {bs:?} timing {bt:?}");
+        eprintln!("  trace    stats {ts:?} timing {tt:?}");
+        std::process::exit(1);
+    }
+    bs.insts as f64
+}
+
 fn main() {
-    let smoke = std::env::args().any(|a| a == "--smoke");
+    let args: Vec<String> = std::env::args().collect();
+    let smoke = args.iter().any(|a| a == "--smoke");
+    let no_trace = args.iter().any(|a| a == "--no-trace");
+    let out = args
+        .iter()
+        .position(|a| a == "--out")
+        .and_then(|i| args.get(i + 1).cloned())
+        .unwrap_or_else(|| "BENCH_hotpath.json".into());
     let (names, samples): (&[&str], usize) = if smoke { (&KERNELS[..2], 2) } else { (&KERNELS, 5) };
 
     let mut rows: Vec<Row> = Vec::new();
@@ -33,47 +108,74 @@ fn main() {
         // decode-once: the measured loops run the pre-decoded µop
         // program, like the sweep coordinator does
         let c = w.compile(Target::Sve);
-        let insts = {
-            let mut ex = Executor::new(VL_BITS, w.mem.clone());
-            ex.run_decoded(&c.decoded, w.max_insts).unwrap().insts as f64
+        // correctness gate first — a fast-but-wrong engine must never
+        // produce a perf number
+        let insts = check_engines_agree(name, &w, &c);
+        let baseline = measure(&w, &c, Engine::Baseline, samples);
+        report_throughput(
+            &format!("functional {name} baseline ({insts:.0} insts)"),
+            &baseline.functional,
+            insts,
+            "inst",
+        );
+        let trace = if no_trace {
+            None
+        } else {
+            let tr = measure(&w, &c, Engine::Trace, samples);
+            let fl = format!("functional {name} trace");
+            report_ab(&fl, &baseline.functional, &tr.functional, insts, "inst");
+            let tl = format!("func+timing {name} trace");
+            report_ab(&tl, &baseline.func_timing, &tr.func_timing, insts, "inst");
+            Some(tr)
         };
-        let f = bench_n(samples, || {
-            let mut ex = Executor::new(VL_BITS, w.mem.clone());
-            ex.run_decoded(&c.decoded, w.max_insts).unwrap().insts
-        });
-        report_throughput(&format!("functional {name} ({insts:.0} insts)"), &f, insts, "inst");
-        let t = bench_n(samples, || {
-            let mut ex = Executor::new(VL_BITS, w.mem.clone());
-            run_timed_decoded(&mut ex, &c.decoded, UarchConfig::default(), w.max_insts)
-                .unwrap()
-                .1
-                .cycles
-        });
-        report_throughput(&format!("func+timing {name}"), &t, insts, "inst");
-        rows.push(Row { name, insts, functional: f, func_timing: t });
+        rows.push(Row { name, insts, baseline, trace });
     }
 
     // Hand-rolled JSON (the offline image has no serde); schema kept
-    // deliberately flat so future PRs can diff the trajectory.
+    // deliberately flat so future PRs can diff the trajectory. The
+    // headline keys carry the default engine (trace unless --no-trace);
+    // per-engine keys are additive and ignored by `report --compare`.
     let mut json = String::new();
     json.push_str("{\n");
     json.push_str("  \"schema\": \"sve-repro/perf-hotpath/v1\",\n");
     json.push_str(&format!("  \"vl_bits\": {VL_BITS},\n"));
     json.push_str(&format!("  \"smoke\": {smoke},\n"));
+    json.push_str(&format!(
+        "  \"engine\": \"{}\",\n",
+        if no_trace { Engine::Baseline.label() } else { Engine::Trace.label() }
+    ));
     json.push_str("  \"kernels\": {\n");
     for (i, r) in rows.iter().enumerate() {
         let sep = if i + 1 < rows.len() { "," } else { "" };
+        let bf = r.baseline.functional.throughput(r.insts) / 1e6;
+        let bt = r.baseline.func_timing.throughput(r.insts) / 1e6;
+        let (hf, ht) = match &r.trace {
+            Some(tr) => (
+                tr.functional.throughput(r.insts) / 1e6,
+                tr.func_timing.throughput(r.insts) / 1e6,
+            ),
+            None => (bf, bt),
+        };
         json.push_str(&format!(
-            "    \"{}\": {{ \"insts\": {:.0}, \"functional_minst_s\": {:.3}, \
-             \"func_timing_minst_s\": {:.3} }}{}\n",
-            r.name,
-            r.insts,
-            r.functional.throughput(r.insts) / 1e6,
-            r.func_timing.throughput(r.insts) / 1e6,
-            sep,
+            "    \"{}\": {{ \"insts\": {:.0}, \"functional_minst_s\": {hf:.3}, \
+             \"func_timing_minst_s\": {ht:.3},\n",
+            r.name, r.insts,
         ));
+        json.push_str(&format!(
+            "             \"functional_baseline_minst_s\": {bf:.3}, \
+             \"func_timing_baseline_minst_s\": {bt:.3}",
+        ));
+        if let Some(tr) = &r.trace {
+            json.push_str(&format!(
+                ",\n             \"functional_trace_minst_s\": {:.3}, \
+                 \"func_timing_trace_minst_s\": {:.3}",
+                tr.functional.throughput(r.insts) / 1e6,
+                tr.func_timing.throughput(r.insts) / 1e6,
+            ));
+        }
+        json.push_str(&format!(" }}{sep}\n"));
     }
     json.push_str("  }\n}\n");
-    std::fs::write("BENCH_hotpath.json", &json).expect("write BENCH_hotpath.json");
-    println!("wrote BENCH_hotpath.json");
+    std::fs::write(&out, &json).unwrap_or_else(|e| panic!("write {out}: {e}"));
+    println!("wrote {out}");
 }

@@ -123,6 +123,22 @@ pub fn report_throughput(name: &str, s: &Sample, items: f64, unit: &str) {
     );
 }
 
+/// Mean-time speedup of `contender` over `baseline` (>1 means faster).
+pub fn speedup(baseline: &Sample, contender: &Sample) -> f64 {
+    baseline.mean_ns / contender.mean_ns
+}
+
+/// A/B throughput line: baseline vs contender at the same item count,
+/// with the mean-time speedup — the perf_hotpath side-by-side format.
+pub fn report_ab(name: &str, base: &Sample, new: &Sample, items: f64, unit: &str) {
+    println!(
+        "{name:<44} base: {:.3} M{unit}/s  new: {:.3} M{unit}/s  speedup: {:.2}x",
+        base.throughput(items) / 1e6,
+        new.throughput(items) / 1e6,
+        speedup(base, new),
+    );
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -141,6 +157,13 @@ mod tests {
     fn bench_n_returns_n_samples() {
         let s = bench_n(5, || 42u64);
         assert_eq!(s.iters, 5);
+    }
+
+    #[test]
+    fn speedup_is_mean_time_ratio() {
+        let mk = |mean_ns| Sample { mean_ns, median_ns: mean_ns, stddev_ns: 0.0, iters: 1 };
+        assert_eq!(speedup(&mk(200.0), &mk(100.0)), 2.0);
+        assert_eq!(speedup(&mk(100.0), &mk(200.0)), 0.5);
     }
 
     #[test]

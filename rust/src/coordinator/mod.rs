@@ -33,9 +33,9 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
 use crate::compiler::{Compiled, Target};
-use crate::exec::Executor;
+use crate::exec::{Engine, Executor};
 use crate::report::store::{job_key, JobStore};
-use crate::uarch::{run_timed_decoded, PpaCounters, UarchConfig, UarchVariant};
+use crate::uarch::{run_timed_decoded_engine, PpaCounters, UarchConfig, UarchVariant};
 use crate::workloads::{self, Group, Workload};
 
 /// One simulated configuration.
@@ -120,9 +120,15 @@ pub struct RunRecord {
 /// assert!(sve.cycles < neon.cycles);
 /// ```
 pub fn run_one(name: &'static str, isa: Isa) -> Result<RunRecord, String> {
+    run_one_engine(name, isa, Engine::default())
+}
+
+/// [`run_one`] on an explicit functional engine (the CLI's `--no-trace`
+/// escape hatch selects [`Engine::Baseline`] here for A/B runs).
+pub fn run_one_engine(name: &'static str, isa: Isa, engine: Engine) -> Result<RunRecord, String> {
     let w = workloads::build(name);
     let compiled = w.compile(isa.target());
-    run_compiled(&w, &compiled, isa)
+    run_compiled_engine_with(&w, &compiled, isa, &UarchConfig::default(), engine)
 }
 
 /// [`run_compiled_with`] at the paper's Table 2 configuration.
@@ -130,22 +136,36 @@ pub fn run_compiled(w: &Workload, compiled: &Compiled, isa: Isa) -> Result<RunRe
     run_compiled_with(w, compiled, isa, &UarchConfig::default())
 }
 
-/// Run an already-built workload with an already-compiled program.
-/// SVE binaries are vector-length agnostic (§2.2), so a sweep compiles
-/// **and decodes** each (benchmark, target) once and reuses the µop
-/// program ([`Compiled::decoded`]) at every VL and µarch variant — only
-/// the executor's hardware VL and the timing configuration change
-/// between runs.
+/// [`run_compiled_engine_with`] on the default (trace) engine.
 pub fn run_compiled_with(
     w: &Workload,
     compiled: &Compiled,
     isa: Isa,
     cfg: &UarchConfig,
 ) -> Result<RunRecord, String> {
+    run_compiled_engine_with(w, compiled, isa, cfg, Engine::default())
+}
+
+/// Run an already-built workload with an already-compiled program.
+/// SVE binaries are vector-length agnostic (§2.2), so a sweep compiles
+/// **and decodes** each (benchmark, target) once and reuses the µop
+/// program ([`Compiled::decoded`]) at every VL and µarch variant — only
+/// the executor's hardware VL and the timing configuration change
+/// between runs. The functional [`Engine`] never enters a job's cache
+/// key: both engines retire the same stream (pinned by `exec/trace.rs`
+/// tests), so trace-engine and baseline runs share cache entries.
+pub fn run_compiled_engine_with(
+    w: &Workload,
+    compiled: &Compiled,
+    isa: Isa,
+    cfg: &UarchConfig,
+    engine: Engine,
+) -> Result<RunRecord, String> {
     let name = w.name;
     let mut ex = Executor::new(isa.vl(), w.mem.clone());
-    let (stats, timing) = run_timed_decoded(&mut ex, &compiled.decoded, cfg.clone(), w.max_insts)
-        .map_err(|e| format!("{name}/{}: trap {e:?}", isa.label()))?;
+    let (stats, timing) =
+        run_timed_decoded_engine(&mut ex, &compiled.decoded, engine, cfg.clone(), w.max_insts)
+            .map_err(|e| format!("{name}/{}: trap {e:?}", isa.label()))?;
     w.verify(&ex.mem).map_err(|e| format!("{name}/{}: {e}", isa.label()))?;
     let mem_accesses = timing.l1d_hits + timing.l1d_misses;
     Ok(RunRecord {
@@ -215,6 +235,10 @@ pub struct SweepConfig {
     pub out_dir: Option<PathBuf>,
     /// Timing-model parameters; part of every job's cache key.
     pub uarch: UarchConfig,
+    /// Functional engine running each job. Deliberately **not** part of
+    /// the job cache key: engines are bit-identical (architectural state
+    /// and every timing counter), so cached records are engine-agnostic.
+    pub engine: Engine,
 }
 
 impl SweepConfig {
@@ -227,6 +251,7 @@ impl SweepConfig {
             resume: false,
             out_dir: None,
             uarch: UarchConfig::default(),
+            engine: Engine::default(),
         }
     }
 }
@@ -412,7 +437,9 @@ pub fn run_dse(cfg: &SweepConfig, variants: &[UarchVariant]) -> Result<DseOutcom
                             _ => &prep.sve,
                         };
                         let uarch = &variants[job.variant].cfg;
-                        let r = run_compiled_with(&prep.w, compiled, job.isa, uarch)?;
+                        let r = run_compiled_engine_with(
+                            &prep.w, compiled, job.isa, uarch, cfg.engine,
+                        )?;
                         if let Some(st) = &store {
                             let key = job_key(job.bench, job.isa, uarch);
                             st.save(&key, &r).map_err(|e| {
@@ -555,6 +582,29 @@ mod tests {
                 assert_eq!(ra.insts, rb.insts);
                 assert_eq!(ra.vector_fraction.to_bits(), rb.vector_fraction.to_bits());
                 assert_eq!(ra.ipc.to_bits(), rb.ipc.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn baseline_engine_sweep_is_bit_identical_to_trace_engine() {
+        // the whole reason the engine stays out of job_key: every
+        // reported number must be engine-independent
+        let vls = [128usize, 512];
+        let names = ["stream_triad", "haccmk"];
+        let mut cfg = SweepConfig::new(&vls, &names);
+        assert_eq!(cfg.engine, Engine::Trace, "trace engine is the default");
+        let traced = run_sweep(&cfg).unwrap();
+        cfg.engine = Engine::Baseline;
+        let base = run_sweep(&cfg).unwrap();
+        for (a, b) in traced.rows.iter().zip(&base.rows) {
+            assert_eq!(a.neon.cycles, b.neon.cycles);
+            assert_eq!(a.neon.counters, b.neon.counters);
+            for (ra, rb) in a.sve.iter().zip(&b.sve) {
+                assert_eq!(ra.cycles, rb.cycles);
+                assert_eq!(ra.insts, rb.insts);
+                assert_eq!(ra.vector_fraction.to_bits(), rb.vector_fraction.to_bits());
+                assert_eq!(ra.counters, rb.counters);
             }
         }
     }

@@ -505,7 +505,11 @@ mod bitident {
         }
     }
 
-    /// Run `prog` to completion on both paths and compare everything.
+    /// Run `prog` to completion on all three paths — the legacy
+    /// interpreter, the decoded block interpreter, and the superblock
+    /// trace engine (with a low formation threshold so even short runs
+    /// execute stitched traces, tail side exits and traps included) —
+    /// and compare everything: state, memory, traps and `RunStats`.
     fn run_both(
         prog: &crate::asm::Program,
         mem: &Memory,
@@ -523,6 +527,15 @@ mod bitident {
         assert_state_eq(&legacy, &decoded, what);
         for &(lo, len) in regions {
             assert_mem_eq(&legacy.mem, &decoded.mem, lo, len, what);
+        }
+        let mut traced = Executor::new(vl, mem.clone());
+        let mut engine = crate::exec::TraceEngine::with_threshold(&dec, 2);
+        let rc = engine.run_with(&mut traced, &dec, max, |_| {});
+        let tw = format!("{what} [trace engine]");
+        assert_eq!(rb, rc, "{tw}: run results (stats/trap)");
+        assert_state_eq(&decoded, &traced, &tw);
+        for &(lo, len) in regions {
+            assert_mem_eq(&decoded.mem, &traced.mem, lo, len, &tw);
         }
     }
 

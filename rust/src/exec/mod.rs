@@ -25,9 +25,12 @@
 mod neon;
 mod scalar;
 mod sve;
+pub mod trace;
 
 #[cfg(test)]
 mod legacy;
+
+pub use trace::TraceEngine;
 
 use crate::arch::CpuState;
 use crate::asm::Program;
@@ -92,6 +95,31 @@ impl RunStats {
             0.0
         } else {
             self.vector_insts as f64 / self.insts as f64
+        }
+    }
+}
+
+/// Which functional-execution engine to run a decoded program on. Both
+/// are bit-identical in architectural state, retire stream and
+/// statistics (pinned by the `exec/legacy.rs` harness); they differ
+/// only in wall-clock speed. [`Engine::Trace`] is the default
+/// everywhere; `--no-trace` on the CLI selects [`Engine::Baseline`]
+/// for A/B runs.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Engine {
+    /// The block interpreter ([`Executor::run_decoded_with`]).
+    Baseline,
+    /// The superblock trace cache ([`TraceEngine`]).
+    #[default]
+    Trace,
+}
+
+impl Engine {
+    /// Stable label for reports and JSON artifacts.
+    pub fn label(self) -> &'static str {
+        match self {
+            Engine::Baseline => "baseline",
+            Engine::Trace => "trace",
         }
     }
 }
@@ -335,29 +363,57 @@ impl Executor {
     ) -> Result<RunStats, Trap> {
         let uops = dec.uops();
         let insts = dec.insts();
+        let straight = dec.straight_lens();
         let mut stats = RunStats::default();
         while !self.halted {
-            if stats.insts >= max_insts {
+            let remaining = max_insts - stats.insts;
+            if remaining == 0 {
                 return Err(Trap::Budget);
             }
-            let pc = self.state.pc;
-            let taken = self.exec_at(dec, pc)?;
-            let u = &uops[pc];
-            stats.insts += 1;
-            stats.sve_insts += u64::from(u.is_sve());
-            stats.neon_insts += u64::from(u.is_neon());
-            stats.vector_insts += u64::from(u.is_vector());
-            on_retire(StepInfo {
-                pc,
-                uop: u,
-                inst: &insts[pc],
-                reads: dec.reads(u),
-                writes: dec.writes(u),
-                taken,
-                mem: &self.accesses,
-            });
+            // One straight-line run: only its final µop can redirect
+            // the pc or halt, so the budget is metered here, once per
+            // run, instead of once per retire (the min keeps trip
+            // counts exact — a clamped run re-enters the check above).
+            let n = match straight.get(self.state.pc) {
+                Some(&l) => u64::from(l).min(remaining),
+                None => 1, // out-of-range pc: panics below, like any bad index
+            };
+            for _ in 0..n {
+                let pc = self.state.pc;
+                let taken = self.exec_at(dec, pc)?;
+                let u = &uops[pc];
+                stats.insts += 1;
+                stats.sve_insts += u64::from(u.is_sve());
+                stats.neon_insts += u64::from(u.is_neon());
+                stats.vector_insts += u64::from(u.is_vector());
+                on_retire(StepInfo {
+                    pc,
+                    uop: u,
+                    inst: &insts[pc],
+                    reads: dec.reads(u),
+                    writes: dec.writes(u),
+                    taken,
+                    mem: &self.accesses,
+                });
+            }
         }
         Ok(stats)
+    }
+
+    /// Run a pre-decoded program on the selected [`Engine`]. For
+    /// repeated runs of the same program on [`Engine::Trace`], build a
+    /// [`TraceEngine`] once and reuse it so formed traces persist.
+    pub fn run_decoded_engine_with(
+        &mut self,
+        dec: &DecodedProgram,
+        engine: Engine,
+        max_insts: u64,
+        on_retire: impl FnMut(StepInfo<'_>),
+    ) -> Result<RunStats, Trap> {
+        match engine {
+            Engine::Baseline => self.run_decoded_with(dec, max_insts, on_retire),
+            Engine::Trace => TraceEngine::new(dec).run_with(self, dec, max_insts, on_retire),
+        }
     }
 
     /// Run a pre-decoded program without a timing consumer.
@@ -478,6 +534,28 @@ mod tests {
         let p = a.finish();
         let mut ex = Executor::new(128, Memory::new());
         assert_eq!(ex.run(&p, 50), Err(Trap::Budget));
+    }
+
+    #[test]
+    fn budget_guard_is_exact_mid_block() {
+        // the budget is metered per straight-line run, but trip counts
+        // must stay exact at every cutoff inside a block
+        let mut a = Asm::new();
+        a.label("top");
+        a.push(Inst::MovImm { xd: 0, imm: 1 });
+        a.push(Inst::AddImm { xd: 1, xn: 1, imm: 1 });
+        a.push(Inst::Nop);
+        a.push_branch(Inst::B { target: 0 }, "top");
+        let p = a.finish();
+        let dec = DecodedProgram::decode(&p);
+        for budget in 0..10u64 {
+            let mut ex = Executor::new(128, Memory::new());
+            let mut retired = 0u64;
+            let r = ex.run_decoded_with(&dec, budget, |_| retired += 1);
+            assert_eq!(r, Err(Trap::Budget), "budget {budget}");
+            assert_eq!(retired, budget, "budget {budget}");
+            assert_eq!(ex.state.get_x(1), (budget + 2) / 4, "adds completed at budget {budget}");
+        }
     }
 
     #[test]

@@ -335,32 +335,38 @@ impl Executor {
         let baddr = self.sve_contig_base(base, off, ebytes, vlb);
         let g = self.state.p[pg as usize];
         if let Some(k) = g.prefix_len(esize, vlb) {
-            // dense-prefix fast path (ptrue/whilelt predicates): the
-            // little-endian register image *is* the memory image, so the
-            // store is one bulk copy per page
-            if k > 0 {
-                let total = k * ebytes;
-                let zbytes = self.state.z[zt as usize].bytes;
-                self.write_contig(baddr, &zbytes[..total])?;
-                self.record_store(baddr, total as u32);
+            return self.sve_st1_bulk(zt, baddr, k * ebytes);
+        }
+        // sparse predicate: element-at-a-time semantics
+        let z = self.state.z[zt as usize];
+        let mut span: Option<(u64, u64)> = None;
+        for i in 0..esize.lanes(vlb) {
+            if g.active(esize, i) {
+                let addr = baddr + (i * ebytes) as u64;
+                self.mem.write(addr, ebytes, z.get(esize, i))?;
+                span = Some(match span {
+                    None => (addr, addr + ebytes as u64),
+                    Some((lo, hi)) => (lo.min(addr), hi.max(addr + ebytes as u64)),
+                });
             }
-        } else {
-            // sparse predicate: element-at-a-time semantics
-            let z = self.state.z[zt as usize];
-            let mut span: Option<(u64, u64)> = None;
-            for i in 0..esize.lanes(vlb) {
-                if g.active(esize, i) {
-                    let addr = baddr + (i * ebytes) as u64;
-                    self.mem.write(addr, ebytes, z.get(esize, i))?;
-                    span = Some(match span {
-                        None => (addr, addr + ebytes as u64),
-                        Some((lo, hi)) => (lo.min(addr), hi.max(addr + ebytes as u64)),
-                    });
-                }
-            }
-            if let Some((lo, hi)) = span {
-                self.record_store(lo, (hi - lo) as u32);
-            }
+        }
+        if let Some((lo, hi)) = span {
+            self.record_store(lo, (hi - lo) as u32);
+        }
+        Ok(())
+    }
+
+    /// Bulk contiguous store of the leading `total` bytes of `zt`: the
+    /// dense-prefix arm of [`Executor::sve_st1`] (ptrue/whilelt
+    /// predicates — the little-endian register image *is* the memory
+    /// image, so the store is one bulk copy per page), also entered
+    /// directly by the trace engine's dense slots with `total` = the
+    /// whole register.
+    pub(crate) fn sve_st1_bulk(&mut self, zt: u8, baddr: u64, total: usize) -> ExecResult {
+        if total > 0 {
+            let zbytes = self.state.z[zt as usize].bytes;
+            self.write_contig(baddr, &zbytes[..total])?;
+            self.record_store(baddr, total as u32);
         }
         Ok(())
     }
@@ -390,12 +396,27 @@ impl Executor {
     // ====================== arithmetic ======================
 
     pub(crate) fn sve_int_bin(&mut self, op: IntOp, zdn: u8, pg: u8, zm: u8, esize: Esize) {
+        self.sve_int_bin_impl::<false>(op, zdn, pg, zm, esize);
+    }
+
+    /// [`Executor::sve_int_bin`] monomorphized over predicate density:
+    /// `DENSE` callers (the trace engine's specialized slots) have
+    /// proven every lane active behind the trace's per-iteration
+    /// guard, so the per-lane predicate test folds away.
+    pub(crate) fn sve_int_bin_impl<const DENSE: bool>(
+        &mut self,
+        op: IntOp,
+        zdn: u8,
+        pg: u8,
+        zm: u8,
+        esize: Esize,
+    ) {
         let vlb = self.state.vl_bytes();
         let g = self.state.p[pg as usize];
         let m = self.state.z[zm as usize];
         let z = &mut self.state.z[zdn as usize];
         for i in 0..esize.lanes(vlb) {
-            if g.active(esize, i) {
+            if DENSE || g.active(esize, i) {
                 let v = int_bin(op, esize, z.get(esize, i), m.get(esize, i));
                 z.set(esize, i, v);
             }
@@ -420,19 +441,32 @@ impl Executor {
     }
 
     pub(crate) fn sve_fp_bin(&mut self, op: FpOp, zdn: u8, pg: u8, zm: u8, dbl: bool) {
+        self.sve_fp_bin_impl::<false>(op, zdn, pg, zm, dbl);
+    }
+
+    /// [`Executor::sve_fp_bin`] monomorphized over predicate density
+    /// (see [`Executor::sve_int_bin_impl`]).
+    pub(crate) fn sve_fp_bin_impl<const DENSE: bool>(
+        &mut self,
+        op: FpOp,
+        zdn: u8,
+        pg: u8,
+        zm: u8,
+        dbl: bool,
+    ) {
         let vlb = self.state.vl_bytes();
         let g = self.state.p[pg as usize];
         let m = self.state.z[zm as usize];
         let z = &mut self.state.z[zdn as usize];
         if dbl {
             for i in 0..Esize::D.lanes(vlb) {
-                if g.active(Esize::D, i) {
+                if DENSE || g.active(Esize::D, i) {
                     z.set_f64(i, fp_bin(op, z.get_f64(i), m.get_f64(i)));
                 }
             }
         } else {
             for i in 0..Esize::S.lanes(vlb) {
-                if g.active(Esize::S, i) {
+                if DENSE || g.active(Esize::S, i) {
                     z.set_f32(i, fp_bin32(op, z.get_f32(i), m.get_f32(i)));
                 }
             }
@@ -440,19 +474,32 @@ impl Executor {
     }
 
     pub(crate) fn sve_fp_un(&mut self, op: FpUnOp, zd: u8, pg: u8, zn: u8, dbl: bool) {
+        self.sve_fp_un_impl::<false>(op, zd, pg, zn, dbl);
+    }
+
+    /// [`Executor::sve_fp_un`] monomorphized over predicate density
+    /// (see [`Executor::sve_int_bin_impl`]).
+    pub(crate) fn sve_fp_un_impl<const DENSE: bool>(
+        &mut self,
+        op: FpUnOp,
+        zd: u8,
+        pg: u8,
+        zn: u8,
+        dbl: bool,
+    ) {
         let vlb = self.state.vl_bytes();
         let g = self.state.p[pg as usize];
         let n = self.state.z[zn as usize];
         let z = &mut self.state.z[zd as usize];
         if dbl {
             for i in 0..Esize::D.lanes(vlb) {
-                if g.active(Esize::D, i) {
+                if DENSE || g.active(Esize::D, i) {
                     z.set_f64(i, fp_un(op, n.get_f64(i)));
                 }
             }
         } else {
             for i in 0..Esize::S.lanes(vlb) {
-                if g.active(Esize::S, i) {
+                if DENSE || g.active(Esize::S, i) {
                     z.set_f32(i, fp_un32(op, n.get_f32(i)));
                 }
             }
@@ -460,13 +507,27 @@ impl Executor {
     }
 
     pub(crate) fn sve_fmla(&mut self, zda: u8, pg: u8, zn: u8, zm: u8, dbl: bool, sub: bool) {
+        self.sve_fmla_impl::<false>(zda, pg, zn, zm, dbl, sub);
+    }
+
+    /// [`Executor::sve_fmla`] monomorphized over predicate density
+    /// (see [`Executor::sve_int_bin_impl`]).
+    pub(crate) fn sve_fmla_impl<const DENSE: bool>(
+        &mut self,
+        zda: u8,
+        pg: u8,
+        zn: u8,
+        zm: u8,
+        dbl: bool,
+        sub: bool,
+    ) {
         let vlb = self.state.vl_bytes();
         let g = self.state.p[pg as usize];
         let (n, m) = (self.state.z[zn as usize], self.state.z[zm as usize]);
         let z = &mut self.state.z[zda as usize];
         if dbl {
             for i in 0..Esize::D.lanes(vlb) {
-                if g.active(Esize::D, i) {
+                if DENSE || g.active(Esize::D, i) {
                     let p = n.get_f64(i) * m.get_f64(i);
                     let p = if sub { -p } else { p };
                     z.set_f64(i, z.get_f64(i) + p);
@@ -474,7 +535,7 @@ impl Executor {
             }
         } else {
             for i in 0..Esize::S.lanes(vlb) {
-                if g.active(Esize::S, i) {
+                if DENSE || g.active(Esize::S, i) {
                     let p = n.get_f32(i) * m.get_f32(i);
                     let p = if sub { -p } else { p };
                     z.set_f32(i, z.get_f32(i) + p);
@@ -484,19 +545,25 @@ impl Executor {
     }
 
     pub(crate) fn sve_scvtf(&mut self, zd: u8, pg: u8, zn: u8, dbl: bool) {
+        self.sve_scvtf_impl::<false>(zd, pg, zn, dbl);
+    }
+
+    /// [`Executor::sve_scvtf`] monomorphized over predicate density
+    /// (see [`Executor::sve_int_bin_impl`]).
+    pub(crate) fn sve_scvtf_impl<const DENSE: bool>(&mut self, zd: u8, pg: u8, zn: u8, dbl: bool) {
         let vlb = self.state.vl_bytes();
         let g = self.state.p[pg as usize];
         let n = self.state.z[zn as usize];
         let z = &mut self.state.z[zd as usize];
         if dbl {
             for i in 0..Esize::D.lanes(vlb) {
-                if g.active(Esize::D, i) {
+                if DENSE || g.active(Esize::D, i) {
                     z.set_f64(i, n.get_signed(Esize::D, i) as f64);
                 }
             }
         } else {
             for i in 0..Esize::S.lanes(vlb) {
-                if g.active(Esize::S, i) {
+                if DENSE || g.active(Esize::S, i) {
                     z.set_f32(i, n.get_signed(Esize::S, i) as f32);
                 }
             }
@@ -870,31 +937,7 @@ impl Executor {
         let g = self.state.p[pg as usize];
         let lanes = esize.lanes(vlb);
         if let Some(k) = g.prefix_len(esize, vlb) {
-            let total = k * ebytes;
-            let mut buf = [0u8; VL_MAX_BYTES];
-            let (copied, fault) = self.read_contig_partial(baddr, &mut buf[..total]);
-            let loaded = match fault {
-                Some(f) => {
-                    // element containing the first unmapped byte
-                    let fl = copied / ebytes;
-                    if !ff || fl == 0 {
-                        // non-ff loads, or a fault on the FIRST active
-                        // element, trap for real (§2.3.3)
-                        return Err(f);
-                    }
-                    // clear FFR from the faulting element onward
-                    self.state.ffr.clear_from(fl * ebytes);
-                    fl
-                }
-                None => k,
-            };
-            if loaded > 0 {
-                self.record_load(baddr, (loaded * ebytes) as u32);
-            }
-            let z = &mut self.state.z[zt as usize];
-            z.zero();
-            z.bytes[..loaded * ebytes].copy_from_slice(&buf[..loaded * ebytes]);
-            return Ok(());
+            return self.sve_ld1_bulk(zt, esize, baddr, k, ff);
         }
         // sparse predicate: element-at-a-time (zeroing predication, and
         // inactive lanes never touch memory — a hole under an inactive
@@ -940,6 +983,50 @@ impl Executor {
             z.set(esize, i, v);
         }
         self.lane_scratch = vals;
+        Ok(())
+    }
+
+    /// Bulk contiguous load of the leading `k` elements into `zt` (the
+    /// rest zeroed): the dense-prefix arm of [`Executor::sve_ld1`],
+    /// also entered directly by the trace engine's dense slots with
+    /// `k` = all lanes (the predicate check already happened, once, at
+    /// the trace's per-iteration guard). First-fault semantics are
+    /// preserved exactly — the bulk copy stops at the first unmapped
+    /// byte, which identifies the same faulting element the per-lane
+    /// walk would find.
+    pub(crate) fn sve_ld1_bulk(
+        &mut self,
+        zt: u8,
+        esize: Esize,
+        baddr: u64,
+        k: usize,
+        ff: bool,
+    ) -> Result<(), MemFault> {
+        let ebytes = esize.bytes();
+        let total = k * ebytes;
+        let mut buf = [0u8; VL_MAX_BYTES];
+        let (copied, fault) = self.read_contig_partial(baddr, &mut buf[..total]);
+        let loaded = match fault {
+            Some(f) => {
+                // element containing the first unmapped byte
+                let fl = copied / ebytes;
+                if !ff || fl == 0 {
+                    // non-ff loads, or a fault on the FIRST active
+                    // element, trap for real (§2.3.3)
+                    return Err(f);
+                }
+                // clear FFR from the faulting element onward
+                self.state.ffr.clear_from(fl * ebytes);
+                fl
+            }
+            None => k,
+        };
+        if loaded > 0 {
+            self.record_load(baddr, (loaded * ebytes) as u32);
+        }
+        let z = &mut self.state.z[zt as usize];
+        z.zero();
+        z.bytes[..loaded * ebytes].copy_from_slice(&buf[..loaded * ebytes]);
         Ok(())
     }
 
@@ -1197,6 +1284,65 @@ pub(crate) fn h_sve_fmla(ex: &mut Executor, u: &Uop) -> ExecResult {
 
 pub(crate) fn h_sve_scvtf(ex: &mut Executor, u: &Uop) -> ExecResult {
     ex.sve_scvtf(u.a, u.b, u.c, u.dbl());
+    Ok(())
+}
+
+// ---- dense fast-path twins (trace-engine specialized slots) ----
+//
+// Entered only behind a trace's per-iteration dense guard: the
+// governing predicate (`u.b`) is all-true at the granule the guard
+// checked, so predication folds away — bulk memory ops skip the prefix
+// scan, arithmetic skips the per-lane `active` test. Semantics are
+// otherwise identical to the general handlers above (pinned by the
+// dense-vs-general tests in `exec/trace.rs` and the `exec/legacy.rs`
+// three-way harness).
+
+pub(crate) fn h_sve_ld1_imm_vl_dense(ex: &mut Executor, u: &Uop) -> ExecResult {
+    let vlb = ex.state.vl_bytes();
+    let baddr = ex.sve_contig_base(u.c, SveMemOff::ImmVl(u.imm), u.esize.bytes(), vlb);
+    ex.sve_ld1_bulk(u.a, u.esize, baddr, u.esize.lanes(vlb), u.has(F_FF))
+}
+
+pub(crate) fn h_sve_ld1_reg_dense(ex: &mut Executor, u: &Uop) -> ExecResult {
+    let vlb = ex.state.vl_bytes();
+    let baddr = ex.sve_contig_base(u.c, SveMemOff::RegScaled(u.d), u.esize.bytes(), vlb);
+    ex.sve_ld1_bulk(u.a, u.esize, baddr, u.esize.lanes(vlb), u.has(F_FF))
+}
+
+pub(crate) fn h_sve_st1_imm_vl_dense(ex: &mut Executor, u: &Uop) -> ExecResult {
+    let vlb = ex.state.vl_bytes();
+    let baddr = ex.sve_contig_base(u.c, SveMemOff::ImmVl(u.imm), u.esize.bytes(), vlb);
+    ex.sve_st1_bulk(u.a, baddr, vlb) // all lanes active: the whole register
+}
+
+pub(crate) fn h_sve_st1_reg_dense(ex: &mut Executor, u: &Uop) -> ExecResult {
+    let vlb = ex.state.vl_bytes();
+    let baddr = ex.sve_contig_base(u.c, SveMemOff::RegScaled(u.d), u.esize.bytes(), vlb);
+    ex.sve_st1_bulk(u.a, baddr, vlb)
+}
+
+pub(crate) fn h_sve_int_bin_dense(ex: &mut Executor, u: &Uop) -> ExecResult {
+    ex.sve_int_bin_impl::<true>(u.sub.int(), u.a, u.b, u.c, u.esize);
+    Ok(())
+}
+
+pub(crate) fn h_sve_fp_bin_dense(ex: &mut Executor, u: &Uop) -> ExecResult {
+    ex.sve_fp_bin_impl::<true>(u.sub.fp(), u.a, u.b, u.c, u.dbl());
+    Ok(())
+}
+
+pub(crate) fn h_sve_fp_un_dense(ex: &mut Executor, u: &Uop) -> ExecResult {
+    ex.sve_fp_un_impl::<true>(u.sub.fp_un(), u.a, u.b, u.c, u.dbl());
+    Ok(())
+}
+
+pub(crate) fn h_sve_fmla_dense(ex: &mut Executor, u: &Uop) -> ExecResult {
+    ex.sve_fmla_impl::<true>(u.a, u.b, u.c, u.d, u.dbl(), u.has(F_SUB));
+    Ok(())
+}
+
+pub(crate) fn h_sve_scvtf_dense(ex: &mut Executor, u: &Uop) -> ExecResult {
+    ex.sve_scvtf_impl::<true>(u.a, u.b, u.c, u.dbl());
     Ok(())
 }
 

@@ -1,0 +1,691 @@
+//! Superblock trace cache: profile-guided straight-line execution over
+//! pre-decoded µop programs.
+//!
+//! The paper's VL-agnostic loops (Fig. 2/8) spend their lives in a tiny
+//! `whilelt`-governed steady state executed millions of times, yet the
+//! baseline interpreter pays tag-indexed dispatch, branch resolution and
+//! predicate re-derivation on every dynamic µop. [`TraceEngine`] removes
+//! that overhead in three layers:
+//!
+//! 1. **Threaded dispatch** — every µop slot carries its handler
+//!    pointer, pre-fetched from [`super::DISPATCH`] when the engine is
+//!    built, so the interpreter loop is `(slot.h)(ex, &slot.u)` with no
+//!    per-retire bounds check or tag load.
+//! 2. **Superblock traces** — block entry pcs are profiled; once an
+//!    entry crosses [`HOT_THRESHOLD`], the next execution records the
+//!    dominant path (following taken/not-taken history through
+//!    conditional branches, ending where the path returns to the entry,
+//!    takes a backward branch elsewhere, or halts) and stitches it into
+//!    a straight-line trace. Control µops keep **side-exit guards**: if
+//!    a branch resolves off the recorded path, the engine writes back
+//!    the true pc and falls back to the block interpreter — which is
+//!    bit-identical by construction, since both run the same handlers
+//!    in the same order.
+//! 3. **Dense `whilelt` specialization** — when a trace is governed by
+//!    a `whilelt` predicate that is provably all-true for the iteration
+//!    (dense prefix covering every lane), the µops it governs run
+//!    **unpredicated fast-path twins** (contiguous ld1/st1 and
+//!    arithmetic; see `exec/sve.rs`'s `DENSE` monomorphizations) behind
+//!    a single per-iteration predicate check. Tail iterations fail the
+//!    check and take the general (predicated) slots of the same trace.
+//!
+//! Architectural state, the retire stream ([`StepInfo`]) and every
+//! counter the job store consumes are bit-identical to
+//! [`Executor::run_decoded_with`] — pinned by the three-way harness in
+//! `exec/legacy.rs` and the trap/side-exit tests below — so job cache
+//! keys, fig8/dse goldens and the timing pipeline are untouched.
+
+use super::{Executor, Handler, RunStats, StepInfo, Trap, DISPATCH};
+use crate::arch::Esize;
+use crate::isa::uop::{DecodedProgram, Uop, UopTag};
+
+/// Block-entry executions before a trace is recorded.
+pub const HOT_THRESHOLD: u32 = 32;
+
+/// Longest recordable path, in µops. A recording that exceeds this is
+/// abandoned and the entry is never tried again (irreducible or huge
+/// bodies stay on the block interpreter).
+pub const MAX_TRACE_LEN: usize = 256;
+
+/// One threaded µop slot: the handler pointer lives next to the operand
+/// fields it consumes, so cold execution pays no dispatch-table load.
+#[derive(Clone, Copy)]
+struct CodeSlot {
+    h: Handler,
+    u: Uop,
+}
+
+/// One stitched trace slot: threaded handler (possibly a dense twin),
+/// the µop, its pc, and — for control µops — the recorded successor the
+/// side-exit guard compares against.
+#[derive(Clone, Copy)]
+struct TSlot {
+    h: Handler,
+    u: Uop,
+    pc: u32,
+    /// Recorded next pc (control µops only; fall-through otherwise).
+    next: u32,
+    /// Needs a side-exit guard (B/BCond/Cbz/Cbnz).
+    ctrl: bool,
+}
+
+/// A stitched superblock.
+struct Trace {
+    /// The general (predicated) path.
+    slots: Box<[TSlot]>,
+    /// Dense-specialized twin of `slots` (same µops, unpredicated
+    /// fast-path handlers), present when a `whilelt` governs the body.
+    dense: Option<Box<[TSlot]>>,
+    /// Predicate register and granule the dense guard checks.
+    guard_pd: u8,
+    guard_esize: Esize,
+    entry: u32,
+    /// Where a completed non-looping trace resumes.
+    exit_pc: u32,
+    /// Loop trace: the last slot branches back to `entry`.
+    looping: bool,
+    /// µops per full iteration — the budget granule.
+    len: u64,
+}
+
+enum TraceCell {
+    /// Still profiling.
+    Cold,
+    /// Formation failed (halting path / over-long) — never retried.
+    Rejected,
+    Built(Box<Trace>),
+}
+
+struct Recording {
+    entry: u32,
+    path: Vec<u32>,
+}
+
+/// The superblock execution engine for one [`DecodedProgram`]. Build it
+/// once per program ([`TraceEngine::new`]) and run it as many times as
+/// needed; formed traces persist across runs of the same engine.
+pub struct TraceEngine {
+    slots: Box<[CodeSlot]>,
+    heat: Box<[u32]>,
+    cells: Vec<TraceCell>,
+    recording: Option<Recording>,
+    hot_threshold: u32,
+}
+
+impl TraceEngine {
+    /// Thread `dec` through the dispatch table (handler pointers
+    /// pre-fetched per slot) and start with an empty trace cache.
+    pub fn new(dec: &DecodedProgram) -> TraceEngine {
+        TraceEngine::with_threshold(dec, HOT_THRESHOLD)
+    }
+
+    /// [`TraceEngine::new`] with a custom formation threshold (tests use
+    /// low thresholds so short runs still form traces).
+    pub fn with_threshold(dec: &DecodedProgram, hot_threshold: u32) -> TraceEngine {
+        let slots: Box<[CodeSlot]> = dec
+            .uops()
+            .iter()
+            .map(|&u| CodeSlot { h: DISPATCH[u.tag as usize], u })
+            .collect();
+        let n = slots.len();
+        TraceEngine {
+            slots,
+            heat: vec![0; n].into_boxed_slice(),
+            cells: (0..n).map(|_| TraceCell::Cold).collect(),
+            recording: None,
+            hot_threshold: hot_threshold.max(1),
+        }
+    }
+
+    /// Number of stitched traces currently cached.
+    pub fn trace_count(&self) -> usize {
+        self.cells.iter().filter(|c| matches!(c, TraceCell::Built(_))).count()
+    }
+
+    /// Whether any cached trace carries a dense-specialized twin.
+    pub fn has_dense_trace(&self) -> bool {
+        self.cells.iter().any(|c| matches!(c, TraceCell::Built(t) if t.dense.is_some()))
+    }
+
+    /// Run `dec` until Halt/Ret (Ok) or a trap (Err), streaming retire
+    /// info — the trace-cache counterpart of
+    /// [`Executor::run_decoded_with`], bit-identical to it in
+    /// architectural state, retire stream and statistics.
+    pub fn run_with(
+        &mut self,
+        ex: &mut Executor,
+        dec: &DecodedProgram,
+        max_insts: u64,
+        mut on_retire: impl FnMut(StepInfo<'_>),
+    ) -> Result<RunStats, Trap> {
+        assert_eq!(self.slots.len(), dec.len(), "engine built for a different program");
+        let straight = dec.straight_lens();
+        let mut stats = RunStats::default();
+        while !ex.halted {
+            let remaining = max_insts - stats.insts;
+            if remaining == 0 {
+                return Err(Trap::Budget);
+            }
+            let pc = ex.state.pc;
+            if pc < self.cells.len() && self.recording.is_none() {
+                match &self.cells[pc] {
+                    TraceCell::Built(tr) if remaining >= tr.len => {
+                        run_trace(tr, ex, dec, &mut stats, max_insts, &mut on_retire)?;
+                        continue;
+                    }
+                    TraceCell::Cold => {
+                        let h = self.heat[pc].saturating_add(1);
+                        self.heat[pc] = h;
+                        if h >= self.hot_threshold {
+                            self.recording = Some(Recording {
+                                entry: pc as u32,
+                                path: Vec::with_capacity(MAX_TRACE_LEN),
+                            });
+                        }
+                    }
+                    _ => {}
+                }
+            }
+            // One straight-line block through the threaded slots. The
+            // budget is metered at the block boundary (the min below),
+            // so the inner loop carries no per-µop budget or halt
+            // check — trip counts are preserved exactly.
+            let n = match straight.get(pc) {
+                Some(&l) => u64::from(l).min(remaining),
+                None => 1, // out-of-range pc: fault like the baseline's indexing
+            };
+            for _ in 0..n {
+                let pc = ex.state.pc;
+                let slot = &self.slots[pc];
+                ex.accesses.clear();
+                ex.next_pc = None;
+                if let Err(fault) = (slot.h)(ex, &slot.u) {
+                    return Err(Trap::Fault { fault, pc });
+                }
+                let taken = ex.next_pc.is_some();
+                let next = ex.next_pc.unwrap_or(pc + 1);
+                ex.state.pc = next;
+                stats.insts += 1;
+                stats.sve_insts += u64::from(slot.u.is_sve());
+                stats.neon_insts += u64::from(slot.u.is_neon());
+                stats.vector_insts += u64::from(slot.u.is_vector());
+                on_retire(StepInfo {
+                    pc,
+                    uop: &self.slots[pc].u,
+                    inst: &dec.insts()[pc],
+                    reads: dec.reads(&self.slots[pc].u),
+                    writes: dec.writes(&self.slots[pc].u),
+                    taken,
+                    mem: &ex.accesses,
+                });
+                if self.recording.is_some() {
+                    self.record_step(dec, pc, taken, next, ex.halted);
+                }
+            }
+        }
+        Ok(stats)
+    }
+
+    /// Run without a timing consumer.
+    pub fn run(
+        &mut self,
+        ex: &mut Executor,
+        dec: &DecodedProgram,
+        max_insts: u64,
+    ) -> Result<RunStats, Trap> {
+        self.run_with(ex, dec, max_insts, |_| {})
+    }
+
+    /// Record one executed µop of the forming trace and close or reject
+    /// the recording when a terminator is reached.
+    fn record_step(
+        &mut self,
+        dec: &DecodedProgram,
+        pc: usize,
+        taken: bool,
+        next: usize,
+        halted: bool,
+    ) {
+        let rec = self.recording.as_mut().expect("record_step without a recording");
+        rec.path.push(pc as u32);
+        let entry = rec.entry;
+        if halted {
+            // a halting path runs at most once more — not worth a trace
+            self.recording = None;
+            self.cells[entry as usize] = TraceCell::Rejected;
+            return;
+        }
+        if next == entry as usize {
+            self.install(dec, true, entry);
+            return;
+        }
+        if taken && next <= pc {
+            // backward branch to a different head ends the superblock
+            self.install(dec, false, next as u32);
+            return;
+        }
+        if rec.path.len() >= MAX_TRACE_LEN {
+            self.recording = None;
+            self.cells[entry as usize] = TraceCell::Rejected;
+        }
+    }
+
+    /// Stitch the recorded path into a trace and cache it at its entry.
+    fn install(&mut self, dec: &DecodedProgram, looping: bool, exit_pc: u32) {
+        let rec = self.recording.take().expect("install without a recording");
+        let entry = rec.entry;
+        let slots: Box<[TSlot]> = rec
+            .path
+            .iter()
+            .enumerate()
+            .map(|(i, &pc)| {
+                let u = self.slots[pc as usize].u;
+                let next = match rec.path.get(i + 1) {
+                    Some(&n) => n,
+                    None if looping => entry,
+                    None => exit_pc,
+                };
+                TSlot { h: self.slots[pc as usize].h, u, pc, next, ctrl: u.is_control_flow() }
+            })
+            .collect();
+        let (dense, guard_pd, guard_esize) = match specialize_dense(dec, &slots) {
+            Some((d, pd, e)) => (Some(d), pd, e),
+            None => (None, 0, Esize::B),
+        };
+        let len = slots.len() as u64;
+        let tr = Trace { slots, dense, guard_pd, guard_esize, entry, exit_pc, looping, len };
+        self.cells[entry as usize] = TraceCell::Built(Box::new(tr));
+    }
+}
+
+/// Execute iterations of `tr` until a side exit, completion of a
+/// non-looping trace, a trap, or insufficient budget for one more full
+/// iteration (the tail is handed back to the exactly-metered block
+/// interpreter). The per-µop body mirrors the baseline step exactly:
+/// same handlers, same `accesses`/`next_pc` discipline, same retire
+/// stream — only the pc bookkeeping between µops is elided.
+fn run_trace(
+    tr: &Trace,
+    ex: &mut Executor,
+    dec: &DecodedProgram,
+    stats: &mut RunStats,
+    max_insts: u64,
+    on_retire: &mut impl FnMut(StepInfo<'_>),
+) -> Result<(), Trap> {
+    let insts = dec.insts();
+    loop {
+        if max_insts - stats.insts < tr.len {
+            ex.state.pc = tr.entry as usize;
+            return Ok(());
+        }
+        // the single per-iteration predicate check the specialization
+        // is guarded by: dense slots only when every lane is active
+        let slots: &[TSlot] = match &tr.dense {
+            Some(d) if dense_guard_ok(ex, tr) => d,
+            _ => &tr.slots,
+        };
+        for slot in slots.iter() {
+            let pc = slot.pc as usize;
+            ex.accesses.clear();
+            if slot.ctrl {
+                ex.next_pc = None;
+            }
+            if let Err(fault) = (slot.h)(ex, &slot.u) {
+                // the baseline faults with the pc un-advanced
+                ex.state.pc = pc;
+                return Err(Trap::Fault { fault, pc });
+            }
+            let (taken, next) = if slot.ctrl {
+                match ex.next_pc {
+                    Some(t) => (true, t),
+                    None => (false, pc + 1),
+                }
+            } else {
+                (false, pc + 1)
+            };
+            stats.insts += 1;
+            stats.sve_insts += u64::from(slot.u.is_sve());
+            stats.neon_insts += u64::from(slot.u.is_neon());
+            stats.vector_insts += u64::from(slot.u.is_vector());
+            on_retire(StepInfo {
+                pc,
+                uop: &slot.u,
+                inst: &insts[pc],
+                reads: dec.reads(&slot.u),
+                writes: dec.writes(&slot.u),
+                taken,
+                mem: &ex.accesses,
+            });
+            if slot.ctrl && next != slot.next as usize {
+                // side exit: write back the true pc and fall back to
+                // the block interpreter
+                ex.state.pc = next;
+                return Ok(());
+            }
+        }
+        if !tr.looping {
+            ex.state.pc = tr.exit_pc as usize;
+            return Ok(());
+        }
+    }
+}
+
+/// The dense guard: the governing predicate is an all-lanes-active
+/// prefix at the `whilelt` granule, so every twin handler's predication
+/// is provably a no-op this iteration.
+#[inline]
+fn dense_guard_ok(ex: &Executor, tr: &Trace) -> bool {
+    let vlb = ex.state.vl_bytes();
+    let e = tr.guard_esize;
+    ex.state.p[tr.guard_pd as usize].prefix_len(e, vlb) == Some(e.lanes(vlb))
+}
+
+/// Build the dense twin of a trace, if a `whilelt` governs it: µops
+/// strictly before the first write to the governing predicate — whose
+/// own governing predicate *is* that register, at the same granule —
+/// swap their handlers for unpredicated fast-path twins.
+fn specialize_dense(dec: &DecodedProgram, slots: &[TSlot]) -> Option<(Box<[TSlot]>, u8, Esize)> {
+    let w = slots.iter().find(|s| s.u.tag == UopTag::While)?;
+    let pd = w.u.a;
+    let we = w.u.esize;
+    let pd_slot = 63 + pd; // reg_slot(RegId::P(pd))
+    let first_write = slots
+        .iter()
+        .position(|s| dec.writes(&s.u).contains(&pd_slot))
+        .unwrap_or(slots.len());
+    let mut dense: Vec<TSlot> = slots.to_vec();
+    let mut any = false;
+    for s in dense.iter_mut().take(first_write) {
+        if let Some(h) = dense_twin(&s.u, pd, we) {
+            s.h = h;
+            any = true;
+        }
+    }
+    if any {
+        Some((dense.into_boxed_slice(), pd, we))
+    } else {
+        None
+    }
+}
+
+/// Effective predication granule of an FP µop (D if double else S).
+fn fp_esize(u: &Uop) -> Esize {
+    if u.dbl() {
+        Esize::D
+    } else {
+        Esize::S
+    }
+}
+
+/// The unpredicated fast-path twin of `u`, if it is governed by `pd` at
+/// granule `we` and a `DENSE` monomorphization exists for its tag.
+fn dense_twin(u: &Uop, pd: u8, we: Esize) -> Option<Handler> {
+    use UopTag as T;
+    if u.b != pd {
+        return None;
+    }
+    let (h, e): (Handler, Esize) = match u.tag {
+        T::SveLd1ImmVl => (super::sve::h_sve_ld1_imm_vl_dense, u.esize),
+        T::SveLd1Reg => (super::sve::h_sve_ld1_reg_dense, u.esize),
+        T::SveSt1ImmVl => (super::sve::h_sve_st1_imm_vl_dense, u.esize),
+        T::SveSt1Reg => (super::sve::h_sve_st1_reg_dense, u.esize),
+        T::SveIntBin => (super::sve::h_sve_int_bin_dense, u.esize),
+        T::SveFpBin => (super::sve::h_sve_fp_bin_dense, fp_esize(u)),
+        T::SveFpUn => (super::sve::h_sve_fp_un_dense, fp_esize(u)),
+        T::SveFmla => (super::sve::h_sve_fmla_dense, fp_esize(u)),
+        T::SveScvtf => (super::sve::h_sve_scvtf_dense, fp_esize(u)),
+        _ => return None,
+    };
+    if e == we {
+        Some(h)
+    } else {
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::asm::{Asm, Program};
+    use crate::exec::Engine;
+    use crate::isa::{Cond, Inst, MemOff, SveMemOff};
+    use crate::mem::{Memory, PAGE_SIZE};
+    use crate::uarch::{run_timed_decoded, run_timed_decoded_engine, UarchConfig};
+    use crate::workloads;
+
+    /// The paper's Fig. 2c daxpy — the canonical `whilelt` steady-state
+    /// loop the dense specialization targets.
+    fn daxpy_prog(x: u64, y: u64, a_addr: u64, n_addr: u64) -> Program {
+        let mut asm = Asm::new();
+        let a = &mut asm;
+        a.push(Inst::MovImm { xd: 0, imm: x });
+        a.push(Inst::MovImm { xd: 1, imm: y });
+        a.push(Inst::MovImm { xd: 2, imm: a_addr });
+        a.push(Inst::MovImm { xd: 3, imm: n_addr });
+        a.push(Inst::Ldr { size: 4, signed: true, xt: 3, base: 3, off: MemOff::Imm(0) });
+        a.push(Inst::MovImm { xd: 4, imm: 0 });
+        a.push(Inst::While { pd: 0, esize: Esize::D, xn: 4, xm: 3, unsigned: false });
+        a.push(Inst::SveLd1R { zt: 0, pg: 0, esize: Esize::D, base: 2, imm: 0 });
+        a.label("loop");
+        let off = SveMemOff::RegScaled(4);
+        a.push(Inst::SveLd1 { zt: 1, pg: 0, esize: Esize::D, base: 0, off, ff: false });
+        a.push(Inst::SveLd1 { zt: 2, pg: 0, esize: Esize::D, base: 1, off, ff: false });
+        a.push(Inst::SveFmla { zda: 2, pg: 0, zn: 1, zm: 0, dbl: true, sub: false });
+        a.push(Inst::SveSt1 { zt: 2, pg: 0, esize: Esize::D, base: 1, off });
+        a.push(Inst::IncDec { xdn: 4, esize: Esize::D, dec: false });
+        a.push(Inst::While { pd: 0, esize: Esize::D, xn: 4, xm: 3, unsigned: false });
+        a.push_branch(Inst::BCond { cond: Cond::FIRST, target: 0 }, "loop");
+        a.push(Inst::Halt);
+        asm.finish()
+    }
+
+    /// Build daxpy memory + program for `n` elements. Returns
+    /// (mem, y_base, program).
+    fn daxpy_setup(n: usize) -> (Memory, u64, Program) {
+        let mut mem = Memory::new();
+        let x = mem.alloc(8 * n.max(1) as u64, 16);
+        let y = mem.alloc(8 * n.max(1) as u64, 16);
+        let a_addr = mem.alloc(8, 8);
+        let n_addr = mem.alloc(8, 8);
+        for i in 0..n {
+            mem.write_f64(x + 8 * i as u64, 0.5 * i as f64).unwrap();
+            mem.write_f64(y + 8 * i as u64, 100.0 - i as f64).unwrap();
+        }
+        mem.write_f64(a_addr, 2.5).unwrap();
+        mem.write_u32(n_addr, n as u32).unwrap();
+        (mem, y, daxpy_prog(x, y, a_addr, n_addr))
+    }
+
+    /// Assert the two executors reached identical architectural state.
+    fn assert_same_state(a: &Executor, b: &Executor, what: &str) {
+        assert_eq!(a.state.pc, b.state.pc, "{what}: pc");
+        assert_eq!(a.halted, b.halted, "{what}: halted");
+        assert_eq!(a.state.x, b.state.x, "{what}: x registers");
+        assert_eq!(a.state.flags, b.state.flags, "{what}: NZCV");
+        for r in 0..a.state.z.len() {
+            assert_eq!(a.state.z[r].bytes, b.state.z[r].bytes, "{what}: z{r}");
+        }
+        assert_eq!(a.state.p, b.state.p, "{what}: predicates");
+        assert_eq!(a.state.ffr, b.state.ffr, "{what}: ffr");
+    }
+
+    #[test]
+    fn daxpy_forms_a_dense_loop_trace_and_stays_bit_identical() {
+        let (mem, y, p) = daxpy_setup(100);
+        let dec = DecodedProgram::decode(&p);
+        let mut base = Executor::new(256, mem.clone());
+        let rb = base.run_decoded(&dec, 1_000_000);
+        let mut traced = Executor::new(256, mem.clone());
+        let mut eng = TraceEngine::with_threshold(&dec, 2);
+        let rt = eng.run(&mut traced, &dec, 1_000_000);
+        assert_eq!(rb, rt, "run statistics");
+        assert!(eng.trace_count() >= 1, "the hot loop must form a trace");
+        assert!(eng.has_dense_trace(), "the whilelt steady state must dense-specialize");
+        assert_same_state(&base, &traced, "daxpy n=100");
+        for i in 0..100 {
+            let want = 2.5 * (0.5 * i as f64) + (100.0 - i as f64);
+            assert_eq!(traced.mem.read_f64(y + 8 * i as u64).unwrap(), want, "y[{i}]");
+        }
+        // formed traces persist across runs of the same engine
+        let count = eng.trace_count();
+        let mut again = Executor::new(256, mem.clone());
+        assert_eq!(eng.run(&mut again, &dec, 1_000_000), rb);
+        assert_eq!(eng.trace_count(), count, "no re-formation on reuse");
+        assert_same_state(&traced, &again, "daxpy rerun");
+    }
+
+    #[test]
+    fn tail_iterations_and_sparse_predicates_side_exit_correctly() {
+        // awkward trip counts: empty loop, sub-vector tails, exact
+        // multiples — the dense guard must fail over to the general
+        // (predicated) slots without changing a single bit
+        for vl in [128usize, 256, 1024] {
+            for n in [0usize, 1, 3, 31, 32, 33] {
+                let (mem, y, p) = daxpy_setup(n);
+                let dec = DecodedProgram::decode(&p);
+                let mut base = Executor::new(vl, mem.clone());
+                let rb = base.run_decoded(&dec, 1_000_000);
+                let mut traced = Executor::new(vl, mem.clone());
+                let mut eng = TraceEngine::with_threshold(&dec, 2);
+                let rt = eng.run(&mut traced, &dec, 1_000_000);
+                assert_eq!(rb, rt, "vl={vl} n={n}");
+                assert_same_state(&base, &traced, &format!("vl={vl} n={n}"));
+                for i in 0..n {
+                    let want = 2.5 * (0.5 * i as f64) + (100.0 - i as f64);
+                    assert_eq!(traced.mem.read_f64(y + 8 * i as u64).unwrap(), want);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn retire_streams_are_identical_including_side_exits() {
+        // n=33 at VL=256: 8 dense iterations, one tail, one empty exit
+        let (mem, _y, p) = daxpy_setup(33);
+        let dec = DecodedProgram::decode(&p);
+        let collect = |use_trace: bool| {
+            let mut steps: Vec<(usize, bool, usize)> = Vec::new();
+            let mut ex = Executor::new(256, mem.clone());
+            let on = |info: StepInfo<'_>| steps.push((info.pc, info.taken, info.mem.len()));
+            let r = if use_trace {
+                TraceEngine::with_threshold(&dec, 2).run_with(&mut ex, &dec, 1_000_000, on)
+            } else {
+                ex.run_decoded_with(&dec, 1_000_000, on)
+            };
+            r.unwrap();
+            steps
+        };
+        assert_eq!(collect(false), collect(true));
+    }
+
+    #[test]
+    fn faults_mid_trace_match_the_baseline() {
+        // a pointer walk that strides off the end of its one mapped page
+        // after the loop has long been stitched into a trace
+        let mut a = Asm::new();
+        a.push(Inst::MovImm { xd: 0, imm: 0x1000 });
+        a.push(Inst::MovImm { xd: 1, imm: 1000 });
+        a.label("loop");
+        a.push(Inst::Ldr { size: 8, signed: false, xt: 2, base: 0, off: MemOff::Imm(0) });
+        a.push(Inst::AddImm { xd: 0, xn: 0, imm: 8 });
+        a.push(Inst::AddImm { xd: 1, xn: 1, imm: -1 });
+        a.push_branch(Inst::Cbnz { xn: 1, target: 0 }, "loop");
+        a.push(Inst::Halt);
+        let p = a.finish();
+        let dec = DecodedProgram::decode(&p);
+        let mut mem = Memory::new();
+        mem.map(0x1000, PAGE_SIZE as u64);
+        let mut base = Executor::new(128, mem.clone());
+        let rb = base.run_decoded(&dec, 1_000_000);
+        assert!(matches!(rb, Err(Trap::Fault { .. })), "the walk must fault: {rb:?}");
+        let mut traced = Executor::new(128, mem.clone());
+        let mut eng = TraceEngine::with_threshold(&dec, 2);
+        let rt = eng.run(&mut traced, &dec, 1_000_000);
+        assert!(eng.trace_count() >= 1, "the loop must be traced before the fault");
+        assert_eq!(rb, rt, "identical Trap::Fault, same fault address, same pc");
+        assert_same_state(&base, &traced, "fault state");
+    }
+
+    #[test]
+    fn budget_is_exact_through_traces() {
+        let (mem, _y, p) = daxpy_setup(40);
+        let dec = DecodedProgram::decode(&p);
+        let full = {
+            let mut ex = Executor::new(256, mem.clone());
+            ex.run_decoded(&dec, 1_000_000).unwrap().insts
+        };
+        // pre-form the traces, then sweep every budget through them
+        let mut eng = TraceEngine::with_threshold(&dec, 1);
+        let mut warm = Executor::new(256, mem.clone());
+        eng.run(&mut warm, &dec, 1_000_000).unwrap();
+        assert!(eng.trace_count() >= 1);
+        for budget in 0..=full {
+            let mut base = Executor::new(256, mem.clone());
+            let mut nb = 0u64;
+            let rb = base.run_decoded_with(&dec, budget, |_| nb += 1);
+            let mut traced = Executor::new(256, mem.clone());
+            let mut nt = 0u64;
+            let rt = eng.run_with(&mut traced, &dec, budget, |_| nt += 1);
+            assert_eq!(rb, rt, "budget {budget}");
+            assert_eq!(nb, nt, "retire count at budget {budget}");
+            if budget < full {
+                assert_eq!(rb, Err(Trap::Budget), "budget {budget}");
+                assert_eq!(nb, budget, "exact metering at budget {budget}");
+            }
+            assert_same_state(&base, &traced, &format!("budget {budget}"));
+        }
+    }
+
+    #[test]
+    fn halting_paths_are_rejected_not_traced() {
+        let mut a = Asm::new();
+        a.push(Inst::MovImm { xd: 0, imm: 7 });
+        a.push(Inst::AddImm { xd: 0, xn: 0, imm: 1 });
+        a.push(Inst::Halt);
+        let p = a.finish();
+        let dec = DecodedProgram::decode(&p);
+        let mut eng = TraceEngine::with_threshold(&dec, 1);
+        for _ in 0..3 {
+            let mut ex = Executor::new(128, Memory::new());
+            let stats = eng.run(&mut ex, &dec, 100).unwrap();
+            assert_eq!(stats.insts, 3);
+            assert_eq!(ex.state.get_x(0), 8);
+        }
+        assert_eq!(eng.trace_count(), 0, "a halting path is never worth a trace");
+    }
+
+    #[test]
+    fn timed_counters_are_engine_independent_on_compiled_workloads() {
+        use crate::compiler::Target;
+        let cfg = UarchConfig::default();
+        for name in ["stream_triad", "haccmk", "strlen1m", "graph500"] {
+            let w = workloads::build(name);
+            let plans: [(Target, &[usize]); 3] = [
+                (Target::Scalar, &[128]),
+                (Target::Neon, &[128]),
+                (Target::Sve, &[128, 384, 1024]),
+            ];
+            for (target, vls) in plans {
+                let c = w.compile(target);
+                for &vl in vls {
+                    let mut a = Executor::new(vl, w.mem.clone());
+                    let (sa, ta) =
+                        run_timed_decoded(&mut a, &c.decoded, cfg.clone(), w.max_insts).unwrap();
+                    let mut b = Executor::new(vl, w.mem.clone());
+                    let (sb, tb) = run_timed_decoded_engine(
+                        &mut b,
+                        &c.decoded,
+                        Engine::Trace,
+                        cfg.clone(),
+                        w.max_insts,
+                    )
+                    .unwrap();
+                    let what = format!("{name}/{target:?}@{vl}");
+                    assert_eq!(sa, sb, "{what}: run stats");
+                    assert_eq!(ta, tb, "{what}: timing counters");
+                    assert_same_state(&a, &b, &what);
+                }
+            }
+        }
+    }
+}

@@ -422,6 +422,17 @@ impl Uop {
     pub fn is_cond_branch(&self) -> bool {
         self.has(F_COND_BRANCH)
     }
+
+    /// Can this µop redirect the pc or stop the run? Exactly the tags
+    /// whose handlers touch `next_pc`/`halted`: every other handler
+    /// falls through to pc+1 unconditionally, which is what lets the
+    /// executor run straight-line spans ([`DecodedProgram::
+    /// straight_lens`]) and the trace engine elide per-µop branch
+    /// resolution.
+    #[inline]
+    pub fn is_control_flow(&self) -> bool {
+        matches!(self.tag, UopTag::B | UopTag::BCond | UopTag::Cbz | UopTag::Cbnz | UopTag::Halt)
+    }
 }
 
 /// A [`Program`] lowered once into µops: the flat decoded array, the
@@ -456,6 +467,7 @@ pub struct DecodedProgram {
     insts: Vec<Inst>,
     uops: Vec<Uop>,
     dep_pool: Vec<u8>,
+    straight: Vec<u32>,
 }
 
 impl DecodedProgram {
@@ -476,7 +488,17 @@ impl DecodedProgram {
             dep_pool.extend(writes.iter().map(|&w| reg_slot(w)));
             uops.push(u);
         }
-        DecodedProgram { insts: prog.insts.clone(), uops, dep_pool }
+        // straight-line run lengths: how many µops starting at each pc
+        // execute before the next possible pc redirect (inclusive of
+        // the control µop itself) — the granule the executor meters
+        // its instruction budget at
+        let mut straight = vec![0u32; uops.len()];
+        let mut run = 0u32;
+        for (pc, u) in uops.iter().enumerate().rev() {
+            run = if u.is_control_flow() { 1 } else { run.saturating_add(1) };
+            straight[pc] = run;
+        }
+        DecodedProgram { insts: prog.insts.clone(), uops, dep_pool, straight }
     }
 
     /// Number of architectural instructions (== decoded µop slots).
@@ -513,6 +535,16 @@ impl DecodedProgram {
     pub fn writes(&self, u: &Uop) -> &[u8] {
         let off = u.writes_off as usize;
         &self.dep_pool[off..off + u.writes_len as usize]
+    }
+
+    /// Straight-line run length at each pc: the number of µops from
+    /// that pc up to and including the next control-flow µop
+    /// ([`Uop::is_control_flow`]). Within a run only the final µop can
+    /// redirect the pc or halt, so the executor checks its instruction
+    /// budget once per run instead of once per retire.
+    #[inline]
+    pub fn straight_lens(&self) -> &[u32] {
+        &self.straight
     }
 }
 
@@ -1591,6 +1623,21 @@ pub(crate) mod tests {
         seen[reg_slot(RegId::Ffr) as usize] = true;
         seen[reg_slot(RegId::Nzcv) as usize] = true;
         assert!(seen.iter().all(|&s| s), "every scoreboard slot is reachable");
+    }
+
+    #[test]
+    fn straight_lens_count_to_next_control_uop() {
+        let mut a = Asm::new();
+        a.push(Inst::MovImm { xd: 0, imm: 1 });
+        a.push(Inst::AddImm { xd: 0, xn: 0, imm: 1 });
+        a.push_branch(Inst::Cbnz { xn: 0, target: 0 }, "end");
+        a.push(Inst::Nop);
+        a.label("end");
+        a.push(Inst::Halt);
+        let dec = DecodedProgram::decode(&a.finish());
+        assert_eq!(dec.straight_lens(), &[3, 2, 1, 2, 1]);
+        assert!(dec.uops()[2].is_control_flow());
+        assert!(!dec.uops()[3].is_control_flow());
     }
 
     #[test]

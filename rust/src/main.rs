@@ -25,7 +25,7 @@ use std::path::PathBuf;
 
 use sve_repro::coordinator::{self, Isa, SweepConfig};
 use sve_repro::csvutil::Table;
-use sve_repro::exec::Executor;
+use sve_repro::exec::{Engine, Executor};
 use sve_repro::isa::encoding;
 use sve_repro::report;
 use sve_repro::report::compare::{self, MetricPoint};
@@ -42,12 +42,16 @@ commands:
   run <bench>                run one benchmark
       --isa scalar|neon|sve  target ISA (default sve)
       --vl BITS              SVE vector length, 128..2048 step 128 (default 256)
+      --no-trace             run on the baseline interpreter instead of the
+                             superblock trace engine (A/B escape hatch;
+                             results are bit-identical, only speed differs)
   sweep                      the Fig. 8 sweep, sharded + resumable
       --vls A,B,C            SVE vector lengths (default 128,256,512)
       --benches a,b          benchmark subset (default: all)
       --out DIR              artifact/cache directory (default reports)
       --jobs N               worker threads (default: one per CPU)
       --resume               reuse completed jobs cached under DIR/jobs/
+      --no-trace             as for run (also accepted by dse and report)
   dse                        design-space sweep across uarch variants,
                              with PPA proxies + Pareto ranking
       --uarch a,b[,k=v,...]  variants: table2, small-core, big-core,
@@ -169,12 +173,25 @@ fn parse_benches(args: &[String]) -> Vec<&'static str> {
     names
 }
 
+/// `--no-trace` drops back to the baseline block interpreter; the
+/// default is the superblock trace engine. Reported numbers are
+/// bit-identical either way (pinned by `exec/trace.rs` tests) — the
+/// flag exists for A/B simulator-throughput runs and for bisecting.
+fn parse_engine(args: &[String]) -> Engine {
+    if has_flag(args, "--no-trace") {
+        Engine::Baseline
+    } else {
+        Engine::Trace
+    }
+}
+
 fn sweep_config(args: &[String]) -> (SweepConfig, PathBuf) {
     let out: PathBuf = flag(args, "--out").unwrap_or_else(|| "reports".into()).into();
     let mut cfg = SweepConfig::new(&parse_vls(args), &parse_benches(args));
     cfg.jobs = parse_jobs(args);
     cfg.resume = has_flag(args, "--resume");
     cfg.out_dir = Some(out.clone());
+    cfg.engine = parse_engine(args);
     (cfg, out)
 }
 
@@ -284,7 +301,7 @@ fn main() {
                     die_usage(&format!("unknown --isa '{other}' (scalar, neon or sve)"))
                 }
             };
-            match coordinator::run_one(name, isa) {
+            match coordinator::run_one_engine(name, isa, parse_engine(&args)) {
                 Ok(r) => {
                     println!(
                         "{} on {}: {} insts, {} cycles, ipc {:.2}, vectorized={}, \

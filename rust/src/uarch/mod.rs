@@ -31,7 +31,7 @@ pub use pipeline::{InstTiming, Pipeline, TimingResult};
 pub use ppa::PpaCounters;
 
 use crate::asm::Program;
-use crate::exec::{Executor, RunStats, Trap};
+use crate::exec::{Engine, Executor, RunStats, Trap};
 use crate::isa::uop::DecodedProgram;
 
 /// Run `prog` functionally and through the timing model in one pass.
@@ -82,6 +82,24 @@ pub fn run_timed_decoded(
     let vl = ex.state.vl_bits();
     let mut pipe = Pipeline::new(cfg, vl);
     let stats = ex.run_decoded_with(dec, max_insts, |info| pipe.on_retire(&info))?;
+    Ok((stats, pipe.result))
+}
+
+/// [`run_timed_decoded`] on a selectable functional [`Engine`]. The
+/// retire stream — and therefore every timing counter — is
+/// bit-identical across engines (pinned by tests in `exec/trace.rs`),
+/// so the sweep job store can cache results without the engine entering
+/// the job key.
+pub fn run_timed_decoded_engine(
+    ex: &mut Executor,
+    dec: &DecodedProgram,
+    engine: Engine,
+    cfg: UarchConfig,
+    max_insts: u64,
+) -> Result<(RunStats, TimingResult), Trap> {
+    let vl = ex.state.vl_bits();
+    let mut pipe = Pipeline::new(cfg, vl);
+    let stats = ex.run_decoded_engine_with(dec, engine, max_insts, |info| pipe.on_retire(&info))?;
     Ok((stats, pipe.result))
 }
 

@@ -97,7 +97,7 @@ impl Predictor {
 }
 
 /// Aggregate timing results.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct TimingResult {
     pub cycles: u64,
     pub insts: u64,

@@ -1,0 +1,127 @@
+#!/usr/bin/env python3
+"""Install regression-wall baselines from CI blessing candidates.
+
+Usage:
+    bless.py fig8-blessed-candidate.json [dse-blessed-candidate.json]
+
+Each argument is a `fig8-blessed-candidate` / `dse-blessed-candidate`
+artifact downloaded from a **green** CI run (the "Regression wall" step
+uploads both on every run). The script validates that each document is a
+real smoke-sweep artifact — the right schema, the exact (benchmark x VL
+x variant) matrix CI's wall compares, finite positive speedups — and
+copies it to the path the wall looks for:
+
+    sve-repro/fig8/v1  ->  tests/golden/fig8-blessed.json
+    sve-repro/dse/v2   ->  tests/golden/dse-blessed.json
+
+Commit the installed files to switch CI from the parent-rebuild wall arm
+to the fixed-baseline arm (EXPERIMENTS.md §DSE). Validation exists so a
+synthetic emitter fixture (tests/golden/fig8.json and dse.json are fake
+dyadic-rational rows pinning the *formatters*, not measurements) or a
+full-matrix artifact can never be blessed by accident: the wall would
+then fail every run on missing/mismatched points.
+
+Exit codes: 0 installed, 1 validation failure, 2 usage error.
+"""
+
+import json
+import math
+import os
+import sys
+
+# The matrices CI's smoke steps simulate (.github/workflows/ci.yml) —
+# the wall compares point-for-point, so a baseline must match exactly.
+FIG8_BENCHES = ["stream_triad", "haccmk", "graph500"]
+DSE_BENCHES = ["stream_triad", "haccmk"]
+DSE_VARIANTS = ["table2", "small-core"]
+SMOKE_VLS = [128, 256]
+
+GOLDEN_DIR = os.path.join(os.path.dirname(__file__), "..", "tests", "golden")
+
+
+def fail(msg):
+    sys.stderr.write("bless.py: %s\n" % msg)
+    return 1
+
+
+def check_benchmarks(path, benches, expect_names):
+    names = [b.get("bench") for b in benches]
+    if sorted(names) != sorted(expect_names):
+        return fail(
+            "%s: benchmark set %r is not the CI smoke matrix %r"
+            % (path, names, expect_names)
+        )
+    for b in benches:
+        sve = b.get("sve", [])
+        if [r.get("vl_bits") for r in sve] != SMOKE_VLS:
+            return fail(
+                "%s: %s sweeps VLs %r, CI smoke sweeps %r"
+                % (path, b.get("bench"), [r.get("vl_bits") for r in sve], SMOKE_VLS)
+            )
+        for r in sve:
+            s = r.get("speedup")
+            if not isinstance(s, (int, float)) or not math.isfinite(s) or s <= 0:
+                return fail(
+                    "%s: %s vl=%s has non-positive/non-finite speedup %r"
+                    % (path, b.get("bench"), r.get("vl_bits"), s)
+                )
+    return 0
+
+
+def validate(path, doc):
+    """Return (dest-filename, error-code)."""
+    schema = doc.get("schema")
+    if schema == "sve-repro/fig8/v1":
+        return "fig8-blessed.json", check_benchmarks(path, doc.get("benchmarks", []), FIG8_BENCHES)
+    if schema == "sve-repro/dse/v2":
+        variants = doc.get("variants", [])
+        names = [v.get("name") for v in variants]
+        if sorted(names) != sorted(DSE_VARIANTS):
+            return "", fail(
+                "%s: variant set %r is not the CI smoke matrix %r" % (path, names, DSE_VARIANTS)
+            )
+        for v in variants:
+            rc = check_benchmarks(
+                "%s[%s]" % (path, v.get("name")), v.get("benchmarks", []), DSE_BENCHES
+            )
+            if rc:
+                return "", rc
+        return "dse-blessed.json", 0
+    return "", fail(
+        "%s: schema %r is not blessable (expect sve-repro/fig8/v1 or sve-repro/dse/v2)"
+        % (path, schema)
+    )
+
+
+def main(argv):
+    if len(argv) < 2:
+        sys.stderr.write(__doc__)
+        return 2
+    installs = []
+    for path in argv[1:]:
+        try:
+            with open(path, encoding="utf-8") as fh:
+                doc = json.load(fh)
+        except (OSError, ValueError) as e:
+            return fail("%s: %s" % (path, e))
+        dest, rc = validate(path, doc)
+        if rc:
+            return rc
+        installs.append((path, os.path.join(GOLDEN_DIR, dest)))
+    seen = set()
+    for _, dest in installs:
+        if dest in seen:
+            return fail("two arguments map to %s — pass each candidate once" % dest)
+        seen.add(dest)
+    for src, dest in installs:
+        with open(src, "rb") as fh:
+            data = fh.read()
+        with open(dest, "wb") as fh:
+            fh.write(data)
+        print("blessed %s -> %s" % (src, os.path.relpath(dest)))
+    print("commit the installed file(s) to arm the fixed-baseline wall")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))
