@@ -29,7 +29,11 @@ use sve_repro::uarch::{run_timed_decoded_engine, UarchConfig};
 use sve_repro::workloads::{self, Workload};
 
 const VL_BITS: usize = 256;
-const KERNELS: [&str; 4] = ["stream_triad", "haccmk", "strlen1m", "graph500"];
+/// The smoke subset (first four) covers every IR shape the hot path
+/// dispatches on: streaming FMA, gather, reduction-of-products
+/// (oneDAL) and the complex-multiply lane-parity form (SU(3)).
+const KERNELS: [&str; 6] =
+    ["stream_triad", "haccmk", "onedal_cov", "su3_mv", "strlen1m", "graph500"];
 
 /// One engine's pair of measurements for one kernel.
 struct EngineCols {
@@ -100,7 +104,7 @@ fn main() {
         .position(|a| a == "--out")
         .and_then(|i| args.get(i + 1).cloned())
         .unwrap_or_else(|| "BENCH_hotpath.json".into());
-    let (names, samples): (&[&str], usize) = if smoke { (&KERNELS[..2], 2) } else { (&KERNELS, 5) };
+    let (names, samples): (&[&str], usize) = if smoke { (&KERNELS[..4], 2) } else { (&KERNELS, 5) };
 
     let mut rows: Vec<Row> = Vec::new();
     for &name in names {

@@ -148,6 +148,8 @@ impl<'k> Cg<'k> {
             Expr::Cmp { a, .. } => self.ty_of(a),
             Expr::Select { t, .. } => self.ty_of(t),
             Expr::Opaque { .. } => Ty::F64,
+            Expr::Fma { a, .. } => self.ty_of(a),
+            Expr::ComplexMul { a_arr, .. } => self.k.arrays[*a_arr].ty,
             Expr::Local(i) => self.local_ty.get(*i).copied().unwrap_or(self.k.elem_ty),
         }
     }
@@ -244,7 +246,7 @@ impl<'k> Cg<'k> {
                 RedKind::XorI => {
                     self.asm.push(Inst::MovImm { xd: XACC + r, imm: 0 });
                 }
-                RedKind::SumF | RedKind::OrderedSumF => {
+                RedKind::SumF | RedKind::OrderedSumF | RedKind::DotF => {
                     self.asm.push(Inst::FmovImm { dbl, dd: FACC + r, bits: 0 });
                 }
                 RedKind::MaxF => {
@@ -266,7 +268,7 @@ impl<'k> Cg<'k> {
                             imm: 0,
                         });
                     }
-                    RedKind::SumF => {
+                    RedKind::SumF | RedKind::DotF => {
                         self.asm.push(Inst::FdupImm { zd: VACC + r, dbl, bits: 0 });
                     }
                     RedKind::MaxF => {
@@ -555,6 +557,79 @@ impl<'k> Cg<'k> {
                 self.asm.push(Inst::OpaqueCall { f: *f, dd: ft, dn: a0, dm: a1 });
                 SVal::D(ft)
             }
+            Expr::Fma { a, b, acc, sub } => {
+                // unfused: the product rounds, then the add — the exact
+                // semantics of the executor's Fmadd (and of NeonFmla /
+                // SveFmla), so all targets agree bit-for-bit.
+                let SVal::D(_) = self.ev_scalar_into(a, ft, it) else {
+                    panic!("fma on int")
+                };
+                let SVal::D(rb) = self.ev_scalar(b, ft + 1, it) else {
+                    panic!("fma on int")
+                };
+                let SVal::D(racc) = self.ev_scalar(acc, ft + 2, it) else {
+                    panic!("fma on int")
+                };
+                self.asm.push(Inst::Fmadd { dbl, dd: ft, dn: ft, dm: rb, da: racc, sub: *sub });
+                SVal::D(ft)
+            }
+            Expr::ComplexMul { a_arr, a_off, b_arr, b_off, conj } => {
+                // one lane of an interleaved-complex product: pair base
+                // p = iv & !1; even iv produces the real part, odd iv the
+                // imaginary part, each as one mul + one unfused fmadd —
+                // the same rounding sequence every target performs.
+                assert!(ft + 3 < 8, "scalar expression stack overflow");
+                let (a_arr, b_arr) = (*a_arr, *b_arr);
+                let lg = log2(self.k.arrays[a_arr].ty.bytes());
+                self.asm.push(Inst::AndImm { xd: SCR, xn: IV, imm: !1 });
+                for (slot, (arr, off)) in [
+                    (a_arr, *a_off),
+                    (a_arr, *a_off + 1),
+                    (b_arr, *b_off),
+                    (b_arr, *b_off + 1),
+                ]
+                .into_iter()
+                .enumerate()
+                {
+                    let base = self.base_with_offset(arr, off);
+                    self.asm.push(Inst::LdrFp {
+                        dbl,
+                        vt: ft + slot as u8,
+                        base,
+                        off: MemOff::RegLsl(SCR, lg),
+                    });
+                }
+                // ft=ar ft+1=ai ft+2=br ft+3=bi
+                self.asm.push(Inst::AndImm { xd: XSTACK + it, xn: IV, imm: 1 });
+                self.asm.push(Inst::CmpImm { xn: XSTACK + it, imm: 0 });
+                let odd = self.fresh("codd");
+                let done = self.fresh("cdone");
+                self.asm.push_branch(Inst::BCond { cond: Cond::Ne, target: 0 }, &odd);
+                // even: re = ar*br -/+ ai*bi
+                self.asm.push(Inst::FpBin { op: FpOp::Mul, dbl, dd: ft, dn: ft, dm: ft + 2 });
+                self.asm.push(Inst::Fmadd {
+                    dbl,
+                    dd: ft,
+                    dn: ft + 1,
+                    dm: ft + 3,
+                    da: ft,
+                    sub: !*conj,
+                });
+                self.asm.push_branch(Inst::B { target: 0 }, &done);
+                self.asm.label(&odd);
+                // odd: im = ar*bi +/- ai*br
+                self.asm.push(Inst::FpBin { op: FpOp::Mul, dbl, dd: ft, dn: ft, dm: ft + 3 });
+                self.asm.push(Inst::Fmadd {
+                    dbl,
+                    dd: ft,
+                    dn: ft + 1,
+                    dm: ft + 2,
+                    da: ft,
+                    sub: *conj,
+                });
+                self.asm.label(&done);
+                SVal::D(ft)
+            }
             Expr::Cmp { .. } => panic!("bare Cmp outside Select/Break"),
         }
     }
@@ -681,6 +756,27 @@ impl<'k> Cg<'k> {
         }
         for (r, red) in self.k.reductions.clone().iter().enumerate() {
             let r = r as u8;
+            if red.kind == RedKind::DotF {
+                // dot-product reduction: one unfused fmadd per element
+                // instead of mul + add — numerically identical to SumF
+                // over the same product.
+                let Expr::Bin { op: BinOp::Mul, a, b } = &red.value else {
+                    panic!("DotF value must be a product")
+                };
+                let SVal::D(_) = self.ev_scalar_into(a, 0, 0) else {
+                    panic!("DotF on int")
+                };
+                let SVal::D(rb) = self.ev_scalar(b, 1, 0) else { panic!("DotF on int") };
+                self.asm.push(Inst::Fmadd {
+                    dbl,
+                    dd: FACC + r,
+                    dn: 0,
+                    dm: rb,
+                    da: FACC + r,
+                    sub: false,
+                });
+                continue;
+            }
             let v = self.ev_scalar(&red.value, 0, 0);
             match (red.kind, v) {
                 (RedKind::XorI, SVal::X(x)) => self.asm.push(Inst::LogReg {

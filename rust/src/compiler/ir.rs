@@ -98,6 +98,29 @@ pub enum Expr {
     Select { c: Box<Expr>, t: Box<Expr>, f: Box<Expr> },
     /// Opaque libm call — never vectorizable (§5, EP).
     Opaque { f: OpaqueFn, args: Vec<Expr> },
+    /// Multiply-accumulate shape `acc ± a*b`, lowered to the target's
+    /// FMLA/FMLS form (scalar `Fmadd`, `NeonFmla`, `SveFmla`). All three
+    /// evaluate it **unfused** — the product rounds, then the add — so
+    /// results are bit-identical across targets for a fixed operand
+    /// order. The reduction-of-product kernels (oneDAL, SU(3)) build
+    /// their accumulator chains from this node.
+    Fma { a: Box<Expr>, b: Box<Expr>, acc: Box<Expr>, sub: bool },
+    /// One interleaved-complex product lane, FCMLA-style (§SU(3)).
+    ///
+    /// Arrays `a_arr`/`b_arr` hold complex values as interleaved
+    /// `re, im` element pairs; `a_off`/`b_off` are element offsets of
+    /// the operand blocks. With `p = (i & !1) + off` the pair base for
+    /// iteration `i`, the value is the real part of
+    /// `A[p..p+2] * B[p..p+2]` on even `i` and the imaginary part on
+    /// odd `i` (`conj` conjugates the `A` operand). Evaluated as a
+    /// multiply then an unfused FMLA/FMLS, identically on every target.
+    ///
+    /// The SVE lowering reads the `off-1`/`off`/`off+1` shifted
+    /// contiguous vectors, so both neighbours of every accessed pair
+    /// must be **mapped** (one guard element before and after each
+    /// operand block) — the values read there never influence selected
+    /// lanes.
+    ComplexMul { a_arr: usize, a_off: i64, b_arr: usize, b_off: i64, conj: bool },
     /// The induction variable as a value (i64).
     Iv,
     /// Convert i64 -> fp.
@@ -124,6 +147,10 @@ impl Expr {
         Expr::Load { arr, idx }
     }
 
+    pub fn fma(a: Expr, b: Expr, acc: Expr) -> Expr {
+        Expr::Fma { a: Box::new(a), b: Box::new(b), acc: Box::new(acc), sub: false }
+    }
+
     /// Walk the tree, calling `f` on every node.
     pub fn visit(&self, f: &mut impl FnMut(&Expr)) {
         f(self);
@@ -147,6 +174,11 @@ impl Expr {
                     a.visit(f);
                 }
             }
+            Expr::Fma { a, b, acc, .. } => {
+                a.visit(f);
+                b.visit(f);
+                acc.visit(f);
+            }
             _ => {}
         }
     }
@@ -163,6 +195,13 @@ pub enum RedKind {
     XorI,
     /// FP max (fmaxv).
     MaxF,
+    /// FP dot product: the value must be `Bin { op: Mul, .. }` and the
+    /// per-iteration update is one unfused FMLA into the accumulator
+    /// (`acc += a*b`, product rounded first) — numerically identical to
+    /// `SumF` over the same product, but one µop per element instead of
+    /// two. Tree order allowed (per-lane partial sums + faddv fold),
+    /// like `SumF`.
+    DotF,
 }
 
 /// A reduction accumulator updated every iteration.
@@ -355,5 +394,40 @@ mod tests {
         e.visit(&mut |_| n += 1);
         // Select + Cmp + Load + ConstF + Bin + IvAsF + ConstF + ConstF
         assert_eq!(n, 8);
+    }
+
+    #[test]
+    fn expr_visit_recurses_into_fma_operands() {
+        let e = Expr::fma(
+            Expr::load(0, Index::Affine { offset: 0 }),
+            Expr::ConstF(2.0),
+            Expr::fma(Expr::IvAsF, Expr::ConstF(3.0), Expr::ConstF(0.0)),
+        );
+        let mut n = 0;
+        let mut loads = 0;
+        e.visit(&mut |x| {
+            n += 1;
+            if matches!(x, Expr::Load { .. }) {
+                loads += 1;
+            }
+        });
+        // Fma + Load + ConstF + Fma + IvAsF + ConstF + ConstF
+        assert_eq!((n, loads), (7, 1));
+    }
+
+    #[test]
+    fn complex_mul_is_a_leaf_node() {
+        let e = Expr::bin(
+            BinOp::Add,
+            Expr::ComplexMul { a_arr: 0, a_off: 1, b_arr: 1, b_off: 1, conj: false },
+            Expr::ComplexMul { a_arr: 0, a_off: 3, b_arr: 1, b_off: 1, conj: true },
+        );
+        let mut cmuls = 0;
+        e.visit(&mut |x| {
+            if matches!(x, Expr::ComplexMul { .. }) {
+                cmuls += 1;
+            }
+        });
+        assert_eq!(cmuls, 2);
     }
 }

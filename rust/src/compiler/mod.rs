@@ -45,6 +45,13 @@ fn rewrite_milc(k: &Kernel) -> Kernel {
                 fix_expr(f);
             }
             Expr::Opaque { args, .. } => args.iter_mut().for_each(fix_expr),
+            Expr::Fma { a, b, acc, .. } => {
+                fix_expr(a);
+                fix_expr(b);
+                fix_expr(acc);
+            }
+            // ComplexMul carries its own addressing (pair-base), not an
+            // Index — nothing to rewrite; only milcmk uses the quirk.
             _ => {}
         }
     }

@@ -92,6 +92,26 @@ impl<'k> Cg<'k> {
                 self.asm.push(Inst::NeonFpUn { op: fop, dbl, vd: vt, vn: ra });
                 vt
             }
+            Expr::Fma { a, b, acc, sub } => {
+                let racc = self.ev_neon(acc, vt);
+                if racc != vt {
+                    // full-register copy (the locals idiom): Orr vt, r, r
+                    self.asm.push(Inst::NeonIntBin {
+                        op: IntOp::Orr,
+                        esize: crate::arch::Esize::B,
+                        vd: vt,
+                        vn: racc,
+                        vm: racc,
+                    });
+                }
+                let ra = self.ev_neon(a, vt + 1);
+                let rb = self.ev_neon(b, vt + 2);
+                self.asm.push(Inst::NeonFmla { dbl, vd: vt, vn: ra, vm: rb, sub: *sub });
+                vt
+            }
+            Expr::ComplexMul { .. } => {
+                panic!("complex multiply reached NEON codegen (legality bug)")
+            }
             Expr::Select { .. } | Expr::Cmp { .. } => {
                 panic!("conditional reached NEON codegen (legality bug)")
             }
@@ -132,6 +152,23 @@ impl<'k> Cg<'k> {
             }
         }
         for (r, red) in self.k.reductions.clone().iter().enumerate() {
+            if red.kind == RedKind::DotF {
+                // dot-product reduction: one FMLA per vector into the
+                // per-lane partial sums (folded by faddv like SumF).
+                let Expr::Bin { op: BinOp::Mul, a, b } = &red.value else {
+                    panic!("DotF value must be a product")
+                };
+                let ra = self.ev_neon(a, 0);
+                let rb = self.ev_neon(b, 1);
+                self.asm.push(Inst::NeonFmla {
+                    dbl,
+                    vd: VACC + r as u8,
+                    vn: ra,
+                    vm: rb,
+                    sub: false,
+                });
+                continue;
+            }
             let rv = self.ev_neon(&red.value, 0);
             match red.kind {
                 RedKind::SumF => self.asm.push(Inst::NeonFpBin {
@@ -157,7 +194,7 @@ impl<'k> Cg<'k> {
         self.asm.push(Inst::MovImm { xd: TRIP, imm: n });
         // (re)zero vector accumulators for this outer iteration
         for (r, red) in self.k.reductions.clone().iter().enumerate() {
-            if matches!(red.kind, RedKind::SumF) {
+            if matches!(red.kind, RedKind::SumF | RedKind::DotF) {
                 self.asm.push(Inst::FdupImm { zd: VACC + r as u8, dbl, bits: 0 });
             }
         }
@@ -174,7 +211,7 @@ impl<'k> Cg<'k> {
         self.asm.push_branch(Inst::BCond { cond: Cond::Lt, target: 0 }, &nloop);
         // fold the vector accumulators into the scalar ones
         for (r, red) in self.k.reductions.clone().iter().enumerate() {
-            if matches!(red.kind, RedKind::SumF) {
+            if matches!(red.kind, RedKind::SumF | RedKind::DotF) {
                 self.asm.push(Inst::NeonFaddv { dbl, dd: HSCR, vn: VACC + r as u8 });
                 self.asm.push(Inst::FpBin {
                     op: FpOp::Add,

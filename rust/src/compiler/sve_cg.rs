@@ -105,6 +105,75 @@ impl<'k> Cg<'k> {
                 rt
             }
             Expr::Opaque { .. } => panic!("opaque call reached SVE codegen (vectorizer bug)"),
+            Expr::Fma { a, b, acc, sub } => {
+                // predicated FMLA/FMLS: inactive lanes keep the acc value,
+                // active lanes get acc ± a*b with the same unfused rounding
+                // as the scalar Fmadd.
+                let _ = self.ev_sve_into(acc, zt, pred, pt);
+                let ra = self.ev_sve(a, zt + 1, pred, pt);
+                let rb = self.ev_sve(b, zt + 2, pred, pt);
+                self.asm.push(Inst::SveFmla { zda: zt, pg: pred, zn: ra, zm: rb, dbl, sub: *sub });
+                zt
+            }
+            Expr::ComplexMul { a_arr, a_off, b_arr, b_off, conj } => {
+                // FCMLA-style lane-parity form: compute the even-lane (real)
+                // arm from the aligned and +1-shifted vectors and the
+                // odd-lane (imaginary) arm from the aligned and -1-shifted
+                // vectors, then select by lane parity (p7, set up once in
+                // the program prologue). The shifted loads read one element
+                // before/after the operand blocks — guard elements the
+                // kernel must map; their values land only in lanes the Sel
+                // discards. Per-arm rounding (mul, then unfused fmla)
+                // matches the scalar lowering exactly.
+                assert!(zt + 4 < 8, "vector expression stack overflow");
+                let (a_arr, b_arr) = (*a_arr, *b_arr);
+                let mut ld = |cg: &mut Self, arr: usize, off: i64, zreg: u8| {
+                    let base = cg.base_with_offset(arr, off);
+                    cg.asm.push(Inst::SveLd1 {
+                        zt: zreg,
+                        pg: pred,
+                        esize,
+                        base,
+                        off: SveMemOff::RegScaled(IV),
+                        ff: false,
+                    });
+                };
+                ld(self, a_arr, *a_off, zt + 2); // A0: even→ar, odd→ai
+                ld(self, b_arr, *b_off, zt + 3); // B0: even→br, odd→bi
+                // even arm: re = A0*B0 -/+ Ap*Bp
+                self.asm.push(Inst::Movprfx { zd: zt, zn: zt + 2, pg: None });
+                self.asm.push(Inst::SveFpBin { op: FpOp::Mul, zdn: zt, pg: pred, zm: zt + 3, dbl });
+                ld(self, a_arr, *a_off + 1, zt + 1); // Ap: even→ai
+                ld(self, b_arr, *b_off + 1, zt + 4); // Bp: even→bi
+                self.asm.push(Inst::SveFmla {
+                    zda: zt,
+                    pg: pred,
+                    zn: zt + 1,
+                    zm: zt + 4,
+                    dbl,
+                    sub: !*conj,
+                });
+                // odd arm: im = Am*B0 +/- A0*Bm
+                ld(self, a_arr, *a_off - 1, zt + 1); // Am: odd→ar
+                self.asm.push(Inst::SveFpBin {
+                    op: FpOp::Mul,
+                    zdn: zt + 1,
+                    pg: pred,
+                    zm: zt + 3,
+                    dbl,
+                });
+                ld(self, b_arr, *b_off - 1, zt + 4); // Bm: odd→br
+                self.asm.push(Inst::SveFmla {
+                    zda: zt + 1,
+                    pg: pred,
+                    zn: zt + 2,
+                    zm: zt + 4,
+                    dbl,
+                    sub: *conj,
+                });
+                self.asm.push(Inst::Sel { zd: zt, pg: 7, zn: zt, zm: zt + 1, esize });
+                zt
+            }
             Expr::Cmp { .. } => panic!("bare Cmp outside Select/Break"),
         }
     }
@@ -288,6 +357,25 @@ impl<'k> Cg<'k> {
         }
         for (r, red) in self.k.reductions.clone().iter().enumerate() {
             let r = r as u8;
+            if red.kind == RedKind::DotF {
+                // dot-product reduction: one predicated FMLA per vector
+                // into the per-lane partial sums (folded by FAddV in the
+                // epilogue, exactly like SumF).
+                let Expr::Bin { op: BinOp::Mul, a, b } = &red.value else {
+                    panic!("DotF value must be a product")
+                };
+                let ra = self.ev_sve(a, 0, pred, 1);
+                let rb = self.ev_sve(b, 1, pred, 1);
+                self.asm.push(Inst::SveFmla {
+                    zda: VACC + r,
+                    pg: pred,
+                    zn: ra,
+                    zm: rb,
+                    dbl,
+                    sub: false,
+                });
+                continue;
+            }
             let zv = self.ev_sve(&red.value, 0, pred, 1);
             match red.kind {
                 RedKind::SumF => self.asm.push(Inst::SveFpBin {
@@ -315,6 +403,7 @@ impl<'k> Cg<'k> {
                 RedKind::OrderedSumF => {
                     self.asm.push(Inst::SveFadda { vdn: FACC + r, pg: pred, zm: zv, dbl })
                 }
+                RedKind::DotF => unreachable!("handled above"),
             };
         }
     }
@@ -325,7 +414,7 @@ impl<'k> Cg<'k> {
         for (r, red) in self.k.reductions.clone().iter().enumerate() {
             let r = r as u8;
             match red.kind {
-                RedKind::SumF => {
+                RedKind::SumF | RedKind::DotF => {
                     self.asm.push(Inst::SveReduce {
                         op: crate::isa::RedOp::FAddV,
                         vd: FACC + r,
@@ -438,6 +527,41 @@ impl<'k> Cg<'k> {
     /// The complete SVE program for a vectorizable kernel.
     pub fn emit_sve_program(&mut self) {
         self.prologue();
+        // lane-parity predicate for ComplexMul: p7 = even lanes. Lane
+        // counts are even at every legal VL (≥ 2 elements per vector),
+        // and the IV advances by whole vectors, so lane parity equals
+        // element parity for the whole loop — compute it once.
+        let has_cmul = {
+            let mut found = false;
+            for e in self.k.all_exprs() {
+                e.visit(&mut |n| {
+                    if matches!(n, Expr::ComplexMul { .. }) {
+                        found = true;
+                    }
+                });
+            }
+            found
+        };
+        if has_cmul {
+            let esize = self.elem_esize();
+            self.asm.push(Inst::Index {
+                zd: 7,
+                esize,
+                base: crate::isa::RegOrImm::Imm(0),
+                step: crate::isa::RegOrImm::Imm(1),
+            });
+            self.asm.push(Inst::DupImm { zd: 6, esize, imm: 1 });
+            self.asm.push(Inst::SveIntBinU { op: IntOp::And, zd: 7, zn: 7, zm: 6, esize });
+            self.asm.push(Inst::SveIntCmp {
+                op: CmpOp::Eq,
+                unsigned: false,
+                pd: 7,
+                pg: PALL,
+                zn: 7,
+                rhs: ZmOrImm::Imm(0),
+                esize,
+            });
+        }
         let outer = self.open_outer();
         self.asm.push(Inst::MovImm { xd: IV, imm: 0 });
         match self.k.trip {

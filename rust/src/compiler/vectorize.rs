@@ -28,6 +28,12 @@ pub mod cost {
     pub const SELECT_VEC: f64 = 2.0;
     /// cracked gather/scatter element (§4): address gen + port slot
     pub const GATHER_ELEM: f64 = 2.0;
+    /// scalar interleaved-complex product lane: 4 loads, a multiply, an
+    /// FMLA and the parity branch
+    pub const CMUL_SCALAR: f64 = 4.0 * MEM + 2.0 * ARITH + SELECT_SCALAR;
+    /// vector interleaved-complex product lane: 6 shifted contiguous
+    /// loads, FMUL+FMLA per parity arm, and the lane select
+    pub const CMUL_VEC: f64 = 6.0 * MEM + 4.0 * ARITH + SELECT_VEC;
 }
 
 /// Why a loop was not vectorized (mirrors real -Rpass-missed output).
@@ -44,6 +50,7 @@ struct Counts {
     selects: usize,
     opaque: usize,
     cmps: usize,
+    cmul: usize,
 }
 
 fn count_expr(e: &Expr, c: &mut Counts) {
@@ -74,6 +81,10 @@ fn count_expr(e: &Expr, c: &mut Counts) {
         Expr::Cmp { .. } => c.cmps += 1,
         Expr::Select { .. } => c.selects += 1,
         Expr::Opaque { .. } => c.opaque += 1,
+        // one multiply-accumulate instruction (operands counted by the
+        // recursive visit)
+        Expr::Fma { .. } => c.arith += 1,
+        Expr::ComplexMul { .. } => c.cmul += 1,
         _ => {}
     });
 }
@@ -104,6 +115,7 @@ fn scalar_cost(c: &Counts) -> f64 {
         + c.selects as f64 * cost::SELECT_SCALAR
         + c.cmps as f64 * cost::ARITH
         + c.opaque as f64 * cost::OPAQUE
+        + c.cmul as f64 * cost::CMUL_SCALAR
 }
 
 /// SVE per-element cost at the conservative minimum VL (the compiler
@@ -112,7 +124,8 @@ fn sve_cost(c: &Counts, lanes_min: f64) -> f64 {
     ((c.contig_loads + c.contig_stores) as f64 * cost::MEM
         + c.arith as f64 * cost::ARITH
         + c.divsqrt as f64 * cost::DIV
-        + (c.selects + c.cmps) as f64 * cost::SELECT_VEC)
+        + (c.selects + c.cmps) as f64 * cost::SELECT_VEC
+        + c.cmul as f64 * cost::CMUL_VEC)
         / lanes_min
         + (c.gather + c.scatter) as f64 * cost::GATHER_ELEM
 }
@@ -137,6 +150,11 @@ pub fn neon_legal(k: &Kernel) -> Result<(), WhyNot> {
     }
     if c.opaque > 0 {
         return Err("call to scalar math library".into());
+    }
+    if c.cmul > 0 {
+        return Err("interleaved complex multiply needs lane-rotating \
+                    fused multiply-add (FCMLA); not in ARMv8.0 Advanced SIMD"
+            .into());
     }
     if k.reductions.iter().any(|r| matches!(r.kind, RedKind::OrderedSumF)) {
         return Err("reduction requires strictly-ordered FP accumulation".into());
@@ -176,6 +194,14 @@ pub fn sve_legal(k: &Kernel) -> Result<(), WhyNot> {
         // §5: "the toolchain ... did not have vectorized versions of some
         // basic math library functions such as pow() and log()"
         return Err("call to scalar math library (no vector libm)".into());
+    }
+    if c.cmul > 0 && k.has_break() {
+        // the speculative (first-faulting) loop form probes contiguous
+        // loads only; the complex-multiply lowering's shifted neighbour
+        // loads are not represented there
+        return Err("complex multiply under a data-dependent exit; \
+                    speculative form not supported"
+            .into());
     }
     let lanes_min = (128 / (k.elem_ty.bytes() * 8)) as f64;
     let sc = scalar_cost(&c);
@@ -288,6 +314,75 @@ mod tests {
         }
         assert!(neon_legal(&k).is_err());
         assert!(sve_legal(&k).unwrap_err().contains("libm"), "EP situation");
+    }
+
+    #[test]
+    fn dot_product_reduction_vectorizes_everywhere() {
+        // the oneDAL covariance shape: acc += x[i]*y[i]
+        let mut k = Kernel::new("dot", Ty::F64, Trip::Count(100));
+        let x = k.array("x", Ty::F64, 0x1000);
+        let y = k.array("y", Ty::F64, 0x9000);
+        k.reductions.push(Reduction {
+            kind: RedKind::DotF,
+            value: Expr::bin(
+                BinOp::Mul,
+                Expr::load(x, Index::Affine { offset: 0 }),
+                Expr::load(y, Index::Affine { offset: 0 }),
+            ),
+        });
+        assert!(neon_legal(&k).is_ok(), "FMLA-based dot reductions are NEON-legal");
+        assert!(sve_legal(&k).is_ok());
+    }
+
+    #[test]
+    fn fma_chain_vectorizes_everywhere() {
+        // the oneDAL L2-distance shape: nested multiply-accumulates
+        let mut k = daxpy_kernel();
+        if let Stmt::Store { value, .. } = &mut k.body[0] {
+            let d = Expr::bin(
+                BinOp::Sub,
+                Expr::load(0, Index::Affine { offset: 0 }),
+                Expr::ConstF(0.5),
+            );
+            *value = Expr::fma(
+                d.clone(),
+                d.clone(),
+                Expr::bin(BinOp::Mul, d.clone(), d),
+            );
+        }
+        assert!(neon_legal(&k).is_ok());
+        assert!(sve_legal(&k).is_ok());
+    }
+
+    #[test]
+    fn complex_multiply_blocks_neon_not_sve() {
+        // the SU(3) shape: interleaved re/im product lanes
+        let mut k = Kernel::new("su3", Ty::F32, Trip::Count(128));
+        let u = k.array("u", Ty::F32, 0x1000);
+        let v = k.array("v", Ty::F32, 0x9000);
+        let c = k.array("c", Ty::F32, 0xF000);
+        k.body.push(Stmt::Store {
+            arr: c,
+            idx: Index::Affine { offset: 0 },
+            value: Expr::ComplexMul { a_arr: u, a_off: 1, b_arr: v, b_off: 1, conj: false },
+        });
+        assert!(neon_legal(&k).unwrap_err().contains("FCMLA"));
+        assert!(sve_legal(&k).is_ok(), "{:?}", sve_legal(&k));
+    }
+
+    #[test]
+    fn complex_multiply_under_break_blocks_sve() {
+        let mut k = Kernel::new("su3brk", Ty::F32, Trip::DataDependent { max: 1 << 20 });
+        let u = k.array("u", Ty::F32, 0x1000);
+        let v = k.array("v", Ty::F32, 0x9000);
+        k.body.push(Stmt::Break {
+            cond: Expr::cmp(
+                CmpKind::Eq,
+                Expr::ComplexMul { a_arr: u, a_off: 1, b_arr: v, b_off: 1, conj: true },
+                Expr::ConstF(0.0),
+            ),
+        });
+        assert!(sve_legal(&k).unwrap_err().contains("data-dependent"));
     }
 
     #[test]

@@ -754,6 +754,175 @@ mod bitident {
         });
     }
 
+    // ---- PR-7 IR shapes: reductions of products and complex products ----
+
+    /// A flat leaf for multiply-accumulate chains: contiguous load,
+    /// constant, or the induction variable (no nesting — keeps the
+    /// scalar expression stack inside its 8-register budget).
+    fn fma_leaf(g: &mut Gen, arrays: &[usize]) -> Expr {
+        match g.usize_in(0, 2) {
+            0 => Expr::ConstF(g.f64_in(-2.0, 2.0)),
+            1 => Expr::IvAsF,
+            _ => Expr::load(*g.choose(arrays), Index::Affine { offset: 0 }),
+        }
+    }
+
+    /// Random f64 kernel over the reduction-of-product shapes: a stored
+    /// FMLA/FMLS chain, a `DotF` dot-product reduction, and (sometimes)
+    /// a plain sum over a multiply-accumulate.
+    fn random_product_kernel(g: &mut Gen) -> RandKernel {
+        use crate::compiler::{BinOp, RedKind, Reduction};
+        let n = g.u64_in(0, 64);
+        let mut mem = Memory::new();
+        let mut k = Kernel::new("prodprop", Ty::F64, Trip::Count(n));
+        let elems = n + 8;
+        let mut regions = Vec::new();
+        let mut inputs = Vec::new();
+        for name in ["a", "b"] {
+            let base = mem.alloc(8 * elems, 16);
+            for e in 0..elems {
+                mem.write_f64(base + 8 * e, g.f64_in(-4.0, 4.0)).unwrap();
+            }
+            regions.push((base, 8 * elems));
+            inputs.push(k.array(name, Ty::F64, base));
+        }
+        let obase = mem.alloc(8 * elems, 16);
+        regions.push((obase, 8 * elems));
+        let out = k.array("out", Ty::F64, obase);
+        let mut acc = fma_leaf(g, &inputs);
+        for _ in 0..g.usize_in(1, 3) {
+            let a = Box::new(fma_leaf(g, &inputs));
+            let b = Box::new(fma_leaf(g, &inputs));
+            acc = Expr::Fma { a, b, acc: Box::new(acc), sub: g.bool() };
+        }
+        k.body.push(Stmt::Store { arr: out, idx: Index::Affine { offset: 0 }, value: acc });
+        // the DotF contract: the reduced value is a product
+        let value = Expr::bin(
+            BinOp::Mul,
+            Expr::load(*g.choose(&inputs), Index::Affine { offset: 0 }),
+            Expr::load(*g.choose(&inputs), Index::Affine { offset: 0 }),
+        );
+        k.reductions.push(Reduction { kind: RedKind::DotF, value });
+        let rout = mem.alloc(8, 8);
+        mem.write_f64(rout, 0.0).unwrap();
+        regions.push((rout, 8));
+        k.red_out.push(rout);
+        if g.bool() {
+            let value = Expr::fma(
+                fma_leaf(g, &inputs),
+                fma_leaf(g, &inputs),
+                fma_leaf(g, &inputs),
+            );
+            k.reductions.push(Reduction { kind: RedKind::SumF, value });
+            let rout = mem.alloc(8, 8);
+            mem.write_f64(rout, 0.0).unwrap();
+            regions.push((rout, 8));
+            k.red_out.push(rout);
+        }
+        RandKernel { kernel: k, mem, regions }
+    }
+
+    /// Random f32 kernel over the interleaved complex-product shape:
+    /// stored `ComplexMul` lanes (sometimes a sum of two products, as in
+    /// the SU(3) mat-vec row) and sometimes a sum reduction over one.
+    /// Operand blocks start at element 1 or 2 so the lowering's ±1
+    /// shifted loads stay inside the mapping (the guard-element
+    /// contract).
+    fn random_cmul_kernel(g: &mut Gen) -> RandKernel {
+        use crate::compiler::{BinOp, RedKind, Reduction};
+        let n = g.u64_in(0, 48);
+        let mut mem = Memory::new();
+        let mut k = Kernel::new("cmulprop", Ty::F32, Trip::Count(n));
+        let elems = n + 6; // data + guards + offset slack
+        let mut regions = Vec::new();
+        let mut arrs = Vec::new();
+        let mut offs = Vec::new();
+        for name in ["a", "b"] {
+            let base = mem.alloc(4 * elems, 16);
+            for e in 0..elems {
+                mem.write_f32(base + 4 * e, g.f64_in(-2.0, 2.0) as f32).unwrap();
+            }
+            regions.push((base, 4 * elems));
+            arrs.push(k.array(name, Ty::F32, base));
+            offs.push(g.i64_in(1, 2));
+        }
+        let obase = mem.alloc(4 * elems, 16);
+        regions.push((obase, 4 * elems));
+        let out = k.array("out", Ty::F32, obase);
+        let cmul = |g: &mut Gen| Expr::ComplexMul {
+            a_arr: arrs[0],
+            a_off: offs[0],
+            b_arr: arrs[1],
+            b_off: offs[1],
+            conj: g.bool(),
+        };
+        let c0 = cmul(g);
+        let value = if g.bool() { Expr::bin(BinOp::Add, c0, cmul(g)) } else { c0 };
+        k.body.push(Stmt::Store { arr: out, idx: Index::Affine { offset: 0 }, value });
+        if g.bool() {
+            k.reductions.push(Reduction { kind: RedKind::SumF, value: cmul(g) });
+            let rout = mem.alloc(8, 8);
+            mem.write_f64(rout, 0.0).unwrap();
+            regions.push((rout, 8));
+            k.red_out.push(rout);
+        }
+        RandKernel { kernel: k, mem, regions }
+    }
+
+    /// Satellite property: random reduction-of-product kernels execute
+    /// bit-identically on the legacy interpreter, the decoded dispatch
+    /// path and the trace engine, on every target, across VLs.
+    #[test]
+    fn prop_reduction_of_product_kernels_three_way() {
+        check("prop_reduction_of_product_kernels_three_way", 24, |g| {
+            let rk = random_product_kernel(g);
+            for target in [Target::Scalar, Target::Neon, Target::Sve] {
+                let c: Compiled = compiler::compile(&rk.kernel, target);
+                let vls: &[usize] = match target {
+                    Target::Sve => &[128, 256, 512, 2048],
+                    _ => &[128],
+                };
+                for &vl in vls {
+                    run_both(
+                        &c.program,
+                        &rk.mem,
+                        vl,
+                        10_000_000,
+                        &rk.regions,
+                        &format!("product kernel on {target:?}@vl{vl}"),
+                    );
+                }
+            }
+        });
+    }
+
+    /// Satellite property: random complex-multiply kernels execute
+    /// bit-identically on all three paths (NEON compiles to the scalar
+    /// fallback — no FCMLA — which is itself a path worth pinning).
+    #[test]
+    fn prop_complex_mul_kernels_three_way() {
+        check("prop_complex_mul_kernels_three_way", 24, |g| {
+            let rk = random_cmul_kernel(g);
+            for target in [Target::Scalar, Target::Neon, Target::Sve] {
+                let c: Compiled = compiler::compile(&rk.kernel, target);
+                let vls: &[usize] = match target {
+                    Target::Sve => &[128, 256, 512, 2048],
+                    _ => &[128],
+                };
+                for &vl in vls {
+                    run_both(
+                        &c.program,
+                        &rk.mem,
+                        vl,
+                        10_000_000,
+                        &rk.regions,
+                        &format!("cmul kernel on {target:?}@vl{vl}"),
+                    );
+                }
+            }
+        });
+    }
+
     /// Budget exhaustion and faults trap identically on both paths.
     #[test]
     fn traps_agree_across_paths() {

@@ -219,6 +219,42 @@ mod tests {
         let mut slow = UarchConfig::default();
         slow.mem_lat += 1;
         assert_ne!(base, job_key("stream_triad", Isa::Sve(256), &slow));
+        // every workload name (including the PR-7 oneDAL/SU(3) families)
+        // hashes to its own key at a fixed (isa, cfg)
+        let mut keys: Vec<String> = crate::workloads::NAMES
+            .iter()
+            .map(|n| job_key(n, Isa::Sve(256), &cfg))
+            .collect();
+        keys.sort();
+        keys.dedup();
+        assert_eq!(keys.len(), crate::workloads::NAMES.len(), "key collision");
+    }
+
+    /// The PR-7 workload names must intern through the job-file
+    /// round-trip (a name missing from `workloads::NAMES` would silently
+    /// downgrade every cached job for it to a miss).
+    #[test]
+    fn new_workload_names_roundtrip_through_job_files() {
+        for (name, group) in [
+            ("onedal_cov", Group::Right),
+            ("onedal_moments", Group::Right),
+            ("onedal_l2dist", Group::Right),
+            ("su3_mv", Group::Middle),
+            ("su3_dot", Group::Middle),
+        ] {
+            let bench = *crate::workloads::NAMES
+                .iter()
+                .find(|n| **n == name)
+                .unwrap_or_else(|| panic!("{name} missing from workloads::NAMES"));
+            let mut r = sample();
+            r.bench = bench;
+            r.group = group;
+            let v = record_to_json("deadbeefdeadbeef", &r);
+            let back = record_from_json(&Json::parse(&v.render_pretty()).unwrap())
+                .unwrap_or_else(|| panic!("{name} failed to reload"));
+            assert_eq!(back.bench, name);
+            assert_eq!(back.group, group);
+        }
     }
 
     #[test]

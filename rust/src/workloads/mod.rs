@@ -69,9 +69,33 @@ pub enum Kind {
 }
 
 /// Output validation.
+///
+/// # Floating-point comparison policy
+///
+/// Two regimes, chosen per check by how the value is produced:
+///
+/// * **Exact** (`F64SliceExact` / `F32SliceExact` / `U64At`): for
+///   *elementwise* outputs, every target performs the identical
+///   per-element rounding sequence — all FMA forms evaluate unfused
+///   (the product rounds, then the add) on scalar, NEON and SVE alike —
+///   so results must match the scalar-Rust reference **bit for bit**,
+///   at every VL. Any mismatch is a codegen or engine bug, never
+///   "float noise".
+/// * **Bounded relative error** (the `tol` variants): for *reductions*,
+///   the vectorizer accumulates per-lane partial sums whose grouping
+///   depends on the target and the VL, so exact equality would flake by
+///   construction. These compare `|got - want| <= tol * max(|want|, 1)`
+///   against a reference accumulated in a fixed order; `tol` budgets
+///   the worst reassociation error for the element count and type
+///   (f64 sums: ~1e-9; f32 sums: 1e-3..2e-2 depending on length and
+///   cancellation).
 pub enum Check {
     F64Slice { base: u64, want: Vec<f64>, tol: f64 },
     F32Slice { base: u64, want: Vec<f32>, tol: f32 },
+    /// Bit-exact f64 slice compare (see the module policy above).
+    F64SliceExact { base: u64, want: Vec<f64> },
+    /// Bit-exact f32 slice compare (see the module policy above).
+    F32SliceExact { base: u64, want: Vec<f32> },
     F64At { addr: u64, want: f64, tol: f64 },
     F32At { addr: u64, want: f32, tol: f32 },
     U64At { addr: u64, want: u64 },
@@ -94,6 +118,26 @@ impl Check {
                     let got = mem.read_f32(base + 4 * i as u64).map_err(|e| format!("{e:?}"))?;
                     if (got - w).abs() > tol * w.abs().max(1.0) {
                         return Err(format!("f32[{i}]: got {got}, want {w}"));
+                    }
+                }
+                Ok(())
+            }
+            Check::F64SliceExact { base, want } => {
+                for (i, w) in want.iter().enumerate() {
+                    let got = mem.read_f64(base + 8 * i as u64).map_err(|e| format!("{e:?}"))?;
+                    if got.to_bits() != w.to_bits() {
+                        return Err(format!("f64[{i}]: got {got} ({:#x}), want {w} ({:#x})",
+                            got.to_bits(), w.to_bits()));
+                    }
+                }
+                Ok(())
+            }
+            Check::F32SliceExact { base, want } => {
+                for (i, w) in want.iter().enumerate() {
+                    let got = mem.read_f32(base + 4 * i as u64).map_err(|e| format!("{e:?}"))?;
+                    if got.to_bits() != w.to_bits() {
+                        return Err(format!("f32[{i}]: got {got} ({:#x}), want {w} ({:#x})",
+                            got.to_bits(), w.to_bits()));
                     }
                 }
                 Ok(())
@@ -150,10 +194,11 @@ impl Workload {
     }
 }
 
-pub const NAMES: [&str; 12] = [
+pub const NAMES: [&str; 17] = [
     "graph500", "comd_lj", "nas_ep", // left
-    "smg2000", "milcmk", "hpgmg", // middle
-    "haccmk", "himenobmt", "stream_triad", "lulesh_hour", "spmv_ell", "strlen1m", // right
+    "smg2000", "milcmk", "hpgmg", "su3_mv", "su3_dot", // middle
+    "haccmk", "himenobmt", "stream_triad", "lulesh_hour", "spmv_ell", "strlen1m",
+    "onedal_cov", "onedal_moments", "onedal_l2dist", // right
 ];
 
 /// Build a workload by name (panics on unknown names — the CLI
@@ -179,6 +224,11 @@ pub fn build(name: &str) -> Workload {
         "lulesh_hour" => lulesh_hour(),
         "spmv_ell" => spmv_ell(),
         "strlen1m" => strlen1m(),
+        "onedal_cov" => onedal_cov(),
+        "onedal_moments" => onedal_moments(),
+        "onedal_l2dist" => onedal_l2dist(),
+        "su3_mv" => su3_mv(),
+        "su3_dot" => su3_dot(),
         other => panic!("unknown workload {other}"),
     }
 }
@@ -522,6 +572,152 @@ pub fn strlen1m() -> Workload {
     }
 }
 
+/// oneDAL covariance accumulation (arXiv:2504.04241): one pass
+/// computing `sum(x*y)`, `sum(x)` and `sum(y)` — three simultaneous
+/// reductions, the first a dot-product-shaped [`RedKind::DotF`]
+/// lowered to one FMLA per element on every target.
+pub fn onedal_cov() -> Workload {
+    let n = 8192u64;
+    let reps = 2u64;
+    let mut mem = Memory::new();
+    let mut rng = Rng::new(1201);
+    let xb = mem.alloc(8 * n, 64);
+    let yb = mem.alloc(8 * n, 64);
+    let oxy = mem.alloc(8, 8);
+    let ox = mem.alloc(8, 8);
+    let oy = mem.alloc(8, 8);
+    let xs: Vec<f64> = (0..n).map(|_| rng.f64_range(-1.0, 1.0)).collect();
+    let ys: Vec<f64> = (0..n).map(|_| rng.f64_range(-1.0, 1.0)).collect();
+    mem.write_f64_slice(xb, &xs);
+    mem.write_f64_slice(yb, &ys);
+
+    let mut k = Kernel::new("onedal_cov", Ty::F64, Trip::Count(n));
+    let x = k.array("x", Ty::F64, xb);
+    let y = k.array("y", Ty::F64, yb);
+    k.outer.push(OuterDim { trip: reps, strides: vec![] });
+    k.red_out = vec![oxy, ox, oy];
+    k.reductions.push(Reduction {
+        kind: RedKind::DotF,
+        value: Expr::bin(BinOp::Mul, Expr::load(x, aff(0)), Expr::load(y, aff(0))),
+    });
+    k.reductions.push(Reduction { kind: RedKind::SumF, value: Expr::load(x, aff(0)) });
+    k.reductions.push(Reduction { kind: RedKind::SumF, value: Expr::load(y, aff(0)) });
+    let sxy: f64 = xs.iter().zip(&ys).map(|(a, b)| a * b).sum::<f64>() * reps as f64;
+    let sx: f64 = xs.iter().sum::<f64>() * reps as f64;
+    let sy: f64 = ys.iter().sum::<f64>() * reps as f64;
+    Workload {
+        name: "onedal_cov",
+        group: Group::Right,
+        kind: Kind::Loop(k),
+        mem,
+        // reductions: lane-count-dependent accumulation order (policy
+        // above) — bounded relative error
+        checks: vec![
+            Check::F64At { addr: oxy, want: sxy, tol: 1e-9 },
+            Check::F64At { addr: ox, want: sx, tol: 1e-9 },
+            Check::F64At { addr: oy, want: sy, tol: 1e-9 },
+        ],
+        max_insts: 100_000_000,
+    }
+}
+
+/// oneDAL column moments: per-column walk (outer dim advances the base
+/// one column at a time) accumulating `sum(x)` and the
+/// [`RedKind::DotF`]-shaped `sum(x*x)` over all columns.
+pub fn onedal_moments() -> Workload {
+    let rows = 512u64;
+    let cols = 32u64;
+    let mut mem = Memory::new();
+    let mut rng = Rng::new(1303);
+    let xb = mem.alloc(4 * rows * cols, 64);
+    let osum = mem.alloc(8, 8);
+    let osq = mem.alloc(8, 8);
+    let xs: Vec<f32> = (0..rows * cols).map(|_| rng.f32_range(0.0, 1.0)).collect();
+    mem.write_f32_slice(xb, &xs);
+
+    let mut k = Kernel::new("onedal_moments", Ty::F32, Trip::Count(rows));
+    let x = k.array("x", Ty::F32, xb);
+    k.outer.push(OuterDim { trip: cols, strides: vec![(x, rows as i64)] });
+    k.red_out = vec![osum, osq];
+    k.reductions.push(Reduction { kind: RedKind::SumF, value: Expr::load(x, aff(0)) });
+    k.reductions.push(Reduction {
+        kind: RedKind::DotF,
+        value: Expr::bin(BinOp::Mul, Expr::load(x, aff(0)), Expr::load(x, aff(0))),
+    });
+    let sum: f64 = xs.iter().map(|&v| v as f64).sum();
+    let sq: f64 = xs.iter().map(|&v| (v * v) as f64).sum();
+    Workload {
+        name: "onedal_moments",
+        group: Group::Right,
+        kind: Kind::Loop(k),
+        mem,
+        // f32 reductions over 16K elements: bounded relative error
+        checks: vec![
+            Check::F32At { addr: osum, want: sum as f32, tol: 1e-3 },
+            Check::F32At { addr: osq, want: sq as f32, tol: 1e-3 },
+        ],
+        max_insts: 100_000_000,
+    }
+}
+
+/// oneDAL K-means-style pairwise L2 distance: squared distance of every
+/// point to one centroid over 4 dimensions (column-major layout), the
+/// per-dimension accumulator chain built from [`Expr::Fma`] nodes.
+/// Elementwise output — bit-exact on every target and VL.
+pub fn onedal_l2dist() -> Workload {
+    let n = 4096u64;
+    let d = 4usize;
+    let reps = 2u64;
+    let cent = [0.125f64, -0.5, 0.75, 0.25];
+    let mut mem = Memory::new();
+    let mut rng = Rng::new(1405);
+    let xb = mem.alloc(8 * n * d as u64, 64);
+    let ob = mem.alloc(8 * n, 64);
+    let xs: Vec<f64> = (0..n * d as u64).map(|_| rng.f64_range(-2.0, 2.0)).collect();
+    mem.write_f64_slice(xb, &xs);
+
+    let mut k = Kernel::new("onedal_l2dist", Ty::F64, Trip::Count(n));
+    let x = k.array("x", Ty::F64, xb);
+    let o = k.array("dist", Ty::F64, ob);
+    k.outer.push(OuterDim { trip: reps, strides: vec![] });
+    // locals: d_j = x[j*n + i] - c_j (column-major dimension blocks)
+    k.locals = (0..d)
+        .map(|j| {
+            Expr::bin(
+                BinOp::Sub,
+                Expr::load(x, aff((j as u64 * n) as i64)),
+                Expr::ConstF(cent[j]),
+            )
+        })
+        .collect();
+    // dist = fma(d3,d3, fma(d2,d2, fma(d1,d1, d0*d0)))
+    let mut dist = Expr::bin(BinOp::Mul, Expr::Local(0), Expr::Local(0));
+    for j in 1..d {
+        dist = Expr::fma(Expr::Local(j), Expr::Local(j), dist);
+    }
+    k.body.push(Stmt::Store { arr: o, idx: aff(0), value: dist });
+    // reference, in the exact rounding order every target performs:
+    // sub, mul, then unfused fmadd per dimension
+    let want: Vec<f64> = (0..n as usize)
+        .map(|i| {
+            let dj = |j: usize| xs[j * n as usize + i] - cent[j];
+            let mut acc = dj(0) * dj(0);
+            for j in 1..d {
+                acc += dj(j) * dj(j);
+            }
+            acc
+        })
+        .collect();
+    Workload {
+        name: "onedal_l2dist",
+        group: Group::Right,
+        kind: Kind::Loop(k),
+        mem,
+        checks: vec![Check::F64SliceExact { base: ob, want }],
+        max_insts: 100_000_000,
+    }
+}
+
 // ===================== middle group =====================
 
 /// SMG2000: semicoarsening multigrid residual with stencil-offset
@@ -691,6 +887,132 @@ pub fn hpgmg() -> Workload {
         kind: Kind::Loop(k),
         mem,
         checks: vec![Check::F32Slice { base: coarseb, want, tol: 1e-5 }],
+        max_insts: 100_000_000,
+    }
+}
+
+/// Reference for one [`Expr::ComplexMul`] lane, in the exact rounding
+/// order every target performs: mul, then unfused fmadd/fmsub.
+fn cmul_ref(a: &[f32], ao: usize, b: &[f32], bo: usize, t: usize, conj: bool) -> f32 {
+    let p = t & !1;
+    let (ar, ai) = (a[ao + p], a[ao + p + 1]);
+    let (br, bi) = (b[bo + p], b[bo + p + 1]);
+    if t % 2 == 0 {
+        let r = ar * br;
+        let q = ai * bi;
+        if conj { r + q } else { r - q }
+    } else {
+        let r = ar * bi;
+        let q = ai * br;
+        if conj { r - q } else { r + q }
+    }
+}
+
+/// Lattice QCD SU(3) complex matrix-vector (arXiv:1904.03927):
+/// `c_i = sum_j u_ij * v_j` per site over interleaved-re/im `f32`
+/// blocks — three [`Expr::ComplexMul`] chains per output block,
+/// FCMLA-style on SVE (lane-parity FMLA/FMLS pairs); NEON (ARMv8.0, no
+/// FCMLA) stays scalar. Elementwise output — bit-exact at every VL.
+/// Blocks start one element in; element 0 and the last element of the
+/// `u`/`v` allocations are the guard elements the SVE shifted loads
+/// need (see [`Expr::ComplexMul`]).
+pub fn su3_mv() -> Workload {
+    let sites = 2048u64;
+    let fl = 2 * sites; // floats per complex block
+    let reps = 2u64;
+    let mut mem = Memory::new();
+    let mut rng = Rng::new(1507);
+    let ub = mem.alloc(4 * (9 * fl + 2), 64);
+    let vb = mem.alloc(4 * (3 * fl + 2), 64);
+    let cb = mem.alloc(4 * 3 * fl, 64);
+    let us: Vec<f32> = (0..9 * fl + 2).map(|_| rng.f32_range(-1.0, 1.0)).collect();
+    let vs: Vec<f32> = (0..3 * fl + 2).map(|_| rng.f32_range(-1.0, 1.0)).collect();
+    mem.write_f32_slice(ub, &us);
+    mem.write_f32_slice(vb, &vs);
+
+    let mut k = Kernel::new("su3_mv", Ty::F32, Trip::Count(fl));
+    let u = k.array("u", Ty::F32, ub);
+    let v = k.array("v", Ty::F32, vb);
+    let c = k.array("c", Ty::F32, cb);
+    k.outer.push(OuterDim { trip: reps, strides: vec![] });
+    let uoff = |i: u64, j: u64| ((3 * i + j) * fl + 1) as i64;
+    let voff = |j: u64| (j * fl + 1) as i64;
+    for i in 0..3u64 {
+        let cm = |j: u64| Expr::ComplexMul {
+            a_arr: u,
+            a_off: uoff(i, j),
+            b_arr: v,
+            b_off: voff(j),
+            conj: false,
+        };
+        k.body.push(Stmt::Store {
+            arr: c,
+            idx: aff((i * fl) as i64),
+            value: Expr::bin(BinOp::Add, cm(0), Expr::bin(BinOp::Add, cm(1), cm(2))),
+        });
+    }
+    let want: Vec<f32> = (0..3u64)
+        .flat_map(|i| {
+            let us = &us;
+            let vs = &vs;
+            (0..fl as usize).map(move |t| {
+                let cm =
+                    |j: u64| cmul_ref(us, uoff(i, j) as usize, vs, voff(j) as usize, t, false);
+                cm(0) + (cm(1) + cm(2))
+            })
+        })
+        .collect();
+    Workload {
+        name: "su3_mv",
+        group: Group::Middle,
+        kind: Kind::Loop(k),
+        mem,
+        checks: vec![Check::F32SliceExact { base: cb, want }],
+        max_insts: 100_000_000,
+    }
+}
+
+/// SU(3) conjugate inner product: per-lane `c = a^dag * b` (one
+/// conjugating [`Expr::ComplexMul`], stored bit-exactly) plus a SumF
+/// reduction over the same lanes — complex arithmetic feeding a
+/// vectorized accumulator.
+pub fn su3_dot() -> Workload {
+    let sites = 4096u64;
+    let fl = 2 * sites;
+    let reps = 2u64;
+    let mut mem = Memory::new();
+    let mut rng = Rng::new(1609);
+    let ab = mem.alloc(4 * (fl + 2), 64);
+    let bb = mem.alloc(4 * (fl + 2), 64);
+    let cb = mem.alloc(4 * fl, 64);
+    let out = mem.alloc(8, 8);
+    let asv: Vec<f32> = (0..fl + 2).map(|_| rng.f32_range(-1.0, 1.0)).collect();
+    let bsv: Vec<f32> = (0..fl + 2).map(|_| rng.f32_range(-1.0, 1.0)).collect();
+    mem.write_f32_slice(ab, &asv);
+    mem.write_f32_slice(bb, &bsv);
+
+    let mut k = Kernel::new("su3_dot", Ty::F32, Trip::Count(fl));
+    let a = k.array("a", Ty::F32, ab);
+    let b = k.array("b", Ty::F32, bb);
+    let c = k.array("c", Ty::F32, cb);
+    k.outer.push(OuterDim { trip: reps, strides: vec![] });
+    k.red_out = vec![out];
+    let cm = || Expr::ComplexMul { a_arr: a, a_off: 1, b_arr: b, b_off: 1, conj: true };
+    k.body.push(Stmt::Store { arr: c, idx: aff(0), value: cm() });
+    k.reductions.push(Reduction { kind: RedKind::SumF, value: cm() });
+    let lanes: Vec<f32> =
+        (0..fl as usize).map(|t| cmul_ref(&asv, 1, &bsv, 1, t, true)).collect();
+    let sum: f64 = lanes.iter().map(|&v| v as f64).sum::<f64>() * reps as f64;
+    Workload {
+        name: "su3_dot",
+        group: Group::Middle,
+        kind: Kind::Loop(k),
+        mem,
+        checks: vec![
+            Check::F32SliceExact { base: cb, want: lanes },
+            // f32 reduction over 16K lanes with cancellation: loose tol
+            Check::F32At { addr: out, want: sum as f32, tol: 2e-2 },
+        ],
         max_insts: 100_000_000,
     }
 }
@@ -892,12 +1214,17 @@ mod tests {
             ("smg2000", false, true),
             ("milcmk", true, true),
             ("hpgmg", false, true),
+            ("su3_mv", false, true),
+            ("su3_dot", false, true),
             ("haccmk", false, true),
             ("himenobmt", true, true),
             ("stream_triad", true, true),
             ("lulesh_hour", false, true),
             ("spmv_ell", false, true),
             ("strlen1m", false, true),
+            ("onedal_cov", true, true),
+            ("onedal_moments", true, true),
+            ("onedal_l2dist", true, true),
         ];
         for &(name, neon, sve) in expect {
             let w = build(name);
@@ -905,6 +1232,48 @@ mod tests {
             let cs = w.compile(Target::Sve);
             assert_eq!(cn.vectorized, neon, "{name} NEON: {:?}", cn.why_not);
             assert_eq!(cs.vectorized, sve, "{name} SVE: {:?}", cs.why_not);
+        }
+    }
+
+    /// The PR-7 kernel families (oneDAL reductions-of-products, SU(3)
+    /// complex mat-vec) on every target × VL ∈ {128, 256, 512}: the
+    /// workload's own checks must pass, and the baseline and trace
+    /// engines must retire into bit-identical architectural state.
+    #[test]
+    fn new_workloads_engine_bit_identity() {
+        use crate::exec::Engine;
+        use crate::isa::uop::DecodedProgram;
+        let new = ["onedal_cov", "onedal_moments", "onedal_l2dist", "su3_mv", "su3_dot"];
+        for name in new {
+            for target in [Target::Scalar, Target::Neon, Target::Sve] {
+                for vl in [128usize, 256, 512] {
+                    let w = build(name);
+                    let c = w.compile(target);
+                    let dec = DecodedProgram::decode(&c.program);
+                    let mut runs = Vec::new();
+                    for engine in [Engine::Baseline, Engine::Trace] {
+                        let mut ex = Executor::new(vl, w.mem.clone());
+                        ex.run_decoded_engine_with(&dec, engine, w.max_insts, |_| {})
+                            .unwrap_or_else(|e| {
+                                panic!("{name} {target:?} vl={vl} {}: {e:?}", engine.label())
+                            });
+                        w.verify(&ex.mem).unwrap_or_else(|e| {
+                            panic!("{name} {target:?} vl={vl} {}: {e}", engine.label())
+                        });
+                        runs.push(ex);
+                    }
+                    let (a, b) = (&runs[0], &runs[1]);
+                    let what = format!("{name} {target:?} vl={vl} baseline-vs-trace");
+                    assert_eq!(a.state.pc, b.state.pc, "{what}: pc");
+                    assert_eq!(a.state.x, b.state.x, "{what}: x registers");
+                    assert_eq!(a.state.flags, b.state.flags, "{what}: NZCV");
+                    for r in 0..a.state.z.len() {
+                        assert_eq!(a.state.z[r].bytes, b.state.z[r].bytes, "{what}: z{r}");
+                    }
+                    assert_eq!(a.state.p, b.state.p, "{what}: predicates");
+                    assert_eq!(a.state.ffr, b.state.ffr, "{what}: FFR");
+                }
+            }
         }
     }
 }

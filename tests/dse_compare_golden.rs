@@ -61,6 +61,8 @@ fn rows(
     triad_ipc: [f64; 3],
     g500_cycles: u64,
     g500_ipc: f64,
+    cov_cycles: [u64; 3],
+    cov_ipc: [f64; 3],
 ) -> Vec<Fig8Row> {
     let triad_neon = rec(
         "stream_triad",
@@ -103,6 +105,43 @@ fn rows(
         rec("graph500", Group::Left, Isa::Sve(128), g500_cycles, 20000, g500_ipc, false, 0.0, 0.25),
         rec("graph500", Group::Left, Isa::Sve(256), g500_cycles, 20000, g500_ipc, false, 0.0, 0.25),
     ];
+    // PR 7: one oneDAL reduction-of-products row (NEON vectorizes it
+    // too, so its NEON baseline is vector code)
+    let cov_neon = rec(
+        "onedal_cov",
+        Group::Right,
+        Isa::Neon,
+        cov_cycles[0],
+        12000,
+        cov_ipc[0],
+        true,
+        0.5,
+        0.125,
+    );
+    let cov_sve = vec![
+        rec(
+            "onedal_cov",
+            Group::Right,
+            Isa::Sve(128),
+            cov_cycles[1],
+            11000,
+            cov_ipc[1],
+            true,
+            0.75,
+            0.0625,
+        ),
+        rec(
+            "onedal_cov",
+            Group::Right,
+            Isa::Sve(256),
+            cov_cycles[2],
+            5500,
+            cov_ipc[2],
+            true,
+            0.75,
+            0.03125,
+        ),
+    ];
     vec![
         Fig8Row {
             bench: "stream_triad",
@@ -118,6 +157,13 @@ fn rows(
             sve: g500_sve,
             extra_vectorization: 0.0,
         },
+        Fig8Row {
+            bench: "onedal_cov",
+            group: Group::Right,
+            neon: cov_neon,
+            sve: cov_sve,
+            extra_vectorization: 0.25,
+        },
     ]
 }
 
@@ -128,12 +174,26 @@ fn variants() -> Vec<VariantRows> {
         VariantRows {
             name: parsed[0].name.clone(),
             uarch: parsed[0].cfg.clone(),
-            rows: rows([1000, 800, 400], [1.5, 2.5, 3.5], 2000, 0.5),
+            rows: rows(
+                [1000, 800, 400],
+                [1.5, 2.5, 3.5],
+                2000,
+                0.5,
+                [1200, 800, 480],
+                [1.5, 2.5, 3.5],
+            ),
         },
         VariantRows {
             name: parsed[1].name.clone(),
             uarch: parsed[1].cfg.clone(),
-            rows: rows([2000, 1600, 1000], [0.75, 1.25, 2.25], 4000, 0.25),
+            rows: rows(
+                [2000, 1600, 1000],
+                [0.75, 1.25, 2.25],
+                4000,
+                0.25,
+                [2400, 1600, 1200],
+                [0.75, 1.25, 2.25],
+            ),
         },
     ]
 }
@@ -198,8 +258,8 @@ fn pareto_only_table_matches_golden() {
 #[test]
 fn compare_report_matches_golden() {
     let a = compare::extract_points(&dse::to_json(&variants(), &VLS)).unwrap();
-    // per variant: 4 speedup points + 2 benches x 2 VLs x 2 PPA metrics
-    assert_eq!(a.len(), 24, "fixture drifted");
+    // per variant: 6 speedup points + 3 benches x 2 VLs x 2 PPA metrics
+    assert_eq!(a.len(), 36, "fixture drifted");
     let mut b: Vec<MetricPoint> = a.clone();
     // -10% on table2/stream_triad@256 speedup (beyond the 2% threshold)
     b[1].value = 2.25;
@@ -207,11 +267,12 @@ fn compare_report_matches_golden() {
     b[2].value = 1.03;
     // -50% on small-core+l2/stream_triad@128 perf_per_watt: the PPA
     // metrics ride the same regression contract
-    assert_eq!(b[16].metric, "perf_per_watt");
-    b[16].value *= 0.5;
+    assert_eq!(b[24].metric, "perf_per_watt");
+    b[24].value *= 0.5;
     // drop small-core+l2/graph500@256 perf_per_mm2, add table2/haccmk@128
-    assert_eq!(b[23].metric, "perf_per_mm2");
-    b.remove(23);
+    assert_eq!(b[31].metric, "perf_per_mm2");
+    assert_eq!(b[31].bench, "graph500");
+    b.remove(31);
     b.push(MetricPoint {
         variant: "table2".into(),
         bench: "haccmk".into(),
@@ -221,7 +282,7 @@ fn compare_report_matches_golden() {
     });
     let cmp = compare::compare(&a, &b, Some(2.0));
     assert!(cmp.failed(), "two regressions + one missing point must fail");
-    assert_eq!(cmp.compared, 23);
+    assert_eq!(cmp.compared, 35);
     assert_eq!(cmp.regressions.len(), 2);
     let rendered = compare::render(&cmp);
     assert_eq!(rendered, include_str!("golden/compare.txt"), "compare renderer drifted");

@@ -59,6 +59,12 @@ fn rows() -> Vec<Fig8Row> {
         rec("graph500", Group::Left, Isa::Sve(128), 2000, 20000, 0.5, false, 0.0, 0.25),
         rec("graph500", Group::Left, Isa::Sve(256), 2000, 20000, 0.5, false, 0.0, 0.25),
     ];
+    let cov_neon =
+        rec("onedal_cov", Group::Right, Isa::Neon, 1200, 12000, 1.5, true, 0.5, 0.125);
+    let cov_sve = vec![
+        rec("onedal_cov", Group::Right, Isa::Sve(128), 800, 11000, 2.5, true, 0.75, 0.0625),
+        rec("onedal_cov", Group::Right, Isa::Sve(256), 480, 5500, 3.5, true, 0.75, 0.03125),
+    ];
     vec![
         Fig8Row {
             bench: "stream_triad",
@@ -73,6 +79,13 @@ fn rows() -> Vec<Fig8Row> {
             neon: g500_neon,
             sve: g500_sve,
             extra_vectorization: 0.0,
+        },
+        Fig8Row {
+            bench: "onedal_cov",
+            group: Group::Right,
+            neon: cov_neon,
+            sve: cov_sve,
+            extra_vectorization: 0.25,
         },
     ]
 }

@@ -31,8 +31,10 @@ import sys
 
 # The matrices CI's smoke steps simulate (.github/workflows/ci.yml) —
 # the wall compares point-for-point, so a baseline must match exactly.
-FIG8_BENCHES = ["stream_triad", "haccmk", "graph500"]
-DSE_BENCHES = ["stream_triad", "haccmk"]
+# PR 7 grew both matrices (onedal_cov, su3_mv): candidates from older
+# runs are stale and must be re-blessed from a current green run.
+FIG8_BENCHES = ["stream_triad", "haccmk", "graph500", "onedal_cov", "su3_mv"]
+DSE_BENCHES = ["stream_triad", "haccmk", "onedal_cov", "su3_mv"]
 DSE_VARIANTS = ["table2", "small-core"]
 SMOKE_VLS = [128, 256]
 
@@ -47,6 +49,14 @@ def fail(msg):
 def check_benchmarks(path, benches, expect_names):
     names = [b.get("bench") for b in benches]
     if sorted(names) != sorted(expect_names):
+        missing = sorted(set(expect_names) - set(names))
+        if missing and not set(names) - set(expect_names):
+            return fail(
+                "%s: stale baseline — missing benchmark row(s) %r added to the "
+                "CI smoke matrix since this artifact was produced; re-bless a "
+                "candidate from a green run of the current workflow"
+                % (path, missing)
+            )
         return fail(
             "%s: benchmark set %r is not the CI smoke matrix %r"
             % (path, names, expect_names)

@@ -197,7 +197,7 @@ def rec(bench, group, vl_bits, cycles, insts, ipc, vectorized, vf, miss):
     }
 
 
-def rows(triad_cycles, triad_ipc, g500_cycles, g500_ipc):
+def rows(triad_cycles, triad_ipc, g500_cycles, g500_ipc, cov_cycles, cov_ipc):
     triad_neon = rec("stream_triad", "right", 128, triad_cycles[0], 10000,
                      triad_ipc[0], True, 0.5, 0.125)
     triad_sve = [
@@ -212,11 +212,23 @@ def rows(triad_cycles, triad_ipc, g500_cycles, g500_ipc):
         rec("graph500", "left", 128, g500_cycles, 20000, g500_ipc, False, 0.0, 0.25),
         rec("graph500", "left", 256, g500_cycles, 20000, g500_ipc, False, 0.0, 0.25),
     ]
+    # PR 7: one oneDAL reduction-of-products row (NEON vectorizes it too,
+    # so its NEON baseline is vector code, unlike the paper's originals)
+    cov_neon = rec("onedal_cov", "right", 128, cov_cycles[0], 12000,
+                   cov_ipc[0], True, 0.5, 0.125)
+    cov_sve = [
+        rec("onedal_cov", "right", 128, cov_cycles[1], 11000, cov_ipc[1],
+            True, 0.75, 0.0625),
+        rec("onedal_cov", "right", 256, cov_cycles[2], 5500, cov_ipc[2],
+            True, 0.75, 0.03125),
+    ]
     return [
         {"bench": "stream_triad", "group": "right", "extra": 0.25,
          "neon": triad_neon, "sve": triad_sve},
         {"bench": "graph500", "group": "left", "extra": 0.0,
          "neon": g500_neon, "sve": g500_sve},
+        {"bench": "onedal_cov", "group": "right", "extra": 0.25,
+         "neon": cov_neon, "sve": cov_sve},
     ]
 
 
@@ -254,9 +266,11 @@ VLS = [128, 256]
 def variants():
     return [
         {"name": "table2", "uarch": table2_uarch(),
-         "rows": rows([1000, 800, 400], [1.5, 2.5, 3.5], 2000, 0.5)},
+         "rows": rows([1000, 800, 400], [1.5, 2.5, 3.5], 2000, 0.5,
+                      [1200, 800, 480], [1.5, 2.5, 3.5])},
         {"name": "small-core+l2_bytes=524288", "uarch": small_core_l2_512k_uarch(),
-         "rows": rows([2000, 1600, 1000], [0.75, 1.25, 2.25], 4000, 0.25)},
+         "rows": rows([2000, 1600, 1000], [0.75, 1.25, 2.25], 4000, 0.25,
+                      [2400, 1600, 1200], [0.75, 1.25, 2.25])},
     ]
 
 
@@ -304,6 +318,82 @@ def fig8_table(rws, vls):
         row.append(str(r["neon"]["cycles"]))
         t.push_row(row)
     return t
+
+
+FIG8_SCHEMA = "sve-repro/fig8/v1"
+
+
+def fig8_to_json(rws, vls):
+    return {
+        "schema": FIG8_SCHEMA,
+        "figure": "fig8",
+        "title": "SVE speedup over Advanced SIMD across vector lengths",
+        "vls_bits": vls,
+        "benchmarks": benchmarks_json(rws),
+    }
+
+
+def fig8_chart(rws, vls):
+    out = "Fig. 8 — speedup over Advanced SIMD (bracket: extra vectorization %)\n\n"
+    for r in rws:
+        out += "%-13s [%5.1f%% extra vectorization]  %s\n" % (
+            r["bench"], 100.0 * r["extra"], r["group"])
+        for i, vl in enumerate(vls):
+            sp = speedup(r, i)
+            bar = "#" * min(int(sp * 8.0 + 0.5), 80)  # Rust .round()
+            out += "  sve-%-4d %5.2fx |%s\n" % (vl, sp, bar)
+    return out
+
+
+def fig8_to_markdown(rws, vls):
+    vl_list = ", ".join(str(v) for v in vls)
+    return (
+        "# Fig. 8 — SVE speedup over Advanced SIMD\n"
+        "\n"
+        "Schema: `%s` · SVE vector lengths: %s bits · %d benchmarks, "
+        "every run validated against its golden outputs.\n"
+        "\n"
+        "Speedup is NEON cycles / SVE cycles at each vector length; "
+        "`extra_vec_%%` is the dynamic vector-instruction fraction SVE "
+        "gains over NEON at VL=128 (the paper's grey bars).\n"
+        "\n"
+        "%s\n"
+        "```\n"
+        "%s```\n"
+        "\n"
+        "Regenerate with `sve sweep --out <dir>` (add `--resume` to reuse "
+        "cached jobs); machine-readable copies: `fig8.json`, `fig8.csv`.\n"
+        % (FIG8_SCHEMA, vl_list, len(rws),
+           fig8_table(rws, vls).to_markdown(), fig8_chart(rws, vls))
+    )
+
+
+def fig8_rows():
+    """Mirror of tests/report_golden.rs::rows() (the fig8 goldens use a
+    simpler fixture than the DSE one: counters are never rendered)."""
+    triad_neon = rec("stream_triad", "right", 128, 1000, 10000, 1.5, True, 0.5, 0.125)
+    triad_sve = [
+        rec("stream_triad", "right", 128, 800, 9000, 2.5, True, 0.75, 0.0625),
+        rec("stream_triad", "right", 256, 400, 4500, 3.5, True, 0.75, 0.03125),
+    ]
+    g500_neon = rec("graph500", "left", 128, 2000, 20000, 0.5, False, 0.0, 0.25)
+    g500_sve = [
+        rec("graph500", "left", 128, 2000, 20000, 0.5, False, 0.0, 0.25),
+        rec("graph500", "left", 256, 2000, 20000, 0.5, False, 0.0, 0.25),
+    ]
+    cov_neon = rec("onedal_cov", "right", 128, 1200, 12000, 1.5, True, 0.5, 0.125)
+    cov_sve = [
+        rec("onedal_cov", "right", 128, 800, 11000, 2.5, True, 0.75, 0.0625),
+        rec("onedal_cov", "right", 256, 480, 5500, 3.5, True, 0.75, 0.03125),
+    ]
+    return [
+        {"bench": "stream_triad", "group": "right", "extra": 0.25,
+         "neon": triad_neon, "sve": triad_sve},
+        {"bench": "graph500", "group": "left", "extra": 0.0,
+         "neon": g500_neon, "sve": g500_sve},
+        {"bench": "onedal_cov", "group": "right", "extra": 0.25,
+         "neon": cov_neon, "sve": cov_sve},
+    ]
 
 
 # ---------------------------------------------------------------------
@@ -592,14 +682,19 @@ def render(cmp):
 def compare_fixture():
     """Mirror of tests/dse_compare_golden.rs::compare_report_matches_golden."""
     a = extract_points(variants(), VLS)
-    assert len(a) == 24
+    # per variant: 6 speedup points + 3 benches x 2 VLs x 2 PPA metrics
+    assert len(a) == 36
     b = [dict(p) for p in a]
+    # -10% on table2/stream_triad@256 speedup
     b[1]["value"] = 2.25
+    # +3% on table2/graph500@128 speedup
     b[2]["value"] = 1.03
-    assert b[16]["metric"] == "perf_per_watt"
-    b[16]["value"] = b[16]["value"] * 0.5
-    assert b[23]["metric"] == "perf_per_mm2"
-    del b[23]
+    # -50% on small-core+l2/stream_triad@128 perf_per_watt
+    assert b[24]["metric"] == "perf_per_watt"
+    b[24]["value"] = b[24]["value"] * 0.5
+    # drop small-core+l2/graph500@256 perf_per_mm2, add table2/haccmk@128
+    assert b[31]["metric"] == "perf_per_mm2" and b[31]["bench"] == "graph500"
+    del b[31]
     b.append({"variant": "table2", "bench": "haccmk", "vl_bits": 128,
               "metric": "speedup", "value": 1.5})
     return a, b
@@ -614,7 +709,11 @@ def pareto_only_table(vs, vls):
 
 def main():
     vs = variants()
+    f8 = fig8_rows()
     out = {
+        "fig8.json": render_pretty(fig8_to_json(f8, VLS)),
+        "fig8.csv": fig8_table(f8, VLS).to_csv(),
+        "fig8.md": fig8_to_markdown(f8, VLS),
         "dse.json": render_pretty(dse_to_json(vs, VLS)),
         "dse.csv": dse_table(vs, VLS).to_csv(),
         "dse.md": dse_to_markdown(vs, VLS),
