@@ -218,6 +218,35 @@ pub struct Job {
     pub variant: usize,
 }
 
+/// Expand a sweep into its deterministic job matrix: variant-major,
+/// then benchmark-major, NEON before the SVE points in `vls` order.
+/// This is the one expansion shared by the batch drivers ([`run_dse`])
+/// and the `sve serve` hub — every consumer agrees on what a request
+/// *means* because they agree on this list.
+///
+/// ```
+/// use sve_repro::coordinator::{job_matrix, Isa};
+/// let jobs = job_matrix(&["haccmk"], &[128, 256], 2);
+/// assert_eq!(jobs.len(), 2 * 1 * (1 + 2)); // variants × benches × (NEON + VLs)
+/// assert_eq!(jobs[0].isa, Isa::Neon);
+/// assert_eq!(jobs[1].isa, Isa::Sve(128));
+/// assert_eq!(jobs[3].variant, 1);
+/// ```
+pub fn job_matrix(names: &[&'static str], vls: &[usize], n_variants: usize) -> Vec<Job> {
+    let stride = 1 + vls.len(); // jobs per benchmark
+    let block = names.len() * stride; // jobs per variant
+    let mut jobs: Vec<Job> = Vec::with_capacity(n_variants * block);
+    for vi in 0..n_variants {
+        for &name in names {
+            jobs.push(Job { bench: name, isa: Isa::Neon, variant: vi });
+            for &vl in vls {
+                jobs.push(Job { bench: name, isa: Isa::Sve(vl), variant: vi });
+            }
+        }
+    }
+    jobs
+}
+
 /// Configuration for [`run_sweep`].
 #[derive(Clone, Debug)]
 pub struct SweepConfig {
@@ -287,7 +316,7 @@ pub struct DseOutcome {
     pub reloaded: usize,
 }
 
-fn worker_count(requested: usize, pending: usize) -> usize {
+pub(crate) fn worker_count(requested: usize, pending: usize) -> usize {
     let n = if requested == 0 {
         std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
     } else {
@@ -356,18 +385,10 @@ pub fn run_dse(cfg: &SweepConfig, variants: &[UarchVariant]) -> Result<DseOutcom
     };
 
     // the job matrix, in deterministic (variant-major, then bench-major,
-    // NEON first) order
+    // NEON first) order — the same expansion `sve serve` streams from
     let stride = 1 + cfg.vls.len(); // jobs per benchmark
     let block = cfg.names.len() * stride; // jobs per variant
-    let mut jobs: Vec<Job> = Vec::with_capacity(variants.len() * block);
-    for vi in 0..variants.len() {
-        for &name in &cfg.names {
-            jobs.push(Job { bench: name, isa: Isa::Neon, variant: vi });
-            for &vl in &cfg.vls {
-                jobs.push(Job { bench: name, isa: Isa::Sve(vl), variant: vi });
-            }
-        }
-    }
+    let jobs = job_matrix(&cfg.names, &cfg.vls, variants.len());
 
     // resume pass: adopt every valid cached record
     let mut records: Vec<Option<RunRecord>> = vec![None; jobs.len()];

@@ -22,10 +22,20 @@
 //! * [`workloads`] — the HPC proxy benchmark suite behind Fig. 8.
 //! * [`coordinator`] — the sharded, resumable (benchmark × ISA × VL)
 //!   sweep engine.
+//! * [`request`] — the typed request layer: `sve`'s CLI flags and the
+//!   serve socket API as two spellings of one schema.
+//! * [`serve`] — the long-running sweep service (`sve serve`) and its
+//!   client (`sve submit`): line-JSON over TCP, cross-client job
+//!   dedupe, incremental result streaming, cache GC.
 //! * [`report`] — JSON/CSV/Markdown artifact emitters for Figs. 2, 7
 //!   and 8, plus the content-addressed job cache behind `--resume`.
 //! * [`runtime`] — PJRT golden-model loader (`artifacts/*.hlo.txt`,
 //!   produced once at build time by `python/compile/aot.py`).
+//!
+//! The stable entry points are re-exported at the crate root: build a
+//! [`SweepRequest`] (from CLI args or JSON), lower it with
+//! [`SweepRequest::to_config`], run it with [`run_sweep`] — or hand it
+//! to a [`Server`] over a socket and stream the same records back.
 
 pub mod arch;
 pub mod asm;
@@ -38,10 +48,18 @@ pub mod isa;
 pub mod mem;
 pub mod proptest_lite;
 pub mod report;
+pub mod request;
 pub mod rng;
 pub mod runtime;
+pub mod serve;
 pub mod uarch;
 pub mod workloads;
+
+pub use coordinator::{run_dse, run_sweep, SweepConfig};
+pub use report::store::JOB_SCHEMA;
+pub use request::{DseRequest, ReportRequest, SweepRequest};
+pub use serve::proto::{REQ_SCHEMA, RESP_SCHEMA};
+pub use serve::{Client, Server, ServerConfig};
 
 /// Minimum legal SVE vector length in bits (§2.2).
 pub const VL_MIN_BITS: usize = 128;

@@ -10,27 +10,41 @@
 //! sve report [--out reports] [--vls ...] [--jobs N]     all figure artifacts
 //! sve report --compare A.json B.json [--fail-on-regress PCT]
 //!                                                       diff two artifacts
+//! sve serve [--listen HOST:PORT] [--out reports]        long-running sweep
+//!           [--cache-bytes N] [--max-request-jobs N]    service
+//! sve submit [--addr HOST:PORT] [--vls ...|--dse|--ping|--stats|--shutdown]
+//!                                                       serve client
 //! sve trace <bench> [--vl BITS] [--limit N]             Fig. 3-style trace
 //! sve encoding                                          Fig. 7 terminal report
 //! sve validate [--artifacts DIR]                        PJRT cross-check
 //! ```
 //!
+//! Flag parsing lives in [`sve_repro::request`]: every subcommand that
+//! drives the sweep engine parses into a typed request
+//! (`SweepRequest`/`DseRequest`/...) whose JSON spelling is also the
+//! `sve serve` wire format — one schema, two transports.
+//!
 //! Exit codes: `0` success, `1` runtime failure (a simulation trapped,
-//! validation failed, an artifact is unreadable, or `--compare` found a
-//! regression beyond `--fail-on-regress`), `2` usage error (unknown
-//! subcommand/benchmark/variant, malformed or illegal
-//! `--vl`/`--isa`/`--jobs`/`--uarch` values).
+//! validation failed, an artifact is unreadable, `--compare` found a
+//! regression beyond `--fail-on-regress`, or a submit could not reach
+//! the server), `2` usage error (unknown subcommand/benchmark/variant,
+//! malformed or illegal `--vl`/`--isa`/`--jobs`/`--uarch` values).
 
 use std::path::PathBuf;
 
 use sve_repro::coordinator::{self, Isa, SweepConfig};
 use sve_repro::csvutil::Table;
-use sve_repro::exec::{Engine, Executor};
+use sve_repro::exec::Executor;
 use sve_repro::isa::encoding;
 use sve_repro::report;
 use sve_repro::report::compare::{self, MetricPoint};
 use sve_repro::report::json::Json;
-use sve_repro::uarch::{parse_variants, UarchConfig, VARIANT_NAMES};
+use sve_repro::request::{
+    self, DseRequest, ReportRequest, ServeOpts, SubmitAction, SubmitOpts, SweepRequest,
+};
+use sve_repro::serve::proto::JobLine;
+use sve_repro::serve::{Client, Server, ServerConfig};
+use sve_repro::uarch::UarchConfig;
 use sve_repro::workloads;
 
 const USAGE: &str = "sve — ARM SVE paper reproduction
@@ -73,28 +87,30 @@ commands:
                              simulator Minst/s throughput
       --fail-on-regress PCT  with --compare: exit 1 if any value drops
                              more than PCT percent, or a point disappears
+  serve                      long-running sweep service: line-delimited
+                             JSON requests over TCP, cross-client job
+                             dedupe, incremental result streaming
+      --listen HOST:PORT     bind address (default 127.0.0.1:7878; port 0
+                             picks a free port, printed at startup)
+      --out DIR              shared job store (default reports)
+      --jobs N               worker threads per request
+      --cache-bytes N        evict least-recently-used job files once the
+                             store exceeds N bytes (default: no eviction)
+      --max-request-jobs N   refuse requests expanding past N jobs (4096)
+      --no-trace             as for run
+  submit                     client for a running `sve serve`
+      --addr HOST:PORT       server address (default 127.0.0.1:7878)
+      --vls/--benches        sweep request, as for sweep (default action)
+      --dse [--uarch ...]    design-space request across variants
+      --ping                 liveness probe
+      --stats                cumulative server dedupe/GC counters
+      --shutdown             drain in-flight work and stop the server
   trace <bench>              Fig. 3-style cycle-by-cycle timeline
       --vl BITS  --limit N
   encoding                   Fig. 7 encoding-budget report (terminal)
   validate [--artifacts DIR] PJRT golden cross-check
 
 exit codes: 0 ok, 1 runtime failure, 2 usage error";
-
-/// Value of `name`, or `None` when the flag is absent. A flag present
-/// with no trailing value is a usage error, never a silent default —
-/// `--fail-on-regress $PCT` with `PCT` unset in a CI shell must not
-/// quietly disable the regression wall.
-fn flag(args: &[String], name: &str) -> Option<String> {
-    let i = args.iter().position(|a| a == name)?;
-    match args.get(i + 1) {
-        Some(v) => Some(v.clone()),
-        None => die_usage(&format!("{name} needs a value")),
-    }
-}
-
-fn has_flag(args: &[String], name: &str) -> bool {
-    args.iter().any(|a| a == name)
-}
 
 /// Usage error: message + usage to stderr, exit 2.
 fn die_usage(msg: &str) -> ! {
@@ -108,91 +124,9 @@ fn die_run(msg: &str) -> ! {
     std::process::exit(1)
 }
 
-fn parse_bench(args: &[String], cmd: &str) -> &'static str {
-    let Some(bench) = args.get(1) else {
-        die_usage(&format!("usage: sve {cmd} <bench>"));
-    };
-    match workloads::NAMES.iter().find(|n| *n == bench) {
-        Some(&n) => n,
-        None => die_usage(&format!(
-            "unknown benchmark '{bench}' (try: {})",
-            workloads::NAMES.join(", ")
-        )),
-    }
-}
-
-fn parse_vl(args: &[String], default: usize) -> usize {
-    let Some(text) = flag(args, "--vl") else { return default };
-    let Ok(vl) = text.parse::<usize>() else {
-        die_usage(&format!("--vl '{text}' is not a number"));
-    };
-    if !sve_repro::vl_is_legal(vl) {
-        die_usage(&format!("--vl {vl} is illegal (§2.2: 128..2048 in steps of 128)"));
-    }
-    vl
-}
-
-fn parse_vls(args: &[String]) -> Vec<usize> {
-    let text = flag(args, "--vls").unwrap_or_else(|| "128,256,512".into());
-    let mut vls = Vec::new();
-    for part in text.split(',') {
-        let Ok(vl) = part.trim().parse::<usize>() else {
-            die_usage(&format!("--vls component '{part}' is not a number"));
-        };
-        if !sve_repro::vl_is_legal(vl) {
-            die_usage(&format!("--vls {vl} is illegal (§2.2: 128..2048 in steps of 128)"));
-        }
-        vls.push(vl);
-    }
-    vls
-}
-
-fn parse_jobs(args: &[String]) -> usize {
-    let Some(text) = flag(args, "--jobs") else { return 0 };
-    match text.parse::<usize>() {
-        Ok(n) => n,
-        Err(_) => die_usage(&format!("--jobs '{text}' is not a number")),
-    }
-}
-
-fn parse_benches(args: &[String]) -> Vec<&'static str> {
-    let Some(text) = flag(args, "--benches") else {
-        return workloads::NAMES.to_vec();
-    };
-    let mut names = Vec::new();
-    for part in text.split(',') {
-        let part = part.trim();
-        match workloads::NAMES.iter().find(|n| **n == part) {
-            Some(n) => names.push(*n),
-            None => die_usage(&format!(
-                "unknown benchmark '{part}' in --benches (try: {})",
-                workloads::NAMES.join(", ")
-            )),
-        }
-    }
-    names
-}
-
-/// `--no-trace` drops back to the baseline block interpreter; the
-/// default is the superblock trace engine. Reported numbers are
-/// bit-identical either way (pinned by `exec/trace.rs` tests) — the
-/// flag exists for A/B simulator-throughput runs and for bisecting.
-fn parse_engine(args: &[String]) -> Engine {
-    if has_flag(args, "--no-trace") {
-        Engine::Baseline
-    } else {
-        Engine::Trace
-    }
-}
-
-fn sweep_config(args: &[String]) -> (SweepConfig, PathBuf) {
-    let out: PathBuf = flag(args, "--out").unwrap_or_else(|| "reports".into()).into();
-    let mut cfg = SweepConfig::new(&parse_vls(args), &parse_benches(args));
-    cfg.jobs = parse_jobs(args);
-    cfg.resume = has_flag(args, "--resume");
-    cfg.out_dir = Some(out.clone());
-    cfg.engine = parse_engine(args);
-    (cfg, out)
+/// Unwrap a request-layer parse, mapping `Err` to the exit-2 contract.
+fn usage<T>(parsed: Result<T, String>) -> T {
+    parsed.unwrap_or_else(|e| die_usage(&e))
 }
 
 /// Print the written artifact paths and the cache summary line shared
@@ -256,12 +190,13 @@ fn run_compare(args: &[String]) -> ! {
         (Some(a), Some(b)) if !a.starts_with("--") && !b.starts_with("--") => (a, b),
         _ => die_usage("--compare needs two artifact paths (A.json B.json)"),
     };
-    let fail_below_pct = flag(args, "--fail-on-regress").map(|t| match t.parse::<f64>() {
-        Ok(pct) if pct.is_finite() && pct >= 0.0 => pct,
-        _ => die_usage(&format!(
-            "--fail-on-regress '{t}' is not a non-negative number"
-        )),
-    });
+    let fail_below_pct =
+        usage(request::flag(args, "--fail-on-regress")).map(|t| match t.parse::<f64>() {
+            Ok(pct) if pct.is_finite() && pct >= 0.0 => pct,
+            _ => die_usage(&format!(
+                "--fail-on-regress '{t}' is not a non-negative number"
+            )),
+        });
     let cmp = compare::compare(&load_points(a), &load_points(b), fail_below_pct);
     print!("{}", compare::render(&cmp));
     if cmp.failed() {
@@ -271,6 +206,84 @@ fn run_compare(args: &[String]) -> ! {
             cmp.regressions.len(),
             cmp.only_in_a.len()
         ));
+    }
+    std::process::exit(0)
+}
+
+/// `sve serve`: bind, announce, run until a shutdown request drains.
+fn run_serve(args: &[String]) -> ! {
+    let opts = usage(ServeOpts::from_cli(args));
+    let server = match Server::bind(&opts.listen, ServerConfig::from_opts(&opts)) {
+        Ok(s) => s,
+        Err(e) => die_run(&e),
+    };
+    match server.local_addr() {
+        Ok(addr) => println!("serve: listening on {addr}, store {}/jobs/", opts.out.display()),
+        Err(e) => die_run(&format!("local addr: {e}")),
+    }
+    if let Err(e) = server.run() {
+        die_run(&e);
+    }
+    let stats = server.stats();
+    println!(
+        "serve: drained; lifetime {} simulated, {} deduped, {} reloaded, {} evicted",
+        stats.simulated, stats.deduped, stats.reloaded, stats.evicted
+    );
+    std::process::exit(0)
+}
+
+/// One streamed job result on the terminal.
+fn print_job(job: &JobLine) {
+    println!(
+        "{:<14} {:<8} {:<10} {:<9} {} cycles",
+        job.record.bench,
+        job.record.isa.label(),
+        job.variant,
+        job.source.as_str(),
+        job.record.cycles
+    );
+}
+
+/// `sve submit`: one request against a running server. Connection or
+/// request failures are runtime errors (exit 1) — the server being
+/// down is not a usage mistake.
+fn run_submit(args: &[String]) -> ! {
+    let opts = usage(SubmitOpts::from_cli(args));
+    let mut client = match Client::connect(&opts.addr) {
+        Ok(c) => c,
+        Err(e) => die_run(&e),
+    };
+    match &opts.action {
+        SubmitAction::Ping => match client.ping() {
+            Ok(()) => println!("pong from {}", opts.addr),
+            Err(e) => die_run(&e),
+        },
+        SubmitAction::Stats => match client.stats() {
+            Ok(s) => println!(
+                "server at {}: {} simulated, {} deduped, {} reloaded, {} evicted",
+                opts.addr, s.simulated, s.deduped, s.reloaded, s.evicted
+            ),
+            Err(e) => die_run(&e),
+        },
+        SubmitAction::Shutdown => match client.shutdown_server() {
+            Ok(()) => println!("server at {} is shutting down", opts.addr),
+            Err(e) => die_run(&e),
+        },
+        SubmitAction::Sweep(req) => match client.submit_sweep(req, &mut print_job) {
+            // CI greps this exact accounting line — keep the wording
+            Ok(c) => println!(
+                "{} jobs: {} simulated, {} deduped, {} reloaded",
+                c.jobs, c.simulated, c.deduped, c.reloaded
+            ),
+            Err(e) => die_run(&e),
+        },
+        SubmitAction::Dse(req) => match client.submit_dse(req, &mut print_job) {
+            Ok(c) => println!(
+                "{} jobs: {} simulated, {} deduped, {} reloaded",
+                c.jobs, c.simulated, c.deduped, c.reloaded
+            ),
+            Err(e) => die_run(&e),
+        },
     }
     std::process::exit(0)
 }
@@ -289,11 +302,11 @@ fn main() {
             }
         }
         "run" => {
-            let name = parse_bench(&args, "run");
+            let name = usage(request::parse_bench_arg(&args, "run"));
             // validate --vl whatever the ISA: a typo'd value must never
             // be silently ignored (scalar/neon fix the width at 128)
-            let vl = parse_vl(&args, 256);
-            let isa = match flag(&args, "--isa").as_deref() {
+            let vl = usage(request::parse_vl(&args, 256));
+            let isa = match usage(request::flag(&args, "--isa")).as_deref() {
                 Some("scalar") => Isa::Scalar,
                 Some("neon") => Isa::Neon,
                 Some("sve") | None => Isa::Sve(vl),
@@ -301,7 +314,7 @@ fn main() {
                     die_usage(&format!("unknown --isa '{other}' (scalar, neon or sve)"))
                 }
             };
-            match coordinator::run_one_engine(name, isa, parse_engine(&args)) {
+            match coordinator::run_one_engine(name, isa, request::parse_engine(&args)) {
                 Ok(r) => {
                     println!(
                         "{} on {}: {} insts, {} cycles, ipc {:.2}, vectorized={}, \
@@ -320,25 +333,21 @@ fn main() {
             }
         }
         "sweep" => {
-            let (cfg, out) = sweep_config(&args);
+            let req = usage(SweepRequest::from_cli(&args));
+            let (cfg, out) = req.to_config();
             run_sweep_and_emit(&cfg, &out);
         }
         "dse" => {
-            let (cfg, out) = sweep_config(&args);
-            let spec =
-                flag(&args, "--uarch").unwrap_or_else(|| VARIANT_NAMES.join(","));
-            let variants = match parse_variants(&spec) {
-                Ok(v) => v,
-                Err(e) => die_usage(&e),
-            };
+            let req = usage(DseRequest::from_cli(&args));
+            let (cfg, out) = req.sweep.to_config();
+            let variants = usage(req.variants());
             let outcome = match coordinator::run_dse(&cfg, &variants) {
                 Ok(o) => o,
                 Err(e) => die_run(&e),
             };
             // --pareto-only: restrict reporting and artifacts to the
-            // frontier design points (ROADMAP open item)
-            let pareto_only = has_flag(&args, "--pareto-only");
-            let (shown, pts) = if pareto_only {
+            // frontier design points
+            let (shown, pts) = if req.pareto_only {
                 report::dse::frontier_only(&outcome.variants, &cfg.vls)
             } else {
                 let pts = report::dse::pareto(&outcome.variants, &cfg.vls);
@@ -350,24 +359,23 @@ fn main() {
             }
             println!("## Cross-variant pivot — speedup, perf/W, perf/mm2 over NEON\n");
             println!("{}", report::dse::pivot(&shown, &cfg.vls).to_markdown());
-            if pareto_only {
+            if req.pareto_only {
                 println!("## Pareto frontier (frontier-only view)\n");
             } else {
                 println!("## Pareto frontier — performance vs energy vs area\n");
             }
             println!("{}", report::dse::pareto_table(&pts).to_markdown());
-            let paths = if pareto_only {
+            let paths = if req.pareto_only {
                 report::dse::write_artifacts_pareto_only(&outcome.variants, &cfg.vls, &out)
             } else {
                 report::dse::write_artifacts(&outcome.variants, &cfg.vls, &out)
             };
             emit_paths_and_counts(paths, "dse", outcome.simulated, outcome.reloaded, &out);
         }
-        "report" if has_flag(&args, "--compare") => run_compare(&args),
+        "report" if args.iter().any(|a| a == "--compare") => run_compare(&args),
         "report" => {
-            let (mut cfg, out) = sweep_config(&args);
-            // `report` is idempotent by design: always reuse cached jobs
-            cfg.resume = true;
+            let req = usage(ReportRequest::from_cli(&args));
+            let (cfg, out) = req.sweep.to_config();
             let fig2 = report::fig2::build(report::fig2::DAXPY_N);
             match report::fig2::write_artifacts(&fig2, &out) {
                 Ok(paths) => paths.iter().for_each(|p| println!("wrote {}", p.display())),
@@ -379,10 +387,12 @@ fn main() {
             }
             run_sweep_and_emit(&cfg, &out);
         }
+        "serve" => run_serve(&args),
+        "submit" => run_submit(&args),
         "trace" => {
-            let name = parse_bench(&args, "trace");
-            let vl = parse_vl(&args, 256);
-            let limit: u64 = match flag(&args, "--limit") {
+            let name = usage(request::parse_bench_arg(&args, "trace"));
+            let vl = usage(request::parse_vl(&args, 256));
+            let limit: u64 = match usage(request::flag(&args, "--limit")) {
                 Some(t) => match t.parse() {
                     Ok(n) => n,
                     Err(_) => die_usage(&format!("--limit '{t}' is not a number")),
@@ -426,7 +436,8 @@ fn main() {
             );
         }
         "validate" => {
-            let dir = flag(&args, "--artifacts").unwrap_or_else(|| "artifacts".into());
+            let dir = usage(request::flag(&args, "--artifacts"))
+                .unwrap_or_else(|| "artifacts".into());
             match sve_repro::runtime::validate_all(&dir) {
                 Ok(vs) => {
                     for v in &vs {

@@ -86,6 +86,76 @@ impl JobStore {
         }
         Some(r)
     }
+
+    /// Bump `key`'s recency for the LRU eviction order by rewriting the
+    /// file in place (a plain mtime update without touching bytes —
+    /// `std` has no utimes). Best-effort: a missing or unreadable file
+    /// is simply not touched.
+    pub fn touch(&self, key: &str) {
+        let path = self.job_path(key);
+        if let Ok(text) = std::fs::read_to_string(&path) {
+            let _ = std::fs::write(&path, text);
+        }
+    }
+
+    /// Evict least-recently-used job files until the store fits in
+    /// `max_bytes`. Eviction order is oldest mtime first, key as the
+    /// deterministic tiebreak; a key for which `protected` returns
+    /// `true` (the serve hub passes its in-flight set) is never
+    /// removed, even if the store stays over budget because of it.
+    /// Non-`.json` strangers in the directory are ignored entirely.
+    pub fn gc(
+        &self,
+        max_bytes: u64,
+        protected: &dyn Fn(&str) -> bool,
+    ) -> std::io::Result<GcOutcome> {
+        let mut entries: Vec<(String, u64, std::time::SystemTime)> = Vec::new();
+        for entry in std::fs::read_dir(&self.dir)? {
+            let entry = entry?;
+            let name = entry.file_name();
+            let Some(key) = name.to_str().and_then(|n| n.strip_suffix(".json")) else {
+                continue;
+            };
+            let Ok(meta) = entry.metadata() else { continue };
+            if !meta.is_file() {
+                continue;
+            }
+            let mtime = meta.modified().unwrap_or(std::time::SystemTime::UNIX_EPOCH);
+            entries.push((key.to_string(), meta.len(), mtime));
+        }
+        let bytes_before: u64 = entries.iter().map(|e| e.1).sum();
+        let examined = entries.len();
+        entries.sort_by(|a, b| a.2.cmp(&b.2).then_with(|| a.0.cmp(&b.0)));
+        let mut bytes_after = bytes_before;
+        let mut evicted = 0usize;
+        for (key, len, _) in &entries {
+            if bytes_after <= max_bytes {
+                break;
+            }
+            if protected(key) {
+                continue;
+            }
+            if std::fs::remove_file(self.job_path(key)).is_ok() {
+                bytes_after -= len;
+                evicted += 1;
+            }
+        }
+        Ok(GcOutcome { examined, evicted, bytes_before, bytes_after })
+    }
+}
+
+/// What one [`JobStore::gc`] pass did.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct GcOutcome {
+    /// Job files found in the store.
+    pub examined: usize,
+    /// Files removed this pass.
+    pub evicted: usize,
+    /// Store size before the pass, bytes.
+    pub bytes_before: u64,
+    /// Store size after the pass (over `max_bytes` only if protected
+    /// keys pin it there).
+    pub bytes_after: u64,
 }
 
 /// Serialize one [`RunRecord`] (plus its key, for human inspection).
@@ -275,6 +345,60 @@ mod tests {
         // corrupt file -> miss
         std::fs::write(st.job_path(&key), "not json").unwrap();
         assert!(st.load(&key, r.bench, r.isa).is_none());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn gc_evicts_oldest_first_and_never_in_flight_keys() {
+        let dir = std::env::temp_dir().join(format!("sve-gc-test-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let st = JobStore::open(&dir).unwrap();
+        let r = sample();
+        // three records, mtimes strictly ordered a < b < c
+        for key in ["aaaa", "bbbb", "cccc"] {
+            st.save(key, &r).unwrap();
+            std::thread::sleep(std::time::Duration::from_millis(30));
+        }
+        let one = std::fs::metadata(st.job_path("aaaa")).unwrap().len();
+        // budget for two files: the oldest unprotected one goes
+        let out = st.gc(2 * one, &|_| false).unwrap();
+        assert_eq!(out.examined, 3);
+        assert_eq!(out.evicted, 1);
+        assert!(!st.job_path("aaaa").exists(), "oldest must go first");
+        assert!(st.job_path("bbbb").exists() && st.job_path("cccc").exists());
+        assert_eq!(out.bytes_after, out.bytes_before - one);
+        // a touch re-warms: after touching b, shrinking to one file
+        // must evict c (now the coldest), not b
+        std::thread::sleep(std::time::Duration::from_millis(30));
+        st.touch("bbbb");
+        let out = st.gc(one, &|_| false).unwrap();
+        assert_eq!(out.evicted, 1);
+        assert!(st.job_path("bbbb").exists(), "touched file survives");
+        assert!(!st.job_path("cccc").exists());
+        // protected (in-flight) keys are never evicted, even when the
+        // store cannot meet the budget because of them
+        let out = st.gc(0, &|key| key == "bbbb").unwrap();
+        assert_eq!(out.evicted, 0);
+        assert!(st.job_path("bbbb").exists());
+        assert!(out.bytes_after > 0);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn gc_ignores_stranger_files_and_zero_budget_empties_the_store() {
+        let dir =
+            std::env::temp_dir().join(format!("sve-gc-stranger-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let st = JobStore::open(&dir).unwrap();
+        let r = sample();
+        st.save("aaaa", &r).unwrap();
+        st.save("bbbb", &r).unwrap();
+        std::fs::write(dir.join("jobs").join("README.txt"), "not a job").unwrap();
+        let out = st.gc(0, &|_| false).unwrap();
+        assert_eq!(out.examined, 2, "strangers are not the store's to manage");
+        assert_eq!(out.evicted, 2);
+        assert_eq!(out.bytes_after, 0);
+        assert!(dir.join("jobs").join("README.txt").exists());
         let _ = std::fs::remove_dir_all(&dir);
     }
 

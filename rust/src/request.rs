@@ -1,0 +1,644 @@
+//! The typed request layer: one schema, two spellings.
+//!
+//! Every `sve` subcommand that drives the sweep engine is described by
+//! a plain struct here — [`SweepRequest`], [`DseRequest`],
+//! [`ReportRequest`] — with **one** parser per flag instead of the
+//! per-subcommand ad-hoc loops `main.rs` used to carry. The same
+//! structs round-trip through JSON ([`SweepRequest::to_json`] /
+//! [`SweepRequest::from_json`]), and that JSON form *is* the `sve
+//! serve` wire format (see [`crate::serve::proto`]): CLI flags and the
+//! socket API are two spellings of one schema, so a request accepted on
+//! the command line is by construction expressible over the socket and
+//! vice versa.
+//!
+//! Parsers return `Err(message)` — the CLI maps that to the exit-2
+//! usage contract, the server to a structured `error` response. The
+//! flag grammar, defaults, and error wording are unchanged from the
+//! pre-PR-8 CLI (pinned by the integration tests).
+
+use std::path::PathBuf;
+
+use crate::coordinator::SweepConfig;
+use crate::exec::Engine;
+use crate::report::json::Json;
+use crate::uarch::{parse_variants, UarchVariant, VARIANT_NAMES};
+use crate::workloads;
+
+/// Value of `name`, or `None` when the flag is absent. A flag present
+/// with no trailing value is an error, never a silent default —
+/// `--fail-on-regress $PCT` with `PCT` unset in a CI shell must not
+/// quietly disable the regression wall.
+pub fn flag(args: &[String], name: &str) -> Result<Option<String>, String> {
+    let Some(i) = args.iter().position(|a| a == name) else {
+        return Ok(None);
+    };
+    match args.get(i + 1) {
+        Some(v) => Ok(Some(v.clone())),
+        None => Err(format!("{name} needs a value")),
+    }
+}
+
+/// Is the bare flag `name` present?
+pub fn has_flag(args: &[String], name: &str) -> bool {
+    args.iter().any(|a| a == name)
+}
+
+/// Parse the positional benchmark argument of `sve <cmd> <bench>`.
+pub fn parse_bench_arg(args: &[String], cmd: &str) -> Result<&'static str, String> {
+    let Some(bench) = args.get(1) else {
+        return Err(format!("usage: sve {cmd} <bench>"));
+    };
+    intern_bench(bench)
+}
+
+/// Intern a benchmark name against [`workloads::NAMES`] (the
+/// `&'static str` the coordinator carries in every record).
+fn intern_bench(name: &str) -> Result<&'static str, String> {
+    workloads::NAMES.iter().find(|n| **n == name).copied().ok_or_else(|| {
+        format!("unknown benchmark '{name}' (try: {})", workloads::NAMES.join(", "))
+    })
+}
+
+/// Parse `--vl BITS` with a default, validating §2.2 legality.
+pub fn parse_vl(args: &[String], default: usize) -> Result<usize, String> {
+    let Some(text) = flag(args, "--vl")? else { return Ok(default) };
+    let Ok(vl) = text.parse::<usize>() else {
+        return Err(format!("--vl '{text}' is not a number"));
+    };
+    if !crate::vl_is_legal(vl) {
+        return Err(format!("--vl {vl} is illegal (§2.2: 128..2048 in steps of 128)"));
+    }
+    Ok(vl)
+}
+
+/// Parse `--vls A,B,C` (default `128,256,512`), validating each entry.
+pub fn parse_vls(args: &[String]) -> Result<Vec<usize>, String> {
+    let text = flag(args, "--vls")?.unwrap_or_else(|| "128,256,512".into());
+    let mut vls = Vec::new();
+    for part in text.split(',') {
+        let Ok(vl) = part.trim().parse::<usize>() else {
+            return Err(format!("--vls component '{part}' is not a number"));
+        };
+        if !crate::vl_is_legal(vl) {
+            return Err(format!("--vls {vl} is illegal (§2.2: 128..2048 in steps of 128)"));
+        }
+        vls.push(vl);
+    }
+    Ok(vls)
+}
+
+/// Parse `--jobs N` (default `0` = one worker per CPU).
+pub fn parse_jobs(args: &[String]) -> Result<usize, String> {
+    let Some(text) = flag(args, "--jobs")? else { return Ok(0) };
+    text.parse::<usize>().map_err(|_| format!("--jobs '{text}' is not a number"))
+}
+
+/// Parse `--benches a,b` (default: every benchmark).
+pub fn parse_benches(args: &[String]) -> Result<Vec<&'static str>, String> {
+    let Some(text) = flag(args, "--benches")? else {
+        return Ok(workloads::NAMES.to_vec());
+    };
+    let mut names = Vec::new();
+    for part in text.split(',') {
+        let part = part.trim();
+        match workloads::NAMES.iter().find(|n| **n == part) {
+            Some(n) => names.push(*n),
+            None => {
+                return Err(format!(
+                    "unknown benchmark '{part}' in --benches (try: {})",
+                    workloads::NAMES.join(", ")
+                ))
+            }
+        }
+    }
+    Ok(names)
+}
+
+/// `--no-trace` drops back to the baseline block interpreter; the
+/// default is the superblock trace engine. Reported numbers are
+/// bit-identical either way (pinned by `exec/trace.rs` tests) — the
+/// flag exists for A/B simulator-throughput runs and for bisecting.
+pub fn parse_engine(args: &[String]) -> Engine {
+    if has_flag(args, "--no-trace") {
+        Engine::Baseline
+    } else {
+        Engine::Trace
+    }
+}
+
+// ---------------------------------------------------------------------
+// SweepRequest
+// ---------------------------------------------------------------------
+
+/// One Fig. 8 sweep over a (benchmark × {NEON} ∪ {SVE@vl}) matrix —
+/// the typed form of `sve sweep`, and (in its JSON spelling) the body
+/// of a `sve-repro/serve-req/v1` sweep request.
+///
+/// ```
+/// use sve_repro::request::SweepRequest;
+/// let args: Vec<String> =
+///     ["--vls", "128,256", "--benches", "haccmk", "--jobs", "2", "--resume"]
+///         .iter().map(|s| s.to_string()).collect();
+/// let req = SweepRequest::from_cli(&args).unwrap();
+/// assert_eq!(req.vls, vec![128, 256]);
+/// assert_eq!(req.benches, vec!["haccmk"]);
+/// assert!(req.resume);
+/// // the JSON spelling round-trips to the same request
+/// let back = SweepRequest::from_json(&req.to_json()).unwrap();
+/// assert_eq!(req, back);
+/// ```
+#[derive(Clone, Debug, PartialEq)]
+pub struct SweepRequest {
+    /// SVE vector lengths to sweep (bits), §2.2-legal, non-empty.
+    pub vls: Vec<usize>,
+    /// Benchmarks, interned against [`workloads::NAMES`].
+    pub benches: Vec<&'static str>,
+    /// Artifact/cache directory (`--out`). `None` = the CLI default
+    /// `reports`; the server substitutes its own store directory.
+    pub out: Option<PathBuf>,
+    /// Worker threads (`--jobs`); `0` = one per CPU.
+    pub jobs: usize,
+    /// Reuse completed jobs cached on disk (`--resume`). The server
+    /// always behaves as if this were set: the shared job store *is*
+    /// the dedupe substrate.
+    pub resume: bool,
+    /// Run on the baseline interpreter (`--no-trace`). Results are
+    /// bit-identical either way, so the server treats this as a local
+    /// A/B knob and may ignore it.
+    pub no_trace: bool,
+}
+
+impl SweepRequest {
+    /// Parse the `sve sweep` flag set.
+    pub fn from_cli(args: &[String]) -> Result<SweepRequest, String> {
+        Ok(SweepRequest {
+            vls: parse_vls(args)?,
+            benches: parse_benches(args)?,
+            out: flag(args, "--out")?.map(PathBuf::from),
+            jobs: parse_jobs(args)?,
+            resume: has_flag(args, "--resume"),
+            no_trace: has_flag(args, "--no-trace"),
+        })
+    }
+
+    /// The functional engine this request selects.
+    pub fn engine(&self) -> Engine {
+        if self.no_trace {
+            Engine::Baseline
+        } else {
+            Engine::Trace
+        }
+    }
+
+    /// The output directory, with the CLI default applied.
+    pub fn out_dir(&self) -> PathBuf {
+        self.out.clone().unwrap_or_else(|| PathBuf::from("reports"))
+    }
+
+    /// Lower into the coordinator's [`SweepConfig`] plus the artifact
+    /// directory (always set: persistence is the point of the CLI).
+    pub fn to_config(&self) -> (SweepConfig, PathBuf) {
+        let out = self.out_dir();
+        let mut cfg = SweepConfig::new(&self.vls, &self.benches);
+        cfg.jobs = self.jobs;
+        cfg.resume = self.resume;
+        cfg.out_dir = Some(out.clone());
+        cfg.engine = self.engine();
+        (cfg, out)
+    }
+
+    /// The number of jobs this request's matrix expands to (per µarch
+    /// variant): one NEON baseline plus one SVE point per VL, per
+    /// benchmark.
+    pub fn matrix_len(&self) -> usize {
+        self.benches.len() * (1 + self.vls.len())
+    }
+
+    /// The JSON spelling (the serve wire body).
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("vls".into(), Json::Arr(self.vls.iter().map(|&v| Json::u64(v as u64)).collect())),
+            (
+                "benches".into(),
+                Json::Arr(self.benches.iter().map(|b| Json::str(*b)).collect()),
+            ),
+        ];
+        if let Some(out) = &self.out {
+            fields.push(("out".into(), Json::str(out.to_string_lossy())));
+        }
+        fields.push(("jobs".into(), Json::u64(self.jobs as u64)));
+        fields.push(("resume".into(), Json::Bool(self.resume)));
+        fields.push(("no_trace".into(), Json::Bool(self.no_trace)));
+        Json::Obj(fields)
+    }
+
+    /// Parse the JSON spelling. Absent fields take the CLI defaults;
+    /// present fields are validated with the same rules (and error
+    /// wording) as the flags.
+    pub fn from_json(v: &Json) -> Result<SweepRequest, String> {
+        let vls = match v.get("vls") {
+            None => vec![128, 256, 512],
+            Some(arr) => {
+                let items = arr.as_arr().ok_or("'vls' must be an array of numbers")?;
+                let mut vls = Vec::with_capacity(items.len());
+                for item in items {
+                    let vl = item
+                        .as_u64()
+                        .ok_or("'vls' must be an array of numbers")?
+                        as usize;
+                    if !crate::vl_is_legal(vl) {
+                        return Err(format!(
+                            "--vls {vl} is illegal (§2.2: 128..2048 in steps of 128)"
+                        ));
+                    }
+                    vls.push(vl);
+                }
+                vls
+            }
+        };
+        let benches = match v.get("benches") {
+            None => workloads::NAMES.to_vec(),
+            Some(arr) => {
+                let items = arr.as_arr().ok_or("'benches' must be an array of strings")?;
+                let mut benches = Vec::with_capacity(items.len());
+                for item in items {
+                    let name =
+                        item.as_str().ok_or("'benches' must be an array of strings")?;
+                    benches.push(intern_bench(name)?);
+                }
+                benches
+            }
+        };
+        let out = match v.get("out") {
+            None | Some(Json::Null) => None,
+            Some(o) => Some(PathBuf::from(o.as_str().ok_or("'out' must be a string")?)),
+        };
+        let jobs = match v.get("jobs") {
+            None => 0,
+            Some(j) => j.as_u64().ok_or("'jobs' must be a number")? as usize,
+        };
+        let get_bool = |key: &str| -> Result<bool, String> {
+            match v.get(key) {
+                None => Ok(false),
+                Some(b) => b.as_bool().ok_or_else(|| format!("'{key}' must be a boolean")),
+            }
+        };
+        Ok(SweepRequest {
+            vls,
+            benches,
+            out,
+            jobs,
+            resume: get_bool("resume")?,
+            no_trace: get_bool("no_trace")?,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------
+// DseRequest
+// ---------------------------------------------------------------------
+
+/// A design-space sweep across µarch variants — the typed form of
+/// `sve dse`, and (in JSON) the body of a serve `dse` request.
+///
+/// ```
+/// use sve_repro::request::DseRequest;
+/// let args: Vec<String> =
+///     ["--uarch", "table2,small-core", "--vls", "128", "--benches", "haccmk"]
+///         .iter().map(|s| s.to_string()).collect();
+/// let req = DseRequest::from_cli(&args).unwrap();
+/// assert_eq!(req.variants().unwrap().len(), 2);
+/// assert_eq!(DseRequest::from_json(&req.to_json()).unwrap(), req);
+/// ```
+#[derive(Clone, Debug, PartialEq)]
+pub struct DseRequest {
+    /// The matrix + execution knobs shared with plain sweeps.
+    pub sweep: SweepRequest,
+    /// The `--uarch` variant spec (validated at parse time; expanded
+    /// with [`DseRequest::variants`]).
+    pub uarch: String,
+    /// Restrict the report and artifacts to Pareto-frontier points.
+    pub pareto_only: bool,
+}
+
+impl DseRequest {
+    /// Parse the `sve dse` flag set.
+    pub fn from_cli(args: &[String]) -> Result<DseRequest, String> {
+        let uarch = flag(args, "--uarch")?.unwrap_or_else(|| VARIANT_NAMES.join(","));
+        // validate the spec here so a typo is a parse error (exit 2 /
+        // structured error response), not a mid-sweep failure
+        parse_variants(&uarch)?;
+        Ok(DseRequest {
+            sweep: SweepRequest::from_cli(args)?,
+            uarch,
+            pareto_only: has_flag(args, "--pareto-only"),
+        })
+    }
+
+    /// Expand the `--uarch` spec into concrete design points.
+    pub fn variants(&self) -> Result<Vec<UarchVariant>, String> {
+        parse_variants(&self.uarch)
+    }
+
+    /// The JSON spelling (the serve wire body): the sweep fields plus
+    /// `uarch` and `pareto_only`.
+    pub fn to_json(&self) -> Json {
+        let mut fields = match self.sweep.to_json() {
+            Json::Obj(fields) => fields,
+            _ => unreachable!("SweepRequest::to_json returns an object"),
+        };
+        fields.push(("uarch".into(), Json::str(&self.uarch)));
+        fields.push(("pareto_only".into(), Json::Bool(self.pareto_only)));
+        Json::Obj(fields)
+    }
+
+    /// Parse the JSON spelling (defaults: all base variants, full
+    /// report).
+    pub fn from_json(v: &Json) -> Result<DseRequest, String> {
+        let uarch = match v.get("uarch") {
+            None => VARIANT_NAMES.join(","),
+            Some(u) => u.as_str().ok_or("'uarch' must be a string")?.to_string(),
+        };
+        parse_variants(&uarch)?;
+        let pareto_only = match v.get("pareto_only") {
+            None => false,
+            Some(b) => b.as_bool().ok_or("'pareto_only' must be a boolean")?,
+        };
+        Ok(DseRequest { sweep: SweepRequest::from_json(v)?, uarch, pareto_only })
+    }
+}
+
+// ---------------------------------------------------------------------
+// ReportRequest
+// ---------------------------------------------------------------------
+
+/// The figure-emission request behind `sve report` (without
+/// `--compare`, which is a pure artifact diff and never runs jobs).
+/// `report` is idempotent by design: it always resumes from the job
+/// cache, so emitting figures twice never re-simulates.
+///
+/// ```
+/// use sve_repro::request::ReportRequest;
+/// let args: Vec<String> = ["--vls", "128"].iter().map(|s| s.to_string()).collect();
+/// let req = ReportRequest::from_cli(&args).unwrap();
+/// assert!(req.sweep.resume, "report always resumes");
+/// ```
+#[derive(Clone, Debug, PartialEq)]
+pub struct ReportRequest {
+    /// The underlying sweep, with `resume` forced on.
+    pub sweep: SweepRequest,
+}
+
+impl ReportRequest {
+    /// Parse the `sve report` flag set.
+    pub fn from_cli(args: &[String]) -> Result<ReportRequest, String> {
+        let mut sweep = SweepRequest::from_cli(args)?;
+        sweep.resume = true;
+        Ok(ReportRequest { sweep })
+    }
+}
+
+// ---------------------------------------------------------------------
+// Serve / submit options (CLI-only: these configure the transport, not
+// a job matrix, so they have no wire spelling)
+// ---------------------------------------------------------------------
+
+/// Options for `sve serve` — the long-running sweep service.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ServeOpts {
+    /// `host:port` to listen on (default `127.0.0.1:7878`; port `0`
+    /// picks an ephemeral port, printed at startup).
+    pub listen: String,
+    /// Job-store directory (default `reports`), shared with `sve
+    /// sweep --out`/`--resume` runs.
+    pub out: PathBuf,
+    /// Worker threads per request; `0` = one per CPU.
+    pub jobs: usize,
+    /// On-disk job-cache budget in bytes (`--cache-bytes`); `None`
+    /// disables GC.
+    pub cache_bytes: Option<u64>,
+    /// Per-request job budget (`--max-request-jobs`, default 4096):
+    /// a runaway matrix gets a structured error, not a day-long sweep.
+    pub max_request_jobs: usize,
+    /// Run jobs on the baseline interpreter (`--no-trace`).
+    pub no_trace: bool,
+}
+
+impl ServeOpts {
+    /// Parse the `sve serve` flag set.
+    pub fn from_cli(args: &[String]) -> Result<ServeOpts, String> {
+        let cache_bytes = match flag(args, "--cache-bytes")? {
+            None => None,
+            Some(text) => Some(
+                text.parse::<u64>()
+                    .map_err(|_| format!("--cache-bytes '{text}' is not a number"))?,
+            ),
+        };
+        let max_request_jobs = match flag(args, "--max-request-jobs")? {
+            None => 4096,
+            Some(text) => text
+                .parse::<usize>()
+                .map_err(|_| format!("--max-request-jobs '{text}' is not a number"))?,
+        };
+        Ok(ServeOpts {
+            listen: flag(args, "--listen")?.unwrap_or_else(|| "127.0.0.1:7878".into()),
+            out: flag(args, "--out")?.unwrap_or_else(|| "reports".into()).into(),
+            jobs: parse_jobs(args)?,
+            cache_bytes,
+            max_request_jobs,
+            no_trace: has_flag(args, "--no-trace"),
+        })
+    }
+}
+
+/// What a `sve submit` invocation asks the server to do.
+#[derive(Clone, Debug, PartialEq)]
+pub enum SubmitAction {
+    /// Submit a sweep request and stream its results.
+    Sweep(SweepRequest),
+    /// Submit a design-space request and stream its results.
+    Dse(DseRequest),
+    /// Liveness probe (`--ping`): exit 0 iff the server answers.
+    Ping,
+    /// Print the server's cumulative dedupe/GC statistics (`--stats`).
+    Stats,
+    /// Ask the server to drain in-flight work and exit 0
+    /// (`--shutdown`).
+    Shutdown,
+}
+
+/// Options for `sve submit` — the scripting/CI client for a running
+/// `sve serve`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SubmitOpts {
+    /// `host:port` of the server (default `127.0.0.1:7878`).
+    pub addr: String,
+    /// The request to send.
+    pub action: SubmitAction,
+}
+
+impl SubmitOpts {
+    /// Parse the `sve submit` flag set.
+    pub fn from_cli(args: &[String]) -> Result<SubmitOpts, String> {
+        let addr = flag(args, "--addr")?.unwrap_or_else(|| "127.0.0.1:7878".into());
+        let action = if has_flag(args, "--ping") {
+            SubmitAction::Ping
+        } else if has_flag(args, "--stats") {
+            SubmitAction::Stats
+        } else if has_flag(args, "--shutdown") {
+            SubmitAction::Shutdown
+        } else if has_flag(args, "--dse") {
+            SubmitAction::Dse(DseRequest::from_cli(args)?)
+        } else if has_flag(args, "--uarch") {
+            return Err("submit: --uarch requires --dse (plain submits run at table2)".into());
+        } else {
+            SubmitAction::Sweep(SweepRequest::from_cli(args)?)
+        };
+        Ok(SubmitOpts { addr, action })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(args: &[&str]) -> Vec<String> {
+        args.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn sweep_cli_defaults_match_the_pre_refactor_cli() {
+        let req = SweepRequest::from_cli(&argv(&[])).unwrap();
+        assert_eq!(req.vls, vec![128, 256, 512]);
+        assert_eq!(req.benches, workloads::NAMES.to_vec());
+        assert_eq!(req.out, None);
+        assert_eq!(req.out_dir(), PathBuf::from("reports"));
+        assert_eq!(req.jobs, 0);
+        assert!(!req.resume && !req.no_trace);
+        assert_eq!(req.engine(), Engine::Trace);
+        let (cfg, out) = req.to_config();
+        assert_eq!(cfg.vls, req.vls);
+        assert_eq!(cfg.out_dir, Some(out));
+    }
+
+    #[test]
+    fn sweep_cli_errors_keep_their_wording() {
+        for (args, needle) in [
+            (&["--vls", "128,xyz"][..], "not a number"),
+            (&["--vls", "4096"][..], "illegal"),
+            (&["--jobs", "many"][..], "not a number"),
+            (&["--benches", "nosuchbench"][..], "unknown benchmark"),
+            (&["--vls"][..], "--vls needs a value"),
+            (&["--out"][..], "--out needs a value"),
+        ] {
+            let err = SweepRequest::from_cli(&argv(args)).unwrap_err();
+            assert!(err.contains(needle), "{args:?}: {err}");
+        }
+    }
+
+    #[test]
+    fn sweep_json_roundtrip_is_exact() {
+        let req = SweepRequest {
+            vls: vec![128, 2048],
+            benches: vec!["stream_triad", "su3_mv"],
+            out: Some(PathBuf::from("elsewhere")),
+            jobs: 7,
+            resume: true,
+            no_trace: true,
+        };
+        let text = req.to_json().render();
+        let back = SweepRequest::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(req, back);
+        assert_eq!(back.engine(), Engine::Baseline);
+    }
+
+    #[test]
+    fn sweep_json_defaults_and_rejections() {
+        // an empty object is the default sweep
+        let req = SweepRequest::from_json(&Json::parse("{}").unwrap()).unwrap();
+        assert_eq!(req, SweepRequest::from_cli(&argv(&[])).unwrap());
+        // bad shapes are structured errors, with the CLI's wording for
+        // value-level problems
+        for (text, needle) in [
+            (r#"{"vls": "128"}"#, "array of numbers"),
+            (r#"{"vls": [192]}"#, "illegal"),
+            (r#"{"benches": ["nosuchbench"]}"#, "unknown benchmark"),
+            (r#"{"benches": [128]}"#, "array of strings"),
+            (r#"{"jobs": "many"}"#, "must be a number"),
+            (r#"{"resume": 1}"#, "must be a boolean"),
+        ] {
+            let err =
+                SweepRequest::from_json(&Json::parse(text).unwrap()).unwrap_err();
+            assert!(err.contains(needle), "{text}: {err}");
+        }
+    }
+
+    #[test]
+    fn dse_roundtrip_and_validation() {
+        let args = argv(&["--uarch", "small-core,rob=64,128", "--vls", "128", "--pareto-only"]);
+        let req = DseRequest::from_cli(&args).unwrap();
+        assert!(req.pareto_only);
+        assert_eq!(req.variants().unwrap().len(), 2);
+        let back = DseRequest::from_json(&Json::parse(&req.to_json().render()).unwrap())
+            .unwrap();
+        assert_eq!(req, back);
+        // a bad spec fails at parse time, both spellings
+        assert!(DseRequest::from_cli(&argv(&["--uarch", "no-such-core"])).is_err());
+        let err = DseRequest::from_json(&Json::parse(r#"{"uarch": "no-such-core"}"#).unwrap())
+            .unwrap_err();
+        assert!(err.contains("unknown variant"), "{err}");
+        // defaults: every base variant
+        let req = DseRequest::from_json(&Json::parse("{}").unwrap()).unwrap();
+        assert_eq!(req.uarch, VARIANT_NAMES.join(","));
+    }
+
+    #[test]
+    fn report_request_always_resumes() {
+        let req = ReportRequest::from_cli(&argv(&[])).unwrap();
+        assert!(req.sweep.resume);
+        let (cfg, _) = req.sweep.to_config();
+        assert!(cfg.resume);
+    }
+
+    #[test]
+    fn serve_and_submit_opts_parse() {
+        let opts = ServeOpts::from_cli(&argv(&[
+            "--listen",
+            "127.0.0.1:0",
+            "--out",
+            "store",
+            "--cache-bytes",
+            "4096",
+            "--max-request-jobs",
+            "12",
+        ]))
+        .unwrap();
+        assert_eq!(opts.listen, "127.0.0.1:0");
+        assert_eq!(opts.out, PathBuf::from("store"));
+        assert_eq!(opts.cache_bytes, Some(4096));
+        assert_eq!(opts.max_request_jobs, 12);
+        assert!(ServeOpts::from_cli(&argv(&["--cache-bytes", "lots"])).is_err());
+
+        let sub = SubmitOpts::from_cli(&argv(&["--ping"])).unwrap();
+        assert_eq!(sub.action, SubmitAction::Ping);
+        assert_eq!(sub.addr, "127.0.0.1:7878");
+        let sub =
+            SubmitOpts::from_cli(&argv(&["--dse", "--uarch", "table2", "--vls", "128"]))
+                .unwrap();
+        assert!(matches!(sub.action, SubmitAction::Dse(_)));
+        let err = SubmitOpts::from_cli(&argv(&["--uarch", "table2"])).unwrap_err();
+        assert!(err.contains("--uarch requires --dse"), "{err}");
+    }
+
+    #[test]
+    fn matrix_len_counts_neon_plus_vls() {
+        let req = SweepRequest::from_cli(&argv(&[
+            "--vls",
+            "128,256",
+            "--benches",
+            "haccmk,graph500",
+        ]))
+        .unwrap();
+        assert_eq!(req.matrix_len(), 6);
+    }
+}

@@ -1,0 +1,129 @@
+//! The client half of the serve protocol — the library behind
+//! `sve submit`, and the harness `tests/serve.rs` drives concurrency
+//! scenarios with.
+//!
+//! One [`Client`] owns one connection and speaks one request at a
+//! time: send a line, then read response lines until the request's
+//! terminal line (`done`, `error`, or the single-line answer).
+//! Streamed job results are surfaced through a callback as they
+//! arrive, so a large matrix reports progress incrementally instead of
+//! buffering the whole sweep.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+
+use crate::request::{DseRequest, SweepRequest};
+use crate::serve::hub::Stats;
+use crate::serve::proto::{
+    parse_response, render_request, Counts, Envelope, JobLine, Request, Response,
+};
+
+/// A connection to a running `sve serve`.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+    /// Monotonic per-connection request counter (correlation ids).
+    next_id: u64,
+}
+
+impl Client {
+    /// Connect to `host:port`.
+    pub fn connect(addr: &str) -> Result<Client, String> {
+        let stream =
+            TcpStream::connect(addr).map_err(|e| format!("connect {addr}: {e}"))?;
+        let writer = stream.try_clone().map_err(|e| format!("connect {addr}: {e}"))?;
+        Ok(Client { reader: BufReader::new(stream), writer, next_id: 0 })
+    }
+
+    fn send(&mut self, req: Request) -> Result<String, String> {
+        self.next_id += 1;
+        let id = format!("r{}", self.next_id);
+        let line = render_request(&Envelope { id: id.clone(), req });
+        self.writer
+            .write_all(line.as_bytes())
+            .and_then(|_| self.writer.write_all(b"\n"))
+            .map_err(|e| format!("send request: {e}"))?;
+        Ok(id)
+    }
+
+    fn recv(&mut self) -> Result<Response, String> {
+        let mut line = String::new();
+        match self.reader.read_line(&mut line) {
+            Ok(0) => Err("server closed the connection".into()),
+            Ok(_) => parse_response(line.trim_end()),
+            Err(e) => Err(format!("read response: {e}")),
+        }
+    }
+
+    /// Liveness probe: `Ok` iff the server answered `pong`.
+    pub fn ping(&mut self) -> Result<(), String> {
+        self.send(Request::Ping)?;
+        match self.recv()? {
+            Response::Pong { .. } => Ok(()),
+            Response::Error { message, .. } => Err(message),
+            other => Err(format!("expected pong, got {other:?}")),
+        }
+    }
+
+    /// Fetch the server's cumulative dedupe/GC counters.
+    pub fn stats(&mut self) -> Result<Stats, String> {
+        self.send(Request::Stats)?;
+        match self.recv()? {
+            Response::Stats { stats, .. } => Ok(stats),
+            Response::Error { message, .. } => Err(message),
+            other => Err(format!("expected stats, got {other:?}")),
+        }
+    }
+
+    /// Ask the server to drain and exit; `Ok` once acknowledged.
+    pub fn shutdown_server(&mut self) -> Result<(), String> {
+        self.send(Request::Shutdown)?;
+        match self.recv()? {
+            Response::ShuttingDown { .. } => Ok(()),
+            Response::Error { message, .. } => Err(message),
+            other => Err(format!("expected shutdown ack, got {other:?}")),
+        }
+    }
+
+    /// Submit a sweep and stream its results: `on_job` fires once per
+    /// retired job, in completion order. Returns the server's terminal
+    /// accounting. Any `error` line — including a mid-stream job
+    /// failure — ends the request as `Err`.
+    pub fn submit_sweep(
+        &mut self,
+        req: &SweepRequest,
+        on_job: &mut dyn FnMut(&JobLine),
+    ) -> Result<Counts, String> {
+        self.submit(Request::Sweep(req.clone()), on_job)
+    }
+
+    /// [`Client::submit_sweep`] for a design-space request.
+    pub fn submit_dse(
+        &mut self,
+        req: &DseRequest,
+        on_job: &mut dyn FnMut(&JobLine),
+    ) -> Result<Counts, String> {
+        self.submit(Request::Dse(req.clone()), on_job)
+    }
+
+    fn submit(
+        &mut self,
+        req: Request,
+        on_job: &mut dyn FnMut(&JobLine),
+    ) -> Result<Counts, String> {
+        let id = self.send(req)?;
+        loop {
+            match self.recv()? {
+                Response::Accepted { .. } => {}
+                Response::Job { id: rid, job } => {
+                    if rid == id {
+                        on_job(&job);
+                    }
+                }
+                Response::Done { id: rid, counts } if rid == id => return Ok(counts),
+                Response::Error { message, .. } => return Err(message),
+                other => return Err(format!("unexpected response {other:?}")),
+            }
+        }
+    }
+}

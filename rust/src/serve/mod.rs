@@ -1,0 +1,396 @@
+//! `sve serve`: the long-running sweep service (ROADMAP item 3).
+//!
+//! A [`Server`] listens on a loopback TCP socket and speaks the
+//! line-delimited JSON protocol of [`proto`]: clients submit
+//! sweep/DSE requests (the JSON spelling of
+//! [`crate::request::SweepRequest`] / [`crate::request::DseRequest`]),
+//! the server expands each into the same deterministic job matrix the
+//! batch coordinator uses ([`crate::coordinator::job_matrix`]), runs
+//! the jobs through the dedupe [`hub::Hub`], and streams per-job
+//! results back as they retire. TCP on `127.0.0.1` is the one
+//! std-only transport that works identically everywhere the simulator
+//! builds; the protocol itself is transport-agnostic bytes.
+//!
+//! The contracts, in one place:
+//!
+//! * **Dedupe** — a job requested by two clients simulates once; the
+//!   second requester adopts the first's result (in-flight or
+//!   retired). Counted per request as `simulated`/`deduped`/
+//!   `reloaded` on the terminal `done` line.
+//! * **Robustness** — a malformed request line gets a structured
+//!   `error` response and the connection stays usable; a request
+//!   expanding past the per-request job budget is refused up front; a
+//!   panicking job becomes a per-job error response, never a server
+//!   crash; a client disconnecting mid-stream stops its own workers
+//!   (in-flight jobs still publish to the hub for everyone else).
+//! * **Graceful shutdown** — on a `shutdown` request (or
+//!   [`Server::request_shutdown`]): stop accepting connections,
+//!   refuse new sweep/dse requests, let streams already accepted run
+//!   to their `done` line, GC the cache, return from [`Server::run`]
+//!   so the process can exit 0.
+//! * **Cache lifecycle** — after every request the on-disk job store
+//!   is garbage-collected down to `cache_bytes` (oldest mtime first;
+//!   reload hits re-warm their file; in-flight keys are never
+//!   evicted).
+
+pub mod client;
+pub mod hub;
+pub mod proto;
+
+pub use client::Client;
+
+use std::io::{BufRead, BufReader, ErrorKind, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::coordinator::{self, job_matrix};
+use crate::exec::Engine;
+use crate::request::{DseRequest, ServeOpts, SweepRequest};
+use crate::uarch::{UarchConfig, UarchVariant};
+use hub::{Hub, Source, Stats};
+use proto::{Counts, JobLine, Request, Response};
+
+/// How a [`Server`] runs jobs and manages its store.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ServerConfig {
+    /// Job-store directory (shared with `sve sweep --out` runs).
+    pub out_dir: PathBuf,
+    /// Worker threads per request; `0` = one per CPU.
+    pub jobs: usize,
+    /// On-disk cache budget in bytes; `None` disables GC.
+    pub cache_bytes: Option<u64>,
+    /// Refuse requests expanding to more jobs than this.
+    pub max_request_jobs: usize,
+    /// Functional engine for every job (results are bit-identical on
+    /// either engine, so this is a host-speed knob, not a semantic
+    /// one).
+    pub engine: Engine,
+}
+
+impl Default for ServerConfig {
+    fn default() -> ServerConfig {
+        ServerConfig {
+            out_dir: PathBuf::from("reports"),
+            jobs: 0,
+            cache_bytes: None,
+            max_request_jobs: 4096,
+            engine: Engine::default(),
+        }
+    }
+}
+
+impl ServerConfig {
+    /// Lower the parsed `sve serve` CLI options into a config.
+    pub fn from_opts(o: &ServeOpts) -> ServerConfig {
+        ServerConfig {
+            out_dir: o.out.clone(),
+            jobs: o.jobs,
+            cache_bytes: o.cache_bytes,
+            max_request_jobs: o.max_request_jobs,
+            engine: if o.no_trace { Engine::Baseline } else { Engine::Trace },
+        }
+    }
+}
+
+/// State shared by the accept loop and every connection handler.
+struct Shared {
+    hub: Hub,
+    jobs: usize,
+    max_request_jobs: usize,
+    shutdown: AtomicBool,
+}
+
+/// The long-running sweep service. Bind, then [`Server::run`] until a
+/// shutdown request arrives.
+///
+/// ```no_run
+/// use sve_repro::serve::{Server, ServerConfig};
+/// let server = Server::bind("127.0.0.1:7878", ServerConfig::default()).unwrap();
+/// println!("listening on {}", server.local_addr().unwrap());
+/// server.run().unwrap(); // returns after a shutdown request drains
+/// ```
+pub struct Server {
+    listener: TcpListener,
+    shared: Arc<Shared>,
+}
+
+impl Server {
+    /// Bind `addr` (e.g. `127.0.0.1:7878`; port `0` picks a free
+    /// port) and open the job store. No connection is accepted until
+    /// [`Server::run`].
+    pub fn bind(addr: &str, cfg: ServerConfig) -> Result<Server, String> {
+        let listener = TcpListener::bind(addr).map_err(|e| format!("bind {addr}: {e}"))?;
+        listener
+            .set_nonblocking(true)
+            .map_err(|e| format!("bind {addr}: set_nonblocking: {e}"))?;
+        let hub = Hub::open(&cfg.out_dir, cfg.engine, cfg.cache_bytes)?;
+        let shared = Arc::new(Shared {
+            hub,
+            jobs: cfg.jobs,
+            max_request_jobs: cfg.max_request_jobs,
+            shutdown: AtomicBool::new(false),
+        });
+        Ok(Server { listener, shared })
+    }
+
+    /// The bound address (useful with port `0`).
+    pub fn local_addr(&self) -> std::io::Result<SocketAddr> {
+        self.listener.local_addr()
+    }
+
+    /// Flip the shutdown flag from outside the protocol (tests, signal
+    /// handlers). Equivalent to a client `shutdown` request.
+    pub fn request_shutdown(&self) {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+    }
+
+    /// Cumulative hub counters (also served by the `stats` request).
+    pub fn stats(&self) -> Stats {
+        self.shared.hub.stats()
+    }
+
+    /// Accept and serve connections until shutdown, then drain: every
+    /// stream already accepted runs to its terminal line before this
+    /// returns. `Ok(())` is the graceful path — the caller exits 0.
+    pub fn run(&self) -> Result<(), String> {
+        let mut handles = Vec::new();
+        loop {
+            if self.shared.shutdown.load(Ordering::SeqCst) {
+                break;
+            }
+            match self.listener.accept() {
+                Ok((stream, _peer)) => {
+                    let shared = Arc::clone(&self.shared);
+                    handles.push(std::thread::spawn(move || handle_connection(stream, shared)));
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                    std::thread::sleep(Duration::from_millis(20));
+                }
+                Err(e) if e.kind() == ErrorKind::Interrupted => {}
+                Err(e) => return Err(format!("accept: {e}")),
+            }
+            handles.retain(|h: &std::thread::JoinHandle<()>| !h.is_finished());
+        }
+        // drain: handlers see the flag, finish in-flight streams, exit
+        for h in handles {
+            let _ = h.join();
+        }
+        let _ = self.shared.hub.gc();
+        Ok(())
+    }
+}
+
+/// Write one response line; `false` means the client is gone.
+fn send(writer: &Mutex<TcpStream>, resp: &Response) -> bool {
+    let line = proto::render_response(resp);
+    let mut w = writer.lock().unwrap();
+    w.write_all(line.as_bytes()).and_then(|_| w.write_all(b"\n")).is_ok()
+}
+
+/// One line read from a connection.
+enum ReadOutcome {
+    /// A complete (or final unterminated) line is in the buffer.
+    Line,
+    /// The client closed (EOF or a hard socket error).
+    Gone,
+    /// The server is shutting down; abandon the idle connection.
+    Draining,
+}
+
+/// Read one line, waking every read-timeout tick to check the shutdown
+/// flag. Partial bytes survive across ticks inside `line` (the
+/// protocol is ASCII JSON, so a timeout can never split a codepoint).
+fn read_line(
+    reader: &mut BufReader<TcpStream>,
+    line: &mut String,
+    shutdown: &AtomicBool,
+) -> ReadOutcome {
+    loop {
+        match reader.read_line(line) {
+            Ok(0) => return ReadOutcome::Gone,
+            Ok(_) => return ReadOutcome::Line,
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    ErrorKind::WouldBlock | ErrorKind::TimedOut | ErrorKind::Interrupted
+                ) =>
+            {
+                if shutdown.load(Ordering::SeqCst) {
+                    return ReadOutcome::Draining;
+                }
+            }
+            Err(_) => return ReadOutcome::Gone,
+        }
+    }
+}
+
+fn handle_connection(stream: TcpStream, shared: Arc<Shared>) {
+    // the read timeout is the shutdown-poll tick, not a deadline
+    if stream.set_read_timeout(Some(Duration::from_millis(200))).is_err() {
+        return;
+    }
+    let Ok(writer) = stream.try_clone() else { return };
+    let writer = Mutex::new(writer);
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    loop {
+        line.clear();
+        match read_line(&mut reader, &mut line, &shared.shutdown) {
+            ReadOutcome::Line => {}
+            ReadOutcome::Gone | ReadOutcome::Draining => return,
+        }
+        let text = line.trim();
+        if text.is_empty() {
+            continue;
+        }
+        let env = match proto::parse_request(text) {
+            Ok(env) => env,
+            Err(message) => {
+                // a client bug costs one request, never the connection
+                if !send(&writer, &Response::Error { id: String::new(), message }) {
+                    return;
+                }
+                continue;
+            }
+        };
+        let alive = match env.req {
+            Request::Ping => send(&writer, &Response::Pong { id: env.id }),
+            Request::Stats => {
+                send(&writer, &Response::Stats { id: env.id, stats: shared.hub.stats() })
+            }
+            Request::Shutdown => {
+                shared.shutdown.store(true, Ordering::SeqCst);
+                send(&writer, &Response::ShuttingDown { id: env.id });
+                return;
+            }
+            Request::Sweep(req) => serve_matrix(&writer, &shared, &env.id, &req, None),
+            Request::Dse(req) => {
+                serve_matrix(&writer, &shared, &env.id, &req.sweep, Some(&req))
+            }
+        };
+        if !alive {
+            return;
+        }
+    }
+}
+
+/// Expand, validate, and stream one sweep/dse request. Returns whether
+/// the client is still connected.
+fn serve_matrix(
+    writer: &Mutex<TcpStream>,
+    shared: &Shared,
+    id: &str,
+    sweep: &SweepRequest,
+    dse: Option<&DseRequest>,
+) -> bool {
+    let refuse = |message: String| {
+        send(writer, &Response::Error { id: id.to_string(), message })
+    };
+    if shared.shutdown.load(Ordering::SeqCst) {
+        return refuse("server is shutting down; request refused".into());
+    }
+    let variants = match dse {
+        Some(d) => match d.variants() {
+            Ok(v) => v,
+            Err(e) => return refuse(e),
+        },
+        None => vec![UarchVariant { name: "table2".into(), cfg: UarchConfig::default() }],
+    };
+    // same matrix validation (and wording) as the batch coordinator;
+    // vl legality and benchmark names were already checked at parse
+    if sweep.vls.is_empty() {
+        return refuse("sweep needs at least one vector length".into());
+    }
+    if sweep.benches.is_empty() {
+        return refuse("sweep needs at least one benchmark".into());
+    }
+    let jobs = job_matrix(&sweep.benches, &sweep.vls, variants.len());
+    if jobs.len() > shared.max_request_jobs {
+        return refuse(format!(
+            "request expands to {} jobs, over the per-request budget of {}",
+            jobs.len(),
+            shared.max_request_jobs
+        ));
+    }
+    if !send(writer, &Response::Accepted { id: id.to_string(), jobs: jobs.len() }) {
+        return false;
+    }
+
+    // shard this request's matrix exactly like the batch coordinator:
+    // self-scheduling workers over an atomic cursor. The hub dedupes
+    // against every other concurrent request.
+    let simulated = AtomicUsize::new(0);
+    let deduped = AtomicUsize::new(0);
+    let reloaded = AtomicUsize::new(0);
+    let gone = AtomicBool::new(false);
+    let failed = AtomicBool::new(false);
+    let cursor = AtomicUsize::new(0);
+    let nworkers = coordinator::worker_count(shared.jobs, jobs.len());
+    std::thread::scope(|s| {
+        for _ in 0..nworkers {
+            s.spawn(|| loop {
+                if gone.load(Ordering::SeqCst) || failed.load(Ordering::SeqCst) {
+                    break;
+                }
+                let n = cursor.fetch_add(1, Ordering::Relaxed);
+                if n >= jobs.len() {
+                    break;
+                }
+                let job = jobs[n];
+                let variant = &variants[job.variant];
+                let got = shared.hub.obtain(job.bench, job.isa, &variant.cfg);
+                match got.source {
+                    Source::Simulated => simulated.fetch_add(1, Ordering::Relaxed),
+                    Source::Deduped => deduped.fetch_add(1, Ordering::Relaxed),
+                    Source::Reloaded => reloaded.fetch_add(1, Ordering::Relaxed),
+                };
+                let resp = match got.result {
+                    Ok(record) => Response::Job {
+                        id: id.to_string(),
+                        job: JobLine {
+                            variant: variant.name.clone(),
+                            source: got.source,
+                            key: got.key,
+                            record,
+                        },
+                    },
+                    Err(message) => {
+                        // a failed job fails the request (like a batch
+                        // sweep) but other workers' jobs still publish
+                        failed.store(true, Ordering::SeqCst);
+                        Response::Error { id: id.to_string(), message }
+                    }
+                };
+                if !send(writer, &resp) {
+                    // client hung up: stop pulling new jobs; jobs other
+                    // requests still want stay obtainable via the hub
+                    gone.store(true, Ordering::SeqCst);
+                }
+                if failed.load(Ordering::SeqCst) {
+                    break;
+                }
+            });
+        }
+    });
+    let mut alive = !gone.load(Ordering::SeqCst);
+    if alive && !failed.load(Ordering::SeqCst) {
+        alive = send(
+            writer,
+            &Response::Done {
+                id: id.to_string(),
+                counts: Counts {
+                    jobs: jobs.len(),
+                    simulated: simulated.load(Ordering::Relaxed),
+                    deduped: deduped.load(Ordering::Relaxed),
+                    reloaded: reloaded.load(Ordering::Relaxed),
+                },
+            },
+        );
+    }
+    // cache lifecycle: enforce the budget once the burst is over
+    let _ = shared.hub.gc();
+    alive && !failed.load(Ordering::SeqCst)
+}

@@ -1,0 +1,380 @@
+//! The serve wire protocol: line-delimited JSON over a socket.
+//!
+//! Each line is one JSON document. Requests carry schema
+//! [`REQ_SCHEMA`], responses [`RESP_SCHEMA`]; both are rendered with
+//! the compact writer ([`crate::report::json::Json::render`]), which
+//! escapes embedded newlines, so one document is always exactly one
+//! line. The sweep/dse request bodies are the JSON spelling of
+//! [`SweepRequest`]/[`DseRequest`] — the CLI and the socket share one
+//! schema by construction (see [`crate::request`]).
+//!
+//! Request envelope:
+//!
+//! ```json
+//! {"schema":"sve-repro/serve-req/v1","id":"r1","kind":"sweep",
+//!  "request":{"vls":[128,256],"benches":["haccmk"]}}
+//! ```
+//!
+//! `kind` is one of `sweep`, `dse`, `ping`, `stats`, `shutdown`;
+//! `request` (sweep/dse only) may omit any field to take the CLI
+//! default. A sweep/dse stream answers with one `accepted` line, one
+//! `job` line per matrix cell **as each job retires** (order follows
+//! completion, not the matrix), and one terminal `done` line; every
+//! other kind answers with a single line. Any malformed or
+//! unsupported line produces an `error` response and leaves the
+//! connection usable — a client bug costs one request, never the
+//! server.
+
+use crate::report::json::Json;
+use crate::report::store::{record_from_json, record_to_json};
+use crate::request::{DseRequest, SweepRequest};
+use crate::serve::hub::{Source, Stats};
+
+/// Schema tag on every request line.
+pub const REQ_SCHEMA: &str = "sve-repro/serve-req/v1";
+/// Schema tag on every response line.
+pub const RESP_SCHEMA: &str = "sve-repro/serve-resp/v1";
+
+/// What a request line asks for.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Request {
+    /// Run a (benchmark × {NEON} ∪ {SVE@vl}) matrix at table2.
+    Sweep(SweepRequest),
+    /// Run the matrix across µarch variants.
+    Dse(DseRequest),
+    /// Liveness probe.
+    Ping,
+    /// Cumulative server counters.
+    Stats,
+    /// Drain in-flight work, refuse new work, exit 0.
+    Shutdown,
+}
+
+/// A request plus its client-chosen correlation id (echoed verbatim on
+/// every response line the request produces).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Envelope {
+    pub id: String,
+    pub req: Request,
+}
+
+/// One streamed job result.
+#[derive(Clone, Debug)]
+pub struct JobLine {
+    /// µarch variant display name (`table2` for plain sweeps).
+    pub variant: String,
+    /// Where the record came from (dedupe accounting).
+    pub source: Source,
+    /// The job's content-address in the store.
+    pub key: String,
+    /// The record itself, in the job-file schema.
+    pub record: crate::coordinator::RunRecord,
+}
+
+/// The terminal accounting line of a sweep/dse stream.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Counts {
+    pub jobs: usize,
+    pub simulated: usize,
+    pub deduped: usize,
+    pub reloaded: usize,
+}
+
+/// One response line.
+#[derive(Clone, Debug)]
+pub enum Response {
+    /// The request parsed and fits the budget; `jobs` results follow.
+    Accepted { id: String, jobs: usize },
+    /// One retired job.
+    Job { id: String, job: JobLine },
+    /// End of a sweep/dse stream, with its dedupe accounting.
+    Done { id: String, counts: Counts },
+    /// The request failed (parse error, budget, drain, or a job
+    /// failure); terminal for the request, not the connection.
+    Error { id: String, message: String },
+    /// Answer to `ping`.
+    Pong { id: String },
+    /// Answer to `stats`.
+    Stats { id: String, stats: Stats },
+    /// Answer to `shutdown`: the server is draining.
+    ShuttingDown { id: String },
+}
+
+/// Render a request envelope as one wire line (no trailing newline).
+pub fn render_request(env: &Envelope) -> String {
+    let (kind, body) = match &env.req {
+        Request::Sweep(r) => ("sweep", Some(r.to_json())),
+        Request::Dse(r) => ("dse", Some(r.to_json())),
+        Request::Ping => ("ping", None),
+        Request::Stats => ("stats", None),
+        Request::Shutdown => ("shutdown", None),
+    };
+    let mut fields = vec![
+        ("schema".into(), Json::str(REQ_SCHEMA)),
+        ("id".into(), Json::str(&env.id)),
+        ("kind".into(), Json::str(kind)),
+    ];
+    if let Some(body) = body {
+        fields.push(("request".into(), body));
+    }
+    Json::Obj(fields).render()
+}
+
+/// Parse one request line. Every failure is a `String` the server
+/// wraps into an `error` response — parsing never panics.
+pub fn parse_request(line: &str) -> Result<Envelope, String> {
+    let v = Json::parse(line).map_err(|e| format!("malformed request: {e}"))?;
+    let schema = v
+        .get("schema")
+        .and_then(Json::as_str)
+        .ok_or("malformed request: missing 'schema'")?;
+    if schema != REQ_SCHEMA {
+        return Err(format!("unsupported request schema '{schema}' (expected {REQ_SCHEMA})"));
+    }
+    let id = v.get("id").and_then(Json::as_str).unwrap_or("").to_string();
+    let kind = v
+        .get("kind")
+        .and_then(Json::as_str)
+        .ok_or("malformed request: missing 'kind'")?;
+    let empty = Json::Obj(Vec::new());
+    let body = v.get("request").unwrap_or(&empty);
+    let req = match kind {
+        "sweep" => Request::Sweep(SweepRequest::from_json(body)?),
+        "dse" => Request::Dse(DseRequest::from_json(body)?),
+        "ping" => Request::Ping,
+        "stats" => Request::Stats,
+        "shutdown" => Request::Shutdown,
+        other => return Err(format!("unknown request kind '{other}'")),
+    };
+    Ok(Envelope { id, req })
+}
+
+fn head(kind: &str, id: &str) -> Vec<(String, Json)> {
+    vec![
+        ("schema".into(), Json::str(RESP_SCHEMA)),
+        ("type".into(), Json::str(kind)),
+        ("id".into(), Json::str(id)),
+    ]
+}
+
+/// Render a response as one wire line (no trailing newline).
+pub fn render_response(resp: &Response) -> String {
+    let fields = match resp {
+        Response::Accepted { id, jobs } => {
+            let mut f = head("accepted", id);
+            f.push(("jobs".into(), Json::u64(*jobs as u64)));
+            f
+        }
+        Response::Job { id, job } => {
+            let mut f = head("job", id);
+            f.push(("variant".into(), Json::str(&job.variant)));
+            f.push(("source".into(), Json::str(job.source.as_str())));
+            f.push(("record".into(), record_to_json(&job.key, &job.record)));
+            f
+        }
+        Response::Done { id, counts } => {
+            let mut f = head("done", id);
+            f.push(("jobs".into(), Json::u64(counts.jobs as u64)));
+            f.push(("simulated".into(), Json::u64(counts.simulated as u64)));
+            f.push(("deduped".into(), Json::u64(counts.deduped as u64)));
+            f.push(("reloaded".into(), Json::u64(counts.reloaded as u64)));
+            f
+        }
+        Response::Error { id, message } => {
+            let mut f = head("error", id);
+            f.push(("message".into(), Json::str(message)));
+            f
+        }
+        Response::Pong { id } => head("pong", id),
+        Response::Stats { id, stats } => {
+            let mut f = head("stats", id);
+            f.push(("simulated".into(), Json::u64(stats.simulated)));
+            f.push(("deduped".into(), Json::u64(stats.deduped)));
+            f.push(("reloaded".into(), Json::u64(stats.reloaded)));
+            f.push(("evicted".into(), Json::u64(stats.evicted)));
+            f
+        }
+        Response::ShuttingDown { id } => head("shutting-down", id),
+    };
+    Json::Obj(fields).render()
+}
+
+/// Parse one response line (the client half of the protocol).
+pub fn parse_response(line: &str) -> Result<Response, String> {
+    let v = Json::parse(line).map_err(|e| format!("malformed response: {e}"))?;
+    let schema = v
+        .get("schema")
+        .and_then(Json::as_str)
+        .ok_or("malformed response: missing 'schema'")?;
+    if schema != RESP_SCHEMA {
+        return Err(format!("unsupported response schema '{schema}' (expected {RESP_SCHEMA})"));
+    }
+    let id = v.get("id").and_then(Json::as_str).unwrap_or("").to_string();
+    let kind = v
+        .get("type")
+        .and_then(Json::as_str)
+        .ok_or("malformed response: missing 'type'")?;
+    let num = |key: &str| -> Result<u64, String> {
+        v.get(key)
+            .and_then(Json::as_u64)
+            .ok_or_else(|| format!("malformed response: missing '{key}'"))
+    };
+    match kind {
+        "accepted" => Ok(Response::Accepted { id, jobs: num("jobs")? as usize }),
+        "job" => {
+            let rec = v.get("record").ok_or("malformed response: missing 'record'")?;
+            let record =
+                record_from_json(rec).ok_or("malformed response: bad job record")?;
+            let key = rec
+                .get("key")
+                .and_then(Json::as_str)
+                .ok_or("malformed response: record missing 'key'")?
+                .to_string();
+            let variant = v
+                .get("variant")
+                .and_then(Json::as_str)
+                .ok_or("malformed response: missing 'variant'")?
+                .to_string();
+            let source = v
+                .get("source")
+                .and_then(Json::as_str)
+                .and_then(Source::parse)
+                .ok_or("malformed response: bad 'source'")?;
+            Ok(Response::Job { id, job: JobLine { variant, source, key, record } })
+        }
+        "done" => Ok(Response::Done {
+            id,
+            counts: Counts {
+                jobs: num("jobs")? as usize,
+                simulated: num("simulated")? as usize,
+                deduped: num("deduped")? as usize,
+                reloaded: num("reloaded")? as usize,
+            },
+        }),
+        "error" => {
+            let message = v
+                .get("message")
+                .and_then(Json::as_str)
+                .ok_or("malformed response: missing 'message'")?
+                .to_string();
+            Ok(Response::Error { id, message })
+        }
+        "pong" => Ok(Response::Pong { id }),
+        "stats" => Ok(Response::Stats {
+            id,
+            stats: Stats {
+                simulated: num("simulated")?,
+                deduped: num("deduped")?,
+                reloaded: num("reloaded")?,
+                evicted: num("evicted")?,
+            },
+        }),
+        "shutting-down" => Ok(Response::ShuttingDown { id }),
+        other => Err(format!("unknown response type '{other}'")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::Isa;
+
+    #[test]
+    fn request_roundtrip_all_kinds() {
+        let args: Vec<String> =
+            ["--vls", "128,256", "--benches", "haccmk"].iter().map(|s| s.to_string()).collect();
+        let sweep = SweepRequest::from_cli(&args).unwrap();
+        let dse_args: Vec<String> =
+            ["--uarch", "table2,small-core"].iter().map(|s| s.to_string()).collect();
+        let dse = DseRequest::from_cli(&dse_args).unwrap();
+        for req in [
+            Request::Sweep(sweep),
+            Request::Dse(dse),
+            Request::Ping,
+            Request::Stats,
+            Request::Shutdown,
+        ] {
+            let env = Envelope { id: "r7".into(), req };
+            let line = render_request(&env);
+            assert!(!line.contains('\n'), "one document, one line: {line}");
+            assert_eq!(parse_request(&line).unwrap(), env);
+        }
+    }
+
+    #[test]
+    fn request_parse_rejects_garbage_without_panicking() {
+        for bad in [
+            "not json at all",
+            "{}",
+            r#"{"schema":"sve-repro/serve-req/v0","kind":"ping"}"#,
+            r#"{"schema":"sve-repro/serve-req/v1","kind":"frobnicate"}"#,
+            r#"{"schema":"sve-repro/serve-req/v1","kind":"sweep","request":{"vls":[192]}}"#,
+            r#"{"schema":"sve-repro/serve-req/v1","kind":"sweep","request":{"benches":["x"]}}"#,
+        ] {
+            assert!(parse_request(bad).is_err(), "must reject: {bad}");
+        }
+    }
+
+    #[test]
+    fn response_roundtrip_carries_records_bit_exactly() {
+        let record = crate::coordinator::run_one("haccmk", Isa::Sve(128)).unwrap();
+        let resp = Response::Job {
+            id: "r1".into(),
+            job: JobLine {
+                variant: "table2".into(),
+                source: Source::Simulated,
+                key: "deadbeefdeadbeef".into(),
+                record: record.clone(),
+            },
+        };
+        let line = render_response(&resp);
+        assert!(!line.contains('\n'));
+        match parse_response(&line).unwrap() {
+            Response::Job { id, job } => {
+                assert_eq!(id, "r1");
+                assert_eq!(job.variant, "table2");
+                assert_eq!(job.source, Source::Simulated);
+                assert_eq!(job.key, "deadbeefdeadbeef");
+                assert_eq!(job.record.cycles, record.cycles);
+                assert_eq!(job.record.insts, record.insts);
+                assert_eq!(
+                    job.record.vector_fraction.to_bits(),
+                    record.vector_fraction.to_bits()
+                );
+                assert_eq!(job.record.ipc.to_bits(), record.ipc.to_bits());
+                assert_eq!(job.record.counters, record.counters);
+            }
+            other => panic!("expected a job response, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn response_roundtrip_scalar_kinds() {
+        let counts = Counts { jobs: 6, simulated: 3, deduped: 2, reloaded: 1 };
+        match parse_response(&render_response(&Response::Done { id: "a".into(), counts }))
+            .unwrap()
+        {
+            Response::Done { id, counts: c } => {
+                assert_eq!(id, "a");
+                assert_eq!(c, counts);
+            }
+            other => panic!("{other:?}"),
+        }
+        let stats = Stats { simulated: 10, deduped: 20, reloaded: 5, evicted: 2 };
+        match parse_response(&render_response(&Response::Stats { id: "s".into(), stats }))
+            .unwrap()
+        {
+            Response::Stats { stats: s, .. } => assert_eq!(s, stats),
+            other => panic!("{other:?}"),
+        }
+        for resp in [
+            Response::Pong { id: "p".into() },
+            Response::ShuttingDown { id: "q".into() },
+            Response::Error { id: "e".into(), message: "nope".into() },
+            Response::Accepted { id: "x".into(), jobs: 42 },
+        ] {
+            let line = render_response(&resp);
+            assert!(parse_response(&line).is_ok(), "{line}");
+        }
+    }
+}

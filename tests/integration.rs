@@ -290,6 +290,13 @@ fn cli_usage_errors_exit_2_without_panicking() {
             &["report", "--compare", "a.json", "b.json", "--fail-on-regress"][..],
             "--fail-on-regress needs a value",
         ),
+        (&["serve", "--listen"][..], "--listen needs a value"),
+        (&["serve", "--cache-bytes", "lots"][..], "not a number"),
+        (&["serve", "--max-request-jobs", "many"][..], "not a number"),
+        (&["submit", "--addr"][..], "--addr needs a value"),
+        (&["submit", "--vls", "128,xyz"][..], "not a number"),
+        (&["submit", "--uarch", "table2"][..], "--uarch requires --dse"),
+        (&["submit", "--dse", "--uarch", "no-such-core"][..], "unknown variant"),
     ] {
         let out = sve(args);
         assert_eq!(
@@ -553,6 +560,27 @@ fn cli_dse_writes_artifacts_and_reports_cache_counts() {
     let stdout = String::from_utf8_lossy(&out.stdout);
     assert!(stdout.contains("2 jobs: 0 simulated, 2 reloaded"), "{stdout}");
     let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// `sve submit` against a server that is not there: a runtime failure
+/// (exit 1), not a usage error — and definitely not a panic.
+#[test]
+fn cli_submit_to_absent_server_exits_1() {
+    // grab a loopback port and release it so nothing is listening there
+    let addr = {
+        let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        l.local_addr().unwrap().to_string()
+    };
+    let out = sve(&["submit", "--addr", &addr, "--ping"]);
+    assert_eq!(
+        out.status.code(),
+        Some(1),
+        "stderr: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("connect"), "{stderr}");
+    assert!(!stderr.contains("panicked"), "{stderr}");
 }
 
 #[test]

@@ -1,0 +1,233 @@
+//! End-to-end tests for `sve serve` (ISSUE 8 tentpole): concurrent
+//! clients with overlapping matrices dedupe against one hub and still
+//! see batch-identical records; a mid-stream disconnect never wedges
+//! the server; malformed and over-budget requests get structured
+//! errors on a connection that stays usable; the cache GC enforces its
+//! byte budget; shutdown drains and `Server::run` returns `Ok`.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::thread;
+
+use sve_repro::coordinator::run_one;
+use sve_repro::exec::Engine;
+use sve_repro::request::SweepRequest;
+use sve_repro::serve::proto::{self, Envelope, JobLine, Request, Response};
+use sve_repro::serve::{Client, Server, ServerConfig};
+
+fn temp_out(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("sve-serve-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// Bind on an ephemeral port and run the accept loop in a thread.
+fn start(
+    out: &Path,
+    cache_bytes: Option<u64>,
+    max_request_jobs: usize,
+) -> (Arc<Server>, String, thread::JoinHandle<Result<(), String>>) {
+    let cfg = ServerConfig {
+        out_dir: out.to_path_buf(),
+        jobs: 2,
+        cache_bytes,
+        max_request_jobs,
+        engine: Engine::default(),
+    };
+    let server = Arc::new(Server::bind("127.0.0.1:0", cfg).unwrap());
+    let addr = server.local_addr().unwrap().to_string();
+    let run = Arc::clone(&server);
+    let handle = thread::spawn(move || run.run());
+    (server, addr, handle)
+}
+
+/// A sweep request exactly as `sve submit --vls .. --benches ..`
+/// would build it.
+fn sweep(vls: &str, benches: &str) -> SweepRequest {
+    let args: Vec<String> =
+        ["--vls", vls, "--benches", benches].iter().map(|s| s.to_string()).collect();
+    SweepRequest::from_cli(&args).unwrap()
+}
+
+#[test]
+fn overlapping_clients_dedupe_and_match_solo_runs() {
+    let out = temp_out("overlap");
+    let (_server, addr, handle) = start(&out, None, 4096);
+    // A and B overlap on haccmk x {neon, sve128, sve256}: 12 requested
+    // cells, 9 unique ones
+    let a_req = sweep("128,256", "stream_triad,haccmk");
+    let b_req = sweep("128,256", "haccmk,graph500");
+    let run_client = |req: SweepRequest, addr: String| {
+        thread::spawn(move || {
+            let mut client = Client::connect(&addr).unwrap();
+            let mut jobs: Vec<JobLine> = Vec::new();
+            let counts = client.submit_sweep(&req, &mut |j| jobs.push(j.clone())).unwrap();
+            (jobs, counts)
+        })
+    };
+    let ta = run_client(a_req, addr.clone());
+    let tb = run_client(b_req, addr.clone());
+    let (jobs_a, counts_a) = ta.join().unwrap();
+    let (jobs_b, counts_b) = tb.join().unwrap();
+    assert_eq!(counts_a.jobs, 6);
+    assert_eq!(counts_b.jobs, 6);
+    assert_eq!(jobs_a.len(), 6);
+    assert_eq!(jobs_b.len(), 6);
+    assert_eq!(counts_a.simulated + counts_b.simulated, 9, "each unique cell runs once");
+    assert_eq!(counts_a.deduped + counts_b.deduped, 3, "the shared cells dedupe");
+    assert_eq!(counts_a.reloaded + counts_b.reloaded, 0, "nothing was on disk yet");
+    // every streamed record is bit-identical to a solo batch run
+    for job in jobs_a.iter().chain(jobs_b.iter()) {
+        let solo = run_one(job.record.bench, job.record.isa).unwrap();
+        assert_eq!(job.record.cycles, solo.cycles);
+        assert_eq!(job.record.insts, solo.insts);
+        assert_eq!(job.record.vector_fraction.to_bits(), solo.vector_fraction.to_bits());
+        assert_eq!(job.record.ipc.to_bits(), solo.ipc.to_bits());
+        assert_eq!(job.record.l1d_miss_rate.to_bits(), solo.l1d_miss_rate.to_bits());
+        assert_eq!(job.record.counters, solo.counters);
+        assert_eq!(job.record.vectorized, solo.vectorized);
+    }
+    // each client got its full matrix, one line per cell
+    for jobs in [&jobs_a, &jobs_b] {
+        let mut cells: Vec<(&str, String)> =
+            jobs.iter().map(|j| (j.record.bench, j.record.isa.label())).collect();
+        cells.sort();
+        cells.dedup();
+        assert_eq!(cells.len(), 6, "no duplicate or missing cells in one stream");
+    }
+    // protocol shutdown drains; run() takes the graceful exit path
+    let mut c = Client::connect(&addr).unwrap();
+    c.shutdown_server().unwrap();
+    assert_eq!(handle.join().unwrap(), Ok(()));
+    let _ = std::fs::remove_dir_all(&out);
+}
+
+#[test]
+fn mid_stream_disconnect_leaves_the_server_usable() {
+    let out = temp_out("disconnect");
+    let (_server, addr, handle) = start(&out, None, 4096);
+    // a rude client hangs up right after the accepted line
+    {
+        let mut stream = TcpStream::connect(&addr).unwrap();
+        let env = Envelope {
+            id: "rude".into(),
+            req: Request::Sweep(sweep("128,256,384", "stream_triad,haccmk")),
+        };
+        stream.write_all(proto::render_request(&env).as_bytes()).unwrap();
+        stream.write_all(b"\n").unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        match proto::parse_response(line.trim()).unwrap() {
+            Response::Accepted { jobs, .. } => assert_eq!(jobs, 8),
+            other => panic!("expected accepted, got {other:?}"),
+        }
+    }
+    // a well-behaved client then completes the same matrix in full
+    let mut client = Client::connect(&addr).unwrap();
+    let mut n = 0usize;
+    let counts = client
+        .submit_sweep(&sweep("128,256,384", "stream_triad,haccmk"), &mut |_| n += 1)
+        .unwrap();
+    assert_eq!(counts.jobs, 8);
+    assert_eq!(n, 8, "every cell streams to the surviving client");
+    assert_eq!(counts.simulated + counts.deduped + counts.reloaded, 8);
+    client.ping().unwrap();
+    client.shutdown_server().unwrap();
+    assert_eq!(handle.join().unwrap(), Ok(()));
+    let _ = std::fs::remove_dir_all(&out);
+}
+
+#[test]
+fn malformed_and_over_budget_requests_get_structured_errors() {
+    let out = temp_out("robust");
+    let (_server, addr, handle) = start(&out, None, 4);
+    // raw garbage: one error line, and the connection survives
+    let mut stream = TcpStream::connect(&addr).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut line = String::new();
+    stream.write_all(b"this is not json\n").unwrap();
+    reader.read_line(&mut line).unwrap();
+    match proto::parse_response(line.trim()).unwrap() {
+        Response::Error { message, .. } => {
+            assert!(message.contains("malformed"), "{message}")
+        }
+        other => panic!("expected error, got {other:?}"),
+    }
+    // same connection, wrong schema: another structured error
+    stream.write_all(br#"{"schema":"sve-repro/serve-req/v0","kind":"ping"}"#).unwrap();
+    stream.write_all(b"\n").unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    match proto::parse_response(line.trim()).unwrap() {
+        Response::Error { message, .. } => {
+            assert!(message.contains("unsupported request schema"), "{message}")
+        }
+        other => panic!("expected error, got {other:?}"),
+    }
+    // still the same connection: a real ping answers
+    let env = Envelope { id: "p1".into(), req: Request::Ping };
+    stream.write_all(proto::render_request(&env).as_bytes()).unwrap();
+    stream.write_all(b"\n").unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    assert!(matches!(proto::parse_response(line.trim()).unwrap(), Response::Pong { .. }));
+    drop(reader);
+    drop(stream);
+    // a matrix over the per-request budget (6 jobs > 4) is refused
+    // before any job runs...
+    let mut client = Client::connect(&addr).unwrap();
+    let err = client
+        .submit_sweep(&sweep("128,256", "stream_triad,haccmk"), &mut |_| {})
+        .unwrap_err();
+    assert!(err.contains("budget"), "{err}");
+    // ...and the refusal costs one request, not the connection
+    let counts = client.submit_sweep(&sweep("128", "stream_triad"), &mut |_| {}).unwrap();
+    assert_eq!(counts.jobs, 2);
+    client.shutdown_server().unwrap();
+    assert_eq!(handle.join().unwrap(), Ok(()));
+    let _ = std::fs::remove_dir_all(&out);
+}
+
+#[test]
+fn cache_gc_enforces_the_byte_budget_after_each_request() {
+    let out = temp_out("gc");
+    let (_server, addr, handle) = start(&out, Some(1), 4096);
+    let mut client = Client::connect(&addr).unwrap();
+    let counts = client.submit_sweep(&sweep("128", "stream_triad"), &mut |_| {}).unwrap();
+    assert_eq!(counts.simulated, 2);
+    // the post-request GC runs before the connection takes another
+    // request, so a ping round-trip orders this read after it
+    client.ping().unwrap();
+    let total: u64 = std::fs::read_dir(out.join("jobs"))
+        .unwrap()
+        .map(|e| e.unwrap().metadata().unwrap().len())
+        .sum();
+    assert!(total <= 1, "budget must hold after GC, got {total} bytes");
+    assert_eq!(client.stats().unwrap().evicted, 2);
+    client.shutdown_server().unwrap();
+    assert_eq!(handle.join().unwrap(), Ok(()));
+    let _ = std::fs::remove_dir_all(&out);
+}
+
+#[test]
+fn draining_server_refuses_new_sweeps_and_exits_cleanly() {
+    let out = temp_out("drain");
+    let (server, addr, handle) = start(&out, None, 4096);
+    let mut client = Client::connect(&addr).unwrap();
+    client.ping().unwrap(); // the connection is accepted and served
+    server.request_shutdown();
+    // the sweep is either refused with a drain error or the handler
+    // closes first — both count as "refuse new work"; the invariant is
+    // that no job runs and the server still exits 0
+    let err = client.submit_sweep(&sweep("128", "stream_triad"), &mut |_| {}).unwrap_err();
+    assert!(
+        err.contains("shutting down") || err.contains("closed") || err.contains("request"),
+        "{err}"
+    );
+    assert_eq!(handle.join().unwrap(), Ok(()));
+    assert_eq!(server.stats().simulated, 0, "no job may run after shutdown");
+    let _ = std::fs::remove_dir_all(&out);
+}
