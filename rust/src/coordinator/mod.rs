@@ -188,6 +188,10 @@ pub fn run_compiled_engine_with(
             mem_accesses: timing.l2_misses,
             mispredicts: timing.mispredicts,
             cracked_elems: timing.cracked_elems,
+            pf_issued: timing.pf_issued,
+            pf_useful: timing.pf_useful,
+            dram_channel_cycles: timing.dram_channel_cycles,
+            class_counts: timing.class_counts,
         },
     })
 }
@@ -698,6 +702,42 @@ mod tests {
         let sp = neon.cycles as f64 / sve.cycles as f64;
         assert!((0.95..1.05).contains(&sp), "pointer chase must not speed up: {sp:.3}");
         assert_eq!(sve.vector_fraction, 0.0);
+    }
+
+    #[test]
+    fn narrowing_dram_hurts_bandwidth_bound_kernels_most() {
+        // PR 9 acceptance: DRAM bandwidth is a shared finite resource,
+        // so squeezing it must slow the streaming copy *relatively*
+        // more than the compute-bound FMA kernel — while leaving every
+        // functional result untouched.
+        let run = |name: &'static str, bw: u64| {
+            let cfg =
+                UarchConfig { dram_bytes_per_cycle: bw, ..UarchConfig::default() };
+            let w = workloads::build(name);
+            let compiled = w.compile(Isa::Sve(256).target());
+            run_compiled_with(&w, &compiled, Isa::Sve(256), &cfg).unwrap()
+        };
+        let copy_wide = run("memcpy_like", 64);
+        let copy_narrow = run("memcpy_like", 4);
+        let fma_wide = run("haccmk", 64);
+        let fma_narrow = run("haccmk", 4);
+        // the bandwidth axis is timing-only
+        assert_eq!(copy_wide.insts, copy_narrow.insts);
+        assert_eq!(fma_wide.insts, fma_narrow.insts);
+        // narrowing never speeds anything up
+        assert!(copy_narrow.cycles >= copy_wide.cycles);
+        assert!(fma_narrow.cycles >= fma_wide.cycles);
+        // relative slowdowns compared exactly via u128 cross-products:
+        // copy_narrow/copy_wide > fma_narrow/fma_wide
+        assert!(
+            u128::from(copy_narrow.cycles) * u128::from(fma_wide.cycles)
+                > u128::from(fma_narrow.cycles) * u128::from(copy_wide.cycles),
+            "memcpy_like must suffer more than haccmk: copy {} -> {}, fma {} -> {}",
+            copy_wide.cycles,
+            copy_narrow.cycles,
+            fma_wide.cycles,
+            fma_narrow.cycles
+        );
     }
 
     #[test]

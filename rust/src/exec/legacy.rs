@@ -923,6 +923,139 @@ mod bitident {
         });
     }
 
+    // ---- PR-9 memory-model wall: timing knobs must be timing-only ----
+
+    /// The most aggressive memory configuration the CLI can express:
+    /// a hot prefetcher in front of a 1 B/cycle DRAM channel.
+    fn extreme_memory_cfg() -> crate::uarch::UarchConfig {
+        crate::uarch::UarchConfig {
+            pf_entries: 64,
+            pf_degree: 4,
+            dram_bytes_per_cycle: 1,
+            ..crate::uarch::UarchConfig::default()
+        }
+    }
+
+    /// Run `dec` under `cfg` with the timing pipeline attached,
+    /// recording the retire stream as (pc, µop class) pairs.
+    fn run_timed_recording(
+        dec: &DecodedProgram,
+        mem: &Memory,
+        vl: usize,
+        max: u64,
+        cfg: crate::uarch::UarchConfig,
+    ) -> (
+        Executor,
+        Vec<(usize, crate::isa::UopClass)>,
+        Result<(RunStats, crate::uarch::TimingResult), Trap>,
+    ) {
+        let mut ex = Executor::new(vl, mem.clone());
+        let mut pipe = crate::uarch::Pipeline::new(cfg, vl);
+        let mut stream = Vec::new();
+        let r = ex
+            .run_decoded_with(dec, max, |info| {
+                stream.push((info.pc, info.uop.class));
+                pipe.on_retire(&info);
+            })
+            .map(|stats| (stats, pipe.result));
+        (ex, stream, r)
+    }
+
+    /// The PR-9 differential: default vs extreme memory configuration
+    /// must retire the identical µop stream and reach bit-identical
+    /// architectural state and memory — the prefetcher and the DRAM
+    /// channel are observers, never actors. Also audits the channel
+    /// books under the extreme config: every L2 miss occupies the
+    /// channel for at least `line_bytes / bandwidth` cycles.
+    fn assert_memory_model_invariant(
+        prog: &Program,
+        mem: &Memory,
+        vl: usize,
+        max: u64,
+        regions: &[(u64, u64)],
+        what: &str,
+    ) -> (Executor, Executor) {
+        let dec = DecodedProgram::decode(prog);
+        let base = crate::uarch::UarchConfig::default();
+        let extreme = extreme_memory_cfg();
+        let occ = base.line_bytes as u64; // div_ceil(64, 1)
+        let (ea, sa, ra) = run_timed_recording(&dec, mem, vl, max, base);
+        let (eb, sb, rb) = run_timed_recording(&dec, mem, vl, max, extreme);
+        assert_eq!(sa, sb, "{what}: retire streams");
+        match (&ra, &rb) {
+            (Ok((stats_a, _)), Ok((stats_b, _))) => {
+                assert_eq!(stats_a, stats_b, "{what}: RunStats")
+            }
+            (Err(ta), Err(tb)) => assert_eq!(ta, tb, "{what}: traps"),
+            _ => panic!("{what}: only one path trapped: {ra:?} vs {rb:?}"),
+        }
+        assert_state_eq(&ea, &eb, what);
+        for &(lo, len) in regions {
+            assert_mem_eq(&ea.mem, &eb.mem, lo, len, what);
+        }
+        if let Ok((_, t)) = &rb {
+            assert!(
+                t.dram_channel_cycles >= t.l2_misses * occ,
+                "{what}: channel books must cover every demand fill: {} < {} x {occ}",
+                t.dram_channel_cycles,
+                t.l2_misses
+            );
+        }
+        (ea, eb)
+    }
+
+    /// Real compiled workloads under the extreme memory configuration:
+    /// identical retire streams, identical state, and both runs still
+    /// pass the workload's own golden-output checks.
+    #[test]
+    fn extreme_memory_configs_are_bit_identical_on_workloads() {
+        for name in ["stream_triad", "memcpy_like", "spmv_ell", "graph500"] {
+            let w = workloads::build(name);
+            for (target, vl) in [(Target::Neon, 128usize), (Target::Sve, 256)] {
+                let c = w.compile(target);
+                let what = format!("{name}/{target:?}@vl{vl}");
+                let (ea, eb) = assert_memory_model_invariant(
+                    &c.program,
+                    &w.mem,
+                    vl,
+                    w.max_insts,
+                    &[],
+                    &what,
+                );
+                w.verify(&ea.mem).unwrap_or_else(|e| panic!("{what} default: {e}"));
+                w.verify(&eb.mem).unwrap_or_else(|e| panic!("{what} extreme: {e}"));
+            }
+        }
+    }
+
+    /// PR-9 satellite property: random compiled kernels are functionally
+    /// invisible to the memory model — retire stream, registers and
+    /// every written region are bit-identical between the default and
+    /// extreme configurations, and DRAM conservation holds throughout.
+    #[test]
+    fn prop_memory_model_is_functionally_invisible() {
+        check("prop_memory_model_is_functionally_invisible", 16, |g| {
+            let rk = random_kernel(g);
+            for target in [Target::Neon, Target::Sve] {
+                let c: Compiled = compiler::compile(&rk.kernel, target);
+                let vls: &[usize] = match target {
+                    Target::Sve => &[128, 512],
+                    _ => &[128],
+                };
+                for &vl in vls {
+                    assert_memory_model_invariant(
+                        &c.program,
+                        &rk.mem,
+                        vl,
+                        10_000_000,
+                        &rk.regions,
+                        &format!("memory-model kernel on {target:?}@vl{vl}"),
+                    );
+                }
+            }
+        });
+    }
+
     /// Budget exhaustion and faults trap identically on both paths.
     #[test]
     fn traps_agree_across_paths() {

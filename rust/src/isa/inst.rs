@@ -330,7 +330,89 @@ pub enum UopClass {
     Nop,
 }
 
+/// Number of [`UopClass`] variants — the length of [`UopClass::ALL`]
+/// and of every per-class counter array in the timing/energy models.
+pub const NUM_UOP_CLASSES: usize = 31;
+
 impl UopClass {
+    /// Every class, in declaration order — the canonical indexing for
+    /// per-class counter arrays (`class as usize` == position here).
+    pub const ALL: [UopClass; NUM_UOP_CLASSES] = [
+        UopClass::IntAlu,
+        UopClass::IntMul,
+        UopClass::IntDiv,
+        UopClass::Branch,
+        UopClass::FpAdd,
+        UopClass::FpMul,
+        UopClass::FpFma,
+        UopClass::FpDiv,
+        UopClass::FpSqrt,
+        UopClass::FpCmp,
+        UopClass::FpMov,
+        UopClass::OpaqueCall,
+        UopClass::VecIntAlu,
+        UopClass::VecFpAdd,
+        UopClass::VecFpMul,
+        UopClass::VecFpFma,
+        UopClass::VecFpDiv,
+        UopClass::VecFpSqrt,
+        UopClass::VecCmp,
+        UopClass::PredOp,
+        UopClass::VecReduceTree,
+        UopClass::VecReduceOrdered,
+        UopClass::VecPermute,
+        UopClass::ScalarLoad,
+        UopClass::ScalarStore,
+        UopClass::VecLoad,
+        UopClass::VecStore,
+        UopClass::VecLoadBcast,
+        UopClass::VecGather,
+        UopClass::VecScatter,
+        UopClass::Nop,
+    ];
+
+    /// Position in [`UopClass::ALL`] (the discriminant).
+    pub fn index(self) -> usize {
+        self as usize
+    }
+
+    /// Stable lower-snake name, used in job files and reports.
+    pub fn name(self) -> &'static str {
+        match self {
+            UopClass::IntAlu => "int_alu",
+            UopClass::IntMul => "int_mul",
+            UopClass::IntDiv => "int_div",
+            UopClass::Branch => "branch",
+            UopClass::FpAdd => "fp_add",
+            UopClass::FpMul => "fp_mul",
+            UopClass::FpFma => "fp_fma",
+            UopClass::FpDiv => "fp_div",
+            UopClass::FpSqrt => "fp_sqrt",
+            UopClass::FpCmp => "fp_cmp",
+            UopClass::FpMov => "fp_mov",
+            UopClass::OpaqueCall => "opaque_call",
+            UopClass::VecIntAlu => "vec_int_alu",
+            UopClass::VecFpAdd => "vec_fp_add",
+            UopClass::VecFpMul => "vec_fp_mul",
+            UopClass::VecFpFma => "vec_fp_fma",
+            UopClass::VecFpDiv => "vec_fp_div",
+            UopClass::VecFpSqrt => "vec_fp_sqrt",
+            UopClass::VecCmp => "vec_cmp",
+            UopClass::PredOp => "pred_op",
+            UopClass::VecReduceTree => "vec_reduce_tree",
+            UopClass::VecReduceOrdered => "vec_reduce_ordered",
+            UopClass::VecPermute => "vec_permute",
+            UopClass::ScalarLoad => "scalar_load",
+            UopClass::ScalarStore => "scalar_store",
+            UopClass::VecLoad => "vec_load",
+            UopClass::VecStore => "vec_store",
+            UopClass::VecLoadBcast => "vec_load_bcast",
+            UopClass::VecGather => "vec_gather",
+            UopClass::VecScatter => "vec_scatter",
+            UopClass::Nop => "nop",
+        }
+    }
+
     /// Vector (SVE or NEON) instruction class?
     pub fn is_vector(self) -> bool {
         matches!(
@@ -988,6 +1070,19 @@ mod tests {
 
         let r = Inst::SveFadda { vdn: 0, pg: 0, zm: 1, dbl: true };
         assert!(r.class().is_cross_lane());
+    }
+
+    /// `UopClass::ALL` is the canonical per-class counter indexing: it
+    /// must walk every discriminant in order, with unique stable names.
+    #[test]
+    fn uop_class_all_matches_discriminants() {
+        for (i, c) in UopClass::ALL.iter().enumerate() {
+            assert_eq!(c.index(), i, "{c:?} out of order in UopClass::ALL");
+        }
+        let mut names: Vec<&str> = UopClass::ALL.iter().map(|c| c.name()).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), NUM_UOP_CLASSES, "duplicate UopClass::name");
     }
 
     #[test]

@@ -410,7 +410,7 @@ mod tests {
                 l2_accesses: 250,
                 mem_accesses: 60,
                 mispredicts: 10,
-                cracked_elems: 0,
+                ..Default::default()
             },
         };
         let sve = vec![RunRecord { isa: Isa::Sve(128), cycles: 800, ..neon.clone() }];

@@ -77,8 +77,7 @@ pub fn uarch_summary(c: &UarchConfig) -> String {
 /// configuration (pJ) — the glue between [`RunRecord`] (which carries
 /// the raw counters) and [`ppa::energy_pj`].
 pub fn run_energy_pj(r: &RunRecord, cfg: &UarchConfig) -> f64 {
-    ppa::energy_pj(cfg, r.isa.vl(), r.insts, r.vector_fraction, r.cycles, &r.counters)
-        .total_pj
+    ppa::energy_pj(cfg, r.isa.vl(), r.insts, r.cycles, &r.counters).total_pj
 }
 
 /// The `area_proxy` object of one variant: the VL-independent core
@@ -536,6 +535,10 @@ mod tests {
     use crate::workloads::Group;
 
     fn rec(bench: &'static str, isa: Isa, cycles: u64) -> RunRecord {
+        let mut class_counts = [0u64; crate::isa::NUM_UOP_CLASSES];
+        for (i, slot) in class_counts.iter_mut().enumerate() {
+            *slot = 10 * cycles / (i as u64 + 2);
+        }
         RunRecord {
             bench,
             group: Group::Right,
@@ -552,6 +555,10 @@ mod tests {
                 mem_accesses: cycles / 16,
                 mispredicts: cycles / 100,
                 cracked_elems: 0,
+                pf_issued: cycles / 2,
+                pf_useful: cycles / 3,
+                dram_channel_cycles: cycles,
+                class_counts,
             },
         }
     }

@@ -75,6 +75,9 @@ fn run_json(r: &RunRecord, speedup: Option<f64>) -> Json {
         ("vectorized".to_string(), Json::Bool(r.vectorized)),
         ("vector_fraction".to_string(), Json::f64(r.vector_fraction)),
         ("l1d_miss_rate".to_string(), Json::f64(r.l1d_miss_rate)),
+        ("pf_issued".to_string(), Json::u64(r.counters.pf_issued)),
+        ("pf_useful".to_string(), Json::u64(r.counters.pf_useful)),
+        ("dram_channel_cycles".to_string(), Json::u64(r.counters.dram_channel_cycles)),
     ]);
     Json::Obj(fields)
 }

@@ -22,10 +22,13 @@ use crate::workloads::{self, Group};
 
 /// Schema tag written into every job file; bump on layout changes so
 /// stale caches self-invalidate. v2 added the §PPA event counters
-/// ([`crate::uarch::PpaCounters`]); v1 files are treated as cache
-/// misses (the schema is part of every [`job_key`], so old keys are
-/// simply never looked up again) and re-simulated.
-pub const JOB_SCHEMA: &str = "sve-repro/fig8-job/v2";
+/// ([`crate::uarch::PpaCounters`]); v3 added the PR-9 memory-system
+/// counters (`pf_issued`/`pf_useful`/`dram_channel_cycles`) and the
+/// per-µop-class retire histogram the per-class energy model consumes.
+/// Older files are treated as cache misses (the schema is part of
+/// every [`job_key`], so old keys are simply never looked up again)
+/// and re-simulated.
+pub const JOB_SCHEMA: &str = "sve-repro/fig8-job/v3";
 
 /// 64-bit FNV-1a. Tiny, dependency-free, and stable across platforms —
 /// exactly what a cache key needs (this is not a security boundary).
@@ -178,6 +181,13 @@ pub fn record_to_json(key: &str, r: &RunRecord) -> Json {
         ("mem_accesses".into(), Json::u64(r.counters.mem_accesses)),
         ("mispredicts".into(), Json::u64(r.counters.mispredicts)),
         ("cracked_elems".into(), Json::u64(r.counters.cracked_elems)),
+        ("pf_issued".into(), Json::u64(r.counters.pf_issued)),
+        ("pf_useful".into(), Json::u64(r.counters.pf_useful)),
+        ("dram_channel_cycles".into(), Json::u64(r.counters.dram_channel_cycles)),
+        (
+            "class_counts".into(),
+            Json::Arr(r.counters.class_counts.iter().map(|&n| Json::u64(n)).collect()),
+        ),
     ])
 }
 
@@ -209,6 +219,20 @@ pub fn record_from_json(v: &Json) -> Option<RunRecord> {
             mem_accesses: v.get("mem_accesses")?.as_u64()?,
             mispredicts: v.get("mispredicts")?.as_u64()?,
             cracked_elems: v.get("cracked_elems")?.as_u64()?,
+            pf_issued: v.get("pf_issued")?.as_u64()?,
+            pf_useful: v.get("pf_useful")?.as_u64()?,
+            dram_channel_cycles: v.get("dram_channel_cycles")?.as_u64()?,
+            class_counts: {
+                let arr = v.get("class_counts")?.as_arr()?;
+                if arr.len() != crate::isa::NUM_UOP_CLASSES {
+                    return None;
+                }
+                let mut counts = [0u64; crate::isa::NUM_UOP_CLASSES];
+                for (slot, item) in counts.iter_mut().zip(arr) {
+                    *slot = item.as_u64()?;
+                }
+                counts
+            },
         },
     })
 }
@@ -218,6 +242,10 @@ mod tests {
     use super::*;
 
     fn sample() -> RunRecord {
+        let mut class_counts = [0u64; crate::isa::NUM_UOP_CLASSES];
+        for (i, slot) in class_counts.iter_mut().enumerate() {
+            *slot = (i as u64 + 1) * 11;
+        }
         RunRecord {
             bench: "stream_triad",
             group: Group::Right,
@@ -234,6 +262,10 @@ mod tests {
                 mem_accesses: 500,
                 mispredicts: 123,
                 cracked_elems: 7,
+                pf_issued: 250,
+                pf_useful: 210,
+                dram_channel_cycles: 8_000,
+                class_counts,
             },
         }
     }
@@ -276,6 +308,42 @@ mod tests {
             fields.retain(|(k, _)| k != "mispredicts");
         }
         assert!(record_from_json(&v).is_none(), "missing counter must miss");
+    }
+
+    #[test]
+    fn v2_job_files_are_cache_misses() {
+        // a pre-PR-9 record (v2 tag, no memory-system counters) must
+        // reload as a miss, never as a record with invented prefetch
+        // stats or a zeroed class histogram
+        let r = sample();
+        let mut v = record_to_json("deadbeefdeadbeef", &r);
+        if let Json::Obj(fields) = &mut v {
+            fields.retain(|(k, _)| {
+                !matches!(
+                    k.as_str(),
+                    "pf_issued" | "pf_useful" | "dram_channel_cycles" | "class_counts"
+                )
+            });
+            for (k, val) in fields.iter_mut() {
+                if k == "schema" {
+                    *val = Json::str("sve-repro/fig8-job/v2");
+                }
+            }
+        }
+        assert!(record_from_json(&v).is_none(), "v2 file must miss");
+        // current tag but a truncated class histogram: miss, not a
+        // silently misaligned energy attribution
+        let mut v = record_to_json("deadbeefdeadbeef", &r);
+        if let Json::Obj(fields) = &mut v {
+            for (k, val) in fields.iter_mut() {
+                if k == "class_counts" {
+                    if let Json::Arr(items) = val {
+                        items.pop();
+                    }
+                }
+            }
+        }
+        assert!(record_from_json(&v).is_none(), "short class_counts must miss");
     }
 
     #[test]

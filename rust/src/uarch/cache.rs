@@ -1,6 +1,15 @@
 //! Two-level cache hierarchy: L1 (I or D) backed by a unified L2.
 //! Set-associative, LRU, line granularity. Accessed in program order by
 //! the timing pipeline (a standard trace-driven approximation).
+//!
+//! PR 9 adds a configurable per-PC stride prefetcher on the L1D (a
+//! reference prediction table in the Chen & Baer style): every demand
+//! access trains the entry hashed by its µop pc, and once an entry's
+//! stride has repeated (confidence ≥ [`CONFIDENCE_THRESHOLD`]) the next
+//! `pf_degree` strided lines are filled into L1D + L2. Prefetch fills
+//! are instantaneous in this model — their cost is DRAM channel
+//! occupancy only (see `pipeline.rs`) — so `pf_useful` counts demand
+//! hits that would otherwise have missed L1.
 
 /// One set-associative cache level.
 pub struct Cache {
@@ -11,6 +20,10 @@ pub struct Cache {
     tags: Vec<u64>,
     /// LRU timestamps, same layout
     lru: Vec<u64>,
+    /// Line was brought in by a prefetch and not yet demanded, same
+    /// layout. A demand hit consumes the mark (each prefetched line
+    /// counts as useful at most once).
+    pf_mark: Vec<bool>,
     clock: u64,
     pub hits: u64,
     pub misses: u64,
@@ -27,24 +40,36 @@ impl Cache {
             line_shift: line_bytes.trailing_zeros(),
             tags: vec![u64::MAX; lines],
             lru: vec![0; lines],
+            pf_mark: vec![false; lines],
             clock: 0,
             hits: 0,
             misses: 0,
         }
     }
 
+    fn set_base(&self, line: u64) -> usize {
+        ((line as usize) & (self.sets - 1)) * self.assoc
+    }
+
     /// Look up (and fill on miss) the line containing `addr`.
     /// Returns true on hit.
     pub fn access(&mut self, addr: u64) -> bool {
+        self.demand(addr).0
+    }
+
+    /// [`Cache::access`], also reporting whether the hit line was
+    /// brought in by a prefetch (the mark is consumed).
+    pub fn demand(&mut self, addr: u64) -> (bool, bool) {
         self.clock += 1;
         let line = addr >> self.line_shift;
-        let set = (line as usize) & (self.sets - 1);
-        let base = set * self.assoc;
+        let base = self.set_base(line);
         for w in 0..self.assoc {
             if self.tags[base + w] == line {
                 self.lru[base + w] = self.clock;
                 self.hits += 1;
-                return true;
+                let was_prefetched = self.pf_mark[base + w];
+                self.pf_mark[base + w] = false;
+                return (true, was_prefetched);
             }
         }
         self.misses += 1;
@@ -57,7 +82,38 @@ impl Cache {
         }
         self.tags[base + victim] = line;
         self.lru[base + victim] = self.clock;
-        false
+        self.pf_mark[base + victim] = false;
+        (false, false)
+    }
+
+    /// Non-mutating residency probe: no fill, no LRU or counter update.
+    pub fn contains(&self, addr: u64) -> bool {
+        let line = addr >> self.line_shift;
+        let base = self.set_base(line);
+        (0..self.assoc).any(|w| self.tags[base + w] == line)
+    }
+
+    /// Fill `addr`'s line on behalf of the prefetcher. Returns true if
+    /// the line was newly brought in (it was absent). Never touches the
+    /// demand hit/miss counters; a line already resident is left
+    /// entirely alone (no LRU warming from speculative traffic).
+    pub fn prefetch_fill(&mut self, addr: u64) -> bool {
+        let line = addr >> self.line_shift;
+        let base = self.set_base(line);
+        if (0..self.assoc).any(|w| self.tags[base + w] == line) {
+            return false;
+        }
+        self.clock += 1;
+        let mut victim = 0;
+        for w in 1..self.assoc {
+            if self.lru[base + w] < self.lru[base + victim] {
+                victim = w;
+            }
+        }
+        self.tags[base + victim] = line;
+        self.lru[base + victim] = self.clock;
+        self.pf_mark[base + victim] = true;
+        true
     }
 }
 
@@ -69,11 +125,81 @@ pub enum HitLevel {
     Mem,
 }
 
-/// L1 + unified L2.
+/// A stride prediction becomes actionable only after it has repeated
+/// this many times (confidence saturates at [`CONFIDENCE_MAX`]).
+const CONFIDENCE_THRESHOLD: u8 = 2;
+const CONFIDENCE_MAX: u8 = 3;
+
+/// One reference-prediction-table entry of [`StridePrefetcher`].
+#[derive(Clone, Copy)]
+struct PfEntry {
+    pc: u64,
+    last_addr: u64,
+    stride: i64,
+    confidence: u8,
+}
+
+/// Per-PC stride prefetcher: a direct-mapped reference prediction
+/// table keyed by µop pc. Constructed only when both `pf_entries` and
+/// `pf_degree` are nonzero.
+pub struct StridePrefetcher {
+    entries: Vec<PfEntry>,
+    degree: u64,
+}
+
+impl StridePrefetcher {
+    fn new(entries: usize, degree: u64) -> Self {
+        StridePrefetcher {
+            entries: vec![
+                PfEntry { pc: u64::MAX, last_addr: 0, stride: 0, confidence: 0 };
+                entries
+            ],
+            degree,
+        }
+    }
+
+    /// Observe one demand access; returns the predicted stride when the
+    /// entry is confident enough to prefetch.
+    fn train(&mut self, pc: u64, addr: u64) -> Option<i64> {
+        let slot = (pc as usize) % self.entries.len();
+        let e = &mut self.entries[slot];
+        if e.pc != pc {
+            *e = PfEntry { pc, last_addr: addr, stride: 0, confidence: 0 };
+            return None;
+        }
+        let stride = (addr as i64).wrapping_sub(e.last_addr as i64);
+        e.last_addr = addr;
+        if stride != 0 && stride == e.stride {
+            e.confidence = (e.confidence + 1).min(CONFIDENCE_MAX);
+        } else {
+            e.stride = stride;
+            e.confidence = e.confidence.saturating_sub(1);
+        }
+        (e.confidence >= CONFIDENCE_THRESHOLD).then_some(e.stride)
+    }
+}
+
+/// What one data access did: demand service level plus the prefetcher's
+/// activity on that access.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct DataAccess {
+    pub level: HitLevel,
+    /// The demand hit was on a line a prefetch brought in (counted once
+    /// per prefetched line).
+    pub pf_useful: bool,
+    /// Prefetch line fills issued by this access's training step.
+    pub pf_issued: u64,
+    /// Of those, fills that also missed L2 and fetched from DRAM —
+    /// these claim DRAM channel bandwidth in the pipeline.
+    pub pf_mem_fills: u64,
+}
+
+/// L1 + unified L2, plus the optional L1D stride prefetcher.
 pub struct Hierarchy {
     pub l1d: Cache,
     pub l1i: Cache,
     pub l2: Cache,
+    pf: Option<StridePrefetcher>,
 }
 
 impl Hierarchy {
@@ -82,17 +208,52 @@ impl Hierarchy {
             l1d: Cache::new(cfg.l1d_bytes, cfg.l1d_assoc, cfg.line_bytes),
             l1i: Cache::new(cfg.l1i_bytes, cfg.l1i_assoc, cfg.line_bytes),
             l2: Cache::new(cfg.l2_bytes, cfg.l2_assoc, cfg.line_bytes),
+            pf: (cfg.pf_entries > 0 && cfg.pf_degree > 0)
+                .then(|| StridePrefetcher::new(cfg.pf_entries, cfg.pf_degree)),
         }
     }
 
     pub fn access_data(&mut self, addr: u64) -> HitLevel {
-        if self.l1d.access(addr) {
+        self.access_data_at(addr, 0).level
+    }
+
+    /// One demand data access issued by the µop at `pc`: serve it
+    /// through L1D → L2 → memory, then train the prefetcher and issue
+    /// any confident strided fills (into L1D + L2, skipping lines
+    /// already resident in L1D).
+    pub fn access_data_at(&mut self, addr: u64, pc: u64) -> DataAccess {
+        let (l1_hit, was_prefetched) = self.l1d.demand(addr);
+        let level = if l1_hit {
             HitLevel::L1
         } else if self.l2.access(addr) {
             HitLevel::L2
         } else {
             HitLevel::Mem
+        };
+        let mut out = DataAccess {
+            level,
+            pf_useful: l1_hit && was_prefetched,
+            pf_issued: 0,
+            pf_mem_fills: 0,
+        };
+        let Some(pf) = &mut self.pf else { return out };
+        let degree = pf.degree;
+        if let Some(stride) = pf.train(pc, addr) {
+            for k in 1..=degree {
+                let target = addr.wrapping_add_signed(stride.wrapping_mul(k as i64));
+                if self.l1d.contains(target) {
+                    continue;
+                }
+                out.pf_issued += 1;
+                // the L2 fill models the line streaming through the
+                // shared hierarchy; only a DRAM fetch costs bandwidth
+                if self.l2.prefetch_fill(target) {
+                    out.pf_mem_fills += 1;
+                }
+                self.l1d.prefetch_fill(target);
+            }
         }
+        out
     }
 
     pub fn access_inst(&mut self, addr: u64) -> HitLevel {
@@ -115,6 +276,7 @@ impl Hierarchy {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::uarch::UarchConfig;
 
     #[test]
     fn repeated_access_hits() {
@@ -144,7 +306,7 @@ mod tests {
 
     #[test]
     fn working_set_larger_than_l1_spills_to_l2() {
-        let cfg = super::super::UarchConfig::default();
+        let cfg = UarchConfig::default();
         let mut h = Hierarchy::new(&cfg);
         // stream 128KB: misses L1 (64KB) on second pass, hits L2 (256KB)
         let lines = (128 * 1024) / 64;
@@ -162,5 +324,85 @@ mod tests {
         assert!(l2h > lines / 2, "most of pass 2 should hit L2 (got {l2h})");
         assert_eq!(mem, 0, "fits L2");
         let _ = l1h;
+    }
+
+    #[test]
+    fn prefetch_fill_never_touches_demand_counters() {
+        let mut c = Cache::new(64 * 1024, 4, 64);
+        assert!(c.prefetch_fill(0x2000), "absent line fills");
+        assert!(!c.prefetch_fill(0x2000), "resident line is left alone");
+        assert_eq!((c.hits, c.misses), (0, 0));
+        let (hit, was_pf) = c.demand(0x2000);
+        assert!(hit && was_pf, "demand hit on the prefetched line");
+        let (hit, was_pf) = c.demand(0x2000);
+        assert!(hit && !was_pf, "the useful-mark is consumed once");
+        assert!(c.contains(0x2000));
+        assert!(!c.contains(0x4000));
+    }
+
+    fn pf_cfg(entries: usize, degree: u64) -> UarchConfig {
+        UarchConfig { pf_entries: entries, pf_degree: degree, ..UarchConfig::default() }
+    }
+
+    /// Unit-stride streams are the prefetcher's bread and butter: after
+    /// the short training window nearly every issued line is demanded,
+    /// so coverage (useful/issued) stays near 1 and most lines of the
+    /// stream are served from prefetched L1 lines.
+    #[test]
+    fn unit_stride_stream_is_covered() {
+        let mut h = Hierarchy::new(&pf_cfg(64, 2));
+        let (mut issued, mut useful, mut l1_hits) = (0u64, 0u64, 0u64);
+        // one 8-byte load per iteration from a single load pc, 4096
+        // lines (256KB, far beyond L1D)
+        let n = 4096 * 8;
+        for i in 0..n {
+            let a = h.access_data_at(0x10_0000 + i * 8, 0x42);
+            issued += a.pf_issued;
+            useful += u64::from(a.pf_useful);
+            l1_hits += u64::from(a.level == HitLevel::L1);
+        }
+        assert!(issued >= 4000, "stream must trigger prefetches (issued {issued})");
+        assert!(
+            useful * 10 >= issued * 9,
+            "coverage must stay near 1 (useful {useful} / issued {issued})"
+        );
+        assert!(
+            l1_hits * 100 >= n * 95,
+            "nearly the whole stream is served from L1 ({l1_hits}/{n})"
+        );
+    }
+
+    /// A random permutation gather (one pc, garbage strides) must never
+    /// build confidence: the prefetcher stays almost completely quiet.
+    #[test]
+    fn random_permutation_gather_stays_quiet() {
+        let mut h = Hierarchy::new(&pf_cfg(64, 4));
+        let (mut issued, mut useful) = (0u64, 0u64);
+        // multiplicative-LCG permutation of 4096 lines
+        let mut x = 1u64;
+        let n = 4096u64;
+        for _ in 0..n {
+            x = x.wrapping_mul(1664525).wrapping_add(1013904223) % n;
+            let a = h.access_data_at(0x10_0000 + x * 64, 0x42);
+            issued += a.pf_issued;
+            useful += u64::from(a.pf_useful);
+        }
+        assert!(issued <= n / 50, "random strides must not train (issued {issued})");
+        assert!(useful <= issued, "useful prefetches are a subset of issued");
+    }
+
+    /// `pf_degree=0` (or `pf_entries=0`) disables the prefetcher: the
+    /// hierarchy behaves bit-identically to the pre-PR-9 model.
+    #[test]
+    fn disabled_prefetcher_is_inert() {
+        for cfg in [pf_cfg(64, 0), pf_cfg(0, 4), UarchConfig::default()] {
+            let mut h = Hierarchy::new(&cfg);
+            let mut plain = Hierarchy::new(&UarchConfig::default());
+            for i in 0..4096u64 {
+                let a = h.access_data_at(i * 8, 0x42);
+                assert_eq!(a.level, plain.access_data(i * 8));
+                assert_eq!((a.pf_issued, a.pf_mem_fills, a.pf_useful), (0, 0, false));
+            }
+        }
     }
 }

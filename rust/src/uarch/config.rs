@@ -50,6 +50,19 @@ pub struct UarchConfig {
     pub branch_mispredict_penalty: u64,
     /// opaque libm call cost (scalar pow/log, §5 EP)
     pub opaque_lat: u64,
+
+    // ---- memory-system fidelity (PR 9) ----
+    /// L1D stride-prefetcher reference-prediction table entries
+    /// (keyed by µop pc). `0` disables the prefetcher entirely.
+    pub pf_entries: usize,
+    /// Lines fetched ahead per confident prediction. `0` disables the
+    /// prefetcher (with any table size).
+    pub pf_degree: u64,
+    /// DRAM channel bandwidth: bytes transferred per cycle. Every L2
+    /// miss occupies the shared channel for `line_bytes /
+    /// dram_bytes_per_cycle` cycles, queueing behind in-flight fills.
+    /// `0` models infinite bandwidth (the pre-PR-9 latency-only DRAM).
+    pub dram_bytes_per_cycle: u64,
 }
 
 impl Default for UarchConfig {
@@ -81,6 +94,9 @@ impl Default for UarchConfig {
             mem_lat: 80,
             branch_mispredict_penalty: 12,
             opaque_lat: 40,
+            pf_entries: 0,
+            pf_degree: 0,
+            dram_bytes_per_cycle: 0,
         }
     }
 }
@@ -106,7 +122,7 @@ pub const VARIANT_NAMES: [&str; 5] =
 
 /// Every `key=value` override name accepted by [`set_field`], in
 /// [`UarchConfig`] declaration order.
-pub const OVERRIDE_KEYS: [&str; 26] = [
+pub const OVERRIDE_KEYS: [&str; 29] = [
     "l1i_bytes",
     "l1i_assoc",
     "l1d_bytes",
@@ -133,6 +149,9 @@ pub const OVERRIDE_KEYS: [&str; 26] = [
     "mem_lat",
     "branch_mispredict_penalty",
     "opaque_lat",
+    "pf_entries",
+    "pf_degree",
+    "dram_bytes_per_cycle",
 ];
 
 /// Look up a named base variant. `None` for unknown names (the CLI
@@ -141,7 +160,9 @@ pub const OVERRIDE_KEYS: [&str; 26] = [
 /// * `table2` — the paper's Table 2 configuration ([`UarchConfig::default`]).
 /// * `small-core` — halved caches, widths, schedulers and window.
 /// * `big-core` — doubled caches, widths, schedulers and window.
-/// * `narrow-mem` — Table 2 with a single load port.
+/// * `narrow-mem` — Table 2 with a single load port and a
+///   16 B/cycle DRAM channel (a bandwidth point, not just a latency
+///   point: four cycles of channel occupancy per 64B line).
 /// * `deep-rob` — Table 2 with a doubled ROB and scheduler depth.
 pub fn base_variant(name: &str) -> Option<UarchConfig> {
     let mut c = UarchConfig::default();
@@ -183,6 +204,7 @@ pub fn base_variant(name: &str) -> Option<UarchConfig> {
         }
         "narrow-mem" => {
             c.loads_per_cycle = 1;
+            c.dram_bytes_per_cycle = 16;
         }
         "deep-rob" => {
             c.rob = 256;
@@ -214,6 +236,9 @@ const MAX_LINE_BYTES: usize = 4096;
 /// Largest reorder buffer the model accepts (the pipeline keeps one
 /// completion slot per ROB entry).
 const MAX_ROB: usize = 1 << 20;
+/// Largest stride-prefetcher table the model instantiates (one entry
+/// per slot is allocated up front).
+const MAX_PF_ENTRIES: usize = 1 << 16;
 
 /// Check that a configuration can actually be instantiated by the
 /// timing model. The cache constructor requires a power-of-two set
@@ -232,6 +257,12 @@ pub fn validate(cfg: &UarchConfig) -> Result<(), String> {
     }
     if cfg.rob > MAX_ROB {
         return Err(format!("rob={} exceeds the model's {MAX_ROB}-entry bound", cfg.rob));
+    }
+    if cfg.pf_entries > MAX_PF_ENTRIES {
+        return Err(format!(
+            "pf_entries={} exceeds the model's {MAX_PF_ENTRIES}-entry bound",
+            cfg.pf_entries
+        ));
     }
     for (name, bytes, assoc) in [
         ("l1i", cfg.l1i_bytes, cfg.l1i_assoc),
@@ -280,6 +311,9 @@ pub fn set_field(cfg: &mut UarchConfig, key: &str, value: &str) -> Result<u64, S
             | "mem_lat"
             | "branch_mispredict_penalty"
             | "opaque_lat"
+            | "pf_entries"
+            | "pf_degree"
+            | "dram_bytes_per_cycle"
     );
     if v == 0 && !zero_ok {
         return Err(format!(
@@ -314,6 +348,9 @@ pub fn set_field(cfg: &mut UarchConfig, key: &str, value: &str) -> Result<u64, S
         "mem_lat" => cfg.mem_lat = v,
         "branch_mispredict_penalty" => cfg.branch_mispredict_penalty = v,
         "opaque_lat" => cfg.opaque_lat = v,
+        "pf_entries" => cfg.pf_entries = u,
+        "pf_degree" => cfg.pf_degree = v,
+        "dram_bytes_per_cycle" => cfg.dram_bytes_per_cycle = v,
         _ => {
             return Err(format!(
                 "--uarch override: unknown parameter '{key}' (known: {})",
@@ -358,6 +395,9 @@ pub fn field_value(cfg: &UarchConfig, key: &str) -> Option<u64> {
         "mem_lat" => cfg.mem_lat,
         "branch_mispredict_penalty" => cfg.branch_mispredict_penalty,
         "opaque_lat" => cfg.opaque_lat,
+        "pf_entries" => cfg.pf_entries as u64,
+        "pf_degree" => cfg.pf_degree,
+        "dram_bytes_per_cycle" => cfg.dram_bytes_per_cycle,
         _ => return None,
     })
 }
@@ -674,7 +714,9 @@ mod tests {
         let t2 = UarchConfig::default();
         assert!(small.l2_bytes < t2.l2_bytes && big.l2_bytes > t2.l2_bytes);
         assert!(small.decode_width < t2.decode_width && big.decode_width > t2.decode_width);
-        assert_eq!(base_variant("narrow-mem").unwrap().loads_per_cycle, 1);
+        let narrow = base_variant("narrow-mem").unwrap();
+        assert_eq!(narrow.loads_per_cycle, 1);
+        assert_eq!(narrow.dram_bytes_per_cycle, 16, "narrow-mem is a bandwidth point");
         assert_eq!(base_variant("deep-rob").unwrap().rob, 2 * t2.rob);
     }
 
@@ -689,6 +731,14 @@ mod tests {
         assert_eq!(c.loads_per_cycle, 1);
         set_field(&mut c, "line_cross_penalty", "0").unwrap();
         assert_eq!(c.line_cross_penalty, 0);
+        // the memory-fidelity knobs: 0 is the documented "off" value
+        set_field(&mut c, "pf_entries", "0").unwrap();
+        set_field(&mut c, "pf_degree", "0").unwrap();
+        set_field(&mut c, "dram_bytes_per_cycle", "0").unwrap();
+        set_field(&mut c, "pf_entries", "64").unwrap();
+        assert_eq!(c.pf_entries, 64);
+        set_field(&mut c, "dram_bytes_per_cycle", "16").unwrap();
+        assert_eq!(c.dram_bytes_per_cycle, 16);
         assert!(set_field(&mut c, "decode_width", "0").is_err());
         assert!(set_field(&mut c, "l2_bytes", "banana").is_err());
         assert!(set_field(&mut c, "not_a_knob", "4").is_err());
@@ -747,7 +797,11 @@ mod tests {
         // spelled differently but identical configs are still duplicates
         assert!(parse_variants("table2,l2_bytes=512K,table2,l2_bytes=524288").is_err());
         // even when the labels differ: narrow-mem IS table2 with 1 load
-        let err = parse_variants("narrow-mem,table2,loads_per_cycle=1").unwrap_err();
+        // port and a 16 B/cycle DRAM channel
+        let err = parse_variants(
+            "narrow-mem,table2,loads_per_cycle=1,dram_bytes_per_cycle=16",
+        )
+        .unwrap_err();
         assert!(err.contains("same configuration"), "{err}");
     }
 
@@ -844,6 +898,8 @@ mod tests {
         assert!(validate(&c).unwrap_err().contains("caps caches"));
         let c = UarchConfig { rob: 1 << 24, ..UarchConfig::default() };
         assert!(validate(&c).unwrap_err().contains("bound"));
+        let c = UarchConfig { pf_entries: 1 << 24, ..UarchConfig::default() };
+        assert!(validate(&c).unwrap_err().contains("pf_entries"));
         let c = UarchConfig { line_bytes: 1 << 16, ..UarchConfig::default() };
         assert!(validate(&c).is_err());
         assert!(parse_variants("table2,l2_bytes=524288M").unwrap_err().contains("caps"));

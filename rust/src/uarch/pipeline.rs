@@ -19,7 +19,7 @@ use super::cache::{Hierarchy, HitLevel};
 use super::config::{latency, UarchConfig};
 use crate::exec::StepInfo;
 use crate::isa::uop::{Crack, REG_SLOTS};
-use crate::isa::UopClass;
+use crate::isa::{UopClass, NUM_UOP_CLASSES};
 
 /// Issue-bandwidth domains.
 #[derive(Clone, Copy, PartialEq, Eq)]
@@ -109,6 +109,18 @@ pub struct TimingResult {
     pub branches: u64,
     /// port-slots consumed by cracked gather/scatter elements
     pub cracked_elems: u64,
+    /// L1D prefetch line fills issued by the stride prefetcher
+    pub pf_issued: u64,
+    /// prefetched lines later hit by a demand access (each counts once)
+    pub pf_useful: u64,
+    /// total DRAM channel occupancy, in cycles — every line fetched
+    /// from memory (demand or prefetch) holds the shared channel for
+    /// `line_bytes / dram_bytes_per_cycle` cycles; 0 when the channel
+    /// is unmodelled (`dram_bytes_per_cycle = 0`)
+    pub dram_channel_cycles: u64,
+    /// retired µops per [`UopClass`], indexed by `UopClass::index()` —
+    /// the per-class activity behind the §PPA energy table
+    pub class_counts: [u64; NUM_UOP_CLASSES],
 }
 
 impl TimingResult {
@@ -145,6 +157,8 @@ pub struct Pipeline {
     mshr: std::collections::VecDeque<u64>,
     fetch_ready: u64,
     fetched_this_cycle: u64,
+    /// first cycle the shared DRAM channel is free again
+    dram_free: u64,
     last_retire: u64,
     retired_this_cycle: u64,
     int_usage: UsageWindow,
@@ -168,6 +182,7 @@ impl Pipeline {
             mshr: std::collections::VecDeque::new(),
             fetch_ready: 0,
             fetched_this_cycle: 0,
+            dram_free: 0,
             last_retire: 0,
             retired_this_cycle: 0,
             int_usage: UsageWindow::new(),
@@ -183,11 +198,18 @@ impl Pipeline {
         self.trace = Some(vec![]);
     }
 
-    /// Latency of one memory access of `len` bytes at `addr` starting at
-    /// `start`; returns completion cycle. Accounts for cache level, MSHR
-    /// occupancy and line crossing.
-    fn mem_latency(&mut self, addr: u64, len: u32, start: u64) -> u64 {
-        let level = self.caches.access_data(addr);
+    /// Latency of one memory access of `len` bytes at `addr`, issued by
+    /// the µop at `pc`, starting at `start`; returns completion cycle.
+    /// Accounts for cache level, MSHR occupancy, line crossing, and —
+    /// when `dram_bytes_per_cycle > 0` — occupancy of the shared DRAM
+    /// channel: a demand line fetched from memory holds the channel for
+    /// `line_bytes / dram_bytes_per_cycle` cycles, queueing behind every
+    /// in-flight fill, so memory-bound kernels saturate instead of
+    /// pipelining misses for free. Prefetch fills are instantaneous but
+    /// pay the same channel occupancy, queued behind the demand traffic.
+    fn mem_latency(&mut self, addr: u64, len: u32, start: u64, pc: u64) -> u64 {
+        let acc = self.caches.access_data_at(addr, pc);
+        let level = acc.level;
         match level {
             HitLevel::L1 => self.result.l1d_hits += 1,
             HitLevel::L2 => {
@@ -199,7 +221,11 @@ impl Pipeline {
                 self.result.l2_misses += 1;
             }
         }
+        self.result.pf_issued += acc.pf_issued;
+        self.result.pf_useful += u64::from(acc.pf_useful);
         let line = self.cfg.line_bytes as u64;
+        let bw = self.cfg.dram_bytes_per_cycle;
+        let occ = if bw > 0 { line.div_ceil(bw) } else { 0 };
         let crosses = (addr % line + len as u64).div_ceil(line) - 1;
         let base = match level {
             HitLevel::L1 => self.cfg.l1_lat,
@@ -207,7 +233,7 @@ impl Pipeline {
             HitLevel::Mem => self.cfg.mem_lat,
         };
         let mut start = start;
-        if level != HitLevel::L1 {
+        let done = if level != HitLevel::L1 {
             // MSHR-limited: a new miss waits for a free entry
             while self.mshr.front().is_some_and(|&c| c <= start) {
                 self.mshr.pop_front();
@@ -215,11 +241,27 @@ impl Pipeline {
             if self.mshr.len() >= self.cfg.mshrs {
                 start = self.mshr.pop_front().unwrap();
             }
-            let done = start + base + crosses * self.cfg.line_cross_penalty;
+            let mut done = start + base + crosses * self.cfg.line_cross_penalty;
+            if level == HitLevel::Mem && bw > 0 {
+                // the fill cannot complete before its line has streamed
+                // over the channel, behind every earlier fill
+                let begin = start.max(self.dram_free);
+                self.dram_free = begin + occ;
+                self.result.dram_channel_cycles += occ;
+                done = done.max(begin + occ + crosses * self.cfg.line_cross_penalty);
+            }
             self.mshr.push_back(done);
-            return done;
+            done
+        } else {
+            start + base + crosses * self.cfg.line_cross_penalty
+        };
+        if bw > 0 && acc.pf_mem_fills > 0 {
+            // speculative fills stream behind the demand traffic; they
+            // never delay this access, only later channel claimants
+            self.dram_free = self.dram_free.max(start) + acc.pf_mem_fills * occ;
+            self.result.dram_channel_cycles += acc.pf_mem_fills * occ;
         }
-        start + base + crosses * self.cfg.line_cross_penalty
+        done
     }
 
     /// Feed one retired µop from the functional executor. All static
@@ -295,7 +337,7 @@ impl Pipeline {
                     } else {
                         self.store_usage.claim(issue, cap)
                     };
-                    let done = self.mem_latency(a.addr, a.len, slot);
+                    let done = self.mem_latency(a.addr, a.len, slot, info.pc as u64);
                     complete = complete.max(done);
                     self.result.cracked_elems += 1;
                 }
@@ -317,7 +359,7 @@ impl Pipeline {
                             self.load_usage.claim(issue, self.cfg.loads_per_cycle)
                         };
                         first = false;
-                        let done = self.mem_latency(a.addr + off, chunk, slot);
+                        let done = self.mem_latency(a.addr + off, chunk, slot, info.pc as u64);
                         if is_store {
                             // stores complete at issue via the store buffer
                             complete = complete.max(issue + 1);
@@ -365,6 +407,7 @@ impl Pipeline {
         self.rob_complete.push_back(complete);
 
         self.result.insts += 1;
+        self.result.class_counts[class.index()] += 1;
         self.result.cycles = self.result.cycles.max(retire);
 
         if let Some(tr) = &mut self.trace {
@@ -617,5 +660,188 @@ mod tests {
             UarchConfig::default(),
         );
         assert!(r.ipc() <= 4.05, "retire width 4, got ipc {}", r.ipc());
+    }
+
+    #[test]
+    fn class_counts_sum_to_insts() {
+        let mut mem = Memory::new();
+        let buf = mem.alloc(8 * 16, 64);
+        let r = time_program(
+            |a| {
+                a.push(Inst::MovImm { xd: 0, imm: buf });
+                for i in 0..16u64 {
+                    a.push(Inst::Ldr {
+                        size: 8,
+                        signed: false,
+                        xt: 3,
+                        base: 0,
+                        off: crate::isa::MemOff::Imm((8 * i) as i64),
+                    });
+                    a.push(Inst::Fmadd { dbl: true, dd: 1, dn: 1, dm: 2, da: 1, sub: false });
+                }
+            },
+            mem,
+            128,
+            UarchConfig::default(),
+        );
+        let total: u64 = r.class_counts.iter().sum();
+        assert_eq!(total, r.insts);
+        assert_eq!(r.class_counts[UopClass::ScalarLoad.index()], 16);
+        assert_eq!(r.class_counts[UopClass::FpFma.index()], 16);
+    }
+
+    /// One pass of 512 scalar loads, one per 64 B line, over a 32 KB
+    /// buffer: every access is a first-touch DRAM miss unless a
+    /// prefetcher gets the line in first.
+    fn stream_loads(cfg: UarchConfig) -> TimingResult {
+        let mut mem = Memory::new();
+        let buf = mem.alloc(32 * 1024, 64);
+        time_program(
+            |a| {
+                a.push(Inst::MovImm { xd: 0, imm: buf });
+                a.push(Inst::MovImm { xd: 1, imm: 0 });
+                a.push(Inst::MovImm { xd: 2, imm: 512 });
+                a.label("loop");
+                a.push(Inst::Ldr {
+                    size: 8,
+                    signed: false,
+                    xt: 3,
+                    base: 0,
+                    off: crate::isa::MemOff::RegLsl(1, 3),
+                });
+                a.push(Inst::AddImm { xd: 1, xn: 1, imm: 8 }); // 64 B stride
+                a.push(Inst::AddImm { xd: 4, xn: 4, imm: 1 });
+                a.push(Inst::CmpReg { xn: 4, xm: 2 });
+                a.push_branch(Inst::BCond { cond: crate::arch::Cond::Lt, target: 0 }, "loop");
+            },
+            mem,
+            128,
+            cfg,
+        )
+    }
+
+    /// Eight gathers over a fixed scrambled permutation of a 64 KB
+    /// table — no stable stride for a prefetcher to learn.
+    fn scrambled_gathers(cfg: UarchConfig) -> TimingResult {
+        let mut mem = Memory::new();
+        let tb = mem.alloc(1 << 16, 64);
+        let ib = mem.alloc(8 * 16, 64);
+        let idxs: Vec<u64> = (0..16).map(|i| ((i * 2654435761u64) ^ (i >> 3)) % 8192).collect();
+        mem.write_u64_slice(ib, &idxs);
+        time_program(
+            |a| {
+                a.push(Inst::MovImm { xd: 0, imm: ib });
+                a.push(Inst::MovImm { xd: 1, imm: tb });
+                a.push(Inst::Ptrue { pd: 0, esize: Esize::D, s: false });
+                a.push(Inst::SveLd1 {
+                    zt: 1,
+                    pg: 0,
+                    esize: Esize::D,
+                    base: 0,
+                    off: crate::isa::SveMemOff::ImmVl(0),
+                    ff: false,
+                });
+                for _ in 0..8 {
+                    a.push(Inst::SveLdGather {
+                        zt: 2,
+                        pg: 0,
+                        esize: Esize::D,
+                        addr: crate::isa::GatherAddr::BaseVec { xn: 1, zm: 1, scaled: true },
+                        ff: false,
+                    });
+                }
+            },
+            mem,
+            1024,
+            cfg,
+        )
+    }
+
+    #[test]
+    fn dram_channel_cycles_conserve_bandwidth() {
+        // 64 B line at 4 B/cycle => every DRAM fill holds the channel
+        // for exactly 16 cycles; with the prefetcher off the counter is
+        // an exact conservation law, not just a lower bound.
+        let cfg = UarchConfig { dram_bytes_per_cycle: 4, ..UarchConfig::default() };
+        let r = stream_loads(cfg);
+        assert!(r.l2_misses >= 512, "one miss per line, got {}", r.l2_misses);
+        assert_eq!(r.dram_channel_cycles, r.l2_misses * 16);
+        assert!(
+            r.cycles >= r.dram_channel_cycles,
+            "a shared channel cannot drain before its busy time: {} < {}",
+            r.cycles,
+            r.dram_channel_cycles
+        );
+    }
+
+    #[test]
+    fn narrower_dram_never_speeds_up_a_stream() {
+        let run = |bw| {
+            let cfg = UarchConfig { dram_bytes_per_cycle: bw, ..UarchConfig::default() };
+            stream_loads(cfg).cycles
+        };
+        let (c4, c16, c64, c_inf) = (run(4), run(16), run(64), run(0));
+        assert!(
+            c4 >= c16 && c16 >= c64 && c64 >= c_inf,
+            "cycles must be monotone non-increasing in bandwidth: {c4} {c16} {c64} {c_inf}"
+        );
+        assert!(c4 > c64, "a 16x narrower channel must cost cycles: {c4} vs {c64}");
+    }
+
+    #[test]
+    fn prefetcher_speeds_up_streams() {
+        let off = stream_loads(UarchConfig::default());
+        let cfg = UarchConfig { pf_entries: 64, pf_degree: 2, ..UarchConfig::default() };
+        let on = stream_loads(cfg);
+        assert_eq!(off.pf_issued, 0);
+        assert!(on.pf_issued >= 400, "stride trains quickly, got {}", on.pf_issued);
+        assert!(
+            on.pf_useful * 10 >= on.pf_issued * 9,
+            "unit stride must be highly accurate: {}/{}",
+            on.pf_useful,
+            on.pf_issued
+        );
+        assert!(
+            on.cycles * 10 <= off.cycles * 9,
+            "covered misses must show up as cycles: on={} off={}",
+            on.cycles,
+            off.cycles
+        );
+        assert_eq!(on.insts, off.insts, "timing knobs never change the retire stream");
+    }
+
+    #[test]
+    fn prefetcher_does_not_speed_up_scrambled_gathers() {
+        let off = scrambled_gathers(UarchConfig::default());
+        let cfg = UarchConfig { pf_entries: 64, pf_degree: 4, ..UarchConfig::default() };
+        let on = scrambled_gathers(cfg);
+        // no learnable stride: hardly anything issues, and cycles keep
+        // within 1% of the prefetch-free run (lucky fills are free in
+        // this model, so an exact pin would be brittle)
+        assert!(on.pf_useful <= 2, "scrambled gather trained: {} useful", on.pf_useful);
+        assert!(
+            on.cycles * 100 >= off.cycles * 99,
+            "random gathers must not benefit: on={} off={}",
+            on.cycles,
+            off.cycles
+        );
+        assert_eq!(on.insts, off.insts);
+    }
+
+    #[test]
+    fn disabled_memory_knobs_are_bit_identical() {
+        // pf_degree=0 (and pf_entries=0, and bw=0) must reproduce the
+        // old model exactly — the whole TimingResult, not just cycles.
+        let base_s = stream_loads(UarchConfig::default());
+        let base_g = scrambled_gathers(UarchConfig::default());
+        for cfg in [
+            UarchConfig { pf_entries: 64, pf_degree: 0, ..UarchConfig::default() },
+            UarchConfig { pf_entries: 0, pf_degree: 4, ..UarchConfig::default() },
+        ] {
+            assert_eq!(stream_loads(cfg.clone()), base_s);
+            assert_eq!(scrambled_gathers(cfg), base_g);
+        }
+        assert_eq!(base_s.pf_issued, 0);
+        assert_eq!(base_s.dram_channel_cycles, 0);
     }
 }

@@ -20,10 +20,12 @@
 //! * [`energy_pj`] — a pJ-proxy derived from the retired-op and
 //!   cache-event counters the pipeline already tracks
 //!   ([`super::pipeline::TimingResult`]), carried per run as
-//!   [`PpaCounters`]: per-inst front-end energy, per-lane vector
-//!   energy, per-level cache access energy, DRAM accesses, mispredict
-//!   flushes, cracked gather/scatter elements, and area-proportional
-//!   static leakage integrated over the run's cycles.
+//!   [`PpaCounters`]: per-inst front-end energy, per-µop-class
+//!   execution energy resolved over the decoder's [`UopClass`] retire
+//!   counts (see [`class_energy_pj`]), per-level cache access energy,
+//!   DRAM accesses, mispredict flushes, cracked gather/scatter
+//!   elements, and area-proportional static leakage integrated over
+//!   the run's cycles.
 //!
 //! Every function is a pure, deterministic function of integers and
 //! IEEE-754 double arithmetic — no host state — so the derived
@@ -32,6 +34,7 @@
 //! line).
 
 use super::config::UarchConfig;
+use crate::isa::{UopClass, NUM_UOP_CLASSES};
 
 // ---- area constants (µm², 16FF-class relative magnitudes) ----
 const SRAM_UM2_PER_BYTE: f64 = 0.35;
@@ -48,7 +51,6 @@ const VREG_UM2_PER_BIT: f64 = 22.0;
 // ---- energy constants (pJ) ----
 const E_INST_BASE_PJ: f64 = 4.0;
 const E_INST_PER_DECODE_SLOT_PJ: f64 = 0.5;
-const E_VLANE_PJ: f64 = 1.0;
 const E_L1D_BASE_PJ: f64 = 8.0;
 const E_L1D_PER_LOG2KB_PJ: f64 = 0.5;
 const E_L2_BASE_PJ: f64 = 28.0;
@@ -59,8 +61,58 @@ const E_FLUSH_PER_ROB_ENTRY_PJ: f64 = 0.25;
 const E_CRACKED_ELEM_PJ: f64 = 3.0;
 const LEAK_PJ_PER_UM2_CYCLE: f64 = 0.00002;
 
+/// Per-µop-class dynamic execution energy as `(base_pj, per_lane_pj)`:
+/// one retired µop of this class at `vl_bits` costs
+/// `base_pj + per_lane_pj * (vl_bits / 128)`.
+///
+/// The magnitudes are sanity-anchored to the Grace-class measurements
+/// of arXiv:2505.09462 (see EXPERIMENTS.md §PPA for the fit): scalar
+/// ALU ops are fractions of a pJ, FP divide/sqrt an order of magnitude
+/// above FP add, vector ops mostly per-lane with a small fixed issue
+/// cost, and gather/scatter the most expensive vector class (address
+/// generation per element on top of the cracked-port slots billed
+/// separately via `E_CRACKED_ELEM_PJ`). Cache/DRAM energy is **not**
+/// in this table — memory traffic is billed per event from the cache
+/// counters, so the load/store rows carry only AGU + TLB cost.
+pub fn class_energy_pj(class: UopClass) -> (f64, f64) {
+    use UopClass::*;
+    match class {
+        IntAlu => (0.4, 0.0),
+        IntMul => (1.2, 0.0),
+        IntDiv => (6.0, 0.0),
+        Branch => (0.3, 0.0),
+        FpAdd => (0.8, 0.0),
+        FpMul => (1.0, 0.0),
+        FpFma => (1.6, 0.0),
+        FpDiv => (8.0, 0.0),
+        FpSqrt => (10.0, 0.0),
+        FpCmp => (0.5, 0.0),
+        FpMov => (0.2, 0.0),
+        OpaqueCall => (40.0, 0.0),
+        VecIntAlu => (0.3, 0.6),
+        VecFpAdd => (0.4, 0.9),
+        VecFpMul => (0.4, 1.0),
+        VecFpFma => (0.5, 1.8),
+        VecFpDiv => (2.0, 6.0),
+        VecFpSqrt => (2.5, 7.5),
+        VecCmp => (0.3, 0.5),
+        PredOp => (0.25, 0.1),
+        VecReduceTree => (0.6, 1.2),
+        VecReduceOrdered => (0.6, 1.5),
+        VecPermute => (0.5, 1.1),
+        ScalarLoad => (1.2, 0.0),
+        ScalarStore => (1.0, 0.0),
+        VecLoad => (1.5, 1.2),
+        VecStore => (1.4, 1.1),
+        VecLoadBcast => (1.2, 0.4),
+        VecGather => (2.0, 2.5),
+        VecScatter => (2.0, 2.4),
+        Nop => (0.05, 0.0),
+    }
+}
+
 /// The raw pipeline event counters the energy proxy consumes, recorded
-/// per run (in `RunRecord` and every `sve-repro/fig8-job/v2` cache
+/// per run (in `RunRecord` and every `sve-repro/fig8-job/v3` cache
 /// file) so artifacts can be re-ranked under a revised model without
 /// re-simulating. All counters come from
 /// [`super::pipeline::TimingResult`]; note `l2_accesses` equals the
@@ -78,6 +130,16 @@ pub struct PpaCounters {
     pub mispredicts: u64,
     /// Port-slots consumed by cracked gather/scatter elements (§4).
     pub cracked_elems: u64,
+    /// L1D lines requested by the stride prefetcher.
+    pub pf_issued: u64,
+    /// Demand L1D hits served by a prefetched line (first touch only).
+    pub pf_useful: u64,
+    /// Cycles the shared DRAM channel was held by line fills
+    /// (demand + prefetch); zero when `dram_bytes_per_cycle` is 0.
+    pub dram_channel_cycles: u64,
+    /// Retired-µop count per [`UopClass`], indexed by
+    /// [`UopClass::index`] — the input to the per-class energy table.
+    pub class_counts: [u64; NUM_UOP_CLASSES],
 }
 
 /// Area proxy of one design point, split into the VL-independent core
@@ -98,8 +160,9 @@ pub struct AreaBreakdown {
 pub struct EnergyBreakdown {
     /// Fetch/decode/rename/retire energy, per retired instruction.
     pub front_pj: f64,
-    /// Per-lane vector execution energy (scales with VL).
-    pub vector_pj: f64,
+    /// Per-µop-class execution energy over the retire-count histogram
+    /// ([`class_energy_pj`]); vector classes scale with VL.
+    pub uop_pj: f64,
     /// L1D access energy (size-dependent per access).
     pub l1d_pj: f64,
     /// L2 access energy (size-dependent per access).
@@ -163,40 +226,50 @@ pub fn area_um2(cfg: &UarchConfig, vl_bits: usize) -> AreaBreakdown {
     AreaBreakdown { core_um2, vector_um2, total_um2: core_um2 + vector_um2 }
 }
 
-/// Energy proxy (pJ) of one run: `insts` retired instructions of which
-/// `vector_fraction` were vector, taking `cycles`, with the cache/flush
-/// event counts in `c`, on `cfg` instantiated at `vl_bits`.
+/// Energy proxy (pJ) of one run: `insts` retired instructions taking
+/// `cycles`, with the per-class retire histogram and cache/flush event
+/// counts in `c`, on `cfg` instantiated at `vl_bits`.
+///
+/// The execution component walks [`UopClass::ALL`] in declaration
+/// order and sums `count * (base + per_lane * lanes)` per class — the
+/// Python mirror in `tools/gen_goldens.py` accumulates in the same
+/// order so the IEEE-754 result is bit-identical.
 ///
 /// ```
 /// use sve_repro::uarch::{ppa, UarchConfig};
+/// use sve_repro::isa::UopClass;
 /// let cfg = UarchConfig::default();
-/// let c = ppa::PpaCounters {
+/// let mut c = ppa::PpaCounters {
 ///     l1d_accesses: 2500, l2_accesses: 300, mem_accesses: 40,
-///     mispredicts: 100, cracked_elems: 0,
+///     mispredicts: 100, ..Default::default()
 /// };
-/// let e = ppa::energy_pj(&cfg, 256, 10_000, 0.5, 8_000, &c);
+/// c.class_counts[UopClass::VecFpFma.index()] = 5_000;
+/// let e = ppa::energy_pj(&cfg, 256, 10_000, 8_000, &c);
 /// assert!(e.total_pj > 0.0 && e.total_pj.is_finite());
 /// // a DRAM miss costs orders of magnitude more than an ALU op
 /// let mut more = c;
 /// more.mem_accesses += 100;
-/// let e2 = ppa::energy_pj(&cfg, 256, 10_000, 0.5, 8_000, &more);
+/// let e2 = ppa::energy_pj(&cfg, 256, 10_000, 8_000, &more);
 /// assert!(e2.total_pj > e.total_pj + 100_000.0);
-/// // longer vectors spend more per vector instruction (and more leakage)
-/// let wide = ppa::energy_pj(&cfg, 2048, 10_000, 0.5, 8_000, &c);
-/// assert!(wide.total_pj > e.total_pj);
+/// // longer vectors spend more per vector µop (and more leakage)
+/// let wide = ppa::energy_pj(&cfg, 2048, 10_000, 8_000, &c);
+/// assert!(wide.uop_pj > e.uop_pj && wide.total_pj > e.total_pj);
 /// ```
 pub fn energy_pj(
     cfg: &UarchConfig,
     vl_bits: usize,
     insts: u64,
-    vector_fraction: f64,
     cycles: u64,
     c: &PpaCounters,
 ) -> EnergyBreakdown {
     let lanes = (vl_bits / 128) as f64;
     let front_pj =
         insts as f64 * (E_INST_BASE_PJ + cfg.decode_width as f64 * E_INST_PER_DECODE_SLOT_PJ);
-    let vector_pj = insts as f64 * vector_fraction * lanes * E_VLANE_PJ;
+    let mut uop_pj = 0.0;
+    for class in UopClass::ALL {
+        let (base, per_lane) = class_energy_pj(class);
+        uop_pj += c.class_counts[class.index()] as f64 * (base + per_lane * lanes);
+    }
     let l1d_pj = c.l1d_accesses as f64
         * (E_L1D_BASE_PJ + log2_kb(cfg.l1d_bytes) * E_L1D_PER_LOG2KB_PJ);
     let l2_pj =
@@ -208,17 +281,11 @@ pub fn energy_pj(
     let cracked_pj = c.cracked_elems as f64 * E_CRACKED_ELEM_PJ;
     let static_pj =
         cycles as f64 * area_um2(cfg, vl_bits).total_um2 * LEAK_PJ_PER_UM2_CYCLE;
-    let total_pj = front_pj
-        + vector_pj
-        + l1d_pj
-        + l2_pj
-        + mem_pj
-        + flush_pj
-        + cracked_pj
-        + static_pj;
+    let total_pj =
+        front_pj + uop_pj + l1d_pj + l2_pj + mem_pj + flush_pj + cracked_pj + static_pj;
     EnergyBreakdown {
         front_pj,
-        vector_pj,
+        uop_pj,
         l1d_pj,
         l2_pj,
         mem_pj,
@@ -263,13 +330,17 @@ pub fn check_model(cfg: &UarchConfig) -> Result<(), String> {
         mem_accesses: 1 << 12,
         mispredicts: 1 << 10,
         cracked_elems: 1 << 10,
+        pf_issued: 1 << 12,
+        pf_useful: 1 << 11,
+        dram_channel_cycles: 1 << 14,
+        class_counts: [1 << 16; NUM_UOP_CLASSES],
     };
     for vl in [128usize, 2048] {
         let a = area_um2(cfg, vl);
         if !a.total_um2.is_finite() || a.total_um2 <= 0.0 {
             return Err(format!("area proxy at VL {vl} is not positive and finite"));
         }
-        let e = energy_pj(cfg, vl, 1 << 24, 0.5, 1 << 24, &probe);
+        let e = energy_pj(cfg, vl, 1 << 24, 1 << 24, &probe);
         if !e.total_pj.is_finite() || e.total_pj <= 0.0 {
             return Err(format!("energy proxy at VL {vl} is not positive and finite"));
         }
@@ -283,12 +354,21 @@ mod tests {
     use crate::uarch::{base_variant, VARIANT_NAMES};
 
     fn counters() -> PpaCounters {
+        let mut class_counts = [0u64; NUM_UOP_CLASSES];
+        class_counts[UopClass::IntAlu.index()] = 40_000;
+        class_counts[UopClass::VecFpFma.index()] = 30_000;
+        class_counts[UopClass::VecLoad.index()] = 20_000;
+        class_counts[UopClass::Branch.index()] = 10_000;
         PpaCounters {
             l1d_accesses: 10_000,
             l2_accesses: 1_000,
             mem_accesses: 100,
             mispredicts: 50,
             cracked_elems: 20,
+            pf_issued: 500,
+            pf_useful: 400,
+            dram_channel_cycles: 1_600,
+            class_counts,
         }
     }
 
@@ -324,10 +404,10 @@ mod tests {
     #[test]
     fn energy_components_respond_to_their_events() {
         let cfg = base_variant("table2").unwrap();
-        let base = energy_pj(&cfg, 256, 100_000, 0.5, 80_000, &counters());
+        let base = energy_pj(&cfg, 256, 100_000, 80_000, &counters());
         assert!(base.total_pj > 0.0);
         let sum = base.front_pj
-            + base.vector_pj
+            + base.uop_pj
             + base.l1d_pj
             + base.l2_pj
             + base.mem_pj
@@ -338,17 +418,74 @@ mod tests {
         // each counter moves its component and the total
         let mut c = counters();
         c.mem_accesses *= 10;
-        let memy = energy_pj(&cfg, 256, 100_000, 0.5, 80_000, &c);
+        let memy = energy_pj(&cfg, 256, 100_000, 80_000, &c);
         assert!(memy.mem_pj > base.mem_pj && memy.total_pj > base.total_pj);
         let mut c = counters();
         c.mispredicts *= 10;
-        let flushy = energy_pj(&cfg, 256, 100_000, 0.5, 80_000, &c);
+        let flushy = energy_pj(&cfg, 256, 100_000, 80_000, &c);
         assert!(flushy.flush_pj > base.flush_pj);
         // fewer cycles -> less leakage
-        let quick = energy_pj(&cfg, 256, 100_000, 0.5, 40_000, &counters());
+        let quick = energy_pj(&cfg, 256, 100_000, 40_000, &counters());
         assert!(quick.static_pj < base.static_pj);
         // a DRAM access costs far more than an L1 hit
         assert!(E_MEM_PJ > 100.0 * E_L1D_BASE_PJ);
+    }
+
+    #[test]
+    fn per_class_energy_is_an_exact_sum() {
+        // Σ_c count_c * (base_c + per_lane_c * lanes), accumulated in
+        // class order, must reproduce uop_pj bit-for-bit.
+        let cfg = base_variant("table2").unwrap();
+        for vl in [128usize, 512, 2048] {
+            let c = counters();
+            let e = energy_pj(&cfg, vl, 100_000, 80_000, &c);
+            let lanes = (vl / 128) as f64;
+            let mut sum = 0.0;
+            for class in UopClass::ALL {
+                let (base, per_lane) = class_energy_pj(class);
+                sum += c.class_counts[class.index()] as f64 * (base + per_lane * lanes);
+            }
+            assert_eq!(e.uop_pj, sum, "VL {vl}");
+        }
+    }
+
+    #[test]
+    fn doubling_one_class_moves_only_its_component() {
+        let cfg = base_variant("table2").unwrap();
+        let base = energy_pj(&cfg, 256, 100_000, 80_000, &counters());
+        let mut c = counters();
+        let idx = UopClass::VecFpFma.index();
+        c.class_counts[idx] *= 2;
+        let more = energy_pj(&cfg, 256, 100_000, 80_000, &c);
+        let lanes = 2.0; // 256 / 128
+        let (b, pl) = class_energy_pj(UopClass::VecFpFma);
+        let delta = counters().class_counts[idx] as f64 * (b + pl * lanes);
+        let moved = more.uop_pj - base.uop_pj;
+        assert!(
+            (moved - delta).abs() <= delta * 1e-12,
+            "uop_pj moved {moved}, expected {delta}"
+        );
+        // every non-execution component is untouched
+        assert_eq!(more.front_pj, base.front_pj);
+        assert_eq!(more.l1d_pj, base.l1d_pj);
+        assert_eq!(more.l2_pj, base.l2_pj);
+        assert_eq!(more.mem_pj, base.mem_pj);
+        assert_eq!(more.flush_pj, base.flush_pj);
+        assert_eq!(more.cracked_pj, base.cracked_pj);
+        assert_eq!(more.static_pj, base.static_pj);
+    }
+
+    #[test]
+    fn vector_classes_scale_with_vl_scalar_classes_do_not() {
+        for class in UopClass::ALL {
+            let (base, per_lane) = class_energy_pj(class);
+            assert!(base > 0.0, "{}: free µops hide costs", class.name());
+            if class.is_vector() {
+                assert!(per_lane > 0.0, "{}: vector work must scale with VL", class.name());
+            } else {
+                assert_eq!(per_lane, 0.0, "{}: scalar µops are VL-independent", class.name());
+            }
+        }
     }
 
     #[test]

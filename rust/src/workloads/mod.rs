@@ -194,11 +194,11 @@ impl Workload {
     }
 }
 
-pub const NAMES: [&str; 17] = [
+pub const NAMES: [&str; 18] = [
     "graph500", "comd_lj", "nas_ep", // left
     "smg2000", "milcmk", "hpgmg", "su3_mv", "su3_dot", // middle
     "haccmk", "himenobmt", "stream_triad", "lulesh_hour", "spmv_ell", "strlen1m",
-    "onedal_cov", "onedal_moments", "onedal_l2dist", // right
+    "memcpy_like", "onedal_cov", "onedal_moments", "onedal_l2dist", // right
 ];
 
 /// Build a workload by name (panics on unknown names — the CLI
@@ -224,6 +224,7 @@ pub fn build(name: &str) -> Workload {
         "lulesh_hour" => lulesh_hour(),
         "spmv_ell" => spmv_ell(),
         "strlen1m" => strlen1m(),
+        "memcpy_like" => memcpy_like(),
         "onedal_cov" => onedal_cov(),
         "onedal_moments" => onedal_moments(),
         "onedal_l2dist" => onedal_l2dist(),
@@ -274,6 +275,34 @@ pub fn stream_triad() -> Workload {
         kind: Kind::Loop(k),
         mem,
         checks: vec![Check::F64Slice { base: yb, want, tol: 1e-12 }],
+        max_insts: 100_000_000,
+    }
+}
+
+/// memcpy-like copy: `y[i] = x[i]` over a 2 MB working set — no
+/// arithmetic at all, so with a finite-bandwidth DRAM channel it is
+/// the purest bandwidth-bound point in the suite (every line is a
+/// first-touch miss and the footprint dwarfs the 256 KB L2).
+pub fn memcpy_like() -> Workload {
+    let n = 131072u64; // 1 MB per f64 array
+    let mut mem = Memory::new();
+    let mut rng = Rng::new(211);
+    let xb = mem.alloc(8 * n, 64);
+    let yb = mem.alloc(8 * n, 64);
+    let xs: Vec<f64> = (0..n).map(|_| rng.f64_range(-1.0, 1.0)).collect();
+    mem.write_f64_slice(xb, &xs);
+
+    let mut k = Kernel::new("memcpy_like", Ty::F64, Trip::Count(n));
+    let x = k.array("x", Ty::F64, xb);
+    let y = k.array("y", Ty::F64, yb);
+    k.body.push(Stmt::Store { arr: y, idx: aff(0), value: Expr::load(x, aff(0)) });
+    let want = xs;
+    Workload {
+        name: "memcpy_like",
+        group: Group::Right,
+        kind: Kind::Loop(k),
+        mem,
+        checks: vec![Check::F64SliceExact { base: yb, want }],
         max_insts: 100_000_000,
     }
 }
@@ -1222,6 +1251,7 @@ mod tests {
             ("lulesh_hour", false, true),
             ("spmv_ell", false, true),
             ("strlen1m", false, true),
+            ("memcpy_like", true, true),
             ("onedal_cov", true, true),
             ("onedal_moments", true, true),
             ("onedal_l2dist", true, true),

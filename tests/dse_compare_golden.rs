@@ -52,6 +52,16 @@ fn rec(
             mem_accesses: insts / 128,
             mispredicts: insts / 100,
             cracked_elems: 0,
+            pf_issued: insts / 20,
+            pf_useful: insts / 25,
+            dram_channel_cycles: insts / 10,
+            class_counts: {
+                let mut counts = [0u64; sve_repro::isa::NUM_UOP_CLASSES];
+                for (i, slot) in counts.iter_mut().enumerate() {
+                    *slot = insts / (i as u64 + 2);
+                }
+                counts
+            },
         },
     }
 }

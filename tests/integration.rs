@@ -201,6 +201,7 @@ fn equivalent_override_spellings_hit_the_same_cache_entry() {
             mem_accesses: 10,
             mispredicts: 5,
             cracked_elems: 2,
+            ..Default::default()
         },
     };
     st.save(&key, &r).unwrap();

@@ -33,10 +33,13 @@ import sys
 # the wall compares point-for-point, so a baseline must match exactly.
 # PR 7 grew both matrices (onedal_cov, su3_mv): candidates from older
 # runs are stale and must be re-blessed from a current green run.
+# PR 9 grew every run record (prefetch + DRAM-channel counters): a
+# candidate missing those keys predates the memory model and is stale.
 FIG8_BENCHES = ["stream_triad", "haccmk", "graph500", "onedal_cov", "su3_mv"]
 DSE_BENCHES = ["stream_triad", "haccmk", "onedal_cov", "su3_mv"]
 DSE_VARIANTS = ["table2", "small-core"]
 SMOKE_VLS = [128, 256]
+MEMORY_COUNTERS = ["pf_issued", "pf_useful", "dram_channel_cycles"]
 
 GOLDEN_DIR = os.path.join(os.path.dirname(__file__), "..", "tests", "golden")
 
@@ -68,6 +71,16 @@ def check_benchmarks(path, benches, expect_names):
                 "%s: %s sweeps VLs %r, CI smoke sweeps %r"
                 % (path, b.get("bench"), [r.get("vl_bits") for r in sve], SMOKE_VLS)
             )
+        for r in [b.get("neon", {})] + sve:
+            missing = [k for k in MEMORY_COUNTERS if k not in r]
+            if missing:
+                return fail(
+                    "%s: %s vl=%s record is missing counter(s) %s — this "
+                    "baseline predates the PR-9 memory model (stride "
+                    "prefetcher + finite-bandwidth DRAM); re-bless a "
+                    "candidate from a green run of the current workflow"
+                    % (path, b.get("bench"), r.get("vl_bits"), ", ".join(missing))
+                )
         for r in sve:
             s = r.get("speedup")
             if not isinstance(s, (int, float)) or not math.isfinite(s) or s <= 0:

@@ -1,8 +1,9 @@
 #!/usr/bin/env python3
 """CI consistency check: the PPA energies in `dse.json` must be exactly
 reproducible from the raw event counters persisted in the (shared)
-`<out>/jobs/` store — including the cracked gather/scatter element
-counters the decode layer's `PerElem` rule drives.
+`<out>/jobs/` store — including the per-µop-class retire histogram the
+PR-9 energy model consumes and the prefetch/DRAM counters the run
+records now render.
 
 Usage:
     python3 tools/check_counters.py <reports-dir> [--expect-cracked]
@@ -13,10 +14,13 @@ job file in `<reports-dir>/jobs/` whose identity fields (bench, isa,
 vl_bits, cycles, insts, vector_fraction) match that run, recomputes the
 energy proxy from the job's counters with the same formulas the Rust
 emitter uses (imported from `gen_goldens.py`, which mirrors
-`rust/src/uarch/ppa.rs` operation for operation), and compares. A
-missing job or a mismatched energy fails the check: it would mean the
-PPA output was computed from counters the job store (and therefore the
-fig8 sweep sharing it) never saw.
+`rust/src/uarch/ppa.rs` operation for operation), and compares. The
+run's rendered `pf_issued`/`pf_useful`/`dram_channel_cycles` must equal
+the matched job's counters, with `pf_useful <= pf_issued`. A missing
+job, a missing counter key (named in the failure), or a mismatched
+energy fails the check: it would mean the PPA output was computed from
+counters the job store (and therefore the fig8 sweep sharing it) never
+saw.
 
 `--expect-cracked` additionally requires at least one matched SVE job to
 carry a nonzero `cracked_elems` counter — used with a gather-heavy
@@ -29,7 +33,21 @@ import math
 import os
 import sys
 
-from gen_goldens import energy_pj
+from gen_goldens import NUM_UOP_CLASSES, energy_pj
+
+JOB_SCHEMA = "sve-repro/fig8-job/v3"
+
+COUNTER_KEYS = [
+    "l1d_accesses",
+    "l2_accesses",
+    "mem_accesses",
+    "mispredicts",
+    "cracked_elems",
+    "pf_issued",
+    "pf_useful",
+    "dram_channel_cycles",
+    "class_counts",
+]
 
 
 def load_jobs(jobs_dir):
@@ -37,7 +55,7 @@ def load_jobs(jobs_dir):
     for path in sorted(glob.glob(os.path.join(jobs_dir, "*.json"))):
         with open(path, encoding="utf-8") as fh:
             doc = json.load(fh)
-        if doc.get("schema") != "sve-repro/fig8-job/v2":
+        if doc.get("schema") != JOB_SCHEMA:
             continue
         doc["_path"] = path
         jobs.append(doc)
@@ -45,13 +63,24 @@ def load_jobs(jobs_dir):
 
 
 def job_counters(job):
-    return {
-        "l1d_accesses": job["l1d_accesses"],
-        "l2_accesses": job["l2_accesses"],
-        "mem_accesses": job["mem_accesses"],
-        "mispredicts": job["mispredicts"],
-        "cracked_elems": job["cracked_elems"],
-    }
+    """The counter dict `energy_pj` consumes. A job file missing any
+    counter (e.g. a stale pre-PR-9 cache entry that slipped past the
+    schema filter) is a hard failure naming the missing key."""
+    out = {}
+    for key in COUNTER_KEYS:
+        if key not in job:
+            sys.exit(
+                "FAIL: job file %s is missing counter '%s' — pre-%s job "
+                "files cannot back the per-class energy model"
+                % (job.get("_path", "<unknown>"), key, JOB_SCHEMA)
+            )
+        out[key] = job[key]
+    if len(out["class_counts"]) != NUM_UOP_CLASSES:
+        sys.exit(
+            "FAIL: job file %s has %d class_counts entries (want %d)"
+            % (job.get("_path", "<unknown>"), len(out["class_counts"]), NUM_UOP_CLASSES)
+        )
+    return out
 
 
 def match_job(jobs, bench, isa, run):
@@ -70,6 +99,30 @@ def match_job(jobs, bench, isa, run):
     return out
 
 
+def check_prefetch_stats(variant, bench, isa, run, cnt):
+    """The prefetch/DRAM counters rendered into the run record must be
+    the job store's, and internally consistent."""
+    for key in ("pf_issued", "pf_useful", "dram_channel_cycles"):
+        if key not in run:
+            sys.exit(
+                "FAIL: %s/%s/%s@vl%d: run record is missing '%s' — "
+                "regenerate the reports with a PR-9 binary"
+                % (variant, bench, isa, run["vl_bits"], key)
+            )
+        if run[key] != cnt[key]:
+            sys.exit(
+                "FAIL: %s/%s/%s@vl%d: %s is %d in dse.json but %d in the "
+                "matched job file"
+                % (variant, bench, isa, run["vl_bits"], key, run[key], cnt[key])
+            )
+    if cnt["pf_useful"] > cnt["pf_issued"]:
+        sys.exit(
+            "FAIL: %s/%s/%s@vl%d: pf_useful %d exceeds pf_issued %d — a "
+            "prefetched line cannot be useful more often than it was issued"
+            % (variant, bench, isa, run["vl_bits"], cnt["pf_useful"], cnt["pf_issued"])
+        )
+
+
 def main():
     args = [a for a in sys.argv[1:] if not a.startswith("--")]
     expect_cracked = "--expect-cracked" in sys.argv[1:]
@@ -82,10 +135,11 @@ def main():
         sys.exit("FAIL: dse.json is not a sve-repro/dse/v2 document")
     jobs = load_jobs(os.path.join(reports, "jobs"))
     if not jobs:
-        sys.exit("FAIL: no v2 job files under %s/jobs/" % reports)
+        sys.exit("FAIL: no %s job files under %s/jobs/" % (JOB_SCHEMA, reports))
 
     checked = 0
     cracked_total = 0
+    pf_issued_total = 0
     for variant in dse["variants"]:
         uarch = variant["uarch"]
         runs = {}  # bench -> list of (isa, run-record dict)
@@ -108,18 +162,20 @@ def main():
                     )
                 ok = False
                 for j in matches:
+                    cnt = job_counters(j)
                     got = energy_pj(
                         uarch,
                         run["vl_bits"],
                         run["insts"],
-                        run["vector_fraction"],
                         run["cycles"],
-                        job_counters(j),
+                        cnt,
                     )
                     if math.isclose(got, want, rel_tol=1e-12, abs_tol=0.0):
                         ok = True
+                        check_prefetch_stats(variant["name"], bench, isa, run, cnt)
+                        pf_issued_total += cnt["pf_issued"]
                         if isa != "neon":
-                            cracked_total += j["cracked_elems"]
+                            cracked_total += cnt["cracked_elems"]
                         break
                 if not ok:
                     sys.exit(
@@ -135,7 +191,8 @@ def main():
         )
     print(
         "OK: %d energy points reproduced from job-store counters "
-        "(cracked_elems total over SVE jobs: %d)" % (checked, cracked_total)
+        "(cracked_elems total over SVE jobs: %d, pf_issued total: %d)"
+        % (checked, cracked_total, pf_issued_total)
     )
 
 

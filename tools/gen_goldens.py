@@ -123,6 +123,48 @@ def log2_kb(nbytes):
     return float(max(nbytes // 1024, 1).bit_length() - 1)
 
 
+# Mirror of rust/src/uarch/ppa.rs::class_energy_pj, one (name, base_pj,
+# per_lane_pj) tuple per UopClass in declaration (= UopClass::ALL)
+# order. The Rust accumulation walks this exact order, so the summation
+# below reproduces uop_pj bit-for-bit.
+CLASS_ENERGY = [
+    ("int_alu", 0.4, 0.0),
+    ("int_mul", 1.2, 0.0),
+    ("int_div", 6.0, 0.0),
+    ("branch", 0.3, 0.0),
+    ("fp_add", 0.8, 0.0),
+    ("fp_mul", 1.0, 0.0),
+    ("fp_fma", 1.6, 0.0),
+    ("fp_div", 8.0, 0.0),
+    ("fp_sqrt", 10.0, 0.0),
+    ("fp_cmp", 0.5, 0.0),
+    ("fp_mov", 0.2, 0.0),
+    ("opaque_call", 40.0, 0.0),
+    ("vec_int_alu", 0.3, 0.6),
+    ("vec_fp_add", 0.4, 0.9),
+    ("vec_fp_mul", 0.4, 1.0),
+    ("vec_fp_fma", 0.5, 1.8),
+    ("vec_fp_div", 2.0, 6.0),
+    ("vec_fp_sqrt", 2.5, 7.5),
+    ("vec_cmp", 0.3, 0.5),
+    ("pred_op", 0.25, 0.1),
+    ("vec_reduce_tree", 0.6, 1.2),
+    ("vec_reduce_ordered", 0.6, 1.5),
+    ("vec_permute", 0.5, 1.1),
+    ("scalar_load", 1.2, 0.0),
+    ("scalar_store", 1.0, 0.0),
+    ("vec_load", 1.5, 1.2),
+    ("vec_store", 1.4, 1.1),
+    ("vec_load_bcast", 1.2, 0.4),
+    ("vec_gather", 2.0, 2.5),
+    ("vec_scatter", 2.0, 2.4),
+    ("nop", 0.05, 0.0),
+]
+
+NUM_UOP_CLASSES = len(CLASS_ENERGY)
+assert NUM_UOP_CLASSES == 31
+
+
 def area_um2(c, vl_bits):
     """Returns (core_um2, vector_um2, total_um2)."""
     sram = float(c["l1i_bytes"] + c["l1d_bytes"] + c["l2_bytes"]) * 0.35
@@ -145,11 +187,13 @@ def area_um2(c, vl_bits):
     return core, vector, core + vector
 
 
-def energy_pj(c, vl_bits, insts, vector_fraction, cycles, cnt):
+def energy_pj(c, vl_bits, insts, cycles, cnt):
     """Total energy proxy (the Rust EnergyBreakdown.total_pj)."""
     lanes = float(vl_bits // 128)
     front = float(insts) * (4.0 + float(c["decode_width"]) * 0.5)
-    vector = float(insts) * vector_fraction * lanes * 1.0
+    uop = 0.0
+    for i, (_name, base, per_lane) in enumerate(CLASS_ENERGY):
+        uop += float(cnt["class_counts"][i]) * (base + per_lane * lanes)
     l1d = float(cnt["l1d_accesses"]) * (8.0 + log2_kb(c["l1d_bytes"]) * 0.5)
     l2 = float(cnt["l2_accesses"]) * (28.0 + log2_kb(c["l2_bytes"]) * 1.0)
     mem = float(cnt["mem_accesses"]) * 2200.0
@@ -158,7 +202,7 @@ def energy_pj(c, vl_bits, insts, vector_fraction, cycles, cnt):
     )
     cracked = float(cnt["cracked_elems"]) * 3.0
     static_ = float(cycles) * area_um2(c, vl_bits)[2] * 0.00002
-    return front + vector + l1d + l2 + mem + flush + cracked + static_
+    return front + uop + l1d + l2 + mem + flush + cracked + static_
 
 
 def perf_per_watt(e):
@@ -171,8 +215,7 @@ def perf_per_mm2(cycles, area):
 
 def run_energy(rec_, uarch):
     return energy_pj(
-        uarch, rec_["vl_bits"], rec_["insts"], rec_["vector_fraction"], rec_["cycles"],
-        rec_["counters"],
+        uarch, rec_["vl_bits"], rec_["insts"], rec_["cycles"], rec_["counters"],
     )
 
 
@@ -186,13 +229,18 @@ def rec(bench, group, vl_bits, cycles, insts, ipc, vectorized, vf, miss):
         "bench": bench, "group": group, "vl_bits": vl_bits, "cycles": cycles,
         "insts": insts, "ipc": ipc, "vectorized": vectorized,
         "vector_fraction": vf, "l1d_miss_rate": miss,
-        # fixed function of insts, mirrored from the Rust fixture
+        # fixed function of insts, mirrored from the Rust fixtures in
+        # tests/report_golden.rs and tests/dse_compare_golden.rs
         "counters": {
             "l1d_accesses": insts // 4,
             "l2_accesses": insts // 32,
             "mem_accesses": insts // 128,
             "mispredicts": insts // 100,
             "cracked_elems": 0,
+            "pf_issued": insts // 20,
+            "pf_useful": insts // 25,
+            "dram_channel_cycles": insts // 10,
+            "class_counts": [insts // (i + 2) for i in range(NUM_UOP_CLASSES)],
         },
     }
 
@@ -243,6 +291,7 @@ def table2_uarch():
         "port_bytes": 64, "line_cross_penalty": 2, "cross_lane_per_128b": 1,
         "l1_lat": 4, "l2_lat": 12, "mem_lat": 80,
         "branch_mispredict_penalty": 12, "opaque_lat": 40,
+        "pf_entries": 0, "pf_degree": 0, "dram_bytes_per_cycle": 0,
     }
 
 
@@ -291,6 +340,9 @@ def run_json(r, sp=None):
         "vectorized": r["vectorized"],
         "vector_fraction": float(r["vector_fraction"]),
         "l1d_miss_rate": float(r["l1d_miss_rate"]),
+        "pf_issued": r["counters"]["pf_issued"],
+        "pf_useful": r["counters"]["pf_useful"],
+        "dram_channel_cycles": r["counters"]["dram_channel_cycles"],
     })
     return out
 
@@ -369,8 +421,9 @@ def fig8_to_markdown(rws, vls):
 
 
 def fig8_rows():
-    """Mirror of tests/report_golden.rs::rows() (the fig8 goldens use a
-    simpler fixture than the DSE one: counters are never rendered)."""
+    """Mirror of tests/report_golden.rs::rows() (same counter formulas
+    as the DSE fixture: run_json renders the PR-9 prefetch/DRAM
+    counters, so the fig8 goldens pin them too)."""
     triad_neon = rec("stream_triad", "right", 128, 1000, 10000, 1.5, True, 0.5, 0.125)
     triad_sve = [
         rec("stream_triad", "right", 128, 800, 9000, 2.5, True, 0.75, 0.0625),
