@@ -24,16 +24,38 @@
 
 use sve_repro::bench_util::{bench_n, report_ab, report_throughput, Sample};
 use sve_repro::compiler::{Compiled, Target};
-use sve_repro::exec::{Engine, Executor};
+use sve_repro::exec::{Engine, Executor, TraceStats};
 use sve_repro::uarch::{run_timed_decoded_engine, UarchConfig};
 use sve_repro::workloads::{self, Workload};
 
 const VL_BITS: usize = 256;
-/// The smoke subset (first four) covers every IR shape the hot path
-/// dispatches on: streaming FMA, gather, reduction-of-products
-/// (oneDAL) and the complex-multiply lane-parity form (SU(3)).
-const KERNELS: [&str; 6] =
-    ["stream_triad", "haccmk", "onedal_cov", "su3_mv", "strlen1m", "graph500"];
+/// All 18 workloads, smoke subset first. The smoke six cover every IR
+/// shape the hot path dispatches on — streaming FMA, gather,
+/// reduction-of-products (oneDAL), the complex-multiply lane-parity
+/// form (SU(3)), the linked outer×inner column walk (onedal_moments)
+/// and the ELL row nest (spmv_ell) — so the CI gate sees trace linking
+/// and dense twins, not just single-loop traces.
+const KERNELS: [&str; 18] = [
+    "stream_triad",
+    "haccmk",
+    "onedal_cov",
+    "su3_mv",
+    "onedal_moments",
+    "spmv_ell",
+    "strlen1m",
+    "graph500",
+    "comd_lj",
+    "nas_ep",
+    "smg2000",
+    "milcmk",
+    "hpgmg",
+    "su3_dot",
+    "himenobmt",
+    "lulesh_hour",
+    "memcpy_like",
+    "onedal_l2dist",
+];
+const SMOKE: usize = 6;
 
 /// One engine's pair of measurements for one kernel.
 struct EngineCols {
@@ -47,6 +69,8 @@ struct Row {
     baseline: EngineCols,
     /// `None` under `--no-trace`.
     trace: Option<EngineCols>,
+    /// Trace-cache telemetry from the correctness-gate trace run.
+    tstats: TraceStats,
 }
 
 fn measure(w: &Workload, c: &Compiled, engine: Engine, n: usize) -> EngineCols {
@@ -66,8 +90,10 @@ fn measure(w: &Workload, c: &Compiled, engine: Engine, n: usize) -> EngineCols {
 
 /// Run `w` once per engine through the full functional+timing pipeline
 /// and demand equal statistics and timing counters. Returns the shared
-/// instruction count.
-fn check_engines_agree(name: &str, w: &Workload, c: &Compiled) -> f64 {
+/// instruction count plus the trace run's cache telemetry (which is
+/// excluded from `RunStats` equality — it is observability, not
+/// architecture).
+fn check_engines_agree(name: &str, w: &Workload, c: &Compiled) -> (f64, TraceStats) {
     let mut base = Executor::new(VL_BITS, w.mem.clone());
     let (bs, bt) = run_timed_decoded_engine(
         &mut base,
@@ -92,7 +118,7 @@ fn check_engines_agree(name: &str, w: &Workload, c: &Compiled) -> f64 {
         eprintln!("  trace    stats {ts:?} timing {tt:?}");
         std::process::exit(1);
     }
-    bs.insts as f64
+    (bs.insts as f64, ts.trace)
 }
 
 fn main() {
@@ -104,7 +130,14 @@ fn main() {
         .position(|a| a == "--out")
         .and_then(|i| args.get(i + 1).cloned())
         .unwrap_or_else(|| "BENCH_hotpath.json".into());
-    let (names, samples): (&[&str], usize) = if smoke { (&KERNELS[..4], 2) } else { (&KERNELS, 5) };
+    let (names, samples): (&[&str], usize) =
+        if smoke { (&KERNELS[..SMOKE], 2) } else { (&KERNELS, 5) };
+    // the full set must track the workload registry exactly — a kernel
+    // added there without A/B coverage here is a silent perf blind spot
+    assert_eq!(KERNELS.len(), workloads::NAMES.len(), "bench must cover every workload");
+    for n in workloads::NAMES {
+        assert!(KERNELS.contains(&n), "workload {n} missing from the hotpath bench");
+    }
 
     let mut rows: Vec<Row> = Vec::new();
     for &name in names {
@@ -114,7 +147,7 @@ fn main() {
         let c = w.compile(Target::Sve);
         // correctness gate first — a fast-but-wrong engine must never
         // produce a perf number
-        let insts = check_engines_agree(name, &w, &c);
+        let (insts, tstats) = check_engines_agree(name, &w, &c);
         let baseline = measure(&w, &c, Engine::Baseline, samples);
         report_throughput(
             &format!("functional {name} baseline ({insts:.0} insts)"),
@@ -132,7 +165,32 @@ fn main() {
             report_ab(&tl, &baseline.func_timing, &tr.func_timing, insts, "inst");
             Some(tr)
         };
-        rows.push(Row { name, insts, baseline, trace });
+        rows.push(Row { name, insts, baseline, trace, tstats });
+    }
+
+    // Telemetry gate: the trace cache must actually be doing the things
+    // the perf claims rest on. Some kernel's steady state must take
+    // patched trace→trace links, and at least one PR 7 kernel family
+    // (onedal_* / su3_*) must run linked *and* dense. The telemetry
+    // comes from the always-on correctness-gate run, so this holds even
+    // under --no-trace.
+    let linked = rows.iter().any(|r| r.tstats.link_jumps > 0);
+    let pr7_dense = rows.iter().any(|r| {
+        (r.name.starts_with("onedal_") || r.name.starts_with("su3_"))
+            && r.tstats.link_jumps > 0
+            && r.tstats.dense_iters > 0
+    });
+    if !linked || !pr7_dense {
+        for r in &rows {
+            eprintln!("  {}: {:?}", r.name, r.tstats);
+        }
+        if !linked {
+            eprintln!("FAILED: no kernel took a trace link jump");
+        }
+        if !pr7_dense {
+            eprintln!("FAILED: no onedal_*/su3_* kernel ran linked dense iterations");
+        }
+        std::process::exit(1);
     }
 
     // Hand-rolled JSON (the offline image has no serde); schema kept
@@ -177,6 +235,14 @@ fn main() {
                 tr.func_timing.throughput(r.insts) / 1e6,
             ));
         }
+        // additive trace-cache telemetry (ignored by `report --compare`)
+        let t = &r.tstats;
+        json.push_str(&format!(
+            ",\n             \"trace_built\": {}, \"trace_rejected\": {}, \
+             \"trace_rerecorded\": {}, \"trace_link_jumps\": {}, \
+             \"trace_dense_iters\": {}, \"trace_general_iters\": {}",
+            t.built, t.rejected, t.rerecorded, t.link_jumps, t.dense_iters, t.general_iters,
+        ));
         json.push_str(&format!(" }}{sep}\n"));
     }
     json.push_str("  }\n}\n");

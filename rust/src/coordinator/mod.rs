@@ -126,9 +126,19 @@ pub fn run_one(name: &'static str, isa: Isa) -> Result<RunRecord, String> {
 /// [`run_one`] on an explicit functional engine (the CLI's `--no-trace`
 /// escape hatch selects [`Engine::Baseline`] here for A/B runs).
 pub fn run_one_engine(name: &'static str, isa: Isa, engine: Engine) -> Result<RunRecord, String> {
+    run_one_engine_stats(name, isa, engine).map(|(r, _)| r)
+}
+
+/// [`run_one_engine`], also returning the raw [`crate::exec::RunStats`]
+/// (trace-cache telemetry included) for `sve run --trace-stats`.
+pub fn run_one_engine_stats(
+    name: &'static str,
+    isa: Isa,
+    engine: Engine,
+) -> Result<(RunRecord, crate::exec::RunStats), String> {
     let w = workloads::build(name);
     let compiled = w.compile(isa.target());
-    run_compiled_engine_with(&w, &compiled, isa, &UarchConfig::default(), engine)
+    run_compiled_engine_stats(&w, &compiled, isa, &UarchConfig::default(), engine)
 }
 
 /// [`run_compiled_with`] at the paper's Table 2 configuration.
@@ -161,6 +171,21 @@ pub fn run_compiled_engine_with(
     cfg: &UarchConfig,
     engine: Engine,
 ) -> Result<RunRecord, String> {
+    run_compiled_engine_stats(w, compiled, isa, cfg, engine).map(|(r, _)| r)
+}
+
+/// [`run_compiled_engine_with`], also returning the raw
+/// [`crate::exec::RunStats`] — the carrier of the trace-cache telemetry
+/// ([`crate::exec::TraceStats`]) behind `sve run --trace-stats` and the
+/// hotpath bench. The telemetry never enters the [`RunRecord`] (job
+/// cache files stay engine-agnostic).
+pub fn run_compiled_engine_stats(
+    w: &Workload,
+    compiled: &Compiled,
+    isa: Isa,
+    cfg: &UarchConfig,
+    engine: Engine,
+) -> Result<(RunRecord, crate::exec::RunStats), String> {
     let name = w.name;
     let mut ex = Executor::new(isa.vl(), w.mem.clone());
     let (stats, timing) =
@@ -168,7 +193,7 @@ pub fn run_compiled_engine_with(
             .map_err(|e| format!("{name}/{}: trap {e:?}", isa.label()))?;
     w.verify(&ex.mem).map_err(|e| format!("{name}/{}: {e}", isa.label()))?;
     let mem_accesses = timing.l1d_hits + timing.l1d_misses;
-    Ok(RunRecord {
+    let record = RunRecord {
         bench: name,
         group: w.group,
         isa,
@@ -193,7 +218,8 @@ pub fn run_compiled_engine_with(
             dram_channel_cycles: timing.dram_channel_cycles,
             class_counts: timing.class_counts,
         },
-    })
+    };
+    Ok((record, stats))
 }
 
 /// The Fig. 8 data for one benchmark.

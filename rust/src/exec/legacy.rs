@@ -1056,6 +1056,148 @@ mod bitident {
         });
     }
 
+    // ---- PR-10 wall: trace linking and the full dense-twin surface ----
+
+    /// A two-level daxpy nest: the shape whose steady state chains
+    /// outer-close → outer-head → inner-loop traces through patched
+    /// links on the trace engine.
+    fn nested_daxpy_prog(x: u64, y: u64, a_addr: u64, n: u64, reps: u64) -> Program {
+        let mut a = Asm::new();
+        use crate::isa::{Cond, Inst, SveMemOff};
+        a.push(Inst::MovImm { xd: 0, imm: x });
+        a.push(Inst::MovImm { xd: 1, imm: y });
+        a.push(Inst::MovImm { xd: 2, imm: a_addr });
+        a.push(Inst::MovImm { xd: 3, imm: n });
+        a.push(Inst::MovImm { xd: 5, imm: reps });
+        a.push(Inst::MovImm { xd: 4, imm: 0 });
+        a.push(Inst::While { pd: 0, esize: Esize::D, xn: 4, xm: 3, unsigned: false });
+        a.push(Inst::SveLd1R { zt: 0, pg: 0, esize: Esize::D, base: 2, imm: 0 });
+        a.label("outer");
+        a.push(Inst::MovImm { xd: 4, imm: 0 });
+        a.push(Inst::While { pd: 0, esize: Esize::D, xn: 4, xm: 3, unsigned: false });
+        a.label("loop");
+        let off = SveMemOff::RegScaled(4);
+        a.push(Inst::SveLd1 { zt: 1, pg: 0, esize: Esize::D, base: 0, off, ff: false });
+        a.push(Inst::SveLd1 { zt: 2, pg: 0, esize: Esize::D, base: 1, off, ff: false });
+        a.push(Inst::SveFmla { zda: 2, pg: 0, zn: 1, zm: 0, dbl: true, sub: false });
+        a.push(Inst::SveSt1 { zt: 2, pg: 0, esize: Esize::D, base: 1, off });
+        a.push(Inst::IncDec { xdn: 4, esize: Esize::D, dec: false });
+        a.push(Inst::While { pd: 0, esize: Esize::D, xn: 4, xm: 3, unsigned: false });
+        a.push_branch(Inst::BCond { cond: Cond::FIRST, target: 0 }, "loop");
+        a.push(Inst::AddImm { xd: 5, xn: 5, imm: -1 });
+        a.push_branch(Inst::Cbnz { xn: 5, target: 0 }, "outer");
+        a.push(Inst::Halt);
+        a.finish()
+    }
+
+    /// Linked loop nests are bit-identical three ways, across VLs and
+    /// awkward trip counts — and the trace engine really does take
+    /// patched link jumps on the steady state.
+    #[test]
+    fn linked_loop_nests_are_bit_identical_three_way() {
+        for vl in [128usize, 256, 1024] {
+            for (n, reps) in [(0u64, 8u64), (1, 8), (7, 12), (16, 8), (33, 6)] {
+                let mut mem = Memory::new();
+                let x = mem.alloc(8 * n.max(1), 16);
+                let y = mem.alloc(8 * n.max(1), 16);
+                let a_addr = mem.alloc(8, 8);
+                for i in 0..n {
+                    mem.write_f64(x + 8 * i, 0.25 * i as f64).unwrap();
+                    mem.write_f64(y + 8 * i, 10.0 + i as f64).unwrap();
+                }
+                mem.write_f64(a_addr, 1.5).unwrap();
+                let prog = nested_daxpy_prog(x, y, a_addr, n, reps);
+                let what = format!("nest n={n} reps={reps}@vl{vl}");
+                run_both(&prog, &mem, vl, 1_000_000, &[(y, 8 * n)], &what);
+            }
+        }
+        // the steady state of a big-enough nest takes patched links
+        let mut mem = Memory::new();
+        let x = mem.alloc(8 * 16, 16);
+        let y = mem.alloc(8 * 16, 16);
+        let a_addr = mem.alloc(8, 8);
+        for i in 0..16u64 {
+            mem.write_f64(x + 8 * i, 0.25 * i as f64).unwrap();
+            mem.write_f64(y + 8 * i, 10.0 + i as f64).unwrap();
+        }
+        mem.write_f64(a_addr, 1.5).unwrap();
+        let prog = nested_daxpy_prog(x, y, a_addr, 16, 8);
+        let dec = DecodedProgram::decode(&prog);
+        let mut ex = Executor::new(256, mem);
+        let mut eng = crate::exec::TraceEngine::with_threshold(&dec, 2);
+        let stats = eng.run_with(&mut ex, &dec, 1_000_000, |_| {}).unwrap();
+        assert!(stats.trace.link_jumps > 0, "the nest steady state must run linked");
+    }
+
+    /// A `whilelt` hot loop through every newly dense-twinned tag —
+    /// broadcast (`SveLd1R`), register copy (`CpyX`), select (`Sel`),
+    /// gather and scatter (`BaseVec`), tree (`SveReduce`) and ordered
+    /// (`SveFadda`) reductions — bit-identical three ways, and the trace
+    /// engine really runs its dense slots on full-prefix iterations.
+    #[test]
+    fn dense_twin_gauntlet_is_bit_identical_three_way() {
+        use crate::isa::{Cond, GatherAddr, Inst, RedOp, SveMemOff};
+        let build = |n: u64| -> (Memory, u64, Program) {
+            let mut mem = Memory::new();
+            let x = mem.alloc(8 * n.max(1), 16);
+            let y = mem.alloc(8 * n.max(1), 16);
+            let idx = mem.alloc(8 * n.max(1), 16);
+            let out = mem.alloc(8 * n.max(1), 16);
+            let a_addr = mem.alloc(8, 8);
+            for i in 0..n {
+                mem.write_f64(x + 8 * i, 0.5 * i as f64 - 3.0).unwrap();
+                mem.write_f64(y + 8 * i, 20.0 - i as f64).unwrap();
+                // a permutation keeps scatter lanes disjoint
+                mem.write_u64(idx + 8 * i, n - 1 - i).unwrap();
+            }
+            mem.write_f64(a_addr, 1.25).unwrap();
+            let mut a = Asm::new();
+            a.push(Inst::MovImm { xd: 0, imm: x });
+            a.push(Inst::MovImm { xd: 1, imm: y });
+            a.push(Inst::MovImm { xd: 2, imm: a_addr });
+            a.push(Inst::MovImm { xd: 3, imm: n });
+            a.push(Inst::MovImm { xd: 6, imm: idx });
+            a.push(Inst::MovImm { xd: 8, imm: out });
+            a.push(Inst::MovImm { xd: 7, imm: 0x4008_0000_0000_0000 }); // f64 3.0 bits
+            a.push(Inst::MovImm { xd: 4, imm: 0 });
+            a.push(Inst::While { pd: 0, esize: Esize::D, xn: 4, xm: 3, unsigned: false });
+            a.label("loop");
+            let off = SveMemOff::RegScaled(4);
+            a.push(Inst::SveLd1R { zt: 0, pg: 0, esize: Esize::D, base: 2, imm: 0 });
+            a.push(Inst::SveLd1 { zt: 1, pg: 0, esize: Esize::D, base: 0, off, ff: false });
+            a.push(Inst::SveLd1 { zt: 5, pg: 0, esize: Esize::D, base: 6, off, ff: false });
+            let bv = GatherAddr::BaseVec { xn: 1, zm: 5, scaled: true };
+            a.push(Inst::SveLdGather { zt: 2, pg: 0, esize: Esize::D, addr: bv, ff: false });
+            a.push(Inst::CpyX { zd: 3, pg: 0, xn: 7, esize: Esize::D });
+            a.push(Inst::Sel { zd: 4, pg: 0, zn: 2, zm: 3, esize: Esize::D });
+            a.push(Inst::SveFmla { zda: 2, pg: 0, zn: 1, zm: 0, dbl: true, sub: false });
+            a.push(Inst::SveStScatter { zt: 2, pg: 0, esize: Esize::D, addr: bv });
+            a.push(Inst::SveSt1 { zt: 4, pg: 0, esize: Esize::D, base: 8, off });
+            a.push(Inst::SveReduce { op: RedOp::FAddV, vd: 10, pg: 0, zn: 4, esize: Esize::D });
+            a.push(Inst::SveFadda { vdn: 11, pg: 0, zm: 1, dbl: true });
+            a.push(Inst::IncDec { xdn: 4, esize: Esize::D, dec: false });
+            a.push(Inst::While { pd: 0, esize: Esize::D, xn: 4, xm: 3, unsigned: false });
+            a.push_branch(Inst::BCond { cond: Cond::FIRST, target: 0 }, "loop");
+            a.push(Inst::Halt);
+            (mem, y, a.finish())
+        };
+        for vl in [128usize, 256, 512, 1024] {
+            for n in [0u64, 1, 5, 16, 33, 64] {
+                let (mem, y, prog) = build(n);
+                let what = format!("twin gauntlet n={n}@vl{vl}");
+                run_both(&prog, &mem, vl, 1_000_000, &[(y, 8 * n)], &what);
+            }
+        }
+        // the full-prefix iterations of a hot run take the dense slots
+        let (mem, _y, prog) = build(64);
+        let dec = DecodedProgram::decode(&prog);
+        let mut ex = Executor::new(256, mem);
+        let mut eng = crate::exec::TraceEngine::with_threshold(&dec, 2);
+        let stats = eng.run_with(&mut ex, &dec, 1_000_000, |_| {}).unwrap();
+        assert!(eng.has_dense_trace(), "the gauntlet loop must dense-specialize");
+        assert!(stats.trace.dense_iters > 0, "and run dense iterations");
+    }
+
     /// Budget exhaustion and faults trap identically on both paths.
     #[test]
     fn traps_agree_across_paths() {

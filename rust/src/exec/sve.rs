@@ -239,24 +239,45 @@ impl Executor {
     }
 
     pub(crate) fn sve_cpy_x(&mut self, zd: u8, pg: u8, xn: u8, esize: Esize) {
+        self.sve_cpy_x_impl::<false>(zd, pg, xn, esize);
+    }
+
+    pub(crate) fn sve_cpy_x_impl<const DENSE: bool>(
+        &mut self,
+        zd: u8,
+        pg: u8,
+        xn: u8,
+        esize: Esize,
+    ) {
         let vlb = self.state.vl_bytes();
         let v = self.state.get_x(xn);
         let g = self.state.p[pg as usize];
         let z = &mut self.state.z[zd as usize];
         for i in 0..esize.lanes(vlb) {
-            if g.active(esize, i) {
+            if DENSE || g.active(esize, i) {
                 z.set(esize, i, v);
             }
         }
     }
 
     pub(crate) fn sve_sel(&mut self, zd: u8, pg: u8, zn: u8, zm: u8, esize: Esize) {
+        self.sve_sel_impl::<false>(zd, pg, zn, zm, esize);
+    }
+
+    pub(crate) fn sve_sel_impl<const DENSE: bool>(
+        &mut self,
+        zd: u8,
+        pg: u8,
+        zn: u8,
+        zm: u8,
+        esize: Esize,
+    ) {
         let vlb = self.state.vl_bytes();
         let g = self.state.p[pg as usize];
         let (n, m) = (self.state.z[zn as usize], self.state.z[zm as usize]);
         let z = &mut self.state.z[zd as usize];
         for i in 0..esize.lanes(vlb) {
-            let v = if g.active(esize, i) { n.get(esize, i) } else { m.get(esize, i) };
+            let v = if DENSE || g.active(esize, i) { n.get(esize, i) } else { m.get(esize, i) };
             z.set(esize, i, v);
         }
     }
@@ -306,6 +327,17 @@ impl Executor {
         base: u8,
         imm: i64,
     ) -> ExecResult {
+        self.sve_ld1r_impl::<false>(zt, pg, esize, base, imm)
+    }
+
+    pub(crate) fn sve_ld1r_impl<const DENSE: bool>(
+        &mut self,
+        zt: u8,
+        pg: u8,
+        esize: Esize,
+        base: u8,
+        imm: i64,
+    ) -> ExecResult {
         let vlb = self.state.vl_bytes();
         let addr = self.state.get_x(base).wrapping_add(imm as u64);
         let g = self.state.p[pg as usize];
@@ -314,7 +346,7 @@ impl Executor {
         let z = &mut self.state.z[zt as usize];
         z.zero();
         for i in 0..esize.lanes(vlb) {
-            if g.active(esize, i) {
+            if DENSE || g.active(esize, i) {
                 z.set(esize, i, v);
             }
         }
@@ -379,12 +411,22 @@ impl Executor {
         esize: Esize,
         addr: GatherAddr,
     ) -> ExecResult {
+        self.sve_scatter_impl::<false>(zt, pg, esize, addr)
+    }
+
+    pub(crate) fn sve_scatter_impl<const DENSE: bool>(
+        &mut self,
+        zt: u8,
+        pg: u8,
+        esize: Esize,
+        addr: GatherAddr,
+    ) -> ExecResult {
         let vlb = self.state.vl_bytes();
         let g = self.state.p[pg as usize];
         let z = self.state.z[zt as usize];
         let ebytes = esize.bytes();
         for i in 0..esize.lanes(vlb) {
-            if g.active(esize, i) {
+            if DENSE || g.active(esize, i) {
                 let a = self.gather_ea(addr, esize, i);
                 self.mem.write(a, ebytes, z.get(esize, i))?;
                 self.record_store(a, ebytes as u32);
@@ -652,6 +694,17 @@ impl Executor {
     // ====================== horizontal (§2.4) ======================
 
     pub(crate) fn sve_reduce(&mut self, op: RedOp, vd: u8, pg: u8, zn: u8, esize: Esize) {
+        self.sve_reduce_impl::<false>(op, vd, pg, zn, esize);
+    }
+
+    pub(crate) fn sve_reduce_impl<const DENSE: bool>(
+        &mut self,
+        op: RedOp,
+        vd: u8,
+        pg: u8,
+        zn: u8,
+        esize: Esize,
+    ) {
         let vlb = self.state.vl_bytes();
         let g = self.state.p[pg as usize];
         let n = self.state.z[zn as usize];
@@ -669,7 +722,7 @@ impl Executor {
                 };
                 let mut buf: Vec<f64> = (0..lanes)
                     .map(|i| {
-                        if g.active(esize, i) {
+                        if DENSE || g.active(esize, i) {
                             if dbl {
                                 n.get_f64(i)
                             } else {
@@ -707,7 +760,7 @@ impl Executor {
                     _ => unreachable!(),
                 };
                 for i in 0..lanes {
-                    if g.active(esize, i) {
+                    if DENSE || g.active(esize, i) {
                         let v = n.get(esize, i);
                         acc = match op {
                             RedOp::EorV => acc ^ v,
@@ -729,13 +782,17 @@ impl Executor {
     /// Strictly-ordered accumulation (§3.3): scalar dest, element order
     /// = implicit predicate order.
     pub(crate) fn sve_fadda(&mut self, vdn: u8, pg: u8, zm: u8, dbl: bool) {
+        self.sve_fadda_impl::<false>(vdn, pg, zm, dbl);
+    }
+
+    pub(crate) fn sve_fadda_impl<const DENSE: bool>(&mut self, vdn: u8, pg: u8, zm: u8, dbl: bool) {
         let vlb = self.state.vl_bytes();
         let g = self.state.p[pg as usize];
         let m = self.state.z[zm as usize];
         if dbl {
             let mut acc = self.state.get_d(vdn);
             for i in 0..Esize::D.lanes(vlb) {
-                if g.active(Esize::D, i) {
+                if DENSE || g.active(Esize::D, i) {
                     acc += m.get_f64(i);
                 }
             }
@@ -743,7 +800,7 @@ impl Executor {
         } else {
             let mut acc = self.state.get_s(vdn);
             for i in 0..Esize::S.lanes(vlb) {
-                if g.active(Esize::S, i) {
+                if DENSE || g.active(Esize::S, i) {
                     acc += m.get_f32(i);
                 }
             }
@@ -1053,16 +1110,28 @@ impl Executor {
         addr: GatherAddr,
         ff: bool,
     ) -> Result<(), MemFault> {
+        self.sve_gather_impl::<false>(zt, pg, esize, addr, ff)
+    }
+
+    pub(crate) fn sve_gather_impl<const DENSE: bool>(
+        &mut self,
+        zt: u8,
+        pg: u8,
+        esize: Esize,
+        addr: GatherAddr,
+        ff: bool,
+    ) -> Result<(), MemFault> {
         let vlb = self.state.vl_bytes();
         let ebytes = esize.bytes();
         let g = self.state.p[pg as usize];
         let lanes = esize.lanes(vlb);
-        let first_active = g.first_active(esize, vlb);
+        // every lane is active when DENSE, so the first active is lane 0
+        let first_active = if DENSE { Some(0) } else { g.first_active(esize, vlb) };
         let mut vals = std::mem::take(&mut self.lane_scratch);
         vals[..lanes].fill(0);
         let mut fault_lane: Option<usize> = None;
         for i in 0..lanes {
-            if !g.active(esize, i) {
+            if !DENSE && !g.active(esize, i) {
                 continue;
             }
             let a = self.gather_ea(addr, esize, i);
@@ -1343,6 +1412,48 @@ pub(crate) fn h_sve_fmla_dense(ex: &mut Executor, u: &Uop) -> ExecResult {
 
 pub(crate) fn h_sve_scvtf_dense(ex: &mut Executor, u: &Uop) -> ExecResult {
     ex.sve_scvtf_impl::<true>(u.a, u.b, u.c, u.dbl());
+    Ok(())
+}
+
+pub(crate) fn h_sve_gather_vec_imm_dense(ex: &mut Executor, u: &Uop) -> ExecResult {
+    ex.sve_gather_impl::<true>(u.a, u.b, u.esize, GatherAddr::VecImm(u.c, u.imm), u.has(F_FF))
+}
+
+pub(crate) fn h_sve_gather_base_vec_dense(ex: &mut Executor, u: &Uop) -> ExecResult {
+    let addr = GatherAddr::BaseVec { xn: u.c, zm: u.d, scaled: u.has(F_SCALED) };
+    ex.sve_gather_impl::<true>(u.a, u.b, u.esize, addr, u.has(F_FF))
+}
+
+pub(crate) fn h_sve_scatter_vec_imm_dense(ex: &mut Executor, u: &Uop) -> ExecResult {
+    ex.sve_scatter_impl::<true>(u.a, u.b, u.esize, GatherAddr::VecImm(u.c, u.imm))
+}
+
+pub(crate) fn h_sve_scatter_base_vec_dense(ex: &mut Executor, u: &Uop) -> ExecResult {
+    let addr = GatherAddr::BaseVec { xn: u.c, zm: u.d, scaled: u.has(F_SCALED) };
+    ex.sve_scatter_impl::<true>(u.a, u.b, u.esize, addr)
+}
+
+pub(crate) fn h_sve_ld1r_dense(ex: &mut Executor, u: &Uop) -> ExecResult {
+    ex.sve_ld1r_impl::<true>(u.a, u.b, u.esize, u.c, u.imm)
+}
+
+pub(crate) fn h_cpy_x_dense(ex: &mut Executor, u: &Uop) -> ExecResult {
+    ex.sve_cpy_x_impl::<true>(u.a, u.b, u.c, u.esize);
+    Ok(())
+}
+
+pub(crate) fn h_sel_dense(ex: &mut Executor, u: &Uop) -> ExecResult {
+    ex.sve_sel_impl::<true>(u.a, u.b, u.c, u.d, u.esize);
+    Ok(())
+}
+
+pub(crate) fn h_sve_reduce_dense(ex: &mut Executor, u: &Uop) -> ExecResult {
+    ex.sve_reduce_impl::<true>(u.sub.red(), u.a, u.b, u.c, u.esize);
+    Ok(())
+}
+
+pub(crate) fn h_sve_fadda_dense(ex: &mut Executor, u: &Uop) -> ExecResult {
+    ex.sve_fadda_impl::<true>(u.a, u.b, u.c, u.dbl());
     Ok(())
 }
 

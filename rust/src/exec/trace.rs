@@ -24,10 +24,29 @@
 //! 3. **Dense `whilelt` specialization** — when a trace is governed by
 //!    a `whilelt` predicate that is provably all-true for the iteration
 //!    (dense prefix covering every lane), the µops it governs run
-//!    **unpredicated fast-path twins** (contiguous ld1/st1 and
+//!    **unpredicated fast-path twins** (contiguous ld1/st1,
+//!    gather/scatter, broadcast/select setup ops, reductions and
 //!    arithmetic; see `exec/sve.rs`'s `DENSE` monomorphizations) behind
 //!    a single per-iteration predicate check. Tail iterations fail the
 //!    check and take the general (predicated) slots of the same trace.
+//! 4. **Trace linking** — when a completed non-looping trace falls
+//!    through to a pc that is itself a built trace entry, a patched
+//!    trace→trace link jumps straight to it, so steady-state loop nests
+//!    (outer-close → outer-head → inner-loop chains) never return to
+//!    the block interpreter. Links cache the engine epoch they were
+//!    resolved at; any cache mutation ([`TraceEngine::invalidate`] or a
+//!    new install) advances the epoch and forces re-resolution, and the
+//!    per-trace budget gate is identical to the front door's, so side
+//!    exits and exact trip counts are preserved across link jumps.
+//!
+//! Formation failures (halting or over-long paths) are **deferred**,
+//! not permanently rejected: the entry's heat decays to zero and it may
+//! re-earn a recording against an exponentially backed-off threshold,
+//! up to [`MAX_RECORD_ATTEMPTS`] — a loop whose early iterations looked
+//! megamorphic can still earn a trace, while a genuinely irreducible
+//! body hard-stops after the cap. Per-run telemetry (traces built /
+//! rejected / re-recorded, link jumps, dense vs general iterations) is
+//! exported through [`RunStats::trace`] and `sve run --trace-stats`.
 //!
 //! Architectural state, the retire stream ([`StepInfo`]) and every
 //! counter the job store consumes are bit-identical to
@@ -38,14 +57,44 @@
 use super::{Executor, Handler, RunStats, StepInfo, Trap, DISPATCH};
 use crate::arch::Esize;
 use crate::isa::uop::{DecodedProgram, Uop, UopTag};
+use std::cell::Cell;
 
 /// Block-entry executions before a trace is recorded.
 pub const HOT_THRESHOLD: u32 = 32;
 
 /// Longest recordable path, in µops. A recording that exceeds this is
-/// abandoned and the entry is never tried again (irreducible or huge
-/// bodies stay on the block interpreter).
+/// abandoned and the entry is deferred (see [`MAX_RECORD_ATTEMPTS`]).
 pub const MAX_TRACE_LEN: usize = 256;
+
+/// Recording attempts per entry before it is rejected for good. Each
+/// failure decays the entry's heat to zero and doubles the threshold it
+/// must re-earn, so megamorphic-looking warmup gets bounded retries
+/// while irreducible bodies stay on the block interpreter.
+pub const MAX_RECORD_ATTEMPTS: u8 = 3;
+
+/// Per-run trace-cache telemetry, carried on [`RunStats::trace`].
+///
+/// This is engine-local observability — **not** architectural state or
+/// a retire-stream counter. The baseline interpreter and the legacy
+/// harness always report it as zero, so it is deliberately excluded
+/// from [`RunStats`] equality (see the manual `PartialEq` there): the
+/// bit-identity walls compare what the paper's contract pins, and perf
+/// claims read these fields instead of being inferred.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TraceStats {
+    /// Traces stitched and cached.
+    pub built: u64,
+    /// Recordings abandoned (halting or over-long path).
+    pub rejected: u64,
+    /// Recordings re-attempted for an entry that had failed before.
+    pub rerecorded: u64,
+    /// Direct trace→trace transfers that skipped the front door.
+    pub link_jumps: u64,
+    /// Trace iterations run on the dense (unpredicated-twin) slots.
+    pub dense_iters: u64,
+    /// Trace iterations run on the general (predicated) slots.
+    pub general_iters: u64,
+}
 
 /// One threaded µop slot: the handler pointer lives next to the operand
 /// fields it consumes, so cold execution pays no dispatch-table load.
@@ -86,12 +135,20 @@ struct Trace {
     looping: bool,
     /// µops per full iteration — the budget granule.
     len: u64,
+    /// Patched trace→trace link: the engine epoch at which `exit_pc`
+    /// was last observed to hold a built trace. Stale (≠ current epoch)
+    /// links re-resolve before jumping, so invalidation is safe.
+    link: Cell<Option<u64>>,
 }
 
 enum TraceCell {
     /// Still profiling.
     Cold,
-    /// Formation failed (halting path / over-long) — never retried.
+    /// Formation failed; heat decayed to zero. The entry may re-earn a
+    /// recording against a backed-off threshold until
+    /// [`MAX_RECORD_ATTEMPTS`] failures.
+    Deferred { attempts: u8 },
+    /// [`MAX_RECORD_ATTEMPTS`] failures — never retried.
     Rejected,
     Built(Box<Trace>),
 }
@@ -110,6 +167,10 @@ pub struct TraceEngine {
     cells: Vec<TraceCell>,
     recording: Option<Recording>,
     hot_threshold: u32,
+    /// Advanced on every cache mutation (install / invalidate); patched
+    /// links carry the epoch they were resolved at and go stale when it
+    /// moves.
+    epoch: u64,
 }
 
 impl TraceEngine {
@@ -134,12 +195,25 @@ impl TraceEngine {
             cells: (0..n).map(|_| TraceCell::Cold).collect(),
             recording: None,
             hot_threshold: hot_threshold.max(1),
+            epoch: 0,
         }
     }
 
     /// Number of stitched traces currently cached.
     pub fn trace_count(&self) -> usize {
         self.cells.iter().filter(|c| matches!(c, TraceCell::Built(_))).count()
+    }
+
+    /// Drop the cached trace (if any) at `pc` and reset its profile to
+    /// cold. The epoch advance makes every patched trace→trace link
+    /// stale, so links into `pc` re-resolve before their next jump
+    /// instead of transferring into a dropped trace.
+    pub fn invalidate(&mut self, pc: usize) {
+        if pc < self.cells.len() {
+            self.cells[pc] = TraceCell::Cold;
+            self.heat[pc] = 0;
+            self.epoch += 1;
+        }
     }
 
     /// Whether any cached trace carries a dense-specialized twin.
@@ -159,6 +233,11 @@ impl TraceEngine {
         mut on_retire: impl FnMut(StepInfo<'_>),
     ) -> Result<RunStats, Trap> {
         assert_eq!(self.slots.len(), dec.len(), "engine built for a different program");
+        // A recording cannot span runs: a trap (budget, fault) can end a
+        // run mid-recording, and the pc discontinuity at the next run's
+        // start would stitch a false edge into the path. Abandon it
+        // without consuming a re-record attempt.
+        self.recording = None;
         let straight = dec.straight_lens();
         let mut stats = RunStats::default();
         while !ex.halted {
@@ -170,13 +249,60 @@ impl TraceEngine {
             if pc < self.cells.len() && self.recording.is_none() {
                 match &self.cells[pc] {
                     TraceCell::Built(tr) if remaining >= tr.len => {
-                        run_trace(tr, ex, dec, &mut stats, max_insts, &mut on_retire)?;
+                        let mut cur: &Trace = tr;
+                        loop {
+                            match run_trace(cur, ex, dec, &mut stats, max_insts, &mut on_retire)? {
+                                TraceExit::Completed => {}
+                                // side exits and budget tails bail out
+                                // to the block interpreter exactly as
+                                // without linking
+                                TraceExit::SideExit | TraceExit::Budget => break,
+                            }
+                            // Trace linking: the completed trace fell
+                            // through to `exit_pc`; when that is itself
+                            // a built trace entry, jump straight to it.
+                            // The patched link caches the epoch it was
+                            // resolved at — a stale epoch (install or
+                            // invalidate since) forces re-resolution.
+                            let target = cur.exit_pc as usize;
+                            if cur.link.get() != Some(self.epoch) {
+                                match self.cells.get(target) {
+                                    Some(TraceCell::Built(_)) => cur.link.set(Some(self.epoch)),
+                                    _ => break,
+                                }
+                            }
+                            let Some(TraceCell::Built(next)) = self.cells.get(target) else {
+                                break;
+                            };
+                            // same per-trace budget gate as the front
+                            // door: a too-small remainder hands the
+                            // tail to the exactly-metered interpreter
+                            if max_insts - stats.insts < next.len {
+                                break;
+                            }
+                            stats.trace.link_jumps += 1;
+                            cur = next;
+                        }
                         continue;
                     }
                     TraceCell::Cold => {
                         let h = self.heat[pc].saturating_add(1);
                         self.heat[pc] = h;
                         if h >= self.hot_threshold {
+                            self.recording = Some(Recording {
+                                entry: pc as u32,
+                                path: Vec::with_capacity(MAX_TRACE_LEN),
+                            });
+                        }
+                    }
+                    &TraceCell::Deferred { attempts } => {
+                        // re-profiled entry: heat decayed to zero on
+                        // failure, the threshold re-earned doubles per
+                        // failed attempt
+                        let h = self.heat[pc].saturating_add(1);
+                        self.heat[pc] = h;
+                        if h >= self.hot_threshold.saturating_mul(1 << attempts.min(20)) {
+                            stats.trace.rerecorded += 1;
                             self.recording = Some(Recording {
                                 entry: pc as u32,
                                 path: Vec::with_capacity(MAX_TRACE_LEN),
@@ -219,7 +345,7 @@ impl TraceEngine {
                     mem: &ex.accesses,
                 });
                 if self.recording.is_some() {
-                    self.record_step(dec, pc, taken, next, ex.halted);
+                    self.record_step(dec, pc, taken, next, ex.halted, &mut stats.trace);
                 }
             }
         }
@@ -245,33 +371,52 @@ impl TraceEngine {
         taken: bool,
         next: usize,
         halted: bool,
+        t: &mut TraceStats,
     ) {
         let rec = self.recording.as_mut().expect("record_step without a recording");
         rec.path.push(pc as u32);
         let entry = rec.entry;
+        let over = rec.path.len() >= MAX_TRACE_LEN;
         if halted {
             // a halting path runs at most once more — not worth a trace
-            self.recording = None;
-            self.cells[entry as usize] = TraceCell::Rejected;
+            self.reject(entry, t);
             return;
         }
         if next == entry as usize {
-            self.install(dec, true, entry);
+            self.install(dec, true, entry, t);
             return;
         }
         if taken && next <= pc {
             // backward branch to a different head ends the superblock
-            self.install(dec, false, next as u32);
+            self.install(dec, false, next as u32, t);
             return;
         }
-        if rec.path.len() >= MAX_TRACE_LEN {
-            self.recording = None;
-            self.cells[entry as usize] = TraceCell::Rejected;
+        if over {
+            self.reject(entry, t);
         }
     }
 
+    /// Abandon the active recording: decay the entry's heat to zero and
+    /// defer it for a bounded number of re-record attempts; the
+    /// [`MAX_RECORD_ATTEMPTS`] cap is the hard stop.
+    fn reject(&mut self, entry: u32, t: &mut TraceStats) {
+        self.recording = None;
+        t.rejected += 1;
+        let e = entry as usize;
+        self.heat[e] = 0;
+        let attempts = match &self.cells[e] {
+            TraceCell::Deferred { attempts } => attempts.saturating_add(1),
+            _ => 1,
+        };
+        self.cells[e] = if attempts >= MAX_RECORD_ATTEMPTS {
+            TraceCell::Rejected
+        } else {
+            TraceCell::Deferred { attempts }
+        };
+    }
+
     /// Stitch the recorded path into a trace and cache it at its entry.
-    fn install(&mut self, dec: &DecodedProgram, looping: bool, exit_pc: u32) {
+    fn install(&mut self, dec: &DecodedProgram, looping: bool, exit_pc: u32, t: &mut TraceStats) {
         let rec = self.recording.take().expect("install without a recording");
         let entry = rec.entry;
         let slots: Box<[TSlot]> = rec
@@ -293,9 +438,27 @@ impl TraceEngine {
             None => (None, 0, Esize::B),
         };
         let len = slots.len() as u64;
-        let tr = Trace { slots, dense, guard_pd, guard_esize, entry, exit_pc, looping, len };
+        let link = Cell::new(None);
+        let tr = Trace { slots, dense, guard_pd, guard_esize, entry, exit_pc, looping, len, link };
         self.cells[entry as usize] = TraceCell::Built(Box::new(tr));
+        // cache mutation: existing patched links re-resolve (they may
+        // now have a new target to link to)
+        self.epoch += 1;
+        t.built += 1;
     }
+}
+
+/// Why [`run_trace`] handed control back (a trap is the `Err` arm).
+enum TraceExit {
+    /// A non-looping trace ran to completion; `pc` = its `exit_pc` —
+    /// the case trace linking may short-circuit.
+    Completed,
+    /// A control µop resolved off the recorded path; `pc` = true
+    /// target. Always falls back to the block interpreter.
+    SideExit,
+    /// Not enough budget for one more full iteration; `pc` = the trace
+    /// entry and the tail runs on the exactly-metered interpreter.
+    Budget,
 }
 
 /// Execute iterations of `tr` until a side exit, completion of a
@@ -311,18 +474,24 @@ fn run_trace(
     stats: &mut RunStats,
     max_insts: u64,
     on_retire: &mut impl FnMut(StepInfo<'_>),
-) -> Result<(), Trap> {
+) -> Result<TraceExit, Trap> {
     let insts = dec.insts();
     loop {
         if max_insts - stats.insts < tr.len {
             ex.state.pc = tr.entry as usize;
-            return Ok(());
+            return Ok(TraceExit::Budget);
         }
         // the single per-iteration predicate check the specialization
         // is guarded by: dense slots only when every lane is active
         let slots: &[TSlot] = match &tr.dense {
-            Some(d) if dense_guard_ok(ex, tr) => d,
-            _ => &tr.slots,
+            Some(d) if dense_guard_ok(ex, tr) => {
+                stats.trace.dense_iters += 1;
+                d
+            }
+            _ => {
+                stats.trace.general_iters += 1;
+                &tr.slots
+            }
         };
         for slot in slots.iter() {
             let pc = slot.pc as usize;
@@ -360,12 +529,12 @@ fn run_trace(
                 // side exit: write back the true pc and fall back to
                 // the block interpreter
                 ex.state.pc = next;
-                return Ok(());
+                return Ok(TraceExit::SideExit);
             }
         }
         if !tr.looping {
             ex.state.pc = tr.exit_pc as usize;
-            return Ok(());
+            return Ok(TraceExit::Completed);
         }
     }
 }
@@ -419,6 +588,17 @@ fn fp_esize(u: &Uop) -> Esize {
 
 /// The unpredicated fast-path twin of `u`, if it is governed by `pd` at
 /// granule `we` and a `DENSE` monomorphization exists for its tag.
+///
+/// Covers every predicated tag the compiled kernel families emit in
+/// their steady state: contiguous and gather/scatter memory, the
+/// `SveLd1R`/`CpyX`/`Sel` setup-and-select class, arithmetic including
+/// the FMLA/FMLS pairs `RedKind::DotF` and `Expr::ComplexMul` lower to,
+/// and the horizontal reductions (`SveReduce`, ordered `SveFadda`).
+/// Deliberately absent: `Movprfx` merges at **byte** granule, which an
+/// element-granule dense guard cannot prove away; predicate-writing
+/// µops (`While`, compares, `Brk`…) define the guard rather than ride
+/// it; µops governed by a different register (e.g. ComplexMul's
+/// lane-parity `Sel`) fail the `u.b == pd` check by construction.
 fn dense_twin(u: &Uop, pd: u8, we: Esize) -> Option<Handler> {
     use UopTag as T;
     if u.b != pd {
@@ -429,11 +609,20 @@ fn dense_twin(u: &Uop, pd: u8, we: Esize) -> Option<Handler> {
         T::SveLd1Reg => (super::sve::h_sve_ld1_reg_dense, u.esize),
         T::SveSt1ImmVl => (super::sve::h_sve_st1_imm_vl_dense, u.esize),
         T::SveSt1Reg => (super::sve::h_sve_st1_reg_dense, u.esize),
+        T::SveLd1R => (super::sve::h_sve_ld1r_dense, u.esize),
+        T::SveGatherVecImm => (super::sve::h_sve_gather_vec_imm_dense, u.esize),
+        T::SveGatherBaseVec => (super::sve::h_sve_gather_base_vec_dense, u.esize),
+        T::SveScatterVecImm => (super::sve::h_sve_scatter_vec_imm_dense, u.esize),
+        T::SveScatterBaseVec => (super::sve::h_sve_scatter_base_vec_dense, u.esize),
+        T::CpyX => (super::sve::h_cpy_x_dense, u.esize),
+        T::Sel => (super::sve::h_sel_dense, u.esize),
         T::SveIntBin => (super::sve::h_sve_int_bin_dense, u.esize),
         T::SveFpBin => (super::sve::h_sve_fp_bin_dense, fp_esize(u)),
         T::SveFpUn => (super::sve::h_sve_fp_un_dense, fp_esize(u)),
         T::SveFmla => (super::sve::h_sve_fmla_dense, fp_esize(u)),
         T::SveScvtf => (super::sve::h_sve_scvtf_dense, fp_esize(u)),
+        T::SveReduce => (super::sve::h_sve_reduce_dense, u.esize),
+        T::SveFadda => (super::sve::h_sve_fadda_dense, fp_esize(u)),
         _ => return None,
     };
     if e == we {
@@ -494,6 +683,64 @@ mod tests {
         mem.write_f64(a_addr, 2.5).unwrap();
         mem.write_u32(n_addr, n as u32).unwrap();
         (mem, y, daxpy_prog(x, y, a_addr, n_addr))
+    }
+
+    /// Two-level daxpy nest: `reps` passes over the same vectors — the
+    /// loop shape whose steady state exercises trace linking. The inner
+    /// vloop becomes a looping trace; the outer-close (AddImm/Cbnz) and
+    /// outer-head (MovImm/While + first inner iteration) blocks become
+    /// non-looping traces chained close → head → inner by patched links.
+    fn nested_prog(x: u64, y: u64, a_addr: u64, n: u64, reps: u64) -> Program {
+        let mut asm = Asm::new();
+        let a = &mut asm;
+        a.push(Inst::MovImm { xd: 0, imm: x });
+        a.push(Inst::MovImm { xd: 1, imm: y });
+        a.push(Inst::MovImm { xd: 2, imm: a_addr });
+        a.push(Inst::MovImm { xd: 3, imm: n });
+        a.push(Inst::MovImm { xd: 5, imm: reps });
+        a.push(Inst::MovImm { xd: 4, imm: 0 });
+        a.push(Inst::While { pd: 0, esize: Esize::D, xn: 4, xm: 3, unsigned: false });
+        a.push(Inst::SveLd1R { zt: 0, pg: 0, esize: Esize::D, base: 2, imm: 0 });
+        a.label("outer");
+        a.push(Inst::MovImm { xd: 4, imm: 0 });
+        a.push(Inst::While { pd: 0, esize: Esize::D, xn: 4, xm: 3, unsigned: false });
+        a.label("loop");
+        let off = SveMemOff::RegScaled(4);
+        a.push(Inst::SveLd1 { zt: 1, pg: 0, esize: Esize::D, base: 0, off, ff: false });
+        a.push(Inst::SveLd1 { zt: 2, pg: 0, esize: Esize::D, base: 1, off, ff: false });
+        a.push(Inst::SveFmla { zda: 2, pg: 0, zn: 1, zm: 0, dbl: true, sub: false });
+        a.push(Inst::SveSt1 { zt: 2, pg: 0, esize: Esize::D, base: 1, off });
+        a.push(Inst::IncDec { xdn: 4, esize: Esize::D, dec: false });
+        a.push(Inst::While { pd: 0, esize: Esize::D, xn: 4, xm: 3, unsigned: false });
+        a.push_branch(Inst::BCond { cond: Cond::FIRST, target: 0 }, "loop");
+        a.push(Inst::AddImm { xd: 5, xn: 5, imm: -1 });
+        a.push_branch(Inst::Cbnz { xn: 5, target: 0 }, "outer");
+        a.push(Inst::Halt);
+        asm.finish()
+    }
+
+    /// Build nest memory + program. Returns (mem, y_base, program).
+    fn nested_setup(n: usize, reps: u64) -> (Memory, u64, Program) {
+        let mut mem = Memory::new();
+        let x = mem.alloc(8 * n.max(1) as u64, 16);
+        let y = mem.alloc(8 * n.max(1) as u64, 16);
+        let a_addr = mem.alloc(8, 8);
+        for i in 0..n {
+            mem.write_f64(x + 8 * i as u64, 0.25 * i as f64).unwrap();
+            mem.write_f64(y + 8 * i as u64, 10.0 + i as f64).unwrap();
+        }
+        mem.write_f64(a_addr, 1.5).unwrap();
+        (mem, y, nested_prog(x, y, a_addr, n as u64, reps))
+    }
+
+    /// Expected y[i] after `reps` passes of `y += 1.5 * x` over
+    /// [`nested_setup`] data.
+    fn nested_want(i: usize, reps: u64) -> f64 {
+        let mut v = 10.0 + i as f64;
+        for _ in 0..reps {
+            v += 1.5 * (0.25 * i as f64);
+        }
+        v
     }
 
     /// Assert the two executors reached identical architectural state.
@@ -637,7 +884,7 @@ mod tests {
     }
 
     #[test]
-    fn halting_paths_are_rejected_not_traced() {
+    fn halting_paths_are_deferred_then_hard_rejected() {
         let mut a = Asm::new();
         a.push(Inst::MovImm { xd: 0, imm: 7 });
         a.push(Inst::AddImm { xd: 0, xn: 0, imm: 1 });
@@ -645,13 +892,218 @@ mod tests {
         let p = a.finish();
         let dec = DecodedProgram::decode(&p);
         let mut eng = TraceEngine::with_threshold(&dec, 1);
-        for _ in 0..3 {
+        let (mut rejected, mut rerecorded) = (0u64, 0u64);
+        for _ in 0..10 {
             let mut ex = Executor::new(128, Memory::new());
             let stats = eng.run(&mut ex, &dec, 100).unwrap();
             assert_eq!(stats.insts, 3);
             assert_eq!(ex.state.get_x(0), 8);
+            rejected += stats.trace.rejected;
+            rerecorded += stats.trace.rerecorded;
         }
         assert_eq!(eng.trace_count(), 0, "a halting path is never worth a trace");
+        // threshold 1 → records on runs 1, 3 (backed-off ×2), 7 (×4),
+        // each failing, then the attempt cap turns the entry to stone
+        assert_eq!(rejected, u64::from(MAX_RECORD_ATTEMPTS), "bounded re-record attempts");
+        assert!(rerecorded >= 1, "deferred entries re-earn recordings before the cap");
+        assert!(
+            matches!(eng.cells[0], TraceCell::Rejected),
+            "the attempt cap is a hard stop"
+        );
+    }
+
+    #[test]
+    fn nested_loops_link_traces_bit_identically() {
+        let (mem, y, p) = nested_setup(16, 8);
+        let dec = DecodedProgram::decode(&p);
+        let mut base = Executor::new(256, mem.clone());
+        let rb = base.run_decoded(&dec, 1_000_000).unwrap();
+        let mut traced = Executor::new(256, mem.clone());
+        let mut eng = TraceEngine::with_threshold(&dec, 2);
+        let rt = eng.run(&mut traced, &dec, 1_000_000).unwrap();
+        assert_eq!(rb, rt, "run statistics");
+        assert!(eng.trace_count() >= 3, "inner loop, outer head and outer close must all trace");
+        assert!(rt.trace.link_jumps > 0, "the steady-state nest must take patched links");
+        assert_same_state(&base, &traced, "nest n=16 reps=8");
+        for i in 0..16 {
+            assert_eq!(traced.mem.read_f64(y + 8 * i as u64).unwrap(), nested_want(i, 8), "y[{i}]");
+        }
+        // the retire streams agree µop for µop across link jumps
+        let collect = |use_trace: bool| {
+            let mut steps: Vec<(usize, bool, usize)> = Vec::new();
+            let mut ex = Executor::new(256, mem.clone());
+            let on = |info: StepInfo<'_>| steps.push((info.pc, info.taken, info.mem.len()));
+            if use_trace {
+                let mut eng = TraceEngine::with_threshold(&dec, 2);
+                eng.run_with(&mut ex, &dec, 1_000_000, on).unwrap();
+            } else {
+                ex.run_decoded_with(&dec, 1_000_000, on).unwrap();
+            }
+            steps
+        };
+        assert_eq!(collect(false), collect(true));
+    }
+
+    #[test]
+    fn linked_pair_with_one_dense_twin_splits_iteration_kinds() {
+        // in the nest, only the inner vloop trace dense-specializes (the
+        // outer head's While writes the guard, the outer close has no
+        // whilelt at all) — so a linked chain mixes dense and general
+        // iterations and must still be bit-identical
+        let (mem, y, p) = nested_setup(16, 8);
+        let dec = DecodedProgram::decode(&p);
+        let mut base = Executor::new(256, mem.clone());
+        let rb = base.run_decoded(&dec, 1_000_000).unwrap();
+        let mut traced = Executor::new(256, mem.clone());
+        let mut eng = TraceEngine::with_threshold(&dec, 2);
+        let rt = eng.run(&mut traced, &dec, 1_000_000).unwrap();
+        assert_eq!(rb, rt);
+        assert_same_state(&base, &traced, "mixed dense/general nest");
+        let dense_built = eng
+            .cells
+            .iter()
+            .filter(|c| matches!(c, TraceCell::Built(t) if t.dense.is_some()))
+            .count();
+        let plain_built = eng
+            .cells
+            .iter()
+            .filter(|c| matches!(c, TraceCell::Built(t) if t.dense.is_none()))
+            .count();
+        assert!(dense_built >= 1, "the inner vloop must dense-specialize");
+        assert!(plain_built >= 2, "outer head and close must build without twins");
+        assert!(rt.trace.link_jumps > 0, "the pair must be linked");
+        assert!(rt.trace.dense_iters > 0, "full-prefix inner iterations run dense");
+        assert!(rt.trace.general_iters > 0, "twin-less traces run their general slots");
+        for i in 0..16 {
+            assert_eq!(traced.mem.read_f64(y + 8 * i as u64).unwrap(), nested_want(i, 8), "y[{i}]");
+        }
+    }
+
+    #[test]
+    fn invalidated_link_targets_re_resolve_safely() {
+        let (mem, y, p) = nested_setup(16, 8);
+        let dec = DecodedProgram::decode(&p);
+        let mut eng = TraceEngine::with_threshold(&dec, 2);
+        let mut warm = Executor::new(256, mem.clone());
+        let s1 = eng.run(&mut warm, &dec, 1_000_000).unwrap();
+        assert!(s1.trace.link_jumps > 0, "warmup must patch links");
+        // drop the inner-loop trace — the target of the outer-head link;
+        // the epoch advance must stale every patched link into it
+        let v = eng
+            .cells
+            .iter()
+            .position(|c| matches!(c, TraceCell::Built(t) if t.looping))
+            .expect("the inner vloop must have a looping trace");
+        let count = eng.trace_count();
+        eng.invalidate(v);
+        assert_eq!(eng.trace_count(), count - 1);
+        let mut base = Executor::new(256, mem.clone());
+        let rb = base.run_decoded(&dec, 1_000_000).unwrap();
+        let mut traced = Executor::new(256, mem.clone());
+        let rt = eng.run(&mut traced, &dec, 1_000_000).unwrap();
+        assert_eq!(rb, rt, "stale links must re-resolve, not jump into the dropped trace");
+        assert_same_state(&base, &traced, "post-invalidate rerun");
+        assert!(rt.trace.built >= 1, "the dropped entry re-profiles and re-forms");
+        assert!(
+            eng.cells.iter().any(|c| matches!(c, TraceCell::Built(t) if t.looping)),
+            "the inner vloop trace is back"
+        );
+        for i in 0..16 {
+            assert_eq!(traced.mem.read_f64(y + 8 * i as u64).unwrap(), nested_want(i, 8), "y[{i}]");
+        }
+    }
+
+    #[test]
+    fn budget_is_exact_across_link_jumps() {
+        let (mem, _y, p) = nested_setup(16, 8);
+        let dec = DecodedProgram::decode(&p);
+        let full = {
+            let mut ex = Executor::new(256, mem.clone());
+            ex.run_decoded(&dec, 1_000_000).unwrap().insts
+        };
+        // two warm runs: the first builds the three traces, the second
+        // patches the links and leaves no entry still profiling
+        let mut eng = TraceEngine::with_threshold(&dec, 2);
+        for _ in 0..2 {
+            let mut warmex = Executor::new(256, mem.clone());
+            eng.run(&mut warmex, &dec, 1_000_000).unwrap();
+        }
+        {
+            let mut ex = Executor::new(256, mem.clone());
+            let s = eng.run(&mut ex, &dec, 1_000_000).unwrap();
+            assert!(s.trace.link_jumps > 0, "warmed nest must run linked");
+        }
+        // every budget value walks the expiry point across the whole
+        // run, including budgets landing exactly on a link jump
+        for budget in 0..=full {
+            let mut base = Executor::new(256, mem.clone());
+            let mut nb = 0u64;
+            let rb = base.run_decoded_with(&dec, budget, |_| nb += 1);
+            let mut traced = Executor::new(256, mem.clone());
+            let mut nt = 0u64;
+            let rt = eng.run_with(&mut traced, &dec, budget, |_| nt += 1);
+            assert_eq!(rb, rt, "budget {budget}");
+            assert_eq!(nb, nt, "retire count at budget {budget}");
+            if budget < full {
+                assert_eq!(rb, Err(Trap::Budget), "budget {budget}");
+                assert_eq!(nb, budget, "exact metering at budget {budget}");
+            }
+            assert_same_state(&base, &traced, &format!("budget {budget}"));
+        }
+    }
+
+    #[test]
+    fn deferred_entries_re_record_and_succeed() {
+        // a loop whose first profile halts mid-recording (tiny runtime
+        // trip count) is deferred, then earns its trace on a later run
+        // against the backed-off threshold — bit-identical throughout
+        let mut mem = Memory::new();
+        let x = mem.alloc(800, 16);
+        let y = mem.alloc(800, 16);
+        let a_addr = mem.alloc(8, 8);
+        let n_addr = mem.alloc(8, 8);
+        for i in 0..100 {
+            mem.write_f64(x + 8 * i as u64, 0.5 * i as f64).unwrap();
+            mem.write_f64(y + 8 * i as u64, 100.0 - i as f64).unwrap();
+        }
+        mem.write_f64(a_addr, 2.5).unwrap();
+        let p = daxpy_prog(x, y, a_addr, n_addr);
+        let dec = DecodedProgram::decode(&p);
+        let mut eng = TraceEngine::with_threshold(&dec, 2);
+        // run 1: n=12 → 3 iterations at VL=256; the recording triggered
+        // on the final iteration runs into Halt and is deferred
+        let mut m1 = mem.clone();
+        m1.write_u32(n_addr, 12).unwrap();
+        let mut b1 = Executor::new(256, m1.clone());
+        let rb1 = b1.run_decoded(&dec, 1_000_000).unwrap();
+        let mut t1 = Executor::new(256, m1);
+        let s1 = eng.run(&mut t1, &dec, 1_000_000).unwrap();
+        assert_eq!(rb1, s1);
+        assert_same_state(&b1, &t1, "run 1 (deferred)");
+        assert!(s1.trace.rejected >= 1, "the halting recording must be deferred");
+        assert_eq!(eng.trace_count(), 0, "no trace from the halting profile");
+        // run 2: n=100 on the same engine — the deferred loop re-earns
+        // a recording against the doubled threshold and installs
+        let mut m2 = mem.clone();
+        m2.write_u32(n_addr, 100).unwrap();
+        let mut b2 = Executor::new(256, m2.clone());
+        let rb2 = b2.run_decoded(&dec, 1_000_000).unwrap();
+        let mut t2 = Executor::new(256, m2.clone());
+        let s2 = eng.run(&mut t2, &dec, 1_000_000).unwrap();
+        assert_eq!(rb2, s2);
+        assert_same_state(&b2, &t2, "run 2 (re-recorded)");
+        assert!(s2.trace.rerecorded >= 1, "the deferred entry re-records");
+        assert!(eng.trace_count() >= 1, "and succeeds on its second recording");
+        assert!(eng.has_dense_trace(), "the re-recorded loop dense-specializes");
+        for i in 0..100 {
+            let want = 2.5 * (0.5 * i as f64) + (100.0 - i as f64);
+            assert_eq!(t2.mem.read_f64(y + 8 * i as u64).unwrap(), want, "y[{i}]");
+        }
+        // run 3: the warmed prologue trace now links into the loop trace
+        let mut t3 = Executor::new(256, m2);
+        let s3 = eng.run(&mut t3, &dec, 1_000_000).unwrap();
+        assert_eq!(rb2, s3);
+        assert!(s3.trace.link_jumps >= 1, "prologue trace links into the loop trace");
     }
 
     #[test]

@@ -59,6 +59,10 @@ commands:
       --no-trace             run on the baseline interpreter instead of the
                              superblock trace engine (A/B escape hatch;
                              results are bit-identical, only speed differs)
+      --trace-stats          print trace-cache telemetry after the run:
+                             traces built/rejected/re-recorded, link jumps
+                             taken, dense vs general trace iterations
+                             (all zero under --no-trace)
   sweep                      the Fig. 8 sweep, sharded + resumable
       --vls A,B,C            SVE vector lengths (default 128,256,512)
       --benches a,b          benchmark subset (default: all)
@@ -314,8 +318,8 @@ fn main() {
                     die_usage(&format!("unknown --isa '{other}' (scalar, neon or sve)"))
                 }
             };
-            match coordinator::run_one_engine(name, isa, request::parse_engine(&args)) {
-                Ok(r) => {
+            match coordinator::run_one_engine_stats(name, isa, request::parse_engine(&args)) {
+                Ok((r, stats)) => {
                     println!(
                         "{} on {}: {} insts, {} cycles, ipc {:.2}, vectorized={}, \
                          vector-fraction {:.1}%, L1D miss {:.2}%",
@@ -328,6 +332,19 @@ fn main() {
                         100.0 * r.vector_fraction,
                         100.0 * r.l1d_miss_rate
                     );
+                    if request::has_flag(&args, "--trace-stats") {
+                        let t = stats.trace;
+                        println!(
+                            "trace: built={} rejected={} rerecorded={} link_jumps={} \
+                             dense_iters={} general_iters={}",
+                            t.built,
+                            t.rejected,
+                            t.rerecorded,
+                            t.link_jumps,
+                            t.dense_iters,
+                            t.general_iters
+                        );
+                    }
                 }
                 Err(e) => die_run(&e),
             }

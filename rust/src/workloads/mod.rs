@@ -655,7 +655,9 @@ pub fn onedal_cov() -> Workload {
 /// [`RedKind::DotF`]-shaped `sum(x*x)` over all columns.
 pub fn onedal_moments() -> Workload {
     let rows = 512u64;
-    let cols = 32u64;
+    // 128 columns: the outer trip comfortably clears the trace engine's
+    // heat threshold, so the column steady state runs linked and dense
+    let cols = 128u64;
     let mut mem = Memory::new();
     let mut rng = Rng::new(1303);
     let xb = mem.alloc(4 * rows * cols, 64);
@@ -680,10 +682,10 @@ pub fn onedal_moments() -> Workload {
         group: Group::Right,
         kind: Kind::Loop(k),
         mem,
-        // f32 reductions over 16K elements: bounded relative error
+        // f32 reductions over 64K elements: bounded relative error
         checks: vec![
-            Check::F32At { addr: osum, want: sum as f32, tol: 1e-3 },
-            Check::F32At { addr: osq, want: sq as f32, tol: 1e-3 },
+            Check::F32At { addr: osum, want: sum as f32, tol: 2e-3 },
+            Check::F32At { addr: osq, want: sq as f32, tol: 2e-3 },
         ],
         max_insts: 100_000_000,
     }
